@@ -1,0 +1,49 @@
+//! Quickstart: solve an assignment and an OT instance with the paper's
+//! push-relabel algorithm, and verify the additive guarantee against exact
+//! baselines.
+//!
+//!     cargo run --release --example quickstart
+
+use otpr::data::workloads::Workload;
+use otpr::solvers::hungarian::Hungarian;
+use otpr::solvers::ot_push_relabel::OtPushRelabel;
+use otpr::solvers::push_relabel::PushRelabel;
+use otpr::solvers::ssp_ot::SspExactOt;
+use otpr::solvers::{AssignmentSolver, OtSolver};
+
+fn main() -> anyhow::Result<()> {
+    // --- assignment: 500 random points per side in the unit square ---
+    let n = 500;
+    let eps = 0.1; // overall additive target: cost ≤ OPT + ε·n·c_max
+    let inst = Workload::Fig1 { n }.assignment(42);
+    let sol = PushRelabel::new().solve_assignment(&inst, eps)?;
+    println!(
+        "push-relabel: cost = {:.4} in {} phases ({:.1} ms)",
+        sol.cost,
+        sol.stats.phases,
+        sol.stats.seconds * 1e3
+    );
+
+    let exact = Hungarian.solve_assignment(&inst, 0.0)?;
+    let budget = eps * n as f64 * inst.costs.max() as f64;
+    println!(
+        "exact:        cost = {:.4} → additive error {:.4} (guarantee ≤ {budget:.4})",
+        exact.cost,
+        sol.cost - exact.cost
+    );
+    assert!(sol.cost <= exact.cost + budget + 1e-6);
+
+    // --- general OT: random masses on the same support ---
+    let inst = Workload::Fig1 { n: 100 }.ot_with_random_masses(7);
+    let sol = OtPushRelabel::new().solve_ot(&inst, eps)?;
+    let exact = SspExactOt::default().solve_ot(&inst, 0.0)?;
+    println!(
+        "OT: pr = {:.5}, exact = {:.5}, plan support = {} entries (compact!)",
+        sol.cost,
+        exact.cost,
+        sol.plan.support_size()
+    );
+    assert!(sol.cost <= exact.cost + eps * inst.costs.max() as f64 + 1e-9);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Serving demo: the L3 coordinator as an OT-solving service — a stream of
+//! heterogeneous requests (assignment + OT, mixed sizes and accuracies)
+//! flows through the router/batcher/worker pool; throughput and the
+//! latency histogram are reported at the end. When artifacts exist, large
+//! assignment jobs are automatically routed to the XLA engine.
+//!
+//!     cargo run --release --example serve_demo
+
+use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind, JobResult};
+use otpr::data::workloads::Workload;
+use otpr::runtime::XlaRuntime;
+use otpr::util::rng::Pcg32;
+use otpr::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let runtime = XlaRuntime::open_default()
+        .map_err(|e| eprintln!("note: XLA engine disabled ({e})"))
+        .ok();
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 4, ..Default::default() },
+        runtime,
+    );
+
+    let mut rng = Pcg32::new(9);
+    let sw = Stopwatch::start();
+    let mut handles = Vec::new();
+    let total_jobs: usize = 40;
+    for i in 0..total_jobs {
+        let roll = rng.next_below(10);
+        let (kind, eps) = if roll < 6 {
+            // small interactive assignment queries
+            let n = 50 + rng.next_below(150) as usize;
+            (JobKind::Assignment(Workload::Fig1 { n }.assignment(i as u64)), 0.2)
+        } else if roll < 8 {
+            // batch-sized assignment (router may pick XLA)
+            (JobKind::Assignment(Workload::Fig1 { n: 512 }.assignment(i as u64)), 0.3)
+        } else {
+            // general OT with random masses
+            let n = 30 + rng.next_below(50) as usize;
+            (JobKind::Ot(Workload::Fig1 { n }.ot_with_random_masses(i as u64)), 0.25)
+        };
+        handles.push(coord.submit(kind, eps, Engine::Auto)?);
+    }
+
+    let mut ok = 0usize;
+    let mut by_engine: std::collections::BTreeMap<&'static str, usize> = Default::default();
+    for h in handles {
+        let out = h.wait()?;
+        match out.result {
+            Ok(JobResult::Assignment(sol)) => {
+                assert!(sol.matching.is_perfect());
+                ok += 1;
+            }
+            Ok(JobResult::Ot(sol)) => {
+                assert!((sol.plan.total_mass() - 1.0).abs() < 1e-9);
+                ok += 1;
+            }
+            Err(e) => eprintln!("job {} failed: {e}", out.id),
+        }
+        *by_engine.entry(out.engine_used).or_default() += 1;
+    }
+    let wall = sw.elapsed_secs();
+    println!("\n{ok}/{total_jobs} jobs in {wall:.2}s  ({:.1} jobs/s)", ok as f64 / wall);
+    println!("engine mix: {by_engine:?}");
+    println!("\n--- coordinator metrics ---\n{}", coord.metrics.snapshot());
+    coord.shutdown();
+    assert_eq!(ok, total_jobs);
+    println!("serve_demo OK");
+    Ok(())
+}

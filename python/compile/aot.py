@@ -1,0 +1,150 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO **text** artifacts + manifest.
+
+Run once via `make artifacts` (`python -m compile.aot --out-dir ../artifacts`).
+The Rust runtime (`rust/src/runtime/`) loads the text with
+`HloModuleProto::from_text_file`, compiles on the PJRT CPU client, and
+drives the solve loops. Two interchange constraints shape this file (see
+/opt/xla-example/README and DESIGN.md §5):
+
+* HLO **text**, not `.serialize()` — jax ≥ 0.5 emits 64-bit instruction ids
+  that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+* **Single array output per artifact**, lowered with return_tuple=False —
+  the 0.5.1 PJRT wrapper returns tuple outputs as one opaque tuple buffer
+  that cannot be fed back into `execute_b`, so solver state is packed into
+  one tensor (`model.phase_step_packed` / `sinkhorn_step_packed`).
+
+Artifacts per size n (powers of two; requests are padded up by the router):
+    phase_step_{n}     (cq i32[n,n], state i32[5,n]) → state'
+    cost_euclid_{n}    (pts_b f32[n,2], pts_a f32[n,2]) → costs f32[n,n]
+    cost_l1_{n}        (imgs_b f32[n,784], imgs_a f32[n,784]) → costs
+    matrix_max_{n}     (m f32[n,n]) → f32[1]
+    quantize_{n}       (costs f32[n,n], inv_eps_abs f32[1]) → cq i32[n,n]
+    sinkhorn_step_{n}  (costs, state f32[3,n], r f32[n], c f32[n], eta f32[1])
+                       → state'
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_SIZES = [256, 512, 1024, 2048, 4096]
+IMG_DIM = 784
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text, single (untupled) result."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_defs(n: int):
+    """(name, jitted fn, example arg specs, input names, output name)."""
+    i32, f32 = jnp.int32, jnp.float32
+    return [
+        (
+            f"phase_step_{n}",
+            jax.jit(model.phase_step_packed),
+            [_spec((n, n), i32), _spec((5, n), i32)],
+            ["cq", "state"],
+            "state",
+        ),
+        (
+            f"multi_phase_{n}",
+            jax.jit(model.multi_phase_step),
+            [_spec((n, n), i32), _spec((5, n), i32), _spec((2,), i32)],
+            ["cq", "state", "params"],
+            "state",
+        ),
+        (
+            f"cost_euclid_{n}",
+            jax.jit(lambda pb, pa: model.cost_euclid(pb, pa)[0]),
+            [_spec((n, 2), f32), _spec((n, 2), f32)],
+            ["pts_b", "pts_a"],
+            "costs",
+        ),
+        (
+            f"cost_l1_{n}",
+            jax.jit(lambda xb, xa: model.cost_l1(xb, xa)[0]),
+            [_spec((n, IMG_DIM), f32), _spec((n, IMG_DIM), f32)],
+            ["imgs_b", "imgs_a"],
+            "costs",
+        ),
+        (
+            f"matrix_max_{n}",
+            jax.jit(model.matrix_max),
+            [_spec((n, n), f32)],
+            ["m"],
+            "cmax",
+        ),
+        (
+            f"quantize_{n}",
+            jax.jit(lambda c, inv: model.quantize(c, inv[0])),
+            [_spec((n, n), f32), _spec((1,), f32)],
+            ["costs", "inv_eps_abs"],
+            "cq",
+        ),
+        (
+            f"sinkhorn_step_{n}",
+            jax.jit(model.sinkhorn_step_packed),
+            [_spec((n, n), f32), _spec((3, n), f32), _spec((n,), f32), _spec((n,), f32), _spec((1,), f32)],
+            ["costs", "state", "r", "c", "eta"],
+            "state",
+        ),
+    ]
+
+
+def build(out_dir: str, sizes) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 2, "sizes": sorted(sizes), "img_dim": IMG_DIM, "artifacts": []}
+    for n in sorted(sizes):
+        for name, fn, specs, in_names, out_name in artifact_defs(n):
+            lowered = fn.lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "kind": name.rsplit("_", 1)[0],
+                    "n": n,
+                    "file": fname,
+                    "inputs": in_names,
+                    "outputs": [out_name],
+                }
+            )
+            print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts in {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated artifact sizes (powers of two)",
+    )
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s.strip()]
+    build(args.out_dir, sizes)
+
+
+if __name__ == "__main__":
+    main()

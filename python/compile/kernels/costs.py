@@ -1,0 +1,76 @@
+"""L1 Pallas kernels: pairwise cost construction.
+
+Building the cost matrix on-device is what lets the Rust runtime keep all
+per-phase state device-resident: the host uploads points/images once
+(O(n·d)) instead of an O(n²) cost matrix.
+
+* `euclid_costs` — Fig-1 workload: [n,2] points → [nb,na] distances.
+* `l1_costs` — Fig-2 workload: [n,784] normalized images → L1 distances.
+  The (TB, TA, D) broadcast tile is the VMEM budget driver:
+  32·32·784·4B ≈ 3.2 MiB, inside the ~16 MiB VMEM of a TPU core.
+
+Quantization to ε-units happens in L2 (`model.quantize`) because eps_abs
+depends on the data max, which is only known after this kernel runs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .propose import _tile
+
+
+def _euclid_kernel(pb_ref, pa_ref, o_ref):
+    pb = pb_ref[...]  # [TB, 2]
+    pa = pa_ref[...]  # [TA, 2]
+    dx = pb[:, 0:1] - pa[None, :, 0]
+    dy = pb[:, 1:2] - pa[None, :, 1]
+    o_ref[...] = jnp.sqrt(dx * dx + dy * dy)
+
+
+@jax.jit
+def euclid_costs(pts_b, pts_a):
+    """Pairwise Euclidean distance matrix, rows = B."""
+    nb = pts_b.shape[0]
+    na = pts_a.shape[0]
+    tb, ta = _tile(nb), _tile(na)
+    return pl.pallas_call(
+        _euclid_kernel,
+        grid=(nb // tb, na // ta),
+        in_specs=[
+            pl.BlockSpec((tb, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((ta, 2), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, ta), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, na), jnp.float32),
+        interpret=True,
+    )(pts_b.astype(jnp.float32), pts_a.astype(jnp.float32))
+
+
+def _l1_kernel(xb_ref, xa_ref, o_ref):
+    xb = xb_ref[...]  # [TB, D]
+    xa = xa_ref[...]  # [TA, D]
+    o_ref[...] = jnp.sum(jnp.abs(xb[:, None, :] - xa[None, :, :]), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "ta"))
+def l1_costs(imgs_b, imgs_a, tb: int = 0, ta: int = 0):
+    """Pairwise L1 distance matrix between image vectors, rows = B."""
+    nb, d = imgs_b.shape
+    na, d2 = imgs_a.shape
+    assert d == d2
+    tb = tb or _tile(nb, 32)
+    ta = ta or _tile(na, 32)
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=(nb // tb, na // ta),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((ta, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, ta), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, na), jnp.float32),
+        interpret=True,
+    )(imgs_b.astype(jnp.float32), imgs_a.astype(jnp.float32))

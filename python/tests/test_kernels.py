@@ -1,0 +1,134 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeping shapes, seeds and value ranges."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import costs as cost_kernels
+from compile.kernels import ref
+from compile.kernels import sinkhorn as sk
+from compile.kernels.propose import propose, _tile
+
+SIZES = st.sampled_from([4, 8, 16, 24, 32, 64])
+
+
+def _rand_state(rng, nb, na, max_cost=8):
+    cq = rng.integers(0, max_cost, (nb, na)).astype(np.int32)
+    ya = -rng.integers(0, 4, na).astype(np.int32)
+    yb = rng.integers(0, max_cost + 2, nb).astype(np.int32)
+    avail = rng.integers(0, 2, na).astype(np.int32)
+    active = rng.integers(0, 2, nb).astype(np.int32)
+    return cq, ya, yb, avail, active
+
+
+class TestPropose:
+    @settings(max_examples=25, deadline=None)
+    @given(nb=SIZES, na=SIZES, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, nb, na, seed):
+        rng = np.random.default_rng(seed)
+        args = _rand_state(rng, nb, na)
+        got = propose(*[jnp.asarray(x) for x in args])
+        want = ref.propose_ref(*[jnp.asarray(x) for x in args])
+        np.testing.assert_array_equal(np.array(got), np.array(want))
+
+    def test_nonsquare_tiles(self):
+        rng = np.random.default_rng(0)
+        args = _rand_state(rng, 48, 16)
+        got = propose(*[jnp.asarray(x) for x in args], tb=16, ta=8)
+        want = ref.propose_ref(*[jnp.asarray(x) for x in args])
+        np.testing.assert_array_equal(np.array(got), np.array(want))
+
+    def test_no_admissible_returns_big(self):
+        nb = na = 8
+        cq = np.full((nb, na), 100, dtype=np.int32)  # nothing tight
+        ya = np.zeros(na, dtype=np.int32)
+        yb = np.ones(nb, dtype=np.int32)
+        avail = np.ones(na, dtype=np.int32)
+        active = np.ones(nb, dtype=np.int32)
+        got = np.array(propose(cq, ya, yb, avail, active))
+        assert (got == ref.BIG).all()
+
+    def test_inactive_rows_ignored(self):
+        nb = na = 8
+        cq = np.zeros((nb, na), dtype=np.int32)
+        ya = np.zeros(na, dtype=np.int32)
+        yb = np.ones(nb, dtype=np.int32)  # all edges admissible
+        avail = np.ones(na, dtype=np.int32)
+        active = np.zeros(nb, dtype=np.int32)
+        active[3] = 1
+        got = np.array(propose(cq, ya, yb, avail, active))
+        assert got[3] == 0
+        assert (np.delete(got, 3) == ref.BIG).all()
+
+    def test_tile_helper(self):
+        # default preference is 512 (see §Perf in EXPERIMENTS.md)
+        assert _tile(1024) == 512
+        assert _tile(256) == 256
+        assert _tile(24) == 8
+        assert _tile(7) == 1
+        assert _tile(256, pref=128) == 128
+
+
+class TestCostKernels:
+    @settings(max_examples=15, deadline=None)
+    @given(nb=SIZES, na=SIZES, seed=st.integers(0, 2**31 - 1))
+    def test_euclid_matches_ref(self, nb, na, seed):
+        rng = np.random.default_rng(seed)
+        pb = rng.random((nb, 2)).astype(np.float32)
+        pa = rng.random((na, 2)).astype(np.float32)
+        got = cost_kernels.euclid_costs(jnp.asarray(pb), jnp.asarray(pa))
+        want = ref.euclid_ref(jnp.asarray(pb), jnp.asarray(pa))
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(nb=st.sampled_from([4, 8, 16]), na=st.sampled_from([4, 8, 16]),
+           d=st.sampled_from([16, 784]), seed=st.integers(0, 2**31 - 1))
+    def test_l1_matches_ref(self, nb, na, d, seed):
+        rng = np.random.default_rng(seed)
+        xb = rng.random((nb, d)).astype(np.float32)
+        xa = rng.random((na, d)).astype(np.float32)
+        got = cost_kernels.l1_costs(jnp.asarray(xb), jnp.asarray(xa))
+        want = ref.l1_ref(jnp.asarray(xb), jnp.asarray(xa))
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-5)
+
+    def test_euclid_zero_distance_diagonal(self):
+        pts = np.random.default_rng(1).random((16, 2)).astype(np.float32)
+        c = np.array(cost_kernels.euclid_costs(pts, pts))
+        np.testing.assert_allclose(np.diag(c), 0.0, atol=1e-6)
+
+
+class TestSinkhornKernels:
+    @settings(max_examples=15, deadline=None)
+    @given(nb=SIZES, na=SIZES, seed=st.integers(0, 2**31 - 1),
+           eta=st.sampled_from([0.05, 0.2, 1.0]))
+    def test_kv_matches_ref(self, nb, na, seed, eta):
+        rng = np.random.default_rng(seed)
+        c = rng.random((nb, na)).astype(np.float32)
+        v = rng.random(na).astype(np.float32)
+        got = sk.sinkhorn_kv(jnp.asarray(c), jnp.asarray(v), eta)
+        want = ref.sinkhorn_kv_ref(jnp.asarray(c), jnp.asarray(v), eta)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(nb=SIZES, na=SIZES, seed=st.integers(0, 2**31 - 1),
+           eta=st.sampled_from([0.05, 0.2, 1.0]))
+    def test_ktu_matches_ref(self, nb, na, seed, eta):
+        rng = np.random.default_rng(seed)
+        c = rng.random((nb, na)).astype(np.float32)
+        u = rng.random(nb).astype(np.float32)
+        got = sk.sinkhorn_ktu(jnp.asarray(c), jnp.asarray(u), eta)
+        want = ref.sinkhorn_ktu_ref(jnp.asarray(c), jnp.asarray(u), eta)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4)
+
+    def test_kv_identity_kernel(self):
+        # eta huge -> K ~ all-ones -> Kv = sum(v)
+        c = np.zeros((8, 8), dtype=np.float32)
+        v = np.arange(8, dtype=np.float32)
+        got = np.array(sk.sinkhorn_kv(c, v, 1.0))
+        np.testing.assert_allclose(got, np.full(8, v.sum()), rtol=1e-5)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

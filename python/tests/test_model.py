@@ -1,0 +1,197 @@
+"""L2 correctness: phase_step vs the numpy reference (bit-exact), phase
+invariants (I1)/(I2) across full solves, sinkhorn_step vs oracle, and the
+end-to-end jax solve's additive guarantee vs brute force."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _random_costs(rng, n):
+    return rng.random((n, n)).astype(np.float32)
+
+
+class TestPhaseStep:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([4, 8, 16, 32]), seed=st.integers(0, 2**31 - 1),
+           max_cost=st.sampled_from([3, 10, 40]))
+    def test_full_solve_matches_ref_every_phase(self, n, seed, max_cost):
+        rng = np.random.default_rng(seed)
+        cq = rng.integers(0, max_cost, (n, n)).astype(np.int32)
+        ya, yb, ma, mb = model.init_state(jnp.asarray(cq))
+        state_j = (ya, yb, ma, mb)
+        state_r = tuple(np.array(x) for x in state_j)
+        for _ in range(200):
+            out_j = model.phase_step(cq, *state_j)
+            out_r = ref.phase_step_ref(cq, *state_r)
+            for got, want in zip(out_j[:4], out_r[:4]):
+                np.testing.assert_array_equal(np.array(got), want)
+            assert int(out_j[4]) == out_r[4]
+            assert int(out_j[5]) == out_r[5]
+            ref.check_feasible_ref(cq, *out_r[:4])
+            state_j = out_j[:4]
+            state_r = out_r[:4]
+            if out_r[4] == 0:
+                break
+        else:
+            pytest.fail("did not converge in 200 phases")
+
+    def test_empty_phase_is_noop(self):
+        # all matched already: phase must not change anything
+        n = 8
+        cq = np.zeros((n, n), dtype=np.int32)
+        ya = np.zeros(n, dtype=np.int32)
+        yb = np.zeros(n, dtype=np.int32)
+        ma = np.arange(n, dtype=np.int32)
+        mb = np.arange(n, dtype=np.int32)
+        out = model.phase_step(cq, ya, yb, ma, mb)
+        np.testing.assert_array_equal(np.array(out[2]), ma)
+        np.testing.assert_array_equal(np.array(out[3]), mb)
+        assert int(out[4]) == 0
+
+    def test_matched_vertices_of_a_stay_matched(self):
+        # Lemma 2.1: A-vertices never become unmatched
+        rng = np.random.default_rng(3)
+        n = 16
+        cq = rng.integers(0, 6, (n, n)).astype(np.int32)
+        state = model.init_state(jnp.asarray(cq))
+        matched_a_prev = np.zeros(n, dtype=bool)
+        for _ in range(60):
+            out = model.phase_step(cq, *state)
+            matched_a = np.array(out[2]) >= 0
+            assert (matched_a | ~matched_a_prev).all(), "an A vertex got unmatched"
+            matched_a_prev = matched_a
+            state = out[:4]
+            if int(out[4]) == 0:
+                break
+
+
+class TestFullSolve:
+    def brute_force(self, costs):
+        n = costs.shape[0]
+        best = float("inf")
+        for p in itertools.permutations(range(n)):
+            best = min(best, sum(costs[b, p[b]] for b in range(n)))
+        return best
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), eps=st.sampled_from([0.05, 0.1, 0.3]))
+    def test_additive_guarantee_vs_bruteforce(self, seed, eps):
+        n = 6
+        rng = np.random.default_rng(seed)
+        costs = _random_costs(rng, n)
+        mb, _ = model.assignment_solve(costs, eps)
+        mb = np.array(mb)
+        assert sorted(mb.tolist()) == list(range(n)), "not a perfect matching"
+        got = sum(costs[b, mb[b]] for b in range(n))
+        opt = self.brute_force(costs)
+        c_max = costs.max()
+        assert got <= opt + 3 * eps * n * c_max + 1e-6, (
+            f"cost {got} exceeds opt {opt} + 3εn = {opt + 3 * eps * n * c_max}"
+        )
+
+    def test_phase_count_bound(self):
+        rng = np.random.default_rng(0)
+        eps = 0.25
+        _, phases = model.assignment_solve(_random_costs(rng, 32), eps)
+        assert phases <= (1 + 2 * eps) / eps**2 + 1
+
+
+class TestSinkhornStep:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        c = rng.random((n, n)).astype(np.float32)
+        u = rng.random(n).astype(np.float32) + 0.5
+        v = rng.random(n).astype(np.float32) + 0.5
+        r = np.full(n, 1.0 / n, dtype=np.float32)
+        dem = np.full(n, 1.0 / n, dtype=np.float32)
+        eta = 0.2
+        gu, gv, gerr = model.sinkhorn_step(c, u, v, r, dem, eta)
+        wu, wv, werr = ref.sinkhorn_step_ref(
+            jnp.asarray(c), jnp.asarray(u), jnp.asarray(v), jnp.asarray(r), jnp.asarray(dem), eta
+        )
+        np.testing.assert_allclose(np.array(gu), np.array(wu), rtol=2e-4)
+        np.testing.assert_allclose(np.array(gv), np.array(wv), rtol=2e-4)
+        np.testing.assert_allclose(float(gerr[0]), float(werr), rtol=2e-3, atol=1e-6)
+
+    def test_iteration_decreases_marginal_error(self):
+        rng = np.random.default_rng(1)
+        n = 16
+        c = rng.random((n, n)).astype(np.float32)
+        u = np.ones(n, dtype=np.float32)
+        v = np.ones(n, dtype=np.float32)
+        r = np.full(n, 1.0 / n, dtype=np.float32)
+        dem = np.full(n, 1.0 / n, dtype=np.float32)
+        errs = []
+        for _ in range(30):
+            u, v, err = model.sinkhorn_step(c, u, v, r, dem, 0.3)
+            errs.append(float(err[0]))
+        assert errs[-1] < errs[0] * 0.5, f"no convergence: {errs[0]} -> {errs[-1]}"
+
+
+class TestMultiPhase:
+    def test_matches_single_phase_chain(self):
+        rng = np.random.default_rng(5)
+        n = 24
+        cq = rng.integers(0, 9, (n, n)).astype(np.int32)
+        state = model.pack_phase_state(*model.init_state(jnp.asarray(cq)))
+        threshold = 2
+        s1 = state
+        phases = 0
+        while int(jnp.sum(s1[3] < 0)) > threshold:
+            s1 = model.phase_step_packed(cq, s1)
+            phases += 1
+        s2 = model.multi_phase_step(
+            cq, state, jnp.asarray([threshold, 10**6], dtype=jnp.int32)
+        )
+        np.testing.assert_array_equal(np.array(s1[:4]), np.array(s2[:4]))
+        assert int(s2[4, 2]) == phases
+        assert int(s2[4, 0]) <= threshold
+
+    def test_respects_phase_cap(self):
+        rng = np.random.default_rng(6)
+        n = 16
+        cq = rng.integers(0, 9, (n, n)).astype(np.int32)
+        state = model.pack_phase_state(*model.init_state(jnp.asarray(cq)))
+        s = model.multi_phase_step(cq, state, jnp.asarray([0, 1], dtype=jnp.int32))
+        assert int(s[4, 2]) == 1
+
+    def test_noop_when_below_threshold(self):
+        n = 8
+        cq = np.zeros((n, n), dtype=np.int32)
+        ma = np.arange(n, dtype=np.int32)
+        state = model.pack_phase_state(
+            jnp.zeros(n, jnp.int32), jnp.zeros(n, jnp.int32), jnp.asarray(ma), jnp.asarray(ma)
+        )
+        s = model.multi_phase_step(cq, state, jnp.asarray([0, 100], dtype=jnp.int32))
+        assert int(s[4, 2]) == 0
+
+
+class TestCostBuilders:
+    def test_euclid_quantized_pipeline(self):
+        rng = np.random.default_rng(2)
+        n = 32
+        pb = rng.random((n, 2)).astype(np.float32)
+        pa = rng.random((n, 2)).astype(np.float32)
+        costs, cmax = model.cost_euclid(pb, pa)
+        assert float(cmax[0]) == pytest.approx(float(np.array(costs).max()))
+        eps = 0.1
+        inv = 1.0 / (eps * float(cmax[0]))
+        cq = np.array(model.quantize(costs, inv))
+        assert cq.max() <= int(1 / eps)
+        assert (cq >= 0).all()
+        cq2, cmax2 = model.cost_euclid_quantized(pb, pa, jnp.asarray([inv], dtype=jnp.float32))
+        np.testing.assert_array_equal(np.array(cq2), cq)
+        assert float(cmax2[0]) == pytest.approx(float(cmax[0]))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

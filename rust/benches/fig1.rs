@@ -1,0 +1,60 @@
+//! Figure-1 bench (paper §5): runtime vs n on synthetic unit-square
+//! points, one table per ε, comparing push-relabel vs Sinkhorn on the
+//! native ("CPU") and XLA ("GPU"-analog) engines.
+//!
+//! `cargo bench --bench fig1` runs a CI-scale slice. Environment knobs:
+//!   OTPR_FIG1_SIZES=500,1000,...   OTPR_FIG1_EPS=0.1,0.01
+//!   OTPR_FIG1_REPS=30              OTPR_FIG1_ENGINES=pr-cpu,sinkhorn-cpu
+//! The paper's full grid: sizes 500..10000, eps 0.1,0.01,0.005, reps 30.
+
+use otpr::exp::fig1::{run_eps, Fig1Config};
+use otpr::exp::report::{figure_csv, figure_table};
+use otpr::runtime::XlaRuntime;
+
+fn env_list_usize(key: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn env_list_f64(key: &str, default: &[f64]) -> Vec<f64> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let cfg = Fig1Config {
+        sizes: env_list_usize("OTPR_FIG1_SIZES", &[256, 512]),
+        eps: env_list_f64("OTPR_FIG1_EPS", &[0.1, 0.01]),
+        reps: std::env::var("OTPR_FIG1_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(2),
+        seed: 42,
+        max_secs_per_run: 120.0,
+        engines: std::env::var("OTPR_FIG1_ENGINES")
+            .ok()
+            .map(|v| v.split(',').map(String::from).collect())
+            .unwrap_or_else(|| {
+                vec![
+                    "pr-cpu".into(),
+                    "pr-parallel".into(),
+                    "pr-gpu".into(),
+                    "sinkhorn-cpu".into(),
+                    "sinkhorn-gpu".into(),
+                ]
+            }),
+    };
+    let registry = XlaRuntime::open_default()
+        .map_err(|e| eprintln!("note: XLA engines disabled: {e}"))
+        .ok();
+    println!("# Figure 1 reproduction — {} reps/point\n", cfg.reps);
+    for &eps in &cfg.eps {
+        let series = run_eps(&cfg, eps, registry.clone());
+        println!(
+            "{}",
+            figure_table(&format!("Figure 1 — runtime (s) vs n, ε = {eps}"), "n", &series)
+        );
+        println!("{}", figure_csv("n", &series));
+    }
+}

@@ -1,0 +1,44 @@
+//! Figure-2 bench (paper §5): runtime vs ε on MNIST-style image inputs
+//! (L1 costs on normalized 28×28 images). Real MNIST is used when
+//! `data/mnist/train-images-idx3-ubyte` exists; synthetic digits otherwise.
+//!
+//! Knobs: OTPR_FIG2_N (paper: 10000), OTPR_FIG2_EPS, OTPR_FIG2_REPS,
+//!        OTPR_FIG2_ENGINES.
+
+use otpr::exp::fig2::{run, Fig2Config};
+use otpr::exp::report::{figure_csv, figure_table};
+use otpr::runtime::XlaRuntime;
+
+fn main() {
+    let cfg = Fig2Config {
+        n: std::env::var("OTPR_FIG2_N").ok().and_then(|v| v.parse().ok()).unwrap_or(256),
+        eps: std::env::var("OTPR_FIG2_EPS")
+            .ok()
+            .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+            .unwrap_or_else(|| vec![0.75, 0.5, 0.25, 0.1]),
+        reps: std::env::var("OTPR_FIG2_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(2),
+        seed: 7,
+        engines: std::env::var("OTPR_FIG2_ENGINES")
+            .ok()
+            .map(|v| v.split(',').map(String::from).collect())
+            .unwrap_or_else(|| {
+                vec![
+                    "pr-cpu".into(),
+                    "pr-gpu".into(),
+                    "sinkhorn-cpu".into(),
+                    "sinkhorn-gpu".into(),
+                ]
+            }),
+    };
+    let registry = XlaRuntime::open_default()
+        .map_err(|e| eprintln!("note: XLA engines disabled: {e}"))
+        .ok();
+    println!("# Figure 2 reproduction — n = {}, {} reps/point\n", cfg.n, cfg.reps);
+    let (series, real) = run(&cfg, registry);
+    let src = if real { "real MNIST" } else { "synthetic MNIST-like (see DESIGN.md §2)" };
+    println!(
+        "{}",
+        figure_table(&format!("Figure 2 — runtime (s) vs ε, n = {} ({src})", cfg.n), "eps", &series)
+    );
+    println!("{}", figure_csv("eps", &series));
+}

@@ -1,0 +1,53 @@
+//! Micro/ablation bench: the analytical claims behind the figures.
+//! A1 phases-vs-ε, A2 rounds-vs-n, A6 thread scaling, A7 complexity
+//! exponent, plus per-phase cost of the native sequential solver (the
+//! Lemma 3.4 O(n·nᵢ) scan).
+
+use otpr::data::workloads::Workload;
+use otpr::exp::ablation;
+use otpr::exp::report::figure_table;
+use otpr::solvers::push_relabel::PrState;
+use otpr::util::bench::{run_bench, to_markdown, BenchConfig};
+
+fn main() {
+    let quick = std::env::var("OTPR_BENCH_QUICK").is_ok();
+    let seed = 42;
+
+    // A1: phases vs eps
+    let eps_grid = if quick { vec![0.3, 0.1] } else { vec![0.3, 0.2, 0.1, 0.05, 0.02, 0.01] };
+    let series = ablation::phases_vs_eps(512, &eps_grid, seed);
+    println!("{}", figure_table("A1 — phases vs ε at n=512 (bound (1+2ε)/ε²)", "eps", &series));
+
+    // A2: propose-accept rounds vs n
+    let sizes = if quick { vec![128, 256] } else { vec![128, 256, 512, 1024, 2048] };
+    let series = ablation::rounds_vs_n(&sizes, 0.1, seed);
+    println!("{}", figure_table("A2 — rounds/phase vs n (ε=0.1; §3.2 predicts O(log n))", "n", &series));
+
+    // A6: thread scaling
+    let threads = if quick { vec![1, 2] } else { vec![1, 2, 4, 8, 16] };
+    let series = ablation::threads(2048, 0.05, &threads, seed);
+    println!("{}", figure_table("A6 — parallel solver scaling at n=2048, ε=0.05", "threads", &series));
+
+    // A7: sequential complexity exponent
+    let sizes = if quick { vec![256, 512] } else { vec![256, 512, 1024, 2048, 4096] };
+    let (k, r2) = ablation::complexity_exponent(&sizes, 0.1, seed);
+    println!("## A7 — sequential time ~ n^k at ε=0.1\n\nk = {k:.2} (r² = {r2:.3}); paper: O(n²/ε) ⇒ k ≈ 2\n");
+
+    // Per-phase timing: first-phase cost scaling (Lemma 3.4's O(n·n₁) scan,
+    // n₁ = n at the start).
+    let cfg = BenchConfig::from_env();
+    let mut results = Vec::new();
+    for &n in &sizes {
+        let costs = Workload::Fig1 { n }.costs(seed);
+        results.push(run_bench(&format!("first-phase n={n} eps=0.1"), &cfg, || {
+            let mut st = PrState::new(&costs, 0.1);
+            let out = st.run_phase();
+            vec![
+                ("matched".into(), out.matched.to_string()),
+                ("free".into(), out.free_at_start.to_string()),
+            ]
+        }));
+    }
+    println!("## Per-phase cost (greedy maximal-matching scan)\n");
+    println!("{}", to_markdown(&results));
+}

@@ -1,0 +1,110 @@
+//! Runtime-layer bench: where the XLA ("GPU"-analog) path spends its time —
+//! artifact compile, host↔device transfer, cost build, quantize, and the
+//! per-phase / per-sweep step latencies that dominate Figures 1–2 on this
+//! engine. Feeds EXPERIMENTS.md §Perf.
+
+use otpr::core::OtInstance;
+use otpr::data::synthetic;
+use otpr::data::workloads::Workload;
+use otpr::runtime::client::run1;
+use otpr::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
+use otpr::solvers::OtSolver;
+use otpr::util::bench::{run_bench, to_markdown, BenchConfig};
+use otpr::util::rng::Pcg32;
+
+fn main() {
+    let Ok(rt) = XlaRuntime::open_default() else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    };
+    let cfg = BenchConfig::from_env();
+    let sizes: Vec<usize> = std::env::var("OTPR_XLA_SIZES")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![256, 512, 1024]);
+    let mut results = Vec::new();
+
+    for &n in &sizes {
+        // compile (cold vs cached)
+        let rt2 = rt.clone();
+        results.push(run_bench(&format!("compile phase_step n={n} (cached)"), &cfg, || {
+            rt2.call(move |ctx| ctx.executable("phase_step", n).map(|_| ())).unwrap();
+            vec![]
+        }));
+
+        // upload + cost build + quantize
+        let mut rng = Pcg32::new(7);
+        let pts_b = synthetic::points_to_f32(&synthetic::uniform_points(n, &mut rng));
+        let pts_a = synthetic::points_to_f32(&synthetic::uniform_points(n, &mut rng));
+        let rt2 = rt.clone();
+        results.push(run_bench(&format!("cost_euclid+quantize n={n}"), &cfg, || {
+            let (pb, pa) = (pts_b.clone(), pts_a.clone());
+            rt2.call(move |ctx| {
+                let fb = ctx.upload_f32(&pb, &[n, 2])?;
+                let fa = ctx.upload_f32(&pa, &[n, 2])?;
+                let cost_exe = ctx.executable("cost_euclid", n)?;
+                let costs = run1(&cost_exe, &[&fb, &fa])?;
+                let inv = ctx.upload_f32(&[10.0], &[1])?;
+                let quant_exe = ctx.executable("quantize", n)?;
+                let _ = run1(&quant_exe, &[&costs, &inv])?;
+                Ok(())
+            })
+            .unwrap();
+            vec![]
+        }));
+
+        // one phase_step execution (the figure-level unit of work)
+        let rt2 = rt.clone();
+        results.push(run_bench(&format!("phase_step exec n={n}"), &cfg, || {
+            rt2.call(move |ctx| {
+                let cq = ctx.upload_i32(&vec![0i32; n * n], &[n, n])?;
+                let mut state = vec![0i32; 5 * n];
+                state[n..2 * n].fill(1);
+                state[2 * n..4 * n].fill(-1);
+                let st = ctx.upload_i32(&state, &[5, n])?;
+                let exe = ctx.executable("phase_step", n)?;
+                let _ = run1(&exe, &[&cq, &st])?;
+                Ok(())
+            })
+            .unwrap();
+            vec![]
+        }));
+
+        // one sinkhorn sweep
+        let rt2 = rt.clone();
+        results.push(run_bench(&format!("sinkhorn_step exec n={n}"), &cfg, || {
+            rt2.call(move |ctx| {
+                let costs = ctx.upload_f32(&vec![0.5f32; n * n], &[n, n])?;
+                let mut state = vec![1f32; 2 * n];
+                state.extend(std::iter::repeat(0f32).take(n));
+                let st = ctx.upload_f32(&state, &[3, n])?;
+                let r = ctx.upload_f32(&vec![1.0 / n as f32; n], &[n])?;
+                let c = ctx.upload_f32(&vec![1.0 / n as f32; n], &[n])?;
+                let eta = ctx.upload_f32(&[0.05], &[1])?;
+                let exe = ctx.executable("sinkhorn_step", n)?;
+                let _ = run1(&exe, &[&costs, &st, &r, &c, &eta])?;
+                Ok(())
+            })
+            .unwrap();
+            vec![]
+        }));
+    }
+
+    // end-to-end engine comparison at one operating point
+    let n = sizes[0];
+    let inst = Workload::Fig1 { n }.assignment(3);
+    let solver = XlaAssignment::new(rt.clone());
+    results.push(run_bench(&format!("e2e xla assignment n={n} eps=0.1"), &cfg, || {
+        let sol = solver.solve_costs(&inst, 0.1).unwrap();
+        vec![("phases".into(), sol.stats.phases.to_string())]
+    }));
+    let ot = OtInstance::uniform(inst.costs.clone()).unwrap();
+    let sk = XlaSinkhorn::new(rt);
+    results.push(run_bench(&format!("e2e xla sinkhorn n={n} eps=0.25"), &cfg, || {
+        let sol = sk.solve_ot(&ot, 0.25).unwrap();
+        vec![("iters".into(), sol.stats.phases.to_string())]
+    }));
+
+    println!("## XLA runtime micro-benchmarks\n");
+    println!("{}", to_markdown(&results));
+}

@@ -1,0 +1,132 @@
+//! Micro-batching: jobs destined for the same (engine, artifact bucket)
+//! are dispatched together so workers reuse the compiled executable and
+//! its warm device state — the dynamic-batching idea from serving systems
+//! (vLLM-style), scaled to this coordinator.
+//!
+//! Policy: a batch closes when it reaches `max_batch` jobs OR `max_wait`
+//! elapsed since its first job. Different keys never mix.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Batching key: engine name + optional artifact bucket.
+pub type BatchKey = (&'static str, Option<usize>);
+
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub key: BatchKey,
+    pub jobs: Vec<T>,
+    opened: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates jobs into per-key open batches.
+pub struct Batcher<T> {
+    config: BatcherConfig,
+    open: HashMap<BatchKey, Batch<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(config: BatcherConfig) -> Self {
+        Self { config, open: HashMap::new() }
+    }
+
+    /// Add a job; returns a closed batch if this push filled one.
+    pub fn push(&mut self, key: BatchKey, job: T) -> Option<Batch<T>> {
+        let batch = self
+            .open
+            .entry(key)
+            .or_insert_with(|| Batch { key, jobs: Vec::new(), opened: Instant::now() });
+        batch.jobs.push(job);
+        if batch.jobs.len() >= self.config.max_batch {
+            return self.open.remove(&key);
+        }
+        None
+    }
+
+    /// Batches whose max_wait expired (call periodically).
+    pub fn drain_expired(&mut self) -> Vec<Batch<T>> {
+        let now = Instant::now();
+        let expired: Vec<BatchKey> = self
+            .open
+            .iter()
+            .filter(|(_, b)| now.duration_since(b.opened) >= self.config.max_wait)
+            .map(|(k, _)| *k)
+            .collect();
+        expired.into_iter().filter_map(|k| self.open.remove(&k)).collect()
+    }
+
+    /// Flush everything (shutdown).
+    pub fn drain_all(&mut self) -> Vec<Batch<T>> {
+        self.open.drain().map(|(_, b)| b).collect()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.open.values().map(|b| b.jobs.len()).sum()
+    }
+
+    /// The shortest deadline among open batches (dispatcher poll hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.open.values().map(|b| b.opened + self.config.max_wait).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closes_on_max_batch() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(9) });
+        assert!(b.push(("xla", Some(256)), 1).is_none());
+        assert!(b.push(("xla", Some(256)), 2).is_none());
+        let batch = b.push(("xla", Some(256)), 3).unwrap();
+        assert_eq!(batch.jobs, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn keys_do_not_mix() {
+        let mut b: Batcher<u32> = Batcher::new(BatcherConfig::default());
+        b.push(("xla", Some(256)), 1);
+        b.push(("xla", Some(512)), 2);
+        b.push(("native-seq", None), 3);
+        assert_eq!(b.pending(), 3);
+        assert_eq!(b.open.len(), 3);
+    }
+
+    #[test]
+    fn expiry_drains() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+        });
+        b.push(("e", None), 7);
+        std::thread::sleep(Duration::from_millis(3));
+        let out = b.drain_expired();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].jobs, vec![7]);
+        assert!(b.drain_expired().is_empty());
+    }
+
+    #[test]
+    fn drain_all_flushes() {
+        let mut b: Batcher<u32> = Batcher::new(BatcherConfig::default());
+        b.push(("a", None), 1);
+        b.push(("b", None), 2);
+        let all = b.drain_all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+}

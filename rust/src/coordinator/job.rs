@@ -1,0 +1,119 @@
+//! Job types flowing through the coordinator.
+
+use crate::core::{AssignmentInstance, OtInstance};
+use crate::solvers::{AssignmentSolution, OtSolution};
+
+/// Which solver backend executes a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// Paper §2.2 sequential push-relabel (native Rust).
+    NativeSeq,
+    /// Propose–accept multi-threaded push-relabel (native Rust).
+    NativeParallel,
+    /// Device-resident push-relabel over the XLA artifacts.
+    Xla,
+    /// Sinkhorn baseline, native Rust (log-domain for robustness).
+    SinkhornNative,
+    /// Sinkhorn baseline over the XLA artifacts.
+    SinkhornXla,
+    /// Let the router decide (size- and artifact-aware).
+    Auto,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        Some(match s {
+            "native" | "seq" => Engine::NativeSeq,
+            "parallel" | "par" => Engine::NativeParallel,
+            "xla" | "gpu" => Engine::Xla,
+            "sinkhorn" => Engine::SinkhornNative,
+            "sinkhorn-xla" => Engine::SinkhornXla,
+            "auto" => Engine::Auto,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::NativeSeq => "native-seq",
+            Engine::NativeParallel => "native-parallel",
+            Engine::Xla => "xla",
+            Engine::SinkhornNative => "sinkhorn-native",
+            Engine::SinkhornXla => "sinkhorn-xla",
+            Engine::Auto => "auto",
+        }
+    }
+}
+
+/// What to solve.
+#[derive(Debug, Clone)]
+pub enum JobKind {
+    Assignment(AssignmentInstance),
+    Ot(OtInstance),
+}
+
+impl JobKind {
+    pub fn n(&self) -> usize {
+        match self {
+            JobKind::Assignment(i) => i.n(),
+            JobKind::Ot(i) => i.n(),
+        }
+    }
+}
+
+/// A submitted job.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub id: u64,
+    pub kind: JobKind,
+    /// Overall additive accuracy target (ε relative to c_max).
+    pub eps: f64,
+    pub engine: Engine,
+}
+
+/// Result payload.
+#[derive(Debug, Clone)]
+pub enum JobResult {
+    Assignment(AssignmentSolution),
+    Ot(OtSolution),
+}
+
+impl JobResult {
+    pub fn cost(&self) -> f64 {
+        match self {
+            JobResult::Assignment(s) => s.cost,
+            JobResult::Ot(s) => s.cost,
+        }
+    }
+
+    pub fn phases(&self) -> usize {
+        match self {
+            JobResult::Assignment(s) => s.stats.phases,
+            JobResult::Ot(s) => s.stats.phases,
+        }
+    }
+}
+
+/// Completed job with queueing/solve timing for the metrics layer.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub engine_used: &'static str,
+    pub result: Result<JobResult, String>,
+    pub queued_secs: f64,
+    pub solve_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parsing() {
+        assert_eq!(Engine::parse("xla"), Some(Engine::Xla));
+        assert_eq!(Engine::parse("gpu"), Some(Engine::Xla));
+        assert_eq!(Engine::parse("auto"), Some(Engine::Auto));
+        assert_eq!(Engine::parse("bogus"), None);
+        assert_eq!(Engine::NativeParallel.name(), "native-parallel");
+    }
+}

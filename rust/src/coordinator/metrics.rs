@@ -1,0 +1,132 @@
+//! Coordinator metrics: lock-free counters plus a fixed-bucket latency
+//! histogram, with a text snapshot for `otpr serve --stats` and tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Latency histogram buckets (seconds, upper bounds).
+pub const LATENCY_BUCKETS: [f64; 10] =
+    [0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 30.0, f64::INFINITY];
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub rejected: AtomicU64,
+    /// Batches dispatched and total jobs in them (batching efficiency).
+    pub batches: AtomicU64,
+    pub batched_jobs: AtomicU64,
+    latency: [AtomicU64; 10],
+    queue_secs_total: Mutex<f64>,
+    solve_secs_total: Mutex<f64>,
+    per_engine: Mutex<Vec<(&'static str, u64)>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, jobs: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_jobs.fetch_add(jobs as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_done(&self, engine: &'static str, ok: bool, queued: f64, solve: f64) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        let total = queued + solve;
+        let idx = LATENCY_BUCKETS.iter().position(|&ub| total <= ub).unwrap_or(9);
+        self.latency[idx].fetch_add(1, Ordering::Relaxed);
+        *self.queue_secs_total.lock().unwrap() += queued;
+        *self.solve_secs_total.lock().unwrap() += solve;
+        let mut per = self.per_engine.lock().unwrap();
+        if let Some(e) = per.iter_mut().find(|(n, _)| *n == engine) {
+            e.1 += 1;
+        } else {
+            per.push((engine, 1));
+        }
+    }
+
+    pub fn snapshot(&self) -> String {
+        let sub = self.submitted.load(Ordering::Relaxed);
+        let done = self.completed.load(Ordering::Relaxed);
+        let failed = self.failed.load(Ordering::Relaxed);
+        let rejected = self.rejected.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_jobs.load(Ordering::Relaxed);
+        let mut out = format!(
+            "jobs: submitted={sub} completed={done} failed={failed} rejected={rejected}\n"
+        );
+        if batches > 0 {
+            out.push_str(&format!(
+                "batches: {batches} (avg {:.2} jobs/batch)\n",
+                batched as f64 / batches as f64
+            ));
+        }
+        out.push_str(&format!(
+            "time: queued={:.3}s solve={:.3}s\n",
+            *self.queue_secs_total.lock().unwrap(),
+            *self.solve_secs_total.lock().unwrap()
+        ));
+        out.push_str("latency histogram (s):");
+        for (i, ub) in LATENCY_BUCKETS.iter().enumerate() {
+            let c = self.latency[i].load(Ordering::Relaxed);
+            if c > 0 {
+                if ub.is_infinite() {
+                    out.push_str(&format!(" inf:{c}"));
+                } else {
+                    out.push_str(&format!(" {ub}:{c}"));
+                }
+            }
+        }
+        out.push('\n');
+        for (name, count) in self.per_engine.lock().unwrap().iter() {
+            out.push_str(&format!("engine {name}: {count}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_submit();
+        m.record_batch(2);
+        m.record_done("native-seq", true, 0.001, 0.02);
+        m.record_done("xla", false, 0.0, 0.5);
+        let snap = m.snapshot();
+        assert!(snap.contains("submitted=2"));
+        assert!(snap.contains("completed=1"));
+        assert!(snap.contains("failed=1"));
+        assert!(snap.contains("engine native-seq: 1"));
+        assert!(snap.contains("avg 2.00 jobs/batch"));
+    }
+
+    #[test]
+    fn histogram_bucketing() {
+        let m = Metrics::new();
+        m.record_done("e", true, 0.0, 0.0005); // ≤ 0.001
+        m.record_done("e", true, 0.0, 100.0); // inf bucket
+        let snap = m.snapshot();
+        assert!(snap.contains("0.001:1"), "{snap}");
+        assert!(snap.contains("inf:1"), "{snap}");
+    }
+}

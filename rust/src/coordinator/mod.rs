@@ -1,0 +1,13 @@
+//! The coordinator service layer: job types, engine routing, micro-
+//! batching, the worker-pool server, and metrics. This is the L3
+//! "coordination contribution" host — OT solves consumable as a service
+//! with backpressure and observability.
+
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use job::{Engine, JobKind, JobOutcome, JobRequest, JobResult};
+pub use server::{Coordinator, CoordinatorConfig, JobHandle};

@@ -1,0 +1,170 @@
+//! Routing: resolve `Engine::Auto`, validate a job against the available
+//! backends, and execute it on the chosen one.
+//!
+//! Policy (mirrors how the paper splits CPU vs GPU work): small instances
+//! go to the native sequential solver (per-phase scan is cache-friendly
+//! and has no dispatch overhead); larger ones go to the XLA path when an
+//! artifact bucket exists, else to the multi-threaded native solver.
+
+use crate::coordinator::job::{Engine, JobKind, JobRequest, JobResult};
+use crate::core::{OtInstance, OtprError, Result};
+use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
+use crate::solvers::ot_push_relabel::OtPushRelabel;
+use crate::solvers::parallel_pr::ParallelPushRelabel;
+use crate::solvers::push_relabel::PushRelabel;
+use crate::solvers::sinkhorn::Sinkhorn;
+use crate::solvers::{AssignmentSolver, OtSolver};
+use std::sync::Arc;
+
+/// Instances below this size always run natively under `Auto`.
+pub const AUTO_NATIVE_CUTOFF: usize = 512;
+
+pub struct Router {
+    pub runtime: Option<Arc<XlaRuntime>>,
+    pub threads: usize,
+}
+
+impl Router {
+    pub fn new(runtime: Option<Arc<XlaRuntime>>, threads: usize) -> Self {
+        Self { runtime, threads }
+    }
+
+    /// Resolve Auto to a concrete engine for this job.
+    pub fn resolve(&self, req: &JobRequest) -> Engine {
+        match req.engine {
+            Engine::Auto => {
+                let n = req.kind.n();
+                let xla_ok = self
+                    .runtime
+                    .as_ref()
+                    .map(|r| r.registry.bucket_for(n).is_ok())
+                    .unwrap_or(false);
+                match req.kind {
+                    JobKind::Assignment(_) if n >= AUTO_NATIVE_CUTOFF && xla_ok => Engine::Xla,
+                    JobKind::Assignment(_) if n >= AUTO_NATIVE_CUTOFF => Engine::NativeParallel,
+                    JobKind::Assignment(_) => Engine::NativeSeq,
+                    // OT has no XLA phase-loop (assignment only); route native
+                    JobKind::Ot(_) => Engine::NativeSeq,
+                }
+            }
+            e => e,
+        }
+    }
+
+    /// The artifact size bucket a job lands in (batching key); None for
+    /// native engines.
+    pub fn bucket(&self, req: &JobRequest, engine: Engine) -> Option<usize> {
+        match engine {
+            Engine::Xla | Engine::SinkhornXla => {
+                self.runtime.as_ref().and_then(|r| r.registry.bucket_for(req.kind.n()).ok())
+            }
+            _ => None,
+        }
+    }
+
+    /// Execute the job on `engine` (must be concrete, not Auto).
+    pub fn execute(&self, req: &JobRequest, engine: Engine) -> Result<JobResult> {
+        match (&req.kind, engine) {
+            (JobKind::Assignment(inst), Engine::NativeSeq) => Ok(JobResult::Assignment(
+                PushRelabel::new().solve_assignment(inst, req.eps)?,
+            )),
+            (JobKind::Assignment(inst), Engine::NativeParallel) => Ok(JobResult::Assignment(
+                ParallelPushRelabel::with_threads(self.threads).solve_assignment(inst, req.eps)?,
+            )),
+            (JobKind::Assignment(inst), Engine::Xla) => {
+                let reg = self.require_runtime()?;
+                Ok(JobResult::Assignment(
+                    XlaAssignment::new(reg).solve_assignment(inst, req.eps)?,
+                ))
+            }
+            (JobKind::Assignment(inst), Engine::SinkhornNative) => {
+                // assignment via uniform-mass OT (how the paper benchmarks
+                // Sinkhorn on assignment inputs)
+                let ot = OtInstance::uniform(inst.costs.clone())?;
+                Ok(JobResult::Ot(Sinkhorn::log_domain().solve_ot(&ot, req.eps)?))
+            }
+            (JobKind::Assignment(inst), Engine::SinkhornXla) => {
+                let reg = self.require_runtime()?;
+                let ot = OtInstance::uniform(inst.costs.clone())?;
+                Ok(JobResult::Ot(XlaSinkhorn::new(reg).solve_ot(&ot, req.eps)?))
+            }
+            (JobKind::Ot(inst), Engine::NativeSeq | Engine::NativeParallel) => {
+                Ok(JobResult::Ot(OtPushRelabel::new().solve_ot(inst, req.eps)?))
+            }
+            (JobKind::Ot(inst), Engine::SinkhornNative) => {
+                Ok(JobResult::Ot(Sinkhorn::log_domain().solve_ot(inst, req.eps)?))
+            }
+            (JobKind::Ot(inst), Engine::SinkhornXla) => {
+                let reg = self.require_runtime()?;
+                Ok(JobResult::Ot(XlaSinkhorn::new(reg).solve_ot(inst, req.eps)?))
+            }
+            (JobKind::Ot(_), Engine::Xla) => Err(OtprError::Coordinator(
+                "XLA engine supports assignment jobs only (OT runs native)".into(),
+            )),
+            (_, Engine::Auto) => unreachable!("resolve() before execute()"),
+        }
+    }
+
+    fn require_runtime(&self) -> Result<Arc<XlaRuntime>> {
+        self.runtime
+            .clone()
+            .ok_or_else(|| OtprError::Coordinator("no XLA runtime loaded".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::workloads::Workload;
+
+    fn req(n: usize, engine: Engine) -> JobRequest {
+        JobRequest {
+            id: 1,
+            kind: JobKind::Assignment(Workload::RandomCosts { n }.assignment(1)),
+            eps: 0.3,
+            engine,
+        }
+    }
+
+    #[test]
+    fn auto_routes_small_to_native() {
+        let r = Router::new(None, 2);
+        assert_eq!(r.resolve(&req(16, Engine::Auto)), Engine::NativeSeq);
+        assert_eq!(r.resolve(&req(1000, Engine::Auto)), Engine::NativeParallel);
+    }
+
+    #[test]
+    fn explicit_engine_respected() {
+        let r = Router::new(None, 2);
+        assert_eq!(r.resolve(&req(16, Engine::NativeParallel)), Engine::NativeParallel);
+    }
+
+    #[test]
+    fn executes_native_assignment() {
+        let r = Router::new(None, 2);
+        let rq = req(12, Engine::NativeSeq);
+        let out = r.execute(&rq, Engine::NativeSeq).unwrap();
+        assert!(out.cost() > 0.0);
+    }
+
+    #[test]
+    fn xla_without_registry_fails_cleanly() {
+        let r = Router::new(None, 2);
+        let rq = req(12, Engine::Xla);
+        assert!(r.execute(&rq, Engine::Xla).is_err());
+    }
+
+    #[test]
+    fn ot_jobs_route_native() {
+        let r = Router::new(None, 2);
+        let rq = JobRequest {
+            id: 2,
+            kind: JobKind::Ot(Workload::Fig1 { n: 10 }.ot_with_random_masses(3)),
+            eps: 0.3,
+            engine: Engine::Auto,
+        };
+        assert_eq!(r.resolve(&rq), Engine::NativeSeq);
+        let out = r.execute(&rq, Engine::NativeSeq).unwrap();
+        assert!(matches!(out, JobResult::Ot(_)));
+    }
+}

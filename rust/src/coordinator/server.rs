@@ -1,0 +1,311 @@
+//! The coordinator service: submit jobs, get handles, await results.
+//!
+//! Topology (std::thread + mpsc; tokio is unavailable offline):
+//!
+//! ```text
+//! submit() ──sync_channel(backpressure)──► dispatcher ──batcher──► job queue
+//!                                                                 ▲   │
+//!                                               workers (N) ──────┘   ▼
+//!                                   JobHandle ◄──per-job channel── execute
+//! ```
+//!
+//! The dispatcher groups jobs by (engine, bucket) via [`Batcher`]; workers
+//! drain whole batches so XLA executions with the same bucket reuse the
+//! compiled executable back-to-back.
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::job::{Engine, JobKind, JobOutcome, JobRequest};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::Router;
+use crate::core::{OtprError, Result};
+use crate::runtime::XlaRuntime;
+use crate::util::pool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Queue capacity before submit() blocks (backpressure).
+    pub queue_capacity: usize,
+    pub batcher: BatcherConfig,
+    /// Threads each native-parallel solve may use.
+    pub solver_threads: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            queue_capacity: 64,
+            batcher: BatcherConfig::default(),
+            solver_threads: pool::default_threads(),
+        }
+    }
+}
+
+struct Envelope {
+    req: JobRequest,
+    engine: Engine,
+    submitted: Instant,
+    reply: Sender<JobOutcome>,
+}
+
+/// Awaitable handle for one submitted job.
+pub struct JobHandle {
+    pub id: u64,
+    rx: Receiver<JobOutcome>,
+}
+
+impl JobHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobOutcome> {
+        self.rx
+            .recv()
+            .map_err(|_| OtprError::Coordinator("worker dropped the job".into()))
+    }
+
+    pub fn wait_timeout(&self, d: Duration) -> Option<JobOutcome> {
+        self.rx.recv_timeout(d).ok()
+    }
+}
+
+enum DispatchMsg {
+    Job(Envelope),
+    Shutdown,
+}
+
+pub struct Coordinator {
+    tx: SyncSender<DispatchMsg>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(config: CoordinatorConfig, runtime: Option<Arc<XlaRuntime>>) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let router = Arc::new(Router::new(runtime, config.solver_threads));
+        let (tx, dispatch_rx) = sync_channel::<DispatchMsg>(config.queue_capacity);
+        // batch queue: dispatcher -> workers
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Envelope>>(config.queue_capacity);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let dispatcher = {
+            let metrics = metrics.clone();
+            let batcher_cfg = config.batcher.clone();
+            std::thread::spawn(move || {
+                dispatcher_loop(dispatch_rx, batch_tx, batcher_cfg, metrics)
+            })
+        };
+
+        let mut workers = Vec::new();
+        for _ in 0..config.workers.max(1) {
+            let rx = batch_rx.clone();
+            let router = router.clone();
+            let metrics = metrics.clone();
+            workers.push(std::thread::spawn(move || worker_loop(rx, router, metrics)));
+        }
+
+        Self { tx, metrics, next_id: AtomicU64::new(1), dispatcher: Some(dispatcher), workers }
+    }
+
+    /// Submit a job; blocks when the queue is at capacity (backpressure).
+    pub fn submit(&self, kind: JobKind, eps: f64, engine: Engine) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let req = JobRequest { id, kind, eps, engine };
+        self.metrics.record_submit();
+        self.tx
+            .send(DispatchMsg::Job(Envelope {
+                req,
+                engine,
+                submitted: Instant::now(),
+                reply: reply_tx,
+            }))
+            .map_err(|_| {
+                self.metrics.record_reject();
+                OtprError::Coordinator("coordinator is shut down".into())
+            })?;
+        Ok(JobHandle { id, rx: reply_rx })
+    }
+
+    /// Graceful shutdown: flush batches, join threads.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(DispatchMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(DispatchMsg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: Receiver<DispatchMsg>,
+    batch_tx: SyncSender<Vec<Envelope>>,
+    cfg: BatcherConfig,
+    metrics: Arc<Metrics>,
+) {
+    // Resolve engine names once per job so the batch key is 'static.
+    let mut batcher: Batcher<Envelope> = Batcher::new(cfg);
+    loop {
+        // poll with a deadline so expiring batches flush promptly
+        let timeout = batcher
+            .next_deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(DispatchMsg::Job(env)) => {
+                let key = (env.engine.name(), None::<usize>);
+                // bucket refinement happens in the worker (needs registry);
+                // the engine name alone already separates XLA from native.
+                if let Some(batch) = batcher.push(key, env) {
+                    metrics.record_batch(batch.jobs.len());
+                    if batch_tx.send(batch.jobs).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(DispatchMsg::Shutdown) => {
+                for batch in batcher.drain_all() {
+                    metrics.record_batch(batch.jobs.len());
+                    let _ = batch_tx.send(batch.jobs);
+                }
+                return; // dropping batch_tx stops workers
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                for batch in batcher.drain_expired() {
+                    metrics.record_batch(batch.jobs.len());
+                    if batch_tx.send(batch.jobs).is_err() {
+                        return;
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                for batch in batcher.drain_all() {
+                    metrics.record_batch(batch.jobs.len());
+                    let _ = batch_tx.send(batch.jobs);
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Vec<Envelope>>>>,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(batch) = batch else { return };
+        for env in batch {
+            let queued = env.submitted.elapsed().as_secs_f64();
+            let engine = router.resolve(&env.req);
+            let t = Instant::now();
+            let result = router
+                .execute(&env.req, engine)
+                .map_err(|e| e.to_string());
+            let solve = t.elapsed().as_secs_f64();
+            metrics.record_done(engine.name(), result.is_ok(), queued, solve);
+            let _ = env.reply.send(JobOutcome {
+                id: env.req.id,
+                engine_used: engine.name(),
+                result,
+                queued_secs: queued,
+                solve_secs: solve,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobResult;
+    use crate::data::workloads::Workload;
+
+    fn assignment_job(n: usize, seed: u64) -> JobKind {
+        JobKind::Assignment(Workload::RandomCosts { n }.assignment(seed))
+    }
+
+    #[test]
+    fn solves_jobs_end_to_end() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), None);
+        let h1 = coord.submit(assignment_job(16, 1), 0.3, Engine::NativeSeq).unwrap();
+        let h2 = coord.submit(assignment_job(12, 2), 0.3, Engine::Auto).unwrap();
+        let o1 = h1.wait().unwrap();
+        let o2 = h2.wait().unwrap();
+        assert!(o1.result.is_ok());
+        assert!(o2.result.is_ok());
+        assert_eq!(o2.engine_used, "native-seq");
+        let snap = coord.metrics.snapshot();
+        assert!(snap.contains("completed=2"), "{snap}");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_jobs() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 4, ..Default::default() },
+            None,
+        );
+        let handles: Vec<_> = (0..20)
+            .map(|i| coord.submit(assignment_job(10, i), 0.4, Engine::NativeSeq).unwrap())
+            .collect();
+        let mut costs = Vec::new();
+        for h in handles {
+            let out = h.wait().unwrap();
+            costs.push(out.result.unwrap().cost());
+        }
+        assert_eq!(costs.len(), 20);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_report_errors() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), None);
+        // XLA without a registry must fail but not crash the worker
+        let h = coord.submit(assignment_job(8, 1), 0.3, Engine::Xla).unwrap();
+        let out = h.wait().unwrap();
+        assert!(out.result.is_err());
+        // coordinator still serves afterwards
+        let h2 = coord.submit(assignment_job(8, 2), 0.3, Engine::NativeSeq).unwrap();
+        assert!(h2.wait().unwrap().result.is_ok());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn ot_jobs_flow_through() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), None);
+        let inst = Workload::Fig1 { n: 10 }.ot_with_random_masses(5);
+        let h = coord.submit(JobKind::Ot(inst), 0.3, Engine::Auto).unwrap();
+        let out = h.wait().unwrap();
+        match out.result.unwrap() {
+            JobResult::Ot(sol) => assert!(sol.cost.is_finite()),
+            _ => panic!("expected OT result"),
+        }
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,140 @@
+//! Dense cost matrices.
+//!
+//! Layout convention throughout the crate: **rows are supply vertices b ∈ B,
+//! columns are demand vertices a ∈ A**, row-major. The inner loop of every
+//! solver scans "all a for a fixed b", so this keeps the hot scan contiguous.
+//! The paper's costs satisfy c(a,b) ∈ [0, 1] after scaling; [`CostMatrix`]
+//! stores raw costs and exposes [`CostMatrix::max`] so solvers can normalize.
+
+use crate::core::error::{OtprError, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostMatrix {
+    /// |B| — number of supply vertices (rows).
+    pub nb: usize,
+    /// |A| — number of demand vertices (columns).
+    pub na: usize,
+    data: Vec<f32>,
+}
+
+impl CostMatrix {
+    pub fn zeros(nb: usize, na: usize) -> Self {
+        Self { nb, na, data: vec![0.0; nb * na] }
+    }
+
+    pub fn from_vec(nb: usize, na: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != nb * na {
+            return Err(OtprError::InvalidInstance(format!(
+                "cost data length {} != {}x{}",
+                data.len(),
+                nb,
+                na
+            )));
+        }
+        if data.iter().any(|c| !c.is_finite() || *c < 0.0) {
+            return Err(OtprError::InvalidInstance(
+                "costs must be finite and non-negative".into(),
+            ));
+        }
+        Ok(Self { nb, na, data })
+    }
+
+    /// Build from a function of (b, a).
+    pub fn from_fn(nb: usize, na: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(nb * na);
+        for b in 0..nb {
+            for a in 0..na {
+                data.push(f(b, a));
+            }
+        }
+        Self { nb, na, data }
+    }
+
+    #[inline]
+    pub fn at(&self, b: usize, a: usize) -> f32 {
+        debug_assert!(b < self.nb && a < self.na);
+        self.data[b * self.na + a]
+    }
+
+    #[inline]
+    pub fn row(&self, b: usize) -> &[f32] {
+        &self.data[b * self.na..(b + 1) * self.na]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Largest entry (0 for an empty matrix).
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(0.0, f32::max)
+    }
+
+    /// Transposed copy (rows become A). Only used by baselines that want the
+    /// opposite orientation.
+    pub fn transposed(&self) -> CostMatrix {
+        let mut data = vec![0.0; self.data.len()];
+        for b in 0..self.nb {
+            for a in 0..self.na {
+                data[a * self.nb + b] = self.at(b, a);
+            }
+        }
+        CostMatrix { nb: self.na, na: self.nb, data }
+    }
+
+    /// Pad to (nb2, na2) with `fill` (used by the runtime router to fit
+    /// fixed-shape artifacts).
+    pub fn padded(&self, nb2: usize, na2: usize, fill: f32) -> CostMatrix {
+        assert!(nb2 >= self.nb && na2 >= self.na);
+        let mut out = CostMatrix { nb: nb2, na: na2, data: vec![fill; nb2 * na2] };
+        for b in 0..self.nb {
+            out.data[b * na2..b * na2 + self.na].copy_from_slice(self.row(b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_and_at() {
+        let c = CostMatrix::from_fn(2, 3, |b, a| (10 * b + a) as f32);
+        assert_eq!(c.at(0, 0), 0.0);
+        assert_eq!(c.at(1, 2), 12.0);
+        assert_eq!(c.row(1), &[10.0, 11.0, 12.0]);
+        assert_eq!(c.max(), 12.0);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(CostMatrix::from_vec(2, 2, vec![0.0; 3]).is_err());
+        assert!(CostMatrix::from_vec(1, 2, vec![0.0, -1.0]).is_err());
+        assert!(CostMatrix::from_vec(1, 2, vec![0.0, f32::NAN]).is_err());
+        assert!(CostMatrix::from_vec(1, 2, vec![0.5, 1.0]).is_ok());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let c = CostMatrix::from_fn(3, 4, |b, a| (b * 4 + a) as f32);
+        let t = c.transposed();
+        assert_eq!(t.nb, 4);
+        assert_eq!(t.at(2, 1), c.at(1, 2));
+        assert_eq!(t.transposed(), c);
+    }
+
+    #[test]
+    fn padding_keeps_block_and_fills() {
+        let c = CostMatrix::from_fn(2, 2, |b, a| (b + a) as f32);
+        let p = c.padded(3, 4, 9.0);
+        assert_eq!(p.at(1, 1), 2.0);
+        assert_eq!(p.at(2, 3), 9.0);
+        assert_eq!(p.at(0, 2), 9.0);
+    }
+
+    #[test]
+    fn empty_max_is_zero() {
+        assert_eq!(CostMatrix::zeros(0, 0).max(), 0.0);
+    }
+}

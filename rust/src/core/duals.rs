@@ -1,0 +1,173 @@
+//! Integer dual weights and the ε-feasibility / invariant checker.
+//!
+//! Duals live in ε-units (see [`crate::core::quantize`]). The checker
+//! verifies exactly the conditions the paper's analysis relies on:
+//!
+//! * (2): `y(a)+y(b) ≤ cq(a,b)+1` for every non-matching edge,
+//! * (3): `y(a)+y(b) = cq(a,b)` for every matching edge,
+//! * (I1): `y(b) ≥ 0` ∀b, `y(a) ≤ 0` ∀a, and `y(a)=0` for free a,
+//! * Lemma 3.2: `|y(v)| ≤ ⌈1/ε⌉+2` (units form of `1+2ε`).
+//!
+//! Tests and the `otpr validate` command run this after every solve (and the
+//! property suite after *every phase*), so invariant regressions are caught
+//! structurally rather than through cost regressions.
+
+use crate::core::matching::Matching;
+use crate::core::quantize::QuantizedCosts;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DualWeights {
+    /// Duals for A (demand) vertices; non-positive in units.
+    pub ya: Vec<i32>,
+    /// Duals for B (supply) vertices; non-negative in units.
+    pub yb: Vec<i32>,
+}
+
+impl DualWeights {
+    /// Paper §2.2 initialization: y(b) = ε (1 unit), y(a) = 0.
+    pub fn init(nb: usize, na: usize) -> Self {
+        Self { ya: vec![0; na], yb: vec![1; nb] }
+    }
+
+    /// Sum of magnitudes (the potential used by Lemma 3.3).
+    pub fn magnitude(&self) -> i64 {
+        self.ya.iter().map(|&y| (y as i64).abs()).sum::<i64>()
+            + self.yb.iter().map(|&y| (y as i64).abs()).sum::<i64>()
+    }
+}
+
+/// Full ε-feasibility + invariant check. `O(na·nb)` — test/validation only.
+pub fn check_feasible(
+    q: &QuantizedCosts,
+    m: &Matching,
+    y: &DualWeights,
+) -> Result<(), String> {
+    if y.yb.len() != q.nb || y.ya.len() != q.na {
+        return Err("dual dimensions mismatch".into());
+    }
+    m.check_consistent()?;
+    // (I1) signs
+    for (b, &yb) in y.yb.iter().enumerate() {
+        if yb < 0 {
+            return Err(format!("I1 violated: y(b={b}) = {yb} < 0"));
+        }
+    }
+    for (a, &ya) in y.ya.iter().enumerate() {
+        if ya > 0 {
+            return Err(format!("I1 violated: y(a={a}) = {ya} > 0"));
+        }
+        if m.is_a_free(a) && ya != 0 {
+            return Err(format!("I1 violated: free a={a} has y={ya} != 0"));
+        }
+    }
+    // (2) and (3)
+    for b in 0..q.nb {
+        let row = q.row(b);
+        let yb = y.yb[b];
+        let matched_a = m.match_b[b];
+        for (a, &cq) in row.iter().enumerate() {
+            let s = cq as i64 + 1 - (y.ya[a] + yb) as i64; // slack against (2)
+            if matched_a == a as i32 {
+                if (y.ya[a] + yb) != cq {
+                    return Err(format!(
+                        "(3) violated on matching edge (b={b},a={a}): y(a)+y(b)={} cq={cq}",
+                        y.ya[a] + yb
+                    ));
+                }
+            } else if s < 0 {
+                return Err(format!(
+                    "(2) violated on edge (b={b},a={a}): y(a)+y(b)={} > cq+1={}",
+                    y.ya[a] + yb,
+                    cq + 1
+                ));
+            }
+        }
+    }
+    // Lemma 3.2 bound, in units: |y| ≤ 1/ε + 2 units (= (1+2ε)/ε · ε).
+    let bound = (1.0 / q.eps).ceil() as i32 + 2;
+    for &v in y.ya.iter().chain(y.yb.iter()) {
+        if v.abs() > bound {
+            return Err(format!("Lemma 3.2 violated: |y|={} > {bound}", v.abs()));
+        }
+    }
+    Ok(())
+}
+
+/// Lemma 3.1 certificate: for a feasible (M, y) with all free-B duals
+/// ≥ 0 and free-A duals = 0, the rounded cost of M is within εn of the
+/// rounded-optimal. Returns the dual lower bound Σy − n (in units) that the
+/// optimal rounded cost cannot beat; used by tests to bound OPT from below
+/// without running an exact solver.
+pub fn dual_lower_bound_units(y: &DualWeights) -> i64 {
+    let total: i64 =
+        y.ya.iter().map(|&v| v as i64).sum::<i64>() + y.yb.iter().map(|&v| v as i64).sum::<i64>();
+    let n = y.yb.len().min(y.ya.len()) as i64;
+    total - n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::cost::CostMatrix;
+
+    fn small() -> (QuantizedCosts, Matching, DualWeights) {
+        let c = CostMatrix::from_vec(2, 2, vec![0.0, 0.5, 0.5, 1.0]).unwrap();
+        let q = QuantizedCosts::new(&c, 0.5); // cq = [[0,1],[1,2]]
+        let m = Matching::empty(2, 2);
+        let y = DualWeights::init(2, 2);
+        (q, m, y)
+    }
+
+    #[test]
+    fn initial_state_feasible() {
+        let (q, m, y) = small();
+        check_feasible(&q, &m, &y).unwrap();
+    }
+
+    #[test]
+    fn catches_condition2_violation() {
+        let (q, m, mut y) = small();
+        y.yb[0] = 5; // edge (0,0): 0+5 > cq+1 = 1
+        assert!(check_feasible(&q, &m, &y).unwrap_err().contains("(2)"));
+    }
+
+    #[test]
+    fn catches_condition3_violation() {
+        let (q, mut m, y) = small();
+        m.link(0, 0); // y(a)+y(b) = 1 but cq = 0
+        assert!(check_feasible(&q, &m, &y).unwrap_err().contains("(3)"));
+    }
+
+    #[test]
+    fn matching_edge_exact_ok() {
+        let (q, mut m, mut y) = small();
+        // admissible edge (b=0, a=0): ya+yb = 1 = cq+1; after push ya -= 1
+        m.link(0, 0);
+        y.ya[0] = -1;
+        check_feasible(&q, &m, &y).unwrap();
+    }
+
+    #[test]
+    fn catches_sign_violations() {
+        let (q, m, mut y) = small();
+        y.ya[1] = 1;
+        assert!(check_feasible(&q, &m, &y).unwrap_err().contains("I1"));
+        let (q, m, mut y) = small();
+        y.yb[1] = -1;
+        assert!(check_feasible(&q, &m, &y).unwrap_err().contains("I1"));
+    }
+
+    #[test]
+    fn catches_free_a_nonzero() {
+        let (q, m, mut y) = small();
+        y.ya[0] = -1; // a=0 free but y != 0
+        assert!(check_feasible(&q, &m, &y).unwrap_err().contains("free a"));
+    }
+
+    #[test]
+    fn magnitude_and_bound() {
+        let y = DualWeights { ya: vec![-2, 0], yb: vec![3, 1] };
+        assert_eq!(y.magnitude(), 6);
+        assert_eq!(dual_lower_bound_units(&y), 2 - 2);
+    }
+}

@@ -1,0 +1,48 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum OtprError {
+    #[error("invalid instance: {0}")]
+    InvalidInstance(String),
+
+    #[error("infeasible: {0}")]
+    Infeasible(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for OtprError {
+    fn from(e: xla::Error) -> Self {
+        OtprError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, OtprError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = OtprError::InvalidInstance("bad mass".into());
+        assert_eq!(e.to_string(), "invalid instance: bad mass");
+        let e: OtprError = std::io::Error::new(std::io::ErrorKind::NotFound, "x").into();
+        assert!(e.to_string().contains("io error"));
+    }
+}

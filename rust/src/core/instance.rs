@@ -1,0 +1,170 @@
+//! Problem instances: assignment and (discrete) optimal transport, plus the
+//! §4 θ-scaling that turns an OT instance into an integer-mass transport
+//! instance solvable by the unbalanced matching algorithm.
+
+use crate::core::cost::CostMatrix;
+use crate::core::error::{OtprError, Result};
+
+/// Assignment instance: n×n costs, every vertex has weight 1/n.
+#[derive(Debug, Clone)]
+pub struct AssignmentInstance {
+    pub costs: CostMatrix,
+}
+
+impl AssignmentInstance {
+    pub fn new(costs: CostMatrix) -> Result<Self> {
+        if costs.na != costs.nb {
+            return Err(OtprError::InvalidInstance(format!(
+                "assignment requires square costs, got {}x{}",
+                costs.nb, costs.na
+            )));
+        }
+        Ok(Self { costs })
+    }
+
+    pub fn n(&self) -> usize {
+        self.costs.na
+    }
+}
+
+/// Discrete OT instance: supports A (demand, μ) and B (supply, ν) with
+/// probability masses summing to 1 on each side.
+#[derive(Debug, Clone)]
+pub struct OtInstance {
+    pub costs: CostMatrix,
+    /// μ_a for each demand point (columns).
+    pub demand: Vec<f64>,
+    /// ν_b for each supply point (rows).
+    pub supply: Vec<f64>,
+}
+
+impl OtInstance {
+    pub fn new(costs: CostMatrix, demand: Vec<f64>, supply: Vec<f64>) -> Result<Self> {
+        if demand.len() != costs.na || supply.len() != costs.nb {
+            return Err(OtprError::InvalidInstance("mass dimension mismatch".into()));
+        }
+        for (name, v) in [("demand", &demand), ("supply", &supply)] {
+            let sum: f64 = v.iter().sum();
+            if (sum - 1.0).abs() > 1e-6 {
+                return Err(OtprError::InvalidInstance(format!(
+                    "{name} masses sum to {sum}, expected 1"
+                )));
+            }
+            if v.iter().any(|&x| x < 0.0 || !x.is_finite()) {
+                return Err(OtprError::InvalidInstance(format!("negative/NaN {name} mass")));
+            }
+        }
+        Ok(Self { costs, demand, supply })
+    }
+
+    /// Uniform-mass OT instance from an assignment instance.
+    pub fn uniform(costs: CostMatrix) -> Result<Self> {
+        let na = costs.na;
+        let nb = costs.nb;
+        Self::new(costs, vec![1.0 / na as f64; na], vec![1.0 / nb as f64; nb])
+    }
+
+    pub fn n(&self) -> usize {
+        self.costs.na.max(self.costs.nb)
+    }
+}
+
+/// §4 scaling: multiply masses by θ = 4n/ε, round **demands up** and
+/// **supplies down** to integers. Total supply units ≤ θ ≤ total demand
+/// units, so the instance is an unbalanced transport problem where all
+/// (rounded) supply can be shipped.
+#[derive(Debug, Clone)]
+pub struct ScaledOtInstance {
+    pub theta: f64,
+    /// ⌈μ_a·θ⌉ per demand point.
+    pub demand_units: Vec<u64>,
+    /// ⌊ν_b·θ⌋ per supply point.
+    pub supply_units: Vec<u64>,
+    /// Supply mass lost to rounding, per b (νb·θ − ⌊νb·θ⌋)/θ; shipped
+    /// arbitrarily after the solve so the final plan moves *all* supply.
+    pub supply_residual: Vec<f64>,
+}
+
+impl ScaledOtInstance {
+    pub fn build(inst: &OtInstance, eps: f64) -> Self {
+        assert!(eps > 0.0 && eps < 1.0);
+        let n = inst.n() as f64;
+        let theta = 4.0 * n / eps;
+        let demand_units: Vec<u64> =
+            inst.demand.iter().map(|&d| (d * theta).ceil() as u64).collect();
+        let supply_units: Vec<u64> =
+            inst.supply.iter().map(|&s| (s * theta).floor() as u64).collect();
+        let supply_residual: Vec<f64> = inst
+            .supply
+            .iter()
+            .zip(&supply_units)
+            .map(|(&s, &u)| (s * theta - u as f64) / theta)
+            .collect();
+        Self { theta, demand_units, supply_units, supply_residual }
+    }
+
+    pub fn total_supply_units(&self) -> u64 {
+        self.supply_units.iter().sum()
+    }
+
+    pub fn total_demand_units(&self) -> u64 {
+        self.demand_units.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(nb: usize, na: usize) -> CostMatrix {
+        CostMatrix::from_fn(nb, na, |b, a| ((b + a) % 3) as f32 / 2.0)
+    }
+
+    #[test]
+    fn assignment_requires_square() {
+        assert!(AssignmentInstance::new(costs(2, 3)).is_err());
+        assert_eq!(AssignmentInstance::new(costs(3, 3)).unwrap().n(), 3);
+    }
+
+    #[test]
+    fn ot_instance_validates_masses() {
+        let c = costs(2, 2);
+        assert!(OtInstance::new(c.clone(), vec![0.5, 0.5], vec![0.7, 0.3]).is_ok());
+        assert!(OtInstance::new(c.clone(), vec![0.5, 0.4], vec![0.7, 0.3]).is_err());
+        assert!(OtInstance::new(c.clone(), vec![1.5, -0.5], vec![0.7, 0.3]).is_err());
+        assert!(OtInstance::new(c, vec![0.5, 0.5, 0.0], vec![0.7, 0.3]).is_err());
+    }
+
+    #[test]
+    fn uniform_masses() {
+        let i = OtInstance::uniform(costs(4, 4)).unwrap();
+        assert!(i.demand.iter().all(|&d| (d - 0.25).abs() < 1e-12));
+    }
+
+    #[test]
+    fn scaling_directions() {
+        let c = costs(2, 2);
+        let inst = OtInstance::new(c, vec![0.3, 0.7], vec![0.6, 0.4]).unwrap();
+        let s = ScaledOtInstance::build(&inst, 0.1);
+        assert!((s.theta - 4.0 * 2.0 / 0.1).abs() < 1e-9);
+        // demands up, supplies down
+        assert!(s.total_demand_units() as f64 >= s.theta - 1e-9);
+        assert!(s.total_supply_units() as f64 <= s.theta + 1e-9);
+        assert!(s.total_supply_units() <= s.total_demand_units());
+        // residuals small and non-negative
+        for &r in &s.supply_residual {
+            assert!(r >= -1e-15 && r < 1.0 / s.theta + 1e-15);
+        }
+    }
+
+    #[test]
+    fn residual_mass_bounded_by_eps_quarter() {
+        let n = 8;
+        let c = costs(n, n);
+        let inst = OtInstance::uniform(c).unwrap();
+        let eps = 0.2;
+        let s = ScaledOtInstance::build(&inst, eps);
+        let resid: f64 = s.supply_residual.iter().sum();
+        assert!(resid <= eps / 4.0 + 1e-12, "residual {resid} > eps/4");
+    }
+}

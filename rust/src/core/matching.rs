@@ -1,0 +1,203 @@
+//! Matchings between B (supply, rows) and A (demand, columns).
+//!
+//! `-1` encodes "free" on both sides so the representation is bit-identical
+//! to the int32 match arrays used by the XLA `phase_step` artifact.
+
+use crate::core::cost::CostMatrix;
+
+pub const FREE: i32 = -1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matching {
+    /// match_b[b] = a or FREE.
+    pub match_b: Vec<i32>,
+    /// match_a[a] = b or FREE.
+    pub match_a: Vec<i32>,
+}
+
+impl Matching {
+    pub fn empty(nb: usize, na: usize) -> Self {
+        Self { match_b: vec![FREE; nb], match_a: vec![FREE; na] }
+    }
+
+    pub fn nb(&self) -> usize {
+        self.match_b.len()
+    }
+
+    pub fn na(&self) -> usize {
+        self.match_a.len()
+    }
+
+    /// Number of matched edges.
+    pub fn size(&self) -> usize {
+        self.match_b.iter().filter(|&&a| a != FREE).count()
+    }
+
+    #[inline]
+    pub fn is_b_free(&self, b: usize) -> bool {
+        self.match_b[b] == FREE
+    }
+
+    #[inline]
+    pub fn is_a_free(&self, a: usize) -> bool {
+        self.match_a[a] == FREE
+    }
+
+    /// Match (b, a), detaching any previous partners of either endpoint.
+    pub fn link(&mut self, b: usize, a: usize) {
+        let old_a = self.match_b[b];
+        if old_a != FREE {
+            self.match_a[old_a as usize] = FREE;
+        }
+        let old_b = self.match_a[a];
+        if old_b != FREE {
+            self.match_b[old_b as usize] = FREE;
+        }
+        self.match_b[b] = a as i32;
+        self.match_a[a] = b as i32;
+    }
+
+    pub fn unlink_b(&mut self, b: usize) {
+        let a = self.match_b[b];
+        if a != FREE {
+            self.match_a[a as usize] = FREE;
+            self.match_b[b] = FREE;
+        }
+    }
+
+    /// Indices of free B vertices.
+    pub fn free_b(&self) -> Vec<usize> {
+        (0..self.nb()).filter(|&b| self.is_b_free(b)).collect()
+    }
+
+    pub fn free_a(&self) -> Vec<usize> {
+        (0..self.na()).filter(|&a| self.is_a_free(a)).collect()
+    }
+
+    /// A matching is perfect when every B vertex is matched (for balanced
+    /// instances this implies every A vertex too).
+    pub fn is_perfect(&self) -> bool {
+        self.match_b.iter().all(|&a| a != FREE)
+    }
+
+    /// Total cost under `costs` (costs indexed (b, a)).
+    pub fn cost(&self, costs: &CostMatrix) -> f64 {
+        self.match_b
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a != FREE)
+            .map(|(b, &a)| costs.at(b, a as usize) as f64)
+            .sum()
+    }
+
+    /// Paper §2.1: "convert into a perfect matching simply by arbitrarily
+    /// matching the remaining free vertices" — pair free b's with free a's
+    /// in index order. Each arbitrary edge costs ≤ c_max, bounding the added
+    /// error by ε·n·c_max when ≤ εn vertices are free.
+    pub fn complete_arbitrarily(&mut self) {
+        let free_a = self.free_a();
+        let mut it = free_a.into_iter();
+        for b in 0..self.nb() {
+            if self.is_b_free(b) {
+                match it.next() {
+                    Some(a) => self.link(b, a),
+                    None => break, // unbalanced: no demand capacity left
+                }
+            }
+        }
+    }
+
+    /// Internal consistency: match_a and match_b mirror each other and no
+    /// vertex appears twice.
+    pub fn check_consistent(&self) -> Result<(), String> {
+        for (b, &a) in self.match_b.iter().enumerate() {
+            if a != FREE {
+                let a = a as usize;
+                if a >= self.na() {
+                    return Err(format!("match_b[{b}]={a} out of range"));
+                }
+                if self.match_a[a] != b as i32 {
+                    return Err(format!(
+                        "mirror mismatch: match_b[{b}]={a} but match_a[{a}]={}",
+                        self.match_a[a]
+                    ));
+                }
+            }
+        }
+        for (a, &b) in self.match_a.iter().enumerate() {
+            if b != FREE {
+                let b = b as usize;
+                if b >= self.nb() || self.match_b[b] != a as i32 {
+                    return Err(format!("mirror mismatch at a={a}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_unlink_mirror() {
+        let mut m = Matching::empty(3, 3);
+        m.link(0, 2);
+        m.link(1, 1);
+        assert_eq!(m.size(), 2);
+        assert!(m.check_consistent().is_ok());
+        // stealing: b=2 takes a=2 away from b=0
+        m.link(2, 2);
+        assert!(m.is_b_free(0));
+        assert_eq!(m.match_a[2], 2);
+        assert!(m.check_consistent().is_ok());
+        m.unlink_b(2);
+        assert!(m.is_b_free(2) && m.is_a_free(2));
+        assert!(m.check_consistent().is_ok());
+    }
+
+    #[test]
+    fn free_lists() {
+        let mut m = Matching::empty(3, 4);
+        m.link(1, 3);
+        assert_eq!(m.free_b(), vec![0, 2]);
+        assert_eq!(m.free_a(), vec![0, 1, 2]);
+        assert!(!m.is_perfect());
+    }
+
+    #[test]
+    fn completion_is_perfect_balanced() {
+        let mut m = Matching::empty(4, 4);
+        m.link(0, 1);
+        m.link(2, 3);
+        m.complete_arbitrarily();
+        assert!(m.is_perfect());
+        assert!(m.check_consistent().is_ok());
+        assert_eq!(m.size(), 4);
+    }
+
+    #[test]
+    fn completion_unbalanced_fills_min_side() {
+        let mut m = Matching::empty(5, 3);
+        m.complete_arbitrarily();
+        assert_eq!(m.size(), 3);
+    }
+
+    #[test]
+    fn cost_sums_matched_edges() {
+        let c = CostMatrix::from_fn(2, 2, |b, a| (1 + b * 2 + a) as f32);
+        let mut m = Matching::empty(2, 2);
+        m.link(0, 0); // 1
+        m.link(1, 1); // 4
+        assert!((m.cost(&c) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut m = Matching::empty(2, 2);
+        m.link(0, 0);
+        m.match_a[0] = 1; // corrupt
+        assert!(m.check_consistent().is_err());
+    }
+}

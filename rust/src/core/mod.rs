@@ -1,0 +1,19 @@
+//! Core domain types: cost matrices, ε-quantization, matchings, duals,
+//! transport plans, problem instances, and the invariant checkers that the
+//! test-suite and `otpr validate` use to certify solver output.
+
+pub mod cost;
+pub mod duals;
+pub mod error;
+pub mod instance;
+pub mod matching;
+pub mod quantize;
+pub mod transport;
+
+pub use cost::CostMatrix;
+pub use duals::DualWeights;
+pub use error::{OtprError, Result};
+pub use instance::{AssignmentInstance, OtInstance, ScaledOtInstance};
+pub use matching::{Matching, FREE};
+pub use quantize::QuantizedCosts;
+pub use transport::TransportPlan;

@@ -1,0 +1,133 @@
+//! ε-unit integer quantization (paper eq. 1).
+//!
+//! The algorithm transforms every cost into an integer multiple of ε:
+//! `c̄(a,b) = ε·⌊c(a,b)/ε⌋`. We store the integer `cq = ⌊c/ε_abs⌋` directly
+//! and do *all* dual arithmetic in these integer units, which makes the
+//! ε-feasibility conditions (paper eq. 2–3) exact integer identities:
+//!
+//! ```text
+//! y(a)+y(b) ≤ cq(a,b)+1   (a,b) ∉ M
+//! y(a)+y(b) = cq(a,b)     (a,b) ∈ M
+//! ```
+//!
+//! `ε_abs = ε · c_max` because the paper assumes costs scaled so the largest
+//! equals 1; quantizing relative to the instance's own max reproduces that
+//! scaling without mutating the input.
+
+use crate::core::cost::CostMatrix;
+
+#[derive(Debug, Clone)]
+pub struct QuantizedCosts {
+    pub nb: usize,
+    pub na: usize,
+    /// `cq[b*na + a] = ⌊c(b,a)/eps_abs⌋`, row-major, rows = B.
+    pub cq: Vec<i32>,
+    /// The absolute ε used: `eps * c_max` (1.0 fallback when c_max == 0).
+    pub eps_abs: f64,
+    /// The relative ε requested.
+    pub eps: f64,
+    /// Max raw cost of the instance (the normalization constant).
+    pub c_max: f64,
+}
+
+impl QuantizedCosts {
+    /// Quantize `costs` at relative precision `eps` ∈ (0, 1).
+    pub fn new(costs: &CostMatrix, eps: f64) -> Self {
+        assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1), got {eps}");
+        let c_max = costs.max() as f64;
+        // All-zero costs: any plan is optimal; pick eps_abs=1 so cq is all 0.
+        let eps_abs = if c_max > 0.0 { eps * c_max } else { 1.0 };
+        let inv = 1.0 / eps_abs;
+        let cq = costs
+            .as_slice()
+            .iter()
+            .map(|&c| {
+                let q = (c as f64 * inv).floor();
+                debug_assert!(q >= 0.0 && q <= i32::MAX as f64);
+                q as i32
+            })
+            .collect();
+        Self { nb: costs.nb, na: costs.na, cq, eps_abs, eps, c_max }
+    }
+
+    #[inline]
+    pub fn at(&self, b: usize, a: usize) -> i32 {
+        debug_assert!(b < self.nb && a < self.na);
+        self.cq[b * self.na + a]
+    }
+
+    #[inline]
+    pub fn row(&self, b: usize) -> &[i32] {
+        &self.cq[b * self.na..(b + 1) * self.na]
+    }
+
+    /// Rounded-cost value c̄ in original units.
+    #[inline]
+    pub fn rounded(&self, b: usize, a: usize) -> f64 {
+        self.at(b, a) as f64 * self.eps_abs
+    }
+
+    /// Upper bound on any quantized entry: costs ≤ c_max ⇒ cq ≤ ⌊1/ε⌋.
+    pub fn max_units(&self) -> i32 {
+        (1.0 / self.eps).floor() as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantizes_to_floor() {
+        // c_max = 1.0 so eps_abs = eps
+        let c = CostMatrix::from_vec(1, 4, vec![0.0, 0.09, 0.11, 1.0]).unwrap();
+        let q = QuantizedCosts::new(&c, 0.1);
+        assert_eq!(q.row(0), &[0, 0, 1, 10]);
+        assert!((q.rounded(0, 2) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rounding_error_below_eps() {
+        let c = CostMatrix::from_fn(8, 8, |b, a| ((b * 13 + a * 7) % 11) as f32 / 11.0);
+        let q = QuantizedCosts::new(&c, 0.05);
+        for b in 0..8 {
+            for a in 0..8 {
+                let err = c.at(b, a) as f64 - q.rounded(b, a);
+                assert!(err >= -1e-9, "rounded above original at ({b},{a})");
+                assert!(err < q.eps_abs + 1e-9, "error {err} >= eps_abs {}", q.eps_abs);
+            }
+        }
+    }
+
+    #[test]
+    fn normalizes_by_max() {
+        // costs up to 20; eps=0.5 relative -> eps_abs = 10
+        let c = CostMatrix::from_vec(1, 3, vec![0.0, 9.0, 20.0]).unwrap();
+        let q = QuantizedCosts::new(&c, 0.5);
+        assert!((q.eps_abs - 10.0).abs() < 1e-9);
+        assert_eq!(q.row(0), &[0, 0, 2]);
+    }
+
+    #[test]
+    fn zero_costs_ok() {
+        let c = CostMatrix::zeros(3, 3);
+        let q = QuantizedCosts::new(&c, 0.1);
+        assert!(q.cq.iter().all(|&x| x == 0));
+        assert_eq!(q.eps_abs, 1.0);
+    }
+
+    #[test]
+    fn max_units_bound_holds() {
+        let c = CostMatrix::from_fn(5, 5, |b, a| ((b + a) % 5) as f32 / 4.0);
+        let q = QuantizedCosts::new(&c, 0.3);
+        let bound = q.max_units();
+        assert!(q.cq.iter().all(|&x| x <= bound), "cq exceeds ⌊1/ε⌋ = {bound}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_eps() {
+        let c = CostMatrix::zeros(1, 1);
+        let _ = QuantizedCosts::new(&c, 1.5);
+    }
+}

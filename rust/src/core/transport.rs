@@ -1,0 +1,140 @@
+//! Transport plans σ: A×B → ℝ≥0 (stored (b, a) to match [`CostMatrix`]).
+
+use crate::core::cost::CostMatrix;
+
+#[derive(Debug, Clone)]
+pub struct TransportPlan {
+    pub nb: usize,
+    pub na: usize,
+    flow: Vec<f64>,
+}
+
+impl TransportPlan {
+    pub fn zeros(nb: usize, na: usize) -> Self {
+        Self { nb, na, flow: vec![0.0; nb * na] }
+    }
+
+    #[inline]
+    pub fn at(&self, b: usize, a: usize) -> f64 {
+        self.flow[b * self.na + a]
+    }
+
+    #[inline]
+    pub fn add(&mut self, b: usize, a: usize, amount: f64) {
+        self.flow[b * self.na + a] += amount;
+    }
+
+    pub fn set(&mut self, b: usize, a: usize, amount: f64) {
+        self.flow[b * self.na + a] = amount;
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.flow
+    }
+
+    /// Transport cost Σ σ(b,a)·c(b,a).
+    pub fn cost(&self, costs: &CostMatrix) -> f64 {
+        self.flow
+            .iter()
+            .zip(costs.as_slice())
+            .map(|(&f, &c)| f * c as f64)
+            .sum()
+    }
+
+    /// Row sums: total mass shipped out of each supply b.
+    pub fn supply_marginal(&self) -> Vec<f64> {
+        (0..self.nb)
+            .map(|b| self.flow[b * self.na..(b + 1) * self.na].iter().sum())
+            .collect()
+    }
+
+    /// Column sums: total mass received by each demand a.
+    pub fn demand_marginal(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.na];
+        for b in 0..self.nb {
+            for a in 0..self.na {
+                out[a] += self.at(b, a);
+            }
+        }
+        out
+    }
+
+    /// Total mass moved.
+    pub fn total_mass(&self) -> f64 {
+        self.flow.iter().sum()
+    }
+
+    /// Number of non-zero entries — the paper advertises a *compact* plan
+    /// (≤ na+nb−1 support for vertex-form solutions).
+    pub fn support_size(&self) -> usize {
+        self.flow.iter().filter(|&&f| f > 0.0).count()
+    }
+
+    /// Check the plan is a valid transport plan for (supply, demand):
+    /// non-negative, marginals within `tol` of bounds, all supply moved.
+    pub fn check(&self, supply: &[f64], demand: &[f64], tol: f64) -> Result<(), String> {
+        if supply.len() != self.nb || demand.len() != self.na {
+            return Err("marginal dimension mismatch".into());
+        }
+        if self.flow.iter().any(|&f| f < -tol) {
+            return Err("negative flow".into());
+        }
+        for (b, (&got, &want)) in self.supply_marginal().iter().zip(supply).enumerate() {
+            if got > want + tol {
+                return Err(format!("supply {b} overshipped: {got} > {want}"));
+            }
+            if got < want - tol {
+                return Err(format!("supply {b} not fully shipped: {got} < {want}"));
+            }
+        }
+        for (a, (&got, &want)) in self.demand_marginal().iter().zip(demand).enumerate() {
+            if got > want + tol {
+                return Err(format!("demand {a} overfilled: {got} > {want}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marginals_and_cost() {
+        let mut p = TransportPlan::zeros(2, 2);
+        p.add(0, 0, 0.25);
+        p.add(0, 1, 0.25);
+        p.add(1, 1, 0.5);
+        assert_eq!(p.supply_marginal(), vec![0.5, 0.5]);
+        assert_eq!(p.demand_marginal(), vec![0.25, 0.75]);
+        assert!((p.total_mass() - 1.0).abs() < 1e-12);
+        assert_eq!(p.support_size(), 3);
+        let c = CostMatrix::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]).unwrap();
+        // 0.25·c(0,0)=0 + 0.25·c(0,1)=0.25 + 0.5·c(1,1)=0
+        assert!((p.cost(&c) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn check_accepts_valid_plan() {
+        let mut p = TransportPlan::zeros(2, 2);
+        p.add(0, 0, 0.5);
+        p.add(1, 1, 0.5);
+        p.check(&[0.5, 0.5], &[0.5, 0.5], 1e-9).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_undershipment() {
+        let mut p = TransportPlan::zeros(2, 2);
+        p.add(0, 0, 0.3);
+        let err = p.check(&[0.5, 0.5], &[0.5, 0.5], 1e-9).unwrap_err();
+        assert!(err.contains("not fully shipped"), "{err}");
+    }
+
+    #[test]
+    fn check_rejects_overfill() {
+        let mut p = TransportPlan::zeros(1, 1);
+        p.add(0, 0, 2.0);
+        assert!(p.check(&[2.0], &[1.0], 1e-9).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! Image workloads (paper §5, Figure 2): normalized 28×28 grayscale images
+//! compared under the L1 distance (max cost ≤ 2).
+//!
+//! The paper uses MNIST. When the real dataset is not on disk (this
+//! environment is offline), [`synthetic_digits`] generates MNIST-like
+//! images — a random stroke path rendered with Gaussian pens — which match
+//! the properties that drive solver behaviour: 28×28, sparse support,
+//! unit-normalized mass, L1 costs in [0, 2]. See DESIGN.md §2.
+
+use crate::core::CostMatrix;
+use crate::util::pool;
+use crate::util::rng::Pcg32;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_DIM: usize = IMG_SIDE * IMG_SIDE;
+
+/// One image, already normalized so pixel values sum to 1.
+pub type Image = Vec<f32>;
+
+/// Normalize pixel values to sum 1 (paper: "images are normalized so that
+/// the sum of all pixel values is equal to 1").
+pub fn normalize(pixels: &[f32]) -> Image {
+    let sum: f32 = pixels.iter().sum();
+    if sum <= 0.0 {
+        // degenerate blank image: uniform mass
+        return vec![1.0 / pixels.len() as f32; pixels.len()];
+    }
+    pixels.iter().map(|&p| p / sum).collect()
+}
+
+/// Generate `n` synthetic digit-like images: 3–6 stroke waypoints joined by
+/// line segments, rendered with a Gaussian pen of ~1.2px radius.
+pub fn synthetic_digits(n: usize, rng: &mut Pcg32) -> Vec<Image> {
+    (0..n).map(|_| synthetic_digit(rng)).collect()
+}
+
+fn synthetic_digit(rng: &mut Pcg32) -> Image {
+    let mut img = vec![0.0f32; IMG_DIM];
+    let waypoints = 3 + rng.next_below(4) as usize;
+    // stroke path stays in the central 20x20 region like MNIST digits
+    let mut pts: Vec<(f64, f64)> = Vec::with_capacity(waypoints);
+    for _ in 0..waypoints {
+        pts.push((4.0 + 20.0 * rng.next_f64(), 4.0 + 20.0 * rng.next_f64()));
+    }
+    let pen_r2 = 1.44; // (1.2 px)^2
+    for w in pts.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        let steps = ((x1 - x0).hypot(y1 - y0).ceil() as usize * 2).max(2);
+        for s in 0..=steps {
+            let t = s as f64 / steps as f64;
+            let cx = x0 + t * (x1 - x0);
+            let cy = y0 + t * (y1 - y0);
+            let lo_i = (cy - 3.0).max(0.0) as usize;
+            let hi_i = (cy + 3.0).min(IMG_SIDE as f64 - 1.0) as usize;
+            let lo_j = (cx - 3.0).max(0.0) as usize;
+            let hi_j = (cx + 3.0).min(IMG_SIDE as f64 - 1.0) as usize;
+            for i in lo_i..=hi_i {
+                for j in lo_j..=hi_j {
+                    let d2 = (i as f64 - cy).powi(2) + (j as f64 - cx).powi(2);
+                    let v = (-d2 / pen_r2).exp() as f32;
+                    let px = &mut img[i * IMG_SIDE + j];
+                    *px = px.max(v);
+                }
+            }
+        }
+    }
+    normalize(&img)
+}
+
+/// L1 distance between two normalized images; bounded by 2.
+pub fn l1_distance(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| (x - y).abs()).sum()
+}
+
+/// Pairwise L1 cost matrix, rows = B images, cols = A images. The O(n²·784)
+/// scan is parallelized over rows.
+pub fn l1_costs(b_imgs: &[Image], a_imgs: &[Image]) -> CostMatrix {
+    let nb = b_imgs.len();
+    let na = a_imgs.len();
+    let mut data = vec![0.0f32; nb * na];
+    {
+        let rows: Vec<&mut [f32]> = data.chunks_mut(na).collect();
+        let slots: Vec<std::sync::Mutex<&mut [f32]>> =
+            rows.into_iter().map(std::sync::Mutex::new).collect();
+        pool::parallel_for_each(nb, pool::default_threads(), |b| {
+            let mut row = slots[b].lock().unwrap();
+            for a in 0..na {
+                row[a] = l1_distance(&b_imgs[b], &a_imgs[a]);
+            }
+        });
+    }
+    CostMatrix::from_vec(nb, na, data).expect("l1 costs are valid")
+}
+
+/// Images packed as a flat [n, 784] f32 row-major array — the layout the
+/// `cost_l1` XLA artifact consumes.
+pub fn images_to_f32(imgs: &[Image]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(imgs.len() * IMG_DIM);
+    for img in imgs {
+        debug_assert_eq!(img.len(), IMG_DIM);
+        out.extend_from_slice(img);
+    }
+    out
+}
+
+/// The Figure-2 instance at size n (two disjoint synthetic image sets).
+pub fn fig2_instance(n: usize, seed: u64) -> CostMatrix {
+    let mut rng_a = Pcg32::with_stream(seed, 11);
+    let mut rng_b = Pcg32::with_stream(seed, 12);
+    let a = synthetic_digits(n, &mut rng_a);
+    let b = synthetic_digits(n, &mut rng_b);
+    l1_costs(&b, &a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_are_normalized() {
+        let mut rng = Pcg32::new(1);
+        for img in synthetic_digits(20, &mut rng) {
+            let sum: f32 = img.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "sum={sum}");
+            assert!(img.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn digits_are_sparse_like_mnist() {
+        let mut rng = Pcg32::new(2);
+        let img = synthetic_digit(&mut rng);
+        let nonzero = img.iter().filter(|&&p| p > 1e-6).count();
+        assert!(nonzero > 10, "stroke should cover pixels, got {nonzero}");
+        assert!(nonzero < IMG_DIM / 2, "should be sparse, got {nonzero}");
+    }
+
+    #[test]
+    fn l1_bounds() {
+        let mut rng = Pcg32::new(3);
+        let imgs = synthetic_digits(10, &mut rng);
+        for i in 0..10 {
+            assert!(l1_distance(&imgs[i], &imgs[i]) < 1e-6);
+            for j in 0..10 {
+                let d = l1_distance(&imgs[i], &imgs[j]);
+                assert!((0.0..=2.0 + 1e-4).contains(&d));
+            }
+        }
+    }
+
+    #[test]
+    fn cost_matrix_matches_scalar_path() {
+        let mut rng = Pcg32::new(4);
+        let a = synthetic_digits(5, &mut rng);
+        let b = synthetic_digits(7, &mut rng);
+        let c = l1_costs(&b, &a);
+        assert_eq!(c.nb, 7);
+        assert_eq!(c.na, 5);
+        for i in 0..7 {
+            for j in 0..5 {
+                assert!((c.at(i, j) - l1_distance(&b[i], &a[j])).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_blank_is_uniform() {
+        let img = normalize(&[0.0; 4]);
+        assert_eq!(img, vec![0.25; 4]);
+    }
+
+    #[test]
+    fn fig2_deterministic() {
+        assert_eq!(fig2_instance(6, 9), fig2_instance(6, 9));
+    }
+}

@@ -1,0 +1,164 @@
+//! Real-MNIST loading (IDX ubyte format, LeCun 1998).
+//!
+//! Looks for `train-images-idx3-ubyte` (optionally `.gz`-less only; we read
+//! the raw uncompressed file) under `OTPR_MNIST_DIR` or `./data/mnist`. When
+//! the files are absent, callers fall back to
+//! [`crate::data::images::synthetic_digits`] — the substitution documented
+//! in DESIGN.md §2.
+
+use crate::core::error::{OtprError, Result};
+use crate::data::images::{normalize, Image, IMG_DIM, IMG_SIDE};
+use crate::util::rng::Pcg32;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+const IDX_IMAGES_MAGIC: u32 = 0x0000_0803;
+
+/// Parse an IDX3 ubyte image file into normalized images.
+pub fn parse_idx_images(bytes: &[u8]) -> Result<Vec<Image>> {
+    if bytes.len() < 16 {
+        return Err(OtprError::InvalidInstance("IDX file too short".into()));
+    }
+    let be32 = |o: usize| u32::from_be_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]]);
+    if be32(0) != IDX_IMAGES_MAGIC {
+        return Err(OtprError::InvalidInstance(format!(
+            "bad IDX magic {:#010x}",
+            be32(0)
+        )));
+    }
+    let n = be32(4) as usize;
+    let rows = be32(8) as usize;
+    let cols = be32(12) as usize;
+    if rows != IMG_SIDE || cols != IMG_SIDE {
+        return Err(OtprError::InvalidInstance(format!(
+            "expected 28x28 images, got {rows}x{cols}"
+        )));
+    }
+    let need = 16 + n * IMG_DIM;
+    if bytes.len() < need {
+        return Err(OtprError::InvalidInstance(format!(
+            "IDX truncated: {} < {need}",
+            bytes.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let off = 16 + i * IMG_DIM;
+        let raw: Vec<f32> = bytes[off..off + IMG_DIM].iter().map(|&b| b as f32).collect();
+        out.push(normalize(&raw));
+    }
+    Ok(out)
+}
+
+fn mnist_dir() -> PathBuf {
+    std::env::var("OTPR_MNIST_DIR").map(PathBuf::from).unwrap_or_else(|_| "data/mnist".into())
+}
+
+/// Try to load `count` images from the local MNIST copy.
+pub fn load_mnist(count: usize) -> Result<Vec<Image>> {
+    let path = mnist_dir().join("train-images-idx3-ubyte");
+    load_mnist_file(&path, count)
+}
+
+pub fn load_mnist_file(path: &Path, count: usize) -> Result<Vec<Image>> {
+    let mut file = std::fs::File::open(path)?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes)?;
+    let mut imgs = parse_idx_images(&bytes)?;
+    if imgs.len() < count {
+        return Err(OtprError::InvalidInstance(format!(
+            "only {} images available, wanted {count}",
+            imgs.len()
+        )));
+    }
+    imgs.truncate(count);
+    Ok(imgs)
+}
+
+/// Load real MNIST if present, otherwise generate synthetic digit images.
+/// Returns (images, used_real_mnist).
+pub fn load_or_synthesize(count: usize, seed: u64) -> (Vec<Image>, bool) {
+    match load_mnist(count * 2) {
+        Ok(mut all) => {
+            // split deterministically into two disjoint pools by seed parity
+            let mut rng = Pcg32::with_stream(seed, 21);
+            rng.shuffle(&mut all);
+            all.truncate(count);
+            (all, true)
+        }
+        Err(_) => {
+            let mut rng = Pcg32::with_stream(seed, 22);
+            (crate::data::images::synthetic_digits(count, &mut rng), false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a tiny in-memory IDX file with `n` images of constant value v.
+    fn fake_idx(n: usize, v: u8) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&IDX_IMAGES_MAGIC.to_be_bytes());
+        bytes.extend_from_slice(&(n as u32).to_be_bytes());
+        bytes.extend_from_slice(&28u32.to_be_bytes());
+        bytes.extend_from_slice(&28u32.to_be_bytes());
+        bytes.extend(std::iter::repeat(v).take(n * IMG_DIM));
+        bytes
+    }
+
+    #[test]
+    fn parses_valid_idx() {
+        let imgs = parse_idx_images(&fake_idx(3, 10)).unwrap();
+        assert_eq!(imgs.len(), 3);
+        let sum: f32 = imgs[0].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = fake_idx(1, 1);
+        bytes[3] = 0x01;
+        assert!(parse_idx_images(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let bytes = fake_idx(2, 1);
+        assert!(parse_idx_images(&bytes[..bytes.len() - 5]).is_err());
+        assert!(parse_idx_images(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dims() {
+        let mut bytes = fake_idx(1, 1);
+        bytes[11] = 27;
+        assert!(parse_idx_images(&bytes).is_err());
+    }
+
+    #[test]
+    fn load_file_roundtrip() {
+        let dir = std::env::temp_dir().join("otpr_mnist_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("train-images-idx3-ubyte");
+        std::fs::write(&path, fake_idx(5, 7)).unwrap();
+        let imgs = load_mnist_file(&path, 4).unwrap();
+        assert_eq!(imgs.len(), 4);
+        assert!(load_mnist_file(&path, 6).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn synthesize_fallback() {
+        // point the loader at a non-existent dir and expect fallback
+        let (imgs, real) = {
+            std::env::set_var("OTPR_MNIST_DIR", "/nonexistent/otpr");
+            let r = load_or_synthesize(8, 3);
+            std::env::remove_var("OTPR_MNIST_DIR");
+            r
+        };
+        assert_eq!(imgs.len(), 8);
+        assert!(!real);
+    }
+}

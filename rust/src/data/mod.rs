@@ -1,0 +1,7 @@
+//! Workload data: synthetic geometric inputs (Fig 1), image inputs (Fig 2,
+//! real MNIST via IDX or synthetic fallback), and named workload descriptors.
+
+pub mod images;
+pub mod mnist;
+pub mod synthetic;
+pub mod workloads;

@@ -1,0 +1,122 @@
+//! Synthetic geometric workloads (paper §5, Figure 1): point sets A and B
+//! sampled uniformly from the unit square, costs = Euclidean distances.
+
+use crate::core::CostMatrix;
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point2 {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Point2 {
+    pub fn dist(&self, other: &Point2) -> f64 {
+        let dx = self.x - other.x;
+        let dy = self.y - other.y;
+        (dx * dx + dy * dy).sqrt()
+    }
+}
+
+/// Sample `n` points uniformly from [0,1]².
+pub fn uniform_points(n: usize, rng: &mut Pcg32) -> Vec<Point2> {
+    (0..n).map(|_| Point2 { x: rng.next_f64(), y: rng.next_f64() }).collect()
+}
+
+/// Euclidean cost matrix: rows = B, columns = A.
+pub fn euclidean_costs(b_pts: &[Point2], a_pts: &[Point2]) -> CostMatrix {
+    CostMatrix::from_fn(b_pts.len(), a_pts.len(), |b, a| b_pts[b].dist(&a_pts[a]) as f32)
+}
+
+/// The Figure-1 instance: A, B ~ U([0,1]²)ⁿ, Euclidean costs (max ≤ √2).
+pub fn fig1_instance(n: usize, seed: u64) -> CostMatrix {
+    let mut rng_a = Pcg32::with_stream(seed, 1);
+    let mut rng_b = Pcg32::with_stream(seed, 2);
+    let a = uniform_points(n, &mut rng_a);
+    let b = uniform_points(n, &mut rng_b);
+    euclidean_costs(&b, &a)
+}
+
+/// Points packed as a flat [n,2] f32 row-major array — the layout the
+/// `cost_euclid` XLA artifact consumes.
+pub fn points_to_f32(pts: &[Point2]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(pts.len() * 2);
+    for p in pts {
+        out.push(p.x as f32);
+        out.push(p.y as f32);
+    }
+    out
+}
+
+/// Clustered (Gaussian-mixture) points: a harder geometric workload used by
+/// the ablation benches; `k` centers, isotropic stddev `sigma`, clipped to
+/// the unit square.
+pub fn clustered_points(n: usize, k: usize, sigma: f64, rng: &mut Pcg32) -> Vec<Point2> {
+    let centers: Vec<Point2> = (0..k.max(1))
+        .map(|_| Point2 { x: rng.next_f64(), y: rng.next_f64() })
+        .collect();
+    (0..n)
+        .map(|_| {
+            let c = centers[rng.next_below(centers.len() as u32) as usize];
+            Point2 {
+                x: (c.x + sigma * rng.normal()).clamp(0.0, 1.0),
+                y: (c.y + sigma * rng.normal()).clamp(0.0, 1.0),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_in_unit_square() {
+        let mut rng = Pcg32::new(1);
+        for p in uniform_points(500, &mut rng) {
+            assert!((0.0..1.0).contains(&p.x) && (0.0..1.0).contains(&p.y));
+        }
+    }
+
+    #[test]
+    fn costs_are_metric_distances() {
+        let mut rng = Pcg32::new(2);
+        let a = uniform_points(10, &mut rng);
+        let b = uniform_points(10, &mut rng);
+        let c = euclidean_costs(&b, &a);
+        assert!(c.max() <= (2.0f32).sqrt() + 1e-6);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert!((c.at(i, j) as f64 - b[i].dist(&a[j])).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_deterministic_per_seed() {
+        let c1 = fig1_instance(50, 7);
+        let c2 = fig1_instance(50, 7);
+        let c3 = fig1_instance(50, 8);
+        assert_eq!(c1, c2);
+        assert_ne!(c1, c3);
+        // A and B streams differ: diagonal should not be all ~0
+        let diag_sum: f32 = (0..50).map(|i| c1.at(i, i)).sum();
+        assert!(diag_sum > 1.0);
+    }
+
+    #[test]
+    fn packed_points_layout() {
+        let pts = vec![Point2 { x: 0.25, y: 0.5 }, Point2 { x: 1.0, y: 0.0 }];
+        assert_eq!(points_to_f32(&pts), vec![0.25, 0.5, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn clustered_points_clipped() {
+        let mut rng = Pcg32::new(3);
+        let pts = clustered_points(300, 4, 0.3, &mut rng);
+        assert_eq!(pts.len(), 300);
+        for p in pts {
+            assert!((0.0..=1.0).contains(&p.x) && (0.0..=1.0).contains(&p.y));
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Named workload descriptors shared by benches, examples, and the CLI so
+//! every harness builds byte-identical instances for a given (name, seed).
+
+use crate::core::{AssignmentInstance, CostMatrix, OtInstance};
+use crate::data::{images, mnist, synthetic};
+use crate::util::rng::Pcg32;
+
+/// A workload that yields an assignment instance.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Workload {
+    /// Figure 1: uniform unit-square points, Euclidean cost.
+    Fig1 { n: usize },
+    /// Figure 2: (synthetic or real) MNIST-like images, L1 cost.
+    Fig2 { n: usize },
+    /// Clustered Gaussian-mixture points (ablations).
+    Clustered { n: usize, k: usize, sigma: f64 },
+    /// Uniform random costs in [0,1] (worst-case-ish, no metric structure).
+    RandomCosts { n: usize },
+}
+
+impl Workload {
+    pub fn name(&self) -> String {
+        match self {
+            Workload::Fig1 { n } => format!("fig1/n{n}"),
+            Workload::Fig2 { n } => format!("fig2/n{n}"),
+            Workload::Clustered { n, k, sigma } => format!("clustered/n{n}-k{k}-s{sigma}"),
+            Workload::RandomCosts { n } => format!("random/n{n}"),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            Workload::Fig1 { n }
+            | Workload::Fig2 { n }
+            | Workload::Clustered { n, .. }
+            | Workload::RandomCosts { n } => *n,
+        }
+    }
+
+    /// Build the cost matrix for this workload at `seed`.
+    pub fn costs(&self, seed: u64) -> CostMatrix {
+        match *self {
+            Workload::Fig1 { n } => synthetic::fig1_instance(n, seed),
+            Workload::Fig2 { n } => {
+                let (a, _) = mnist::load_or_synthesize(n, seed);
+                let (b, _) = mnist::load_or_synthesize(n, seed.wrapping_add(0x5EED));
+                images::l1_costs(&b, &a)
+            }
+            Workload::Clustered { n, k, sigma } => {
+                let mut ra = Pcg32::with_stream(seed, 31);
+                let mut rb = Pcg32::with_stream(seed, 32);
+                let a = synthetic::clustered_points(n, k, sigma, &mut ra);
+                let b = synthetic::clustered_points(n, k, sigma, &mut rb);
+                synthetic::euclidean_costs(&b, &a)
+            }
+            Workload::RandomCosts { n } => {
+                let mut rng = Pcg32::with_stream(seed, 33);
+                CostMatrix::from_fn(n, n, |_, _| rng.next_f32())
+            }
+        }
+    }
+
+    pub fn assignment(&self, seed: u64) -> AssignmentInstance {
+        AssignmentInstance::new(self.costs(seed)).expect("workloads are square")
+    }
+
+    /// OT instance with random (Dirichlet-ish) masses derived from the seed.
+    pub fn ot_with_random_masses(&self, seed: u64) -> OtInstance {
+        let costs = self.costs(seed);
+        let mut rng = Pcg32::with_stream(seed, 34);
+        let demand = random_simplex(costs.na, &mut rng);
+        let supply = random_simplex(costs.nb, &mut rng);
+        OtInstance::new(costs, demand, supply).expect("valid masses")
+    }
+}
+
+/// Random point on the probability simplex via normalized Exp(1) draws.
+pub fn random_simplex(n: usize, rng: &mut Pcg32) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n).map(|_| -(1.0 - rng.next_f64()).ln()).collect();
+    let sum: f64 = v.iter().sum();
+    for x in &mut v {
+        *x /= sum;
+    }
+    // exact renormalization of the tail element to kill float drift
+    let s: f64 = v.iter().take(n - 1).sum();
+    v[n - 1] = (1.0 - s).max(0.0);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_sizes() {
+        let w = Workload::Fig1 { n: 100 };
+        assert_eq!(w.name(), "fig1/n100");
+        assert_eq!(w.n(), 100);
+    }
+
+    #[test]
+    fn deterministic_instances() {
+        let w = Workload::RandomCosts { n: 16 };
+        assert_eq!(w.costs(1), w.costs(1));
+        assert_ne!(w.costs(1), w.costs(2));
+    }
+
+    #[test]
+    fn simplex_sums_to_one() {
+        let mut rng = Pcg32::new(4);
+        let v = random_simplex(50, &mut rng);
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(v.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn ot_instance_valid() {
+        let w = Workload::Fig1 { n: 12 };
+        let inst = w.ot_with_random_masses(5);
+        assert_eq!(inst.demand.len(), 12);
+        assert!((inst.supply.iter().sum::<f64>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clustered_builds() {
+        let w = Workload::Clustered { n: 20, k: 3, sigma: 0.05 };
+        let c = w.costs(9);
+        assert_eq!(c.na, 20);
+    }
+}

@@ -1,0 +1,207 @@
+//! Ablations over the paper's analytical claims (DESIGN.md §4, A1–A6):
+//!
+//! * A1 `phases`   — phase count vs ε against the (1+2ε)/ε² bound and the
+//!                   Σnᵢ = O(n/ε) work bound (Lemmas 3.2/3.3, eq. 4).
+//! * A2 `rounds`   — propose–accept rounds per phase vs n (§3.2: O(log n)).
+//! * A3 `accuracy` — measured additive error vs the 3εn·c_max guarantee,
+//!                   push-relabel vs exact Hungarian / SSP OT.
+//! * A4 `clusters` — max dual clusters per vertex in the OT solver
+//!                   (Lemma 4.1: ≤ 2).
+//! * A5 `sinkhorn-stability` — standard vs log-domain Sinkhorn at small ε
+//!                   (the §5 numerical-instability observation).
+//! * A6 `threads`  — parallel solver speedup vs thread count.
+
+use crate::core::{OtInstance, ScaledOtInstance};
+use crate::data::workloads::Workload;
+use crate::exp::report::Series;
+use crate::solvers::ot_push_relabel::{OtPrState, OtPushRelabel};
+use crate::solvers::parallel_pr::{ParallelPrState, ParallelPushRelabel};
+use crate::solvers::push_relabel::PushRelabel;
+use crate::solvers::sinkhorn::Sinkhorn;
+use crate::solvers::{hungarian, ssp_ot::SspExactOt, OtSolver};
+use crate::util::stats::power_fit;
+use crate::util::timer::Stopwatch;
+
+/// A1: phases and total work vs ε at fixed n.
+pub fn phases_vs_eps(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
+    let inst = Workload::Fig1 { n }.assignment(seed);
+    let mut measured = Series::new("phases (measured)");
+    let mut bound = Series::new("phase bound (1+2ε)/ε²");
+    let mut work = Series::new("Σnᵢ / (n/ε)");
+    for &eps in eps_grid {
+        let sol = PushRelabel::new().solve_with_param(&inst, eps).expect("solve");
+        measured.push(eps, sol.stats.phases as f64);
+        bound.push(eps, (1.0 + 2.0 * eps) / (eps * eps));
+        let norm = sol.stats.total_free_processed as f64 / (n as f64 / eps);
+        work.push(eps, norm);
+    }
+    vec![measured, bound, work]
+}
+
+/// A2: mean propose–accept rounds per phase vs n.
+pub fn rounds_vs_n(sizes: &[usize], eps: f64, seed: u64) -> Vec<Series> {
+    let mut rounds = Series::new("rounds/phase");
+    let mut log2n = Series::new("log2(n)");
+    for &n in sizes {
+        let inst = Workload::Fig1 { n }.assignment(seed);
+        let mut st = ParallelPrState::new(&inst.costs, eps, 4);
+        while st.run_phase().is_some() {}
+        let per_phase = st.rounds as f64 / st.phases.max(1) as f64;
+        rounds.push(n as f64, per_phase);
+        log2n.push(n as f64, (n as f64).log2());
+    }
+    vec![rounds, log2n]
+}
+
+/// A3: measured additive error vs the 3·ε·n·c_max guarantee.
+pub fn accuracy(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
+    let inst = Workload::Fig1 { n }.assignment(seed);
+    let (_, exact, _, _) = hungarian::solve_exact(&inst.costs).expect("exact");
+    let c_max = inst.costs.max() as f64;
+    let mut err = Series::new("measured error / (3εn·c_max)");
+    let mut abs = Series::new("measured additive error");
+    for &eps in eps_grid {
+        let sol = PushRelabel::new().solve_with_param(&inst, eps).expect("solve");
+        let e = (sol.cost - exact).max(0.0);
+        abs.push(eps, e);
+        err.push(eps, e / (3.0 * eps * n as f64 * c_max));
+    }
+    vec![abs, err]
+}
+
+/// A3b: OT solver error vs exact SSP on random-mass instances.
+pub fn ot_accuracy(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
+    let inst = Workload::Fig1 { n }.ot_with_random_masses(seed);
+    let exact = SspExactOt::default().solve_ot(&inst, 0.0).expect("exact");
+    let c_max = inst.costs.max() as f64;
+    let mut abs = Series::new("OT additive error");
+    let mut rel = Series::new("error / (ε·c_max)");
+    for &eps in eps_grid {
+        let sol = OtPushRelabel::new().solve_ot(&inst, eps).expect("solve");
+        let e = (sol.cost - exact.cost).max(0.0);
+        abs.push(eps, e);
+        rel.push(eps, e / (eps * c_max));
+    }
+    vec![abs, rel]
+}
+
+/// A4: observed max dual clusters per vertex (Lemma 4.1 says ≤ 2).
+pub fn clusters(sizes: &[usize], eps: f64, seed: u64) -> Vec<Series> {
+    let mut s = Series::new("max clusters (bound = 2)");
+    for &n in sizes {
+        let inst = Workload::Fig1 { n }.ot_with_random_masses(seed);
+        let scaled = ScaledOtInstance::build(&inst, eps);
+        let mut st = OtPrState::new(&inst.costs, &scaled, eps / 6.0);
+        st.run_to_termination().expect("terminate");
+        s.push(n as f64, st.max_classes_seen as f64);
+    }
+    vec![s]
+}
+
+/// A5: standard-kernel vs log-domain Sinkhorn across ε (status + time).
+pub fn sinkhorn_stability(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
+    let inst = OtInstance::uniform(Workload::Fig1 { n }.costs(seed)).expect("uniform");
+    let mut std_s = Series::new("sinkhorn-std secs");
+    let mut log_s = Series::new("sinkhorn-log secs");
+    for &eps in eps_grid {
+        let sw = Stopwatch::start();
+        match Sinkhorn::new().solve_ot(&inst, eps) {
+            Ok(sol) => std_s.push_note(eps, sw.elapsed_secs(), format!("{} iters", sol.stats.phases)),
+            Err(_) => std_s.push_note(eps, f64::NAN, "UNDERFLOW"),
+        }
+        let sw = Stopwatch::start();
+        let mut lg = Sinkhorn::log_domain();
+        lg.config.max_iters = 20_000;
+        match lg.solve_ot(&inst, eps) {
+            Ok(sol) => log_s.push_note(eps, sw.elapsed_secs(), format!("{} iters", sol.stats.phases)),
+            Err(e) => log_s.push_note(eps, f64::NAN, format!("{e}")),
+        }
+    }
+    vec![std_s, log_s]
+}
+
+/// A6: parallel solver wall-clock vs thread count.
+pub fn threads(n: usize, eps: f64, thread_grid: &[usize], seed: u64) -> Vec<Series> {
+    let inst = Workload::Fig1 { n }.assignment(seed);
+    let base = {
+        let sw = Stopwatch::start();
+        let _ = ParallelPushRelabel::with_threads(1).solve_with_param(&inst, eps);
+        sw.elapsed_secs()
+    };
+    let mut time_s = Series::new("seconds");
+    let mut speedup = Series::new("speedup vs 1 thread");
+    for &t in thread_grid {
+        let sw = Stopwatch::start();
+        let _ = ParallelPushRelabel::with_threads(t).solve_with_param(&inst, eps);
+        let secs = sw.elapsed_secs();
+        time_s.push(t as f64, secs);
+        speedup.push(t as f64, base / secs.max(1e-12));
+    }
+    vec![time_s, speedup]
+}
+
+/// Empirical sequential-complexity exponent: time vs n at fixed ε should be
+/// ~ n² (the paper's O(n²/ε)). Returns (exponent, r²).
+pub fn complexity_exponent(sizes: &[usize], eps: f64, seed: u64) -> (f64, f64) {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &n in sizes {
+        let inst = Workload::Fig1 { n }.assignment(seed);
+        let sw = Stopwatch::start();
+        let _ = PushRelabel::new().solve_with_param(&inst, eps);
+        xs.push(n as f64);
+        ys.push(sw.elapsed_secs().max(1e-9));
+    }
+    let (_, k, r2) = power_fit(&xs, &ys);
+    (k, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a1_phases_within_bound() {
+        let series = phases_vs_eps(48, &[0.3, 0.15], 1);
+        let measured = &series[0];
+        let bound = &series[1];
+        for (m, b) in measured.points.iter().zip(&bound.points) {
+            assert!(m.y <= b.y + 1e-9, "phases {} > bound {}", m.y, b.y);
+        }
+        // work bound normalized to ≤ (1+2ε)
+        for p in &series[2].points {
+            assert!(p.y <= 1.0 + 2.0 * p.x + 1e-9);
+        }
+    }
+
+    #[test]
+    fn a2_rounds_small() {
+        let series = rounds_vs_n(&[32, 64], 0.25, 2);
+        for p in &series[0].points {
+            assert!(p.y >= 1.0 && p.y < 20.0, "rounds/phase {}", p.y);
+        }
+    }
+
+    #[test]
+    fn a3_error_within_guarantee() {
+        let series = accuracy(24, &[0.3, 0.1], 3);
+        for p in &series[1].points {
+            assert!(p.y <= 1.0 + 1e-9, "normalized error {} > 1", p.y);
+        }
+    }
+
+    #[test]
+    fn a4_clusters_at_most_two() {
+        let series = clusters(&[12, 20], 0.25, 4);
+        for p in &series[0].points {
+            assert!(p.y <= 2.0, "Lemma 4.1 violated: {}", p.y);
+        }
+    }
+
+    #[test]
+    fn a6_threads_produces_points() {
+        let series = threads(48, 0.25, &[1, 2], 5);
+        assert_eq!(series[0].points.len(), 2);
+        assert!(series[1].points[0].y > 0.0);
+    }
+}

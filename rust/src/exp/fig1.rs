@@ -1,0 +1,202 @@
+//! Figure 1 reproduction (paper §5): runtime vs n on synthetic inputs —
+//! A, B ~ U([0,1]²)ⁿ with Euclidean costs — for each ε, comparing the
+//! push-relabel algorithm against Sinkhorn, CPU and "GPU" (XLA artifact)
+//! implementations of both.
+//!
+//! Paper grid: n ∈ {500, 1000, 2000, 4000, 8000, 10000},
+//! ε ∈ {0.1, 0.01, 0.005}, 30 runs/point. Defaults here are a laptop-scale
+//! slice (override: `otpr fig1 --sizes ... --eps ... --reps 30`).
+
+use crate::core::{AssignmentInstance, OtInstance};
+use crate::data::synthetic;
+use crate::exp::report::Series;
+use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
+use crate::solvers::parallel_pr::ParallelPushRelabel;
+use crate::solvers::push_relabel::PushRelabel;
+use crate::solvers::sinkhorn::Sinkhorn;
+use crate::solvers::OtSolver;
+use crate::util::rng::Pcg32;
+use crate::util::timer::Stopwatch;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct Fig1Config {
+    pub sizes: Vec<usize>,
+    pub eps: Vec<f64>,
+    pub reps: usize,
+    pub seed: u64,
+    /// Skip a (n, algorithm) cell once a single rep exceeds this budget.
+    pub max_secs_per_run: f64,
+    /// Algorithms to include (default: all four of the paper's).
+    pub engines: Vec<String>,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Self {
+            sizes: vec![500, 1000, 2000],
+            eps: vec![0.1, 0.01, 0.005],
+            reps: 3,
+            seed: 42,
+            max_secs_per_run: 120.0,
+            engines: vec![
+                "pr-cpu".into(),
+                "pr-gpu".into(),
+                "sinkhorn-cpu".into(),
+                "sinkhorn-gpu".into(),
+            ],
+        }
+    }
+}
+
+/// Figure 1 for one ε: one runtime series per algorithm, x = n.
+/// `registry = None` skips the XLA ("GPU") columns.
+pub fn run_eps(
+    cfg: &Fig1Config,
+    eps: f64,
+    registry: Option<Arc<XlaRuntime>>,
+) -> Vec<Series> {
+    let mut series: Vec<Series> =
+        cfg.engines.iter().map(|e| Series::new(e.clone())).collect();
+    for &n in &cfg.sizes {
+        for (ei, engine) in cfg.engines.iter().enumerate() {
+            let mut times = Vec::new();
+            let mut note: Option<String> = None;
+            for rep in 0..cfg.reps {
+                let seed = cfg.seed.wrapping_add(rep as u64 * 1001);
+                let (secs, n2) = run_one(engine, n, eps, seed, registry.clone());
+                match n2 {
+                    Some(msg) => {
+                        note = Some(msg);
+                    }
+                    None => {}
+                }
+                if let Some(s) = secs {
+                    times.push(s);
+                    if s > cfg.max_secs_per_run {
+                        note.get_or_insert_with(|| "budget".into());
+                        break;
+                    }
+                } else {
+                    break; // engine unavailable
+                }
+            }
+            if !times.is_empty() {
+                let mean = times.iter().sum::<f64>() / times.len() as f64;
+                match note {
+                    Some(msg) => series[ei].push_note(n as f64, mean, msg),
+                    None => series[ei].push(n as f64, mean),
+                }
+            } else if let Some(msg) = note {
+                series[ei].push_note(n as f64, f64::NAN, msg);
+            }
+        }
+    }
+    series
+}
+
+/// One timed run. Returns (seconds, note). `None` seconds = unavailable.
+fn run_one(
+    engine: &str,
+    n: usize,
+    eps: f64,
+    seed: u64,
+    registry: Option<Arc<XlaRuntime>>,
+) -> (Option<f64>, Option<String>) {
+    // Build inputs outside the timed region (the paper times the solvers,
+    // not the data generation).
+    let mut rng_a = Pcg32::with_stream(seed, 1);
+    let mut rng_b = Pcg32::with_stream(seed, 2);
+    let a_pts = synthetic::uniform_points(n, &mut rng_a);
+    let b_pts = synthetic::uniform_points(n, &mut rng_b);
+    let costs = synthetic::euclidean_costs(&b_pts, &a_pts);
+    let inst = AssignmentInstance::new(costs).expect("square");
+
+    match engine {
+        "pr-cpu" => {
+            let sw = Stopwatch::start();
+            let sol = PushRelabel::new().solve_with_param(&inst, eps);
+            (sol.ok().map(|_| sw.elapsed_secs()), None)
+        }
+        "pr-parallel" => {
+            let sw = Stopwatch::start();
+            let sol = ParallelPushRelabel::default().solve_with_param(&inst, eps);
+            (sol.ok().map(|_| sw.elapsed_secs()), None)
+        }
+        "pr-gpu" => {
+            let Some(reg) = registry else {
+                return (None, Some("no artifacts".into()));
+            };
+            let solver = XlaAssignment::new(reg);
+            let pb = synthetic::points_to_f32(&b_pts);
+            let pa = synthetic::points_to_f32(&a_pts);
+            let sw = Stopwatch::start();
+            let sol = solver.solve_points(&pb, &pa, &inst, eps);
+            match sol {
+                Ok(_) => (Some(sw.elapsed_secs()), None),
+                Err(e) => (None, Some(format!("error: {e}"))),
+            }
+        }
+        "sinkhorn-cpu" => {
+            let ot = OtInstance::uniform(inst.costs.clone()).expect("uniform");
+            let mut sk = Sinkhorn::new();
+            sk.config.max_iters = 20_000;
+            let sw = Stopwatch::start();
+            match sk.solve_ot(&ot, eps) {
+                Ok(_) => (Some(sw.elapsed_secs()), None),
+                Err(_) => {
+                    // the paper's observed instability at small ε: retry in
+                    // log-domain and report that time with a note
+                    let sw = Stopwatch::start();
+                    let mut lg = Sinkhorn::log_domain();
+                    lg.config.max_iters = 1000; // bound the sweep; noted below
+                    match lg.solve_ot(&ot, eps) {
+                        Ok(_) => (Some(sw.elapsed_secs()), Some("log-domain".into())),
+                        Err(e) => (None, Some(format!("diverged: {e}"))),
+                    }
+                }
+            }
+        }
+        "sinkhorn-gpu" => {
+            let Some(reg) = registry else {
+                return (None, Some("no artifacts".into()));
+            };
+            let ot = OtInstance::uniform(inst.costs.clone()).expect("uniform");
+            let sw = Stopwatch::start();
+            match XlaSinkhorn::new(reg).solve_ot(&ot, eps) {
+                Ok(_) => (Some(sw.elapsed_secs()), None),
+                Err(e) => (None, Some(format!("diverged: {e}"))),
+            }
+        }
+        other => (None, Some(format!("unknown engine {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_grid_runs_native_only() {
+        let cfg = Fig1Config {
+            sizes: vec![32, 64],
+            eps: vec![0.25],
+            reps: 1,
+            seed: 1,
+            max_secs_per_run: 60.0,
+            engines: vec!["pr-cpu".into(), "sinkhorn-cpu".into()],
+        };
+        let series = run_eps(&cfg, 0.25, None);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].points.len(), 2);
+        assert!(series[0].points.iter().all(|p| p.y > 0.0));
+        assert!(series[1].points.iter().all(|p| p.y > 0.0));
+    }
+
+    #[test]
+    fn unknown_engine_noted() {
+        let (secs, note) = run_one("bogus", 8, 0.3, 1, None);
+        assert!(secs.is_none());
+        assert!(note.unwrap().contains("unknown"));
+    }
+}

@@ -1,0 +1,175 @@
+//! Figure 2 reproduction (paper §5): runtime vs ε on MNIST-style image
+//! inputs — n images per side, L1 distance between unit-normalized 28×28
+//! images (max cost ≤ 2) — for ε ∈ {0.75, 0.5, 0.25, 0.1}.
+//!
+//! The paper fixes n = 10,000 with real MNIST; `data::mnist` loads the real
+//! IDX files when present and otherwise substitutes synthetic digit images
+//! (DESIGN.md §2). Default n here is CI-scale; `otpr fig2 --n 10000
+//! --reps 30` reproduces the paper's point.
+
+use crate::core::{AssignmentInstance, OtInstance};
+use crate::data::{images, mnist};
+use crate::exp::report::Series;
+use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
+use crate::solvers::push_relabel::PushRelabel;
+use crate::solvers::sinkhorn::Sinkhorn;
+use crate::solvers::OtSolver;
+use crate::util::timer::Stopwatch;
+use std::sync::Arc;
+
+#[derive(Debug, Clone)]
+pub struct Fig2Config {
+    pub n: usize,
+    pub eps: Vec<f64>,
+    pub reps: usize,
+    pub seed: u64,
+    pub engines: Vec<String>,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Self {
+            n: 1000,
+            eps: vec![0.75, 0.5, 0.25, 0.1],
+            reps: 3,
+            seed: 7,
+            engines: vec![
+                "pr-cpu".into(),
+                "pr-gpu".into(),
+                "sinkhorn-cpu".into(),
+                "sinkhorn-gpu".into(),
+            ],
+        }
+    }
+}
+
+/// Build the Figure-2 instance once (shared across ε and reps, like the
+/// paper's setup). Returns (instance, packed image features, used_real).
+pub fn build_instance(n: usize, seed: u64) -> (AssignmentInstance, Vec<f32>, Vec<f32>, bool) {
+    let (a_imgs, real_a) = mnist::load_or_synthesize(n, seed);
+    let (b_imgs, _) = mnist::load_or_synthesize(n, seed.wrapping_add(0x5EED));
+    let costs = images::l1_costs(&b_imgs, &a_imgs);
+    let inst = AssignmentInstance::new(costs).expect("square");
+    let fb = images::images_to_f32(&b_imgs);
+    let fa = images::images_to_f32(&a_imgs);
+    (inst, fb, fa, real_a)
+}
+
+/// Figure 2: one runtime series per algorithm, x = ε.
+pub fn run(cfg: &Fig2Config, registry: Option<Arc<XlaRuntime>>) -> (Vec<Series>, bool) {
+    let (inst, fb, fa, real) = build_instance(cfg.n, cfg.seed);
+    let mut series: Vec<Series> =
+        cfg.engines.iter().map(|e| Series::new(e.clone())).collect();
+    for &eps in &cfg.eps {
+        for (ei, engine) in cfg.engines.iter().enumerate() {
+            let mut times = Vec::new();
+            let mut note = None;
+            for _rep in 0..cfg.reps {
+                let (secs, n2) = run_one(engine, &inst, &fb, &fa, eps, registry.clone());
+                if n2.is_some() {
+                    note = n2;
+                }
+                match secs {
+                    Some(s) => times.push(s),
+                    None => break,
+                }
+            }
+            if !times.is_empty() {
+                let mean = times.iter().sum::<f64>() / times.len() as f64;
+                match note {
+                    Some(msg) => series[ei].push_note(eps, mean, msg),
+                    None => series[ei].push(eps, mean),
+                }
+            } else if let Some(msg) = note {
+                series[ei].push_note(eps, f64::NAN, msg);
+            }
+        }
+    }
+    (series, real)
+}
+
+fn run_one(
+    engine: &str,
+    inst: &AssignmentInstance,
+    fb: &[f32],
+    fa: &[f32],
+    eps: f64,
+    registry: Option<Arc<XlaRuntime>>,
+) -> (Option<f64>, Option<String>) {
+    match engine {
+        "pr-cpu" => {
+            let sw = Stopwatch::start();
+            let sol = PushRelabel::new().solve_with_param(inst, eps);
+            (sol.ok().map(|_| sw.elapsed_secs()), None)
+        }
+        "pr-gpu" => {
+            let Some(reg) = registry else {
+                return (None, Some("no artifacts".into()));
+            };
+            let solver = XlaAssignment::new(reg);
+            let sw = Stopwatch::start();
+            match solver.solve_images(fb, fa, inst, eps) {
+                Ok(_) => (Some(sw.elapsed_secs()), None),
+                Err(e) => (None, Some(format!("error: {e}"))),
+            }
+        }
+        "sinkhorn-cpu" => {
+            let ot = OtInstance::uniform(inst.costs.clone()).expect("uniform");
+            let mut sk = Sinkhorn::new();
+            sk.config.max_iters = 20_000;
+            let sw = Stopwatch::start();
+            match sk.solve_ot(&ot, eps) {
+                Ok(_) => (Some(sw.elapsed_secs()), None),
+                Err(_) => {
+                    let sw = Stopwatch::start();
+                    let mut lg = Sinkhorn::log_domain();
+                    lg.config.max_iters = 1000; // bound the sweep; noted below
+                    match lg.solve_ot(&ot, eps) {
+                        Ok(_) => (Some(sw.elapsed_secs()), Some("log-domain".into())),
+                        Err(e) => (None, Some(format!("diverged: {e}"))),
+                    }
+                }
+            }
+        }
+        "sinkhorn-gpu" => {
+            let Some(reg) = registry else {
+                return (None, Some("no artifacts".into()));
+            };
+            let ot = OtInstance::uniform(inst.costs.clone()).expect("uniform");
+            let sw = Stopwatch::start();
+            match XlaSinkhorn::new(reg).solve_ot(&ot, eps) {
+                Ok(_) => (Some(sw.elapsed_secs()), None),
+                Err(e) => (None, Some(format!("diverged: {e}"))),
+            }
+        }
+        other => (None, Some(format!("unknown engine {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_fig2_native() {
+        let cfg = Fig2Config {
+            n: 24,
+            eps: vec![0.5, 0.25],
+            reps: 1,
+            seed: 3,
+            engines: vec!["pr-cpu".into(), "sinkhorn-cpu".into()],
+        };
+        let (series, _real) = run(&cfg, None);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].points.len(), 2);
+        assert!(series[0].points.iter().all(|p| p.y >= 0.0));
+    }
+
+    #[test]
+    fn instance_cost_range() {
+        let (inst, fb, fa, _) = build_instance(12, 1);
+        assert!(inst.costs.max() <= 2.0 + 1e-4);
+        assert_eq!(fb.len(), 12 * 784);
+        assert_eq!(fa.len(), 12 * 784);
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment harnesses regenerating the paper's evaluation (Figures 1–2)
+//! and the analytical ablations A1–A6. See DESIGN.md §4 for the index.
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig2;
+pub mod report;

@@ -1,0 +1,120 @@
+//! Table/series formatting shared by `otpr fig1|fig2|ablation`, the bench
+//! binaries, and EXPERIMENTS.md generation.
+
+/// One plotted series: label + (x, y) points with optional annotations.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<SeriesPoint>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SeriesPoint {
+    pub x: f64,
+    pub y: f64,
+    pub note: Option<String>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push(SeriesPoint { x, y, note: None });
+    }
+
+    pub fn push_note(&mut self, x: f64, y: f64, note: impl Into<String>) {
+        self.points.push(SeriesPoint { x, y, note: Some(note.into()) });
+    }
+}
+
+/// Render aligned series as a markdown table: first column = x, one column
+/// per series (paper-figure style: "runtime vs n, one line per algorithm").
+pub fn figure_table(title: &str, x_label: &str, series: &[Series]) -> String {
+    let mut xs: Vec<f64> = series.iter().flat_map(|s| s.points.iter().map(|p| p.x)).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let mut out = format!("## {title}\n\n| {x_label} |");
+    for s in series {
+        out.push_str(&format!(" {} |", s.label));
+    }
+    out.push_str("\n|---|");
+    for _ in series {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for &x in &xs {
+        out.push_str(&format!("| {} |", fmt_x(x)));
+        for s in series {
+            match s.points.iter().find(|p| p.x == x) {
+                Some(p) => {
+                    let mut cell = format!("{:.4}", p.y);
+                    if let Some(n) = &p.note {
+                        cell.push_str(&format!(" ({n})"));
+                    }
+                    out.push_str(&format!(" {cell} |"));
+                }
+                None => out.push_str(" - |"),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV form of the same data (one row per (series, point)).
+pub fn figure_csv(x_label: &str, series: &[Series]) -> String {
+    let mut out = format!("series,{x_label},value,note\n");
+    for s in series {
+        for p in &s.points {
+            out.push_str(&format!(
+                "{},{},{:.6},{}\n",
+                s.label,
+                fmt_x(p.x),
+                p.y,
+                p.note.as_deref().unwrap_or("")
+            ));
+        }
+    }
+    out
+}
+
+fn fmt_x(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut a = Series::new("pr-cpu");
+        a.push(500.0, 0.1);
+        a.push(1000.0, 0.4);
+        let mut b = Series::new("sinkhorn");
+        b.push(1000.0, 0.9);
+        b.push_note(500.0, 0.2, "diverged");
+        let t = figure_table("Figure 1 (eps=0.1)", "n", &[a.clone(), b.clone()]);
+        assert!(t.contains("| n | pr-cpu | sinkhorn |"));
+        assert!(t.contains("| 500 | 0.1000 | 0.2000 (diverged) |"));
+        assert!(t.contains("| 1000 | 0.4000 | 0.9000 |"));
+        let csv = figure_csv("n", &[a, b]);
+        assert!(csv.contains("pr-cpu,500,0.100000,"));
+        assert!(csv.contains("sinkhorn,500,0.200000,diverged"));
+    }
+
+    #[test]
+    fn missing_points_render_dash() {
+        let mut a = Series::new("x");
+        a.push(1.0, 2.0);
+        let b = Series::new("y");
+        let t = figure_table("t", "n", &[a, b]);
+        assert!(t.contains("| 1 | 2.0000 | - |"));
+    }
+}

@@ -1,0 +1,26 @@
+//! # otpr — push-relabel additive approximation for optimal transport
+//!
+//! Production-oriented reproduction of Lahn–Raghvendra–Zhang,
+//! *"A Push-Relabel Based Additive Approximation for Optimal Transport"*
+//! (2022), as a three-layer Rust + JAX/Pallas stack:
+//!
+//! * [`solvers`] — the paper's algorithm (sequential §2.2, parallel §3.2,
+//!   OT extension §4) and every baseline (exact Hungarian, exact SSP OT,
+//!   Sinkhorn, greedy), over [`core`] domain types.
+//! * [`runtime`] — PJRT execution of the AOT-compiled XLA artifacts
+//!   produced by `python/compile/aot.py` (JAX model + Pallas kernels); the
+//!   "GPU implementation" analog of the paper on this CPU-only testbed.
+//! * [`coordinator`] — the serving layer: job router, batcher, worker pool
+//!   and metrics, so OT solves are consumable as a service.
+//! * [`exp`] — harnesses that regenerate the paper's Figure 1 / Figure 2
+//!   series and the analytical ablations (see DESIGN.md §4).
+//!
+//! See `examples/quickstart.rs` for the 20-line tour.
+
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod exp;
+pub mod runtime;
+pub mod solvers;
+pub mod util;

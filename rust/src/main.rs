@@ -1,0 +1,380 @@
+//! `otpr` — CLI for the push-relabel OT reproduction.
+//!
+//! Subcommands:
+//!   solve     solve one assignment instance (choose workload + engine)
+//!   ot        solve one OT instance with random masses
+//!   serve     run the coordinator service on a synthetic job stream
+//!   fig1      regenerate Figure 1 (runtime vs n, synthetic points)
+//!   fig2      regenerate Figure 2 (runtime vs ε, MNIST-style images)
+//!   ablation  analytical ablations A1–A6 (see DESIGN.md §4)
+//!   validate  certify solver output against exact baselines + invariants
+//!   info      environment/artifact status
+
+use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind};
+use otpr::core::OtprError;
+use otpr::data::workloads::Workload;
+use otpr::exp::report::{figure_csv, figure_table};
+use otpr::exp::{ablation, fig1, fig2};
+use otpr::runtime::{XlaAssignment, XlaRuntime};
+use otpr::solvers::ot_push_relabel::OtPushRelabel;
+use otpr::solvers::parallel_pr::ParallelPushRelabel;
+use otpr::solvers::push_relabel::PushRelabel;
+use otpr::solvers::sinkhorn::Sinkhorn;
+use otpr::solvers::{hungarian::Hungarian, ssp_ot::SspExactOt};
+use otpr::solvers::{AssignmentSolver, OtSolver};
+use otpr::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = match Args::parse_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("solve") => cmd_solve(&args),
+        Some("ot") => cmd_ot(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("fig1") => cmd_fig1(&args),
+        Some("fig2") => cmd_fig2(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            print_usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "otpr — push-relabel additive approximation for optimal transport\n\
+         usage: otpr <solve|ot|serve|fig1|fig2|ablation|validate|info> [--options]\n\
+         common options: --n N --eps E --seed S --engine (native|parallel|xla|sinkhorn|auto)\n\
+         see README.md for the full matrix"
+    );
+}
+
+fn registry(args: &Args) -> Option<Arc<XlaRuntime>> {
+    if args.flag("no-artifacts") {
+        return None;
+    }
+    match XlaRuntime::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("note: artifacts unavailable ({e}); XLA engines disabled");
+            None
+        }
+    }
+}
+
+fn workload(args: &Args, n: usize) -> Workload {
+    match args.get_or("workload", "fig1") {
+        "fig2" | "images" => Workload::Fig2 { n },
+        "random" => Workload::RandomCosts { n },
+        "clustered" => Workload::Clustered { n, k: 8, sigma: 0.05 },
+        _ => Workload::Fig1 { n },
+    }
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let n = args.usize_or("n", 1000);
+    let eps = args.f64_or("eps", 0.1);
+    let seed = args.u64_or("seed", 42);
+    let engine = args.get_or("engine", "native");
+    let inst = workload(args, n).assignment(seed);
+    let result = match engine {
+        "native" | "seq" => PushRelabel::new().solve_with_param(&inst, eps),
+        "parallel" => ParallelPushRelabel::default().solve_with_param(&inst, eps),
+        "xla" | "gpu" => match registry(args) {
+            Some(reg) => XlaAssignment::new(reg).solve_costs(&inst, eps),
+            None => Err(OtprError::Artifact("no artifacts".into())),
+        },
+        other => {
+            eprintln!("unknown engine {other}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(sol) => {
+            println!(
+                "n={n} eps={eps} engine={engine}: cost={:.6} phases={} rounds={} time={:.3}s",
+                sol.cost, sol.stats.phases, sol.stats.rounds, sol.stats.seconds
+            );
+            if args.flag("exact") {
+                let ex = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+                let c_max = inst.costs.max() as f64;
+                println!(
+                    "exact={:.6} additive-error={:.6} (guarantee 3εn·c_max = {:.6})",
+                    ex.cost,
+                    sol.cost - ex.cost,
+                    3.0 * eps * n as f64 * c_max
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("solve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_ot(args: &Args) -> i32 {
+    let n = args.usize_or("n", 200);
+    let eps = args.f64_or("eps", 0.1);
+    let seed = args.u64_or("seed", 42);
+    let inst = workload(args, n).ot_with_random_masses(seed);
+    let engine = args.get_or("engine", "pr");
+    let result = match engine {
+        "pr" | "native" => OtPushRelabel::new().solve_ot(&inst, eps),
+        "sinkhorn" => Sinkhorn::log_domain().solve_ot(&inst, eps),
+        "exact" => SspExactOt::default().solve_ot(&inst, eps),
+        other => {
+            eprintln!("unknown OT engine {other}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(sol) => {
+            println!(
+                "OT n={n} eps={eps} engine={engine}: cost={:.6} phases={} support={} time={:.3}s {}",
+                sol.cost,
+                sol.stats.phases,
+                sol.plan.support_size(),
+                sol.stats.seconds,
+                sol.stats.notes.join(" ")
+            );
+            if args.flag("exact") && engine != "exact" {
+                let ex = SspExactOt::default().solve_ot(&inst, 0.0).unwrap();
+                println!(
+                    "exact={:.6} additive-error={:.6} (guarantee ε·c_max = {:.6})",
+                    ex.cost,
+                    sol.cost - ex.cost,
+                    eps * inst.costs.max() as f64
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("OT solve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let jobs = args.usize_or("jobs", 32);
+    let workers = args.usize_or("workers", 4);
+    let n = args.usize_or("n", 200);
+    let eps = args.f64_or("eps", 0.2);
+    let engine = Engine::parse(args.get_or("engine", "auto")).unwrap_or(Engine::Auto);
+    let reg = registry(args);
+    println!("coordinator: {workers} workers, {jobs} jobs of n={n} (engine={})", engine.name());
+    let coord = Coordinator::start(CoordinatorConfig { workers, ..Default::default() }, reg);
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            let kind = JobKind::Assignment(workload(args, n).assignment(i as u64));
+            coord.submit(kind, eps, engine).expect("submit")
+        })
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        match h.wait() {
+            Ok(out) if out.result.is_ok() => ok += 1,
+            Ok(out) => eprintln!("job {} failed: {:?}", out.id, out.result.err()),
+            Err(e) => eprintln!("join error: {e}"),
+        }
+    }
+    println!("{ok}/{jobs} jobs succeeded\n{}", coord.metrics.snapshot());
+    coord.shutdown();
+    if ok == jobs {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_fig1(args: &Args) -> i32 {
+    let cfg = fig1::Fig1Config {
+        sizes: args.list_usize("sizes", &[500, 1000, 2000]),
+        eps: args.list_f64("eps", &[0.1, 0.01, 0.005]),
+        reps: args.usize_or("reps", 3),
+        seed: args.u64_or("seed", 42),
+        max_secs_per_run: args.f64_or("max-secs", 120.0),
+        engines: args
+            .get("engines")
+            .map(|s| s.split(',').map(String::from).collect())
+            .unwrap_or_else(|| fig1::Fig1Config::default().engines),
+    };
+    let reg = registry(args);
+    for &eps in &cfg.eps {
+        let series = fig1::run_eps(&cfg, eps, reg.clone());
+        println!(
+            "{}",
+            figure_table(&format!("Figure 1 — runtime (s) vs n, ε = {eps}"), "n", &series)
+        );
+        if args.flag("csv") {
+            println!("{}", figure_csv("n", &series));
+        }
+    }
+    0
+}
+
+fn cmd_fig2(args: &Args) -> i32 {
+    let cfg = fig2::Fig2Config {
+        n: args.usize_or("n", 1000),
+        eps: args.list_f64("eps", &[0.75, 0.5, 0.25, 0.1]),
+        reps: args.usize_or("reps", 3),
+        seed: args.u64_or("seed", 7),
+        engines: args
+            .get("engines")
+            .map(|s| s.split(',').map(String::from).collect())
+            .unwrap_or_else(|| fig2::Fig2Config::default().engines),
+    };
+    let reg = registry(args);
+    let (series, real) = fig2::run(&cfg, reg);
+    let src = if real { "real MNIST" } else { "synthetic MNIST-like" };
+    println!(
+        "{}",
+        figure_table(&format!("Figure 2 — runtime (s) vs ε, n = {} ({src})", cfg.n), "eps", &series)
+    );
+    if args.flag("csv") {
+        println!("{}", figure_csv("eps", &series));
+    }
+    0
+}
+
+fn cmd_ablation(args: &Args) -> i32 {
+    let which = args.get_or("which", "all");
+    let seed = args.u64_or("seed", 42);
+    let n = args.usize_or("n", 300);
+    if which == "phases" || which == "all" {
+        let series =
+            ablation::phases_vs_eps(n, &args.list_f64("eps", &[0.3, 0.2, 0.1, 0.05, 0.02]), seed);
+        println!("{}", figure_table("A1 — phases vs ε (bound: (1+2ε)/ε²)", "eps", &series));
+    }
+    if which == "rounds" || which == "all" {
+        let series =
+            ablation::rounds_vs_n(&args.list_usize("sizes", &[64, 128, 256, 512, 1024]), 0.1, seed);
+        println!("{}", figure_table("A2 — propose-accept rounds/phase vs n", "n", &series));
+    }
+    if which == "accuracy" || which == "all" {
+        let series =
+            ablation::accuracy(n.min(500), &args.list_f64("eps", &[0.3, 0.1, 0.05, 0.02]), seed);
+        println!("{}", figure_table("A3 — additive error vs guarantee", "eps", &series));
+        let series = ablation::ot_accuracy(40, &[0.4, 0.2, 0.1], seed);
+        println!("{}", figure_table("A3b — OT additive error", "eps", &series));
+    }
+    if which == "clusters" || which == "all" {
+        let series = ablation::clusters(&args.list_usize("sizes", &[20, 50, 100, 200]), 0.2, seed);
+        println!("{}", figure_table("A4 — max dual clusters (Lemma 4.1 bound: 2)", "n", &series));
+    }
+    if which == "sinkhorn-stability" || which == "all" {
+        let series = ablation::sinkhorn_stability(
+            n.min(200),
+            &args.list_f64("eps", &[0.5, 0.1, 0.01, 0.001]),
+            seed,
+        );
+        println!("{}", figure_table("A5 — Sinkhorn stability (std vs log-domain)", "eps", &series));
+    }
+    if which == "threads" || which == "all" {
+        let series =
+            ablation::threads(n.max(512), 0.05, &args.list_usize("threads", &[1, 2, 4, 8]), seed);
+        println!("{}", figure_table("A6 — parallel solver scaling", "threads", &series));
+    }
+    if which == "complexity" || which == "all" {
+        let (k, r2) = ablation::complexity_exponent(
+            &args.list_usize("sizes", &[128, 256, 512, 1024]),
+            0.1,
+            seed,
+        );
+        println!("## A7 — sequential time ~ n^k at fixed ε\n\nk = {k:.2} (r² = {r2:.3}); paper bound: k = 2\n");
+    }
+    0
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let n = args.usize_or("n", 100);
+    let eps = args.f64_or("eps", 0.1);
+    let seed = args.u64_or("seed", 42);
+    let mut failures = 0;
+    println!("validating push-relabel against exact baselines (n={n}, eps={eps}, seed={seed})");
+    for (name, wl) in [
+        ("fig1", Workload::Fig1 { n }),
+        ("random", Workload::RandomCosts { n }),
+        ("fig2", Workload::Fig2 { n }),
+    ] {
+        let inst = wl.assignment(seed);
+        let c_max = inst.costs.max() as f64;
+        let pr = PushRelabel { paranoid: true }.solve_with_param(&inst, eps).unwrap();
+        let ex = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+        let budget = 3.0 * eps * n as f64 * c_max;
+        let err = pr.cost - ex.cost;
+        let ok = err <= budget + 1e-9;
+        println!(
+            "  {name:<9} pr={:.5} exact={:.5} err={:.5} budget={:.5} [{}]",
+            pr.cost,
+            ex.cost,
+            err,
+            budget,
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    // OT spot-check
+    let inst = Workload::Fig1 { n: n.min(60) }.ot_with_random_masses(seed);
+    let pr = OtPushRelabel { paranoid: true }.solve_ot(&inst, eps).unwrap();
+    let ex = SspExactOt::default().solve_ot(&inst, 0.0).unwrap();
+    let budget = eps * inst.costs.max() as f64;
+    let err = pr.cost - ex.cost;
+    let ok = err <= budget + 1e-9;
+    println!(
+        "  ot        pr={:.5} exact={:.5} err={:.5} budget={:.5} [{}]",
+        pr.cost,
+        ex.cost,
+        err,
+        budget,
+        if ok { "OK" } else { "FAIL" }
+    );
+    if !ok {
+        failures += 1;
+    }
+    if failures == 0 {
+        println!("all validations passed");
+        0
+    } else {
+        eprintln!("{failures} validation(s) FAILED");
+        1
+    }
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("otpr {} — push-relabel OT reproduction", env!("CARGO_PKG_VERSION"));
+    println!("threads available: {}", otpr::util::pool::default_threads());
+    match registry(args) {
+        Some(reg) => {
+            println!(
+                "artifacts: {} specs, sizes {:?} (dir {})",
+                reg.registry.specs.len(),
+                reg.registry.sizes,
+                reg.registry.dir.display()
+            );
+        }
+        None => println!("artifacts: none (run `make artifacts`)"),
+    }
+    match registry(args)
+        .ok_or_else(|| otpr::core::OtprError::Runtime("no runtime".into()))
+        .and_then(|r| r.call(|ctx| Ok((ctx.client.platform_name(), ctx.client.device_count()))))
+    {
+        Ok((platform, devices)) => println!("pjrt: platform={platform} devices={devices}"),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    0
+}

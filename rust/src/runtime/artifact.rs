@@ -1,0 +1,155 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into Send+Sync spec data. Compiled executables
+//! are `!Send`, so the compile cache lives in the service thread's
+//! [`crate::runtime::client::XlaContext`], not here.
+
+use crate::core::error::{OtprError, Result};
+use crate::util::minijson::Json;
+use std::path::{Path, PathBuf};
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Family: "phase_step", "cost_euclid", "cost_l1", "quantize",
+    /// "sinkhorn_step".
+    pub kind: String,
+    pub n: usize,
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// Registry over a manifest directory (pure data; Send + Sync).
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+    /// Sizes available, ascending.
+    pub sizes: Vec<usize>,
+}
+
+impl ArtifactRegistry {
+    /// Default artifact directory: `OTPR_ARTIFACTS` env or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("OTPR_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Self::open(&Self::default_dir())
+    }
+
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            OtprError::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let json = Json::parse(&text).map_err(OtprError::Artifact)?;
+        let mut specs = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| OtprError::Artifact("manifest missing artifacts".into()))?
+        {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| OtprError::Artifact(format!("artifact missing {k}")))?
+                    .to_string())
+            };
+            let names = |k: &str| -> Vec<String> {
+                a.get(k)
+                    .and_then(|v| v.as_arr())
+                    .map(|arr| {
+                        arr.iter().filter_map(|x| x.as_str().map(String::from)).collect()
+                    })
+                    .unwrap_or_default()
+            };
+            specs.push(ArtifactSpec {
+                name: get_str("name")?,
+                kind: get_str("kind")?,
+                n: a.get("n")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| OtprError::Artifact("artifact missing n".into()))?,
+                file: get_str("file")?,
+                inputs: names("inputs"),
+                outputs: names("outputs"),
+            });
+        }
+        let mut sizes: Vec<usize> = json
+            .get("sizes")
+            .and_then(|v| v.as_arr())
+            .map(|arr| arr.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        sizes.sort_unstable();
+        Ok(Self { dir: dir.to_path_buf(), specs, sizes })
+    }
+
+    /// Smallest artifact size that fits an instance of `n` (router bucket).
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.sizes.iter().copied().find(|&s| s >= n).ok_or_else(|| {
+            OtprError::Artifact(format!(
+                "no artifact bucket ≥ {n} (available: {:?})",
+                self.sizes
+            ))
+        })
+    }
+
+    pub fn spec(&self, kind: &str, n: usize) -> Result<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.kind == kind && s.n == n)
+            .ok_or_else(|| OtprError::Artifact(format!("no artifact {kind}_{n} in manifest")))
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("otpr_art_test1");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"sizes":[256,512],"artifacts":[
+                {"name":"phase_step_256","kind":"phase_step","n":256,
+                 "file":"phase_step_256.hlo.txt","inputs":["cq"],"outputs":["ya"]}
+            ]}"#,
+        );
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.sizes, vec![256, 512]);
+        let s = reg.spec("phase_step", 256).unwrap();
+        assert_eq!(s.inputs, vec!["cq"]);
+        assert!(reg.spec("phase_step", 123).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bucket_routing() {
+        let dir = std::env::temp_dir().join("otpr_art_test2");
+        write_manifest(&dir, r#"{"version":1,"sizes":[512,256,1024],"artifacts":[]}"#);
+        let reg = ArtifactRegistry::open(&dir).unwrap();
+        assert_eq!(reg.bucket_for(1).unwrap(), 256);
+        assert_eq!(reg.bucket_for(256).unwrap(), 256);
+        assert_eq!(reg.bucket_for(257).unwrap(), 512);
+        assert_eq!(reg.bucket_for(1000).unwrap(), 1024);
+        assert!(reg.bucket_for(5000).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly() {
+        let err = ArtifactRegistry::open(Path::new("/nonexistent/otpr")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,229 @@
+//! PJRT access layer.
+//!
+//! The `xla` crate's `PjRtClient`/`PjRtLoadedExecutable`/`PjRtBuffer` are
+//! `!Send` (they hold `Rc`s over the C handles), so all device interaction
+//! runs on one dedicated **service thread** ([`XlaService`]): callers ship
+//! `'static + Send` closures in, the closure runs with an [`XlaContext`]
+//! (client + compile cache), and only plain `Send` data (Vec<i32>, stats)
+//! comes back. This serializes device work — faithful to the single-device
+//! setup the paper's GPU implementation assumes — while the rest of the
+//! coordinator stays multi-threaded.
+
+use crate::core::error::{OtprError, Result};
+use crate::runtime::artifact::ArtifactRegistry;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+/// State owned by the service thread.
+pub struct XlaContext {
+    pub client: xla::PjRtClient,
+    pub registry: Arc<ArtifactRegistry>,
+    cache: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaContext {
+    /// Load + compile (cached) the artifact `kind` at bucket size `n`.
+    pub fn executable(&mut self, kind: &str, n: usize) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let spec = self.registry.spec(kind, n)?.clone();
+        if let Some(exe) = self.cache.get(&spec.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.registry.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| OtprError::Artifact("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.insert(spec.name.clone(), exe.clone());
+        crate::log_debug!("compiled artifact {}", spec.name);
+        Ok(exe)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Upload an i32 tensor. Uses `buffer_from_host_buffer` — NOT
+    /// `buffer_from_host_literal`, whose buffers come back from `execute_b`
+    /// with corrupted physical sizes in xla_extension 0.5.1.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// Download a device buffer as Vec<i32>.
+///
+/// Goes through `to_literal_sync` — `copy_raw_to_host_sync` returns
+/// "CopyRawToHost not implemented" on the 0.5.1 CPU client.
+pub fn download_i32(buf: &xla::PjRtBuffer, len: usize) -> Result<Vec<i32>> {
+    let lit = buf.to_literal_sync()?;
+    let out = lit.to_vec::<i32>()?;
+    debug_assert_eq!(out.len(), len);
+    Ok(out)
+}
+
+/// Download a device buffer as Vec<f32>.
+pub fn download_f32(buf: &xla::PjRtBuffer, len: usize) -> Result<Vec<f32>> {
+    let lit = buf.to_literal_sync()?;
+    let out = lit.to_vec::<f32>()?;
+    debug_assert_eq!(out.len(), len);
+    Ok(out)
+}
+
+/// Run a single-output executable on buffers, returning the output buffer.
+/// All artifacts are lowered untupled with exactly one array result (see
+/// python/compile/aot.py), so `outs[0][0]` is a plain feed-back-able buffer.
+pub fn run1(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<xla::PjRtBuffer> {
+    let mut outs = exe.execute_b(args)?;
+    if outs.is_empty() || outs[0].is_empty() {
+        return Err(OtprError::Runtime("executable produced no outputs".into()));
+    }
+    Ok(outs.remove(0).remove(0))
+}
+
+type ServiceJob = Box<dyn FnOnce(&mut XlaContext) + Send>;
+
+/// Dedicated device thread; see module docs.
+pub struct XlaService {
+    tx: Sender<ServiceJob>,
+}
+
+impl XlaService {
+    pub fn start(registry: Arc<ArtifactRegistry>) -> Result<Self> {
+        let (tx, rx) = channel::<ServiceJob>();
+        let (init_tx, init_rx) = channel::<std::result::Result<(), String>>();
+        std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                let _ = init_tx.send(Ok(()));
+                let mut ctx = XlaContext { client, registry, cache: HashMap::new() };
+                while let Ok(job) = rx.recv() {
+                    job(&mut ctx);
+                }
+            })
+            .map_err(|e| OtprError::Runtime(format!("spawn xla-service: {e}")))?;
+        init_rx
+            .recv()
+            .map_err(|_| OtprError::Runtime("xla-service died during init".into()))?
+            .map_err(OtprError::Runtime)?;
+        Ok(Self { tx })
+    }
+
+    /// Run `f` on the service thread and wait for its result.
+    pub fn call<T, F>(&self, f: F) -> Result<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(&mut XlaContext) -> Result<T> + Send + 'static,
+    {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Box::new(move |ctx| {
+                let _ = reply_tx.send(f(ctx));
+            }))
+            .map_err(|_| OtprError::Runtime("xla-service is down".into()))?;
+        reply_rx.recv().map_err(|_| OtprError::Runtime("xla-service dropped the job".into()))?
+    }
+}
+
+/// Registry + service bundle — the handle the rest of the crate passes
+/// around (Send + Sync; all !Send state lives behind the service thread).
+pub struct XlaRuntime {
+    pub registry: Arc<ArtifactRegistry>,
+    service: XlaService,
+}
+
+impl XlaRuntime {
+    pub fn open(dir: &std::path::Path) -> Result<Arc<Self>> {
+        let registry = Arc::new(ArtifactRegistry::open(dir)?);
+        let service = XlaService::start(registry.clone())?;
+        Ok(Arc::new(Self { registry, service }))
+    }
+
+    pub fn open_default() -> Result<Arc<Self>> {
+        Self::open(&ArtifactRegistry::default_dir())
+    }
+
+    pub fn call<T, F>(&self, f: F) -> Result<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(&mut XlaContext) -> Result<T> + Send + 'static,
+    {
+        self.service.call(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ArtifactRegistry;
+
+    fn empty_registry() -> Arc<ArtifactRegistry> {
+        let dir = std::env::temp_dir().join("otpr_svc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":2,"sizes":[],"artifacts":[]}"#,
+        )
+        .unwrap();
+        Arc::new(ArtifactRegistry::open(&dir).unwrap())
+    }
+
+    #[test]
+    fn service_roundtrips_buffers() {
+        let svc = XlaService::start(empty_registry()).unwrap();
+        let out = svc
+            .call(|ctx| {
+                let buf = ctx.upload_i32(&[1, 2, 3, 4, 5, 6], &[2, 3])?;
+                download_i32(&buf, 6)
+            })
+            .unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6]);
+        let out = svc
+            .call(|ctx| {
+                let buf = ctx.upload_f32(&[0.5, 1.5], &[2])?;
+                download_f32(&buf, 2)
+            })
+            .unwrap();
+        assert_eq!(out, vec![0.5, 1.5]);
+    }
+
+    #[test]
+    fn service_survives_job_errors() {
+        let svc = XlaService::start(empty_registry()).unwrap();
+        let err = svc.call(|ctx| ctx.executable("nope", 1).map(|_| ())).unwrap_err();
+        assert!(err.to_string().contains("no artifact"));
+        // still alive
+        let ok = svc.call(|_| Ok(42)).unwrap();
+        assert_eq!(ok, 42);
+    }
+
+    #[test]
+    fn calls_from_multiple_threads() {
+        let svc = std::sync::Arc::new(XlaService::start(empty_registry()).unwrap());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let svc = svc.clone();
+                s.spawn(move || {
+                    let v = svc.call(move |_| Ok(t * 10)).unwrap();
+                    assert_eq!(v, t * 10);
+                });
+            }
+        });
+    }
+}

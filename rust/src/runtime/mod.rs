@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts that `python/compile/aot.py`
+//! emitted (JAX model + Pallas kernels, AOT) and drives them with
+//! device-resident buffers on a dedicated service thread. This is the
+//! L3↔L2 boundary: Python never runs at request time.
+
+pub mod artifact;
+pub mod client;
+pub mod xla_assignment;
+pub mod xla_sinkhorn;
+
+pub use artifact::{ArtifactRegistry, ArtifactSpec};
+pub use client::{XlaRuntime, XlaService};
+pub use xla_assignment::XlaAssignment;
+pub use xla_sinkhorn::XlaSinkhorn;

@@ -1,0 +1,115 @@
+//! Device-resident Sinkhorn baseline over the `sinkhorn_step_{n}` artifact
+//! (the paper's "Sinkhorn-GPU" comparator on this testbed).
+//!
+//! Costs upload once; the packed (u, v, err) state chains through
+//! `execute_b` with a 4-byte host read per sweep for the stopping rule.
+//! Parameterization matches `solvers::sinkhorn` (η = ε·c_max/(4·ln n),
+//! stop at marginal violation ε/8) so native-vs-XLA comparisons are
+//! apples-to-apples.
+
+use crate::core::{OtInstance, OtprError, Result, TransportPlan};
+use crate::runtime::client::{download_f32, run1, XlaRuntime};
+use crate::solvers::sinkhorn::round_to_feasible;
+use crate::solvers::{OtSolution, OtSolver, SolveStats};
+use crate::util::timer::Stopwatch;
+use std::sync::Arc;
+
+pub struct XlaSinkhorn {
+    pub runtime: Arc<XlaRuntime>,
+    pub max_iters: usize,
+}
+
+impl XlaSinkhorn {
+    pub fn new(runtime: Arc<XlaRuntime>) -> Self {
+        Self { runtime, max_iters: 100_000 }
+    }
+}
+
+impl OtSolver for XlaSinkhorn {
+    fn name(&self) -> &'static str {
+        "sinkhorn-xla"
+    }
+
+    fn solve_ot(&self, inst: &OtInstance, eps: f64) -> Result<OtSolution> {
+        let sw = Stopwatch::start();
+        let n = inst.costs.na;
+        if inst.costs.nb != n {
+            return Err(OtprError::InvalidInstance(
+                "xla sinkhorn requires square instances".into(),
+            ));
+        }
+        let bucket = self.runtime.registry.bucket_for(n)?;
+        // pad with zero-mass rows/cols and zero costs — inert under the
+        // scaling updates (u_pad = 0/Kv = 0) and invisible to the marginal
+        // error.
+        let padded = inst.costs.padded(bucket, bucket, 0.0);
+        let mut r = vec![0f32; bucket];
+        let mut c = vec![0f32; bucket];
+        for (i, &m) in inst.supply.iter().enumerate() {
+            r[i] = m as f32;
+        }
+        for (i, &m) in inst.demand.iter().enumerate() {
+            c[i] = m as f32;
+        }
+        let c_max = (inst.costs.max() as f64).max(1e-30);
+        let eta = (eps * c_max / (4.0 * (n.max(2) as f64).ln())).max(1e-12) as f32;
+        let tol = (eps / 8.0) as f32;
+        let max_iters = self.max_iters;
+        let padded_data: Vec<f32> = padded.as_slice().to_vec();
+
+        let (u, v, iters, notes) = self.runtime.call(move |ctx| {
+            let costs_buf = ctx.upload_f32(&padded_data, &[bucket, bucket])?;
+            let r_buf = ctx.upload_f32(&r, &[bucket])?;
+            let c_buf = ctx.upload_f32(&c, &[bucket])?;
+            let eta_buf = ctx.upload_f32(&[eta], &[1])?;
+            let exe = ctx.executable("sinkhorn_step", bucket)?;
+            // packed state rows: u=1, v=1, meta=0
+            let mut state = vec![1f32; 2 * bucket];
+            state.extend(std::iter::repeat(0f32).take(bucket));
+            let mut state_buf = ctx.upload_f32(&state, &[3, bucket])?;
+            let mut iters = 0usize;
+            let mut notes = Vec::new();
+            loop {
+                state_buf = run1(&exe, &[&costs_buf, &state_buf, &r_buf, &c_buf, &eta_buf])?;
+                iters += 1;
+                let state_host = download_f32(&state_buf, 3 * bucket)?;
+                let err = state_host[2 * bucket];
+                if !err.is_finite() {
+                    return Err(OtprError::Infeasible(format!(
+                        "xla sinkhorn diverged (underflow) at iter {iters}, eta={eta:.3e}"
+                    )));
+                }
+                if err < tol || iters >= max_iters {
+                    if iters >= max_iters {
+                        notes.push(format!("hit max_iters={max_iters} err={err}"));
+                    }
+                    break;
+                }
+            }
+            let full = download_f32(&state_buf, 3 * bucket)?;
+            Ok((full[..bucket].to_vec(), full[bucket..2 * bucket].to_vec(), iters, notes))
+        })?;
+
+        // Plan assembly + Altschuler rounding on the host (one O(n²) pass).
+        let mut plan = TransportPlan::zeros(n, n);
+        let eta = eta as f64;
+        for b in 0..n {
+            for a in 0..n {
+                let k = (-(inst.costs.at(b, a) as f64) / eta).exp();
+                plan.set(b, a, u[b] as f64 * k * v[a] as f64);
+            }
+        }
+        let plan = round_to_feasible(&plan, &inst.supply, &inst.demand);
+        let cost = plan.cost(&inst.costs);
+        Ok(OtSolution {
+            plan,
+            cost,
+            stats: SolveStats {
+                phases: iters,
+                seconds: sw.elapsed_secs(),
+                notes,
+                ..Default::default()
+            },
+        })
+    }
+}

@@ -1,0 +1,80 @@
+//! Greedy baseline: each supply vertex takes its cheapest available demand
+//! vertex. No approximation guarantee — used as a cost/runtime floor in the
+//! ablation benches and as a smoke baseline in tests.
+
+use crate::core::matching::Matching;
+use crate::core::{AssignmentInstance, Result};
+use crate::solvers::{AssignmentSolution, AssignmentSolver, SolveStats};
+use crate::util::timer::Stopwatch;
+
+#[derive(Debug, Clone, Default)]
+pub struct GreedyMatcher;
+
+impl AssignmentSolver for GreedyMatcher {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn solve_assignment(&self, inst: &AssignmentInstance, _eps: f64) -> Result<AssignmentSolution> {
+        let sw = Stopwatch::start();
+        let n = inst.n();
+        let mut m = Matching::empty(n, n);
+        let mut taken = vec![false; n];
+        for b in 0..n {
+            let row = inst.costs.row(b);
+            let mut best = usize::MAX;
+            let mut best_c = f32::INFINITY;
+            for (a, &c) in row.iter().enumerate() {
+                if !taken[a] && c < best_c {
+                    best = a;
+                    best_c = c;
+                }
+            }
+            if best != usize::MAX {
+                taken[best] = true;
+                m.link(b, best);
+            }
+        }
+        let cost = m.cost(&inst.costs);
+        Ok(AssignmentSolution {
+            matching: m,
+            cost,
+            stats: SolveStats { seconds: sw.elapsed_secs(), ..Default::default() },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CostMatrix;
+    use crate::data::workloads::Workload;
+    use crate::solvers::hungarian::Hungarian;
+
+    #[test]
+    fn perfect_and_consistent() {
+        let i = Workload::Fig1 { n: 25 }.assignment(1);
+        let sol = GreedyMatcher.solve_assignment(&i, 0.0).unwrap();
+        assert!(sol.matching.is_perfect());
+        assert!(sol.matching.check_consistent().is_ok());
+    }
+
+    #[test]
+    fn never_beats_exact() {
+        for seed in 0..5 {
+            let i = Workload::RandomCosts { n: 12 }.assignment(seed);
+            let g = GreedyMatcher.solve_assignment(&i, 0.0).unwrap();
+            let h = Hungarian.solve_assignment(&i, 0.0).unwrap();
+            assert!(g.cost >= h.cost - 1e-9, "greedy {} < exact {}", g.cost, h.cost);
+        }
+    }
+
+    #[test]
+    fn picks_cheapest_first_row() {
+        let c = CostMatrix::from_vec(2, 2, vec![5.0, 1.0, 1.0, 5.0]).unwrap();
+        let i = AssignmentInstance::new(c).unwrap();
+        let sol = GreedyMatcher.solve_assignment(&i, 0.0).unwrap();
+        assert_eq!(sol.matching.match_b, vec![1, 0]);
+        assert!((sol.cost - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,90 @@
+//! Solvers: the paper's push-relabel algorithm (sequential, parallel, OT
+//! extension) plus every baseline the evaluation needs (exact Hungarian,
+//! exact min-cost-flow OT, Sinkhorn, greedy).
+
+pub mod greedy;
+pub mod lmr;
+pub mod hungarian;
+pub mod ot_push_relabel;
+pub mod parallel_pr;
+pub mod push_relabel;
+pub mod sinkhorn;
+pub mod ssp_ot;
+
+use crate::core::{AssignmentInstance, Matching, OtInstance, Result, TransportPlan};
+
+/// Counters reported by every solve — the material for EXPERIMENTS.md.
+#[derive(Debug, Clone, Default)]
+pub struct SolveStats {
+    /// Push-relabel phases (or Sinkhorn iterations) executed.
+    pub phases: usize,
+    /// Σ|B'| over phases — the quantity bounded by O(n/ε) in eq. (4).
+    pub total_free_processed: u64,
+    /// Propose–accept rounds (parallel solvers), Σ over phases.
+    pub rounds: usize,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// Free-form solver-specific notes (e.g. "underflow" for Sinkhorn).
+    pub notes: Vec<String>,
+}
+
+/// Result of an assignment solve.
+#[derive(Debug, Clone)]
+pub struct AssignmentSolution {
+    pub matching: Matching,
+    /// Total cost under the *original* (unrounded) cost matrix.
+    pub cost: f64,
+    pub stats: SolveStats,
+}
+
+/// Result of an OT solve.
+#[derive(Debug, Clone)]
+pub struct OtSolution {
+    pub plan: TransportPlan,
+    pub cost: f64,
+    pub stats: SolveStats,
+}
+
+/// An algorithm that solves the assignment problem to additive error
+/// `eps · n · c_max` (exact solvers ignore `eps`).
+pub trait AssignmentSolver {
+    fn name(&self) -> &'static str;
+    fn solve_assignment(&self, inst: &AssignmentInstance, eps: f64) -> Result<AssignmentSolution>;
+}
+
+/// An algorithm that computes a transport plan with cost within
+/// `eps · c_max` of optimal (exact solvers ignore `eps`).
+pub trait OtSolver {
+    fn name(&self) -> &'static str;
+    fn solve_ot(&self, inst: &OtInstance, eps: f64) -> Result<OtSolution>;
+}
+
+/// Convert a perfect matching into the uniform-mass transport plan it
+/// induces (each matched edge carries 1/n mass).
+pub fn matching_to_plan(m: &Matching) -> TransportPlan {
+    let n = m.nb();
+    let mut plan = TransportPlan::zeros(m.nb(), m.na());
+    let unit = 1.0 / n as f64;
+    for (b, &a) in m.match_b.iter().enumerate() {
+        if a >= 0 {
+            plan.add(b, a as usize, unit);
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matching_to_plan_uniform() {
+        let mut m = Matching::empty(2, 2);
+        m.link(0, 1);
+        m.link(1, 0);
+        let p = matching_to_plan(&m);
+        assert!((p.at(0, 1) - 0.5).abs() < 1e-12);
+        assert!((p.at(1, 0) - 0.5).abs() < 1e-12);
+        assert!((p.total_mass() - 1.0).abs() < 1e-12);
+    }
+}

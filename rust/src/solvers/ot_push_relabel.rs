@@ -1,0 +1,507 @@
+//! Push-relabel OT solver (paper §4): scale masses by θ = 4n/ε, round
+//! demands up / supplies down to integer units, and run the unbalanced
+//! matching algorithm over the *conceptual* unit copies — without ever
+//! materializing them.
+//!
+//! Copy compression relies on two structural facts the paper proves:
+//!
+//! * free copies of a supply vertex b are kept at the maximum dual among
+//!   b's copies (the §4 speed-up invariant), so they form one cluster with
+//!   a single dual `y_free[b]`;
+//! * Lemma 4.1: copies of any vertex carry at most **two** distinct dual
+//!   values at any time, so the matched copies of a demand vertex a are
+//!   grouped into ≤ 2 [`AClass`] clusters (dual value → copy count →
+//!   partner multiset). The per-phase scan is then O(na · |B'|) over
+//!   original vertices, giving the paper's O(n²/ε²) total (Theorem 4.2).
+//!
+//! Error budget at target ε (additive ε·c_max on unit total mass):
+//! mass rounding ≤ ε/4 + matching at ε_m = ε/6 contributes 3·ε_m = ε/2
+//! + residual supply shipped greedily ≤ ε/4.
+
+use crate::core::{CostMatrix, OtInstance, OtprError, QuantizedCosts, Result, ScaledOtInstance, TransportPlan};
+use crate::solvers::{OtSolution, OtSolver, SolveStats};
+use crate::util::timer::Stopwatch;
+use std::collections::BTreeMap;
+
+/// A cluster of matched copies of demand vertex `a` sharing dual `y`.
+#[derive(Debug, Clone)]
+struct AClass {
+    /// Dual value (units, ≤ 0).
+    y: i32,
+    /// Number of matched a-copies in this cluster.
+    count: u64,
+    /// Partner multiset: supply vertex b → units matched to it.
+    flow: BTreeMap<u32, u64>,
+}
+
+/// Pending M' match recorded during the greedy step.
+#[derive(Debug, Clone, Copy)]
+struct NewMatch {
+    a: usize,
+    /// Dual of the a-copies *before* the phase's relabel.
+    y_pre: i32,
+    b: usize,
+    units: u64,
+}
+
+/// Solver state over original vertices + clusters.
+pub struct OtPrState {
+    pub q: QuantizedCosts,
+    /// Free demand units per a (these copies have dual 0).
+    a_free: Vec<u64>,
+    /// Matched demand clusters per a (≤ 2 by Lemma 4.1).
+    a_classes: Vec<Vec<AClass>>,
+    /// Free supply units per b.
+    b_free: Vec<u64>,
+    /// Dual of b's free copies (= max dual among b's copies).
+    y_free: Vec<i32>,
+    pub total_supply_units: u64,
+    pub phases: usize,
+    pub total_free_processed: u64,
+    /// Largest number of simultaneous clusters on any vertex (A4 ablation;
+    /// Lemma 4.1 says this never exceeds 2).
+    pub max_classes_seen: usize,
+}
+
+impl OtPrState {
+    pub fn new(costs: &CostMatrix, scaled: &ScaledOtInstance, eps_match: f64) -> Self {
+        let q = QuantizedCosts::new(costs, eps_match);
+        let total_supply_units = scaled.total_supply_units();
+        Self {
+            a_free: scaled.demand_units.clone(),
+            a_classes: vec![Vec::new(); costs.na],
+            b_free: scaled.supply_units.clone(),
+            y_free: vec![1; costs.nb],
+            q,
+            total_supply_units,
+            phases: 0,
+            total_free_processed: 0,
+            max_classes_seen: 0,
+        }
+    }
+
+    pub fn free_units(&self) -> u64 {
+        self.b_free.iter().sum()
+    }
+
+    fn threshold(&self) -> u64 {
+        (self.q.eps * self.total_supply_units as f64).floor() as u64
+    }
+
+    /// One phase over unit copies. Returns false when terminated.
+    pub fn run_phase(&mut self) -> bool {
+        let free_now = self.free_units();
+        if free_now <= self.threshold() {
+            return false;
+        }
+        self.phases += 1;
+        self.total_free_processed += free_now;
+        let na = self.q.na;
+
+        // Budget = free units at phase start (evicted units arriving during
+        // the phase join b_free but not this phase's B').
+        let budgets: Vec<(usize, u64)> = (0..self.q.nb)
+            .filter(|&b| self.b_free[b] > 0)
+            .map(|b| (b, self.b_free[b]))
+            .collect();
+
+        let mut pending: Vec<NewMatch> = Vec::new();
+        let mut matched_of_b: Vec<u64> = vec![0; self.q.nb];
+
+        for &(b, budget) in &budgets {
+            let mut need = budget;
+            let yb = self.y_free[b];
+            let row = self.q.row(b);
+            for a in 0..na {
+                if need == 0 {
+                    break;
+                }
+                let cq1 = row[a] + 1;
+                // free a-copies (dual 0)
+                if yb == cq1 && self.a_free[a] > 0 {
+                    let take = need.min(self.a_free[a]);
+                    self.a_free[a] -= take;
+                    need -= take;
+                    pending.push(NewMatch { a, y_pre: 0, b, units: take });
+                }
+                if need == 0 {
+                    break;
+                }
+                // matched clusters (steal; evicts the victims' supply units)
+                let mut ci = 0;
+                while ci < self.a_classes[a].len() && need > 0 {
+                    let y_cls = self.a_classes[a][ci].y;
+                    if y_cls + yb == cq1 && self.a_classes[a][ci].count > 0 {
+                        let take = need.min(self.a_classes[a][ci].count);
+                        Self::steal_from_class(
+                            &mut self.a_classes[a][ci],
+                            take,
+                            &mut self.b_free,
+                        );
+                        need -= take;
+                        pending.push(NewMatch { a, y_pre: y_cls, b, units: take });
+                    }
+                    ci += 1;
+                }
+                self.a_classes[a].retain(|c| c.count > 0);
+            }
+            matched_of_b[b] = budget - need;
+            // Matched units leave b's free pool now so eviction bookkeeping
+            // stays exact (b_free may also have grown through evictions).
+            self.b_free[b] -= matched_of_b[b];
+        }
+
+        // Apply M': matched a-copies relabel down by 1 and join the cluster
+        // at y_pre − 1 with their new partner recorded.
+        for nm in &pending {
+            let new_y = nm.y_pre - 1;
+            let classes = &mut self.a_classes[nm.a];
+            let cls = match classes.iter_mut().find(|c| c.y == new_y) {
+                Some(c) => c,
+                None => {
+                    classes.push(AClass { y: new_y, count: 0, flow: BTreeMap::new() });
+                    classes.last_mut().unwrap()
+                }
+            };
+            cls.count += nm.units;
+            *cls.flow.entry(nm.b as u32).or_insert(0) += nm.units;
+        }
+        // Track cluster multiplicity (Lemma 4.1 check): distinct dual values
+        // among a's copies = matched clusters + (free copies at dual 0).
+        for a in 0..na {
+            let distinct =
+                self.a_classes[a].len() + usize::from(self.a_free[a] > 0);
+            self.max_classes_seen = self.max_classes_seen.max(distinct);
+            debug_assert!(
+                self.a_classes[a].len() <= 2,
+                "Lemma 4.1 violated at a={a}: {} matched clusters",
+                self.a_classes[a].len()
+            );
+        }
+
+        // Relabel: b's whose B'-budget wasn't fully matched move up. All of
+        // b's free copies share y_free (evicted copies are raised to the
+        // max — feasible because copies share b's cost row).
+        for &(b, budget) in &budgets {
+            if matched_of_b[b] < budget {
+                self.y_free[b] += 1;
+            }
+        }
+        true
+    }
+
+    fn steal_from_class(cls: &mut AClass, mut take: u64, b_free: &mut [u64]) {
+        cls.count -= take;
+        let mut emptied: Vec<u32> = Vec::new();
+        for (&b_old, units) in cls.flow.iter_mut() {
+            if take == 0 {
+                break;
+            }
+            let k = take.min(*units);
+            *units -= k;
+            take -= k;
+            // evicted copies of b_old become free (raised to y_free[b_old])
+            b_free[b_old as usize] += k;
+            if *units == 0 {
+                emptied.push(b_old);
+            }
+        }
+        debug_assert_eq!(take, 0, "class accounting out of sync");
+        for b_old in emptied {
+            cls.flow.remove(&b_old);
+        }
+    }
+
+    pub fn run_to_termination(&mut self) -> Result<()> {
+        let eps = self.q.eps;
+        let cap = (8.0 * (1.0 + 2.0 * eps) / (eps * eps)).ceil() as usize + 16;
+        while self.run_phase() {
+            if self.phases > cap {
+                return Err(OtprError::Infeasible(format!(
+                    "OT phase cap {cap} exceeded (bug)"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract the unit flow as a dense (b, a) matrix.
+    pub fn unit_flow(&self) -> Vec<u64> {
+        let mut flow = vec![0u64; self.q.nb * self.q.na];
+        for (a, classes) in self.a_classes.iter().enumerate() {
+            for cls in classes {
+                for (&b, &units) in &cls.flow {
+                    flow[b as usize * self.q.na + a] += units;
+                }
+            }
+        }
+        flow
+    }
+
+    /// Structural feasibility of the cluster state: counts consistent,
+    /// dual signs, ε-feasibility (2)/(3) of every cluster pair, and the
+    /// free-copies-at-max invariant. O(n²) — tests only.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        for b in 0..self.q.nb {
+            if self.y_free[b] < 0 {
+                return Err(format!("y_free[{b}] = {} < 0", self.y_free[b]));
+            }
+        }
+        for a in 0..self.q.na {
+            for cls in &self.a_classes[a] {
+                if cls.y > 0 {
+                    return Err(format!("matched a-class at a={a} has positive dual"));
+                }
+                let total: u64 = cls.flow.values().sum();
+                if total != cls.count {
+                    return Err(format!("class count mismatch at a={a}"));
+                }
+                // (3) for matched copies: implicit b-copy dual = cq − y_cls
+                // must not exceed y_free[b] (free copies are the max).
+                for (&b, _) in &cls.flow {
+                    let b = b as usize;
+                    let implied_yb = self.q.at(b, a) - cls.y;
+                    if implied_yb > self.y_free[b] {
+                        return Err(format!(
+                            "max-dual invariant violated: b={b} matched copy dual {} > y_free {}",
+                            implied_yb, self.y_free[b]
+                        ));
+                    }
+                }
+            }
+            // (2) for free b copies against free a copies (dual 0) and
+            // against matched clusters.
+            for b in 0..self.q.nb {
+                let cq1 = self.q.at(b, a) + 1;
+                if self.a_free[a] > 0 && self.b_free[b] > 0 && self.y_free[b] > cq1 {
+                    return Err(format!(
+                        "(2) violated free-free at (b={b},a={a}): y_free {} > cq+1 {cq1}",
+                        self.y_free[b]
+                    ));
+                }
+                if self.b_free[b] > 0 {
+                    for cls in &self.a_classes[a] {
+                        if cls.y + self.y_free[b] > cq1 {
+                            return Err(format!(
+                                "(2) violated free-b vs class at (b={b},a={a},y={})",
+                                cls.y
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The §4 OT solver. `eps` on the trait is the overall additive target
+/// (error ≤ eps · c_max for unit total mass).
+#[derive(Debug, Clone, Default)]
+pub struct OtPushRelabel {
+    /// Verify cluster invariants after every phase (tests only).
+    pub paranoid: bool,
+}
+
+impl OtPushRelabel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Solve with explicit mass-scaling ε and matching ε parameters.
+    pub fn solve_with_params(
+        &self,
+        inst: &OtInstance,
+        eps_mass: f64,
+        eps_match: f64,
+    ) -> Result<OtSolution> {
+        let sw = Stopwatch::start();
+        let scaled = ScaledOtInstance::build(inst, eps_mass);
+        let mut st = OtPrState::new(&inst.costs, &scaled, eps_match);
+        if self.paranoid {
+            loop {
+                let progressed = st.run_phase();
+                st.check_invariants().map_err(OtprError::Infeasible)?;
+                if !progressed {
+                    break;
+                }
+            }
+        } else {
+            st.run_to_termination()?;
+        }
+
+        // Completion: remaining free supply units go to any demand with
+        // residual unit capacity (first fit — the paper's "arbitrarily").
+        let mut flow = st.unit_flow();
+        let na = inst.costs.na;
+        let mut a_free = st.a_free.clone();
+        let mut cursor = 0usize;
+        for b in 0..inst.costs.nb {
+            let mut need = st.b_free[b];
+            while need > 0 {
+                while cursor < na && a_free[cursor] == 0 {
+                    cursor += 1;
+                }
+                if cursor == na {
+                    return Err(OtprError::Infeasible(
+                        "no demand capacity left for completion".into(),
+                    ));
+                }
+                let k = need.min(a_free[cursor]);
+                flow[b * na + cursor] += k;
+                a_free[cursor] -= k;
+                need -= k;
+            }
+        }
+
+        // Units → mass, then ship the sub-unit supply residuals into real
+        // remaining demand capacity (greedy by capacity; ≤ ε/4 mass total).
+        let mut plan = TransportPlan::zeros(inst.costs.nb, na);
+        let inv = 1.0 / scaled.theta;
+        for b in 0..inst.costs.nb {
+            for a in 0..na {
+                let f = flow[b * na + a];
+                if f > 0 {
+                    plan.set(b, a, f as f64 * inv);
+                }
+            }
+        }
+        let mut received = plan.demand_marginal();
+        for b in 0..inst.costs.nb {
+            let mut resid = scaled.supply_residual[b];
+            if resid <= 0.0 {
+                continue;
+            }
+            for a in 0..na {
+                let cap = inst.demand[a] - received[a];
+                if cap > 1e-15 {
+                    let k = resid.min(cap);
+                    plan.add(b, a, k);
+                    received[a] += k;
+                    resid -= k;
+                    if resid <= 1e-18 {
+                        break;
+                    }
+                }
+            }
+            // tiny float leftovers: dump on the last demand node
+            if resid > 0.0 {
+                plan.add(b, na - 1, resid);
+            }
+        }
+
+        let cost = plan.cost(&inst.costs);
+        Ok(OtSolution {
+            plan,
+            cost,
+            stats: SolveStats {
+                phases: st.phases,
+                total_free_processed: st.total_free_processed,
+                rounds: 0,
+                seconds: sw.elapsed_secs(),
+                notes: vec![format!("max_clusters={}", st.max_classes_seen)],
+            },
+        })
+    }
+}
+
+impl OtSolver for OtPushRelabel {
+    fn name(&self) -> &'static str {
+        "push-relabel-ot"
+    }
+
+    fn solve_ot(&self, inst: &OtInstance, eps: f64) -> Result<OtSolution> {
+        self.solve_with_params(inst, eps, eps / 6.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::workloads::Workload;
+    use crate::solvers::ssp_ot::SspExactOt;
+
+    fn check_additive(n: usize, seed: u64, eps: f64) {
+        let inst = Workload::Fig1 { n }.ot_with_random_masses(seed);
+        let sol = OtPushRelabel::new().solve_ot(&inst, eps).unwrap();
+        // feasibility: all supply shipped; demands may exceed by the unit
+        // rounding artifact ≤ 1/θ per node
+        let theta = 4.0 * n as f64 / eps;
+        sol.plan
+            .check(&inst.supply, &inst.demand, 2.0 / theta + 1e-9)
+            .unwrap();
+        let exact = SspExactOt::default().solve_ot(&inst, 0.0).unwrap();
+        let c_max = inst.costs.max() as f64;
+        assert!(
+            sol.cost <= exact.cost + eps * c_max + 1e-9,
+            "n={n} seed={seed}: pr-ot {} > exact {} + {}",
+            sol.cost,
+            exact.cost,
+            eps * c_max
+        );
+        assert!(sol.cost >= exact.cost - 2.0 * n as f64 / theta * c_max - 1e-9);
+    }
+
+    #[test]
+    fn additive_guarantee_uniform_sizes() {
+        for (n, eps) in [(8, 0.3), (16, 0.2), (24, 0.15)] {
+            check_additive(n, 7, eps);
+        }
+    }
+
+    #[test]
+    fn additive_guarantee_various_seeds() {
+        for seed in 0..4 {
+            check_additive(12, seed, 0.25);
+        }
+    }
+
+    #[test]
+    fn invariants_hold_every_phase() {
+        let inst = Workload::Fig1 { n: 10 }.ot_with_random_masses(3);
+        let sol = OtPushRelabel { paranoid: true }.solve_ot(&inst, 0.3).unwrap();
+        assert!(sol.cost.is_finite());
+    }
+
+    #[test]
+    fn lemma_4_1_cluster_bound() {
+        let inst = Workload::Fig1 { n: 20 }.ot_with_random_masses(5);
+        let scaled = ScaledOtInstance::build(&inst, 0.2);
+        let mut st = OtPrState::new(&inst.costs, &scaled, 0.2 / 6.0);
+        st.run_to_termination().unwrap();
+        assert!(
+            st.max_classes_seen <= 2,
+            "observed {} clusters, Lemma 4.1 bounds 2",
+            st.max_classes_seen
+        );
+    }
+
+    #[test]
+    fn uniform_masses_match_assignment_route() {
+        // uniform OT ≈ assignment optimum / n
+        let n = 12;
+        let inst = OtInstance::uniform(Workload::Fig1 { n }.costs(2)).unwrap();
+        let eps = 0.2;
+        let sol = OtPushRelabel::new().solve_ot(&inst, eps).unwrap();
+        let (_, exact_match, _, _) =
+            crate::solvers::hungarian::solve_exact(&inst.costs).unwrap();
+        let exact = exact_match / n as f64;
+        let c_max = inst.costs.max() as f64;
+        assert!(sol.cost <= exact + eps * c_max + 1e-9);
+    }
+
+    #[test]
+    fn all_supply_shipped() {
+        let inst = Workload::Fig1 { n: 15 }.ot_with_random_masses(9);
+        let sol = OtPushRelabel::new().solve_ot(&inst, 0.25).unwrap();
+        assert!((sol.plan.total_mass() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phases_reported() {
+        let inst = Workload::Fig1 { n: 10 }.ot_with_random_masses(1);
+        let sol = OtPushRelabel::new().solve_ot(&inst, 0.3).unwrap();
+        assert!(sol.stats.phases > 0);
+        assert!(sol.stats.notes[0].starts_with("max_clusters="));
+    }
+}

@@ -1,0 +1,372 @@
+//! Sinkhorn baseline (Cuturi 2013), parameterized for *additive* ε accuracy
+//! following Altschuler–Weed–Rigollet (NeurIPS 2017): regularization
+//! η = ε·c_max / (4·ln n) and marginal-violation stopping threshold
+//! ε/(8·c_max), followed by their rounding step so the returned plan is a
+//! *feasible* transport plan (like our solver's, unlike raw Sinkhorn output).
+//!
+//! Both the standard (exp-kernel) and log-domain updates are implemented;
+//! the standard one reproduces the numerical instability at small ε that
+//! the paper's §5 observes (ablation A5) — underflow of exp(-C/η) produces
+//! zero row sums and the solve aborts with a note.
+
+use crate::core::{OtInstance, OtprError, Result, TransportPlan};
+use crate::solvers::{OtSolution, OtSolver, SolveStats};
+use crate::util::timer::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct SinkhornConfig {
+    /// Explicit regularization; `None` derives η from ε per AWR'17.
+    pub eta: Option<f64>,
+    /// Hard iteration cap (each iteration is one u,v sweep).
+    pub max_iters: usize,
+    /// Use numerically-stable log-domain updates.
+    pub log_domain: bool,
+    /// Check the stopping criterion every this many iterations.
+    pub check_every: usize,
+}
+
+impl Default for SinkhornConfig {
+    fn default() -> Self {
+        Self { eta: None, max_iters: 100_000, log_domain: false, check_every: 10 }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Sinkhorn {
+    pub config: SinkhornConfig,
+}
+
+impl Sinkhorn {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn log_domain() -> Self {
+        Self { config: SinkhornConfig { log_domain: true, ..Default::default() } }
+    }
+
+    fn eta_for(&self, eps: f64, c_max: f64, n: usize) -> f64 {
+        self.config.eta.unwrap_or_else(|| {
+            let ln_n = (n.max(2) as f64).ln();
+            (eps * c_max / (4.0 * ln_n)).max(1e-12)
+        })
+    }
+}
+
+impl OtSolver for Sinkhorn {
+    fn name(&self) -> &'static str {
+        if self.config.log_domain {
+            "sinkhorn-log"
+        } else {
+            "sinkhorn"
+        }
+    }
+
+    fn solve_ot(&self, inst: &OtInstance, eps: f64) -> Result<OtSolution> {
+        let sw = Stopwatch::start();
+        let nb = inst.costs.nb;
+        let na = inst.costs.na;
+        let c_max = (inst.costs.max() as f64).max(1e-30);
+        let eta = self.eta_for(eps, c_max, nb.max(na));
+        let tol = eps / 8.0; // marginal L1 violation target (costs ≤ c_max)
+        let r = &inst.supply; // rows
+        let c = &inst.demand; // cols
+
+        let mut stats = SolveStats::default();
+        let plan = if self.config.log_domain {
+            solve_log_domain(inst, eta, tol, &self.config, &mut stats)?
+        } else {
+            solve_standard(inst, eta, tol, &self.config, &mut stats)?
+        };
+        // Altschuler rounding → exactly feasible plan.
+        let plan = round_to_feasible(&plan, r, c);
+        debug_assert!(plan.check(r, c, 1e-6).is_ok());
+        let cost = plan.cost(&inst.costs);
+        stats.seconds = sw.elapsed_secs();
+        Ok(OtSolution { plan, cost, stats })
+    }
+}
+
+fn solve_standard(
+    inst: &OtInstance,
+    eta: f64,
+    tol: f64,
+    cfg: &SinkhornConfig,
+    stats: &mut SolveStats,
+) -> Result<TransportPlan> {
+    let nb = inst.costs.nb;
+    let na = inst.costs.na;
+    let cm = inst.costs.as_slice();
+    // kernel K = exp(-C/eta), row-major (b, a)
+    let k: Vec<f64> = cm.iter().map(|&c| (-(c as f64) / eta).exp()).collect();
+    let mut u = vec![1.0f64; nb];
+    let mut v = vec![1.0f64; na];
+    let mut kv = vec![0.0f64; nb];
+    let mut ktu = vec![0.0f64; na];
+    for it in 0..cfg.max_iters {
+        // u = r ./ (K v)
+        for b in 0..nb {
+            let row = &k[b * na..(b + 1) * na];
+            let s: f64 = row.iter().zip(&v).map(|(&kk, &vv)| kk * vv).sum();
+            kv[b] = s;
+            u[b] = inst.supply[b] / s;
+        }
+        // v = c ./ (Kᵀ u)
+        ktu.iter_mut().for_each(|x| *x = 0.0);
+        for b in 0..nb {
+            let row = &k[b * na..(b + 1) * na];
+            let ub = u[b];
+            for a in 0..na {
+                ktu[a] += row[a] * ub;
+            }
+        }
+        for a in 0..na {
+            v[a] = inst.demand[a] / ktu[a];
+        }
+        stats.phases = it + 1;
+        let bad = u.iter().chain(v.iter()).any(|x| !x.is_finite());
+        if bad {
+            stats.notes.push(format!("numerical instability at iter {} (eta={eta:.3e})", it + 1));
+            return Err(OtprError::Infeasible(format!(
+                "sinkhorn diverged (underflow) at eta={eta:.3e}; use log-domain"
+            )));
+        }
+        if (it + 1) % cfg.check_every == 0 {
+            let err = marginal_violation(&k, &u, &v, &inst.supply, &inst.demand, nb, na);
+            if err < tol {
+                break;
+            }
+        }
+    }
+    let mut plan = TransportPlan::zeros(nb, na);
+    for b in 0..nb {
+        for a in 0..na {
+            plan.set(b, a, u[b] * k[b * na + a] * v[a]);
+        }
+    }
+    Ok(plan)
+}
+
+fn solve_log_domain(
+    inst: &OtInstance,
+    eta: f64,
+    tol: f64,
+    cfg: &SinkhornConfig,
+    stats: &mut SolveStats,
+) -> Result<TransportPlan> {
+    let nb = inst.costs.nb;
+    let na = inst.costs.na;
+    let cm = inst.costs.as_slice();
+    let log_r: Vec<f64> = inst.supply.iter().map(|&x| x.max(1e-300).ln()).collect();
+    let log_c: Vec<f64> = inst.demand.iter().map(|&x| x.max(1e-300).ln()).collect();
+    let mut f = vec![0.0f64; nb]; // f = eta * log u
+    let mut g = vec![0.0f64; na];
+    let mut buf = vec![0.0f64; na.max(nb)];
+    for it in 0..cfg.max_iters {
+        // f_b = eta*(log r_b - LSE_a((g_a - C_ba)/eta))
+        for b in 0..nb {
+            let row = &cm[b * na..(b + 1) * na];
+            for a in 0..na {
+                buf[a] = (g[a] - row[a] as f64) / eta;
+            }
+            f[b] = eta * (log_r[b] - lse(&buf[..na]));
+        }
+        // g_a = eta*(log c_a - LSE_b((f_b - C_ba)/eta))
+        for a in 0..na {
+            for b in 0..nb {
+                buf[b] = (f[b] - cm[b * na + a] as f64) / eta;
+            }
+            g[a] = eta * (log_c[a] - lse(&buf[..nb]));
+        }
+        stats.phases = it + 1;
+        if (it + 1) % cfg.check_every == 0 {
+            // marginal violation of P = exp((f+g-C)/eta)
+            let mut err = 0.0;
+            for b in 0..nb {
+                let row = &cm[b * na..(b + 1) * na];
+                let s: f64 =
+                    (0..na).map(|a| ((f[b] + g[a] - row[a] as f64) / eta).exp()).sum();
+                err += (s - inst.supply[b]).abs();
+            }
+            for a in 0..na {
+                let s: f64 = (0..nb)
+                    .map(|b| ((f[b] + g[a] - cm[b * na + a] as f64) / eta).exp())
+                    .sum();
+                err += (s - inst.demand[a]).abs();
+            }
+            if err < tol {
+                break;
+            }
+        }
+    }
+    let mut plan = TransportPlan::zeros(nb, na);
+    for b in 0..nb {
+        for a in 0..na {
+            plan.set(b, a, ((f[b] + g[a] - cm[b * na + a] as f64) / eta).exp());
+        }
+    }
+    Ok(plan)
+}
+
+#[inline]
+fn lse(xs: &[f64]) -> f64 {
+    let m = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    m + xs.iter().map(|&x| (x - m).exp()).sum::<f64>().ln()
+}
+
+fn marginal_violation(
+    k: &[f64],
+    u: &[f64],
+    v: &[f64],
+    r: &[f64],
+    c: &[f64],
+    nb: usize,
+    na: usize,
+) -> f64 {
+    let mut err = 0.0;
+    let mut col = vec![0.0f64; na];
+    for b in 0..nb {
+        let row = &k[b * na..(b + 1) * na];
+        let mut s = 0.0;
+        for a in 0..na {
+            let p = u[b] * row[a] * v[a];
+            s += p;
+            col[a] += p;
+        }
+        err += (s - r[b]).abs();
+    }
+    for a in 0..na {
+        err += (col[a] - c[a]).abs();
+    }
+    err
+}
+
+/// Altschuler et al. rounding (Algorithm 2): scale rows then columns down to
+/// the marginal caps, then add the rank-one completion of the deficiencies.
+/// The output satisfies the marginals exactly.
+pub fn round_to_feasible(p: &TransportPlan, r: &[f64], c: &[f64]) -> TransportPlan {
+    let nb = p.nb;
+    let na = p.na;
+    let mut q = TransportPlan::zeros(nb, na);
+    let rows = p.supply_marginal();
+    for b in 0..nb {
+        let scale = if rows[b] > r[b] && rows[b] > 0.0 { r[b] / rows[b] } else { 1.0 };
+        for a in 0..na {
+            q.set(b, a, p.at(b, a) * scale);
+        }
+    }
+    let cols = q.demand_marginal();
+    for a in 0..na {
+        let scale = if cols[a] > c[a] && cols[a] > 0.0 { c[a] / cols[a] } else { 1.0 };
+        if scale < 1.0 {
+            for b in 0..nb {
+                q.set(b, a, q.at(b, a) * scale);
+            }
+        }
+    }
+    let rows = q.supply_marginal();
+    let cols = q.demand_marginal();
+    let err_r: Vec<f64> = r.iter().zip(&rows).map(|(&w, &g)| (w - g).max(0.0)).collect();
+    let err_c: Vec<f64> = c.iter().zip(&cols).map(|(&w, &g)| (w - g).max(0.0)).collect();
+    let total: f64 = err_r.iter().sum();
+    if total > 1e-300 {
+        for b in 0..nb {
+            if err_r[b] == 0.0 {
+                continue;
+            }
+            for a in 0..na {
+                q.add(b, a, err_r[b] * err_c[a] / total);
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CostMatrix;
+    use crate::data::workloads::Workload;
+    use crate::solvers::hungarian;
+
+    fn uniform_inst(n: usize, seed: u64) -> OtInstance {
+        OtInstance::uniform(Workload::Fig1 { n }.costs(seed)).unwrap()
+    }
+
+    #[test]
+    fn produces_feasible_plan() {
+        let inst = uniform_inst(16, 1);
+        let sol = Sinkhorn::new().solve_ot(&inst, 0.25).unwrap();
+        sol.plan.check(&inst.supply, &inst.demand, 1e-6).unwrap();
+        assert!(sol.cost > 0.0);
+        assert!(sol.stats.phases > 0);
+    }
+
+    #[test]
+    fn accuracy_close_to_exact() {
+        // exact OT for uniform masses == assignment optimum / n
+        let inst = uniform_inst(12, 2);
+        let (_, exact_cost, _, _) = hungarian::solve_exact(&inst.costs).unwrap();
+        let exact = exact_cost / 12.0;
+        let eps = 0.15;
+        let sol = Sinkhorn::log_domain().solve_ot(&inst, eps).unwrap();
+        let c_max = inst.costs.max() as f64;
+        assert!(
+            sol.cost <= exact + eps * c_max + 1e-9,
+            "sinkhorn {} vs exact {exact} (allow +{})",
+            sol.cost,
+            eps * c_max
+        );
+        assert!(sol.cost >= exact - 1e-9, "cannot beat exact: {} < {exact}", sol.cost);
+    }
+
+    #[test]
+    fn standard_kernel_underflows_at_tiny_eps() {
+        // eta ~ eps/(4 ln n); with eps=1e-4 and costs ~1, exp(-1/eta)
+        // underflows f64 -> divergence note (paper §5's observed instability).
+        let inst = uniform_inst(10, 3);
+        let res = Sinkhorn::new().solve_ot(&inst, 1e-4);
+        assert!(res.is_err(), "expected instability at tiny eps");
+    }
+
+    #[test]
+    fn log_domain_survives_tiny_eps() {
+        let mut s = Sinkhorn::log_domain();
+        s.config.max_iters = 200; // don't wait for full convergence
+        let inst = uniform_inst(8, 4);
+        let sol = s.solve_ot(&inst, 1e-4).unwrap();
+        sol.plan.check(&inst.supply, &inst.demand, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn rounding_restores_marginals() {
+        let mut p = TransportPlan::zeros(2, 2);
+        // infeasible: row 0 overshoots, row 1 undershoots
+        p.set(0, 0, 0.8);
+        p.set(1, 1, 0.1);
+        let q = round_to_feasible(&p, &[0.5, 0.5], &[0.5, 0.5]);
+        q.check(&[0.5, 0.5], &[0.5, 0.5], 1e-9).unwrap();
+    }
+
+    #[test]
+    fn explicit_eta_respected() {
+        let inst = uniform_inst(6, 5);
+        let mut s = Sinkhorn::new();
+        s.config.eta = Some(0.5);
+        s.config.max_iters = 50;
+        let sol = s.solve_ot(&inst, 0.5).unwrap();
+        sol.plan.check(&inst.supply, &inst.demand, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn nonuniform_masses() {
+        let c = CostMatrix::from_fn(3, 4, |b, a| ((b + 2 * a) % 5) as f32 / 4.0);
+        let inst =
+            OtInstance::new(c, vec![0.4, 0.3, 0.2, 0.1], vec![0.5, 0.25, 0.25]).unwrap();
+        let sol = Sinkhorn::log_domain().solve_ot(&inst, 0.2).unwrap();
+        sol.plan.check(&inst.supply, &inst.demand, 1e-6).unwrap();
+    }
+}

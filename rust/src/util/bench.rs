@@ -1,0 +1,176 @@
+//! Benchmark harness (criterion is unavailable offline). Provides warmup +
+//! sampled timing with robust statistics and table output shared by all
+//! `rust/benches/*.rs` (which are `harness = false` binaries).
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// Configuration for a benchmark run. Environment overrides let CI run fast
+/// while `--reps`-style flags reproduce the paper's 30-run averages.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub samples: usize,
+    /// Hard wall-clock cap per measurement in seconds; sampling stops early
+    /// once exceeded (slow configs still report with fewer samples).
+    pub max_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup: 1, samples: 5, max_secs: 60.0 }
+    }
+}
+
+impl BenchConfig {
+    pub fn quick() -> Self {
+        Self { warmup: 0, samples: 2, max_secs: 20.0 }
+    }
+
+    /// Read OTPR_BENCH_SAMPLES / OTPR_BENCH_MAXSECS overrides.
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        if let Ok(v) = std::env::var("OTPR_BENCH_SAMPLES") {
+            if let Ok(n) = v.parse() {
+                cfg.samples = n;
+            }
+        }
+        if let Ok(v) = std::env::var("OTPR_BENCH_MAXSECS") {
+            if let Ok(s) = v.parse() {
+                cfg.max_secs = s;
+            }
+        }
+        cfg
+    }
+}
+
+/// One measured benchmark row.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Free-form extra columns (e.g. phases, error) from the last run.
+    pub extras: Vec<(String, String)>,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Run `f` under the config; `f` returns optional extra columns.
+pub fn run_bench<F>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult
+where
+    F: FnMut() -> Vec<(String, String)>,
+{
+    for _ in 0..cfg.warmup {
+        let t = Instant::now();
+        let _ = f();
+        if t.elapsed().as_secs_f64() > cfg.max_secs {
+            break; // too slow to warm further
+        }
+    }
+    let mut times = Vec::with_capacity(cfg.samples);
+    let mut extras = Vec::new();
+    let wall = Instant::now();
+    for _ in 0..cfg.samples.max(1) {
+        let t = Instant::now();
+        extras = f();
+        times.push(t.elapsed().as_secs_f64());
+        if wall.elapsed().as_secs_f64() > cfg.max_secs {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&times), extras }
+}
+
+/// Render results as a markdown table (also CSV via `to_csv`).
+pub fn to_markdown(results: &[BenchResult]) -> String {
+    let mut extra_keys: Vec<String> = Vec::new();
+    for r in results {
+        for (k, _) in &r.extras {
+            if !extra_keys.contains(k) {
+                extra_keys.push(k.clone());
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str("| name | mean | median | stddev | n |");
+    for k in &extra_keys {
+        out.push_str(&format!(" {k} |"));
+    }
+    out.push('\n');
+    out.push_str("|---|---|---|---|---|");
+    for _ in &extra_keys {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for r in results {
+        out.push_str(&format!(
+            "| {} | {:.4}s | {:.4}s | {:.4}s | {} |",
+            r.name, r.summary.mean, r.summary.median, r.summary.stddev, r.summary.n
+        ));
+        for k in &extra_keys {
+            let v = r
+                .extras
+                .iter()
+                .find(|(ek, _)| ek == k)
+                .map(|(_, v)| v.as_str())
+                .unwrap_or("-");
+            out.push_str(&format!(" {v} |"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn to_csv(results: &[BenchResult]) -> String {
+    let mut out = String::from("name,mean_s,median_s,stddev_s,samples\n");
+    for r in results {
+        out.push_str(&format!(
+            "{},{:.6},{:.6},{:.6},{}\n",
+            r.name, r.summary.mean, r.summary.median, r.summary.stddev, r.summary.n
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig { warmup: 1, samples: 3, max_secs: 10.0 };
+        let mut calls = 0;
+        let r = run_bench("noop", &cfg, || {
+            calls += 1;
+            vec![("k".into(), "v".into())]
+        });
+        assert_eq!(calls, 4); // 1 warmup + 3 samples
+        assert_eq!(r.summary.n, 3);
+        assert_eq!(r.extras[0].1, "v");
+    }
+
+    #[test]
+    fn respects_time_cap() {
+        let cfg = BenchConfig { warmup: 0, samples: 1000, max_secs: 0.05 };
+        let r = run_bench("sleepy", &cfg, || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            vec![]
+        });
+        assert!(r.summary.n < 10, "cap should stop sampling early, n={}", r.summary.n);
+    }
+
+    #[test]
+    fn tables_render() {
+        let cfg = BenchConfig::quick();
+        let r = run_bench("x", &cfg, Vec::new);
+        let md = to_markdown(&[r.clone()]);
+        assert!(md.contains("| x |"));
+        let csv = to_csv(&[r]);
+        assert!(csv.starts_with("name,"));
+        assert!(csv.lines().count() == 2);
+    }
+}

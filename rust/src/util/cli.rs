@@ -1,0 +1,162 @@
+//! Hand-rolled command-line parsing (clap is unavailable offline).
+//! Supports `program SUBCOMMAND --key value --flag positional...` with typed
+//! accessors and helpful errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Result<Self, String> {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        // first non-dash token is the subcommand
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` terminator: rest are positionals
+                    args.positionals.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // value if next token exists and isn't another option
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.opts.insert(name.to_string(), v);
+                        }
+                        _ => args.flags.push(name.to_string()),
+                    }
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                return Err(format!("short options not supported: {tok}"));
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env() -> Result<Self, String> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value for --{name}: {v}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get_parsed(name).ok().flatten().unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get_parsed(name).ok().flatten().unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get_parsed(name).ok().flatten().unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list option, e.g. `--eps 0.1,0.01`.
+    pub fn list_f64(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        }
+    }
+
+    pub fn list_usize(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // note: a bare token right after `--flag` would be taken as its
+        // value, so positionals go before trailing flags
+        let a = parse("fig1 --n 1000 --eps 0.1,0.01 file.csv --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("fig1"));
+        assert_eq!(a.usize_or("n", 0), 1000);
+        assert_eq!(a.list_f64("eps", &[]), vec![0.1, 0.01]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["file.csv"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("solve --seed=42 --out=x.json");
+        assert_eq!(a.u64_or("seed", 0), 42);
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("serve --quiet");
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get("quiet"), None);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse("run --x 1 -- --not-an-option");
+        assert_eq!(a.positionals, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn bad_parse_reported() {
+        let a = parse("solve --n abc");
+        assert!(a.get_parsed::<usize>("n").is_err());
+        assert!(Args::parse_from(vec!["-x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.f64_or("eps", 0.25), 0.25);
+        assert_eq!(a.get_or("mode", "native"), "native");
+        assert_eq!(a.list_usize("sizes", &[1, 2]), vec![1, 2]);
+    }
+}

@@ -1,0 +1,91 @@
+//! Leveled stderr logging (no `log`/`env_logger` offline). Level is read
+//! once from `OTPR_LOG` (error|warn|info|debug|trace; default info).
+
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("OTPR_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    })
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+pub fn log(lvl: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        eprintln!("[{} {}] {}", lvl.tag(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($fmt)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($fmt)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($fmt:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($fmt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info <= Level::Info);
+    }
+
+    #[test]
+    fn tags() {
+        assert_eq!(Level::Error.tag(), "ERROR");
+        assert_eq!(Level::Debug.tag(), "DEBUG");
+    }
+
+    #[test]
+    fn log_does_not_panic() {
+        log(Level::Info, "test", format_args!("hello {}", 1));
+        log(Level::Trace, "test", format_args!("filtered"));
+    }
+}

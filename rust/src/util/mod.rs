@@ -1,0 +1,14 @@
+//! From-scratch substrate modules. The offline registry contains only the
+//! `xla` crate's dependency closure, so the usual ecosystem crates (clap,
+//! rayon, criterion, rand, serde_json, proptest, log) are re-implemented
+//! here at the scale this library needs.
+
+pub mod bench;
+pub mod cli;
+pub mod logging;
+pub mod minijson;
+pub mod pool;
+pub mod proptest_mini;
+pub mod rng;
+pub mod stats;
+pub mod timer;

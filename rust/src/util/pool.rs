@@ -1,0 +1,144 @@
+//! A tiny data-parallel layer over `std::thread::scope`, standing in for
+//! `rayon` (unavailable offline). The parallel push-relabel solver and the
+//! coordinator's worker pool are built on these primitives.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: `OTPR_THREADS` env override,
+/// otherwise available parallelism, capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("OTPR_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(chunk_index, range)` over `n` items split into contiguous chunks,
+/// one per thread. `f` runs on scoped threads and may borrow from the caller.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n == 0 {
+        f(0, 0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(t, lo..hi));
+        }
+    });
+}
+
+/// Dynamic work-stealing style map: items are claimed one-by-one from a
+/// shared atomic counter, which balances irregular per-item cost (e.g. one
+/// OT job per request in the coordinator tests).
+pub fn parallel_for_each<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map collecting results in order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for_each(n, threads, |i| {
+            **slots[i].lock().unwrap() = f(i);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn chunks_cover_all_indices() {
+        let hits = AtomicU64::new(0);
+        parallel_chunks(1000, 4, |_, range| {
+            for _ in range {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn chunks_single_thread_path() {
+        let mut seen = vec![false; 10];
+        let cell = std::sync::Mutex::new(&mut seen);
+        parallel_chunks(10, 1, |_, range| {
+            let mut s = cell.lock().unwrap();
+            for i in range {
+                s[i] = true;
+            }
+        });
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn for_each_visits_every_index_once() {
+        let counts: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_each(257, 8, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_items_is_fine() {
+        parallel_for_each(0, 4, |_| panic!("should not run"));
+        parallel_chunks(0, 4, |_, r| assert!(r.is_empty()));
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,96 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//! Runs a property over many seeded random cases and reports the failing
+//! seed so a counterexample is reproducible with `case_from_seed`.
+
+use super::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // OTPR_PROP_CASES trims CI time; seed override reproduces failures.
+        let cases = std::env::var("OTPR_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(48);
+        let seed =
+            std::env::var("OTPR_PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xC0FFEE);
+        Self { cases, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` independently-seeded RNGs. The property
+/// returns `Err(message)` to fail. Panics with the case seed on failure.
+pub fn check<F>(name: &str, cfg: &PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg32::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{} (OTPR_PROP_SEED base {}, case seed {case_seed}):\n  {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    check(name, &PropConfig::default(), prop)
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check_default("u32 in range", |rng| {
+            let x = rng.next_below(100);
+            prop_assert!(x < 100, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failures() {
+        check("always fails", &PropConfig { cases: 3, seed: 1 }, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u32> = Vec::new();
+        check("collect", &PropConfig { cases: 5, seed: 9 }, |rng| {
+            first.push(rng.next_u32());
+            Ok(())
+        });
+        let mut second: Vec<u32> = Vec::new();
+        check("collect2", &PropConfig { cases: 5, seed: 9 }, |rng| {
+            second.push(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

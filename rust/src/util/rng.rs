@@ -1,0 +1,214 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline registry has no `rand` crate, so we implement the two small
+//! generators the library needs: [`SplitMix64`] (seed expansion, O(1) state)
+//! and [`Pcg32`] (the main workhorse; PCG-XSH-RR 64/32). Both are
+//! deterministic across platforms, which the experiment harness relies on for
+//! reproducible workloads (`fig1 --seed 7` always builds the same instance).
+
+/// SplitMix64: tiny, fast, passes BigCrush; used to expand user seeds into
+/// full generator state and for cheap one-off streams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32: small-state generator with good statistical quality.
+/// `stream` selects one of 2^63 independent sequences, so parallel workers
+/// can derive non-overlapping generators from a shared seed.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.state = rng.inc.wrapping_add(sm.next_u64());
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 32 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16_777_216.0)
+    }
+
+    /// Unbiased uniform integer in [0, bound) (Lemire rejection).
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "next_below(0)");
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(bound as u64);
+            let lo = m as u32;
+            if lo >= bound || lo >= bound.wrapping_neg() % bound {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple, adequate
+    /// for workload generation).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = self.next_f64();
+            if u > 1e-12 {
+                let v = self.next_f64();
+                return (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg32::with_stream(1, 1);
+        let mut b = Pcg32::with_stream(1, 2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should be effectively independent");
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut rng = Pcg32::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.next_below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut rng = Pcg32::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        let mut any_low = false;
+        let mut any_high = false;
+        let mut r2 = Pcg32::new(9);
+        for _ in 0..n {
+            let v = r2.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            any_low |= v < 0.1;
+            any_high |= v > 0.9;
+        }
+        assert!(any_low && any_high);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(11);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle should move things");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg32::new(5);
+        let s = rng.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut t = s.clone();
+        t.sort_unstable();
+        t.dedup();
+        assert_eq!(t.len(), 20);
+        assert!(t.iter().all(|&i| i < 50));
+    }
+}

@@ -1,0 +1,126 @@
+//! Monotonic timing utilities: a stopwatch, a scoped-section profiler used by
+//! the performance pass, and human-friendly duration formatting.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch around `Instant`.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Format a duration compactly: `1.23s`, `45.6ms`, `789µs`.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.0}µs", s * 1e6)
+    }
+}
+
+/// Accumulating section profiler. Cheap enough to leave in the hot path
+/// behind names; used by the §Perf pass to attribute per-phase time.
+#[derive(Debug, Default)]
+pub struct SectionProfiler {
+    // name -> (total_secs, calls)
+    sections: Mutex<BTreeMap<&'static str, (f64, u64)>>,
+}
+
+impl SectionProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and attribute it to `name`.
+    pub fn scope<T>(&self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&self, name: &'static str, secs: f64) {
+        let mut map = self.sections.lock().unwrap();
+        let e = map.entry(name).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += 1;
+    }
+
+    /// Snapshot: (name, total_secs, calls), sorted by descending total.
+    pub fn snapshot(&self) -> Vec<(&'static str, f64, u64)> {
+        let map = self.sections.lock().unwrap();
+        let mut v: Vec<_> = map.iter().map(|(k, (s, c))| (*k, *s, *c)).collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let total: f64 = snap.iter().map(|(_, s, _)| s).sum();
+        let mut out = String::from("section                        total      calls   share\n");
+        for (name, secs, calls) in snap {
+            let share = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+            out.push_str(&format!("{name:<28} {secs:>9.4}s {calls:>8}  {share:>5.1}%\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+        assert_eq!(fmt_duration(Duration::from_millis(45)), "45.00ms");
+        assert_eq!(fmt_duration(Duration::from_micros(789)), "789µs");
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let p = SectionProfiler::new();
+        for _ in 0..3 {
+            p.scope("a", || std::thread::sleep(Duration::from_millis(1)));
+        }
+        p.scope("b", || ());
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 2);
+        let a = snap.iter().find(|(n, _, _)| *n == "a").unwrap();
+        assert_eq!(a.2, 3);
+        assert!(a.1 >= 0.002);
+        assert!(p.report().contains("a"));
+    }
+}

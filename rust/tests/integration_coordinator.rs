@@ -1,0 +1,143 @@
+//! Coordinator end-to-end: mixed job streams, backpressure, failure
+//! isolation, metrics accounting, and (when artifacts exist) the XLA
+//! engine behind the service.
+
+use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind, JobResult};
+use otpr::data::workloads::Workload;
+use otpr::runtime::XlaRuntime;
+use std::sync::Arc;
+
+fn assignment(n: usize, seed: u64) -> JobKind {
+    JobKind::Assignment(Workload::Fig1 { n }.assignment(seed))
+}
+
+fn ot(n: usize, seed: u64) -> JobKind {
+    JobKind::Ot(Workload::Fig1 { n }.ot_with_random_masses(seed))
+}
+
+#[test]
+fn mixed_stream_completes() {
+    let coord = Coordinator::start(CoordinatorConfig { workers: 3, ..Default::default() }, None);
+    let mut handles = Vec::new();
+    for i in 0..10 {
+        handles.push(coord.submit(assignment(24, i), 0.3, Engine::NativeSeq).unwrap());
+        if i % 3 == 0 {
+            handles.push(coord.submit(ot(10, i), 0.3, Engine::Auto).unwrap());
+        }
+    }
+    let total = handles.len();
+    let mut assignments = 0;
+    let mut ots = 0;
+    for h in handles {
+        match h.wait().unwrap().result.unwrap() {
+            JobResult::Assignment(s) => {
+                assert!(s.matching.is_perfect());
+                assignments += 1;
+            }
+            JobResult::Ot(s) => {
+                assert!((s.plan.total_mass() - 1.0).abs() < 1e-9);
+                ots += 1;
+            }
+        }
+    }
+    assert_eq!(assignments + ots, total);
+    assert_eq!(ots, 4);
+    let snap = coord.metrics.snapshot();
+    assert!(snap.contains(&format!("completed={total}")), "{snap}");
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_small_queue() {
+    // queue of 1 forces submit() to block rather than drop jobs
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 1, queue_capacity: 1, ..Default::default() },
+        None,
+    );
+    let handles: Vec<_> =
+        (0..8).map(|i| coord.submit(assignment(16, i), 0.4, Engine::NativeSeq).unwrap()).collect();
+    for h in handles {
+        assert!(h.wait().unwrap().result.is_ok());
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn worker_failure_isolated() {
+    let coord = Coordinator::start(CoordinatorConfig::default(), None);
+    // Xla without runtime fails; neighbours succeed
+    let bad = coord.submit(assignment(16, 0), 0.3, Engine::Xla).unwrap();
+    let good = coord.submit(assignment(16, 1), 0.3, Engine::NativeSeq).unwrap();
+    assert!(bad.wait().unwrap().result.is_err());
+    assert!(good.wait().unwrap().result.is_ok());
+    let snap = coord.metrics.snapshot();
+    assert!(snap.contains("failed=1"), "{snap}");
+    coord.shutdown();
+}
+
+#[test]
+fn batching_is_recorded() {
+    let coord = Coordinator::start(CoordinatorConfig { workers: 2, ..Default::default() }, None);
+    let handles: Vec<_> = (0..12)
+        .map(|i| coord.submit(assignment(12, i), 0.4, Engine::NativeSeq).unwrap())
+        .collect();
+    for h in handles {
+        h.wait().unwrap();
+    }
+    let snap = coord.metrics.snapshot();
+    assert!(snap.contains("batches:"), "{snap}");
+    coord.shutdown();
+}
+
+#[test]
+fn sinkhorn_engine_on_assignment_jobs() {
+    let coord = Coordinator::start(CoordinatorConfig::default(), None);
+    let h = coord.submit(assignment(16, 3), 0.25, Engine::SinkhornNative).unwrap();
+    match h.wait().unwrap().result.unwrap() {
+        JobResult::Ot(sol) => assert!(sol.cost > 0.0),
+        _ => panic!("sinkhorn returns a transport plan"),
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn xla_engine_through_coordinator_when_artifacts_exist() {
+    let Ok(runtime) = XlaRuntime::open_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, ..Default::default() },
+        Some(Arc::clone(&runtime)),
+    );
+    // two same-bucket jobs exercise the compile cache through batching
+    let h1 = coord.submit(assignment(256, 1), 0.3, Engine::Xla).unwrap();
+    let h2 = coord.submit(assignment(256, 2), 0.3, Engine::Xla).unwrap();
+    for h in [h1, h2] {
+        let out = h.wait().unwrap();
+        let res = out.result.expect("xla job should succeed");
+        match res {
+            JobResult::Assignment(sol) => {
+                assert!(sol.matching.is_perfect());
+                assert!(sol.stats.notes.iter().any(|n| n == "bucket=256"));
+            }
+            _ => panic!("expected assignment result"),
+        }
+        assert_eq!(out.engine_used, "xla");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn auto_routes_large_to_xla_when_available() {
+    let Ok(runtime) = XlaRuntime::open_default() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Coordinator::start(CoordinatorConfig::default(), Some(runtime));
+    let h = coord.submit(assignment(512, 1), 0.4, Engine::Auto).unwrap();
+    let out = h.wait().unwrap();
+    assert_eq!(out.engine_used, "xla");
+    assert!(out.result.is_ok());
+    coord.shutdown();
+}

@@ -1,0 +1,117 @@
+//! OT-solver integration: §4 push-relabel OT vs exact SSP and Sinkhorn,
+//! over uniform / random / skewed mass profiles and both workload costs.
+
+use otpr::core::{CostMatrix, OtInstance};
+use otpr::data::workloads::{random_simplex, Workload};
+use otpr::solvers::ot_push_relabel::OtPushRelabel;
+use otpr::solvers::sinkhorn::Sinkhorn;
+use otpr::solvers::ssp_ot::SspExactOt;
+use otpr::solvers::OtSolver;
+use otpr::util::rng::Pcg32;
+
+fn skewed_masses(n: usize, seed: u64) -> Vec<f64> {
+    // one heavy atom + light tail — stresses the θ-scaling rounding
+    let mut rng = Pcg32::new(seed);
+    let mut v = random_simplex(n, &mut rng);
+    v[0] += 0.5;
+    let sum: f64 = v.iter().sum();
+    v.iter_mut().for_each(|x| *x /= sum);
+    v
+}
+
+fn check_instance(inst: &OtInstance, eps: f64) {
+    let c_max = inst.costs.max() as f64;
+    let exact = SspExactOt::default().solve_ot(inst, 0.0).unwrap();
+    let sol = OtPushRelabel::new().solve_ot(inst, eps).unwrap();
+    // all supply shipped
+    assert!((sol.plan.total_mass() - 1.0).abs() < 1e-9);
+    // additive guarantee
+    assert!(
+        sol.cost <= exact.cost + eps * c_max + 1e-9,
+        "pr-ot {} > exact {} + {}",
+        sol.cost,
+        exact.cost,
+        eps * c_max
+    );
+    // cannot beat the exact optimum by more than mass-rounding slack
+    let n = inst.n() as f64;
+    let theta = 4.0 * n / eps;
+    assert!(sol.cost >= exact.cost - 2.0 * n / theta * c_max - 1e-9);
+}
+
+#[test]
+fn uniform_masses_fig1_costs() {
+    for (n, eps) in [(10, 0.4), (20, 0.25), (30, 0.15)] {
+        let inst = OtInstance::uniform(Workload::Fig1 { n }.costs(3)).unwrap();
+        check_instance(&inst, eps);
+    }
+}
+
+#[test]
+fn random_masses_fig1_costs() {
+    for seed in 0..3 {
+        let inst = Workload::Fig1 { n: 16 }.ot_with_random_masses(seed);
+        check_instance(&inst, 0.25);
+    }
+}
+
+#[test]
+fn skewed_masses_survive_scaling() {
+    let n = 18;
+    let costs = Workload::Fig1 { n }.costs(9);
+    let inst =
+        OtInstance::new(costs, skewed_masses(n, 1), skewed_masses(n, 2)).unwrap();
+    check_instance(&inst, 0.2);
+}
+
+#[test]
+fn image_costs_ot() {
+    let inst = Workload::Fig2 { n: 14 }.ot_with_random_masses(4);
+    check_instance(&inst, 0.3);
+}
+
+#[test]
+fn rectangular_ot() {
+    // more demand points than supply points
+    let mut rng = Pcg32::new(7);
+    let costs = CostMatrix::from_fn(8, 14, |_, _| rng.next_f32());
+    let demand = random_simplex(14, &mut rng);
+    let supply = random_simplex(8, &mut rng);
+    let inst = OtInstance::new(costs, demand, supply).unwrap();
+    check_instance(&inst, 0.25);
+}
+
+#[test]
+fn sinkhorn_and_pr_land_in_same_band() {
+    // both ε-approximations of the same optimum: they must agree within
+    // the sum of their budgets
+    let inst = Workload::Fig1 { n: 16 }.ot_with_random_masses(11);
+    let eps = 0.2;
+    let c_max = inst.costs.max() as f64;
+    let pr = OtPushRelabel::new().solve_ot(&inst, eps).unwrap();
+    let sk = Sinkhorn::log_domain().solve_ot(&inst, eps).unwrap();
+    assert!((pr.cost - sk.cost).abs() <= 2.0 * eps * c_max + 1e-9);
+}
+
+#[test]
+fn plan_is_reusable_as_warm_information() {
+    // the compact plan advertised by the paper: support stays near-linear
+    let inst = Workload::Fig1 { n: 24 }.ot_with_random_masses(5);
+    let sol = OtPushRelabel::new().solve_ot(&inst, 0.2).unwrap();
+    let support = sol.plan.support_size();
+    assert!(
+        support <= 6 * 24,
+        "support {support} far above O(n) — plan is not compact"
+    );
+    // dual/stat reporting contract
+    assert!(sol.stats.notes.iter().any(|n| n.starts_with("max_clusters=")));
+}
+
+#[test]
+fn tiny_eps_matches_exact_closely() {
+    let inst = Workload::Fig1 { n: 10 }.ot_with_random_masses(6);
+    let exact = SspExactOt::default().solve_ot(&inst, 0.0).unwrap();
+    let sol = OtPushRelabel::new().solve_ot(&inst, 0.02).unwrap();
+    let c_max = inst.costs.max() as f64;
+    assert!((sol.cost - exact.cost).abs() <= 0.02 * c_max + 1e-9);
+}

@@ -1,0 +1,191 @@
+//! Runtime integration over the real AOT artifacts (`make artifacts` must
+//! have run; tests skip gracefully otherwise). Verifies the full
+//! L1(Pallas)→L2(JAX)→HLO→PJRT→L3 chain: numerics of each artifact against
+//! the native implementations, then whole solves.
+
+use otpr::core::{AssignmentInstance, OtInstance};
+use otpr::data::synthetic;
+use otpr::data::workloads::Workload;
+use otpr::runtime::client::{download_f32, download_i32, run1};
+use otpr::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
+use otpr::solvers::hungarian::Hungarian;
+use otpr::solvers::push_relabel::PushRelabel;
+use otpr::solvers::{AssignmentSolver, OtSolver};
+use otpr::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<XlaRuntime>> {
+    match XlaRuntime::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn cost_euclid_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let mut rng = Pcg32::new(1);
+    let pts_b = synthetic::uniform_points(n, &mut rng);
+    let pts_a = synthetic::uniform_points(n, &mut rng);
+    let native = synthetic::euclidean_costs(&pts_b, &pts_a);
+    let fb = synthetic::points_to_f32(&pts_b);
+    let fa = synthetic::points_to_f32(&pts_a);
+    let dev = rt
+        .call(move |ctx| {
+            let fb = ctx.upload_f32(&fb, &[n, 2])?;
+            let fa = ctx.upload_f32(&fa, &[n, 2])?;
+            let exe = ctx.executable("cost_euclid", n)?;
+            let out = run1(&exe, &[&fb, &fa])?;
+            download_f32(&out, n * n)
+        })
+        .unwrap();
+    for (i, (&d, &h)) in dev.iter().zip(native.as_slice()).enumerate() {
+        assert!((d - h).abs() < 1e-5, "mismatch at {i}: {d} vs {h}");
+    }
+}
+
+#[test]
+fn quantize_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let costs = Workload::Fig1 { n }.costs(2);
+    let q_native = otpr::core::QuantizedCosts::new(&costs, 0.1);
+    let inv = 1.0 / q_native.eps_abs;
+    let data: Vec<f32> = costs.as_slice().to_vec();
+    let dev = rt
+        .call(move |ctx| {
+            let c = ctx.upload_f32(&data, &[n, n])?;
+            let inv_b = ctx.upload_f32(&[inv as f32], &[1])?;
+            let exe = ctx.executable("quantize", n)?;
+            let out = run1(&exe, &[&c, &inv_b])?;
+            download_i32(&out, n * n)
+        })
+        .unwrap();
+    let mut diffs = 0;
+    for (d, h) in dev.iter().zip(&q_native.cq) {
+        // f32-vs-f64 floor boundary flips are possible but must be rare
+        if d != h {
+            diffs += 1;
+        }
+    }
+    assert!(
+        diffs as f64 <= 0.001 * (n * n) as f64,
+        "{diffs} quantization mismatches out of {}",
+        n * n
+    );
+}
+
+#[test]
+fn matrix_max_artifact() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let costs = Workload::Fig1 { n }.costs(3);
+    let native_max = costs.max();
+    let data: Vec<f32> = costs.as_slice().to_vec();
+    let dev = rt
+        .call(move |ctx| {
+            let c = ctx.upload_f32(&data, &[n, n])?;
+            let exe = ctx.executable("matrix_max", n)?;
+            let out = run1(&exe, &[&c])?;
+            download_f32(&out, 1)
+        })
+        .unwrap();
+    assert!((dev[0] - native_max).abs() < 1e-6);
+}
+
+#[test]
+fn xla_assignment_guarantee_exact_bucket() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let inst = Workload::Fig1 { n }.assignment(4);
+    let exact = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+    let c_max = inst.costs.max() as f64;
+    let eps = 0.05;
+    let sol = XlaAssignment::new(rt).solve_costs(&inst, eps).unwrap();
+    assert!(sol.matching.is_perfect());
+    assert!(
+        sol.cost <= exact.cost + 3.0 * eps * n as f64 * c_max + 1e-6,
+        "xla {} vs exact {}",
+        sol.cost,
+        exact.cost
+    );
+}
+
+#[test]
+fn xla_assignment_padded_bucket() {
+    let Some(rt) = runtime() else { return };
+    let n = 300; // pads to 512
+    let inst = Workload::Fig1 { n }.assignment(5);
+    let exact = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+    let c_max = inst.costs.max() as f64;
+    let eps = 0.1;
+    let sol = XlaAssignment::new(rt).solve_costs(&inst, eps).unwrap();
+    assert!(sol.matching.is_perfect());
+    assert_eq!(sol.matching.nb(), n);
+    assert!(sol.cost <= exact.cost + 3.0 * eps * n as f64 * c_max + 1e-6);
+}
+
+#[test]
+fn xla_points_path_agrees_with_native_path() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let mut rng_a = Pcg32::with_stream(6, 1);
+    let mut rng_b = Pcg32::with_stream(6, 2);
+    let pts_a = synthetic::uniform_points(n, &mut rng_a);
+    let pts_b = synthetic::uniform_points(n, &mut rng_b);
+    let costs = synthetic::euclidean_costs(&pts_b, &pts_a);
+    let inst = AssignmentInstance::new(costs).unwrap();
+    let eps = 0.1;
+    let solver = XlaAssignment::new(rt);
+    let via_points = solver
+        .solve_points(
+            &synthetic::points_to_f32(&pts_b),
+            &synthetic::points_to_f32(&pts_a),
+            &inst,
+            eps,
+        )
+        .unwrap();
+    let native = PushRelabel::new().solve_with_param(&inst, eps).unwrap();
+    let c_max = inst.costs.max() as f64;
+    let budget = 3.0 * eps * n as f64 * c_max;
+    // both are valid 3ε approximations of the same instance
+    assert!(via_points.cost <= native.cost + budget + 1e-6);
+    assert!(native.cost <= via_points.cost + budget + 1e-6);
+}
+
+#[test]
+fn xla_sinkhorn_feasible_and_accurate() {
+    let Some(rt) = runtime() else { return };
+    let n = 256;
+    let inst = OtInstance::uniform(Workload::Fig1 { n }.costs(7)).unwrap();
+    let eps = 0.25;
+    let sol = XlaSinkhorn::new(rt).solve_ot(&inst, eps).unwrap();
+    sol.plan.check(&inst.supply, &inst.demand, 1e-5).unwrap();
+    // uniform OT optimum = assignment optimum / n
+    let (_, exact_cost, _, _) = otpr::solvers::hungarian::solve_exact(&inst.costs).unwrap();
+    let exact = exact_cost / n as f64;
+    let c_max = inst.costs.max() as f64;
+    assert!(sol.cost <= exact + eps * c_max + 1e-6);
+    assert!(sol.cost >= exact - 1e-6);
+}
+
+#[test]
+fn compile_cache_reused_across_solves() {
+    let Some(rt) = runtime() else { return };
+    let inst = Workload::Fig1 { n: 256 }.assignment(8);
+    let solver = XlaAssignment::new(Arc::clone(&rt));
+    let t1 = std::time::Instant::now();
+    let _ = solver.solve_costs(&inst, 0.2).unwrap();
+    let first = t1.elapsed();
+    let t2 = std::time::Instant::now();
+    let _ = solver.solve_costs(&inst, 0.2).unwrap();
+    let second = t2.elapsed();
+    // second solve skips HLO parse+compile; expect a visible speedup
+    assert!(second < first, "cache produced no speedup: {first:?} vs {second:?}");
+    let cached = rt.call(|ctx| Ok(ctx.cached_count())).unwrap();
+    assert!(cached >= 2, "expected quantize+phase_step cached, got {cached}");
+}

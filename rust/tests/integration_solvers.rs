@@ -1,0 +1,186 @@
+//! Cross-solver integration: every assignment solver against the exact
+//! Hungarian oracle on every workload family, plus solver-vs-solver
+//! consistency and reporting contracts.
+
+use otpr::data::workloads::Workload;
+use otpr::solvers::greedy::GreedyMatcher;
+use otpr::solvers::hungarian::Hungarian;
+use otpr::solvers::parallel_pr::ParallelPushRelabel;
+use otpr::solvers::push_relabel::PushRelabel;
+use otpr::solvers::{AssignmentSolver, SolveStats};
+
+fn workloads(n: usize) -> Vec<Workload> {
+    vec![
+        Workload::Fig1 { n },
+        Workload::Fig2 { n },
+        Workload::RandomCosts { n },
+        Workload::Clustered { n, k: 4, sigma: 0.08 },
+    ]
+}
+
+#[test]
+fn additive_guarantee_all_workloads() {
+    let n = 60;
+    let eps = 0.1;
+    for wl in workloads(n) {
+        for seed in [1u64, 99] {
+            let inst = wl.assignment(seed);
+            let c_max = inst.costs.max() as f64;
+            let exact = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+            for solver in
+                [&PushRelabel::new() as &dyn AssignmentSolver, &ParallelPushRelabel::with_threads(3)]
+            {
+                let sol = solver.solve_assignment(&inst, eps).unwrap();
+                assert!(sol.matching.is_perfect(), "{} on {}", solver.name(), wl.name());
+                let budget = eps * n as f64 * c_max; // trait contract: ε overall
+                assert!(
+                    sol.cost <= exact.cost + budget + 1e-6,
+                    "{} on {} seed {seed}: {} > {} + {budget}",
+                    solver.name(),
+                    wl.name(),
+                    sol.cost,
+                    exact.cost
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eps_sweep_budget_respected() {
+    let inst = Workload::Fig1 { n: 80 }.assignment(5);
+    let exact = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+    let c_max = inst.costs.max() as f64;
+    for eps in [0.5, 0.25, 0.1, 0.05, 0.02] {
+        let sol = PushRelabel::new().solve_assignment(&inst, eps).unwrap();
+        assert!(sol.cost <= exact.cost + eps * 80.0 * c_max + 1e-6, "eps={eps}");
+    }
+}
+
+#[test]
+fn fine_eps_approaches_exact() {
+    for seed in 0..3 {
+        let inst = Workload::RandomCosts { n: 20 }.assignment(seed);
+        let h = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+        let pr = PushRelabel::new().solve_with_param(&inst, 0.002).unwrap();
+        assert!(pr.cost >= h.cost - 1e-9, "cannot beat exact");
+        assert!(pr.cost <= h.cost + 3.0 * 0.002 * 20.0 + 1e-9);
+    }
+}
+
+#[test]
+fn greedy_is_dominated_by_exact_but_valid() {
+    let inst = Workload::Fig2 { n: 30 }.assignment(2);
+    let g = GreedyMatcher.solve_assignment(&inst, 0.0).unwrap();
+    let h = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+    assert!(g.matching.is_perfect());
+    assert!(g.cost >= h.cost - 1e-9);
+}
+
+#[test]
+fn stats_are_populated() {
+    let inst = Workload::Fig1 { n: 100 }.assignment(7);
+    let sol = PushRelabel::new().solve_assignment(&inst, 0.2).unwrap();
+    let SolveStats { phases, total_free_processed, seconds, .. } = sol.stats;
+    assert!(phases > 0);
+    assert!(total_free_processed >= 100);
+    assert!(seconds > 0.0);
+    let par = ParallelPushRelabel::with_threads(2).solve_assignment(&inst, 0.2).unwrap();
+    assert!(par.stats.rounds >= par.stats.phases, "each phase needs ≥1 round");
+}
+
+#[test]
+fn sequential_and_parallel_same_guarantees_different_paths() {
+    let inst = Workload::Clustered { n: 50, k: 3, sigma: 0.02 }.assignment(3);
+    let exact = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+    let c_max = inst.costs.max() as f64;
+    let eps = 0.15;
+    let s = PushRelabel::new().solve_assignment(&inst, eps).unwrap();
+    let p = ParallelPushRelabel::with_threads(4).solve_assignment(&inst, eps).unwrap();
+    for sol in [&s, &p] {
+        assert!(sol.cost <= exact.cost + eps * 50.0 * c_max + 1e-6);
+    }
+}
+
+#[test]
+fn degenerate_zero_cost_instance() {
+    let costs = otpr::core::CostMatrix::zeros(16, 16);
+    let inst = otpr::core::AssignmentInstance::new(costs).unwrap();
+    let sol = PushRelabel::new().solve_assignment(&inst, 0.1).unwrap();
+    assert!(sol.matching.is_perfect());
+    assert_eq!(sol.cost, 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// §3.3 unbalanced case (|B| < |A|): the main routine produces an ε-feasible
+// matching of size ≥ (1−ε)|B| within ε|B| of the optimal (Lemma 3.5).
+// ---------------------------------------------------------------------------
+
+mod unbalanced {
+    use otpr::core::matching::FREE;
+    use otpr::core::CostMatrix;
+    use otpr::solvers::hungarian;
+    use otpr::solvers::push_relabel::PrState;
+    use otpr::util::rng::Pcg32;
+
+    fn rect_costs(nb: usize, na: usize, seed: u64) -> CostMatrix {
+        let mut rng = Pcg32::new(seed);
+        CostMatrix::from_fn(nb, na, |_, _| rng.next_f32())
+    }
+
+    #[test]
+    fn lemma_3_5_additive_bound() {
+        for seed in 0..3 {
+            let (nb, na) = (20usize, 35usize);
+            let costs = rect_costs(nb, na, seed);
+            let (_, opt, _, _) = hungarian::solve_exact(&costs).unwrap();
+            let eps = 0.1;
+            let mut st = PrState::new(&costs, eps);
+            st.run_to_termination().unwrap();
+            st.check_invariants().unwrap();
+            // cardinality ≥ (1 − ε)|B|
+            let size = st.m.size();
+            assert!(
+                size as f64 >= (1.0 - eps) * nb as f64,
+                "matching size {size} < (1-ε)|B|"
+            );
+            // complete and compare: error ≤ ε|B| in rounded units plus the
+            // rounding (ε|B|) and completion (ε|B|) terms → 3ε|B|·c_max.
+            st.m.complete_arbitrarily();
+            assert_eq!(st.m.size(), nb);
+            let cost = st.m.cost(&costs);
+            let budget = 3.0 * eps * nb as f64 * costs.max() as f64;
+            assert!(
+                cost <= opt + budget + 1e-6,
+                "seed {seed}: {cost} > {opt} + {budget}"
+            );
+        }
+    }
+
+    #[test]
+    fn invariants_hold_every_phase_unbalanced() {
+        let costs = rect_costs(12, 30, 9);
+        let mut st = PrState::new(&costs, 0.2);
+        for _ in 0..200 {
+            let out = st.run_phase();
+            st.check_invariants().unwrap();
+            if out.terminated {
+                break;
+            }
+        }
+        // every matched edge references a valid A vertex
+        for &a in &st.m.match_b {
+            assert!(a == FREE || (a as usize) < 30);
+        }
+    }
+
+    #[test]
+    fn all_b_matchable_when_na_much_larger() {
+        let costs = rect_costs(8, 64, 3);
+        let mut st = PrState::new(&costs, 0.05);
+        st.run_to_termination().unwrap();
+        st.m.complete_arbitrarily();
+        assert_eq!(st.m.size(), 8);
+        assert!(st.m.check_consistent().is_ok());
+    }
+}

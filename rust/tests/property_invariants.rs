@@ -1,0 +1,186 @@
+//! Property-based suite (util::proptest_mini): the paper's invariants hold
+//! after *every* phase on randomized instances, quantization laws hold,
+//! and solver outputs always satisfy their structural contracts.
+
+use otpr::core::duals::dual_lower_bound_units;
+use otpr::core::{AssignmentInstance, CostMatrix, QuantizedCosts};
+use otpr::data::workloads::Workload;
+use otpr::prop_assert;
+use otpr::solvers::ot_push_relabel::OtPrState;
+use otpr::solvers::parallel_pr::ParallelPrState;
+use otpr::solvers::push_relabel::PrState;
+use otpr::util::proptest_mini::{check, check_default, PropConfig};
+use otpr::util::rng::Pcg32;
+
+fn random_costs(rng: &mut Pcg32, n: usize) -> CostMatrix {
+    CostMatrix::from_fn(n, n, |_, _| rng.next_f32())
+}
+
+#[test]
+fn prop_feasibility_after_every_phase_sequential() {
+    check_default("sequential phase invariants", |rng| {
+        let n = 4 + rng.next_below(28) as usize;
+        let eps = [0.4, 0.2, 0.1][rng.next_below(3) as usize];
+        let costs = random_costs(rng, n);
+        let mut st = PrState::new(&costs, eps);
+        for _ in 0..500 {
+            let out = st.run_phase();
+            st.check_invariants().map_err(|e| format!("n={n} eps={eps}: {e}"))?;
+            if out.terminated {
+                return Ok(());
+            }
+        }
+        Err(format!("did not terminate (n={n}, eps={eps})"))
+    });
+}
+
+#[test]
+fn prop_feasibility_after_every_phase_parallel() {
+    check_default("parallel phase invariants", |rng| {
+        let n = 4 + rng.next_below(24) as usize;
+        let eps = [0.4, 0.2][rng.next_below(2) as usize];
+        let costs = random_costs(rng, n);
+        let threads = 1 + rng.next_below(4) as usize;
+        let mut st = ParallelPrState::new(&costs, eps, threads);
+        for _ in 0..500 {
+            match st.run_phase() {
+                Some(_) => st.check_invariants().map_err(|e| format!("n={n}: {e}"))?,
+                None => return Ok(()),
+            }
+        }
+        Err("did not terminate".into())
+    });
+}
+
+#[test]
+fn prop_ot_cluster_invariants() {
+    check(
+        "ot cluster invariants",
+        &PropConfig { cases: 24, ..Default::default() },
+        |rng| {
+            let n = 4 + rng.next_below(12) as usize;
+            let inst = Workload::Fig1 { n }.ot_with_random_masses(rng.next_u64());
+            let scaled = otpr::core::ScaledOtInstance::build(&inst, 0.25);
+            let mut st = OtPrState::new(&inst.costs, &scaled, 0.25 / 6.0);
+            for _ in 0..2000 {
+                let progressed = st.run_phase();
+                st.check_invariants()?;
+                prop_assert!(
+                    st.max_classes_seen <= 2,
+                    "Lemma 4.1 violated: {} clusters",
+                    st.max_classes_seen
+                );
+                if !progressed {
+                    return Ok(());
+                }
+            }
+            Err("did not terminate".into())
+        },
+    );
+}
+
+#[test]
+fn prop_quantization_laws() {
+    check_default("quantization laws", |rng| {
+        let n = 2 + rng.next_below(20) as usize;
+        let costs = random_costs(rng, n);
+        let eps = 0.01 + 0.5 * rng.next_f64();
+        let q = QuantizedCosts::new(&costs, eps);
+        for b in 0..n {
+            for a in 0..n {
+                let c = costs.at(b, a) as f64;
+                let r = q.rounded(b, a);
+                prop_assert!(r <= c + 1e-9, "rounded above original");
+                prop_assert!(c - r < q.eps_abs + 1e-9, "error ≥ eps_abs");
+                prop_assert!(q.at(b, a) <= q.max_units(), "cq above ⌊1/ε⌋");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_certificate_lower_bound() {
+    // Lemma 3.1 machinery: after termination, Σy − n (units) never exceeds
+    // the rounded optimum; equivalently the matched cost ≤ Σy.
+    check_default("dual certificate", |rng| {
+        let n = 4 + rng.next_below(24) as usize;
+        let costs = random_costs(rng, n);
+        let mut st = PrState::new(&costs, 0.15);
+        st.run_to_termination().map_err(|e| e.to_string())?;
+        let mut matched_units: i64 = 0;
+        for (b, &a) in st.m.match_b.iter().enumerate() {
+            if a >= 0 {
+                matched_units += st.q.at(b, a as usize) as i64;
+            }
+        }
+        let total_dual: i64 = st.y.ya.iter().map(|&v| v as i64).sum::<i64>()
+            + st.y.yb.iter().map(|&v| v as i64).sum::<i64>();
+        prop_assert!(
+            matched_units <= total_dual,
+            "matched {matched_units} > Σy {total_dual}"
+        );
+        let _ = dual_lower_bound_units(&st.y); // smoke the helper
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matching_completion_always_perfect() {
+    check_default("completion perfect", |rng| {
+        let n = 1 + rng.next_below(40) as usize;
+        let costs = random_costs(rng, n);
+        let inst = AssignmentInstance::new(costs).unwrap();
+        let eps = 0.05 + 0.4 * rng.next_f64();
+        let sol = otpr::solvers::push_relabel::PushRelabel::new()
+            .solve_with_param(&inst, eps)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(sol.matching.is_perfect(), "not perfect (n={n}, eps={eps})");
+        sol.matching.check_consistent()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_thread_count_invariance() {
+    // Round-snapshot semantics: the result must be identical for any
+    // thread count (determinism claim in solvers::parallel_pr).
+    check(
+        "thread invariance",
+        &PropConfig { cases: 16, ..Default::default() },
+        |rng| {
+            let n = 4 + rng.next_below(24) as usize;
+            let costs = random_costs(rng, n);
+            let inst = AssignmentInstance::new(costs).unwrap();
+            let eps = 0.2;
+            let s1 = otpr::solvers::parallel_pr::ParallelPushRelabel::with_threads(1)
+                .solve_with_param(&inst, eps)
+                .map_err(|e| e.to_string())?;
+            let s3 = otpr::solvers::parallel_pr::ParallelPushRelabel::with_threads(3)
+                .solve_with_param(&inst, eps)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(s1.matching == s3.matching, "matchings differ across threads");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_phase_work_bound() {
+    // eq. (4): Σ nᵢ ≤ n(1+2ε)/ε
+    check_default("phase work bound", |rng| {
+        let n = 8 + rng.next_below(40) as usize;
+        let eps = [0.3, 0.15, 0.08][rng.next_below(3) as usize];
+        let inst = AssignmentInstance::new(random_costs(rng, n)).unwrap();
+        let sol = otpr::solvers::push_relabel::PushRelabel::new()
+            .solve_with_param(&inst, eps)
+            .map_err(|e| e.to_string())?;
+        let bound = (n as f64 * (1.0 + 2.0 * eps) / eps).ceil() as u64;
+        prop_assert!(
+            sol.stats.total_free_processed <= bound,
+            "Σnᵢ = {} > {bound}",
+            sol.stats.total_free_processed
+        );
+        Ok(())
+    });
+}
