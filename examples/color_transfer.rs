@@ -10,10 +10,8 @@
 //!
 //!     cargo run --release --example color_transfer
 
-use otpr::core::{CostMatrix, OtInstance};
-use otpr::solvers::ot_push_relabel::OtPushRelabel;
-use otpr::solvers::ssp_ot::SspExactOt;
-use otpr::solvers::OtSolver;
+use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use otpr::core::CostMatrix;
 use otpr::util::rng::Pcg32;
 
 /// A palette: RGB centers in [0,1]³ with masses summing to 1.
@@ -44,28 +42,32 @@ fn rgb_dist(a: &[f64; 3], b: &[f64; 3]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt() as f32
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rng = Pcg32::new(2024);
     // sunset-ish source, teal-and-orange target
     let src = palette(&[[0.9, 0.5, 0.2], [0.6, 0.2, 0.4], [0.2, 0.2, 0.3]], 48, &mut rng);
     let dst = palette(&[[0.1, 0.6, 0.6], [0.9, 0.55, 0.25], [0.05, 0.15, 0.2]], 48, &mut rng);
 
-    // OT instance: supply = source palette (rows), demand = target palette.
+    // OT problem: supply = source palette (rows), demand = target palette.
     let costs = CostMatrix::from_fn(src.colors.len(), dst.colors.len(), |b, a| {
         rgb_dist(&src.colors[b], &dst.colors[a])
     });
-    let inst = OtInstance::new(costs, dst.masses.clone(), src.masses.clone())?;
+    let problem = Problem::ot(costs, dst.masses.clone(), src.masses.clone())?;
 
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
     let eps = 0.05;
-    let sol = OtPushRelabel::new().solve_ot(&inst, eps)?;
-    let exact = SspExactOt::default().solve_ot(&inst, 0.0)?;
+    let c_max = problem.costs().max() as f64;
+    let sol = solvers.solve("native-seq", &config, &problem, &SolveRequest::new(eps))?;
+    let exact = solvers.solve("ssp-exact", &config, &problem, &SolveRequest::new(0.0))?;
     println!(
         "transport cost: pr = {:.5}, exact = {:.5} (additive budget {:.5})",
         sol.cost,
         exact.cost,
-        eps * inst.costs.max() as f64
+        eps * c_max
     );
-    assert!(sol.cost <= exact.cost + eps * inst.costs.max() as f64 + 1e-9);
+    assert!(sol.cost <= exact.cost + eps * c_max + 1e-9);
+    let plan = sol.plan().expect("OT solve returns a plan");
 
     // Barycentric projection: each source color moves to the mass-weighted
     // average of its targets under the plan — this is the actual transfer.
@@ -74,7 +76,7 @@ fn main() -> anyhow::Result<()> {
         let mut out = [0.0f64; 3];
         let mut mass = 0.0;
         for a in 0..dst.colors.len() {
-            let f = sol.plan.at(b, a);
+            let f = plan.at(b, a);
             if f > 0.0 {
                 mass += f;
                 for c in 0..3 {
@@ -94,7 +96,7 @@ fn main() -> anyhow::Result<()> {
 
     // Every unit of source mass must arrive somewhere (paper: transports
     // *all* of the supply).
-    let shipped: f64 = sol.plan.total_mass();
+    let shipped: f64 = plan.total_mass();
     assert!((shipped - 1.0).abs() < 1e-9);
     println!("\nall supply transported (Σ plan = {shipped:.9}); color_transfer OK");
     Ok(())

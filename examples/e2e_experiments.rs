@@ -13,23 +13,33 @@
 //!   4. Headline check: push-relabel vs Sinkhorn runtime at equal accuracy
 //!      targets (the paper's main experimental claim).
 //!
+//! Exact baselines run through the same `SolverRegistry` as everything
+//! else; coordinator jobs return the unified `api::Solution`.
+//!
 //!     cargo run --release --example e2e_experiments
 
-use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind, JobResult};
+use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind};
 use otpr::data::workloads::Workload;
 use otpr::exp::report::{figure_table, Series};
 use otpr::runtime::XlaRuntime;
-use otpr::solvers::hungarian::Hungarian;
-use otpr::solvers::ssp_ot::SspExactOt;
-use otpr::solvers::{AssignmentSolver, OtSolver};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let runtime = XlaRuntime::open_default()
         .map_err(|e| eprintln!("note: XLA engines disabled ({e})"))
         .ok();
     let have_xla = runtime.is_some();
     let coord =
         Coordinator::start(CoordinatorConfig { workers: 2, ..Default::default() }, runtime);
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let exact_of = |problem: &Problem| -> Result<f64, Box<dyn std::error::Error>> {
+        let key = match problem {
+            Problem::Assignment(_) => "hungarian",
+            Problem::Ot(_) => "ssp-exact",
+        };
+        Ok(solvers.solve(key, &config, problem, &SolveRequest::new(0.0))?.cost)
+    };
 
     // ---------- stage 1: Figure-1 slice through the coordinator ----------
     println!("=== stage 1: Figure-1 slice (synthetic, Euclidean costs) ===\n");
@@ -47,16 +57,16 @@ fn main() -> anyhow::Result<()> {
         engines.iter().map(|(name, _)| Series::new(*name)).collect();
     let mut error_series = Series::new("pr-native additive error / budget");
     for &n in &sizes {
-        let inst = Workload::Fig1 { n }.assignment(42);
-        let exact = Hungarian.solve_assignment(&inst, 0.0)?;
-        let budget = eps * n as f64 * inst.costs.max() as f64;
+        let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(42));
+        let exact = exact_of(&problem)?;
+        let budget = eps * n as f64 * problem.costs().max() as f64;
         for ((_, engine), series) in engines.iter().zip(&mut runtime_series) {
-            let h = coord.submit(JobKind::Assignment(inst.clone()), eps, *engine)?;
+            let h = coord.submit(problem.clone(), eps, *engine)?;
             let out = h.wait()?;
-            let res = out.result.map_err(|e| anyhow::anyhow!("{e}"))?;
+            let sol = out.result.map_err(|e| format!("{} failed: {e}", engine.name()))?;
             series.push(n as f64, out.solve_secs);
-            if let (Engine::NativeSeq, JobResult::Assignment(sol)) = (engine, &res) {
-                let err = (sol.cost - exact.cost).max(0.0);
+            if *engine == Engine::NativeSeq {
+                let err = (sol.cost - exact).max(0.0);
                 assert!(err <= budget + 1e-6, "guarantee violated at n={n}");
                 error_series.push(n as f64, err / budget);
             }
@@ -68,21 +78,21 @@ fn main() -> anyhow::Result<()> {
     // ---------- stage 2: Figure-2 slice ----------
     println!("=== stage 2: Figure-2 slice (MNIST-style, L1 costs, n=256) ===\n");
     let n = 256;
-    let inst = Workload::Fig2 { n }.assignment(7);
-    let exact = Hungarian.solve_assignment(&inst, 0.0)?;
+    let problem = Problem::Assignment(Workload::Fig2 { n }.assignment(7));
+    let exact = exact_of(&problem)?;
     let eps_grid = [0.75, 0.5, 0.25, 0.1];
     let mut fig2_series: Vec<Series> =
         engines.iter().map(|(name, _)| Series::new(*name)).collect();
     for &e in &eps_grid {
         for ((_, engine), series) in engines.iter().zip(&mut fig2_series) {
-            let h = coord.submit(JobKind::Assignment(inst.clone()), e, *engine)?;
+            let h = coord.submit(problem.clone(), e, *engine)?;
             let out = h.wait()?;
-            let res = out.result.map_err(|er| anyhow::anyhow!("{er}"))?;
+            let sol = out.result.map_err(|er| format!("{} failed: {er}", engine.name()))?;
             series.push(e, out.solve_secs);
-            if let JobResult::Assignment(sol) = &res {
-                let budget = e * n as f64 * inst.costs.max() as f64;
+            if sol.matching().is_some() {
+                let budget = e * n as f64 * problem.costs().max() as f64;
                 assert!(
-                    sol.cost <= exact.cost + budget + 1e-6,
+                    sol.cost <= exact + budget + 1e-6,
                     "{engine:?} violated budget at eps={e}"
                 );
             }
@@ -94,15 +104,14 @@ fn main() -> anyhow::Result<()> {
     println!("=== stage 3: general OT (random masses) vs exact SSP ===\n");
     let mut ot_err = Series::new("additive error / (ε·c_max)");
     for &e in &[0.4, 0.2, 0.1] {
-        let inst = Workload::Fig1 { n: 40 }.ot_with_random_masses(5);
-        let exact = SspExactOt::default().solve_ot(&inst, 0.0)?;
-        let h = coord.submit(JobKind::Ot(inst.clone()), e, Engine::Auto)?;
+        let problem = Problem::Ot(Workload::Fig1 { n: 40 }.ot_with_random_masses(5));
+        let exact = exact_of(&problem)?;
+        let budget = e * problem.costs().max() as f64;
+        let h = coord.submit(problem, e, Engine::Auto)?;
         let out = h.wait()?;
-        let JobResult::Ot(sol) = out.result.map_err(|er| anyhow::anyhow!("{er}"))? else {
-            unreachable!()
-        };
-        let budget = e * inst.costs.max() as f64;
-        let err = (sol.cost - exact.cost).max(0.0);
+        let sol = out.result.map_err(|er| format!("OT job failed: {er}"))?;
+        assert!(sol.plan().is_some(), "OT jobs return plans");
+        let err = (sol.cost - exact).max(0.0);
         assert!(err <= budget + 1e-9);
         ot_err.push(e, err / budget);
     }
@@ -111,12 +120,12 @@ fn main() -> anyhow::Result<()> {
     // ---------- stage 4: headline ----------
     println!("=== stage 4: headline — PR vs Sinkhorn at equal accuracy ===\n");
     let n = 512;
-    let inst = Workload::Fig1 { n }.assignment(3);
+    let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(3));
     let mut rows = Vec::new();
     for (name, engine) in [("pr-native", Engine::NativeSeq), ("sinkhorn", Engine::SinkhornNative)]
     {
         for e in [0.1, 0.01] {
-            let h = coord.submit(JobKind::Assignment(inst.clone()), e, engine)?;
+            let h = coord.submit(problem.clone(), e, engine)?;
             let out = h.wait()?;
             match out.result {
                 Ok(_) => rows.push((name, e, out.solve_secs, "ok".to_string())),

@@ -9,11 +9,9 @@
 //!
 //!     cargo run --release --example image_retrieval
 
-use otpr::core::{CostMatrix, OtInstance};
+use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use otpr::core::CostMatrix;
 use otpr::data::images;
-use otpr::solvers::ot_push_relabel::OtPushRelabel;
-use otpr::solvers::ssp_ot::SspExactOt;
-use otpr::solvers::OtSolver;
 use otpr::util::rng::Pcg32;
 
 const SIDE: usize = 14; // 28×28 downsampled 2× → 196-point supports
@@ -43,16 +41,20 @@ fn grid_costs() -> CostMatrix {
 }
 
 fn ot_distance(
+    solvers: &SolverRegistry,
     costs: &CostMatrix,
     from: &[f64],
     to: &[f64],
     eps: f64,
-) -> anyhow::Result<f64> {
-    let inst = OtInstance::new(costs.clone(), to.to_vec(), from.to_vec())?;
-    Ok(OtPushRelabel::new().solve_ot(&inst, eps)?.cost)
+) -> Result<f64, Box<dyn std::error::Error>> {
+    let problem = Problem::ot(costs.clone(), to.to_vec(), from.to_vec())?;
+    let sol =
+        solvers.solve("native-seq", &SolverConfig::default(), &problem, &SolveRequest::new(eps))?;
+    Ok(sol.cost)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let solvers = SolverRegistry::with_defaults();
     let mut rng = Pcg32::new(77);
     let corpus: Vec<Vec<f64>> =
         images::synthetic_digits(12, &mut rng).iter().map(|im| downsample(im)).collect();
@@ -60,11 +62,10 @@ fn main() -> anyhow::Result<()> {
     let costs = grid_costs();
     let eps = 0.05;
 
-    let mut scored: Vec<(usize, f64)> = corpus
-        .iter()
-        .enumerate()
-        .map(|(i, img)| Ok((i, ot_distance(&costs, &query, img, eps)?)))
-        .collect::<anyhow::Result<_>>()?;
+    let mut scored: Vec<(usize, f64)> = Vec::new();
+    for (i, img) in corpus.iter().enumerate() {
+        scored.push((i, ot_distance(&solvers, &costs, &query, img, eps)?));
+    }
     scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
 
     println!("query = corpus[3]; ranking by ε-approximate OT distance:");
@@ -75,9 +76,15 @@ fn main() -> anyhow::Result<()> {
     assert!(scored[0].1 <= eps * costs.max() as f64 + 1e-9, "self-distance ≈ 0 within ε");
 
     // cross-check the top-3 ordering against exact OT
-    let exact = |img: &Vec<f64>| -> anyhow::Result<f64> {
-        let inst = OtInstance::new(costs.clone(), img.clone(), query.clone())?;
-        Ok(SspExactOt::default().solve_ot(&inst, 0.0)?.cost)
+    let exact = |img: &Vec<f64>| -> Result<f64, Box<dyn std::error::Error>> {
+        let problem = Problem::ot(costs.clone(), img.clone(), query.clone())?;
+        let sol = solvers.solve(
+            "ssp-exact",
+            &SolverConfig::default(),
+            &problem,
+            &SolveRequest::new(0.0),
+        )?;
+        Ok(sol.cost)
     };
     for (idx, approx) in scored.iter().take(3) {
         let ex = exact(&corpus[*idx])?;

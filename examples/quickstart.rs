@@ -1,31 +1,45 @@
-//! Quickstart: solve an assignment and an OT instance with the paper's
-//! push-relabel algorithm, and verify the additive guarantee against exact
-//! baselines.
+//! Quickstart: the unified `otpr::api` solve surface in one tour —
+//! registry lookup, request builder, unified `Solution`, progress
+//! observation, and cancellation — verified against exact baselines.
 //!
 //!     cargo run --release --example quickstart
 
+use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
 use otpr::data::workloads::Workload;
-use otpr::solvers::hungarian::Hungarian;
-use otpr::solvers::ot_push_relabel::OtPushRelabel;
-use otpr::solvers::push_relabel::PushRelabel;
-use otpr::solvers::ssp_ot::SspExactOt;
-use otpr::solvers::{AssignmentSolver, OtSolver};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // One registry, one config: every engine is a string key. `otpr
+    // engines` (or api::ENGINE_SPECS) lists them all.
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+
     // --- assignment: 500 random points per side in the unit square ---
     let n = 500;
     let eps = 0.1; // overall additive target: cost ≤ OPT + ε·n·c_max
-    let inst = Workload::Fig1 { n }.assignment(42);
-    let sol = PushRelabel::new().solve_assignment(&inst, eps)?;
+    let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(42));
+
+    // Progress observation: the solver reports (phase, free vertices) live.
+    let phases_seen = Arc::new(AtomicUsize::new(0));
+    let counter = phases_seen.clone();
+    let request = SolveRequest::new(eps)
+        .with_observer(move |_p| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+    let sol = solvers.solve("native-seq", &config, &problem, &request)?;
     println!(
-        "push-relabel: cost = {:.4} in {} phases ({:.1} ms)",
+        "push-relabel: cost = {:.4} in {} phases ({:.1} ms, {} progress events)",
         sol.cost,
         sol.stats.phases,
-        sol.stats.seconds * 1e3
+        sol.stats.seconds * 1e3,
+        phases_seen.load(Ordering::Relaxed),
     );
+    assert!(sol.duals.is_some(), "push-relabel ships its dual certificate");
 
-    let exact = Hungarian.solve_assignment(&inst, 0.0)?;
-    let budget = eps * n as f64 * inst.costs.max() as f64;
+    let exact = solvers.solve("hungarian", &config, &problem, &SolveRequest::new(0.0))?;
+    let budget = eps * n as f64 * problem.costs().max() as f64;
     println!(
         "exact:        cost = {:.4} → additive error {:.4} (guarantee ≤ {budget:.4})",
         exact.cost,
@@ -33,17 +47,26 @@ fn main() -> anyhow::Result<()> {
     );
     assert!(sol.cost <= exact.cost + budget + 1e-6);
 
-    // --- general OT: random masses on the same support ---
-    let inst = Workload::Fig1 { n: 100 }.ot_with_random_masses(7);
-    let sol = OtPushRelabel::new().solve_ot(&inst, eps)?;
-    let exact = SspExactOt::default().solve_ot(&inst, 0.0)?;
+    // --- general OT: random masses on the same support, same engine key ---
+    let problem = Problem::Ot(Workload::Fig1 { n: 100 }.ot_with_random_masses(7));
+    let sol = solvers.solve("native-seq", &config, &problem, &SolveRequest::new(eps))?;
+    let exact = solvers.solve("ssp-exact", &config, &problem, &SolveRequest::new(0.0))?;
     println!(
         "OT: pr = {:.5}, exact = {:.5}, plan support = {} entries (compact!)",
         sol.cost,
         exact.cost,
-        sol.plan.support_size()
+        sol.plan().expect("OT returns a plan").support_size()
     );
-    assert!(sol.cost <= exact.cost + eps * inst.costs.max() as f64 + 1e-9);
+    assert!(sol.cost <= exact.cost + eps * problem.costs().max() as f64 + 1e-9);
+
+    // --- wall-clock budget: a zero budget cancels at the first phase ---
+    let problem = Problem::Assignment(Workload::Fig1 { n: 300 }.assignment(9));
+    let rushed = SolveRequest::new(0.01).with_budget(Duration::ZERO);
+    let sol = solvers.solve("native-seq", &config, &problem, &rushed)?;
+    assert!(sol.is_cancelled(), "budget exhaustion is reported in notes");
+    assert!(sol.matching().unwrap().is_perfect(), "still a usable matching");
+    println!("budgeted solve: cancelled after {} phases, still perfect", sol.stats.phases);
+
     println!("quickstart OK");
     Ok(())
 }

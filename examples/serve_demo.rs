@@ -1,18 +1,21 @@
 //! Serving demo: the L3 coordinator as an OT-solving service — a stream of
 //! heterogeneous requests (assignment + OT, mixed sizes and accuracies)
-//! flows through the router/batcher/worker pool; throughput and the
-//! latency histogram are reported at the end. When artifacts exist, large
+//! flows through the router/batcher/worker pool; throughput, the latency
+//! histogram, and per-engine phase counts (streamed live from the solvers'
+//! progress hook) are reported at the end. When artifacts exist, large
 //! assignment jobs are automatically routed to the XLA engine.
 //!
 //!     cargo run --release --example serve_demo
 
-use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind, JobResult};
+use otpr::api::SolveRequest;
+use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind};
 use otpr::data::workloads::Workload;
 use otpr::runtime::XlaRuntime;
 use otpr::util::rng::Pcg32;
 use otpr::util::timer::Stopwatch;
+use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let runtime = XlaRuntime::open_default()
         .map_err(|e| eprintln!("note: XLA engine disabled ({e})"))
         .ok();
@@ -39,7 +42,10 @@ fn main() -> anyhow::Result<()> {
             let n = 30 + rng.next_below(50) as usize;
             (JobKind::Ot(Workload::Fig1 { n }.ot_with_random_masses(i as u64)), 0.25)
         };
-        handles.push(coord.submit(kind, eps, Engine::Auto)?);
+        // every job carries a generous per-job wall-clock budget — the
+        // coordinator's timeout story is just a SolveRequest field
+        let request = SolveRequest::new(eps).with_budget(Duration::from_secs(30));
+        handles.push(coord.submit_request(kind, request, Engine::Auto)?);
     }
 
     let mut ok = 0usize;
@@ -47,12 +53,13 @@ fn main() -> anyhow::Result<()> {
     for h in handles {
         let out = h.wait()?;
         match out.result {
-            Ok(JobResult::Assignment(sol)) => {
-                assert!(sol.matching.is_perfect());
-                ok += 1;
-            }
-            Ok(JobResult::Ot(sol)) => {
-                assert!((sol.plan.total_mass() - 1.0).abs() < 1e-9);
+            Ok(sol) => {
+                match (sol.matching(), sol.plan()) {
+                    (Some(m), _) => assert!(m.is_perfect()),
+                    (_, Some(p)) => assert!((p.total_mass() - 1.0).abs() < 1e-9),
+                    _ => unreachable!("a solution is a matching or a plan"),
+                }
+                assert!(!sol.is_cancelled(), "30s budget should never trip here");
                 ok += 1;
             }
             Err(e) => eprintln!("job {} failed: {e}", out.id),
@@ -63,6 +70,9 @@ fn main() -> anyhow::Result<()> {
     println!("\n{ok}/{total_jobs} jobs in {wall:.2}s  ({:.1} jobs/s)", ok as f64 / wall);
     println!("engine mix: {by_engine:?}");
     println!("\n--- coordinator metrics ---\n{}", coord.metrics.snapshot());
+    for c in coord.metrics.engine_counters() {
+        println!("live phase feed: {} ran {} phase-events over {} jobs", c.engine, c.phases, c.jobs);
+    }
     coord.shutdown();
     assert_eq!(ok, total_jobs);
     println!("serve_demo OK");

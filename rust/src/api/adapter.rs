@@ -1,0 +1,400 @@
+//! The unified [`Solver`] trait and the adapter layer that lifts every
+//! engine in `solvers/` and `runtime/` onto it.
+//!
+//! Two blanket adapters cover the legacy traits
+//! ([`crate::solvers::AssignmentSolver`] / [`crate::solvers::OtSolver`]);
+//! the four control-aware engines (sequential/parallel/OT push-relabel and
+//! Sinkhorn) get dedicated impls that honor the request's cancellation
+//! token, wall-clock budget, progress observer, and ε semantics. This is
+//! the **only** module that is allowed to name the legacy solver traits —
+//! everything above it (`coordinator`, `exp`, `examples/`, `main.rs`)
+//! speaks [`Solver`] through the [`crate::api::SolverRegistry`].
+
+use crate::api::problem::{Problem, ProblemKind, Solution};
+use crate::api::request::SolveRequest;
+use crate::core::control::CANCELLED_NOTE;
+use crate::core::{Matching, OtInstance, OtprError, Result, TransportPlan};
+use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
+use crate::solvers::ot_push_relabel::OtPushRelabel;
+use crate::solvers::parallel_pr::ParallelPushRelabel;
+use crate::solvers::push_relabel::PushRelabel;
+use crate::solvers::sinkhorn::{Sinkhorn, SinkhornConfig};
+use crate::solvers::{AssignmentSolution, AssignmentSolver, OtSolution, OtSolver, SolveStats};
+use std::sync::Arc;
+
+/// One algorithm behind one name: solves any [`Problem`] kind it declares
+/// support for, under one [`SolveRequest`].
+pub trait Solver: Send + Sync {
+    /// Descriptive algorithm name (the registry key is the canonical
+    /// *engine* name; see [`crate::api::registry`]).
+    fn name(&self) -> &'static str;
+
+    fn supports(&self, kind: ProblemKind) -> bool;
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution>;
+}
+
+fn unsupported(name: &str, kind: ProblemKind) -> OtprError {
+    OtprError::Coordinator(format!("engine {name} does not support {} problems", kind.name()))
+}
+
+/// The coupling a cancelled-before-any-work solve returns, matching what
+/// the native engines produce when stopped at phase 0: an arbitrary
+/// perfect matching (assignment) or the feasible product plan ν⊗μ (OT) —
+/// usable, feasible, no approximation guarantee, `"cancelled"` noted.
+fn cancelled_assignment(n: usize, costs: &crate::core::CostMatrix) -> Solution {
+    let mut m = Matching::empty(n, n);
+    m.complete_arbitrarily();
+    let cost = m.cost(costs);
+    Solution::from_assignment(AssignmentSolution {
+        matching: m,
+        cost,
+        duals: None,
+        stats: SolveStats { notes: vec![CANCELLED_NOTE.to_string()], ..Default::default() },
+    })
+}
+
+fn cancelled_ot(ot: &OtInstance) -> Solution {
+    let mut plan = TransportPlan::zeros(ot.costs.nb, ot.costs.na);
+    for b in 0..ot.costs.nb {
+        for a in 0..ot.costs.na {
+            plan.set(b, a, ot.supply[b] * ot.demand[a]);
+        }
+    }
+    let cost = plan.cost(&ot.costs);
+    Solution::from_ot(OtSolution {
+        plan,
+        cost,
+        stats: SolveStats { notes: vec![CANCELLED_NOTE.to_string()], ..Default::default() },
+    })
+}
+
+/// Blanket adapter: any [`AssignmentSolver`] as a [`Solver`] (assignment
+/// problems only). `eps` passes through with the wrapped trait's overall
+/// semantics; [`crate::api::EpsSemantics::AlgorithmParam`] is ignored, so
+/// only wrap engines that ignore `eps` entirely (exact/greedy oracles) —
+/// ε-sensitive engines need a dedicated impl (see [`LmrSolver`]).
+pub struct AssignmentAdapter<S>(pub S);
+
+impl<S: AssignmentSolver + Send + Sync> Solver for AssignmentAdapter<S> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn supports(&self, kind: ProblemKind) -> bool {
+        kind == ProblemKind::Assignment
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        let inst = problem
+            .as_assignment()
+            .ok_or_else(|| unsupported(self.name(), problem.kind()))?;
+        Ok(Solution::from_assignment(self.0.solve_assignment(inst, req.eps)?))
+    }
+}
+
+/// Blanket adapter: any [`OtSolver`] as a [`Solver`]. Assignment problems
+/// are answered through their uniform-mass OT relaxation (how the paper
+/// benchmarks Sinkhorn on assignment inputs).
+pub struct OtAdapter<S>(pub S);
+
+impl<S: OtSolver + Send + Sync> Solver for OtAdapter<S> {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn supports(&self, _kind: ProblemKind) -> bool {
+        true
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        let ot = problem.to_ot_instance()?;
+        Ok(Solution::from_ot(self.0.solve_ot(&ot, req.eps)?))
+    }
+}
+
+/// `native-seq`: the paper's sequential push-relabel (§2.2) for assignment
+/// plus the §4 copy-compressed OT solver, behind one engine key.
+pub struct NativeSeqSolver {
+    pub paranoid: bool,
+}
+
+impl Solver for NativeSeqSolver {
+    fn name(&self) -> &'static str {
+        "native-seq"
+    }
+
+    fn supports(&self, _kind: ProblemKind) -> bool {
+        true
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        match problem {
+            Problem::Assignment(inst) => {
+                let solver = PushRelabel { paranoid: self.paranoid };
+                let sol = solver.solve_with_param_ctl(inst, req.eps_param(3.0), &req.control())?;
+                Ok(Solution::from_assignment(sol))
+            }
+            Problem::Ot(inst) => {
+                // OT ε is always the overall additive target (ε·c_max)
+                let solver = OtPushRelabel { paranoid: self.paranoid };
+                let sol =
+                    solver.solve_with_params_ctl(inst, req.eps, req.eps / 6.0, &req.control())?;
+                Ok(Solution::from_ot(sol))
+            }
+        }
+    }
+}
+
+/// `native-parallel`: propose–accept multi-threaded push-relabel for
+/// assignment; OT runs the sequential §4 solver (its phases are not yet
+/// parallelized — same routing the coordinator always used).
+pub struct NativeParallelSolver {
+    pub threads: usize,
+    pub paranoid: bool,
+}
+
+impl Solver for NativeParallelSolver {
+    fn name(&self) -> &'static str {
+        "native-parallel"
+    }
+
+    fn supports(&self, _kind: ProblemKind) -> bool {
+        true
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        match problem {
+            Problem::Assignment(inst) => {
+                let solver = ParallelPushRelabel::with_threads(self.threads);
+                let sol = solver.solve_with_param_ctl(inst, req.eps_param(3.0), &req.control())?;
+                Ok(Solution::from_assignment(sol))
+            }
+            Problem::Ot(inst) => {
+                let solver = OtPushRelabel { paranoid: self.paranoid };
+                let sol =
+                    solver.solve_with_params_ctl(inst, req.eps, req.eps / 6.0, &req.control())?;
+                Ok(Solution::from_ot(sol))
+            }
+        }
+    }
+}
+
+/// `lmr`: the LMR'19 baseline, with proper ε semantics — overall requests
+/// run the core at ε/2 (rounding + completion), raw requests drive the
+/// algorithm parameter directly, mirroring the push-relabel engines so
+/// one `--eps` means the same target across a comparison.
+pub struct LmrSolver;
+
+impl Solver for LmrSolver {
+    fn name(&self) -> &'static str {
+        "lmr"
+    }
+
+    fn supports(&self, kind: ProblemKind) -> bool {
+        kind == ProblemKind::Assignment
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        let inst = problem
+            .as_assignment()
+            .ok_or_else(|| unsupported(self.name(), problem.kind()))?;
+        let sol = crate::solvers::lmr::LmrBaseline.solve_with_param(inst, req.eps_param(2.0))?;
+        Ok(Solution::from_assignment(sol))
+    }
+}
+
+/// `sinkhorn-native`: the AWR'17-parameterized Sinkhorn baseline. Both
+/// problem kinds (assignment via uniform masses).
+pub struct SinkhornSolver {
+    pub log_domain: bool,
+    pub max_iters: usize,
+}
+
+impl Solver for SinkhornSolver {
+    fn name(&self) -> &'static str {
+        "sinkhorn-native"
+    }
+
+    fn supports(&self, _kind: ProblemKind) -> bool {
+        true
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        let ot = problem.to_ot_instance()?;
+        let solver = Sinkhorn {
+            config: SinkhornConfig {
+                log_domain: self.log_domain,
+                max_iters: self.max_iters,
+                ..Default::default()
+            },
+        };
+        Ok(Solution::from_ot(solver.solve_ot_ctl(&ot, req.eps, &req.control())?))
+    }
+}
+
+/// `xla`: device-resident push-relabel over the AOT artifacts. Assignment
+/// only (the artifact set has no OT phase loop); jobs fail cleanly when no
+/// runtime is loaded. Cancellation is honored at dispatch granularity: a
+/// request already stopped at dispatch time returns the same
+/// cancelled-at-phase-0 coupling the native engines produce; mid-solve
+/// budget expiry is not yet polled between device round trips.
+pub struct XlaEngineSolver {
+    pub runtime: Option<Arc<XlaRuntime>>,
+    /// Reject instances that are not an exact artifact size instead of
+    /// padding up to the next bucket.
+    pub require_exact_bucket: bool,
+}
+
+impl Solver for XlaEngineSolver {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn supports(&self, kind: ProblemKind) -> bool {
+        kind == ProblemKind::Assignment
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        let rt = self
+            .runtime
+            .clone()
+            .ok_or_else(|| OtprError::Coordinator("no XLA runtime loaded".into()))?;
+        let inst = problem.as_assignment().ok_or_else(|| {
+            OtprError::Coordinator("XLA engine supports assignment jobs only (OT runs native)".into())
+        })?;
+        if req.control().should_stop() {
+            return Ok(cancelled_assignment(inst.n(), &inst.costs));
+        }
+        if self.require_exact_bucket && !rt.registry.sizes.contains(&inst.n()) {
+            return Err(OtprError::Artifact(format!(
+                "bucket policy exact-only: no artifact of size {} (available: {:?})",
+                inst.n(),
+                rt.registry.sizes
+            )));
+        }
+        let sol = XlaAssignment::new(rt).solve_costs(inst, req.eps_param(3.0))?;
+        Ok(Solution::from_assignment(sol))
+    }
+}
+
+/// `sinkhorn-xla`: device-resident Sinkhorn over the artifacts; both
+/// problem kinds (assignment via uniform masses). Like [`XlaEngineSolver`],
+/// cancellation is honored at dispatch granularity.
+pub struct XlaSinkhornSolver {
+    pub runtime: Option<Arc<XlaRuntime>>,
+    pub max_iters: usize,
+}
+
+impl Solver for XlaSinkhornSolver {
+    fn name(&self) -> &'static str {
+        "sinkhorn-xla"
+    }
+
+    fn supports(&self, _kind: ProblemKind) -> bool {
+        true
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        let rt = self
+            .runtime
+            .clone()
+            .ok_or_else(|| OtprError::Coordinator("no XLA runtime loaded".into()))?;
+        let ot = problem.to_ot_instance()?;
+        if req.control().should_stop() {
+            return Ok(cancelled_ot(&ot));
+        }
+        let mut solver = XlaSinkhorn::new(rt);
+        solver.max_iters = self.max_iters;
+        Ok(Solution::from_ot(solver.solve_ot(&ot, req.eps)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::request::CancelToken;
+    use crate::data::workloads::Workload;
+    use crate::solvers::hungarian::Hungarian;
+    use crate::solvers::ssp_ot::SspExactOt;
+
+    fn assignment(n: usize, seed: u64) -> Problem {
+        Problem::Assignment(Workload::RandomCosts { n }.assignment(seed))
+    }
+
+    #[test]
+    fn assignment_adapter_rejects_ot() {
+        let s = AssignmentAdapter(Hungarian);
+        assert!(s.supports(ProblemKind::Assignment));
+        assert!(!s.supports(ProblemKind::Ot));
+        let ot = Problem::Ot(Workload::Fig1 { n: 6 }.ot_with_random_masses(1));
+        assert!(s.solve(&ot, &SolveRequest::new(0.1)).is_err());
+        let sol = s.solve(&assignment(8, 1), &SolveRequest::new(0.0)).unwrap();
+        assert!(sol.matching().unwrap().is_perfect());
+    }
+
+    #[test]
+    fn ot_adapter_lifts_assignment_to_uniform_ot() {
+        let s = OtAdapter(SspExactOt::default());
+        let sol = s.solve(&assignment(6, 2), &SolveRequest::new(0.1)).unwrap();
+        let plan = sol.plan().expect("OT adapter returns a plan");
+        assert!((plan.total_mass() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_seq_solves_both_kinds_with_duals() {
+        let s = NativeSeqSolver { paranoid: true };
+        let sol = s.solve(&assignment(12, 3), &SolveRequest::new(0.3)).unwrap();
+        assert!(sol.matching().unwrap().is_perfect());
+        assert!(sol.duals.is_some(), "push-relabel emits its dual certificate");
+
+        let ot = Problem::Ot(Workload::Fig1 { n: 10 }.ot_with_random_masses(3));
+        let sol = s.solve(&ot, &SolveRequest::new(0.3)).unwrap();
+        assert!((sol.plan().unwrap().total_mass() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancelled_request_noted() {
+        let token = CancelToken::new();
+        token.cancel();
+        let req = SolveRequest::new(0.2).with_cancel(token);
+        let s = NativeSeqSolver { paranoid: false };
+        let sol = s.solve(&assignment(16, 4), &req).unwrap();
+        assert!(sol.is_cancelled());
+        assert_eq!(sol.stats.phases, 0, "cancelled before the first phase");
+        assert!(sol.matching().unwrap().is_perfect(), "still completed arbitrarily");
+    }
+
+    #[test]
+    fn xla_without_runtime_fails_cleanly() {
+        let s = XlaEngineSolver { runtime: None, require_exact_bucket: false };
+        let err = s.solve(&assignment(8, 5), &SolveRequest::new(0.3)).unwrap_err();
+        assert!(err.to_string().contains("no XLA runtime"));
+    }
+
+    #[test]
+    fn xla_engines_cancel_like_native_not_with_err() {
+        // Same contract as the native engines: a stopped request yields a
+        // usable coupling with a "cancelled" note, not a job failure.
+        let dir = std::env::temp_dir().join("otpr_adapter_xla_cancel");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version":2,"sizes":[],"artifacts":[]}"#)
+            .unwrap();
+        let rt = crate::runtime::XlaRuntime::open(&dir).unwrap();
+        let token = CancelToken::new();
+        token.cancel();
+        let req = SolveRequest::new(0.2).with_cancel(token);
+
+        let s = XlaEngineSolver { runtime: Some(rt.clone()), require_exact_bucket: false };
+        let sol = s.solve(&assignment(8, 1), &req).unwrap();
+        assert!(sol.is_cancelled());
+        assert!(sol.matching().unwrap().is_perfect());
+
+        let s = XlaSinkhornSolver { runtime: Some(rt), max_iters: 10 };
+        let sol = s.solve(&assignment(8, 1), &req).unwrap();
+        assert!(sol.is_cancelled());
+        let plan = sol.plan().unwrap();
+        assert!((plan.total_mass() - 1.0).abs() < 1e-9, "product plan stays feasible");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

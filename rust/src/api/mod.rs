@@ -1,0 +1,45 @@
+//! # The unified solve surface
+//!
+//! One push-relabel framework serves assignment *and* general OT,
+//! sequential *and* parallel, native *and* device-resident — so the crate
+//! exposes exactly one way to name, configure, and invoke a solver:
+//!
+//! ```no_run
+//! use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+//! use otpr::data::workloads::Workload;
+//!
+//! let registry = SolverRegistry::with_defaults();
+//! let config = SolverConfig::default();
+//! let problem = Problem::Assignment(Workload::Fig1 { n: 200 }.assignment(42));
+//! let request = SolveRequest::new(0.1)
+//!     .with_budget(std::time::Duration::from_secs(5))
+//!     .with_observer(|p| eprintln!("phase {}: {} free", p.phase, p.free));
+//! let solution = registry.solve("native-seq", &config, &problem, &request).unwrap();
+//! println!("cost {} in {} phases", solution.cost, solution.stats.phases);
+//! ```
+//!
+//! * [`Problem`] / [`Solution`] — the one model for both workload kinds
+//!   and both result shapes (matching or plan), with the dual certificate
+//!   and [`crate::solvers::SolveStats`] attached.
+//! * [`SolverRegistry`] — canonical engine names ([`registry::ENGINE_SPECS`])
+//!   mapped to builder closures over a typed [`SolverConfig`].
+//! * [`SolveRequest`] — per-solve accuracy, wall-clock budget,
+//!   [`CancelToken`], and [`Progress`] observer, honored by the
+//!   push-relabel family and Sinkhorn between phases.
+//!
+//! See `rust/src/api/README.md` for the migration table from the legacy
+//! `AssignmentSolver`/`OtSolver` traits.
+
+pub mod adapter;
+pub mod problem;
+pub mod registry;
+pub mod request;
+
+pub use adapter::{AssignmentAdapter, OtAdapter, Solver};
+pub use problem::{Coupling, Problem, ProblemKind, Solution};
+pub use registry::{
+    canonical_key, BucketPolicy, EngineSpec, SolverConfig, SolverRegistry, ENGINE_SPECS,
+};
+pub use request::{
+    CancelToken, EpsSemantics, Progress, ProgressFn, SolveControl, SolveRequest, CANCELLED_NOTE,
+};

@@ -1,0 +1,217 @@
+//! The unified problem/solution model.
+//!
+//! One [`Problem`] covers both workloads the paper's framework serves
+//! (assignment §2–3, general OT §4); one [`Solution`] covers both result
+//! shapes (perfect matching or transport plan) plus the dual certificate
+//! and solve counters. This replaces the parallel
+//! `AssignmentSolution`/`OtSolution` pair at the public boundary — those
+//! remain as internal carrier types inside `solvers/`.
+
+use crate::core::{
+    AssignmentInstance, CostMatrix, DualWeights, Matching, OtInstance, OtprError, Result,
+    TransportPlan,
+};
+use crate::solvers::{matching_to_plan, AssignmentSolution, OtSolution, SolveStats};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProblemKind {
+    Assignment,
+    Ot,
+}
+
+impl ProblemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProblemKind::Assignment => "assignment",
+            ProblemKind::Ot => "ot",
+        }
+    }
+}
+
+/// What to solve: an n×n assignment or a general discrete-OT instance.
+#[derive(Debug, Clone)]
+pub enum Problem {
+    Assignment(AssignmentInstance),
+    Ot(OtInstance),
+}
+
+impl Problem {
+    /// Assignment problem from a square cost matrix.
+    pub fn assignment(costs: CostMatrix) -> Result<Self> {
+        Ok(Problem::Assignment(AssignmentInstance::new(costs)?))
+    }
+
+    /// OT problem from costs + probability masses (demand over columns,
+    /// supply over rows).
+    pub fn ot(costs: CostMatrix, demand: Vec<f64>, supply: Vec<f64>) -> Result<Self> {
+        Ok(Problem::Ot(OtInstance::new(costs, demand, supply)?))
+    }
+
+    pub fn kind(&self) -> ProblemKind {
+        match self {
+            Problem::Assignment(_) => ProblemKind::Assignment,
+            Problem::Ot(_) => ProblemKind::Ot,
+        }
+    }
+
+    /// Instance size (max side for rectangular OT).
+    pub fn n(&self) -> usize {
+        match self {
+            Problem::Assignment(i) => i.n(),
+            Problem::Ot(i) => i.n(),
+        }
+    }
+
+    pub fn costs(&self) -> &CostMatrix {
+        match self {
+            Problem::Assignment(i) => &i.costs,
+            Problem::Ot(i) => &i.costs,
+        }
+    }
+
+    pub fn as_assignment(&self) -> Option<&AssignmentInstance> {
+        match self {
+            Problem::Assignment(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    pub fn as_ot(&self) -> Option<&OtInstance> {
+        match self {
+            Problem::Ot(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    /// View the problem as OT: assignment instances become uniform-mass OT
+    /// (how the paper benchmarks Sinkhorn on assignment inputs).
+    pub fn to_ot_instance(&self) -> Result<OtInstance> {
+        match self {
+            Problem::Assignment(i) => OtInstance::uniform(i.costs.clone()),
+            Problem::Ot(i) => Ok(i.clone()),
+        }
+    }
+}
+
+/// The coupling a solver produced: a perfect matching (assignment engines)
+/// or a transport plan (OT engines — including OT engines answering
+/// assignment problems via uniform masses).
+#[derive(Debug, Clone)]
+pub enum Coupling {
+    Matching(Matching),
+    Plan(TransportPlan),
+}
+
+/// Unified solve result: coupling + cost under the original costs +
+/// optional ε-unit dual certificate + counters.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub coupling: Coupling,
+    /// Total cost under the *original* (unrounded) cost matrix.
+    pub cost: f64,
+    /// Dual weights certifying approximate optimality, when the engine
+    /// maintains them (the push-relabel assignment family).
+    pub duals: Option<DualWeights>,
+    pub stats: SolveStats,
+}
+
+impl Solution {
+    pub fn from_assignment(sol: AssignmentSolution) -> Self {
+        Self {
+            coupling: Coupling::Matching(sol.matching),
+            cost: sol.cost,
+            duals: sol.duals,
+            stats: sol.stats,
+        }
+    }
+
+    pub fn from_ot(sol: OtSolution) -> Self {
+        Self { coupling: Coupling::Plan(sol.plan), cost: sol.cost, duals: None, stats: sol.stats }
+    }
+
+    pub fn matching(&self) -> Option<&Matching> {
+        match &self.coupling {
+            Coupling::Matching(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn plan(&self) -> Option<&TransportPlan> {
+        match &self.coupling {
+            Coupling::Plan(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// The solution as a transport plan regardless of coupling shape — a
+    /// matching becomes the uniform-mass plan it induces (1/n per edge).
+    pub fn to_plan(&self) -> TransportPlan {
+        match &self.coupling {
+            Coupling::Plan(p) => p.clone(),
+            Coupling::Matching(m) => matching_to_plan(m),
+        }
+    }
+
+    /// Require the matching form (typed accessor for assignment callers).
+    pub fn expect_matching(&self) -> Result<&Matching> {
+        self.matching().ok_or_else(|| {
+            OtprError::Coordinator("solution carries a transport plan, not a matching".into())
+        })
+    }
+
+    /// Require the plan form (typed accessor for OT callers).
+    pub fn expect_plan(&self) -> Result<&TransportPlan> {
+        self.plan().ok_or_else(|| {
+            OtprError::Coordinator("solution carries a matching, not a transport plan".into())
+        })
+    }
+
+    /// True when the solve stopped early on cancellation or budget.
+    pub fn is_cancelled(&self) -> bool {
+        self.stats.notes.iter().any(|n| n == crate::core::control::CANCELLED_NOTE)
+    }
+
+    pub fn phases(&self) -> usize {
+        self.stats.phases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::workloads::Workload;
+
+    #[test]
+    fn problem_constructors_and_kind() {
+        let p = Problem::assignment(Workload::RandomCosts { n: 4 }.costs(1)).unwrap();
+        assert_eq!(p.kind(), ProblemKind::Assignment);
+        assert_eq!(p.n(), 4);
+        assert!(p.as_assignment().is_some());
+        assert!(p.as_ot().is_none());
+
+        let ot = p.to_ot_instance().unwrap();
+        assert_eq!(ot.demand.len(), 4);
+        assert!(Problem::assignment(CostMatrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn solution_accessors_round_trip() {
+        let mut m = Matching::empty(2, 2);
+        m.link(0, 1);
+        m.link(1, 0);
+        let sol = Solution::from_assignment(AssignmentSolution {
+            matching: m,
+            cost: 1.5,
+            duals: None,
+            stats: SolveStats::default(),
+        });
+        assert!(sol.matching().is_some());
+        assert!(sol.plan().is_none());
+        assert!(sol.expect_matching().is_ok());
+        assert!(sol.expect_plan().is_err());
+        let plan = sol.to_plan();
+        assert!((plan.total_mass() - 1.0).abs() < 1e-12);
+        assert!((plan.at(0, 1) - 0.5).abs() < 1e-12);
+        assert!(!sol.is_cancelled());
+    }
+}

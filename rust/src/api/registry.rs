@@ -1,0 +1,443 @@
+//! Typed solver registry: the single place where engine names, aliases,
+//! capabilities, and construction live.
+//!
+//! [`ENGINE_SPECS`] is the canonical name table — `coordinator::Engine`
+//! parses/prints through it, so an engine name accepted on the CLI, in a
+//! job request, or in an experiment config is by construction a key this
+//! registry can build. [`SolverRegistry::with_defaults`] attaches a builder
+//! closure to every spec; callers may also [`SolverRegistry::register`]
+//! their own keys (new backends need one registration, not five call-site
+//! edits).
+
+use crate::api::adapter::{
+    AssignmentAdapter, LmrSolver, NativeParallelSolver, NativeSeqSolver, OtAdapter,
+    SinkhornSolver, Solver, XlaEngineSolver, XlaSinkhornSolver,
+};
+use crate::api::problem::{Problem, ProblemKind, Solution};
+use crate::api::request::SolveRequest;
+use crate::core::{OtprError, Result};
+use crate::runtime::XlaRuntime;
+use crate::solvers::greedy::GreedyMatcher;
+use crate::solvers::hungarian::Hungarian;
+use crate::solvers::ssp_ot::SspExactOt;
+use crate::util::pool;
+use std::fmt;
+use std::sync::Arc;
+
+/// Canonical engine name + aliases + capability flags.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineSpec {
+    pub key: &'static str,
+    pub aliases: &'static [&'static str],
+    pub assignment: bool,
+    pub ot: bool,
+    pub doc: &'static str,
+}
+
+/// The default engine table. Keys are what [`crate::coordinator::Engine`]
+/// round-trips through; aliases keep historical CLI/harness spellings
+/// working.
+pub const ENGINE_SPECS: &[EngineSpec] = &[
+    EngineSpec {
+        key: "native-seq",
+        aliases: &["native", "seq", "pr", "pr-cpu", "pr-native"],
+        assignment: true,
+        ot: true,
+        doc: "paper §2.2 sequential push-relabel + §4 OT solver (native Rust)",
+    },
+    EngineSpec {
+        key: "native-parallel",
+        aliases: &["parallel", "par", "pr-parallel"],
+        assignment: true,
+        ot: true,
+        doc: "propose-accept multi-threaded push-relabel (§3.2)",
+    },
+    EngineSpec {
+        key: "xla",
+        aliases: &["gpu", "pr-xla", "pr-gpu"],
+        assignment: true,
+        ot: false,
+        doc: "device-resident push-relabel over the AOT XLA artifacts",
+    },
+    EngineSpec {
+        // no "sinkhorn-log" alias: the update rule is a SolverConfig
+        // choice, and an alias promising log-domain could silently run
+        // the standard kernel.
+        key: "sinkhorn-native",
+        aliases: &["sinkhorn", "sinkhorn-cpu"],
+        assignment: true,
+        ot: true,
+        doc: "Sinkhorn baseline, AWR'17 additive parameterization (native Rust)",
+    },
+    EngineSpec {
+        key: "sinkhorn-xla",
+        aliases: &["sinkhorn-gpu"],
+        assignment: true,
+        ot: true,
+        doc: "Sinkhorn baseline over the XLA artifacts",
+    },
+    EngineSpec {
+        key: "hungarian",
+        aliases: &["exact", "hungarian-exact"],
+        assignment: true,
+        ot: false,
+        doc: "exact Hungarian (Jonker-Volgenant) assignment oracle",
+    },
+    EngineSpec {
+        key: "greedy",
+        aliases: &[],
+        assignment: true,
+        ot: false,
+        doc: "greedy matching cost/runtime floor (no guarantee)",
+    },
+    EngineSpec {
+        key: "lmr",
+        aliases: &["lmr-baseline"],
+        assignment: true,
+        ot: false,
+        doc: "LMR'19 Gabow-Tarjan-style additive baseline (NeurIPS 2019)",
+    },
+    EngineSpec {
+        key: "ssp-exact",
+        aliases: &["exact-ot", "ssp"],
+        assignment: true,
+        ot: true,
+        doc: "exact min-cost-flow OT oracle (successive shortest paths)",
+    },
+];
+
+/// Resolve any engine spelling (key or alias) to its canonical key using
+/// the static table. `coordinator::Engine::parse` goes through here.
+pub fn canonical_key(name: &str) -> Option<&'static str> {
+    ENGINE_SPECS
+        .iter()
+        .find(|s| s.key == name || s.aliases.contains(&name))
+        .map(|s| s.key)
+}
+
+/// How the XLA engine maps instance sizes onto fixed-shape artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BucketPolicy {
+    /// Pad up to the smallest artifact bucket that fits (default).
+    #[default]
+    SmallestFit,
+    /// Only accept instances whose size is an exact artifact size.
+    ExactOnly,
+}
+
+/// Typed construction-time configuration shared by every builder.
+///
+/// Per-request knobs (accuracy, budget, cancellation, observer) live on
+/// [`SolveRequest`]; this struct holds what is fixed when a solver is
+/// built: resources (threads, XLA runtime), policies, and defaults.
+#[derive(Clone)]
+pub struct SolverConfig {
+    /// Default accuracy target used by [`SolverConfig::request`].
+    pub eps: f64,
+    /// Threads for the native parallel engine.
+    pub threads: usize,
+    /// Seed reserved for stochastic engines / tie-breaking experiments.
+    pub seed: u64,
+    /// Verify solver invariants after every phase (tests, `otpr validate`).
+    pub paranoid: bool,
+    /// Sinkhorn update rule: log-domain (robust, the service default) vs
+    /// standard kernel (faster; underflows at small ε — ablation A5).
+    pub sinkhorn_log_domain: bool,
+    pub sinkhorn_max_iters: usize,
+    /// Loaded PJRT runtime for the XLA engines (`None` ⇒ they fail cleanly).
+    pub xla_runtime: Option<Arc<XlaRuntime>>,
+    pub bucket_policy: BucketPolicy,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        Self {
+            eps: 0.1,
+            threads: pool::default_threads(),
+            seed: 42,
+            paranoid: false,
+            sinkhorn_log_domain: true,
+            sinkhorn_max_iters: 100_000,
+            xla_runtime: None,
+            bucket_policy: BucketPolicy::default(),
+        }
+    }
+}
+
+impl fmt::Debug for SolverConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SolverConfig")
+            .field("eps", &self.eps)
+            .field("threads", &self.threads)
+            .field("seed", &self.seed)
+            .field("paranoid", &self.paranoid)
+            .field("sinkhorn_log_domain", &self.sinkhorn_log_domain)
+            .field("sinkhorn_max_iters", &self.sinkhorn_max_iters)
+            .field("xla_runtime", &self.xla_runtime.is_some())
+            .field("bucket_policy", &self.bucket_policy)
+            .finish()
+    }
+}
+
+impl SolverConfig {
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_runtime(mut self, runtime: Option<Arc<XlaRuntime>>) -> Self {
+        self.xla_runtime = runtime;
+        self
+    }
+
+    pub fn with_paranoid(mut self, paranoid: bool) -> Self {
+        self.paranoid = paranoid;
+        self
+    }
+
+    /// A request at this config's default accuracy.
+    pub fn request(&self) -> SolveRequest {
+        SolveRequest::new(self.eps)
+    }
+}
+
+type BuilderFn = Box<dyn Fn(&SolverConfig) -> Box<dyn Solver> + Send + Sync>;
+
+/// One registered engine.
+pub struct RegistryEntry {
+    pub key: &'static str,
+    pub aliases: &'static [&'static str],
+    pub assignment: bool,
+    pub ot: bool,
+    pub doc: &'static str,
+    builder: BuilderFn,
+}
+
+impl RegistryEntry {
+    pub fn supports(&self, kind: ProblemKind) -> bool {
+        match kind {
+            ProblemKind::Assignment => self.assignment,
+            ProblemKind::Ot => self.ot,
+        }
+    }
+}
+
+impl fmt::Debug for RegistryEntry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RegistryEntry")
+            .field("key", &self.key)
+            .field("aliases", &self.aliases)
+            .field("assignment", &self.assignment)
+            .field("ot", &self.ot)
+            .finish()
+    }
+}
+
+/// String key → boxed builder closure registry.
+#[derive(Default)]
+pub struct SolverRegistry {
+    entries: Vec<RegistryEntry>,
+}
+
+impl SolverRegistry {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// All built-in engines of [`ENGINE_SPECS`] with their default builders.
+    pub fn with_defaults() -> Self {
+        let mut reg = Self::empty();
+        for spec in ENGINE_SPECS {
+            reg.register_spec(*spec, default_builder(spec.key));
+        }
+        reg
+    }
+
+    fn register_spec(&mut self, spec: EngineSpec, builder: BuilderFn) {
+        self.entries.retain(|e| e.key != spec.key);
+        self.entries.push(RegistryEntry {
+            key: spec.key,
+            aliases: spec.aliases,
+            assignment: spec.assignment,
+            ot: spec.ot,
+            doc: spec.doc,
+            builder,
+        });
+    }
+
+    /// Register (or replace) an engine under `key`.
+    pub fn register(
+        &mut self,
+        spec: EngineSpec,
+        builder: impl Fn(&SolverConfig) -> Box<dyn Solver> + Send + Sync + 'static,
+    ) {
+        self.register_spec(spec, Box::new(builder));
+    }
+
+    /// Canonical keys, registration order.
+    pub fn keys(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.key).collect()
+    }
+
+    /// Resolve a key-or-alias to this registry's canonical key.
+    pub fn canonical(&self, name: &str) -> Option<&'static str> {
+        self.entry(name).map(|e| e.key)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&RegistryEntry> {
+        self.entries.iter().find(|e| e.key == name || e.aliases.contains(&name))
+    }
+
+    /// Build the engine registered under `name` (key or alias).
+    pub fn build(&self, name: &str, config: &SolverConfig) -> Result<Box<dyn Solver>> {
+        let entry = self.entry(name).ok_or_else(|| {
+            OtprError::Coordinator(format!(
+                "unknown engine {name:?} (registered: {})",
+                self.keys().join(", ")
+            ))
+        })?;
+        Ok((entry.builder)(config))
+    }
+
+    /// Build + solve in one step, with a capability pre-check so kind
+    /// mismatches produce a uniform error before any work happens.
+    pub fn solve(
+        &self,
+        name: &str,
+        config: &SolverConfig,
+        problem: &Problem,
+        req: &SolveRequest,
+    ) -> Result<Solution> {
+        let entry = self.entry(name).ok_or_else(|| {
+            OtprError::Coordinator(format!(
+                "unknown engine {name:?} (registered: {})",
+                self.keys().join(", ")
+            ))
+        })?;
+        if !entry.supports(problem.kind()) {
+            return Err(OtprError::Coordinator(format!(
+                "engine {} does not support {} problems",
+                entry.key,
+                problem.kind().name()
+            )));
+        }
+        (entry.builder)(config).solve(problem, req)
+    }
+}
+
+fn default_builder(key: &'static str) -> BuilderFn {
+    match key {
+        "native-seq" => Box::new(|cfg| Box::new(NativeSeqSolver { paranoid: cfg.paranoid })),
+        "native-parallel" => Box::new(|cfg| {
+            Box::new(NativeParallelSolver { threads: cfg.threads, paranoid: cfg.paranoid })
+        }),
+        "xla" => Box::new(|cfg| {
+            Box::new(XlaEngineSolver {
+                runtime: cfg.xla_runtime.clone(),
+                require_exact_bucket: cfg.bucket_policy == BucketPolicy::ExactOnly,
+            })
+        }),
+        "sinkhorn-native" => Box::new(|cfg| {
+            Box::new(SinkhornSolver {
+                log_domain: cfg.sinkhorn_log_domain,
+                max_iters: cfg.sinkhorn_max_iters,
+            })
+        }),
+        "sinkhorn-xla" => Box::new(|cfg| {
+            Box::new(XlaSinkhornSolver {
+                runtime: cfg.xla_runtime.clone(),
+                max_iters: cfg.sinkhorn_max_iters,
+            })
+        }),
+        "hungarian" => Box::new(|_| Box::new(AssignmentAdapter(Hungarian))),
+        "greedy" => Box::new(|_| Box::new(AssignmentAdapter(GreedyMatcher))),
+        "lmr" => Box::new(|_| Box::new(LmrSolver)),
+        "ssp-exact" => Box::new(|_| Box::new(OtAdapter(SspExactOt::default()))),
+        other => unreachable!("no default builder for engine key {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::workloads::Workload;
+
+    #[test]
+    fn keys_and_aliases_resolve_uniquely() {
+        let mut seen: Vec<&str> = Vec::new();
+        for spec in ENGINE_SPECS {
+            assert_eq!(canonical_key(spec.key), Some(spec.key), "key must resolve to itself");
+            assert!(!seen.contains(&spec.key), "duplicate key {}", spec.key);
+            seen.push(spec.key);
+            for alias in spec.aliases {
+                assert_eq!(canonical_key(alias), Some(spec.key), "alias {alias}");
+                assert!(!seen.contains(alias), "alias {alias} collides");
+                seen.push(alias);
+            }
+        }
+        assert_eq!(canonical_key("bogus"), None);
+    }
+
+    #[test]
+    fn defaults_cover_every_spec() {
+        let reg = SolverRegistry::with_defaults();
+        assert_eq!(reg.keys().len(), ENGINE_SPECS.len());
+        let cfg = SolverConfig::default();
+        for spec in ENGINE_SPECS {
+            let solver = reg.build(spec.key, &cfg).unwrap();
+            assert_eq!(
+                solver.supports(ProblemKind::Assignment),
+                spec.assignment,
+                "{} assignment capability",
+                spec.key
+            );
+            assert_eq!(solver.supports(ProblemKind::Ot), spec.ot, "{} ot capability", spec.key);
+        }
+    }
+
+    #[test]
+    fn solve_through_registry_both_kinds() {
+        let reg = SolverRegistry::with_defaults();
+        let cfg = SolverConfig::default();
+        let p = Problem::Assignment(Workload::RandomCosts { n: 10 }.assignment(1));
+        // cfg.request() solves at the config's default accuracy target
+        let sol = reg.solve("native-seq", &cfg, &p, &cfg.request()).unwrap();
+        assert!(sol.matching().unwrap().is_perfect());
+        let exact = reg.solve("hungarian", &cfg, &p, &SolveRequest::new(0.0)).unwrap();
+        assert!(sol.cost >= exact.cost - 1e-9);
+
+        let ot = Problem::Ot(Workload::Fig1 { n: 8 }.ot_with_random_masses(2));
+        let sol = reg.solve("native-seq", &cfg, &ot, &SolveRequest::new(0.3)).unwrap();
+        assert!((sol.plan().unwrap().total_mass() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aliases_build_and_kind_mismatch_is_caught() {
+        let reg = SolverRegistry::with_defaults();
+        let cfg = SolverConfig::default();
+        assert_eq!(reg.canonical("pr-cpu"), Some("native-seq"));
+        assert_eq!(reg.canonical("gpu"), Some("xla"));
+        let ot = Problem::Ot(Workload::Fig1 { n: 6 }.ot_with_random_masses(1));
+        let err = reg.solve("hungarian", &cfg, &ot, &SolveRequest::new(0.1)).unwrap_err();
+        assert!(err.to_string().contains("does not support ot"));
+        assert!(reg.build("nope", &cfg).is_err());
+    }
+
+    #[test]
+    fn custom_registration_replaces_and_extends() {
+        let mut reg = SolverRegistry::with_defaults();
+        let n_before = reg.keys().len();
+        reg.register(
+            EngineSpec {
+                key: "greedy",
+                aliases: &["floor"],
+                assignment: true,
+                ot: false,
+                doc: "re-registered",
+            },
+            |_| Box::new(AssignmentAdapter(GreedyMatcher)),
+        );
+        assert_eq!(reg.keys().len(), n_before, "re-registration replaces");
+        assert_eq!(reg.canonical("floor"), Some("greedy"));
+    }
+}

@@ -1,0 +1,169 @@
+//! Solve requests: accuracy target, wall-clock budget, cancellation, and
+//! progress observation — the one configuration object every engine
+//! understands.
+//!
+//! [`SolveRequest`] is what callers build; [`SolveControl`] (defined in
+//! [`crate::core::control`] so the algorithm layer never depends on this
+//! module) is the solver-facing snapshot of it, with the budget already
+//! resolved into a deadline. The push-relabel family and Sinkhorn poll
+//! [`SolveControl::should_stop`] between phases and report
+//! (phase, free-mass-remaining) through [`SolveControl::report`], which is
+//! how the coordinator implements job timeouts and live per-engine phase
+//! metrics without reaching into solver internals.
+
+// Re-exported here because they are part of the public request surface;
+// they live in core so solvers can use them without an api dependency.
+pub use crate::core::control::{CancelToken, Progress, ProgressFn, SolveControl, CANCELLED_NOTE};
+use std::fmt;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How a request's `eps` is interpreted by the push-relabel assignment
+/// engines (exact and Sinkhorn engines ignore the distinction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EpsSemantics {
+    /// `eps` is the overall additive target: error ≤ eps·n·c_max. The core
+    /// routine runs at ε/3 (paper §1 "Organization"). Default.
+    #[default]
+    Overall,
+    /// `eps` is the raw algorithm parameter (3ε guarantee) — what the
+    /// experiment harnesses drive, matching the paper's own plots.
+    AlgorithmParam,
+}
+
+/// Builder-style description of one solve.
+#[derive(Clone)]
+pub struct SolveRequest {
+    /// Additive accuracy target (relative to c_max); see [`EpsSemantics`].
+    pub eps: f64,
+    pub eps_semantics: EpsSemantics,
+    /// Wall-clock budget. When exceeded the solve stops at the next phase
+    /// boundary, completes arbitrarily, and notes [`CANCELLED_NOTE`].
+    pub budget: Option<Duration>,
+    pub cancel: CancelToken,
+    pub observer: Option<ProgressFn>,
+}
+
+impl Default for SolveRequest {
+    fn default() -> Self {
+        Self::new(0.1)
+    }
+}
+
+impl fmt::Debug for SolveRequest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SolveRequest")
+            .field("eps", &self.eps)
+            .field("eps_semantics", &self.eps_semantics)
+            .field("budget", &self.budget)
+            .field("cancelled", &self.cancel.is_cancelled())
+            .field("observer", &self.observer.is_some())
+            .finish()
+    }
+}
+
+impl SolveRequest {
+    pub fn new(eps: f64) -> Self {
+        Self {
+            eps,
+            eps_semantics: EpsSemantics::Overall,
+            budget: None,
+            cancel: CancelToken::new(),
+            observer: None,
+        }
+    }
+
+    /// Interpret `eps` as the raw algorithm parameter (harness mode).
+    pub fn raw_eps(mut self) -> Self {
+        self.eps_semantics = EpsSemantics::AlgorithmParam;
+        self
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> Self {
+        self.cancel = token;
+        self
+    }
+
+    pub fn with_observer(mut self, f: impl Fn(Progress) + Send + Sync + 'static) -> Self {
+        self.observer = Some(Arc::new(f));
+        self
+    }
+
+    /// Append `f` after any existing observer (both run, in order). The
+    /// coordinator uses this to tee progress into its metrics.
+    pub fn chain_observer(mut self, f: impl Fn(Progress) + Send + Sync + 'static) -> Self {
+        self.observer = Some(match self.observer.take() {
+            Some(prev) => Arc::new(move |p| {
+                prev(p);
+                f(p);
+            }),
+            None => Arc::new(f),
+        });
+        self
+    }
+
+    /// The eps the push-relabel core should run at.
+    pub fn eps_param(&self, overall_divisor: f64) -> f64 {
+        match self.eps_semantics {
+            EpsSemantics::Overall => self.eps / overall_divisor,
+            EpsSemantics::AlgorithmParam => self.eps,
+        }
+    }
+
+    /// Snapshot the request into a solver-facing control handle, resolving
+    /// the budget into a deadline now.
+    pub fn control(&self) -> SolveControl {
+        SolveControl {
+            cancel: Some(self.cancel.clone()),
+            deadline: self.budget.map(|b| Instant::now() + b),
+            observer: self.observer.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn control_stops_on_cancel_and_deadline() {
+        let req = SolveRequest::new(0.1);
+        let ctl = req.control();
+        assert!(!ctl.should_stop());
+        req.cancel.cancel();
+        assert!(ctl.should_stop());
+
+        let req = SolveRequest::new(0.1).with_budget(Duration::ZERO);
+        assert!(req.control().should_stop(), "zero budget expires immediately");
+    }
+
+    #[test]
+    fn observers_chain_in_order() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let (c1, c2) = (count.clone(), count.clone());
+        let req = SolveRequest::new(0.1)
+            .with_observer(move |_| {
+                c1.fetch_add(1, Ordering::Relaxed);
+            })
+            .chain_observer(move |p| {
+                assert_eq!(p.phase, 3);
+                c2.fetch_add(10, Ordering::Relaxed);
+            });
+        req.control().report(3, 7.0);
+        assert_eq!(count.load(Ordering::Relaxed), 11);
+    }
+
+    #[test]
+    fn eps_semantics() {
+        let overall = SolveRequest::new(0.3);
+        assert!((overall.eps_param(3.0) - 0.1).abs() < 1e-12);
+        let raw = SolveRequest::new(0.3).raw_eps();
+        assert!((raw.eps_param(3.0) - 0.3).abs() < 1e-12);
+    }
+}

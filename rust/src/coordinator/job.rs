@@ -1,12 +1,22 @@
 //! Job types flowing through the coordinator.
+//!
+//! A job is a [`Problem`] plus a [`SolveRequest`] plus an [`Engine`]
+//! choice. `Engine` is a thin, copyable alias over the canonical registry
+//! keys of [`crate::api::registry::ENGINE_SPECS`] — parsing and printing
+//! round-trip through that single table, so every name the coordinator
+//! accepts is a name the registry can build.
 
-use crate::core::{AssignmentInstance, OtInstance};
-use crate::solvers::{AssignmentSolution, OtSolution};
+use crate::api::registry::canonical_key;
+use crate::api::{Problem, SolveRequest, Solution};
 
-/// Which solver backend executes a job.
+/// Re-export: the coordinator's job payload *is* the unified API problem.
+pub type JobKind = Problem;
+
+/// Which solver backend executes a job. Variants map 1:1 onto registry
+/// keys, plus `Auto` (router decides, size- and artifact-aware).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Engine {
-    /// Paper §2.2 sequential push-relabel (native Rust).
+    /// Paper §2.2 sequential push-relabel + §4 OT (native Rust).
     NativeSeq,
     /// Propose–accept multi-threaded push-relabel (native Rust).
     NativeParallel,
@@ -16,82 +26,75 @@ pub enum Engine {
     SinkhornNative,
     /// Sinkhorn baseline over the XLA artifacts.
     SinkhornXla,
+    /// Exact Hungarian assignment oracle.
+    Hungarian,
+    /// Greedy matching floor.
+    Greedy,
+    /// LMR'19 combinatorial additive baseline.
+    Lmr,
+    /// Exact min-cost-flow OT oracle.
+    SspExact,
     /// Let the router decide (size- and artifact-aware).
     Auto,
 }
 
 impl Engine {
-    pub fn parse(s: &str) -> Option<Engine> {
-        Some(match s {
-            "native" | "seq" => Engine::NativeSeq,
-            "parallel" | "par" => Engine::NativeParallel,
-            "xla" | "gpu" => Engine::Xla,
-            "sinkhorn" => Engine::SinkhornNative,
-            "sinkhorn-xla" => Engine::SinkhornXla,
-            "auto" => Engine::Auto,
-            _ => return None,
-        })
-    }
+    /// Every concrete (non-Auto) engine, i.e. every registry-backed one.
+    pub const CONCRETE: [Engine; 9] = [
+        Engine::NativeSeq,
+        Engine::NativeParallel,
+        Engine::Xla,
+        Engine::SinkhornNative,
+        Engine::SinkhornXla,
+        Engine::Hungarian,
+        Engine::Greedy,
+        Engine::Lmr,
+        Engine::SspExact,
+    ];
 
-    pub fn name(&self) -> &'static str {
+    /// Canonical registry key (`"auto"` for [`Engine::Auto`]).
+    pub fn key(&self) -> &'static str {
         match self {
             Engine::NativeSeq => "native-seq",
             Engine::NativeParallel => "native-parallel",
             Engine::Xla => "xla",
             Engine::SinkhornNative => "sinkhorn-native",
             Engine::SinkhornXla => "sinkhorn-xla",
+            Engine::Hungarian => "hungarian",
+            Engine::Greedy => "greedy",
+            Engine::Lmr => "lmr",
+            Engine::SspExact => "ssp-exact",
             Engine::Auto => "auto",
         }
     }
-}
 
-/// What to solve.
-#[derive(Debug, Clone)]
-pub enum JobKind {
-    Assignment(AssignmentInstance),
-    Ot(OtInstance),
-}
+    /// Back-compat spelling of [`Engine::key`].
+    pub fn name(&self) -> &'static str {
+        self.key()
+    }
 
-impl JobKind {
-    pub fn n(&self) -> usize {
-        match self {
-            JobKind::Assignment(i) => i.n(),
-            JobKind::Ot(i) => i.n(),
+    /// Variant for an exact canonical registry key.
+    pub fn from_key(key: &str) -> Option<Engine> {
+        Engine::CONCRETE.iter().copied().find(|e| e.key() == key)
+    }
+
+    /// Parse a key **or any registry alias** (`"gpu"`, `"pr-cpu"`, ...).
+    pub fn parse(s: &str) -> Option<Engine> {
+        if s == "auto" {
+            return Some(Engine::Auto);
         }
+        Engine::from_key(canonical_key(s)?)
     }
 }
 
-/// A submitted job.
+/// A submitted job: problem + full solve request + engine choice.
 #[derive(Debug, Clone)]
 pub struct JobRequest {
     pub id: u64,
     pub kind: JobKind,
-    /// Overall additive accuracy target (ε relative to c_max).
-    pub eps: f64,
+    /// Accuracy, budget, cancellation, and progress observation.
+    pub request: SolveRequest,
     pub engine: Engine,
-}
-
-/// Result payload.
-#[derive(Debug, Clone)]
-pub enum JobResult {
-    Assignment(AssignmentSolution),
-    Ot(OtSolution),
-}
-
-impl JobResult {
-    pub fn cost(&self) -> f64 {
-        match self {
-            JobResult::Assignment(s) => s.cost,
-            JobResult::Ot(s) => s.cost,
-        }
-    }
-
-    pub fn phases(&self) -> usize {
-        match self {
-            JobResult::Assignment(s) => s.stats.phases,
-            JobResult::Ot(s) => s.stats.phases,
-        }
-    }
 }
 
 /// Completed job with queueing/solve timing for the metrics layer.
@@ -99,7 +102,7 @@ impl JobResult {
 pub struct JobOutcome {
     pub id: u64,
     pub engine_used: &'static str,
-    pub result: Result<JobResult, String>,
+    pub result: Result<Solution, String>,
     pub queued_secs: f64,
     pub solve_secs: f64,
 }
@@ -107,13 +110,52 @@ pub struct JobOutcome {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::SolverRegistry;
 
     #[test]
     fn engine_parsing() {
         assert_eq!(Engine::parse("xla"), Some(Engine::Xla));
         assert_eq!(Engine::parse("gpu"), Some(Engine::Xla));
         assert_eq!(Engine::parse("auto"), Some(Engine::Auto));
+        assert_eq!(Engine::parse("hungarian"), Some(Engine::Hungarian));
+        assert_eq!(Engine::parse("exact"), Some(Engine::Hungarian));
         assert_eq!(Engine::parse("bogus"), None);
         assert_eq!(Engine::NativeParallel.name(), "native-parallel");
+    }
+
+    #[test]
+    fn every_registry_key_round_trips_through_engine() {
+        // The dedup satellite: registry keys and Engine names are one set.
+        let reg = SolverRegistry::with_defaults();
+        for key in reg.keys() {
+            let engine = Engine::parse(key)
+                .unwrap_or_else(|| panic!("registry key {key} must parse as an Engine"));
+            assert_eq!(engine.name(), key, "Engine::name must round-trip the key");
+            assert_eq!(Engine::from_key(key), Some(engine));
+        }
+        // ...and every concrete Engine is buildable from the registry.
+        let cfg = crate::api::SolverConfig::default();
+        for engine in Engine::CONCRETE {
+            assert!(
+                reg.build(engine.key(), &cfg).is_ok(),
+                "engine {} has no registry builder",
+                engine.key()
+            );
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_engines() {
+        for (alias, expect) in [
+            ("native", Engine::NativeSeq),
+            ("pr-cpu", Engine::NativeSeq),
+            ("par", Engine::NativeParallel),
+            ("sinkhorn", Engine::SinkhornNative),
+            ("sinkhorn-gpu", Engine::SinkhornXla),
+            ("ssp", Engine::SspExact),
+            ("lmr-baseline", Engine::Lmr),
+        ] {
+            assert_eq!(Engine::parse(alias), Some(expect), "{alias}");
+        }
     }
 }

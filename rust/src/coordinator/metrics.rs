@@ -20,7 +20,18 @@ pub struct Metrics {
     latency: [AtomicU64; 10],
     queue_secs_total: Mutex<f64>,
     solve_secs_total: Mutex<f64>,
-    per_engine: Mutex<Vec<(&'static str, u64)>>,
+    per_engine: Mutex<Vec<EngineCounters>>,
+}
+
+/// Per-engine accounting: completed jobs + phase events streamed live from
+/// the solvers' `ProgressObserver` hook.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineCounters {
+    pub engine: &'static str,
+    pub jobs: u64,
+    /// Progress events (push-relabel phases / Sinkhorn stopping checks)
+    /// reported while solving on this engine.
+    pub phases: u64,
 }
 
 impl Metrics {
@@ -52,12 +63,33 @@ impl Metrics {
         self.latency[idx].fetch_add(1, Ordering::Relaxed);
         *self.queue_secs_total.lock().unwrap() += queued;
         *self.solve_secs_total.lock().unwrap() += solve;
-        let mut per = self.per_engine.lock().unwrap();
-        if let Some(e) = per.iter_mut().find(|(n, _)| *n == engine) {
-            e.1 += 1;
-        } else {
-            per.push((engine, 1));
+        self.with_engine(engine, |e| e.jobs += 1);
+    }
+
+    /// Fold `count` solver progress events (phases completed) into
+    /// `engine`'s counters. The worker accumulates per-job in an atomic and
+    /// folds once here, so the metrics lock is taken per job, not per phase.
+    pub fn record_phases(&self, engine: &'static str, count: u64) {
+        if count > 0 {
+            self.with_engine(engine, |e| e.phases += count);
         }
+    }
+
+    fn with_engine(&self, engine: &'static str, f: impl FnOnce(&mut EngineCounters)) {
+        let mut per = self.per_engine.lock().unwrap();
+        match per.iter_mut().find(|e| e.engine == engine) {
+            Some(e) => f(e),
+            None => {
+                let mut e = EngineCounters { engine, jobs: 0, phases: 0 };
+                f(&mut e);
+                per.push(e);
+            }
+        }
+    }
+
+    /// Per-engine counters snapshot (jobs + phase events).
+    pub fn engine_counters(&self) -> Vec<EngineCounters> {
+        self.per_engine.lock().unwrap().clone()
     }
 
     pub fn snapshot(&self) -> String {
@@ -93,8 +125,11 @@ impl Metrics {
             }
         }
         out.push('\n');
-        for (name, count) in self.per_engine.lock().unwrap().iter() {
-            out.push_str(&format!("engine {name}: {count}\n"));
+        for e in self.per_engine.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "engine {}: {} jobs, {} phase-events\n",
+                e.engine, e.jobs, e.phases
+            ));
         }
         out
     }
@@ -118,6 +153,21 @@ mod tests {
         assert!(snap.contains("failed=1"));
         assert!(snap.contains("engine native-seq: 1"));
         assert!(snap.contains("avg 2.00 jobs/batch"));
+    }
+
+    #[test]
+    fn phase_events_tracked_per_engine() {
+        let m = Metrics::new();
+        m.record_phases("native-seq", 2);
+        m.record_done("native-seq", true, 0.0, 0.1);
+        m.record_phases("sinkhorn-native", 1);
+        m.record_phases("sinkhorn-native", 0); // no-op, must not create churn
+        let counters = m.engine_counters();
+        let seq = counters.iter().find(|e| e.engine == "native-seq").unwrap();
+        assert_eq!((seq.jobs, seq.phases), (1, 2));
+        let sk = counters.iter().find(|e| e.engine == "sinkhorn-native").unwrap();
+        assert_eq!((sk.jobs, sk.phases), (0, 1));
+        assert!(m.snapshot().contains("engine native-seq: 1 jobs, 2 phase-events"));
     }
 
     #[test]

@@ -1,7 +1,8 @@
-//! The coordinator service layer: job types, engine routing, micro-
-//! batching, the worker-pool server, and metrics. This is the L3
-//! "coordination contribution" host — OT solves consumable as a service
-//! with backpressure and observability.
+//! The coordinator service layer: job types, engine routing (backed by the
+//! [`crate::api::SolverRegistry`]), micro-batching, the worker-pool server,
+//! and metrics. This is the L3 "coordination contribution" host — OT
+//! solves consumable as a service with backpressure, per-job wall-clock
+//! budgets/cancellation, and live per-engine phase observability.
 
 pub mod batcher;
 pub mod job;
@@ -9,5 +10,6 @@ pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use job::{Engine, JobKind, JobOutcome, JobRequest, JobResult};
+pub use job::{Engine, JobKind, JobOutcome, JobRequest};
+pub use metrics::EngineCounters;
 pub use server::{Coordinator, CoordinatorConfig, JobHandle};

@@ -1,32 +1,44 @@
-//! Routing: resolve `Engine::Auto`, validate a job against the available
-//! backends, and execute it on the chosen one.
+//! Routing: resolve `Engine::Auto`, pick the artifact bucket for batching,
+//! and execute jobs through the [`SolverRegistry`] — the coordinator holds
+//! no per-engine construction code of its own.
 //!
-//! Policy (mirrors how the paper splits CPU vs GPU work): small instances
-//! go to the native sequential solver (per-phase scan is cache-friendly
-//! and has no dispatch overhead); larger ones go to the XLA path when an
-//! artifact bucket exists, else to the multi-threaded native solver.
+//! Auto policy (mirrors how the paper splits CPU vs GPU work): small
+//! instances go to the native sequential solver (per-phase scan is
+//! cache-friendly and has no dispatch overhead); larger ones go to the XLA
+//! path when an artifact bucket exists, else to the multi-threaded native
+//! solver.
 
-use crate::coordinator::job::{Engine, JobKind, JobRequest, JobResult};
-use crate::core::{OtInstance, OtprError, Result};
-use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
-use crate::solvers::ot_push_relabel::OtPushRelabel;
-use crate::solvers::parallel_pr::ParallelPushRelabel;
-use crate::solvers::push_relabel::PushRelabel;
-use crate::solvers::sinkhorn::Sinkhorn;
-use crate::solvers::{AssignmentSolver, OtSolver};
+use crate::api::{Problem, Solution, SolverConfig, SolverRegistry};
+use crate::coordinator::job::{Engine, JobRequest};
+use crate::core::Result;
+use crate::runtime::XlaRuntime;
 use std::sync::Arc;
 
 /// Instances below this size always run natively under `Auto`.
 pub const AUTO_NATIVE_CUTOFF: usize = 512;
 
 pub struct Router {
-    pub runtime: Option<Arc<XlaRuntime>>,
-    pub threads: usize,
+    registry: SolverRegistry,
+    config: SolverConfig,
 }
 
 impl Router {
     pub fn new(runtime: Option<Arc<XlaRuntime>>, threads: usize) -> Self {
-        Self { runtime, threads }
+        Self::with_registry(SolverRegistry::with_defaults(), runtime, threads)
+    }
+
+    /// Custom registry (tests, alternative backends) with the same routing.
+    pub fn with_registry(
+        registry: SolverRegistry,
+        runtime: Option<Arc<XlaRuntime>>,
+        threads: usize,
+    ) -> Self {
+        let config = SolverConfig::default().with_threads(threads).with_runtime(runtime);
+        Self { registry, config }
+    }
+
+    pub fn runtime(&self) -> Option<&Arc<XlaRuntime>> {
+        self.config.xla_runtime.as_ref()
     }
 
     /// Resolve Auto to a concrete engine for this job.
@@ -35,16 +47,15 @@ impl Router {
             Engine::Auto => {
                 let n = req.kind.n();
                 let xla_ok = self
-                    .runtime
-                    .as_ref()
+                    .runtime()
                     .map(|r| r.registry.bucket_for(n).is_ok())
                     .unwrap_or(false);
                 match req.kind {
-                    JobKind::Assignment(_) if n >= AUTO_NATIVE_CUTOFF && xla_ok => Engine::Xla,
-                    JobKind::Assignment(_) if n >= AUTO_NATIVE_CUTOFF => Engine::NativeParallel,
-                    JobKind::Assignment(_) => Engine::NativeSeq,
+                    Problem::Assignment(_) if n >= AUTO_NATIVE_CUTOFF && xla_ok => Engine::Xla,
+                    Problem::Assignment(_) if n >= AUTO_NATIVE_CUTOFF => Engine::NativeParallel,
+                    Problem::Assignment(_) => Engine::NativeSeq,
                     // OT has no XLA phase-loop (assignment only); route native
-                    JobKind::Ot(_) => Engine::NativeSeq,
+                    Problem::Ot(_) => Engine::NativeSeq,
                 }
             }
             e => e,
@@ -56,72 +67,32 @@ impl Router {
     pub fn bucket(&self, req: &JobRequest, engine: Engine) -> Option<usize> {
         match engine {
             Engine::Xla | Engine::SinkhornXla => {
-                self.runtime.as_ref().and_then(|r| r.registry.bucket_for(req.kind.n()).ok())
+                self.runtime().and_then(|r| r.registry.bucket_for(req.kind.n()).ok())
             }
             _ => None,
         }
     }
 
-    /// Execute the job on `engine` (must be concrete, not Auto).
-    pub fn execute(&self, req: &JobRequest, engine: Engine) -> Result<JobResult> {
-        match (&req.kind, engine) {
-            (JobKind::Assignment(inst), Engine::NativeSeq) => Ok(JobResult::Assignment(
-                PushRelabel::new().solve_assignment(inst, req.eps)?,
-            )),
-            (JobKind::Assignment(inst), Engine::NativeParallel) => Ok(JobResult::Assignment(
-                ParallelPushRelabel::with_threads(self.threads).solve_assignment(inst, req.eps)?,
-            )),
-            (JobKind::Assignment(inst), Engine::Xla) => {
-                let reg = self.require_runtime()?;
-                Ok(JobResult::Assignment(
-                    XlaAssignment::new(reg).solve_assignment(inst, req.eps)?,
-                ))
-            }
-            (JobKind::Assignment(inst), Engine::SinkhornNative) => {
-                // assignment via uniform-mass OT (how the paper benchmarks
-                // Sinkhorn on assignment inputs)
-                let ot = OtInstance::uniform(inst.costs.clone())?;
-                Ok(JobResult::Ot(Sinkhorn::log_domain().solve_ot(&ot, req.eps)?))
-            }
-            (JobKind::Assignment(inst), Engine::SinkhornXla) => {
-                let reg = self.require_runtime()?;
-                let ot = OtInstance::uniform(inst.costs.clone())?;
-                Ok(JobResult::Ot(XlaSinkhorn::new(reg).solve_ot(&ot, req.eps)?))
-            }
-            (JobKind::Ot(inst), Engine::NativeSeq | Engine::NativeParallel) => {
-                Ok(JobResult::Ot(OtPushRelabel::new().solve_ot(inst, req.eps)?))
-            }
-            (JobKind::Ot(inst), Engine::SinkhornNative) => {
-                Ok(JobResult::Ot(Sinkhorn::log_domain().solve_ot(inst, req.eps)?))
-            }
-            (JobKind::Ot(inst), Engine::SinkhornXla) => {
-                let reg = self.require_runtime()?;
-                Ok(JobResult::Ot(XlaSinkhorn::new(reg).solve_ot(inst, req.eps)?))
-            }
-            (JobKind::Ot(_), Engine::Xla) => Err(OtprError::Coordinator(
-                "XLA engine supports assignment jobs only (OT runs native)".into(),
-            )),
-            (_, Engine::Auto) => unreachable!("resolve() before execute()"),
-        }
-    }
-
-    fn require_runtime(&self) -> Result<Arc<XlaRuntime>> {
-        self.runtime
-            .clone()
-            .ok_or_else(|| OtprError::Coordinator("no XLA runtime loaded".into()))
+    /// Execute the job on `engine` (must be concrete, not Auto) via the
+    /// registry, honoring the job's full [`crate::api::SolveRequest`].
+    pub fn execute(&self, req: &JobRequest, engine: Engine) -> Result<Solution> {
+        debug_assert!(engine != Engine::Auto, "resolve() before execute()");
+        self.registry.solve(engine.key(), &self.config, &req.kind, &req.request)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::SolveRequest;
+    use crate::coordinator::job::JobKind;
     use crate::data::workloads::Workload;
 
     fn req(n: usize, engine: Engine) -> JobRequest {
         JobRequest {
             id: 1,
             kind: JobKind::Assignment(Workload::RandomCosts { n }.assignment(1)),
-            eps: 0.3,
+            request: SolveRequest::new(0.3),
             engine,
         }
     }
@@ -144,7 +115,8 @@ mod tests {
         let r = Router::new(None, 2);
         let rq = req(12, Engine::NativeSeq);
         let out = r.execute(&rq, Engine::NativeSeq).unwrap();
-        assert!(out.cost() > 0.0);
+        assert!(out.cost > 0.0);
+        assert!(out.matching().unwrap().is_perfect());
     }
 
     #[test]
@@ -160,11 +132,21 @@ mod tests {
         let rq = JobRequest {
             id: 2,
             kind: JobKind::Ot(Workload::Fig1 { n: 10 }.ot_with_random_masses(3)),
-            eps: 0.3,
+            request: SolveRequest::new(0.3),
             engine: Engine::Auto,
         };
         assert_eq!(r.resolve(&rq), Engine::NativeSeq);
         let out = r.execute(&rq, Engine::NativeSeq).unwrap();
-        assert!(matches!(out, JobResult::Ot(_)));
+        assert!(out.plan().is_some());
+    }
+
+    #[test]
+    fn baseline_engines_execute_via_registry() {
+        let r = Router::new(None, 2);
+        let approx = r.execute(&req(10, Engine::NativeSeq), Engine::NativeSeq).unwrap();
+        let exact = r.execute(&req(10, Engine::Hungarian), Engine::Hungarian).unwrap();
+        assert!(approx.cost >= exact.cost - 1e-9);
+        let greedy = r.execute(&req(10, Engine::Greedy), Engine::Greedy).unwrap();
+        assert!(greedy.cost >= exact.cost - 1e-9);
     }
 }

@@ -13,6 +13,7 @@
 //! drain whole batches so XLA executions with the same bucket reuse the
 //! compiled executable back-to-back.
 
+use crate::api::SolveRequest;
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::job::{Engine, JobKind, JobOutcome, JobRequest};
 use crate::coordinator::metrics::Metrics;
@@ -113,11 +114,25 @@ impl Coordinator {
         Self { tx, metrics, next_id: AtomicU64::new(1), dispatcher: Some(dispatcher), workers }
     }
 
-    /// Submit a job; blocks when the queue is at capacity (backpressure).
+    /// Submit a job at accuracy `eps` with default request settings;
+    /// blocks when the queue is at capacity (backpressure).
     pub fn submit(&self, kind: JobKind, eps: f64, engine: Engine) -> Result<JobHandle> {
+        self.submit_request(kind, SolveRequest::new(eps), engine)
+    }
+
+    /// Submit a job with a full [`SolveRequest`] — wall-clock budget,
+    /// cancellation token, and progress observer are honored by the
+    /// executing engine; progress additionally feeds the coordinator's
+    /// per-engine phase metrics.
+    pub fn submit_request(
+        &self,
+        kind: JobKind,
+        request: SolveRequest,
+        engine: Engine,
+    ) -> Result<JobHandle> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        let req = JobRequest { id, kind, eps, engine };
+        let req = JobRequest { id, kind, request, engine };
         self.metrics.record_submit();
         self.tx
             .send(DispatchMsg::Job(Envelope {
@@ -222,15 +237,23 @@ fn worker_loop(
         let Ok(batch) = batch else { return };
         for env in batch {
             let queued = env.submitted.elapsed().as_secs_f64();
-            let engine = router.resolve(&env.req);
+            let mut req = env.req;
+            let engine = router.resolve(&req);
+            // Tee solver progress into a per-job atomic (folded into the
+            // metrics lock once per job, not per phase) without disturbing
+            // any caller-supplied observer.
+            let phase_count = Arc::new(AtomicU64::new(0));
+            let counter = phase_count.clone();
+            req.request = req.request.chain_observer(move |_p| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
             let t = Instant::now();
-            let result = router
-                .execute(&env.req, engine)
-                .map_err(|e| e.to_string());
+            let result = router.execute(&req, engine).map_err(|e| e.to_string());
             let solve = t.elapsed().as_secs_f64();
+            metrics.record_phases(engine.name(), phase_count.load(Ordering::Relaxed));
             metrics.record_done(engine.name(), result.is_ok(), queued, solve);
             let _ = env.reply.send(JobOutcome {
-                id: env.req.id,
+                id: req.id,
                 engine_used: engine.name(),
                 result,
                 queued_secs: queued,
@@ -243,7 +266,6 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::JobResult;
     use crate::data::workloads::Workload;
 
     fn assignment_job(n: usize, seed: u64) -> JobKind {
@@ -277,7 +299,7 @@ mod tests {
         let mut costs = Vec::new();
         for h in handles {
             let out = h.wait().unwrap();
-            costs.push(out.result.unwrap().cost());
+            costs.push(out.result.unwrap().cost);
         }
         assert_eq!(costs.len(), 20);
         coord.shutdown();
@@ -302,10 +324,21 @@ mod tests {
         let inst = Workload::Fig1 { n: 10 }.ot_with_random_masses(5);
         let h = coord.submit(JobKind::Ot(inst), 0.3, Engine::Auto).unwrap();
         let out = h.wait().unwrap();
-        match out.result.unwrap() {
-            JobResult::Ot(sol) => assert!(sol.cost.is_finite()),
-            _ => panic!("expected OT result"),
-        }
+        let sol = out.result.unwrap();
+        assert!(sol.cost.is_finite());
+        assert!(sol.plan().is_some(), "OT jobs return a transport plan");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn phase_metrics_flow_from_observer() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), None);
+        let h = coord.submit(assignment_job(32, 9), 0.2, Engine::NativeSeq).unwrap();
+        assert!(h.wait().unwrap().result.is_ok());
+        let counters = coord.metrics.engine_counters();
+        let seq = counters.iter().find(|e| e.engine == "native-seq").expect("engine recorded");
+        assert_eq!(seq.jobs, 1);
+        assert!(seq.phases > 0, "solver phases must stream into metrics");
         coord.shutdown();
     }
 }

@@ -1,0 +1,133 @@
+//! Solver-facing control primitives: cancellation, deadlines, progress.
+//!
+//! These sit in `core` (not `api`) so the algorithm layer can honor
+//! cancellation and report progress without depending on the public API
+//! layer above it. [`crate::api::SolveRequest`] is the caller-facing
+//! builder that snapshots into a [`SolveControl`].
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Note appended to [`crate::solvers::SolveStats::notes`] when a solve was
+/// stopped early by cancellation or budget exhaustion.
+pub const CANCELLED_NOTE: &str = "cancelled";
+
+/// Shared cancellation flag. Clone freely; all clones observe `cancel()`.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One progress event, emitted after each completed phase (push-relabel) or
+/// stopping-rule check (Sinkhorn).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Progress {
+    /// Phase (or iteration) number, 1-based.
+    pub phase: usize,
+    /// Free mass remaining, in the engine's natural unit: free supply
+    /// vertices (assignment), free supply units (OT push-relabel), or the
+    /// current marginal violation (Sinkhorn).
+    pub free: f64,
+}
+
+/// Observer callback; shared so a request can fan out to worker threads.
+pub type ProgressFn = Arc<dyn Fn(Progress) + Send + Sync>;
+
+/// Solver-facing cancellation + progress handle. Solvers poll
+/// [`SolveControl::should_stop`] between phases and stream
+/// (phase, free-mass) events through [`SolveControl::report`].
+#[derive(Clone, Default)]
+pub struct SolveControl {
+    pub(crate) cancel: Option<CancelToken>,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) observer: Option<ProgressFn>,
+}
+
+impl SolveControl {
+    /// No cancellation, no deadline, no observer — the legacy trait paths.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True when the solve should stop at the next phase boundary.
+    pub fn should_stop(&self) -> bool {
+        if let Some(c) = &self.cancel {
+            if c.is_cancelled() {
+                return true;
+            }
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn report(&self, phase: usize, free: f64) {
+        if let Some(obs) = &self.observer {
+            obs(Progress { phase, free });
+        }
+    }
+}
+
+impl fmt::Debug for SolveControl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SolveControl")
+            .field("deadline", &self.deadline)
+            .field("observer", &self.observer.is_some())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_propagates_to_clones() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_cancelled());
+        t.cancel();
+        assert!(t2.is_cancelled());
+    }
+
+    #[test]
+    fn none_control_never_stops() {
+        let ctl = SolveControl::none();
+        assert!(!ctl.should_stop());
+        ctl.report(1, 0.0); // no observer: must be a no-op, not a panic
+    }
+
+    #[test]
+    fn report_reaches_observer() {
+        use std::sync::atomic::AtomicUsize;
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let ctl = SolveControl {
+            cancel: None,
+            deadline: None,
+            observer: Some(Arc::new(move |p: Progress| {
+                assert_eq!(p.phase, 2);
+                h.fetch_add(1, Ordering::Relaxed);
+            })),
+        };
+        ctl.report(2, 5.0);
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+}

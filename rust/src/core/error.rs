@@ -1,29 +1,48 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline build carries no `thiserror`).
 
-use thiserror::Error;
+#[cfg(not(feature = "xla"))]
+use crate::runtime::pjrt_stub as xla;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum OtprError {
-    #[error("invalid instance: {0}")]
     InvalidInstance(String),
-
-    #[error("infeasible: {0}")]
     Infeasible(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
+}
+
+impl fmt::Display for OtprError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OtprError::InvalidInstance(m) => write!(f, "invalid instance: {m}"),
+            OtprError::Infeasible(m) => write!(f, "infeasible: {m}"),
+            OtprError::Artifact(m) => write!(f, "artifact error: {m}"),
+            OtprError::Runtime(m) => write!(f, "runtime error: {m}"),
+            OtprError::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            OtprError::Io(e) => write!(f, "io error: {e}"),
+            OtprError::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for OtprError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            OtprError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for OtprError {
+    fn from(e: std::io::Error) -> Self {
+        OtprError::Io(e)
+    }
 }
 
 impl From<xla::Error> for OtprError {
@@ -44,5 +63,12 @@ mod tests {
         assert_eq!(e.to_string(), "invalid instance: bad mass");
         let e: OtprError = std::io::Error::new(std::io::ErrorKind::NotFound, "x").into();
         assert!(e.to_string().contains("io error"));
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        use std::error::Error as _;
+        let e: OtprError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.source().is_some());
     }
 }

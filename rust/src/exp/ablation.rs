@@ -10,26 +10,32 @@
 //! * A5 `sinkhorn-stability` — standard vs log-domain Sinkhorn at small ε
 //!                   (the §5 numerical-instability observation).
 //! * A6 `threads`  — parallel solver speedup vs thread count.
+//!
+//! Whole-solve measurements go through the [`SolverRegistry`] (raw-ε
+//! requests, like the paper's plots); phase-level instrumentation (A2, A4)
+//! drives the solver state machines directly since it measures quantities
+//! below the solve API.
 
-use crate::core::{OtInstance, ScaledOtInstance};
+use crate::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use crate::core::ScaledOtInstance;
 use crate::data::workloads::Workload;
 use crate::exp::report::Series;
-use crate::solvers::ot_push_relabel::{OtPrState, OtPushRelabel};
-use crate::solvers::parallel_pr::{ParallelPrState, ParallelPushRelabel};
-use crate::solvers::push_relabel::PushRelabel;
-use crate::solvers::sinkhorn::Sinkhorn;
-use crate::solvers::{hungarian, ssp_ot::SspExactOt, OtSolver};
+use crate::solvers::ot_push_relabel::OtPrState;
+use crate::solvers::parallel_pr::ParallelPrState;
 use crate::util::stats::power_fit;
-use crate::util::timer::Stopwatch;
 
 /// A1: phases and total work vs ε at fixed n.
 pub fn phases_vs_eps(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
-    let inst = Workload::Fig1 { n }.assignment(seed);
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(seed));
     let mut measured = Series::new("phases (measured)");
     let mut bound = Series::new("phase bound (1+2ε)/ε²");
     let mut work = Series::new("Σnᵢ / (n/ε)");
     for &eps in eps_grid {
-        let sol = PushRelabel::new().solve_with_param(&inst, eps).expect("solve");
+        let sol = solvers
+            .solve("native-seq", &config, &problem, &SolveRequest::new(eps).raw_eps())
+            .expect("solve");
         measured.push(eps, sol.stats.phases as f64);
         bound.push(eps, (1.0 + 2.0 * eps) / (eps * eps));
         let norm = sol.stats.total_free_processed as f64 / (n as f64 / eps);
@@ -38,7 +44,7 @@ pub fn phases_vs_eps(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
     vec![measured, bound, work]
 }
 
-/// A2: mean propose–accept rounds per phase vs n.
+/// A2: mean propose–accept rounds per phase vs n (state-level).
 pub fn rounds_vs_n(sizes: &[usize], eps: f64, seed: u64) -> Vec<Series> {
     let mut rounds = Series::new("rounds/phase");
     let mut log2n = Series::new("log2(n)");
@@ -55,14 +61,20 @@ pub fn rounds_vs_n(sizes: &[usize], eps: f64, seed: u64) -> Vec<Series> {
 
 /// A3: measured additive error vs the 3·ε·n·c_max guarantee.
 pub fn accuracy(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
-    let inst = Workload::Fig1 { n }.assignment(seed);
-    let (_, exact, _, _) = hungarian::solve_exact(&inst.costs).expect("exact");
-    let c_max = inst.costs.max() as f64;
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(seed));
+    let exact = solvers
+        .solve("hungarian", &config, &problem, &SolveRequest::new(0.0))
+        .expect("exact");
+    let c_max = problem.costs().max() as f64;
     let mut err = Series::new("measured error / (3εn·c_max)");
     let mut abs = Series::new("measured additive error");
     for &eps in eps_grid {
-        let sol = PushRelabel::new().solve_with_param(&inst, eps).expect("solve");
-        let e = (sol.cost - exact).max(0.0);
+        let sol = solvers
+            .solve("native-seq", &config, &problem, &SolveRequest::new(eps).raw_eps())
+            .expect("solve");
+        let e = (sol.cost - exact.cost).max(0.0);
         abs.push(eps, e);
         err.push(eps, e / (3.0 * eps * n as f64 * c_max));
     }
@@ -71,13 +83,19 @@ pub fn accuracy(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
 
 /// A3b: OT solver error vs exact SSP on random-mass instances.
 pub fn ot_accuracy(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
-    let inst = Workload::Fig1 { n }.ot_with_random_masses(seed);
-    let exact = SspExactOt::default().solve_ot(&inst, 0.0).expect("exact");
-    let c_max = inst.costs.max() as f64;
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let problem = Problem::Ot(Workload::Fig1 { n }.ot_with_random_masses(seed));
+    let exact = solvers
+        .solve("ssp-exact", &config, &problem, &SolveRequest::new(0.0))
+        .expect("exact");
+    let c_max = problem.costs().max() as f64;
     let mut abs = Series::new("OT additive error");
     let mut rel = Series::new("error / (ε·c_max)");
     for &eps in eps_grid {
-        let sol = OtPushRelabel::new().solve_ot(&inst, eps).expect("solve");
+        let sol = solvers
+            .solve("native-seq", &config, &problem, &SolveRequest::new(eps))
+            .expect("solve");
         let e = (sol.cost - exact.cost).max(0.0);
         abs.push(eps, e);
         rel.push(eps, e / (eps * c_max));
@@ -85,7 +103,8 @@ pub fn ot_accuracy(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
     vec![abs, rel]
 }
 
-/// A4: observed max dual clusters per vertex (Lemma 4.1 says ≤ 2).
+/// A4: observed max dual clusters per vertex (Lemma 4.1 says ≤ 2;
+/// state-level).
 pub fn clusters(sizes: &[usize], eps: f64, seed: u64) -> Vec<Series> {
     let mut s = Series::new("max clusters (bound = 2)");
     for &n in sizes {
@@ -100,20 +119,32 @@ pub fn clusters(sizes: &[usize], eps: f64, seed: u64) -> Vec<Series> {
 
 /// A5: standard-kernel vs log-domain Sinkhorn across ε (status + time).
 pub fn sinkhorn_stability(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
-    let inst = OtInstance::uniform(Workload::Fig1 { n }.costs(seed)).expect("uniform");
+    let solvers = SolverRegistry::with_defaults();
+    let std_cfg = SolverConfig {
+        sinkhorn_log_domain: false,
+        sinkhorn_max_iters: 100_000,
+        ..SolverConfig::default()
+    };
+    let log_cfg = SolverConfig {
+        sinkhorn_log_domain: true,
+        sinkhorn_max_iters: 20_000,
+        ..SolverConfig::default()
+    };
+    let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(seed));
     let mut std_s = Series::new("sinkhorn-std secs");
     let mut log_s = Series::new("sinkhorn-log secs");
     for &eps in eps_grid {
-        let sw = Stopwatch::start();
-        match Sinkhorn::new().solve_ot(&inst, eps) {
-            Ok(sol) => std_s.push_note(eps, sw.elapsed_secs(), format!("{} iters", sol.stats.phases)),
+        let req = SolveRequest::new(eps);
+        match solvers.solve("sinkhorn-native", &std_cfg, &problem, &req) {
+            Ok(sol) => {
+                std_s.push_note(eps, sol.stats.seconds, format!("{} iters", sol.stats.phases))
+            }
             Err(_) => std_s.push_note(eps, f64::NAN, "UNDERFLOW"),
         }
-        let sw = Stopwatch::start();
-        let mut lg = Sinkhorn::log_domain();
-        lg.config.max_iters = 20_000;
-        match lg.solve_ot(&inst, eps) {
-            Ok(sol) => log_s.push_note(eps, sw.elapsed_secs(), format!("{} iters", sol.stats.phases)),
+        match solvers.solve("sinkhorn-native", &log_cfg, &problem, &req) {
+            Ok(sol) => {
+                log_s.push_note(eps, sol.stats.seconds, format!("{} iters", sol.stats.phases))
+            }
             Err(e) => log_s.push_note(eps, f64::NAN, format!("{e}")),
         }
     }
@@ -122,18 +153,21 @@ pub fn sinkhorn_stability(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> 
 
 /// A6: parallel solver wall-clock vs thread count.
 pub fn threads(n: usize, eps: f64, thread_grid: &[usize], seed: u64) -> Vec<Series> {
-    let inst = Workload::Fig1 { n }.assignment(seed);
-    let base = {
-        let sw = Stopwatch::start();
-        let _ = ParallelPushRelabel::with_threads(1).solve_with_param(&inst, eps);
-        sw.elapsed_secs()
+    let solvers = SolverRegistry::with_defaults();
+    let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(seed));
+    let req = SolveRequest::new(eps).raw_eps();
+    let solve_secs = |t: usize| -> f64 {
+        let config = SolverConfig::default().with_threads(t);
+        solvers
+            .solve("native-parallel", &config, &problem, &req)
+            .map(|sol| sol.stats.seconds)
+            .unwrap_or(f64::NAN)
     };
+    let base = solve_secs(1);
     let mut time_s = Series::new("seconds");
     let mut speedup = Series::new("speedup vs 1 thread");
     for &t in thread_grid {
-        let sw = Stopwatch::start();
-        let _ = ParallelPushRelabel::with_threads(t).solve_with_param(&inst, eps);
-        let secs = sw.elapsed_secs();
+        let secs = solve_secs(t);
         time_s.push(t as f64, secs);
         speedup.push(t as f64, base / secs.max(1e-12));
     }
@@ -143,14 +177,19 @@ pub fn threads(n: usize, eps: f64, thread_grid: &[usize], seed: u64) -> Vec<Seri
 /// Empirical sequential-complexity exponent: time vs n at fixed ε should be
 /// ~ n² (the paper's O(n²/ε)). Returns (exponent, r²).
 pub fn complexity_exponent(sizes: &[usize], eps: f64, seed: u64) -> (f64, f64) {
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let req = SolveRequest::new(eps).raw_eps();
     let mut xs = Vec::new();
     let mut ys = Vec::new();
     for &n in sizes {
-        let inst = Workload::Fig1 { n }.assignment(seed);
-        let sw = Stopwatch::start();
-        let _ = PushRelabel::new().solve_with_param(&inst, eps);
+        let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(seed));
+        let secs = solvers
+            .solve("native-seq", &config, &problem, &req)
+            .map(|sol| sol.stats.seconds)
+            .unwrap_or(f64::NAN);
         xs.push(n as f64);
-        ys.push(sw.elapsed_secs().max(1e-9));
+        ys.push(secs.max(1e-9));
     }
     let (_, k, r2) = power_fit(&xs, &ys);
     (k, r2)

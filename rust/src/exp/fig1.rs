@@ -3,20 +3,29 @@
 //! push-relabel algorithm against Sinkhorn, CPU and "GPU" (XLA artifact)
 //! implementations of both.
 //!
+//! All engines run through the [`SolverRegistry`]; the engine strings in
+//! [`Fig1Config::engines`] are registry keys or aliases (the historical
+//! `pr-cpu`/`pr-gpu`/`sinkhorn-cpu`/`sinkhorn-gpu` spellings resolve to
+//! `native-seq`/`xla`/`sinkhorn-native`/`sinkhorn-xla`). ε is driven as
+//! the raw algorithm parameter, matching the paper's own plots.
+//!
+//! Measurement note: the `xla` series times the generic registry path
+//! (host cost matrix uploaded, quantized on device) rather than the
+//! on-device cost construction of `XlaAssignment::solve_points` — the
+//! latter remains available and is exercised by
+//! `tests/integration_runtime.rs` and `benches/runtime_xla.rs`, but is not
+//! part of this figure's engine comparison.
+//!
 //! Paper grid: n ∈ {500, 1000, 2000, 4000, 8000, 10000},
 //! ε ∈ {0.1, 0.01, 0.005}, 30 runs/point. Defaults here are a laptop-scale
 //! slice (override: `otpr fig1 --sizes ... --eps ... --reps 30`).
 
-use crate::core::{AssignmentInstance, OtInstance};
+use crate::api::{Problem, SolverRegistry};
+use crate::core::AssignmentInstance;
 use crate::data::synthetic;
 use crate::exp::report::Series;
-use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
-use crate::solvers::parallel_pr::ParallelPushRelabel;
-use crate::solvers::push_relabel::PushRelabel;
-use crate::solvers::sinkhorn::Sinkhorn;
-use crate::solvers::OtSolver;
+use crate::runtime::XlaRuntime;
 use crate::util::rng::Pcg32;
-use crate::util::timer::Stopwatch;
 use std::sync::Arc;
 
 #[derive(Debug, Clone)]
@@ -27,7 +36,7 @@ pub struct Fig1Config {
     pub seed: u64,
     /// Skip a (n, algorithm) cell once a single rep exceeds this budget.
     pub max_secs_per_run: f64,
-    /// Algorithms to include (default: all four of the paper's).
+    /// Registry keys/aliases to include (default: the paper's four).
     pub engines: Vec<String>,
 }
 
@@ -56,6 +65,7 @@ pub fn run_eps(
     eps: f64,
     registry: Option<Arc<XlaRuntime>>,
 ) -> Vec<Series> {
+    let solvers = SolverRegistry::with_defaults();
     let mut series: Vec<Series> =
         cfg.engines.iter().map(|e| Series::new(e.clone())).collect();
     for &n in &cfg.sizes {
@@ -64,12 +74,9 @@ pub fn run_eps(
             let mut note: Option<String> = None;
             for rep in 0..cfg.reps {
                 let seed = cfg.seed.wrapping_add(rep as u64 * 1001);
-                let (secs, n2) = run_one(engine, n, eps, seed, registry.clone());
-                match n2 {
-                    Some(msg) => {
-                        note = Some(msg);
-                    }
-                    None => {}
+                let (secs, n2) = run_one(&solvers, engine, n, eps, seed, registry.clone());
+                if let Some(msg) = n2 {
+                    note = Some(msg);
                 }
                 if let Some(s) = secs {
                     times.push(s);
@@ -95,81 +102,26 @@ pub fn run_eps(
     series
 }
 
-/// One timed run. Returns (seconds, note). `None` seconds = unavailable.
+/// One timed run through the registry (shared comparator policy lives in
+/// [`crate::exp::timed_registry_solve`]). Returns (seconds, note);
+/// `None` seconds = engine unavailable or failed.
 fn run_one(
+    solvers: &SolverRegistry,
     engine: &str,
     n: usize,
     eps: f64,
     seed: u64,
-    registry: Option<Arc<XlaRuntime>>,
+    runtime: Option<Arc<XlaRuntime>>,
 ) -> (Option<f64>, Option<String>) {
     // Build inputs outside the timed region (the paper times the solvers,
-    // not the data generation).
+    // not the data generation); SolveStats.seconds covers the solve only.
     let mut rng_a = Pcg32::with_stream(seed, 1);
     let mut rng_b = Pcg32::with_stream(seed, 2);
     let a_pts = synthetic::uniform_points(n, &mut rng_a);
     let b_pts = synthetic::uniform_points(n, &mut rng_b);
     let costs = synthetic::euclidean_costs(&b_pts, &a_pts);
-    let inst = AssignmentInstance::new(costs).expect("square");
-
-    match engine {
-        "pr-cpu" => {
-            let sw = Stopwatch::start();
-            let sol = PushRelabel::new().solve_with_param(&inst, eps);
-            (sol.ok().map(|_| sw.elapsed_secs()), None)
-        }
-        "pr-parallel" => {
-            let sw = Stopwatch::start();
-            let sol = ParallelPushRelabel::default().solve_with_param(&inst, eps);
-            (sol.ok().map(|_| sw.elapsed_secs()), None)
-        }
-        "pr-gpu" => {
-            let Some(reg) = registry else {
-                return (None, Some("no artifacts".into()));
-            };
-            let solver = XlaAssignment::new(reg);
-            let pb = synthetic::points_to_f32(&b_pts);
-            let pa = synthetic::points_to_f32(&a_pts);
-            let sw = Stopwatch::start();
-            let sol = solver.solve_points(&pb, &pa, &inst, eps);
-            match sol {
-                Ok(_) => (Some(sw.elapsed_secs()), None),
-                Err(e) => (None, Some(format!("error: {e}"))),
-            }
-        }
-        "sinkhorn-cpu" => {
-            let ot = OtInstance::uniform(inst.costs.clone()).expect("uniform");
-            let mut sk = Sinkhorn::new();
-            sk.config.max_iters = 20_000;
-            let sw = Stopwatch::start();
-            match sk.solve_ot(&ot, eps) {
-                Ok(_) => (Some(sw.elapsed_secs()), None),
-                Err(_) => {
-                    // the paper's observed instability at small ε: retry in
-                    // log-domain and report that time with a note
-                    let sw = Stopwatch::start();
-                    let mut lg = Sinkhorn::log_domain();
-                    lg.config.max_iters = 1000; // bound the sweep; noted below
-                    match lg.solve_ot(&ot, eps) {
-                        Ok(_) => (Some(sw.elapsed_secs()), Some("log-domain".into())),
-                        Err(e) => (None, Some(format!("diverged: {e}"))),
-                    }
-                }
-            }
-        }
-        "sinkhorn-gpu" => {
-            let Some(reg) = registry else {
-                return (None, Some("no artifacts".into()));
-            };
-            let ot = OtInstance::uniform(inst.costs.clone()).expect("uniform");
-            let sw = Stopwatch::start();
-            match XlaSinkhorn::new(reg).solve_ot(&ot, eps) {
-                Ok(_) => (Some(sw.elapsed_secs()), None),
-                Err(e) => (None, Some(format!("diverged: {e}"))),
-            }
-        }
-        other => (None, Some(format!("unknown engine {other}"))),
-    }
+    let problem = Problem::Assignment(AssignmentInstance::new(costs).expect("square"));
+    crate::exp::timed_registry_solve(solvers, engine, &problem, eps, runtime)
 }
 
 #[cfg(test)]
@@ -195,8 +147,23 @@ mod tests {
 
     #[test]
     fn unknown_engine_noted() {
-        let (secs, note) = run_one("bogus", 8, 0.3, 1, None);
+        let solvers = SolverRegistry::with_defaults();
+        let (secs, note) = run_one(&solvers, "bogus", 8, 0.3, 1, None);
         assert!(secs.is_none());
         assert!(note.unwrap().contains("unknown"));
+    }
+
+    #[test]
+    fn canonical_keys_also_accepted() {
+        let cfg = Fig1Config {
+            sizes: vec![16],
+            eps: vec![0.3],
+            reps: 1,
+            seed: 2,
+            max_secs_per_run: 60.0,
+            engines: vec!["native-seq".into(), "native-parallel".into()],
+        };
+        let series = run_eps(&cfg, 0.3, None);
+        assert!(series.iter().all(|s| s.points.len() == 1));
     }
 }

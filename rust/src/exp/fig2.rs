@@ -2,19 +2,22 @@
 //! inputs — n images per side, L1 distance between unit-normalized 28×28
 //! images (max cost ≤ 2) — for ε ∈ {0.75, 0.5, 0.25, 0.1}.
 //!
+//! Engines run through the [`SolverRegistry`] exactly like
+//! [`crate::exp::fig1`]; the same engine aliases and measurement note
+//! apply — the `xla` series times the generic cost-upload path, not the
+//! on-device `solve_images` construction (still available on
+//! [`crate::runtime::XlaAssignment`] for the runtime benches).
+//!
 //! The paper fixes n = 10,000 with real MNIST; `data::mnist` loads the real
 //! IDX files when present and otherwise substitutes synthetic digit images
 //! (DESIGN.md §2). Default n here is CI-scale; `otpr fig2 --n 10000
 //! --reps 30` reproduces the paper's point.
 
-use crate::core::{AssignmentInstance, OtInstance};
+use crate::api::{Problem, SolverRegistry};
+use crate::core::AssignmentInstance;
 use crate::data::{images, mnist};
 use crate::exp::report::Series;
-use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
-use crate::solvers::push_relabel::PushRelabel;
-use crate::solvers::sinkhorn::Sinkhorn;
-use crate::solvers::OtSolver;
-use crate::util::timer::Stopwatch;
+use crate::runtime::XlaRuntime;
 use std::sync::Arc;
 
 #[derive(Debug, Clone)]
@@ -57,7 +60,9 @@ pub fn build_instance(n: usize, seed: u64) -> (AssignmentInstance, Vec<f32>, Vec
 
 /// Figure 2: one runtime series per algorithm, x = ε.
 pub fn run(cfg: &Fig2Config, registry: Option<Arc<XlaRuntime>>) -> (Vec<Series>, bool) {
-    let (inst, fb, fa, real) = build_instance(cfg.n, cfg.seed);
+    let solvers = SolverRegistry::with_defaults();
+    let (inst, _fb, _fa, real) = build_instance(cfg.n, cfg.seed);
+    let problem = Problem::Assignment(inst);
     let mut series: Vec<Series> =
         cfg.engines.iter().map(|e| Series::new(e.clone())).collect();
     for &eps in &cfg.eps {
@@ -65,7 +70,8 @@ pub fn run(cfg: &Fig2Config, registry: Option<Arc<XlaRuntime>>) -> (Vec<Series>,
             let mut times = Vec::new();
             let mut note = None;
             for _rep in 0..cfg.reps {
-                let (secs, n2) = run_one(engine, &inst, &fb, &fa, eps, registry.clone());
+                let (secs, n2) =
+                    crate::exp::timed_registry_solve(&solvers, engine, &problem, eps, registry.clone());
                 if n2.is_some() {
                     note = n2;
                 }
@@ -88,63 +94,6 @@ pub fn run(cfg: &Fig2Config, registry: Option<Arc<XlaRuntime>>) -> (Vec<Series>,
     (series, real)
 }
 
-fn run_one(
-    engine: &str,
-    inst: &AssignmentInstance,
-    fb: &[f32],
-    fa: &[f32],
-    eps: f64,
-    registry: Option<Arc<XlaRuntime>>,
-) -> (Option<f64>, Option<String>) {
-    match engine {
-        "pr-cpu" => {
-            let sw = Stopwatch::start();
-            let sol = PushRelabel::new().solve_with_param(inst, eps);
-            (sol.ok().map(|_| sw.elapsed_secs()), None)
-        }
-        "pr-gpu" => {
-            let Some(reg) = registry else {
-                return (None, Some("no artifacts".into()));
-            };
-            let solver = XlaAssignment::new(reg);
-            let sw = Stopwatch::start();
-            match solver.solve_images(fb, fa, inst, eps) {
-                Ok(_) => (Some(sw.elapsed_secs()), None),
-                Err(e) => (None, Some(format!("error: {e}"))),
-            }
-        }
-        "sinkhorn-cpu" => {
-            let ot = OtInstance::uniform(inst.costs.clone()).expect("uniform");
-            let mut sk = Sinkhorn::new();
-            sk.config.max_iters = 20_000;
-            let sw = Stopwatch::start();
-            match sk.solve_ot(&ot, eps) {
-                Ok(_) => (Some(sw.elapsed_secs()), None),
-                Err(_) => {
-                    let sw = Stopwatch::start();
-                    let mut lg = Sinkhorn::log_domain();
-                    lg.config.max_iters = 1000; // bound the sweep; noted below
-                    match lg.solve_ot(&ot, eps) {
-                        Ok(_) => (Some(sw.elapsed_secs()), Some("log-domain".into())),
-                        Err(e) => (None, Some(format!("diverged: {e}"))),
-                    }
-                }
-            }
-        }
-        "sinkhorn-gpu" => {
-            let Some(reg) = registry else {
-                return (None, Some("no artifacts".into()));
-            };
-            let ot = OtInstance::uniform(inst.costs.clone()).expect("uniform");
-            let sw = Stopwatch::start();
-            match XlaSinkhorn::new(reg).solve_ot(&ot, eps) {
-                Ok(_) => (Some(sw.elapsed_secs()), None),
-                Err(e) => (None, Some(format!("diverged: {e}"))),
-            }
-        }
-        other => (None, Some(format!("unknown engine {other}"))),
-    }
-}
 
 #[cfg(test)]
 mod tests {

@@ -1,7 +1,77 @@
 //! Experiment harnesses regenerating the paper's evaluation (Figures 1–2)
 //! and the analytical ablations A1–A6. See DESIGN.md §4 for the index.
+//! All whole-solve measurements go through [`crate::api::SolverRegistry`].
 
 pub mod ablation;
 pub mod fig1;
 pub mod fig2;
 pub mod report;
+
+use crate::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use crate::runtime::XlaRuntime;
+use std::sync::Arc;
+
+/// One timed figure-harness solve: resolve the engine name, solve through
+/// the registry with the paper's comparator settings (standard-kernel
+/// Sinkhorn, raw-ε requests), and fall back to log-domain Sinkhorn with a
+/// note when the standard kernel diverges (the §5 instability).
+///
+/// Returns `(seconds, note)`; `None` seconds = engine unavailable/failed.
+/// Shared by `fig1` and `fig2` so the two figures can never desynchronize
+/// their comparator policy.
+pub(crate) fn timed_registry_solve(
+    solvers: &SolverRegistry,
+    engine: &str,
+    problem: &Problem,
+    eps: f64,
+    runtime: Option<Arc<XlaRuntime>>,
+) -> (Option<f64>, Option<String>) {
+    let Some(key) = solvers.canonical(engine) else {
+        return (None, Some(format!("unknown engine {engine}")));
+    };
+    if matches!(key, "xla" | "sinkhorn-xla") && runtime.is_none() {
+        return (None, Some("no artifacts".into()));
+    }
+    let config = SolverConfig {
+        sinkhorn_log_domain: false,
+        sinkhorn_max_iters: 20_000,
+        ..SolverConfig::default()
+    }
+    .with_runtime(runtime);
+    let request = SolveRequest::new(eps).raw_eps();
+    match solvers.solve(key, &config, problem, &request) {
+        Ok(sol) => (Some(sol.stats.seconds), None),
+        Err(_) if key == "sinkhorn-native" => {
+            let fallback = SolverConfig {
+                sinkhorn_log_domain: true,
+                sinkhorn_max_iters: 1000, // bound the sweep; noted by caller
+                ..config
+            };
+            match solvers.solve(key, &fallback, problem, &request) {
+                Ok(sol) => (Some(sol.stats.seconds), Some("log-domain".into())),
+                Err(e) => (None, Some(format!("diverged: {e}"))),
+            }
+        }
+        Err(e) => (None, Some(format!("error: {e}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::workloads::Workload;
+
+    #[test]
+    fn timed_solve_reports_time_or_note() {
+        let solvers = SolverRegistry::with_defaults();
+        let problem = Problem::Assignment(Workload::RandomCosts { n: 12 }.assignment(1));
+        let (secs, note) = timed_registry_solve(&solvers, "pr-cpu", &problem, 0.3, None);
+        assert!(secs.is_some() && note.is_none());
+        let (secs, note) = timed_registry_solve(&solvers, "pr-gpu", &problem, 0.3, None);
+        assert!(secs.is_none());
+        assert_eq!(note.as_deref(), Some("no artifacts"));
+        let (secs, note) = timed_registry_solve(&solvers, "nope", &problem, 0.3, None);
+        assert!(secs.is_none());
+        assert!(note.unwrap().contains("unknown"));
+    }
+}

@@ -4,19 +4,44 @@
 //! *"A Push-Relabel Based Additive Approximation for Optimal Transport"*
 //! (2022), as a three-layer Rust + JAX/Pallas stack:
 //!
+//! * [`api`] — **the public solve surface**: one [`api::Problem`] /
+//!   [`api::Solution`] model, a typed [`api::SolverRegistry`] of named
+//!   engines, and an [`api::SolveRequest`] builder carrying accuracy,
+//!   wall-clock budget, cancellation, and progress observation. Every
+//!   consumer (CLI, coordinator, experiment harnesses, examples) invokes
+//!   solvers through this layer.
 //! * [`solvers`] — the paper's algorithm (sequential §2.2, parallel §3.2,
 //!   OT extension §4) and every baseline (exact Hungarian, exact SSP OT,
-//!   Sinkhorn, greedy), over [`core`] domain types.
+//!   Sinkhorn, greedy, LMR'19), over [`core`] domain types. Reached via
+//!   the registry; the legacy per-kind traits remain for algorithm-level
+//!   tests.
 //! * [`runtime`] — PJRT execution of the AOT-compiled XLA artifacts
 //!   produced by `python/compile/aot.py` (JAX model + Pallas kernels); the
 //!   "GPU implementation" analog of the paper on this CPU-only testbed.
-//! * [`coordinator`] — the serving layer: job router, batcher, worker pool
-//!   and metrics, so OT solves are consumable as a service.
+//!   Builds against an in-tree stub unless the `xla` feature is enabled.
+//! * [`coordinator`] — the serving layer: job router (registry-backed),
+//!   batcher, worker pool and metrics, so OT solves are consumable as a
+//!   service with backpressure, per-job budgets, and live phase metrics.
 //! * [`exp`] — harnesses that regenerate the paper's Figure 1 / Figure 2
-//!   series and the analytical ablations (see DESIGN.md §4).
+//!   series and the analytical ablations (see DESIGN.md §4), driving every
+//!   engine through the registry.
 //!
-//! See `examples/quickstart.rs` for the 20-line tour.
+//! ```no_run
+//! use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+//! use otpr::data::workloads::Workload;
+//!
+//! let registry = SolverRegistry::with_defaults();
+//! let problem = Problem::Assignment(Workload::Fig1 { n: 500 }.assignment(42));
+//! let sol = registry
+//!     .solve("native-seq", &SolverConfig::default(), &problem, &SolveRequest::new(0.1))
+//!     .unwrap();
+//! assert!(sol.matching().unwrap().is_perfect());
+//! ```
+//!
+//! See `examples/quickstart.rs` for the full tour and
+//! `rust/src/api/README.md` for the registry/request reference.
 
+pub mod api;
 pub mod coordinator;
 pub mod core;
 pub mod data;

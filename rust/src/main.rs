@@ -1,29 +1,29 @@
 //! `otpr` — CLI for the push-relabel OT reproduction.
 //!
 //! Subcommands:
-//!   solve     solve one assignment instance (choose workload + engine)
+//!   solve     solve one assignment instance (any registry engine)
 //!   ot        solve one OT instance with random masses
 //!   serve     run the coordinator service on a synthetic job stream
+//!   engines   list the registered solver engines + aliases
 //!   fig1      regenerate Figure 1 (runtime vs n, synthetic points)
 //!   fig2      regenerate Figure 2 (runtime vs ε, MNIST-style images)
 //!   ablation  analytical ablations A1–A6 (see DESIGN.md §4)
 //!   validate  certify solver output against exact baselines + invariants
 //!   info      environment/artifact status
+//!
+//! Every solve goes through `otpr::api::SolverRegistry` + `SolveRequest`;
+//! engine names are the registry keys (aliases like `pr-cpu`, `gpu`,
+//! `sinkhorn` are accepted everywhere).
 
+use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry, ENGINE_SPECS};
 use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind};
-use otpr::core::OtprError;
 use otpr::data::workloads::Workload;
 use otpr::exp::report::{figure_csv, figure_table};
 use otpr::exp::{ablation, fig1, fig2};
-use otpr::runtime::{XlaAssignment, XlaRuntime};
-use otpr::solvers::ot_push_relabel::OtPushRelabel;
-use otpr::solvers::parallel_pr::ParallelPushRelabel;
-use otpr::solvers::push_relabel::PushRelabel;
-use otpr::solvers::sinkhorn::Sinkhorn;
-use otpr::solvers::{hungarian::Hungarian, ssp_ot::SspExactOt};
-use otpr::solvers::{AssignmentSolver, OtSolver};
+use otpr::runtime::XlaRuntime;
 use otpr::util::cli::Args;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = match Args::parse_env() {
@@ -37,6 +37,7 @@ fn main() {
         Some("solve") => cmd_solve(&args),
         Some("ot") => cmd_ot(&args),
         Some("serve") => cmd_serve(&args),
+        Some("engines") => cmd_engines(),
         Some("fig1") => cmd_fig1(&args),
         Some("fig2") => cmd_fig2(&args),
         Some("ablation") => cmd_ablation(&args),
@@ -53,8 +54,8 @@ fn main() {
 fn print_usage() {
     println!(
         "otpr — push-relabel additive approximation for optimal transport\n\
-         usage: otpr <solve|ot|serve|fig1|fig2|ablation|validate|info> [--options]\n\
-         common options: --n N --eps E --seed S --engine (native|parallel|xla|sinkhorn|auto)\n\
+         usage: otpr <solve|ot|serve|engines|fig1|fig2|ablation|validate|info> [--options]\n\
+         common options: --n N --eps E --seed S --engine KEY (see `otpr engines`)\n\
          see README.md for the full matrix"
     );
 }
@@ -81,33 +82,56 @@ fn workload(args: &Args, n: usize) -> Workload {
     }
 }
 
+fn cmd_engines() -> i32 {
+    println!("registered solver engines (key — aliases — problems):");
+    for spec in ENGINE_SPECS {
+        let kinds = match (spec.assignment, spec.ot) {
+            (true, true) => "assignment+ot",
+            (true, false) => "assignment",
+            (false, true) => "ot",
+            (false, false) => "none",
+        };
+        let aliases =
+            if spec.aliases.is_empty() { "-".to_string() } else { spec.aliases.join(", ") };
+        println!("  {:<16} [{kinds:<13}] aliases: {aliases}\n    {}", spec.key, spec.doc);
+    }
+    println!(
+        "  {:<16} [router decides] size- and artifact-aware (serve subcommand only)",
+        "auto"
+    );
+    0
+}
+
 fn cmd_solve(args: &Args) -> i32 {
     let n = args.usize_or("n", 1000);
     let eps = args.f64_or("eps", 0.1);
     let seed = args.u64_or("seed", 42);
     let engine = args.get_or("engine", "native");
-    let inst = workload(args, n).assignment(seed);
-    let result = match engine {
-        "native" | "seq" => PushRelabel::new().solve_with_param(&inst, eps),
-        "parallel" => ParallelPushRelabel::default().solve_with_param(&inst, eps),
-        "xla" | "gpu" => match registry(args) {
-            Some(reg) => XlaAssignment::new(reg).solve_costs(&inst, eps),
-            None => Err(OtprError::Artifact("no artifacts".into())),
-        },
-        other => {
-            eprintln!("unknown engine {other}");
-            return 2;
-        }
+    if engine == "auto" {
+        eprintln!("engine auto is routed by the coordinator — use `otpr serve --engine auto`");
+        return 2;
+    }
+    let solvers = SolverRegistry::with_defaults();
+    let Some(key) = solvers.canonical(engine) else {
+        eprintln!("unknown engine {engine} (try `otpr engines`)");
+        return 2;
     };
-    match result {
+    let config = SolverConfig::default()
+        .with_runtime(if key == "xla" || key == "sinkhorn-xla" { registry(args) } else { None });
+    let problem = Problem::Assignment(workload(args, n).assignment(seed));
+    // ε is the raw algorithm parameter here, matching the paper's plots.
+    let request = SolveRequest::new(eps).raw_eps();
+    match solvers.solve(key, &config, &problem, &request) {
         Ok(sol) => {
             println!(
-                "n={n} eps={eps} engine={engine}: cost={:.6} phases={} rounds={} time={:.3}s",
+                "n={n} eps={eps} engine={key}: cost={:.6} phases={} rounds={} time={:.3}s",
                 sol.cost, sol.stats.phases, sol.stats.rounds, sol.stats.seconds
             );
             if args.flag("exact") {
-                let ex = Hungarian.solve_assignment(&inst, 0.0).unwrap();
-                let c_max = inst.costs.max() as f64;
+                let ex = solvers
+                    .solve("hungarian", &config, &problem, &SolveRequest::new(0.0))
+                    .expect("exact baseline");
+                let c_max = problem.costs().max() as f64;
                 println!(
                     "exact={:.6} additive-error={:.6} (guarantee 3εn·c_max = {:.6})",
                     ex.cost,
@@ -128,34 +152,45 @@ fn cmd_ot(args: &Args) -> i32 {
     let n = args.usize_or("n", 200);
     let eps = args.f64_or("eps", 0.1);
     let seed = args.u64_or("seed", 42);
-    let inst = workload(args, n).ot_with_random_masses(seed);
     let engine = args.get_or("engine", "pr");
-    let result = match engine {
-        "pr" | "native" => OtPushRelabel::new().solve_ot(&inst, eps),
-        "sinkhorn" => Sinkhorn::log_domain().solve_ot(&inst, eps),
-        "exact" => SspExactOt::default().solve_ot(&inst, eps),
-        other => {
-            eprintln!("unknown OT engine {other}");
+    let solvers = SolverRegistry::with_defaults();
+    // For the OT subcommand `exact` means the exact OT oracle, not Hungarian.
+    let key = match engine {
+        "exact" => "ssp-exact",
+        "auto" => {
+            eprintln!("engine auto is routed by the coordinator — use `otpr serve --engine auto`");
             return 2;
         }
+        other => match solvers.canonical(other) {
+            Some(k) => k,
+            None => {
+                eprintln!("unknown OT engine {other} (try `otpr engines`)");
+                return 2;
+            }
+        },
     };
-    match result {
+    let config = SolverConfig::default();
+    let problem = Problem::Ot(workload(args, n).ot_with_random_masses(seed));
+    match solvers.solve(key, &config, &problem, &SolveRequest::new(eps)) {
         Ok(sol) => {
+            let support = sol.plan().map(|p| p.support_size()).unwrap_or(0);
             println!(
-                "OT n={n} eps={eps} engine={engine}: cost={:.6} phases={} support={} time={:.3}s {}",
+                "OT n={n} eps={eps} engine={key}: cost={:.6} phases={} support={} time={:.3}s {}",
                 sol.cost,
                 sol.stats.phases,
-                sol.plan.support_size(),
+                support,
                 sol.stats.seconds,
                 sol.stats.notes.join(" ")
             );
-            if args.flag("exact") && engine != "exact" {
-                let ex = SspExactOt::default().solve_ot(&inst, 0.0).unwrap();
+            if args.flag("exact") && key != "ssp-exact" {
+                let ex = solvers
+                    .solve("ssp-exact", &config, &problem, &SolveRequest::new(0.0))
+                    .expect("exact baseline");
                 println!(
                     "exact={:.6} additive-error={:.6} (guarantee ε·c_max = {:.6})",
                     ex.cost,
                     sol.cost - ex.cost,
-                    eps * inst.costs.max() as f64
+                    eps * problem.costs().max() as f64
                 );
             }
             0
@@ -173,22 +208,38 @@ fn cmd_serve(args: &Args) -> i32 {
     let n = args.usize_or("n", 200);
     let eps = args.f64_or("eps", 0.2);
     let engine = Engine::parse(args.get_or("engine", "auto")).unwrap_or(Engine::Auto);
+    let budget_ms = args.u64_or("budget-ms", 0);
     let reg = registry(args);
     println!("coordinator: {workers} workers, {jobs} jobs of n={n} (engine={})", engine.name());
     let coord = Coordinator::start(CoordinatorConfig { workers, ..Default::default() }, reg);
     let handles: Vec<_> = (0..jobs)
         .map(|i| {
             let kind = JobKind::Assignment(workload(args, n).assignment(i as u64));
-            coord.submit(kind, eps, engine).expect("submit")
+            let mut request = SolveRequest::new(eps);
+            if budget_ms > 0 {
+                request = request.with_budget(Duration::from_millis(budget_ms));
+            }
+            coord.submit_request(kind, request, engine).expect("submit")
         })
         .collect();
     let mut ok = 0;
+    let mut cancelled = 0;
     for h in handles {
         match h.wait() {
-            Ok(out) if out.result.is_ok() => ok += 1,
-            Ok(out) => eprintln!("job {} failed: {:?}", out.id, out.result.err()),
+            Ok(out) => match out.result {
+                Ok(sol) => {
+                    ok += 1;
+                    if sol.is_cancelled() {
+                        cancelled += 1;
+                    }
+                }
+                Err(e) => eprintln!("job {} failed: {e}", out.id),
+            },
             Err(e) => eprintln!("join error: {e}"),
         }
+    }
+    if cancelled > 0 {
+        println!("{cancelled}/{jobs} jobs hit the {budget_ms}ms budget");
     }
     println!("{ok}/{jobs} jobs succeeded\n{}", coord.metrics.snapshot());
     coord.shutdown();
@@ -302,6 +353,8 @@ fn cmd_validate(args: &Args) -> i32 {
     let n = args.usize_or("n", 100);
     let eps = args.f64_or("eps", 0.1);
     let seed = args.u64_or("seed", 42);
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default().with_paranoid(true);
     let mut failures = 0;
     println!("validating push-relabel against exact baselines (n={n}, eps={eps}, seed={seed})");
     for (name, wl) in [
@@ -309,10 +362,14 @@ fn cmd_validate(args: &Args) -> i32 {
         ("random", Workload::RandomCosts { n }),
         ("fig2", Workload::Fig2 { n }),
     ] {
-        let inst = wl.assignment(seed);
-        let c_max = inst.costs.max() as f64;
-        let pr = PushRelabel { paranoid: true }.solve_with_param(&inst, eps).unwrap();
-        let ex = Hungarian.solve_assignment(&inst, 0.0).unwrap();
+        let problem = Problem::Assignment(wl.assignment(seed));
+        let c_max = problem.costs().max() as f64;
+        let pr = solvers
+            .solve("native-seq", &config, &problem, &SolveRequest::new(eps).raw_eps())
+            .unwrap();
+        let ex = solvers
+            .solve("hungarian", &config, &problem, &SolveRequest::new(0.0))
+            .unwrap();
         let budget = 3.0 * eps * n as f64 * c_max;
         let err = pr.cost - ex.cost;
         let ok = err <= budget + 1e-9;
@@ -329,10 +386,10 @@ fn cmd_validate(args: &Args) -> i32 {
         }
     }
     // OT spot-check
-    let inst = Workload::Fig1 { n: n.min(60) }.ot_with_random_masses(seed);
-    let pr = OtPushRelabel { paranoid: true }.solve_ot(&inst, eps).unwrap();
-    let ex = SspExactOt::default().solve_ot(&inst, 0.0).unwrap();
-    let budget = eps * inst.costs.max() as f64;
+    let problem = Problem::Ot(Workload::Fig1 { n: n.min(60) }.ot_with_random_masses(seed));
+    let pr = solvers.solve("native-seq", &config, &problem, &SolveRequest::new(eps)).unwrap();
+    let ex = solvers.solve("ssp-exact", &config, &problem, &SolveRequest::new(0.0)).unwrap();
+    let budget = eps * problem.costs().max() as f64;
     let err = pr.cost - ex.cost;
     let ok = err <= budget + 1e-9;
     println!(
@@ -358,6 +415,7 @@ fn cmd_validate(args: &Args) -> i32 {
 fn cmd_info(args: &Args) -> i32 {
     println!("otpr {} — push-relabel OT reproduction", env!("CARGO_PKG_VERSION"));
     println!("threads available: {}", otpr::util::pool::default_threads());
+    println!("engines registered: {}", SolverRegistry::with_defaults().keys().join(", "));
     match registry(args) {
         Some(reg) => {
             println!(

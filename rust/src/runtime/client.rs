@@ -11,6 +11,8 @@
 
 use crate::core::error::{OtprError, Result};
 use crate::runtime::artifact::ArtifactRegistry;
+#[cfg(not(feature = "xla"))]
+use crate::runtime::pjrt_stub as xla;
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::mpsc::{channel, Sender};

@@ -3,8 +3,22 @@
 //! device-resident buffers on a dedicated service thread. This is the
 //! L3↔L2 boundary: Python never runs at request time.
 
+// The `xla` cargo feature swaps the in-tree PJRT stub for the real `xla`
+// bindings crate, which must be added to rust/Cargo.toml [dependencies]
+// from the offline registry (it is not declared as an optional dependency
+// on purpose — resolution would then require the registry even for
+// default builds). Fail loudly with instructions instead of a wall of
+// unresolved `xla::` imports; delete this guard when adding the crate.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature requires the real PJRT bindings: add the `xla` crate \
+     (xla_extension 0.5.1 closure, offline registry) to rust/Cargo.toml \
+     [dependencies] and remove this compile_error in rust/src/runtime/mod.rs"
+);
+
 pub mod artifact;
 pub mod client;
+pub mod pjrt_stub;
 pub mod xla_assignment;
 pub mod xla_sinkhorn;
 

@@ -12,6 +12,8 @@
 use crate::core::matching::{Matching, FREE};
 use crate::core::{AssignmentInstance, CostMatrix, OtprError, Result};
 use crate::runtime::client::{download_i32, run1, XlaContext, XlaRuntime};
+#[cfg(not(feature = "xla"))]
+use crate::runtime::pjrt_stub as xla;
 use crate::solvers::{AssignmentSolution, AssignmentSolver, SolveStats};
 use crate::util::timer::Stopwatch;
 use std::sync::Arc;
@@ -65,7 +67,7 @@ fn phase_loop(
     state[2 * n..4 * n].fill(-1);
     let mut state_buf = ctx.upload_i32(&state, &[5, n])?;
     let params_buf = ctx.upload_i32(&[threshold as i32, PHASES_PER_CALL], &[2])?;
-    let cap = (4.0 * (1.0 + 2.0 * eps_eff) / (eps_eff * eps_eff)).ceil() as usize + 4;
+    let cap = crate::solvers::push_relabel::assignment_phase_cap(eps_eff);
     let mut phases = 0usize;
     let mut rounds = 0usize;
     loop {
@@ -148,6 +150,8 @@ impl XlaAssignment {
         Ok(AssignmentSolution {
             matching: m,
             cost,
+            // duals stay device-side; only the match vector is downloaded
+            duals: None,
             stats: SolveStats {
                 phases: out.phases,
                 total_free_processed: 0,

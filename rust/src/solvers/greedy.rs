@@ -39,6 +39,7 @@ impl AssignmentSolver for GreedyMatcher {
         Ok(AssignmentSolution {
             matching: m,
             cost,
+            duals: None,
             stats: SolveStats { seconds: sw.elapsed_secs(), ..Default::default() },
         })
     }

@@ -103,6 +103,8 @@ impl AssignmentSolver for Hungarian {
         Ok(AssignmentSolution {
             matching,
             cost,
+            // exact f64 potentials don't fit the ε-unit DualWeights shape
+            duals: None,
             stats: SolveStats { seconds: sw.elapsed_secs(), ..Default::default() },
         })
     }

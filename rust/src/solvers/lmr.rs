@@ -151,6 +151,7 @@ impl LmrBaseline {
             return Ok(AssignmentSolution {
                 matching: Matching::empty(0, 0),
                 cost: 0.0,
+                duals: None,
                 stats: SolveStats::default(),
             });
         }
@@ -176,6 +177,8 @@ impl LmrBaseline {
         Ok(AssignmentSolution {
             matching: m,
             cost,
+            // i64 SSP potentials are not ε-unit DualWeights
+            duals: None,
             stats: SolveStats {
                 phases: augmentations, // one Dijkstra per augmentation
                 total_free_processed: augmentations as u64,

@@ -11,7 +11,7 @@ pub mod push_relabel;
 pub mod sinkhorn;
 pub mod ssp_ot;
 
-use crate::core::{AssignmentInstance, Matching, OtInstance, Result, TransportPlan};
+use crate::core::{AssignmentInstance, DualWeights, Matching, OtInstance, Result, TransportPlan};
 
 /// Counters reported by every solve — the material for EXPERIMENTS.md.
 #[derive(Debug, Clone, Default)]
@@ -34,6 +34,10 @@ pub struct AssignmentSolution {
     pub matching: Matching,
     /// Total cost under the *original* (unrounded) cost matrix.
     pub cost: f64,
+    /// ε-unit dual weights certifying approximate optimality, when the
+    /// solver maintains them (the push-relabel family does; exact/greedy
+    /// baselines report `None`).
+    pub duals: Option<DualWeights>,
     pub stats: SolveStats,
 }
 

@@ -18,10 +18,17 @@
 //! mass rounding ≤ ε/4 + matching at ε_m = ε/6 contributes 3·ε_m = ε/2
 //! + residual supply shipped greedily ≤ ε/4.
 
+use crate::core::control::{SolveControl, CANCELLED_NOTE};
 use crate::core::{CostMatrix, OtInstance, OtprError, QuantizedCosts, Result, ScaledOtInstance, TransportPlan};
 use crate::solvers::{OtSolution, OtSolver, SolveStats};
 use crate::util::timer::Stopwatch;
 use std::collections::BTreeMap;
+
+/// Hard safety cap on OT phases at matching parameter `eps` (the OT
+/// analog of [`crate::solvers::push_relabel::assignment_phase_cap`]).
+fn ot_phase_cap(eps: f64) -> usize {
+    (8.0 * (1.0 + 2.0 * eps) / (eps * eps)).ceil() as usize + 16
+}
 
 /// A cluster of matched copies of demand vertex `a` sharing dual `y`.
 #[derive(Debug, Clone)]
@@ -213,8 +220,7 @@ impl OtPrState {
     }
 
     pub fn run_to_termination(&mut self) -> Result<()> {
-        let eps = self.q.eps;
-        let cap = (8.0 * (1.0 + 2.0 * eps) / (eps * eps)).ceil() as usize + 16;
+        let cap = ot_phase_cap(self.q.eps);
         while self.run_phase() {
             if self.phases > cap {
                 return Err(OtprError::Infeasible(format!(
@@ -315,19 +321,41 @@ impl OtPushRelabel {
         eps_mass: f64,
         eps_match: f64,
     ) -> Result<OtSolution> {
+        self.solve_with_params_ctl(inst, eps_mass, eps_match, &SolveControl::none())
+    }
+
+    /// Control-aware entry: polls `ctl` between phases and reports
+    /// (phase, free supply units remaining) through its observer. A stopped
+    /// solve still ships all supply (completion is unconditional) and notes
+    /// `"cancelled"`.
+    pub fn solve_with_params_ctl(
+        &self,
+        inst: &OtInstance,
+        eps_mass: f64,
+        eps_match: f64,
+        ctl: &SolveControl,
+    ) -> Result<OtSolution> {
         let sw = Stopwatch::start();
         let scaled = ScaledOtInstance::build(inst, eps_mass);
         let mut st = OtPrState::new(&inst.costs, &scaled, eps_match);
-        if self.paranoid {
-            loop {
-                let progressed = st.run_phase();
-                st.check_invariants().map_err(OtprError::Infeasible)?;
-                if !progressed {
-                    break;
-                }
+        let cap = ot_phase_cap(st.q.eps);
+        let mut cancelled = false;
+        loop {
+            if ctl.should_stop() {
+                cancelled = true;
+                break;
             }
-        } else {
-            st.run_to_termination()?;
+            let progressed = st.run_phase();
+            if self.paranoid {
+                st.check_invariants().map_err(OtprError::Infeasible)?;
+            }
+            if !progressed {
+                break;
+            }
+            ctl.report(st.phases, st.free_units() as f64);
+            if st.phases > cap {
+                return Err(OtprError::Infeasible(format!("OT phase cap {cap} exceeded (bug)")));
+            }
         }
 
         // Completion: remaining free supply units go to any demand with
@@ -391,6 +419,10 @@ impl OtPushRelabel {
         }
 
         let cost = plan.cost(&inst.costs);
+        let mut notes = vec![format!("max_clusters={}", st.max_classes_seen)];
+        if cancelled {
+            notes.push(CANCELLED_NOTE.to_string());
+        }
         Ok(OtSolution {
             plan,
             cost,
@@ -399,7 +431,7 @@ impl OtPushRelabel {
                 total_free_processed: st.total_free_processed,
                 rounds: 0,
                 seconds: sw.elapsed_secs(),
-                notes: vec![format!("max_clusters={}", st.max_classes_seen)],
+                notes,
             },
         })
     }

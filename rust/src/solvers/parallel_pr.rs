@@ -17,6 +17,7 @@
 //! admissible graph (every admissible edge from a still-free b points at a
 //! taken a). §3.2 predicts O(log n) expected rounds; ablation A2 measures it.
 
+use crate::core::control::{SolveControl, CANCELLED_NOTE};
 use crate::core::duals::DualWeights;
 use crate::core::matching::{Matching, FREE};
 use crate::core::quantize::QuantizedCosts;
@@ -179,32 +180,58 @@ impl ParallelPushRelabel {
         inst: &AssignmentInstance,
         eps_param: f64,
     ) -> Result<AssignmentSolution> {
+        self.solve_with_param_ctl(inst, eps_param, &SolveControl::none())
+    }
+
+    /// Control-aware entry (see [`crate::solvers::push_relabel`]): polls
+    /// `ctl` between phases and reports progress through its observer.
+    pub fn solve_with_param_ctl(
+        &self,
+        inst: &AssignmentInstance,
+        eps_param: f64,
+        ctl: &SolveControl,
+    ) -> Result<AssignmentSolution> {
         let sw = Stopwatch::start();
         if inst.n() == 0 {
             return Ok(AssignmentSolution {
                 matching: Matching::empty(0, 0),
                 cost: 0.0,
+                duals: None,
                 stats: SolveStats::default(),
             });
         }
         let mut st = ParallelPrState::new(&inst.costs, eps_param, self.threads);
-        let cap = (4.0 * (1.0 + 2.0 * eps_param) / (eps_param * eps_param)).ceil() as usize + 4;
-        while st.run_phase().is_some() {
+        let cap = crate::solvers::push_relabel::assignment_phase_cap(eps_param);
+        let mut cancelled = false;
+        loop {
+            if ctl.should_stop() {
+                cancelled = true;
+                break;
+            }
+            let Some((free_at_start, _rounds)) = st.run_phase() else { break };
+            let free_left = st.m.match_b.iter().filter(|&&a| a == FREE).count();
+            debug_assert!(free_left <= free_at_start);
+            ctl.report(st.phases, free_left as f64);
             if st.phases > cap {
                 return Err(OtprError::Infeasible("phase cap exceeded (bug)".into()));
             }
         }
         st.m.complete_arbitrarily();
         let cost = st.m.cost(&inst.costs);
+        let mut notes = vec![format!("threads={}", self.threads)];
+        if cancelled {
+            notes.push(CANCELLED_NOTE.to_string());
+        }
         Ok(AssignmentSolution {
             matching: st.m,
             cost,
+            duals: Some(st.y),
             stats: SolveStats {
                 phases: st.phases,
                 total_free_processed: st.total_free_processed,
                 rounds: st.rounds,
                 seconds: sw.elapsed_secs(),
-                notes: vec![format!("threads={}", self.threads)],
+                notes,
             },
         })
     }

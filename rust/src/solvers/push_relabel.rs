@@ -16,12 +16,21 @@
 //! [`PrState`] exposes single phases so property tests can verify the
 //! invariants (I1)/(I2) after *every* phase, not just at the end.
 
+use crate::core::control::{SolveControl, CANCELLED_NOTE};
 use crate::core::duals::{check_feasible, DualWeights};
 use crate::core::matching::{Matching, FREE};
 use crate::core::quantize::QuantizedCosts;
 use crate::core::{AssignmentInstance, CostMatrix, OtprError, Result};
 use crate::solvers::{AssignmentSolution, AssignmentSolver, SolveStats};
 use crate::util::timer::Stopwatch;
+
+/// Hard safety cap on assignment phases at parameter `eps`: 4× the
+/// Lemma 3.2/3.3 bound (1+2ε)/ε², plus slack. Exceeding it means the
+/// phase-count bound is violated — a bug, not a slow instance. Shared by
+/// the sequential, parallel, and XLA phase loops.
+pub(crate) fn assignment_phase_cap(eps: f64) -> usize {
+    (4.0 * (1.0 + 2.0 * eps) / (eps * eps)).ceil() as usize + 4
+}
 
 /// Outcome of one phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -132,11 +141,10 @@ impl PrState {
         }
     }
 
-    /// Run phases until the termination condition, with a hard safety cap of
-    /// 4·(1+2ε)/ε² phases (4× the Lemma 3.2/3.3 bound).
+    /// Run phases until the termination condition, with the
+    /// [`assignment_phase_cap`] safety cap.
     pub fn run_to_termination(&mut self) -> Result<()> {
-        let eps = self.q.eps;
-        let cap = (4.0 * (1.0 + 2.0 * eps) / (eps * eps)).ceil() as usize + 4;
+        let cap = assignment_phase_cap(self.q.eps);
         loop {
             let out = self.run_phase();
             if out.terminated {
@@ -180,40 +188,73 @@ impl PushRelabel {
         inst: &AssignmentInstance,
         eps_param: f64,
     ) -> Result<AssignmentSolution> {
+        self.solve_with_param_ctl(inst, eps_param, &SolveControl::none())
+    }
+
+    /// Control-aware entry: polls `ctl` between phases (cancellation /
+    /// wall-clock budget) and reports (phase, free vertices remaining)
+    /// through its observer. A stopped solve completes arbitrarily like the
+    /// normal path and notes `"cancelled"` — it is still a perfect
+    /// matching, just without the additive guarantee.
+    pub fn solve_with_param_ctl(
+        &self,
+        inst: &AssignmentInstance,
+        eps_param: f64,
+        ctl: &SolveControl,
+    ) -> Result<AssignmentSolution> {
         let sw = Stopwatch::start();
         let n = inst.n();
         if n == 0 {
             return Ok(AssignmentSolution {
                 matching: Matching::empty(0, 0),
                 cost: 0.0,
+                duals: None,
                 stats: SolveStats::default(),
             });
         }
         let mut st = PrState::new(&inst.costs, eps_param);
-        if self.paranoid {
-            loop {
-                let out = st.run_phase();
-                st.check_invariants().map_err(OtprError::Infeasible)?;
-                if out.terminated {
-                    break;
-                }
+        let cap = assignment_phase_cap(eps_param);
+        let mut cancelled = false;
+        loop {
+            if ctl.should_stop() {
+                cancelled = true;
+                break;
             }
-        } else {
-            st.run_to_termination()?;
+            let out = st.run_phase();
+            if self.paranoid {
+                st.check_invariants().map_err(OtprError::Infeasible)?;
+            }
+            if out.terminated {
+                break;
+            }
+            // Recount rather than free_at_start - matched: pushes can evict
+            // already-matched partners, which return to the free pool.
+            let free_left = st.m.match_b.iter().filter(|&&a| a == FREE).count();
+            ctl.report(st.phases, free_left as f64);
+            if st.phases > cap {
+                return Err(OtprError::Infeasible(format!(
+                    "phase cap {cap} exceeded — phase-count bound violated (bug)"
+                )));
+            }
         }
         // arbitrary completion of the ≤ εn leftover free vertices
         st.m.complete_arbitrarily();
         debug_assert!(st.m.is_perfect());
         let cost = st.m.cost(&inst.costs);
+        let mut notes = Vec::new();
+        if cancelled {
+            notes.push(CANCELLED_NOTE.to_string());
+        }
         Ok(AssignmentSolution {
             matching: st.m,
             cost,
+            duals: Some(st.y),
             stats: SolveStats {
                 phases: st.phases,
                 total_free_processed: st.total_free_processed,
                 rounds: 0,
                 seconds: sw.elapsed_secs(),
-                notes: vec![],
+                notes,
             },
         })
     }

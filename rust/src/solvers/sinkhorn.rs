@@ -9,6 +9,7 @@
 //! the paper's §5 observes (ablation A5) — underflow of exp(-C/η) produces
 //! zero row sums and the solve aborts with a note.
 
+use crate::core::control::{SolveControl, CANCELLED_NOTE};
 use crate::core::{OtInstance, OtprError, Result, TransportPlan};
 use crate::solvers::{OtSolution, OtSolver, SolveStats};
 use crate::util::timer::Stopwatch;
@@ -51,6 +52,39 @@ impl Sinkhorn {
             (eps * c_max / (4.0 * ln_n)).max(1e-12)
         })
     }
+
+    /// Control-aware entry: polls `ctl` every sweep and reports
+    /// (iteration, marginal violation) at each stopping-rule check. A
+    /// stopped solve rounds its current iterate to a feasible plan and
+    /// notes `"cancelled"`.
+    pub fn solve_ot_ctl(
+        &self,
+        inst: &OtInstance,
+        eps: f64,
+        ctl: &SolveControl,
+    ) -> Result<OtSolution> {
+        let sw = Stopwatch::start();
+        let nb = inst.costs.nb;
+        let na = inst.costs.na;
+        let c_max = (inst.costs.max() as f64).max(1e-30);
+        let eta = self.eta_for(eps, c_max, nb.max(na));
+        let tol = eps / 8.0; // marginal L1 violation target (costs ≤ c_max)
+        let r = &inst.supply; // rows
+        let c = &inst.demand; // cols
+
+        let mut stats = SolveStats::default();
+        let plan = if self.config.log_domain {
+            solve_log_domain(inst, eta, tol, &self.config, ctl, &mut stats)?
+        } else {
+            solve_standard(inst, eta, tol, &self.config, ctl, &mut stats)?
+        };
+        // Altschuler rounding → exactly feasible plan.
+        let plan = round_to_feasible(&plan, r, c);
+        debug_assert!(plan.check(r, c, 1e-6).is_ok());
+        let cost = plan.cost(&inst.costs);
+        stats.seconds = sw.elapsed_secs();
+        Ok(OtSolution { plan, cost, stats })
+    }
 }
 
 impl OtSolver for Sinkhorn {
@@ -63,27 +97,7 @@ impl OtSolver for Sinkhorn {
     }
 
     fn solve_ot(&self, inst: &OtInstance, eps: f64) -> Result<OtSolution> {
-        let sw = Stopwatch::start();
-        let nb = inst.costs.nb;
-        let na = inst.costs.na;
-        let c_max = (inst.costs.max() as f64).max(1e-30);
-        let eta = self.eta_for(eps, c_max, nb.max(na));
-        let tol = eps / 8.0; // marginal L1 violation target (costs ≤ c_max)
-        let r = &inst.supply; // rows
-        let c = &inst.demand; // cols
-
-        let mut stats = SolveStats::default();
-        let plan = if self.config.log_domain {
-            solve_log_domain(inst, eta, tol, &self.config, &mut stats)?
-        } else {
-            solve_standard(inst, eta, tol, &self.config, &mut stats)?
-        };
-        // Altschuler rounding → exactly feasible plan.
-        let plan = round_to_feasible(&plan, r, c);
-        debug_assert!(plan.check(r, c, 1e-6).is_ok());
-        let cost = plan.cost(&inst.costs);
-        stats.seconds = sw.elapsed_secs();
-        Ok(OtSolution { plan, cost, stats })
+        self.solve_ot_ctl(inst, eps, &SolveControl::none())
     }
 }
 
@@ -92,6 +106,7 @@ fn solve_standard(
     eta: f64,
     tol: f64,
     cfg: &SinkhornConfig,
+    ctl: &SolveControl,
     stats: &mut SolveStats,
 ) -> Result<TransportPlan> {
     let nb = inst.costs.nb;
@@ -104,6 +119,10 @@ fn solve_standard(
     let mut kv = vec![0.0f64; nb];
     let mut ktu = vec![0.0f64; na];
     for it in 0..cfg.max_iters {
+        if ctl.should_stop() {
+            stats.notes.push(CANCELLED_NOTE.to_string());
+            break;
+        }
         // u = r ./ (K v)
         for b in 0..nb {
             let row = &k[b * na..(b + 1) * na];
@@ -133,6 +152,7 @@ fn solve_standard(
         }
         if (it + 1) % cfg.check_every == 0 {
             let err = marginal_violation(&k, &u, &v, &inst.supply, &inst.demand, nb, na);
+            ctl.report(it + 1, err);
             if err < tol {
                 break;
             }
@@ -152,6 +172,7 @@ fn solve_log_domain(
     eta: f64,
     tol: f64,
     cfg: &SinkhornConfig,
+    ctl: &SolveControl,
     stats: &mut SolveStats,
 ) -> Result<TransportPlan> {
     let nb = inst.costs.nb;
@@ -163,6 +184,10 @@ fn solve_log_domain(
     let mut g = vec![0.0f64; na];
     let mut buf = vec![0.0f64; na.max(nb)];
     for it in 0..cfg.max_iters {
+        if ctl.should_stop() {
+            stats.notes.push(CANCELLED_NOTE.to_string());
+            break;
+        }
         // f_b = eta*(log r_b - LSE_a((g_a - C_ba)/eta))
         for b in 0..nb {
             let row = &cm[b * na..(b + 1) * na];
@@ -194,6 +219,7 @@ fn solve_log_domain(
                     .sum();
                 err += (s - inst.demand[a]).abs();
             }
+            ctl.report(it + 1, err);
             if err < tol {
                 break;
             }

@@ -1,11 +1,14 @@
 //! Coordinator end-to-end: mixed job streams, backpressure, failure
-//! isolation, metrics accounting, and (when artifacts exist) the XLA
-//! engine behind the service.
+//! isolation, metrics accounting, per-job wall-clock budgets with live
+//! progress, and (when artifacts exist) the XLA engine behind the service.
 
-use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind, JobResult};
+use otpr::api::{CancelToken, SolveRequest};
+use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind};
 use otpr::data::workloads::Workload;
 use otpr::runtime::XlaRuntime;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn assignment(n: usize, seed: u64) -> JobKind {
     JobKind::Assignment(Workload::Fig1 { n }.assignment(seed))
@@ -29,15 +32,14 @@ fn mixed_stream_completes() {
     let mut assignments = 0;
     let mut ots = 0;
     for h in handles {
-        match h.wait().unwrap().result.unwrap() {
-            JobResult::Assignment(s) => {
-                assert!(s.matching.is_perfect());
-                assignments += 1;
-            }
-            JobResult::Ot(s) => {
-                assert!((s.plan.total_mass() - 1.0).abs() < 1e-9);
-                ots += 1;
-            }
+        let sol = h.wait().unwrap().result.unwrap();
+        if let Some(m) = sol.matching() {
+            assert!(m.is_perfect());
+            assignments += 1;
+        } else {
+            let p = sol.plan().expect("a solution is a matching or a plan");
+            assert!((p.total_mass() - 1.0).abs() < 1e-9);
+            ots += 1;
         }
     }
     assert_eq!(assignments + ots, total);
@@ -93,10 +95,77 @@ fn batching_is_recorded() {
 fn sinkhorn_engine_on_assignment_jobs() {
     let coord = Coordinator::start(CoordinatorConfig::default(), None);
     let h = coord.submit(assignment(16, 3), 0.25, Engine::SinkhornNative).unwrap();
-    match h.wait().unwrap().result.unwrap() {
-        JobResult::Ot(sol) => assert!(sol.cost > 0.0),
-        _ => panic!("sinkhorn returns a transport plan"),
-    }
+    let sol = h.wait().unwrap().result.unwrap();
+    assert!(sol.plan().is_some(), "sinkhorn returns a transport plan");
+    assert!(sol.cost > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn baseline_engines_through_coordinator() {
+    let coord = Coordinator::start(CoordinatorConfig::default(), None);
+    let approx = coord.submit(assignment(20, 5), 0.2, Engine::NativeSeq).unwrap();
+    let exact = coord.submit(assignment(20, 5), 0.0, Engine::Hungarian).unwrap();
+    let a = approx.wait().unwrap().result.unwrap();
+    let e = exact.wait().unwrap().result.unwrap();
+    assert!(a.cost >= e.cost - 1e-9, "exact is a lower bound");
+    coord.shutdown();
+}
+
+#[test]
+fn wall_clock_budget_cancels_with_progress_reported() {
+    // The acceptance scenario: drive the coordinator with a per-job
+    // wall-clock budget and observe (a) the budgeted job stops early and
+    // says so, (b) progress streams through the observer on a normal job,
+    // and (c) the metrics layer saw the phase events.
+    let coord = Coordinator::start(CoordinatorConfig { workers: 2, ..Default::default() }, None);
+
+    // (a) zero budget: returns within one phase, notes "cancelled"
+    let rushed = SolveRequest::new(0.01).with_budget(Duration::ZERO);
+    let h = coord.submit_request(assignment(200, 1), rushed, Engine::NativeSeq).unwrap();
+    let sol = h.wait().unwrap().result.expect("budgeted job still returns a solution");
+    assert!(sol.is_cancelled(), "notes: {:?}", sol.stats.notes);
+    assert!(sol.stats.phases <= 1, "must stop within one phase, ran {}", sol.stats.phases);
+    assert!(sol.matching().unwrap().is_perfect(), "arbitrary completion still applies");
+
+    // (b) generous budget + observer: completes normally, events observed
+    let events = Arc::new(AtomicUsize::new(0));
+    let counter = events.clone();
+    let watched = SolveRequest::new(0.2)
+        .with_budget(Duration::from_secs(60))
+        .with_observer(move |p| {
+            assert!(p.phase >= 1);
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+    let h = coord.submit_request(assignment(64, 2), watched, Engine::NativeSeq).unwrap();
+    let sol = h.wait().unwrap().result.unwrap();
+    assert!(!sol.is_cancelled());
+    assert!(sol.stats.phases > 0);
+    assert!(
+        events.load(Ordering::Relaxed) >= sol.stats.phases.saturating_sub(1),
+        "observer saw {} events for {} phases",
+        events.load(Ordering::Relaxed),
+        sol.stats.phases
+    );
+
+    // (c) the coordinator teed the same progress into per-engine metrics
+    let counters = coord.metrics.engine_counters();
+    let seq = counters.iter().find(|c| c.engine == "native-seq").expect("engine counted");
+    assert!(seq.phases > 0, "phase events must reach metrics");
+    assert_eq!(seq.jobs, 2);
+    coord.shutdown();
+}
+
+#[test]
+fn caller_cancellation_token_respected() {
+    let coord = Coordinator::start(CoordinatorConfig::default(), None);
+    let token = CancelToken::new();
+    token.cancel(); // cancel before the job is even picked up
+    let req = SolveRequest::new(0.05).with_cancel(token);
+    let h = coord.submit_request(assignment(150, 3), req, Engine::NativeParallel).unwrap();
+    let sol = h.wait().unwrap().result.unwrap();
+    assert!(sol.is_cancelled());
+    assert_eq!(sol.stats.phases, 0);
     coord.shutdown();
 }
 
@@ -115,14 +184,10 @@ fn xla_engine_through_coordinator_when_artifacts_exist() {
     let h2 = coord.submit(assignment(256, 2), 0.3, Engine::Xla).unwrap();
     for h in [h1, h2] {
         let out = h.wait().unwrap();
-        let res = out.result.expect("xla job should succeed");
-        match res {
-            JobResult::Assignment(sol) => {
-                assert!(sol.matching.is_perfect());
-                assert!(sol.stats.notes.iter().any(|n| n == "bucket=256"));
-            }
-            _ => panic!("expected assignment result"),
-        }
+        let sol = out.result.expect("xla job should succeed");
+        let m = sol.matching().expect("expected assignment result");
+        assert!(m.is_perfect());
+        assert!(sol.stats.notes.iter().any(|n| n == "bucket=256"));
         assert_eq!(out.engine_used, "xla");
     }
     coord.shutdown();

@@ -1,0 +1,151 @@
+//! Property tests for the `otpr::api` surface: `matching_to_plan`
+//! marginal/cost identities and `SolveRequest` cancellation semantics.
+
+use otpr::api::{CancelToken, Problem, SolveRequest, SolverConfig, SolverRegistry};
+use otpr::data::workloads::Workload;
+use otpr::prop_assert;
+use otpr::solvers::matching_to_plan;
+use otpr::util::proptest_mini::{check, check_default, PropConfig};
+use otpr::util::rng::Pcg32;
+
+/// A uniformly random perfect matching on n vertices (Fisher–Yates).
+fn random_perfect_matching(n: usize, rng: &mut Pcg32) -> otpr::core::Matching {
+    let mut perm: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = rng.next_below((i + 1) as u32) as usize;
+        perm.swap(i, j);
+    }
+    let mut m = otpr::core::Matching::empty(n, n);
+    for (b, &a) in perm.iter().enumerate() {
+        m.link(b, a);
+    }
+    m
+}
+
+#[test]
+fn matching_to_plan_marginals_sum_to_one() {
+    check_default("matching_to_plan marginals", |rng| {
+        let n = 1 + rng.next_below(24) as usize;
+        let m = random_perfect_matching(n, rng);
+        let plan = matching_to_plan(&m);
+        let unit = 1.0 / n as f64;
+        // every row and column marginal is exactly 1/n; totals sum to 1
+        for (b, &row) in plan.supply_marginal().iter().enumerate() {
+            prop_assert!((row - unit).abs() < 1e-12, "row {b} marginal {row} != {unit} (n={n})");
+        }
+        for (a, &col) in plan.demand_marginal().iter().enumerate() {
+            prop_assert!((col - unit).abs() < 1e-12, "col {a} marginal {col} != {unit} (n={n})");
+        }
+        prop_assert!(
+            (plan.total_mass() - 1.0).abs() < 1e-9,
+            "total mass {} != 1 (n={n})",
+            plan.total_mass()
+        );
+        prop_assert!(plan.support_size() == n, "support {} != n={n}", plan.support_size());
+        Ok(())
+    });
+}
+
+#[test]
+fn matching_to_plan_cost_is_matching_cost_over_n() {
+    check_default("matching_to_plan cost identity", |rng| {
+        let n = 1 + rng.next_below(20) as usize;
+        let costs = Workload::RandomCosts { n }.costs(rng.next_u64());
+        let m = random_perfect_matching(n, rng);
+        let plan = matching_to_plan(&m);
+        let plan_cost = plan.cost(&costs);
+        let match_cost = m.cost(&costs);
+        prop_assert!(
+            (plan_cost - match_cost / n as f64).abs() < 1e-9,
+            "plan cost {plan_cost} != matching cost {match_cost} / {n}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn cancelled_solve_returns_within_one_phase_and_notes_it() {
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    // Pre-cancelled token: every engine that honors control must stop
+    // before running a full phase and must say "cancelled" in its notes.
+    check(
+        "pre-cancelled request stops within one phase",
+        &PropConfig { cases: 12, seed: 0xAB },
+        |rng| {
+            let n = 8 + rng.next_below(40) as usize;
+            let eps = 0.05 + 0.3 * rng.next_f64();
+            let (problem, engine) = if rng.next_below(2) == 0 {
+                (Problem::Assignment(Workload::RandomCosts { n }.assignment(rng.next_u64())), {
+                    if rng.next_below(2) == 0 { "native-seq" } else { "native-parallel" }
+                })
+            } else {
+                (
+                    Problem::Ot(Workload::Fig1 { n: n.min(16) }.ot_with_random_masses(rng.next_u64())),
+                    "native-seq",
+                )
+            };
+            let token = CancelToken::new();
+            token.cancel();
+            let req = SolveRequest::new(eps).with_cancel(token);
+            let sol = solvers
+                .solve(engine, &config, &problem, &req)
+                .map_err(|e| format!("cancelled solve must not error: {e}"))?;
+            prop_assert!(
+                sol.is_cancelled(),
+                "{engine} (n={n}) missing cancelled note: {:?}",
+                sol.stats.notes
+            );
+            prop_assert!(
+                sol.stats.phases <= 1,
+                "{engine} ran {} phases after cancellation",
+                sol.stats.phases
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mid_solve_cancellation_stops_at_phase_boundary() {
+    // Cancel from inside the observer after the first phase: the solver
+    // must not run to termination.
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let problem = Problem::Assignment(Workload::Fig1 { n: 200 }.assignment(7));
+    let token = CancelToken::new();
+    let tripwire = token.clone();
+    let req = SolveRequest::new(0.01)
+        .raw_eps()
+        .with_cancel(token)
+        .with_observer(move |p| {
+            if p.phase >= 1 {
+                tripwire.cancel();
+            }
+        });
+    let sol = solvers.solve("native-seq", &config, &problem, &req).unwrap();
+    assert!(sol.is_cancelled());
+    assert!(sol.stats.phases <= 2, "stopped late: {} phases", sol.stats.phases);
+    // a full run at this ε takes far more phases — sanity-check that
+    let full = solvers
+        .solve("native-seq", &config, &problem, &SolveRequest::new(0.01).raw_eps())
+        .unwrap();
+    assert!(full.stats.phases > 2, "baseline only took {} phases", full.stats.phases);
+    assert!(!full.is_cancelled());
+}
+
+#[test]
+fn sinkhorn_honors_cancellation() {
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let problem = Problem::Assignment(Workload::Fig1 { n: 24 }.assignment(3));
+    let token = CancelToken::new();
+    token.cancel();
+    let req = SolveRequest::new(0.1).with_cancel(token);
+    let sol = solvers.solve("sinkhorn-native", &config, &problem, &req).unwrap();
+    assert!(sol.is_cancelled());
+    assert_eq!(sol.stats.phases, 0, "no sweeps after pre-cancellation");
+    // the rounded iterate is still an exactly feasible plan
+    let ot = problem.to_ot_instance().unwrap();
+    sol.plan().unwrap().check(&ot.supply, &ot.demand, 1e-6).unwrap();
+}
