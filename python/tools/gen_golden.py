@@ -1,0 +1,200 @@
+#!/usr/bin/env python3
+"""Generate the golden conformance corpus under rust/testdata/golden/.
+
+Every instance lives on a 1/16 grid (costs and masses are multiples of
+1/16) so all values — and the pinned exact optima — are exactly
+representable in f32/f64 and survive JSON round-trips bit-for-bit. The
+cost formula mirrors `otpr::data::workloads::golden_cost`:
+
+    c(b, a) = ((7*b + 11*a + 3*a*b + salt) % 17) / 16
+
+Exact references are computed in exact rational arithmetic:
+
+* assignment: brute force over all permutations (n <= 8);
+* OT: masses scaled to 16 integer units, cycle-canceling min-cost flow
+  from a northwest-corner start, then the result is *verified* with a
+  duality certificate (Bellman-Ford potentials must be feasible and
+  complementarily slack), so a bug in the optimizer cannot silently
+  produce a wrong pin.
+"""
+
+import itertools
+import json
+import os
+from fractions import Fraction
+
+SCALE = 16
+MOD = 17
+
+
+def cost(b, a, salt):
+    return Fraction((7 * b + 11 * a + 3 * a * b + salt) % MOD, SCALE)
+
+
+ASSIGN_CASES = [
+    ("assign-n4", 4, 1),
+    ("assign-n5", 5, 2),
+    ("assign-n6", 6, 3),
+    ("assign-n8", 8, 5),
+]
+
+# (name, nb, na, salt, supply units over 16 (rows), demand units (cols))
+OT_CASES = [
+    ("ot-3x4", 3, 4, 7, [8, 5, 3], [4, 4, 4, 4]),
+    ("ot-4x4", 4, 4, 13, [4, 4, 4, 4], [1, 2, 6, 7]),
+    ("ot-5x5", 5, 5, 11, [6, 4, 3, 2, 1], [2, 2, 4, 4, 4]),
+    ("ot-6x6", 6, 6, 17, [2, 2, 2, 2, 4, 4], [3, 3, 3, 3, 2, 2]),
+]
+
+
+def brute_force_assignment(n, salt):
+    best = None
+    for perm in itertools.permutations(range(n)):
+        tot = sum(cost(b, perm[b], salt) for b in range(n))
+        if best is None or tot < best:
+            best = tot
+    return best
+
+
+def exact_ot_units(nb, na, salt, supply, demand):
+    """Min-cost integral flow shipping all units; returns Fraction cost.
+
+    Cycle canceling: start from the (feasible) northwest-corner flow, then
+    cancel negative residual cycles found by Bellman-Ford until none
+    remain; finally verify optimality via dual feasibility + complementary
+    slackness.
+    """
+    assert sum(supply) == sum(demand) == SCALE
+    c = [[cost(b, a, salt) for a in range(na)] for b in range(nb)]
+    # northwest corner start
+    flow = [[0] * na for _ in range(nb)]
+    s = supply[:]
+    d = demand[:]
+    b = a = 0
+    while b < nb and a < na:
+        k = min(s[b], d[a])
+        flow[b][a] += k
+        s[b] -= k
+        d[a] -= k
+        if s[b] == 0:
+            b += 1
+        else:
+            a += 1
+    # residual graph nodes: 0..nb-1 supplies, nb..nb+na-1 demands
+    n_nodes = nb + na
+
+    def edges():
+        out = []
+        for bb in range(nb):
+            for aa in range(na):
+                # forward: always available (capacity unbounded up to mass)
+                out.append((bb, nb + aa, c[bb][aa], (bb, aa, 1)))
+                if flow[bb][aa] > 0:
+                    out.append((nb + aa, bb, -c[bb][aa], (bb, aa, -1)))
+        return out
+
+    def find_negative_cycle():
+        es = edges()
+        dist = [Fraction(0)] * n_nodes
+        pred = [None] * n_nodes
+        x = None
+        for _ in range(n_nodes):
+            x = None
+            for (u, v, w, tag) in es:
+                if dist[u] + w < dist[v]:
+                    dist[v] = dist[u] + w
+                    pred[v] = (u, tag)
+                    x = v
+        if x is None:
+            return None
+        # walk back n steps to land inside the cycle
+        for _ in range(n_nodes):
+            x = pred[x][0]
+        cyc = []
+        v = x
+        while True:
+            u, tag = pred[v]
+            cyc.append(tag)
+            v = u
+            if v == x:
+                break
+        return cyc
+
+    while True:
+        cyc = find_negative_cycle()
+        if cyc is None:
+            break
+        # max augmentation = min residual over backward arcs in the cycle
+        k = min(flow[bb][aa] for (bb, aa, sgn) in cyc if sgn < 0)
+        assert k > 0
+        for (bb, aa, sgn) in cyc:
+            flow[bb][aa] += sgn * k
+
+    total = sum(flow[bb][aa] * c[bb][aa] for bb in range(nb) for aa in range(na))
+    # duality certificate: potentials from Bellman-Ford on the residual
+    # graph (no negative cycle => well-defined)
+    es = edges()
+    pot = [Fraction(0)] * n_nodes
+    for _ in range(n_nodes):
+        for (u, v, w, _) in es:
+            if pot[u] + w < pot[v]:
+                pot[v] = pot[u] + w
+    for bb in range(nb):
+        for aa in range(na):
+            red = c[bb][aa] + pot[bb] - pot[nb + aa]
+            assert red >= 0, "dual infeasible: optimizer bug"
+            if flow[bb][aa] > 0:
+                assert red == 0, "slackness violated: optimizer bug"
+    # marginals
+    for bb in range(nb):
+        assert sum(flow[bb]) == supply[bb]
+    for aa in range(na):
+        assert sum(flow[bb][aa] for bb in range(nb)) == demand[aa]
+    return total / SCALE  # units -> mass
+
+
+def frac_to_float(x):
+    f = float(x)
+    assert Fraction(f) == x, f"{x} not exact in f64"
+    return f
+
+
+def write_case(out_dir, name, kind, nb, na, salt, payload):
+    doc = {
+        "name": name,
+        "kind": kind,
+        "nb": nb,
+        "na": na,
+        "salt": salt,
+        "costs": [
+            frac_to_float(cost(b, a, salt)) for b in range(nb) for a in range(na)
+        ],
+        "note": "c(b,a) = ((7b + 11a + 3ab + salt) mod 17) / 16",
+    }
+    doc.update(payload)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote {path}: exact_cost={doc['exact_cost']}")
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = os.path.join(root, "rust", "testdata", "golden")
+    os.makedirs(out_dir, exist_ok=True)
+    for (name, n, salt) in ASSIGN_CASES:
+        exact = brute_force_assignment(n, salt)
+        write_case(out_dir, name, "assignment", n, n, salt,
+                   {"exact_cost": frac_to_float(exact)})
+    for (name, nb, na, salt, supply, demand) in OT_CASES:
+        exact = exact_ot_units(nb, na, salt, supply, demand)
+        write_case(out_dir, name, "ot", nb, na, salt, {
+            "exact_cost": frac_to_float(exact),
+            "supply": [frac_to_float(Fraction(u, SCALE)) for u in supply],
+            "demand": [frac_to_float(Fraction(u, SCALE)) for u in demand],
+        })
+
+
+if __name__ == "__main__":
+    main()

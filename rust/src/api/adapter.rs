@@ -65,6 +65,7 @@ fn cancelled_ot(ot: &OtInstance) -> Solution {
     Solution::from_ot(OtSolution {
         plan,
         cost,
+        duals: None,
         stats: SolveStats { notes: vec![CANCELLED_NOTE.to_string()], ..Default::default() },
     })
 }
@@ -351,6 +352,7 @@ mod tests {
         let ot = Problem::Ot(Workload::Fig1 { n: 10 }.ot_with_random_masses(3));
         let sol = s.solve(&ot, &SolveRequest::new(0.3)).unwrap();
         assert!((sol.plan().unwrap().total_mass() - 1.0).abs() < 1e-9);
+        assert!(sol.duals.is_some(), "the §4 OT solver exports its cluster duals");
     }
 
     #[test]

@@ -37,6 +37,10 @@ pub mod request;
 
 pub use adapter::{AssignmentAdapter, OtAdapter, Solver};
 pub use problem::{Coupling, Problem, ProblemKind, Solution};
+// The certification entry points live in `core::certify`; re-exported here
+// because `SolveRequest::certify` / `Solution::certificate` make them part
+// of the public solve surface.
+pub use crate::core::certify::{certify, Certificate};
 pub use registry::{
     canonical_key, BucketPolicy, EngineSpec, SolverConfig, SolverRegistry, ENGINE_SPECS,
 };

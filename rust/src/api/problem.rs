@@ -7,6 +7,7 @@
 //! `AssignmentSolution`/`OtSolution` pair at the public boundary — those
 //! remain as internal carrier types inside `solvers/`.
 
+use crate::core::certify::Certificate;
 use crate::core::{
     AssignmentInstance, CostMatrix, DualWeights, Matching, OtInstance, OtprError, Result,
     TransportPlan,
@@ -110,8 +111,13 @@ pub struct Solution {
     /// Total cost under the *original* (unrounded) cost matrix.
     pub cost: f64,
     /// Dual weights certifying approximate optimality, when the engine
-    /// maintains them (the push-relabel assignment family).
+    /// maintains them (the push-relabel family, assignment *and* OT).
     pub duals: Option<DualWeights>,
+    /// Verified [`Certificate`] attached by the registry when the request
+    /// asked for one ([`crate::api::SolveRequest::certify`]); `None`
+    /// otherwise. Run [`crate::core::certify::certify`] directly to check
+    /// an existing solution after the fact.
+    pub certificate: Option<Certificate>,
     pub stats: SolveStats,
 }
 
@@ -121,12 +127,19 @@ impl Solution {
             coupling: Coupling::Matching(sol.matching),
             cost: sol.cost,
             duals: sol.duals,
+            certificate: None,
             stats: sol.stats,
         }
     }
 
     pub fn from_ot(sol: OtSolution) -> Self {
-        Self { coupling: Coupling::Plan(sol.plan), cost: sol.cost, duals: None, stats: sol.stats }
+        Self {
+            coupling: Coupling::Plan(sol.plan),
+            cost: sol.cost,
+            duals: sol.duals,
+            certificate: None,
+            stats: sol.stats,
+        }
     }
 
     pub fn matching(&self) -> Option<&Matching> {

@@ -321,7 +321,11 @@ impl SolverRegistry {
                 problem.kind().name()
             )));
         }
-        (entry.builder)(config).solve(problem, req)
+        let mut sol = (entry.builder)(config).solve(problem, req)?;
+        if req.want_certificate {
+            sol.certificate = Some(crate::core::certify::certify(problem, &sol, req));
+        }
+        Ok(sol)
     }
 }
 
@@ -409,6 +413,30 @@ mod tests {
         let ot = Problem::Ot(Workload::Fig1 { n: 8 }.ot_with_random_masses(2));
         let sol = reg.solve("native-seq", &cfg, &ot, &SolveRequest::new(0.3)).unwrap();
         assert!((sol.plan().unwrap().total_mass() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn certified_requests_attach_certificates() {
+        let reg = SolverRegistry::with_defaults();
+        let cfg = SolverConfig::default();
+        let p = Problem::Assignment(Workload::RandomCosts { n: 10 }.assignment(4));
+        let sol = reg
+            .solve("native-seq", &cfg, &p, &SolveRequest::new(0.3).certify(true))
+            .unwrap();
+        let cert = sol.certificate.as_ref().expect("certificate attached");
+        assert!(cert.ok(), "{}", cert.summary());
+        assert_eq!(cert.dual_ok, Some(true));
+        let sol = reg.solve("native-seq", &cfg, &p, &SolveRequest::new(0.3)).unwrap();
+        assert!(sol.certificate.is_none(), "no certificate unless requested");
+
+        // OT plan path: duals now flow through and certify too.
+        let ot = Problem::Ot(Workload::Fig1 { n: 8 }.ot_with_random_masses(2));
+        let sol = reg
+            .solve("native-seq", &cfg, &ot, &SolveRequest::new(0.25).certify(true))
+            .unwrap();
+        let cert = sol.certificate.as_ref().unwrap();
+        assert_eq!(cert.dual_ok, Some(true), "{}", cert.summary());
+        assert!(cert.gap_ok());
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub struct SolveRequest {
     pub budget: Option<Duration>,
     pub cancel: CancelToken,
     pub observer: Option<ProgressFn>,
+    /// Attach a verified [`crate::core::certify::Certificate`] to the
+    /// solution after the solve (registry path). O(n²) post-pass.
+    pub want_certificate: bool,
 }
 
 impl Default for SolveRequest {
@@ -58,6 +61,7 @@ impl fmt::Debug for SolveRequest {
             .field("budget", &self.budget)
             .field("cancelled", &self.cancel.is_cancelled())
             .field("observer", &self.observer.is_some())
+            .field("want_certificate", &self.want_certificate)
             .finish()
     }
 }
@@ -70,12 +74,21 @@ impl SolveRequest {
             budget: None,
             cancel: CancelToken::new(),
             observer: None,
+            want_certificate: false,
         }
     }
 
     /// Interpret `eps` as the raw algorithm parameter (harness mode).
     pub fn raw_eps(mut self) -> Self {
         self.eps_semantics = EpsSemantics::AlgorithmParam;
+        self
+    }
+
+    /// Ask the registry to verify the solution post-solve and attach the
+    /// resulting [`crate::core::certify::Certificate`] to
+    /// `Solution::certificate`.
+    pub fn certify(mut self, on: bool) -> Self {
+        self.want_certificate = on;
         self
     }
 
@@ -157,6 +170,13 @@ mod tests {
             });
         req.control().report(3, 7.0);
         assert_eq!(count.load(Ordering::Relaxed), 11);
+    }
+
+    #[test]
+    fn certify_flag_defaults_off() {
+        assert!(!SolveRequest::new(0.1).want_certificate);
+        assert!(SolveRequest::new(0.1).certify(true).want_certificate);
+        assert!(!SolveRequest::new(0.1).certify(true).certify(false).want_certificate);
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! Coordinator metrics: lock-free counters plus a fixed-bucket latency
-//! histogram, with a text snapshot for `otpr serve --stats` and tests.
+//! Coordinator metrics: lock-free counters plus fixed-bucket latency and
+//! audit gap histograms, with a text snapshot for `otpr serve --stats` and
+//! tests.
 
+use crate::core::certify::{gap_ratio_bucket, Certificate, GAP_RATIO_BUCKETS};
+use crate::util::minijson::{obj, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -17,6 +20,14 @@ pub struct Metrics {
     /// Batches dispatched and total jobs in them (batching efficiency).
     pub batches: AtomicU64,
     pub batched_jobs: AtomicU64,
+    /// Audit-mode certification outcomes (see
+    /// [`crate::coordinator::CoordinatorConfig::audit_sample_every`]).
+    pub audited: AtomicU64,
+    pub audit_pass: AtomicU64,
+    pub audit_fail: AtomicU64,
+    /// gap/bound-ratio histogram over audited dual-certified solutions,
+    /// buckets of [`GAP_RATIO_BUCKETS`].
+    audit_gaps: [AtomicU64; GAP_RATIO_BUCKETS.len()],
     latency: [AtomicU64; 10],
     queue_secs_total: Mutex<f64>,
     solve_secs_total: Mutex<f64>,
@@ -87,6 +98,58 @@ impl Metrics {
         }
     }
 
+    /// Fold one audit-mode certificate into the pass/fail counters and
+    /// (when it carries a dual gap) the gap/bound-ratio histogram.
+    pub fn record_audit(&self, cert: &Certificate) {
+        self.audited.fetch_add(1, Ordering::Relaxed);
+        if cert.ok() {
+            self.audit_pass.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.audit_fail.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(gap) = cert.gap {
+            self.audit_gaps[gap_ratio_bucket(gap, cert.bound)].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// (audited, pass, fail) snapshot.
+    pub fn audit_counters(&self) -> (u64, u64, u64) {
+        (
+            self.audited.load(Ordering::Relaxed),
+            self.audit_pass.load(Ordering::Relaxed),
+            self.audit_fail.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Audit pass/fail + gap histogram as JSON (serve-layer export; same
+    /// shape as the conformance runner's artifact).
+    pub fn audit_json(&self) -> Json {
+        let (audited, pass, fail) = self.audit_counters();
+        obj(vec![
+            ("audited", Json::Num(audited as f64)),
+            ("pass", Json::Num(pass as f64)),
+            ("fail", Json::Num(fail as f64)),
+            (
+                "bucket_upper_bounds",
+                Json::Arr(
+                    GAP_RATIO_BUCKETS
+                        .iter()
+                        .map(|&b| if b.is_finite() { Json::Num(b) } else { Json::Null })
+                        .collect(),
+                ),
+            ),
+            (
+                "counts",
+                Json::Arr(
+                    self.audit_gaps
+                        .iter()
+                        .map(|c| Json::Num(c.load(Ordering::Relaxed) as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
     /// Per-engine counters snapshot (jobs + phase events).
     pub fn engine_counters(&self) -> Vec<EngineCounters> {
         self.per_engine.lock().unwrap().clone()
@@ -125,6 +188,22 @@ impl Metrics {
             }
         }
         out.push('\n');
+        let (audited, pass, fail) = self.audit_counters();
+        if audited > 0 {
+            out.push_str(&format!("audit: sampled={audited} pass={pass} fail={fail}\n"));
+            out.push_str("audit gap/bound histogram:");
+            for (i, ub) in GAP_RATIO_BUCKETS.iter().enumerate() {
+                let c = self.audit_gaps[i].load(Ordering::Relaxed);
+                if c > 0 {
+                    if ub.is_infinite() {
+                        out.push_str(&format!(" inf:{c}"));
+                    } else {
+                        out.push_str(&format!(" {ub}:{c}"));
+                    }
+                }
+            }
+            out.push('\n');
+        }
         for e in self.per_engine.lock().unwrap().iter() {
             out.push_str(&format!(
                 "engine {}: {} jobs, {} phase-events\n",
@@ -168,6 +247,49 @@ mod tests {
         let sk = counters.iter().find(|e| e.engine == "sinkhorn-native").unwrap();
         assert_eq!((sk.jobs, sk.phases), (0, 1));
         assert!(m.snapshot().contains("engine native-seq: 1 jobs, 2 phase-events"));
+    }
+
+    #[test]
+    fn audit_counters_and_histogram() {
+        let m = Metrics::new();
+        let mut cert = Certificate {
+            primal_ok: true,
+            dual_ok: Some(true),
+            gap: Some(0.05),
+            dual_lower_bound: Some(0.0),
+            bound: 1.0,
+            cost: 0.05,
+            detail: None,
+        };
+        m.record_audit(&cert); // ratio 0.05 → first bucket
+        cert.gap = Some(2.0); // ratio 2.0 → overflow bucket, gap_ok false
+        m.record_audit(&cert);
+        cert.gap = None;
+        cert.primal_ok = false;
+        m.record_audit(&cert); // fail without a gap: counters only
+        assert_eq!(m.audit_counters(), (3, 1, 2));
+        let snap = m.snapshot();
+        assert!(snap.contains("audit: sampled=3 pass=1 fail=2"), "{snap}");
+        assert!(snap.contains("0.1:1"), "{snap}");
+        assert!(snap.contains("inf:1"), "{snap}");
+        let j = Json::parse(&m.audit_json().to_string()).unwrap();
+        assert_eq!(j.get("audited").unwrap().as_usize(), Some(3));
+        let counts: f64 = j
+            .get("counts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_f64().unwrap())
+            .sum();
+        assert_eq!(counts as u64, 2, "only dual-certified audits land in the histogram");
+    }
+
+    #[test]
+    fn no_audit_lines_when_unused() {
+        let m = Metrics::new();
+        m.record_done("e", true, 0.0, 0.1);
+        assert!(!m.snapshot().contains("audit:"));
     }
 
     #[test]

@@ -34,6 +34,11 @@ pub struct CoordinatorConfig {
     pub batcher: BatcherConfig,
     /// Threads each native-parallel solve may use.
     pub solver_threads: usize,
+    /// Audit mode: certify every k-th successfully served job (by job id)
+    /// post-solve and fold pass/fail + gap histograms into the metrics
+    /// ([`Metrics::record_audit`]). `0` disables auditing; `1` certifies
+    /// every job. Cancelled solves are exempt (they carry no guarantee).
+    pub audit_sample_every: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -43,6 +48,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 64,
             batcher: BatcherConfig::default(),
             solver_threads: pool::default_threads(),
+            audit_sample_every: 0,
         }
     }
 }
@@ -108,7 +114,10 @@ impl Coordinator {
             let rx = batch_rx.clone();
             let router = router.clone();
             let metrics = metrics.clone();
-            workers.push(std::thread::spawn(move || worker_loop(rx, router, metrics)));
+            let audit_every = config.audit_sample_every;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(rx, router, metrics, audit_every)
+            }));
         }
 
         Self { tx, metrics, next_id: AtomicU64::new(1), dispatcher: Some(dispatcher), workers }
@@ -228,6 +237,7 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Vec<Envelope>>>>,
     router: Arc<Router>,
     metrics: Arc<Metrics>,
+    audit_every: u64,
 ) {
     loop {
         let batch = {
@@ -252,6 +262,20 @@ fn worker_loop(
             let solve = t.elapsed().as_secs_f64();
             metrics.record_phases(engine.name(), phase_count.load(Ordering::Relaxed));
             metrics.record_done(engine.name(), result.is_ok(), queued, solve);
+            // Audit sampling: independently re-verify every k-th served
+            // job and export pass/fail + gap histograms. A budget-stopped
+            // solve is exempt — it deliberately ships without a guarantee.
+            // The O(n²) certify pass runs *after* the reply is sent, so
+            // auditing never adds to client-observed latency (one solution
+            // clone buys that).
+            let audit_sol = if audit_every > 0 && req.id % audit_every == 0 {
+                match &result {
+                    Ok(sol) if !sol.is_cancelled() => Some(sol.clone()),
+                    _ => None,
+                }
+            } else {
+                None
+            };
             let _ = env.reply.send(JobOutcome {
                 id: req.id,
                 engine_used: engine.name(),
@@ -259,6 +283,12 @@ fn worker_loop(
                 queued_secs: queued,
                 solve_secs: solve,
             });
+            if let Some(sol) = audit_sol {
+                let cert = sol.certificate.clone().unwrap_or_else(|| {
+                    crate::core::certify::certify(&req.kind, &sol, &req.request)
+                });
+                metrics.record_audit(&cert);
+            }
         }
     }
 }
@@ -327,6 +357,57 @@ mod tests {
         let sol = out.result.unwrap();
         assert!(sol.cost.is_finite());
         assert!(sol.plan().is_some(), "OT jobs return a transport plan");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn audit_mode_certifies_sampled_jobs() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { audit_sample_every: 1, ..Default::default() },
+            None,
+        );
+        let handles: Vec<_> = (0..4)
+            .map(|i| coord.submit(assignment_job(12, i), 0.3, Engine::NativeSeq).unwrap())
+            .collect();
+        for h in handles {
+            assert!(h.wait().unwrap().result.is_ok());
+        }
+        // audits run after the reply is sent: join workers before reading
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        let (audited, pass, fail) = metrics.audit_counters();
+        assert_eq!(audited, 4, "sample_every=1 audits every job");
+        assert_eq!((pass, fail), (4, 0));
+        let snap = metrics.snapshot();
+        assert!(snap.contains("audit: sampled=4 pass=4 fail=0"), "{snap}");
+        assert!(snap.contains("audit gap/bound histogram:"), "{snap}");
+    }
+
+    #[test]
+    fn audit_sampling_respects_stride() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { audit_sample_every: 2, ..Default::default() },
+            None,
+        );
+        // job ids 1..=4 → ids 2 and 4 get audited
+        let handles: Vec<_> = (0..4)
+            .map(|i| coord.submit(assignment_job(10, i), 0.4, Engine::NativeSeq).unwrap())
+            .collect();
+        for h in handles {
+            assert!(h.wait().unwrap().result.is_ok());
+        }
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        assert_eq!(metrics.audit_counters().0, 2);
+    }
+
+    #[test]
+    fn audit_off_by_default() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), None);
+        let h = coord.submit(assignment_job(8, 1), 0.4, Engine::NativeSeq).unwrap();
+        assert!(h.wait().unwrap().result.is_ok());
+        assert_eq!(coord.metrics.audit_counters(), (0, 0, 0));
+        assert!(!coord.metrics.snapshot().contains("audit:"));
         coord.shutdown();
     }
 

@@ -1,0 +1,563 @@
+//! Solution certification: every [`crate::api::Solution`] — matching or
+//! transport plan — can be verified against its instance without trusting
+//! the solver that produced it.
+//!
+//! The paper's advantage over Sinkhorn is that push-relabel "readily
+//! provides … a solution to an approximate version of the dual
+//! formulation": the ε-unit duals the engines already maintain are a
+//! *checkable certificate* of the additive guarantee. This module turns
+//! that into a typed [`Certificate`] with three independent verdicts:
+//!
+//! * **primal** — the coupling is structurally valid (perfect + mirror
+//!   consistent for matchings; marginals within the §4 unit-rounding
+//!   tolerance for plans) and the reported cost matches the coupling;
+//! * **dual** — the exported duals are ε-feasible *post-completion*: the
+//!   relaxed condition `y(a)+y(b) ≤ cq(a,b)+1` on **every** edge plus the
+//!   sign invariants. (Condition (3) equality and the free-vertex rules of
+//!   [`crate::core::duals::check_feasible`] hold only mid-algorithm —
+//!   arbitrary completion legitimately breaks them, while the relaxed form
+//!   survives and is exactly what the lower bound needs.)
+//! * **gap** — `cost ≤ dual_lower_bound + ε·U`, the additive guarantee as
+//!   an inequality between two numbers the checker computed itself.
+//!
+//! The dual lower bounds are Lemma 3.1 and its transport generalization:
+//! any y with `y(a)+y(b) ≤ cq+1` everywhere gives, for assignment,
+//! `OPT ≥ (Σy − n)·ε_abs` (sum (2) over the optimal matching's n edges),
+//! and for OT the LP-feasible potentials `α_a = (y(a)−1)·ε_abs`,
+//! `β_b = y(b)·ε_abs` give `OPT ≥ Σ μ_a α_a + Σ ν_b β_b`.
+//!
+//! `U` is the total-cost scale of the answer shape: `n·c_max` for a
+//! matching (n edges), `c_max` for a plan (unit total mass).
+//!
+//! Consumers: `SolveRequest::certify(true)` (the registry attaches a
+//! certificate post-solve), the coordinator's audit sampling
+//! ([`crate::coordinator::metrics::Metrics::record_audit`]), the
+//! `exp/conformance.rs` golden-corpus runner, and `otpr certify`.
+//!
+//! Layering note: this core module deliberately takes `api::Solution` /
+//! `api::SolveRequest` at its entry point — the certificate's contract is
+//! "any answer the public surface can return is checkable", and the
+//! request is the only faithful source of the eps semantics the engines
+//! solved under. The per-shape checkers below it stay on pure core types.
+
+use crate::api::problem::{Coupling, Problem, Solution};
+use crate::api::request::SolveRequest;
+use crate::core::duals::{dual_lower_bound_units, DualWeights};
+use crate::core::instance::{AssignmentInstance, OtInstance};
+use crate::core::matching::Matching;
+use crate::core::quantize::QuantizedCosts;
+use crate::core::transport::TransportPlan;
+use crate::util::minijson::{obj, Json};
+
+/// Slack applied to the `gap ≤ bound` comparison (float accumulation).
+pub const GAP_TOL: f64 = 1e-9;
+
+/// Upper bounds of the gap/bound-ratio histogram buckets shared by the
+/// coordinator audit metrics and the conformance report. A healthy engine
+/// keeps its mass at small ratios; anything beyond the `1.0` bucket is a
+/// broken guarantee.
+pub const GAP_RATIO_BUCKETS: [f64; 6] = [0.1, 0.25, 0.5, 0.75, 1.0, f64::INFINITY];
+
+/// Bucket index for a certified gap against its bound. A zero bound (e.g.
+/// all-zero costs, or an exact engine) maps a zero gap to the first bucket
+/// and anything positive to the overflow bucket.
+pub fn gap_ratio_bucket(gap: f64, bound: f64) -> usize {
+    let ratio = if bound > 0.0 {
+        gap / bound
+    } else if gap <= GAP_TOL {
+        0.0
+    } else {
+        f64::INFINITY
+    };
+    GAP_RATIO_BUCKETS
+        .iter()
+        .position(|&ub| ratio <= ub)
+        .unwrap_or(GAP_RATIO_BUCKETS.len() - 1)
+}
+
+/// Outcome of certifying one solution against its instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Certificate {
+    /// Coupling is feasible and the reported cost matches it.
+    pub primal_ok: bool,
+    /// Exported duals are ε-feasible; `None` when the engine ships none
+    /// (Sinkhorn, exact oracles, greedy, device-resident runs).
+    pub dual_ok: Option<bool>,
+    /// `cost − dual_lower_bound` in original cost units; `None` without a
+    /// usable dual certificate.
+    pub gap: Option<f64>,
+    /// The certified lower bound on the true optimum.
+    pub dual_lower_bound: Option<f64>,
+    /// Additive budget `ε·U` the gap must stay within.
+    pub bound: f64,
+    /// The solution's reported cost (denormalized for convenience).
+    pub cost: f64,
+    /// First violation found, human-readable (units *and* dequantized).
+    pub detail: Option<String>,
+}
+
+impl Certificate {
+    fn failed(cost: f64, detail: String) -> Self {
+        Self {
+            primal_ok: false,
+            dual_ok: None,
+            gap: None,
+            dual_lower_bound: None,
+            bound: 0.0,
+            cost,
+            detail: Some(detail),
+        }
+    }
+
+    /// `gap ≤ bound` (vacuously true without a dual certificate).
+    pub fn gap_ok(&self) -> bool {
+        match self.gap {
+            Some(g) => g <= self.bound + GAP_TOL,
+            None => true,
+        }
+    }
+
+    /// Everything that *could* be checked passed.
+    pub fn ok(&self) -> bool {
+        self.primal_ok && self.dual_ok != Some(false) && self.gap_ok()
+    }
+
+    /// One-line report for CLI/log output.
+    pub fn summary(&self) -> String {
+        let dual = match self.dual_ok {
+            Some(true) => "ok",
+            Some(false) => "FAIL",
+            None => "n/a",
+        };
+        let gap = match self.gap {
+            Some(g) => format!("{g:.6}"),
+            None => "n/a".to_string(),
+        };
+        let mut s = format!(
+            "primal={} dual={dual} gap={gap} bound={:.6} [{}]",
+            if self.primal_ok { "ok" } else { "FAIL" },
+            self.bound,
+            if self.ok() { "OK" } else { "FAIL" }
+        );
+        if let Some(d) = &self.detail {
+            s.push_str(&format!(" — {d}"));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        obj(vec![
+            ("primal_ok", Json::Bool(self.primal_ok)),
+            (
+                "dual_ok",
+                self.dual_ok.map(Json::Bool).unwrap_or(Json::Null),
+            ),
+            ("gap", opt(self.gap)),
+            ("dual_lower_bound", opt(self.dual_lower_bound)),
+            ("bound", Json::Num(self.bound)),
+            ("cost", Json::Num(self.cost)),
+            ("ok", Json::Bool(self.ok())),
+        ])
+    }
+}
+
+/// Certify `sol` as an answer to `problem` under the request it was solved
+/// with. The request supplies the accuracy target (and its semantics), from
+/// which the checker rebuilds the exact quantization the engines used —
+/// certifying with a different `eps` than the solve ran at reports
+/// `dual_ok = Some(false)` rather than a false pass, because the integer
+/// feasibility identities only hold in the solver's own units.
+pub fn certify(problem: &Problem, sol: &Solution, req: &SolveRequest) -> Certificate {
+    match (&sol.coupling, problem) {
+        (Coupling::Matching(m), Problem::Assignment(inst)) => {
+            certify_matching(inst, m, sol.duals.as_ref(), sol.cost, req)
+        }
+        (Coupling::Matching(_), Problem::Ot(_)) => Certificate::failed(
+            sol.cost,
+            "matching coupling cannot answer an OT problem".to_string(),
+        ),
+        // Plans answer both kinds: an assignment problem answered by an OT
+        // engine is certified against its uniform-mass relaxation (whose
+        // optimum equals the assignment optimum / n, by Birkhoff).
+        (Coupling::Plan(p), _) => match problem.to_ot_instance() {
+            Ok(ot) => certify_plan(&ot, p, sol.duals.as_ref(), sol.cost, req.eps),
+            Err(e) => Certificate::failed(sol.cost, e.to_string()),
+        },
+    }
+}
+
+fn certify_matching(
+    inst: &AssignmentInstance,
+    m: &Matching,
+    duals: Option<&DualWeights>,
+    cost: f64,
+    req: &SolveRequest,
+) -> Certificate {
+    let n = inst.n();
+    let c_max = inst.costs.max() as f64;
+    // The assignment engines run the core at `eps_param` and guarantee
+    // 3·ε_param·n·c_max (rounding + feasibility + completion) — which is
+    // eps·n·c_max for Overall-semantics requests.
+    let eps_param = req.eps_param(3.0);
+    let bound = 3.0 * eps_param * n as f64 * c_max;
+    let mut detail: Option<String> = None;
+
+    let primal_ok = match check_matching_primal(inst, m, cost) {
+        Ok(()) => true,
+        Err(e) => {
+            detail = Some(e);
+            false
+        }
+    };
+
+    let (dual_ok, gap, lb) = match duals {
+        None => (None, None, None),
+        Some(y) => {
+            if !(eps_param > 0.0 && eps_param < 1.0) {
+                if detail.is_none() {
+                    detail = Some(format!(
+                        "eps parameter {eps_param} outside (0,1): cannot rebuild the quantization"
+                    ));
+                }
+                (Some(false), None, None)
+            } else {
+                let q = QuantizedCosts::new(&inst.costs, eps_param);
+                match check_matching_duals(&q, y) {
+                    Err(e) => {
+                        if detail.is_none() {
+                            detail = Some(e);
+                        }
+                        (Some(false), None, None)
+                    }
+                    Ok(()) => {
+                        let lb = dual_lower_bound_units(y) as f64 * q.eps_abs;
+                        (Some(true), Some(cost - lb), Some(lb))
+                    }
+                }
+            }
+        }
+    };
+
+    Certificate { primal_ok, dual_ok, gap, dual_lower_bound: lb, bound, cost, detail }
+}
+
+fn check_matching_primal(
+    inst: &AssignmentInstance,
+    m: &Matching,
+    cost: f64,
+) -> Result<(), String> {
+    if m.nb() != inst.costs.nb || m.na() != inst.costs.na {
+        return Err(format!(
+            "matching dimensions {}x{} do not fit the {}x{} instance",
+            m.nb(),
+            m.na(),
+            inst.costs.nb,
+            inst.costs.na
+        ));
+    }
+    m.check_consistent()?;
+    if !m.is_perfect() {
+        return Err(format!("matching not perfect: {} free supply vertices", m.free_b().len()));
+    }
+    let recomputed = m.cost(&inst.costs);
+    if (recomputed - cost).abs() > 1e-6 * cost.abs().max(1.0) {
+        return Err(format!("reported cost {cost} != recomputed matching cost {recomputed}"));
+    }
+    Ok(())
+}
+
+/// Relaxed ε-feasibility a *finished* assignment solution must satisfy:
+/// signs, `y(a)+y(b) ≤ cq+1` on every edge (matched edges pass through
+/// condition (3) equality; arbitrary completion edges pass because (2)
+/// held for them while unmatched and duals froze at termination), and the
+/// Lemma 3.2 magnitude bound.
+fn check_matching_duals(q: &QuantizedCosts, y: &DualWeights) -> Result<(), String> {
+    if y.yb.len() != q.nb || y.ya.len() != q.na {
+        return Err(format!(
+            "dual dimensions ({}, {}) do not fit the {}x{} quantization",
+            y.yb.len(),
+            y.ya.len(),
+            q.nb,
+            q.na
+        ));
+    }
+    check_signs(y)?;
+    check_relaxed_feasibility(q, y)?;
+    let bound = (1.0 / q.eps).ceil() as i32 + 2;
+    for &v in y.ya.iter().chain(y.yb.iter()) {
+        if v.abs() > bound {
+            return Err(format!(
+                "Lemma 3.2 violated: |y| = {} units > {bound} units ({:.6} > {:.6} dequantized)",
+                v.abs(),
+                v.abs() as f64 * q.eps_abs,
+                bound as f64 * q.eps_abs
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn certify_plan(
+    ot: &OtInstance,
+    plan: &TransportPlan,
+    duals: Option<&DualWeights>,
+    cost: f64,
+    eps: f64,
+) -> Certificate {
+    let c_max = ot.costs.max() as f64;
+    // Unit total mass ⇒ the additive target is ε·c_max (Theorem 4.2 /
+    // AWR'17 parameterization alike).
+    let bound = eps * c_max;
+    let n = ot.n() as f64;
+    let mut detail: Option<String> = None;
+
+    // §4 mass scaling rounds at θ = 4n/ε, so demand marginals may
+    // legitimately overshoot by up to 2/θ = ε/(2n) per vertex; 1e-6 floors
+    // the tolerance for exact and Sinkhorn-rounded plans at eps → 0.
+    let tol = if eps > 0.0 { (eps / (2.0 * n)).max(1e-6) } else { 1e-6 };
+    let primal_ok = match check_plan_primal(ot, plan, cost, tol) {
+        Ok(()) => true,
+        Err(e) => {
+            detail = Some(e);
+            false
+        }
+    };
+
+    // The OT engines quantize costs at the §4 split ε_match = ε/6.
+    let eps_match = eps / 6.0;
+    let (dual_ok, gap, lb) = match duals {
+        None => (None, None, None),
+        Some(y) => {
+            if !(eps_match > 0.0 && eps_match < 1.0) {
+                if detail.is_none() {
+                    detail = Some(format!(
+                        "eps parameter {eps_match} outside (0,1): cannot rebuild the quantization"
+                    ));
+                }
+                (Some(false), None, None)
+            } else {
+                let q = QuantizedCosts::new(&ot.costs, eps_match);
+                match check_plan_duals(&q, y) {
+                    Err(e) => {
+                        if detail.is_none() {
+                            detail = Some(e);
+                        }
+                        (Some(false), None, None)
+                    }
+                    Ok(()) => {
+                        let lb = ot_dual_lower_bound(&q, y, &ot.demand, &ot.supply);
+                        (Some(true), Some(cost - lb), Some(lb))
+                    }
+                }
+            }
+        }
+    };
+
+    Certificate { primal_ok, dual_ok, gap, dual_lower_bound: lb, bound, cost, detail }
+}
+
+fn check_plan_primal(
+    ot: &OtInstance,
+    plan: &TransportPlan,
+    cost: f64,
+    tol: f64,
+) -> Result<(), String> {
+    if plan.nb != ot.costs.nb || plan.na != ot.costs.na {
+        return Err(format!(
+            "plan dimensions {}x{} do not fit the {}x{} instance",
+            plan.nb, plan.na, ot.costs.nb, ot.costs.na
+        ));
+    }
+    plan.check(&ot.supply, &ot.demand, tol)?;
+    let recomputed = plan.cost(&ot.costs);
+    if (recomputed - cost).abs() > 1e-6 * cost.abs().max(1.0) {
+        return Err(format!("reported cost {cost} != recomputed plan cost {recomputed}"));
+    }
+    Ok(())
+}
+
+/// Generalized dual feasibility for OT solutions: the per-vertex duals
+/// exported by the §4 solver (max copy dual per vertex — well-defined by
+/// the free-copies-at-max invariant and Lemma 4.1) must satisfy the signs
+/// and the relaxed condition on every edge of the *unbalanced* instance.
+fn check_plan_duals(q: &QuantizedCosts, y: &DualWeights) -> Result<(), String> {
+    if y.yb.len() != q.nb || y.ya.len() != q.na {
+        return Err(format!(
+            "dual dimensions ({}, {}) do not fit the {}x{} quantization",
+            y.yb.len(),
+            y.ya.len(),
+            q.nb,
+            q.na
+        ));
+    }
+    check_signs(y)?;
+    check_relaxed_feasibility(q, y)
+}
+
+fn check_signs(y: &DualWeights) -> Result<(), String> {
+    for (b, &yb) in y.yb.iter().enumerate() {
+        if yb < 0 {
+            return Err(format!("sign invariant violated: y(b={b}) = {yb} units < 0"));
+        }
+    }
+    for (a, &ya) in y.ya.iter().enumerate() {
+        if ya > 0 {
+            return Err(format!("sign invariant violated: y(a={a}) = {ya} units > 0"));
+        }
+    }
+    Ok(())
+}
+
+/// `y(a)+y(b) ≤ cq(a,b)+1` on every edge — the one condition both coupling
+/// shapes need for their lower bound, reported with units *and*
+/// dequantized values so failing seeds are debuggable.
+fn check_relaxed_feasibility(q: &QuantizedCosts, y: &DualWeights) -> Result<(), String> {
+    for b in 0..q.nb {
+        let yb = y.yb[b];
+        let row = q.row(b);
+        for (a, &cq) in row.iter().enumerate() {
+            let sum = y.ya[a] + yb;
+            if sum > cq + 1 {
+                return Err(format!(
+                    "relaxed feasibility violated on edge (b={b},a={a}): \
+                     y(a)+y(b) = {sum} units > cq+1 = {} units \
+                     (dequantized: {:.6} > {:.6}, eps_abs = {:.3e})",
+                    cq + 1,
+                    sum as f64 * q.eps_abs,
+                    (cq + 1) as f64 * q.eps_abs,
+                    q.eps_abs
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Transport dual objective of the LP-feasible potentials induced by an
+/// edge-feasible y: `α_a = (y(a)−1)·ε_abs`, `β_b = y(b)·ε_abs` satisfy
+/// `α_a + β_b ≤ (cq+1−1)·ε_abs = c̄ ≤ c`, so weak duality gives
+/// `OPT ≥ Σ μ_a α_a + Σ ν_b β_b = ε_abs·(Σ μ_a y(a) + Σ ν_b y(b) − 1)`.
+fn ot_dual_lower_bound(
+    q: &QuantizedCosts,
+    y: &DualWeights,
+    demand: &[f64],
+    supply: &[f64],
+) -> f64 {
+    let da: f64 = demand.iter().zip(&y.ya).map(|(&mu, &ya)| mu * ya as f64).sum();
+    let sb: f64 = supply.iter().zip(&y.yb).map(|(&nu, &yb)| nu * yb as f64).sum();
+    q.eps_abs * (da + sb - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::adapter::{NativeSeqSolver, SinkhornSolver, Solver};
+    use crate::api::problem::Problem;
+    use crate::api::request::SolveRequest;
+    use crate::data::workloads::Workload;
+
+    fn assignment(n: usize, seed: u64) -> Problem {
+        Problem::Assignment(Workload::RandomCosts { n }.assignment(seed))
+    }
+
+    #[test]
+    fn push_relabel_assignment_certifies() {
+        let p = assignment(16, 1);
+        let req = SolveRequest::new(0.3);
+        let sol = NativeSeqSolver { paranoid: true }.solve(&p, &req).unwrap();
+        let cert = certify(&p, &sol, &req);
+        assert!(cert.primal_ok, "{:?}", cert.detail);
+        assert_eq!(cert.dual_ok, Some(true), "{:?}", cert.detail);
+        assert!(cert.gap_ok(), "gap {:?} > bound {}", cert.gap, cert.bound);
+        assert!(cert.ok());
+        assert!(cert.dual_lower_bound.unwrap() <= cert.cost + GAP_TOL);
+    }
+
+    #[test]
+    fn ot_push_relabel_certifies_with_duals() {
+        let p = Problem::Ot(Workload::Fig1 { n: 12 }.ot_with_random_masses(3));
+        let req = SolveRequest::new(0.25);
+        let sol = NativeSeqSolver { paranoid: true }.solve(&p, &req).unwrap();
+        let cert = certify(&p, &sol, &req);
+        assert!(cert.primal_ok, "{:?}", cert.detail);
+        assert_eq!(cert.dual_ok, Some(true), "{:?}", cert.detail);
+        assert!(cert.gap_ok(), "gap {:?} > bound {}", cert.gap, cert.bound);
+    }
+
+    #[test]
+    fn sinkhorn_reports_no_dual_verdict() {
+        let p = Problem::Ot(Workload::Fig1 { n: 10 }.ot_with_random_masses(5));
+        let req = SolveRequest::new(0.25);
+        let sol = SinkhornSolver { log_domain: true, max_iters: 100_000 }
+            .solve(&p, &req)
+            .unwrap();
+        let cert = certify(&p, &sol, &req);
+        assert!(cert.primal_ok, "{:?}", cert.detail);
+        assert_eq!(cert.dual_ok, None);
+        assert_eq!(cert.gap, None);
+        assert!(cert.gap_ok() && cert.ok());
+    }
+
+    #[test]
+    fn corrupted_matching_fails_primal() {
+        let p = assignment(10, 2);
+        let req = SolveRequest::new(0.3);
+        let mut sol = NativeSeqSolver { paranoid: false }.solve(&p, &req).unwrap();
+        if let crate::api::problem::Coupling::Matching(m) = &mut sol.coupling {
+            m.unlink_b(0);
+        }
+        let cert = certify(&p, &sol, &req);
+        assert!(!cert.primal_ok);
+        assert!(!cert.ok());
+        assert!(cert.detail.unwrap().contains("not perfect"));
+    }
+
+    #[test]
+    fn corrupted_duals_fail_with_both_units_and_dequantized() {
+        let p = assignment(10, 3);
+        let req = SolveRequest::new(0.3);
+        let mut sol = NativeSeqSolver { paranoid: false }.solve(&p, &req).unwrap();
+        sol.duals.as_mut().unwrap().yb[0] = 1_000;
+        let cert = certify(&p, &sol, &req);
+        assert_eq!(cert.dual_ok, Some(false));
+        assert!(!cert.ok());
+        let msg = cert.detail.unwrap();
+        assert!(msg.contains("units"), "{msg}");
+        assert!(msg.contains("dequantized"), "{msg}");
+    }
+
+    #[test]
+    fn wrong_cost_fails_primal() {
+        let p = assignment(8, 4);
+        let req = SolveRequest::new(0.3);
+        let mut sol = NativeSeqSolver { paranoid: false }.solve(&p, &req).unwrap();
+        sol.cost += 1.0;
+        let cert = certify(&p, &sol, &req);
+        assert!(!cert.primal_ok);
+        assert!(cert.detail.unwrap().contains("recomputed"));
+    }
+
+    #[test]
+    fn gap_ratio_buckets_cover_edge_cases() {
+        assert_eq!(gap_ratio_bucket(0.0, 1.0), 0);
+        assert_eq!(gap_ratio_bucket(0.5, 1.0), 2);
+        assert_eq!(gap_ratio_bucket(1.0, 1.0), 4);
+        assert_eq!(gap_ratio_bucket(2.0, 1.0), 5);
+        assert_eq!(gap_ratio_bucket(0.0, 0.0), 0);
+        assert_eq!(gap_ratio_bucket(0.5, 0.0), 5);
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let p = assignment(6, 6);
+        let req = SolveRequest::new(0.4);
+        let sol = NativeSeqSolver { paranoid: false }.solve(&p, &req).unwrap();
+        let cert = certify(&p, &sol, &req);
+        let j = cert.to_json();
+        assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));
+        assert!(j.get("gap").unwrap().as_f64().is_some());
+        assert!(Json::parse(&j.to_string()).is_ok());
+        assert!(cert.summary().contains("primal=ok"));
+    }
+}

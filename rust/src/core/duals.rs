@@ -69,16 +69,29 @@ pub fn check_feasible(
             let s = cq as i64 + 1 - (y.ya[a] + yb) as i64; // slack against (2)
             if matched_a == a as i32 {
                 if (y.ya[a] + yb) != cq {
+                    // Report units *and* dequantized values: a failing
+                    // property seed is debuggable without re-deriving the
+                    // quantization by hand.
                     return Err(format!(
-                        "(3) violated on matching edge (b={b},a={a}): y(a)+y(b)={} cq={cq}",
-                        y.ya[a] + yb
+                        "(3) violated on matching edge (b={b},a={a}): \
+                         y(a)+y(b)={} units, cq={cq} units \
+                         (dequantized: {:.6} vs c̄={:.6}, eps_abs={:.3e})",
+                        y.ya[a] + yb,
+                        (y.ya[a] + yb) as f64 * q.eps_abs,
+                        cq as f64 * q.eps_abs,
+                        q.eps_abs
                     ));
                 }
             } else if s < 0 {
                 return Err(format!(
-                    "(2) violated on edge (b={b},a={a}): y(a)+y(b)={} > cq+1={}",
+                    "(2) violated on edge (b={b},a={a}): \
+                     y(a)+y(b)={} units > cq+1={} units \
+                     (dequantized: {:.6} > {:.6}, eps_abs={:.3e})",
                     y.ya[a] + yb,
-                    cq + 1
+                    cq + 1,
+                    (y.ya[a] + yb) as f64 * q.eps_abs,
+                    (cq + 1) as f64 * q.eps_abs,
+                    q.eps_abs
                 ));
             }
         }
@@ -87,7 +100,13 @@ pub fn check_feasible(
     let bound = (1.0 / q.eps).ceil() as i32 + 2;
     for &v in y.ya.iter().chain(y.yb.iter()) {
         if v.abs() > bound {
-            return Err(format!("Lemma 3.2 violated: |y|={} > {bound}", v.abs()));
+            return Err(format!(
+                "Lemma 3.2 violated: |y|={} units > {bound} units \
+                 (dequantized: {:.6} > {:.6})",
+                v.abs(),
+                v.abs() as f64 * q.eps_abs,
+                bound as f64 * q.eps_abs
+            ));
         }
     }
     Ok(())
@@ -162,6 +181,25 @@ mod tests {
         let (q, m, mut y) = small();
         y.ya[0] = -1; // a=0 free but y != 0
         assert!(check_feasible(&q, &m, &y).unwrap_err().contains("free a"));
+    }
+
+    #[test]
+    fn error_strings_carry_units_and_dequantized_values() {
+        // Regression: failing property seeds must show both the ε-unit
+        // identity that broke and the original-cost-scale values.
+        let (q, m, mut y) = small(); // eps_abs = 0.5
+        y.yb[0] = 5; // (2) violation on edge (0,0): 0+5 > cq+1 = 1
+        let msg = check_feasible(&q, &m, &y).unwrap_err();
+        assert!(msg.contains("5 units"), "{msg}");
+        assert!(msg.contains("dequantized"), "{msg}");
+        assert!(msg.contains("2.500000"), "dequantized y-sum 5·0.5 missing: {msg}");
+        assert!(msg.contains("0.500000"), "dequantized cq+1 = 1·0.5 missing: {msg}");
+
+        let (q, mut m, y) = small();
+        m.link(0, 0); // (3) violation: y sum 1 vs cq 0
+        let msg = check_feasible(&q, &m, &y).unwrap_err();
+        assert!(msg.contains("1 units, cq=0 units"), "{msg}");
+        assert!(msg.contains("c̄=0.000000"), "{msg}");
     }
 
     #[test]

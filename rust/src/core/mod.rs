@@ -2,6 +2,7 @@
 //! transport plans, problem instances, and the invariant checkers that the
 //! test-suite and `otpr validate` use to certify solver output.
 
+pub mod certify;
 pub mod control;
 pub mod cost;
 pub mod duals;
@@ -11,6 +12,7 @@ pub mod matching;
 pub mod quantize;
 pub mod transport;
 
+pub use certify::{certify, Certificate};
 pub use control::{CancelToken, Progress, ProgressFn, SolveControl, CANCELLED_NOTE};
 pub use cost::CostMatrix;
 pub use duals::DualWeights;

@@ -1,9 +1,14 @@
 //! Named workload descriptors shared by benches, examples, and the CLI so
-//! every harness builds byte-identical instances for a given (name, seed).
+//! every harness builds byte-identical instances for a given (name, seed) —
+//! plus the **golden conformance corpus**: tiny fixed instances with exact
+//! optima pinned in committed JSON fixtures, swept by every engine in
+//! `exp/conformance.rs` and `otpr certify`.
 
-use crate::core::{AssignmentInstance, CostMatrix, OtInstance};
+use crate::core::{AssignmentInstance, CostMatrix, OtInstance, OtprError, Result};
 use crate::data::{images, mnist, synthetic};
+use crate::util::minijson::Json;
 use crate::util::rng::Pcg32;
+use std::path::{Path, PathBuf};
 
 /// A workload that yields an assignment instance.
 #[derive(Debug, Clone, PartialEq)]
@@ -74,6 +79,205 @@ impl Workload {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Golden conformance corpus
+// ---------------------------------------------------------------------------
+
+/// Cost formula behind the committed fixtures in `rust/testdata/golden/`
+/// (kept in lockstep with `python/tools/gen_golden.py`): every value is a
+/// multiple of 1/16, so costs are exact in f32/f64 and the pinned exact
+/// optima survive JSON round-trips bit-for-bit.
+pub fn golden_cost(b: usize, a: usize, salt: u64) -> f32 {
+    (((7 * b as u64 + 11 * a as u64 + 3 * (b as u64) * (a as u64) + salt) % 17) as f32) / 16.0
+}
+
+/// Static generator spec of one golden case. Instance construction only —
+/// the exact optimum is pinned in the JSON fixture, computed offline in
+/// exact rational arithmetic with a duality-certificate optimality proof.
+#[derive(Debug, Clone, Copy)]
+pub struct GoldenSpec {
+    pub name: &'static str,
+    pub nb: usize,
+    pub na: usize,
+    pub salt: u64,
+    /// (supply, demand) numerators over 16; `None` = assignment case.
+    pub masses16: Option<(&'static [u64], &'static [u64])>,
+}
+
+/// The corpus generator, in fixture (alphabetical) order.
+pub const GOLDEN_SPECS: &[GoldenSpec] = &[
+    GoldenSpec { name: "assign-n4", nb: 4, na: 4, salt: 1, masses16: None },
+    GoldenSpec { name: "assign-n5", nb: 5, na: 5, salt: 2, masses16: None },
+    GoldenSpec { name: "assign-n6", nb: 6, na: 6, salt: 3, masses16: None },
+    GoldenSpec { name: "assign-n8", nb: 8, na: 8, salt: 5, masses16: None },
+    GoldenSpec {
+        name: "ot-3x4",
+        nb: 3,
+        na: 4,
+        salt: 7,
+        masses16: Some((&[8, 5, 3], &[4, 4, 4, 4])),
+    },
+    GoldenSpec {
+        name: "ot-4x4",
+        nb: 4,
+        na: 4,
+        salt: 13,
+        masses16: Some((&[4, 4, 4, 4], &[1, 2, 6, 7])),
+    },
+    GoldenSpec {
+        name: "ot-5x5",
+        nb: 5,
+        na: 5,
+        salt: 11,
+        masses16: Some((&[6, 4, 3, 2, 1], &[2, 2, 4, 4, 4])),
+    },
+    GoldenSpec {
+        name: "ot-6x6",
+        nb: 6,
+        na: 6,
+        salt: 17,
+        masses16: Some((&[2, 2, 2, 2, 4, 4], &[3, 3, 3, 3, 2, 2])),
+    },
+];
+
+impl GoldenSpec {
+    pub fn costs(&self) -> CostMatrix {
+        let salt = self.salt;
+        CostMatrix::from_fn(self.nb, self.na, |b, a| golden_cost(b, a, salt))
+    }
+
+    /// (supply over rows, demand over cols) as probability masses.
+    pub fn masses(&self) -> Option<(Vec<f64>, Vec<f64>)> {
+        self.masses16.map(|(s, d)| {
+            (
+                s.iter().map(|&u| u as f64 / 16.0).collect(),
+                d.iter().map(|&u| u as f64 / 16.0).collect(),
+            )
+        })
+    }
+}
+
+/// One loaded golden case: instance + pinned exact optimum.
+#[derive(Debug, Clone)]
+pub struct GoldenCase {
+    pub name: String,
+    pub costs: CostMatrix,
+    /// (supply over rows, demand over cols); `None` = assignment case.
+    pub masses: Option<(Vec<f64>, Vec<f64>)>,
+    /// Exact optimum: Hungarian matching cost for assignment cases, exact
+    /// OT cost for transport cases.
+    pub exact_cost: f64,
+}
+
+impl GoldenCase {
+    pub fn is_ot(&self) -> bool {
+        self.masses.is_some()
+    }
+
+    pub fn n(&self) -> usize {
+        self.costs.na.max(self.costs.nb)
+    }
+
+    pub fn assignment(&self) -> Option<AssignmentInstance> {
+        if self.is_ot() {
+            None
+        } else {
+            AssignmentInstance::new(self.costs.clone()).ok()
+        }
+    }
+
+    pub fn ot(&self) -> Option<OtInstance> {
+        let (supply, demand) = self.masses.clone()?;
+        OtInstance::new(self.costs.clone(), demand, supply).ok()
+    }
+}
+
+/// `rust/testdata/golden`, resolved against the build-time crate root
+/// first (always right under `cargo test`/`cargo run`), then against the
+/// working directory, so a relocated release binary still finds the
+/// fixtures when run from a checkout.
+pub fn golden_dir() -> PathBuf {
+    let baked = Path::new(env!("CARGO_MANIFEST_DIR")).join("testdata").join("golden");
+    if baked.is_dir() {
+        return baked;
+    }
+    for rel in ["rust/testdata/golden", "testdata/golden"] {
+        let p = PathBuf::from(rel);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    baked
+}
+
+/// Load the committed corpus (alphabetical by file name, matching
+/// [`GOLDEN_SPECS`] order).
+pub fn golden_corpus() -> Result<Vec<GoldenCase>> {
+    load_golden(&golden_dir())
+}
+
+pub fn load_golden(dir: &Path) -> Result<Vec<GoldenCase>> {
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    let mut cases = Vec::new();
+    for path in paths {
+        let text = std::fs::read_to_string(&path)?;
+        let case = Json::parse(&text)
+            .and_then(|doc| parse_golden(&doc))
+            .map_err(|e| OtprError::InvalidInstance(format!("{}: {e}", path.display())))?;
+        cases.push(case);
+    }
+    if cases.is_empty() {
+        return Err(OtprError::InvalidInstance(format!(
+            "no golden fixtures found in {} (run python/tools/gen_golden.py)",
+            dir.display()
+        )));
+    }
+    Ok(cases)
+}
+
+fn parse_golden(doc: &Json) -> std::result::Result<GoldenCase, String> {
+    let name = doc.get("name").and_then(Json::as_str).ok_or("missing name")?.to_string();
+    let kind = doc.get("kind").and_then(Json::as_str).ok_or("missing kind")?;
+    let nb = doc.get("nb").and_then(Json::as_usize).ok_or("missing nb")?;
+    let na = doc.get("na").and_then(Json::as_usize).ok_or("missing na")?;
+    let exact_cost =
+        doc.get("exact_cost").and_then(Json::as_f64).ok_or("missing exact_cost")?;
+    let costs = golden_f64_vec(doc, "costs", nb * na)?
+        .into_iter()
+        .map(|x| x as f32)
+        .collect();
+    let costs = CostMatrix::from_vec(nb, na, costs).map_err(|e| e.to_string())?;
+    let masses = match kind {
+        "assignment" => {
+            if nb != na {
+                return Err(format!("assignment case must be square, got {nb}x{na}"));
+            }
+            None
+        }
+        "ot" => Some((golden_f64_vec(doc, "supply", nb)?, golden_f64_vec(doc, "demand", na)?)),
+        other => return Err(format!("unknown kind {other:?}")),
+    };
+    Ok(GoldenCase { name, costs, masses, exact_cost })
+}
+
+fn golden_f64_vec(
+    doc: &Json,
+    key: &str,
+    len: usize,
+) -> std::result::Result<Vec<f64>, String> {
+    let arr = doc.get(key).and_then(Json::as_arr).ok_or_else(|| format!("missing {key}"))?;
+    if arr.len() != len {
+        return Err(format!("{key} has {} entries, expected {len}", arr.len()));
+    }
+    arr.iter()
+        .map(|v| v.as_f64().ok_or_else(|| format!("non-numeric entry in {key}")))
+        .collect()
+}
+
 /// Random point on the probability simplex via normalized Exp(1) draws.
 pub fn random_simplex(n: usize, rng: &mut Pcg32) -> Vec<f64> {
     let mut v: Vec<f64> = (0..n).map(|_| -(1.0 - rng.next_f64()).ln()).collect();
@@ -126,5 +330,40 @@ mod tests {
         let w = Workload::Clustered { n: 20, k: 3, sigma: 0.05 };
         let c = w.costs(9);
         assert_eq!(c.na, 20);
+    }
+
+    #[test]
+    fn golden_specs_are_well_formed() {
+        for spec in GOLDEN_SPECS {
+            let costs = spec.costs();
+            assert_eq!((costs.nb, costs.na), (spec.nb, spec.na), "{}", spec.name);
+            assert!(costs.max() <= 1.0, "{}: costs above 1", spec.name);
+            if let Some((supply, demand)) = spec.masses() {
+                assert_eq!(supply.len(), spec.nb, "{}", spec.name);
+                assert_eq!(demand.len(), spec.na, "{}", spec.name);
+                assert!((supply.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+                assert!((demand.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            } else {
+                assert_eq!(spec.nb, spec.na, "{}: assignment must be square", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn golden_fixtures_match_generator() {
+        let corpus = golden_corpus().expect("committed fixtures load");
+        assert_eq!(corpus.len(), GOLDEN_SPECS.len(), "fixture/spec count drift");
+        for (case, spec) in corpus.iter().zip(GOLDEN_SPECS) {
+            assert_eq!(case.name, spec.name, "fixture order drift");
+            assert_eq!(case.costs, spec.costs(), "{}: costs drifted from formula", spec.name);
+            assert_eq!(case.masses, spec.masses(), "{}: masses drifted", spec.name);
+            assert!(case.exact_cost.is_finite() && case.exact_cost >= 0.0);
+            assert_eq!(case.is_ot(), spec.masses16.is_some());
+            if case.is_ot() {
+                assert!(case.ot().is_some() && case.assignment().is_none());
+            } else {
+                assert!(case.assignment().is_some() && case.ot().is_none());
+            }
+        }
     }
 }

@@ -1,0 +1,372 @@
+//! Golden-corpus conformance: sweep every registry engine × ε over the
+//! committed fixtures of `rust/testdata/golden/`, certify each solution
+//! ([`crate::core::certify`]), and differential-test costs against the
+//! pinned exact optima (Theorem 1 / Theorem 4.2 as executable checks).
+//!
+//! One conformance contract for all engines:
+//!
+//! * **pins** — the in-repo exact oracles (Hungarian, SSP min-cost flow)
+//!   must reproduce the fixture-pinned optima exactly
+//!   ([`verify_golden_pins`]); the pins were computed offline in rational
+//!   arithmetic with a duality-certificate proof, so a mismatch means an
+//!   oracle regression, not a stale fixture;
+//! * **certificates** — every solution must pass its [`Certificate`]
+//!   (primal always; dual + gap whenever the engine exports duals);
+//! * **Theorem 1** — every engine with an additive guarantee must land
+//!   within `ε·U` of the pinned optimum, where `U` is the answer-shape
+//!   scale (`n·c_max` for matchings, `c_max` for unit-mass plans — an OT
+//!   engine answering an assignment case is compared against `OPT/n`,
+//!   the uniform-relaxation optimum by Birkhoff).
+//!
+//! Consumed by `otpr certify`, `tests/conformance_golden.rs`, and the
+//! nightly CI sweep (which uploads [`ConformanceReport::gap_histogram_json`]
+//! as an artifact).
+
+use crate::api::{Coupling, Problem, ProblemKind, SolveRequest, SolverConfig, SolverRegistry};
+use crate::core::certify::{gap_ratio_bucket, Certificate, GAP_RATIO_BUCKETS};
+use crate::core::Result;
+use crate::data::workloads::{golden_corpus, GoldenCase};
+use crate::solvers::hungarian;
+use crate::solvers::ssp_ot::SspExactOt;
+use crate::solvers::OtSolver;
+use crate::util::minijson::{obj, Json};
+
+#[derive(Debug, Clone)]
+pub struct ConformanceConfig {
+    /// Registry keys or aliases to sweep.
+    pub engines: Vec<String>,
+    /// Overall-semantics accuracy targets.
+    pub eps: Vec<f64>,
+}
+
+impl Default for ConformanceConfig {
+    fn default() -> Self {
+        Self {
+            engines: crate::api::ENGINE_SPECS.iter().map(|s| s.key.to_string()).collect(),
+            eps: vec![0.4, 0.2, 0.1],
+        }
+    }
+}
+
+/// One (case, engine, ε) sweep cell.
+#[derive(Debug, Clone)]
+pub struct ConformanceRecord {
+    pub case_name: String,
+    pub engine: &'static str,
+    pub eps: f64,
+    pub cost: f64,
+    /// Exact reference on the answer's own scale (see module docs).
+    pub exact: f64,
+    /// Additive budget `ε·U` the engine promises; `None` = no guarantee
+    /// (the greedy floor).
+    pub budget: Option<f64>,
+    pub cert: Certificate,
+    /// `cost ≤ exact + budget`? `None` when the engine promises nothing.
+    pub theorem1_ok: Option<bool>,
+}
+
+impl ConformanceRecord {
+    pub fn ok(&self) -> bool {
+        self.cert.ok() && self.theorem1_ok != Some(false)
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ConformanceReport {
+    pub records: Vec<ConformanceRecord>,
+    /// (case, engine, reason) cells that legitimately cannot run here:
+    /// capability mismatches and the XLA backends without a loaded runtime.
+    pub skipped: Vec<(String, String, String)>,
+    /// (case, engine, eps, error) — a native engine returning `Err` on a
+    /// golden case is a conformance **failure**, never a skip.
+    pub errors: Vec<(String, String, f64, String)>,
+}
+
+impl ConformanceReport {
+    pub fn failures(&self) -> Vec<&ConformanceRecord> {
+        self.records.iter().filter(|r| !r.ok()).collect()
+    }
+
+    /// Total failing cells: certificate/Theorem-1 failures plus solve errors.
+    pub fn failure_count(&self) -> usize {
+        self.failures().len() + self.errors.len()
+    }
+
+    /// Records that carried a usable dual certificate.
+    pub fn certified_gaps(&self) -> Vec<&ConformanceRecord> {
+        self.records.iter().filter(|r| r.cert.gap.is_some()).collect()
+    }
+
+    /// Histogram of gap/bound ratios over all dual-certified records plus
+    /// the raw per-record gaps — the nightly CI artifact.
+    pub fn gap_histogram_json(&self) -> Json {
+        let mut counts = vec![0u64; GAP_RATIO_BUCKETS.len()];
+        let mut gaps = Vec::new();
+        for r in &self.records {
+            if let Some(g) = r.cert.gap {
+                counts[gap_ratio_bucket(g, r.cert.bound)] += 1;
+                gaps.push(obj(vec![
+                    ("case", Json::Str(r.case_name.clone())),
+                    ("engine", Json::Str(r.engine.to_string())),
+                    ("eps", Json::Num(r.eps)),
+                    ("gap", Json::Num(g)),
+                    ("bound", Json::Num(r.cert.bound)),
+                ]));
+            }
+        }
+        obj(vec![
+            (
+                "bucket_upper_bounds",
+                Json::Arr(
+                    GAP_RATIO_BUCKETS
+                        .iter()
+                        .map(|&b| if b.is_finite() { Json::Num(b) } else { Json::Null })
+                        .collect(),
+                ),
+            ),
+            ("counts", Json::Arr(counts.into_iter().map(|c| Json::Num(c as f64)).collect())),
+            ("records", Json::Num(self.records.len() as f64)),
+            ("failures", Json::Num(self.failure_count() as f64)),
+            ("skipped", Json::Num(self.skipped.len() as f64)),
+            ("gaps", Json::Arr(gaps)),
+        ])
+    }
+
+    /// Fixed-width per-record table for CLI output.
+    pub fn table(&self) -> String {
+        let mut out = String::from(
+            "case        engine           eps   cost      exact     gap       bound     verdict\n",
+        );
+        for r in &self.records {
+            let gap = match r.cert.gap {
+                Some(g) => format!("{g:.6}"),
+                None => "-".to_string(),
+            };
+            let verdict = if r.ok() { "OK" } else { "FAIL" };
+            let t1 = match r.theorem1_ok {
+                Some(true) => "",
+                Some(false) => " (Thm1 violated)",
+                None => " (no guarantee)",
+            };
+            out.push_str(&format!(
+                "{:<11} {:<16} {:<5} {:<9.6} {:<9.6} {:<9} {:<9.6} {verdict}{t1}\n",
+                r.case_name, r.engine, r.eps, r.cost, r.exact, gap, r.cert.bound
+            ));
+        }
+        out
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} records ({} dual-certified), {} failures, {} solve errors, {} skipped cells",
+            self.records.len(),
+            self.certified_gaps().len(),
+            self.failures().len(),
+            self.errors.len(),
+            self.skipped.len()
+        )
+    }
+}
+
+/// Cross-check one fixture pin against the in-repo exact oracle.
+#[derive(Debug, Clone)]
+pub struct PinCheck {
+    pub name: String,
+    pub pinned: f64,
+    pub computed: f64,
+}
+
+impl PinCheck {
+    pub fn ok(&self) -> bool {
+        (self.pinned - self.computed).abs() <= 1e-9
+    }
+}
+
+/// Recompute every golden pin with the exact oracles (Hungarian for
+/// assignment cases, SSP min-cost flow for OT cases).
+pub fn verify_golden_pins() -> Result<Vec<PinCheck>> {
+    let corpus = golden_corpus()?;
+    let mut out = Vec::new();
+    for case in &corpus {
+        let computed = match case.ot() {
+            Some(inst) => SspExactOt::default().solve_ot(&inst, 0.0)?.cost,
+            None => hungarian::solve_exact(&case.costs)?.1,
+        };
+        out.push(PinCheck { name: case.name.clone(), pinned: case.exact_cost, computed });
+    }
+    Ok(out)
+}
+
+/// Additive budget engine `key` promises at accuracy `eps` on answer scale
+/// `u`; `None` = no guarantee.
+fn guarantee_budget(key: &str, eps: f64, u: f64) -> Option<f64> {
+    match key {
+        "greedy" => None,
+        "hungarian" => Some(0.0),
+        // exact up to the θ=2³² mass quantization (non-dyadic uniform
+        // masses like 1/5 shift the optimum by ≤ n·c_max/θ ≈ 2e-9)
+        "ssp-exact" => Some(1e-7),
+        _ => Some(eps * u),
+    }
+}
+
+/// Sweep the golden corpus. Engines that cannot run a cell (capability or
+/// missing backend) are recorded under `skipped`, never silently dropped.
+pub fn run(cfg: &ConformanceConfig) -> Result<ConformanceReport> {
+    let corpus = golden_corpus()?;
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let mut report = ConformanceReport::default();
+    for case in &corpus {
+        let (problem, kind) = problem_for(case);
+        for engine in &cfg.engines {
+            let Some(entry) = registry.entry(engine) else {
+                report.skipped.push((
+                    case.name.clone(),
+                    engine.clone(),
+                    "unknown engine".to_string(),
+                ));
+                continue;
+            };
+            let key = entry.key;
+            if !entry.supports(kind) {
+                report.skipped.push((
+                    case.name.clone(),
+                    key.to_string(),
+                    format!("does not support {} problems", kind.name()),
+                ));
+                continue;
+            }
+            for &eps in &cfg.eps {
+                let req = SolveRequest::new(eps).certify(true);
+                match registry.solve(key, &config, &problem, &req) {
+                    // The XLA backends cannot load a runtime in this
+                    // environment — an unavailable backend is a skip. Any
+                    // other engine erroring on a golden case is a failure.
+                    Err(e) if matches!(key, "xla" | "sinkhorn-xla") => {
+                        let already = report
+                            .skipped
+                            .iter()
+                            .any(|(c, k, _)| c == &case.name && k == key);
+                        if !already {
+                            report.skipped.push((case.name.clone(), key.to_string(), e.to_string()));
+                        }
+                    }
+                    Err(e) => {
+                        report.errors.push((
+                            case.name.clone(),
+                            key.to_string(),
+                            eps,
+                            e.to_string(),
+                        ));
+                    }
+                    Ok(sol) => {
+                        let cert =
+                            sol.certificate.clone().expect("certify(true) attaches a certificate");
+                        let c_max = case.costs.max() as f64;
+                        let n = case.costs.na as f64;
+                        let (exact, u) = match &sol.coupling {
+                            Coupling::Matching(_) => (case.exact_cost, n * c_max),
+                            // plan answer to an assignment case: compare on
+                            // the uniform-relaxation scale OPT/n
+                            Coupling::Plan(_) if !case.is_ot() => (case.exact_cost / n, c_max),
+                            Coupling::Plan(_) => (case.exact_cost, c_max),
+                        };
+                        let budget = guarantee_budget(key, eps, u);
+                        let theorem1_ok = budget.map(|b| sol.cost <= exact + b + 1e-9);
+                        report.records.push(ConformanceRecord {
+                            case_name: case.name.clone(),
+                            engine: key,
+                            eps,
+                            cost: sol.cost,
+                            exact,
+                            budget,
+                            cert,
+                            theorem1_ok,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+fn problem_for(case: &GoldenCase) -> (Problem, ProblemKind) {
+    match case.ot() {
+        Some(inst) => (Problem::Ot(inst), ProblemKind::Ot),
+        None => (
+            Problem::Assignment(case.assignment().expect("golden assignment cases are square")),
+            ProblemKind::Assignment,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pins_match_oracles() {
+        for pin in verify_golden_pins().unwrap() {
+            assert!(
+                pin.ok(),
+                "{}: pinned {} vs oracle {}",
+                pin.name,
+                pin.pinned,
+                pin.computed
+            );
+        }
+    }
+
+    #[test]
+    fn small_sweep_has_no_failures() {
+        let cfg = ConformanceConfig {
+            engines: vec!["native-seq".into(), "hungarian".into(), "greedy".into()],
+            eps: vec![0.25],
+        };
+        let report = run(&cfg).unwrap();
+        assert!(report.failures().is_empty(), "{}", report.table());
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.failure_count(), 0);
+        assert!(!report.records.is_empty());
+        // hungarian/greedy are assignment-only: 4 OT cases skipped each
+        assert_eq!(report.skipped.len(), 8, "{:?}", report.skipped);
+        // native-seq exports duals on every cell it ran
+        assert!(report
+            .records
+            .iter()
+            .filter(|r| r.engine == "native-seq")
+            .all(|r| r.cert.dual_ok == Some(true)));
+        // greedy carries no guarantee
+        assert!(report
+            .records
+            .iter()
+            .filter(|r| r.engine == "greedy")
+            .all(|r| r.theorem1_ok.is_none() && r.budget.is_none()));
+    }
+
+    #[test]
+    fn histogram_json_is_valid_and_consistent() {
+        let cfg = ConformanceConfig {
+            engines: vec!["native-seq".into()],
+            eps: vec![0.3],
+        };
+        let report = run(&cfg).unwrap();
+        let j = report.gap_histogram_json();
+        let parsed = Json::parse(&j.to_string()).expect("valid JSON (no bare inf)");
+        let counts: f64 = parsed
+            .get("counts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_f64().unwrap())
+            .sum();
+        assert_eq!(counts as usize, report.certified_gaps().len());
+        assert_eq!(
+            parsed.get("gaps").unwrap().as_arr().unwrap().len(),
+            report.certified_gaps().len()
+        );
+    }
+}

@@ -1,8 +1,10 @@
-//! Experiment harnesses regenerating the paper's evaluation (Figures 1–2)
-//! and the analytical ablations A1–A6. See DESIGN.md §4 for the index.
+//! Experiment harnesses regenerating the paper's evaluation (Figures 1–2),
+//! the analytical ablations A1–A6, and the golden-corpus conformance sweep
+//! (`conformance`). See DESIGN.md §4 for the index.
 //! All whole-solve measurements go through [`crate::api::SolverRegistry`].
 
 pub mod ablation;
+pub mod conformance;
 pub mod fig1;
 pub mod fig2;
 pub mod report;

@@ -9,6 +9,7 @@
 //!   fig2      regenerate Figure 2 (runtime vs ε, MNIST-style images)
 //!   ablation  analytical ablations A1–A6 (see DESIGN.md §4)
 //!   validate  certify solver output against exact baselines + invariants
+//!   certify   golden-corpus conformance sweep: certificates + Theorem 1
 //!   info      environment/artifact status
 //!
 //! Every solve goes through `otpr::api::SolverRegistry` + `SolveRequest`;
@@ -42,6 +43,7 @@ fn main() {
         Some("fig2") => cmd_fig2(&args),
         Some("ablation") => cmd_ablation(&args),
         Some("validate") => cmd_validate(&args),
+        Some("certify") => cmd_certify(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -54,7 +56,7 @@ fn main() {
 fn print_usage() {
     println!(
         "otpr — push-relabel additive approximation for optimal transport\n\
-         usage: otpr <solve|ot|serve|engines|fig1|fig2|ablation|validate|info> [--options]\n\
+         usage: otpr <solve|ot|serve|engines|fig1|fig2|ablation|validate|certify|info> [--options]\n\
          common options: --n N --eps E --seed S --engine KEY (see `otpr engines`)\n\
          see README.md for the full matrix"
     );
@@ -209,9 +211,17 @@ fn cmd_serve(args: &Args) -> i32 {
     let eps = args.f64_or("eps", 0.2);
     let engine = Engine::parse(args.get_or("engine", "auto")).unwrap_or(Engine::Auto);
     let budget_ms = args.u64_or("budget-ms", 0);
+    let audit = args.u64_or("audit", 0);
     let reg = registry(args);
-    println!("coordinator: {workers} workers, {jobs} jobs of n={n} (engine={})", engine.name());
-    let coord = Coordinator::start(CoordinatorConfig { workers, ..Default::default() }, reg);
+    println!(
+        "coordinator: {workers} workers, {jobs} jobs of n={n} (engine={}{})",
+        engine.name(),
+        if audit > 0 { format!(", auditing every {audit}th job") } else { String::new() }
+    );
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers, audit_sample_every: audit, ..Default::default() },
+        reg,
+    );
     let handles: Vec<_> = (0..jobs)
         .map(|i| {
             let kind = JobKind::Assignment(workload(args, n).assignment(i as u64));
@@ -408,6 +418,74 @@ fn cmd_validate(args: &Args) -> i32 {
         0
     } else {
         eprintln!("{failures} validation(s) FAILED");
+        1
+    }
+}
+
+fn cmd_certify(args: &Args) -> i32 {
+    use otpr::exp::conformance::{run, verify_golden_pins, ConformanceConfig};
+    let mut cfg = ConformanceConfig::default();
+    if let Some(engines) = args.get("engines") {
+        cfg.engines = engines.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    cfg.eps = args.list_f64("eps", &[0.4, 0.2, 0.1]);
+    println!(
+        "golden-corpus conformance sweep ({} engines × eps {:?}, fixtures in {})",
+        cfg.engines.len(),
+        cfg.eps,
+        otpr::data::workloads::golden_dir().display()
+    );
+    let mut failures = 0usize;
+    match verify_golden_pins() {
+        Err(e) => {
+            eprintln!("pin verification failed: {e}");
+            return 1;
+        }
+        Ok(pins) => {
+            for pin in &pins {
+                let ok = pin.ok();
+                println!(
+                    "  pin {:<11} fixture={:<12} oracle={:<12} [{}]",
+                    pin.name,
+                    pin.pinned,
+                    pin.computed,
+                    if ok { "OK" } else { "FAIL" }
+                );
+                if !ok {
+                    failures += 1;
+                }
+            }
+        }
+    }
+    let report = match run(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("conformance run failed: {e}");
+            return 1;
+        }
+    };
+    println!("\n{}", report.table());
+    for (case, engine, why) in &report.skipped {
+        println!("  skipped {case} × {engine}: {why}");
+    }
+    for (case, engine, eps, err) in &report.errors {
+        eprintln!("  ERROR {case} × {engine} at eps={eps}: {err}");
+    }
+    println!("\n{}", report.summary());
+    failures += report.failure_count();
+    if let Some(out) = args.get("out") {
+        let json = report.gap_histogram_json().to_string();
+        if let Err(e) = std::fs::write(out, json) {
+            eprintln!("could not write {out}: {e}");
+            return 1;
+        }
+        println!("gap histogram written to {out}");
+    }
+    if failures == 0 {
+        println!("all certificates and differential checks passed");
+        0
+    } else {
+        eprintln!("{failures} conformance failure(s)");
         1
     }
 }

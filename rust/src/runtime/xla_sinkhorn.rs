@@ -104,6 +104,7 @@ impl OtSolver for XlaSinkhorn {
         Ok(OtSolution {
             plan,
             cost,
+            duals: None,
             stats: SolveStats {
                 phases: iters,
                 seconds: sw.elapsed_secs(),

@@ -46,6 +46,11 @@ pub struct AssignmentSolution {
 pub struct OtSolution {
     pub plan: TransportPlan,
     pub cost: f64,
+    /// ε-unit per-vertex dual weights certifying approximate optimality
+    /// when the solver maintains them (the §4 push-relabel solver exports
+    /// its compressed cluster duals; Sinkhorn and the exact oracles report
+    /// `None`). In units of the solver's matching quantization ε/6.
+    pub duals: Option<DualWeights>,
     pub stats: SolveStats,
 }
 

@@ -19,7 +19,10 @@
 //! + residual supply shipped greedily ≤ ε/4.
 
 use crate::core::control::{SolveControl, CANCELLED_NOTE};
-use crate::core::{CostMatrix, OtInstance, OtprError, QuantizedCosts, Result, ScaledOtInstance, TransportPlan};
+use crate::core::{
+    CostMatrix, DualWeights, OtInstance, OtprError, QuantizedCosts, Result, ScaledOtInstance,
+    TransportPlan,
+};
 use crate::solvers::{OtSolution, OtSolver, SolveStats};
 use crate::util::timer::Stopwatch;
 use std::collections::BTreeMap;
@@ -231,6 +234,36 @@ impl OtPrState {
         Ok(())
     }
 
+    /// Export one ε-unit dual per *original* vertex for certification: the
+    /// maximum dual among a vertex's conceptual copies. For supply b that
+    /// is `y_free[b]` (the §4 free-copies-at-max invariant); for demand a
+    /// it is 0 while free copies remain, else the largest cluster dual.
+    /// Every copy pair satisfies `y(a)+y(b) ≤ cq+1` (conditions (2)/(3)),
+    /// and the componentwise max of each side is itself a copy pair, so
+    /// the exported vector inherits the relaxed feasibility the
+    /// [`crate::core::certify`] lower bound needs.
+    pub fn export_duals(&self) -> DualWeights {
+        let ya = (0..self.q.na)
+            .map(|a| {
+                if self.a_free[a] > 0 {
+                    0
+                } else if let Some(y) = self.a_classes[a].iter().map(|c| c.y).max() {
+                    y
+                } else {
+                    // Zero-mass demand vertex: no copies constrain it; pick
+                    // the largest edge-feasible value (clamped to the sign
+                    // invariant) so the exported vector stays checkable.
+                    (0..self.q.nb)
+                        .map(|b| self.q.at(b, a) + 1 - self.y_free[b])
+                        .min()
+                        .unwrap_or(0)
+                        .min(0)
+                }
+            })
+            .collect();
+        DualWeights { ya, yb: self.y_free.clone() }
+    }
+
     /// Extract the unit flow as a dense (b, a) matrix.
     pub fn unit_flow(&self) -> Vec<u64> {
         let mut flow = vec![0u64; self.q.nb * self.q.na];
@@ -426,6 +459,7 @@ impl OtPushRelabel {
         Ok(OtSolution {
             plan,
             cost,
+            duals: Some(st.export_duals()),
             stats: SolveStats {
                 phases: st.phases,
                 total_free_processed: st.total_free_processed,

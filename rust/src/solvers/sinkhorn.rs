@@ -83,7 +83,9 @@ impl Sinkhorn {
         debug_assert!(plan.check(r, c, 1e-6).is_ok());
         let cost = plan.cost(&inst.costs);
         stats.seconds = sw.elapsed_secs();
-        Ok(OtSolution { plan, cost, stats })
+        // No dual certificate: Sinkhorn's scaling potentials do not fit
+        // the ε-unit DualWeights shape (the §5 comparison point).
+        Ok(OtSolution { plan, cost, duals: None, stats })
     }
 }
 

@@ -215,6 +215,8 @@ impl OtSolver for SspExactOt {
         Ok(OtSolution {
             plan,
             cost: cost_units * inv,
+            // exact f64 potentials don't fit the ε-unit DualWeights shape
+            duals: None,
             stats: SolveStats { seconds: sw.elapsed_secs(), ..Default::default() },
         })
     }

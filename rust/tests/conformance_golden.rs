@@ -1,0 +1,187 @@
+//! Golden-corpus conformance: the committed fixtures pin Hungarian-exact
+//! (and exact-OT) optima, and every engine is held to one contract —
+//! certificates verify, and guaranteed engines land within `ε·U` of the
+//! pin (the paper's Theorem 1 additive bound, as a cargo test).
+
+use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use otpr::data::workloads::{golden_corpus, GOLDEN_SPECS};
+use otpr::exp::conformance::{run, verify_golden_pins, ConformanceConfig};
+
+#[test]
+fn golden_pins_match_exact_oracles() {
+    let pins = verify_golden_pins().expect("corpus loads and oracles run");
+    assert_eq!(pins.len(), GOLDEN_SPECS.len());
+    for pin in pins {
+        assert!(
+            pin.ok(),
+            "{}: fixture pins {} but the exact oracle computed {}",
+            pin.name,
+            pin.pinned,
+            pin.computed
+        );
+    }
+}
+
+/// The differential satellite: on every golden instance, every
+/// push-relabel-family engine's cost is within ε·U of the exact optimum
+/// (Theorem 1 for assignment, Theorem 4.2 for OT), across a sweep of ε.
+#[test]
+fn theorem1_push_relabel_family_within_eps_of_exact() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default().with_paranoid(true);
+    let corpus = golden_corpus().unwrap();
+    for case in &corpus {
+        let c_max = case.costs.max() as f64;
+        let n = case.costs.na as f64;
+        for engine in ["native-seq", "native-parallel"] {
+            for eps in [0.4, 0.2, 0.1, 0.05] {
+                let (problem, exact, u) = match case.ot() {
+                    Some(inst) => (Problem::Ot(inst), case.exact_cost, c_max),
+                    None => (
+                        Problem::Assignment(case.assignment().unwrap()),
+                        case.exact_cost,
+                        n * c_max,
+                    ),
+                };
+                let sol = registry
+                    .solve(engine, &config, &problem, &SolveRequest::new(eps))
+                    .unwrap_or_else(|e| panic!("{} on {} failed: {e}", engine, case.name));
+                let budget = eps * u;
+                assert!(
+                    sol.cost <= exact + budget + 1e-9,
+                    "{} × {} at eps={eps}: cost {} > exact {} + {}",
+                    case.name,
+                    engine,
+                    sol.cost,
+                    exact,
+                    budget
+                );
+            }
+        }
+    }
+}
+
+/// Acceptance sweep: the default conformance configuration certifies every
+/// runnable cell — primal always, dual + gap for every dual-producing
+/// engine — and no guaranteed engine violates its differential budget.
+#[test]
+fn conformance_sweep_certifies_every_engine() {
+    let report = run(&ConformanceConfig::default()).unwrap();
+    let failures = report.failures();
+    assert!(
+        failures.is_empty(),
+        "{} conformance failures:\n{}",
+        failures.len(),
+        report.table()
+    );
+    assert!(
+        report.errors.is_empty(),
+        "native engines errored on golden cases: {:?}",
+        report.errors
+    );
+    // Dual-producing engines must actually produce verified duals on every
+    // cell they ran (the tentpole's acceptance criterion).
+    for engine in ["native-seq", "native-parallel"] {
+        let cells: Vec<_> =
+            report.records.iter().filter(|r| r.engine == engine).collect();
+        assert!(!cells.is_empty(), "{engine} ran no cells");
+        for r in cells {
+            assert!(r.cert.primal_ok, "{} × {}: primal failed", r.case_name, engine);
+            assert_eq!(
+                r.cert.dual_ok,
+                Some(true),
+                "{} × {} at eps={}: dual verdict {:?} ({:?})",
+                r.case_name,
+                engine,
+                r.eps,
+                r.cert.dual_ok,
+                r.cert.detail
+            );
+            let gap = r.cert.gap.expect("dual-producing engines certify a gap");
+            assert!(
+                gap <= r.cert.bound + 1e-9,
+                "{} × {}: gap {gap} > bound {}",
+                r.case_name,
+                engine,
+                r.cert.bound
+            );
+        }
+    }
+    // Engines without duals report an absent verdict, never a false one.
+    for engine in ["hungarian", "ssp-exact", "sinkhorn-native", "greedy", "lmr"] {
+        for r in report.records.iter().filter(|r| r.engine == engine) {
+            assert_eq!(r.cert.dual_ok, None, "{} × {engine}", r.case_name);
+            assert!(r.cert.primal_ok, "{} × {engine}: {:?}", r.case_name, r.cert.detail);
+        }
+    }
+    // XLA engines have no runtime in this environment: skipped, not failed.
+    assert!(report
+        .skipped
+        .iter()
+        .any(|(_, engine, _)| engine == "xla" || engine == "sinkhorn-xla"));
+}
+
+/// Sinkhorn contract satellite: the returned plan's marginal violation
+/// stays below the solver's declared feasibility tolerance (the AWR'17
+/// rounding makes plans feasible to float precision), and the attached
+/// certificate reports `dual_ok = None` — absent, not failed.
+#[test]
+fn sinkhorn_contract_marginals_and_absent_duals() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let corpus = golden_corpus().unwrap();
+    for case in corpus.iter().filter(|c| c.is_ot()) {
+        let inst = case.ot().unwrap();
+        let problem = Problem::Ot(inst.clone());
+        let req = SolveRequest::new(0.2).certify(true);
+        let sol = registry.solve("sinkhorn-native", &config, &problem, &req).unwrap();
+        let plan = sol.plan().expect("sinkhorn returns a plan");
+        // declared tolerance: post-rounding feasibility to 1e-6
+        plan.check(&inst.supply, &inst.demand, 1e-6)
+            .unwrap_or_else(|e| panic!("{}: marginal violation above tolerance: {e}", case.name));
+        let l1: f64 = plan
+            .supply_marginal()
+            .iter()
+            .zip(&inst.supply)
+            .map(|(&got, &want)| (got - want).abs())
+            .chain(
+                plan.demand_marginal()
+                    .iter()
+                    .zip(&inst.demand)
+                    .map(|(&got, &want)| (got - want).abs()),
+            )
+            .sum();
+        assert!(l1 <= 1e-6, "{}: total marginal violation {l1}", case.name);
+        let cert = sol.certificate.as_ref().unwrap();
+        assert!(cert.primal_ok, "{}: {:?}", case.name, cert.detail);
+        assert_eq!(cert.dual_ok, None, "{}: sinkhorn has no dual certificate", case.name);
+        assert_eq!(cert.gap, None);
+        assert!(cert.ok());
+    }
+}
+
+#[test]
+fn gap_histogram_artifact_is_consistent() {
+    let cfg = ConformanceConfig {
+        engines: vec!["native-seq".into(), "sinkhorn-native".into()],
+        eps: vec![0.3, 0.15],
+    };
+    let report = run(&cfg).unwrap();
+    let json = report.gap_histogram_json().to_string();
+    let parsed = otpr::util::minijson::Json::parse(&json).expect("artifact is valid JSON");
+    let counts: f64 = parsed
+        .get("counts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.as_f64().unwrap())
+        .sum();
+    assert_eq!(counts as usize, report.certified_gaps().len());
+    // only the dual-producing engine contributes gaps
+    assert!(report
+        .certified_gaps()
+        .iter()
+        .all(|r| r.engine == "native-seq"));
+    assert!(counts > 0.0, "native-seq must certify at least one gap");
+}

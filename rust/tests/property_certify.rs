@@ -1,0 +1,149 @@
+//! Property suite for the certification subsystem: quantization laws
+//! (error ≤ 1 ε-unit per edge), the Lemma 3.1 lower bound never beating
+//! the exact optimum, and end-to-end certificates verifying on random
+//! instances for both coupling shapes. Runs at `OTPR_PROP_CASES` cases
+//! (nightly CI drives it at 512).
+
+use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use otpr::core::duals::dual_lower_bound_units;
+use otpr::core::{AssignmentInstance, CostMatrix, OtInstance, QuantizedCosts};
+use otpr::data::workloads::random_simplex;
+use otpr::prop_assert;
+use otpr::solvers::hungarian;
+use otpr::solvers::push_relabel::PrState;
+use otpr::solvers::ssp_ot::SspExactOt;
+use otpr::solvers::OtSolver;
+use otpr::util::proptest_mini::{check, check_default, PropConfig};
+use otpr::util::rng::Pcg32;
+
+fn random_costs(rng: &mut Pcg32, n: usize) -> CostMatrix {
+    CostMatrix::from_fn(n, n, |_, _| rng.next_f32())
+}
+
+/// Satellite: quantize→dequantize error is below one ε-unit on every edge
+/// (`c̄ ≤ c < c̄ + ε_abs`), for random instances and random ε.
+#[test]
+fn prop_quantize_dequantize_error_at_most_one_unit() {
+    check_default("quantize round-trip error", |rng| {
+        let n = 2 + rng.next_below(15) as usize; // ≤ 16
+        let eps = 0.02 + 0.6 * rng.next_f64();
+        let costs = random_costs(rng, n);
+        let q = QuantizedCosts::new(&costs, eps);
+        for b in 0..n {
+            for a in 0..n {
+                let c = costs.at(b, a) as f64;
+                let err = c - q.rounded(b, a);
+                prop_assert!(err >= -1e-9, "rounded above original at ({b},{a}): {err}");
+                prop_assert!(
+                    err < q.eps_abs + 1e-9,
+                    "error {err} exceeds one unit (eps_abs={}) at ({b},{a})",
+                    q.eps_abs
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Satellite: the Lemma 3.1 dual lower bound, dequantized, never exceeds
+/// the exact optimum on random n ≤ 16 instances.
+#[test]
+fn prop_dual_lower_bound_never_exceeds_exact_optimum() {
+    check_default("dual lower bound vs exact", |rng| {
+        let n = 2 + rng.next_below(15) as usize;
+        let eps = [0.3, 0.15, 0.08][rng.next_below(3) as usize];
+        let costs = random_costs(rng, n);
+        let mut st = PrState::new(&costs, eps);
+        st.run_to_termination().map_err(|e| e.to_string())?;
+        let (_, exact, _, _) = hungarian::solve_exact(&costs).map_err(|e| e.to_string())?;
+        let lb = dual_lower_bound_units(&st.y) as f64 * st.q.eps_abs;
+        prop_assert!(lb <= exact + 1e-9, "lb {lb} > exact {exact} (n={n}, eps={eps})");
+        Ok(())
+    });
+}
+
+/// End-to-end: every certified push-relabel assignment solve passes all
+/// three certificate verdicts, and the certified lower bound really
+/// bounds the Hungarian optimum from below.
+#[test]
+fn prop_assignment_certificates_verify() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    check_default("assignment certificates", |rng| {
+        let n = 2 + rng.next_below(15) as usize;
+        let eps = 0.05 + 0.5 * rng.next_f64();
+        let costs = random_costs(rng, n);
+        let inst = AssignmentInstance::new(costs).map_err(|e| e.to_string())?;
+        let problem = Problem::Assignment(inst);
+        let engine = if rng.next_below(2) == 0 { "native-seq" } else { "native-parallel" };
+        let req = SolveRequest::new(eps).certify(true);
+        let sol = registry
+            .solve(engine, &config, &problem, &req)
+            .map_err(|e| e.to_string())?;
+        let cert = sol.certificate.as_ref().ok_or("certificate missing")?;
+        prop_assert!(cert.primal_ok, "{engine} primal: {:?}", cert.detail);
+        prop_assert!(cert.dual_ok == Some(true), "{engine} dual: {:?}", cert.detail);
+        prop_assert!(
+            cert.gap_ok(),
+            "{engine} gap {:?} > bound {} (n={n}, eps={eps})",
+            cert.gap,
+            cert.bound
+        );
+        let (_, exact, _, _) =
+            hungarian::solve_exact(problem.costs()).map_err(|e| e.to_string())?;
+        let lb = cert.dual_lower_bound.ok_or("missing dual lower bound")?;
+        prop_assert!(lb <= exact + 1e-9, "certified lb {lb} > exact {exact}");
+        Ok(())
+    });
+}
+
+/// End-to-end for the OT generalization: exported cluster duals verify,
+/// the transport lower bound holds against the exact OT oracle, and the
+/// Theorem 4.2 additive bound is met.
+#[test]
+fn prop_ot_certificates_verify() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    // Scales with OTPR_PROP_CASES like the rest of the suite, capped at
+    // 128 because every case also runs the exact SSP oracle.
+    let cases = PropConfig::default().cases.min(128);
+    check(
+        "ot certificates",
+        &PropConfig { cases, ..Default::default() },
+        |rng| {
+            let n = 3 + rng.next_below(8) as usize; // ≤ 10
+            let costs = random_costs(rng, n);
+            let demand = random_simplex(n, rng);
+            let supply = random_simplex(n, rng);
+            let inst = OtInstance::new(costs, demand, supply).map_err(|e| e.to_string())?;
+            let problem = Problem::Ot(inst.clone());
+            let eps = [0.4, 0.25, 0.15][rng.next_below(3) as usize];
+            let req = SolveRequest::new(eps).certify(true);
+            let sol = registry
+                .solve("native-seq", &config, &problem, &req)
+                .map_err(|e| e.to_string())?;
+            let cert = sol.certificate.as_ref().ok_or("certificate missing")?;
+            prop_assert!(cert.primal_ok, "primal: {:?} (n={n}, eps={eps})", cert.detail);
+            prop_assert!(cert.dual_ok == Some(true), "dual: {:?}", cert.detail);
+            prop_assert!(
+                cert.gap_ok(),
+                "gap {:?} > bound {} (n={n}, eps={eps})",
+                cert.gap,
+                cert.bound
+            );
+            let exact = SspExactOt::default()
+                .solve_ot(&inst, 0.0)
+                .map_err(|e| e.to_string())?
+                .cost;
+            let lb = cert.dual_lower_bound.ok_or("missing dual lower bound")?;
+            prop_assert!(lb <= exact + 1e-9, "certified lb {lb} > exact OT cost {exact}");
+            let budget = eps * inst.costs.max() as f64;
+            prop_assert!(
+                sol.cost <= exact + budget + 1e-9,
+                "Theorem 4.2 violated: {} > {exact} + {budget}",
+                sol.cost
+            );
+            Ok(())
+        },
+    );
+}
