@@ -10,7 +10,9 @@ cost formula mirrors `otpr::data::workloads::golden_cost`:
 
 Exact references are computed in exact rational arithmetic:
 
-* assignment: brute force over all permutations (n <= 8);
+* assignment: O(n^3) Jonker-Volgenant shortest-augmenting-path Hungarian
+  over Fractions (scales to any pin size), cross-checked against the
+  O(n!) brute force on n <= 8 so the two independent oracles must agree;
 * OT: masses scaled to 16 integer units, cycle-canceling min-cost flow
   from a northwest-corner start, then the result is *verified* with a
   duality certificate (Bellman-Ford potentials must be feasible and
@@ -48,12 +50,98 @@ OT_CASES = [
 
 
 def brute_force_assignment(n, salt):
+    """O(n!) cross-check oracle — tiny instances only (mirrors the hard
+    limit in rust solvers/hungarian.rs::brute_force_reference)."""
+    assert n <= 8, f"brute force is O(n!): refusing n={n} > 8 — use hungarian_assignment"
     best = None
     for perm in itertools.permutations(range(n)):
         tot = sum(cost(b, perm[b], salt) for b in range(n))
         if best is None or tot < best:
             best = tot
     return best
+
+
+def hungarian_assignment(n, salt):
+    """Exact O(n^3) Jonker-Volgenant Hungarian in rational arithmetic.
+
+    Classic 1-based formulation with dual potentials (u over rows, v over
+    cols); all arithmetic in Fractions, so the pin is exact. This is the
+    path golden-pin regeneration uses at any n (the brute force would
+    explode beyond n=8).
+    """
+    INF = None  # None = +infinity sentinel (Fraction has no inf)
+
+    def less(a, b):
+        if b is INF:
+            return a is not INF
+        if a is INF:
+            return False
+        return a < b
+
+    c = [[cost(b, a, salt) for a in range(n)] for b in range(n)]
+    u = [Fraction(0)] * (n + 1)
+    v = [Fraction(0)] * (n + 1)
+    p = [0] * (n + 1)  # p[j] = row matched to column j
+    way = [0] * (n + 1)
+    for i in range(1, n + 1):
+        p[0] = i
+        j0 = 0
+        minv = [INF] * (n + 1)
+        used = [False] * (n + 1)
+        while True:
+            used[j0] = True
+            i0 = p[j0]
+            delta = INF
+            j1 = 0
+            for j in range(1, n + 1):
+                if not used[j]:
+                    cur = c[i0 - 1][j - 1] - u[i0] - v[j]
+                    if less(cur, minv[j]):
+                        minv[j] = cur
+                        way[j] = j0
+                    if less(minv[j], delta):
+                        delta = minv[j]
+                        j1 = j
+            assert delta is not INF, "disconnected instance"
+            for j in range(n + 1):
+                if used[j]:
+                    u[p[j]] += delta
+                    v[j] -= delta
+                elif minv[j] is not INF:
+                    minv[j] -= delta
+            j0 = j1
+            if p[j0] == 0:
+                break
+        while True:
+            j1 = way[j0]
+            p[j0] = p[j1]
+            j0 = j1
+            if j0 == 0:
+                break
+    total = Fraction(0)
+    matched_rows = set()
+    for j in range(1, n + 1):
+        assert p[j] != 0, "imperfect matching: optimizer bug"
+        matched_rows.add(p[j])
+        total += c[p[j] - 1][j - 1]
+    assert len(matched_rows) == n
+    # duality certificate: u_i + v_j <= c_ij everywhere, tight on matched
+    for b in range(1, n + 1):
+        for a in range(1, n + 1):
+            red = c[b - 1][a - 1] - u[b] - v[a]
+            assert red >= 0, "dual infeasible: optimizer bug"
+            if p[a] == b:
+                assert red == 0, "slackness violated: optimizer bug"
+    return total
+
+
+def exact_assignment(n, salt):
+    """Hungarian at any n; brute-force cross-check while it's tractable."""
+    exact = hungarian_assignment(n, salt)
+    if n <= 8:
+        assert exact == brute_force_assignment(n, salt), \
+            f"oracle disagreement at n={n}, salt={salt}"
+    return exact
 
 
 def exact_ot_units(nb, na, salt, supply, demand):
@@ -184,7 +272,7 @@ def main():
     out_dir = os.path.join(root, "rust", "testdata", "golden")
     os.makedirs(out_dir, exist_ok=True)
     for (name, n, salt) in ASSIGN_CASES:
-        exact = brute_force_assignment(n, salt)
+        exact = exact_assignment(n, salt)
         write_case(out_dir, name, "assignment", n, n, salt,
                    {"exact_cost": frac_to_float(exact)})
     for (name, nb, na, salt, supply, demand) in OT_CASES:

@@ -1,12 +1,13 @@
 //! Micro/ablation bench: the analytical claims behind the figures.
 //! A1 phases-vs-ε, A2 rounds-vs-n, A6 thread scaling, A7 complexity
-//! exponent, plus per-phase cost of the native sequential solver (the
-//! Lemma 3.4 O(n·nᵢ) scan).
+//! exponent, plus per-phase cost of the shared flow kernel (the
+//! Lemma 3.4 O(n·nᵢ) scan) — driven through `core::kernel` directly,
+//! with one arena reused across samples the way the batch path does.
 
+use otpr::core::kernel::{FlowKernel, ScalarKernel};
 use otpr::data::workloads::Workload;
 use otpr::exp::ablation;
 use otpr::exp::report::figure_table;
-use otpr::solvers::push_relabel::PrState;
 use otpr::util::bench::{run_bench, to_markdown, BenchConfig};
 
 fn main() {
@@ -33,18 +34,22 @@ fn main() {
     let (k, r2) = ablation::complexity_exponent(&sizes, 0.1, seed);
     println!("## A7 — sequential time ~ n^k at ε=0.1\n\nk = {k:.2} (r² = {r2:.3}); paper: O(n²/ε) ⇒ k ≈ 2\n");
 
-    // Per-phase timing: first-phase cost scaling (Lemma 3.4's O(n·n₁) scan,
-    // n₁ = n at the start).
+    // Per-phase timing: first-phase cost scaling (Lemma 3.4's O(n·n₁)
+    // scan, n₁ = n at the start). One kernel arena serves all samples —
+    // `init` re-quantizes in place, so this also measures the warm-arena
+    // setup cost the batch path pays per same-shape instance.
     let cfg = BenchConfig::from_env();
     let mut results = Vec::new();
+    let mut kernel = ScalarKernel::new();
     for &n in &sizes {
         let costs = Workload::Fig1 { n }.costs(seed);
         results.push(run_bench(&format!("first-phase n={n} eps=0.1"), &cfg, || {
-            let mut st = PrState::new(&costs, 0.1);
-            let out = st.run_phase();
+            kernel.init(&costs, 0.1, None);
+            let out = kernel.run_phase();
             vec![
-                ("matched".into(), out.matched.to_string()),
+                ("matched".into(), out.matched_units.to_string()),
                 ("free".into(), out.free_at_start.to_string()),
+                ("arena-reused".into(), kernel.arena().last_init_reused.to_string()),
             ]
         }));
     }

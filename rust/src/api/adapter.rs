@@ -13,11 +13,11 @@
 use crate::api::problem::{Problem, ProblemKind, Solution};
 use crate::api::request::SolveRequest;
 use crate::core::control::CANCELLED_NOTE;
+use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel};
 use crate::core::{Matching, OtInstance, OtprError, Result, TransportPlan};
 use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
-use crate::solvers::ot_push_relabel::OtPushRelabel;
-use crate::solvers::parallel_pr::ParallelPushRelabel;
-use crate::solvers::push_relabel::PushRelabel;
+use crate::solvers::ot_push_relabel::drive_ot;
+use crate::solvers::push_relabel::drive_assignment;
 use crate::solvers::sinkhorn::{Sinkhorn, SinkhornConfig};
 use crate::solvers::{AssignmentSolution, AssignmentSolver, OtSolution, OtSolver, SolveStats};
 use std::sync::Arc;
@@ -32,6 +32,27 @@ pub trait Solver: Send + Sync {
     fn supports(&self, kind: ProblemKind) -> bool;
 
     fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution>;
+
+    /// Solve a sequence of (problem, request) pairs, reusing whatever
+    /// internal state the engine can between items — the kernel-backed
+    /// engines keep **one arena** warm across same-shape instances
+    /// (`Solution::stats.arena_reused` marks the hits). Each item's own
+    /// budget/cancellation is honored between phases, so a shared
+    /// [`crate::api::CancelToken`] stops the whole batch at the next
+    /// phase boundary. The default implementation solves item-by-item
+    /// with a per-item capability check.
+    fn solve_each(&self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
+        items
+            .iter()
+            .map(|&(p, r)| {
+                if !self.supports(p.kind()) {
+                    Err(unsupported(self.name(), p.kind()))
+                } else {
+                    self.solve(p, r)
+                }
+            })
+            .collect()
+    }
 }
 
 fn unsupported(name: &str, kind: ProblemKind) -> OtprError {
@@ -43,8 +64,7 @@ fn unsupported(name: &str, kind: ProblemKind) -> OtprError {
 /// perfect matching (assignment) or the feasible product plan ν⊗μ (OT) —
 /// usable, feasible, no approximation guarantee, `"cancelled"` noted.
 fn cancelled_assignment(n: usize, costs: &crate::core::CostMatrix) -> Solution {
-    let mut m = Matching::empty(n, n);
-    m.complete_arbitrarily();
+    let m = Matching::arbitrary_complete(n, n);
     let cost = m.cost(costs);
     Solution::from_assignment(AssignmentSolution {
         matching: m,
@@ -55,12 +75,7 @@ fn cancelled_assignment(n: usize, costs: &crate::core::CostMatrix) -> Solution {
 }
 
 fn cancelled_ot(ot: &OtInstance) -> Solution {
-    let mut plan = TransportPlan::zeros(ot.costs.nb, ot.costs.na);
-    for b in 0..ot.costs.nb {
-        for a in 0..ot.costs.na {
-            plan.set(b, a, ot.supply[b] * ot.demand[a]);
-        }
-    }
+    let plan = TransportPlan::product(&ot.supply, &ot.demand);
     let cost = plan.cost(&ot.costs);
     Solution::from_ot(OtSolution {
         plan,
@@ -114,8 +129,40 @@ impl<S: OtSolver + Send + Sync> Solver for OtAdapter<S> {
     }
 }
 
+/// Solve one (problem, request) item on an already-initialized kernel —
+/// the shared body of both native engines. The kernel arena is reused
+/// across calls; `init` inside the drivers re-quantizes in place.
+fn solve_one_on_kernel(
+    kernel: &mut dyn FlowKernel,
+    problem: &Problem,
+    req: &SolveRequest,
+    paranoid: bool,
+) -> Result<Solution> {
+    match problem {
+        Problem::Assignment(inst) => {
+            drive_assignment(kernel, inst, req.eps_param(3.0), &req.control(), paranoid)
+                .map(Solution::from_assignment)
+        }
+        // OT ε is always the overall additive target (ε·c_max)
+        Problem::Ot(inst) => drive_ot(kernel, inst, req.eps, req.eps / 6.0, &req.control(), paranoid)
+            .map(Solution::from_ot),
+    }
+}
+
+fn solve_items_on_kernel(
+    kernel: &mut dyn FlowKernel,
+    items: &[(&Problem, &SolveRequest)],
+    paranoid: bool,
+) -> Vec<Result<Solution>> {
+    items
+        .iter()
+        .map(|&(p, r)| solve_one_on_kernel(kernel, p, r, paranoid))
+        .collect()
+}
+
 /// `native-seq`: the paper's sequential push-relabel (§2.2) for assignment
-/// plus the §4 copy-compressed OT solver, behind one engine key.
+/// plus the §4 copy-compressed OT solver, behind one engine key — both
+/// driven over the scalar kernel backend.
 pub struct NativeSeqSolver {
     pub paranoid: bool,
 }
@@ -130,26 +177,20 @@ impl Solver for NativeSeqSolver {
     }
 
     fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
-        match problem {
-            Problem::Assignment(inst) => {
-                let solver = PushRelabel { paranoid: self.paranoid };
-                let sol = solver.solve_with_param_ctl(inst, req.eps_param(3.0), &req.control())?;
-                Ok(Solution::from_assignment(sol))
-            }
-            Problem::Ot(inst) => {
-                // OT ε is always the overall additive target (ε·c_max)
-                let solver = OtPushRelabel { paranoid: self.paranoid };
-                let sol =
-                    solver.solve_with_params_ctl(inst, req.eps, req.eps / 6.0, &req.control())?;
-                Ok(Solution::from_ot(sol))
-            }
-        }
+        let mut kernel = ScalarKernel::new();
+        solve_one_on_kernel(&mut kernel, problem, req, self.paranoid)
+    }
+
+    fn solve_each(&self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
+        let mut kernel = ScalarKernel::new();
+        solve_items_on_kernel(&mut kernel, items, self.paranoid)
     }
 }
 
-/// `native-parallel`: propose–accept multi-threaded push-relabel for
-/// assignment; OT runs the sequential §4 solver (its phases are not yet
-/// parallelized — same routing the coordinator always used).
+/// `native-parallel`: the chunked (thread-sweep) kernel backend for both
+/// problem kinds — assignment *and* the §4 OT cluster state. Identical
+/// results to `native-seq` at every thread count (the kernel contract);
+/// only wall-clock differs.
 pub struct NativeParallelSolver {
     pub threads: usize,
     pub paranoid: bool,
@@ -165,19 +206,24 @@ impl Solver for NativeParallelSolver {
     }
 
     fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
-        match problem {
-            Problem::Assignment(inst) => {
-                let solver = ParallelPushRelabel::with_threads(self.threads);
-                let sol = solver.solve_with_param_ctl(inst, req.eps_param(3.0), &req.control())?;
-                Ok(Solution::from_assignment(sol))
-            }
-            Problem::Ot(inst) => {
-                let solver = OtPushRelabel { paranoid: self.paranoid };
-                let sol =
-                    solver.solve_with_params_ctl(inst, req.eps, req.eps / 6.0, &req.control())?;
-                Ok(Solution::from_ot(sol))
-            }
-        }
+        let mut kernel = ChunkedKernel::new(self.threads);
+        let mut sol = solve_one_on_kernel(&mut kernel, problem, req, self.paranoid)?;
+        sol.stats.notes.insert(0, format!("threads={}", self.threads.max(1)));
+        Ok(sol)
+    }
+
+    fn solve_each(&self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
+        let mut kernel = ChunkedKernel::new(self.threads);
+        let note = format!("threads={}", self.threads.max(1));
+        solve_items_on_kernel(&mut kernel, items, self.paranoid)
+            .into_iter()
+            .map(|r| {
+                r.map(|mut sol| {
+                    sol.stats.notes.insert(0, note.clone());
+                    sol
+                })
+            })
+            .collect()
     }
 }
 
@@ -365,6 +411,42 @@ mod tests {
         assert!(sol.is_cancelled());
         assert_eq!(sol.stats.phases, 0, "cancelled before the first phase");
         assert!(sol.matching().unwrap().is_perfect(), "still completed arbitrarily");
+    }
+
+    #[test]
+    fn solve_each_reuses_one_kernel_arena_across_same_shape_items() {
+        let s = NativeSeqSolver { paranoid: false };
+        let problems: Vec<Problem> = (0..4).map(|i| assignment(10, 100 + i)).collect();
+        let req = SolveRequest::new(0.3);
+        let items: Vec<(&Problem, &SolveRequest)> = problems.iter().map(|p| (p, &req)).collect();
+        let sols: Vec<Solution> =
+            s.solve_each(&items).into_iter().map(|r| r.unwrap()).collect();
+        assert!(!sols[0].stats.arena_reused, "first item builds the arena");
+        assert!(sols[1..].iter().all(|sol| sol.stats.arena_reused), "rest reuse it");
+        // batch results identical to individual solves
+        for (p, batched) in problems.iter().zip(&sols) {
+            let single = s.solve(p, &req).unwrap();
+            assert_eq!(single.matching(), batched.matching());
+            assert_eq!(single.duals, batched.duals);
+        }
+        // a shape change breaks the reuse run, mixed kinds still solve
+        let ot = Problem::Ot(Workload::Fig1 { n: 7 }.ot_with_random_masses(1));
+        let mixed: Vec<(&Problem, &SolveRequest)> = vec![(&problems[0], &req), (&ot, &req)];
+        let sols = s.solve_each(&mixed);
+        assert!(sols[0].as_ref().unwrap().matching().is_some());
+        assert!(sols[1].as_ref().unwrap().plan().is_some());
+    }
+
+    #[test]
+    fn default_solve_each_checks_capability_per_item() {
+        let s = AssignmentAdapter(Hungarian);
+        let a = assignment(6, 1);
+        let ot = Problem::Ot(Workload::Fig1 { n: 5 }.ot_with_random_masses(2));
+        let req = SolveRequest::new(0.1);
+        let out = s.solve_each(&[(&a, &req), (&ot, &req), (&a, &req)]);
+        assert!(out[0].is_ok());
+        assert!(out[1].as_ref().unwrap_err().to_string().contains("does not support ot"));
+        assert!(out[2].is_ok(), "an unsupported item must not poison the batch");
     }
 
     #[test]

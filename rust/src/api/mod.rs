@@ -42,7 +42,8 @@ pub use problem::{Coupling, Problem, ProblemKind, Solution};
 // of the public solve surface.
 pub use crate::core::certify::{certify, Certificate};
 pub use registry::{
-    canonical_key, BucketPolicy, EngineSpec, SolverConfig, SolverRegistry, ENGINE_SPECS,
+    canonical_key, BatchReport, BucketPolicy, EngineSpec, SolverConfig, SolverRegistry,
+    ENGINE_SPECS,
 };
 pub use request::{
     CancelToken, EpsSemantics, Progress, ProgressFn, SolveControl, SolveRequest, CANCELLED_NOTE,

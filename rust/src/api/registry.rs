@@ -327,6 +327,79 @@ impl SolverRegistry {
         }
         Ok(sol)
     }
+
+    /// Build the engine **once** and solve every (problem, request) pair
+    /// on it, letting kernel-backed engines keep one arena warm across
+    /// same-shape items ([`crate::api::adapter::Solver::solve_each`]).
+    /// Per-item capability mismatches and solve failures land in that
+    /// item's slot; only an unknown engine fails the whole call.
+    /// Certificates are attached per item when its request asks.
+    pub fn solve_each(
+        &self,
+        name: &str,
+        config: &SolverConfig,
+        items: &[(&Problem, &SolveRequest)],
+    ) -> Result<Vec<Result<Solution>>> {
+        let entry = self.entry(name).ok_or_else(|| {
+            OtprError::Coordinator(format!(
+                "unknown engine {name:?} (registered: {})",
+                self.keys().join(", ")
+            ))
+        })?;
+        let solver = (entry.builder)(config);
+        let mut results = solver.solve_each(items);
+        for (result, &(problem, req)) in results.iter_mut().zip(items) {
+            if let Ok(sol) = result {
+                if req.want_certificate {
+                    sol.certificate = Some(crate::core::certify::certify(problem, sol, req));
+                }
+            }
+        }
+        Ok(results)
+    }
+
+    /// First-class batch path: solve `problems` under one shared request
+    /// (see [`SolveRequest::solve_many`] for the caller-facing entry).
+    /// Same-shape instances reuse one kernel arena; the report counts
+    /// the hits so callers (and the coordinator's metrics) can assert
+    /// the amortization actually happened.
+    pub fn solve_batch(
+        &self,
+        name: &str,
+        config: &SolverConfig,
+        problems: &[Problem],
+        req: &SolveRequest,
+    ) -> Result<BatchReport> {
+        let items: Vec<(&Problem, &SolveRequest)> = problems.iter().map(|p| (p, req)).collect();
+        let results = self.solve_each(name, config, &items)?;
+        Ok(BatchReport::new(results))
+    }
+}
+
+/// Outcome of one [`SolverRegistry::solve_batch`] call.
+#[derive(Debug)]
+pub struct BatchReport {
+    /// Per-problem outcomes, input order.
+    pub results: Vec<Result<Solution>>,
+    /// How many solves reused a warm kernel arena (≤ len − 1; equals it
+    /// when every instance shares one shape on a kernel-backed engine).
+    pub reuse_hits: u64,
+}
+
+impl BatchReport {
+    fn new(results: Vec<Result<Solution>>) -> Self {
+        let reuse_hits = results
+            .iter()
+            .filter(|r| matches!(r, Ok(s) if s.stats.arena_reused))
+            .count() as u64;
+        Self { results, reuse_hits }
+    }
+
+    /// All solutions, or the first error (convenience for callers that
+    /// treat any per-item failure as fatal).
+    pub fn into_solutions(self) -> Result<Vec<Solution>> {
+        self.results.into_iter().collect()
+    }
 }
 
 fn default_builder(key: &'static str) -> BuilderFn {
@@ -449,6 +522,39 @@ mod tests {
         let err = reg.solve("hungarian", &cfg, &ot, &SolveRequest::new(0.1)).unwrap_err();
         assert!(err.to_string().contains("does not support ot"));
         assert!(reg.build("nope", &cfg).is_err());
+    }
+
+    #[test]
+    fn solve_batch_reuses_arena_and_matches_single_solves() {
+        let reg = SolverRegistry::with_defaults();
+        let cfg = SolverConfig::default();
+        let problems: Vec<Problem> = (0..8)
+            .map(|i| Problem::Assignment(Workload::RandomCosts { n: 12 }.assignment(i)))
+            .collect();
+        let req = crate::api::SolveRequest::new(0.3);
+        let report = reg.solve_batch("native-seq", &cfg, &problems, &req).unwrap();
+        assert_eq!(report.results.len(), 8);
+        assert_eq!(report.reuse_hits, 7, "8 same-shape instances share one arena");
+        for (p, r) in problems.iter().zip(&report.results) {
+            let batched = r.as_ref().unwrap();
+            let single = reg.solve("native-seq", &cfg, p, &req).unwrap();
+            assert_eq!(single.matching(), batched.matching());
+            assert!((single.cost - batched.cost).abs() < 1e-12);
+        }
+        // certificates attach per item when requested
+        let report = reg
+            .solve_batch("native-seq", &cfg, &problems[..2], &req.clone().certify(true))
+            .unwrap();
+        for r in &report.results {
+            assert!(r.as_ref().unwrap().certificate.as_ref().unwrap().ok());
+        }
+        // unknown engine fails the call; per-item capability errors don't
+        assert!(reg.solve_batch("nope", &cfg, &problems, &req).is_err());
+        let ot = Problem::Ot(Workload::Fig1 { n: 6 }.ot_with_random_masses(1));
+        let mixed = vec![problems[0].clone(), ot];
+        let report = reg.solve_batch("hungarian", &cfg, &mixed, &req).unwrap();
+        assert!(report.results[0].is_ok());
+        assert!(report.results[1].is_err());
     }
 
     #[test]

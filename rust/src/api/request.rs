@@ -14,6 +14,8 @@
 // Re-exported here because they are part of the public request surface;
 // they live in core so solvers can use them without an api dependency.
 pub use crate::core::control::{CancelToken, Progress, ProgressFn, SolveControl, CANCELLED_NOTE};
+use crate::api::problem::Problem;
+use crate::api::registry::{BatchReport, SolverConfig, SolverRegistry};
 use std::fmt;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -126,6 +128,23 @@ impl SolveRequest {
             EpsSemantics::Overall => self.eps / overall_divisor,
             EpsSemantics::AlgorithmParam => self.eps,
         }
+    }
+
+    /// First-class batch entry: solve a slice of problems under **this**
+    /// request through `registry`'s `engine`. Kernel-backed engines keep
+    /// one arena warm across same-shape instances; the returned
+    /// [`BatchReport`] counts the reuse hits. The request's cancellation
+    /// token and budget are honored *between phases inside the batch* —
+    /// cancelling stops the current item at its next phase boundary and
+    /// short-circuits the remaining items into cancelled completions.
+    pub fn solve_many(
+        &self,
+        registry: &SolverRegistry,
+        engine: &str,
+        config: &SolverConfig,
+        problems: &[Problem],
+    ) -> crate::core::Result<BatchReport> {
+        registry.solve_batch(engine, config, problems, self)
     }
 
     /// Snapshot the request into a solver-facing control handle, resolving

@@ -19,6 +19,15 @@ pub struct Batch<T> {
     opened: Instant,
 }
 
+impl<T> Batch<T> {
+    /// How long the batch accumulated before being closed — the wait the
+    /// first job paid for amortization, recorded into
+    /// [`crate::coordinator::metrics::Metrics::record_batch`].
+    pub fn wait(&self) -> Duration {
+        self.opened.elapsed()
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     pub max_batch: usize,
@@ -128,5 +137,14 @@ mod tests {
         let all = b.drain_all();
         assert_eq!(all.len(), 2);
         assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn wait_measures_accumulation_time() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_wait: Duration::from_secs(9) });
+        b.push(("e", None), 1);
+        std::thread::sleep(Duration::from_millis(2));
+        let batch = b.push(("e", None), 2).unwrap();
+        assert!(batch.wait() >= Duration::from_millis(2));
     }
 }

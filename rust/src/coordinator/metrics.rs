@@ -20,6 +20,11 @@ pub struct Metrics {
     /// Batches dispatched and total jobs in them (batching efficiency).
     pub batches: AtomicU64,
     pub batched_jobs: AtomicU64,
+    /// Solves that reused a warm kernel arena inside a batch — the
+    /// counter the batch path's amortization claim is asserted on.
+    pub arena_reuse_hits: AtomicU64,
+    /// Per-(engine, bucket) batch occupancy + accumulated wait.
+    per_batch_key: Mutex<Vec<BatchCounters>>,
     /// Audit-mode certification outcomes (see
     /// [`crate::coordinator::CoordinatorConfig::audit_sample_every`]).
     pub audited: AtomicU64,
@@ -45,6 +50,28 @@ pub struct EngineCounters {
     pub phases: u64,
 }
 
+/// Per batch key (engine name + optional artifact bucket) accounting:
+/// closed batches, jobs in them, and accumulated accumulation wait.
+#[derive(Debug, Clone)]
+pub struct BatchCounters {
+    pub key: String,
+    pub batches: u64,
+    pub jobs: u64,
+    pub wait_us_total: u64,
+}
+
+impl BatchCounters {
+    /// Mean jobs per closed batch — the occupancy the `/metrics` JSON
+    /// exposes.
+    pub fn occupancy(&self) -> f64 {
+        self.jobs as f64 / self.batches.max(1) as f64
+    }
+
+    pub fn mean_wait_us(&self) -> f64 {
+        self.wait_us_total as f64 / self.batches.max(1) as f64
+    }
+}
+
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
@@ -58,9 +85,37 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_batch(&self, jobs: usize) {
+    /// Record one closed batch: its key (engine name + optional artifact
+    /// bucket), occupancy, and how long it accumulated before closing.
+    pub fn record_batch(&self, key: &str, jobs: usize, wait_us: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_jobs.fetch_add(jobs as u64, Ordering::Relaxed);
+        let mut per = self.per_batch_key.lock().unwrap();
+        match per.iter_mut().find(|c| c.key == key) {
+            Some(c) => {
+                c.batches += 1;
+                c.jobs += jobs as u64;
+                c.wait_us_total += wait_us;
+            }
+            None => per.push(BatchCounters {
+                key: key.to_string(),
+                batches: 1,
+                jobs: jobs as u64,
+                wait_us_total: wait_us,
+            }),
+        }
+    }
+
+    /// Count kernel-arena reuse hits from a batch of solves.
+    pub fn record_arena_reuse(&self, hits: u64) {
+        if hits > 0 {
+            self.arena_reuse_hits.fetch_add(hits, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-key batch occupancy snapshot.
+    pub fn batch_counters(&self) -> Vec<BatchCounters> {
+        self.per_batch_key.lock().unwrap().clone()
     }
 
     pub fn record_done(&self, engine: &'static str, ok: bool, queued: f64, solve: f64) {
@@ -155,6 +210,58 @@ impl Metrics {
         self.per_engine.lock().unwrap().clone()
     }
 
+    /// Full metrics export for the serve layer's `/metrics` JSON
+    /// (`otpr serve --metrics-out`): job counters, per-key batch
+    /// occupancy + wait, kernel-arena reuse hits, per-engine phase
+    /// counters, and the audit section.
+    pub fn to_json(&self) -> Json {
+        let batch_keys = self
+            .batch_counters()
+            .into_iter()
+            .map(|c| {
+                obj(vec![
+                    ("key", Json::Str(c.key.clone())),
+                    ("batches", Json::Num(c.batches as f64)),
+                    ("jobs", Json::Num(c.jobs as f64)),
+                    ("occupancy", Json::Num(c.occupancy())),
+                    ("mean_wait_us", Json::Num(c.mean_wait_us())),
+                ])
+            })
+            .collect();
+        let engines = self
+            .engine_counters()
+            .into_iter()
+            .map(|e| {
+                obj(vec![
+                    ("engine", Json::Str(e.engine.to_string())),
+                    ("jobs", Json::Num(e.jobs as f64)),
+                    ("phase_events", Json::Num(e.phases as f64)),
+                ])
+            })
+            .collect();
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_jobs.load(Ordering::Relaxed);
+        obj(vec![
+            ("submitted", Json::Num(self.submitted.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::Num(self.completed.load(Ordering::Relaxed) as f64)),
+            ("failed", Json::Num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(batches as f64)),
+            ("batched_jobs", Json::Num(batched as f64)),
+            (
+                "batch_occupancy",
+                Json::Num(if batches > 0 { batched as f64 / batches as f64 } else { 0.0 }),
+            ),
+            (
+                "arena_reuse_hits",
+                Json::Num(self.arena_reuse_hits.load(Ordering::Relaxed) as f64),
+            ),
+            ("batch_keys", Json::Arr(batch_keys)),
+            ("engines", Json::Arr(engines)),
+            ("audit", self.audit_json()),
+        ])
+    }
+
     pub fn snapshot(&self) -> String {
         let sub = self.submitted.load(Ordering::Relaxed);
         let done = self.completed.load(Ordering::Relaxed);
@@ -170,6 +277,19 @@ impl Metrics {
                 "batches: {batches} (avg {:.2} jobs/batch)\n",
                 batched as f64 / batches as f64
             ));
+            for c in self.batch_counters() {
+                out.push_str(&format!(
+                    "  batch[{}]: {} batches, avg {:.2} jobs, avg wait {:.0}µs\n",
+                    c.key,
+                    c.batches,
+                    c.occupancy(),
+                    c.mean_wait_us()
+                ));
+            }
+        }
+        let reuse = self.arena_reuse_hits.load(Ordering::Relaxed);
+        if reuse > 0 {
+            out.push_str(&format!("kernel arena reuse hits: {reuse}\n"));
         }
         out.push_str(&format!(
             "time: queued={:.3}s solve={:.3}s\n",
@@ -223,7 +343,7 @@ mod tests {
         let m = Metrics::new();
         m.record_submit();
         m.record_submit();
-        m.record_batch(2);
+        m.record_batch("native-seq", 2, 120);
         m.record_done("native-seq", true, 0.001, 0.02);
         m.record_done("xla", false, 0.0, 0.5);
         let snap = m.snapshot();
@@ -232,6 +352,42 @@ mod tests {
         assert!(snap.contains("failed=1"));
         assert!(snap.contains("engine native-seq: 1"));
         assert!(snap.contains("avg 2.00 jobs/batch"));
+        assert!(snap.contains("batch[native-seq]: 1 batches, avg 2.00 jobs"), "{snap}");
+    }
+
+    #[test]
+    fn batch_keys_accumulate_occupancy_and_wait() {
+        let m = Metrics::new();
+        m.record_batch("xla/256", 4, 100);
+        m.record_batch("xla/256", 2, 300);
+        m.record_batch("native-seq", 8, 50);
+        let counters = m.batch_counters();
+        let xla = counters.iter().find(|c| c.key == "xla/256").unwrap();
+        assert_eq!((xla.batches, xla.jobs), (2, 6));
+        assert!((xla.occupancy() - 3.0).abs() < 1e-12);
+        assert!((xla.mean_wait_us() - 200.0).abs() < 1e-12);
+        m.record_arena_reuse(7);
+        m.record_arena_reuse(0); // no-op
+        assert_eq!(m.arena_reuse_hits.load(Ordering::Relaxed), 7);
+        assert!(m.snapshot().contains("kernel arena reuse hits: 7"));
+    }
+
+    #[test]
+    fn metrics_json_exposes_batch_occupancy() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_batch("native-seq", 8, 1500);
+        m.record_done("native-seq", true, 0.001, 0.02);
+        m.record_arena_reuse(7);
+        let j = Json::parse(&m.to_json().to_string()).expect("valid JSON");
+        assert_eq!(j.get("batch_occupancy").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("arena_reuse_hits").unwrap().as_f64(), Some(7.0));
+        let keys = j.get("batch_keys").unwrap().as_arr().unwrap();
+        assert_eq!(keys.len(), 1);
+        assert_eq!(keys[0].get("occupancy").unwrap().as_f64(), Some(8.0));
+        assert_eq!(keys[0].get("mean_wait_us").unwrap().as_f64(), Some(1500.0));
+        assert!(j.get("audit").is_some());
+        assert_eq!(j.get("engines").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

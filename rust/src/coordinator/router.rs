@@ -79,6 +79,27 @@ impl Router {
         debug_assert!(engine != Engine::Auto, "resolve() before execute()");
         self.registry.solve(engine.key(), &self.config, &req.kind, &req.request)
     }
+
+    /// Execute a closed batch of jobs that share one engine, building the
+    /// solver once so kernel-backed engines reuse their arena across
+    /// same-shape instances. Per-job results come back in input order;
+    /// each job's own request (budget/cancel/observer) is honored.
+    pub fn execute_batch(&self, reqs: &[&JobRequest], engine: Engine) -> Vec<Result<Solution>> {
+        debug_assert!(engine != Engine::Auto, "resolve() before execute_batch()");
+        let items: Vec<(&crate::api::Problem, &crate::api::SolveRequest)> =
+            reqs.iter().map(|r| (&r.kind, &r.request)).collect();
+        match self.registry.solve_each(engine.key(), &self.config, &items) {
+            Ok(results) => results,
+            // unknown engine: replicate the error per job so every reply
+            // channel still gets an outcome
+            Err(e) => {
+                let msg = e.to_string();
+                reqs.iter()
+                    .map(|_| Err(crate::core::OtprError::Coordinator(msg.clone())))
+                    .collect()
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +159,31 @@ mod tests {
         assert_eq!(r.resolve(&rq), Engine::NativeSeq);
         let out = r.execute(&rq, Engine::NativeSeq).unwrap();
         assert!(out.plan().is_some());
+    }
+
+    #[test]
+    fn execute_batch_matches_per_job_results_and_reuses_arena() {
+        let r = Router::new(None, 2);
+        let reqs: Vec<JobRequest> = (0..4u64)
+            .map(|i| JobRequest {
+                id: i,
+                kind: JobKind::Assignment(Workload::RandomCosts { n: 10 }.assignment(i)),
+                request: SolveRequest::new(0.3),
+                engine: Engine::NativeSeq,
+            })
+            .collect();
+        let refs: Vec<&JobRequest> = reqs.iter().collect();
+        let batch = r.execute_batch(&refs, Engine::NativeSeq);
+        assert_eq!(batch.len(), 4);
+        let reused = batch
+            .iter()
+            .filter(|o| matches!(o, Ok(s) if s.stats.arena_reused))
+            .count();
+        assert_eq!(reused, 3, "same-shape batch reuses one arena");
+        for (rq, out) in reqs.iter().zip(&batch) {
+            let single = r.execute(rq, Engine::NativeSeq).unwrap();
+            assert_eq!(single.matching(), out.as_ref().unwrap().matching());
+        }
     }
 
     #[test]

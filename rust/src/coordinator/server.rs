@@ -9,11 +9,15 @@
 //!                                   JobHandle ◄──per-job channel── execute
 //! ```
 //!
-//! The dispatcher groups jobs by (engine, bucket) via [`Batcher`]; workers
-//! drain whole batches so XLA executions with the same bucket reuse the
-//! compiled executable back-to-back.
+//! The dispatcher resolves `Engine::Auto` and the artifact bucket up
+//! front and groups jobs by (engine, bucket) via [`Batcher`]; workers
+//! execute whole closed batches through
+//! [`Router::execute_batch`], so XLA executions with the same bucket
+//! reuse the compiled executable back-to-back and the CPU kernel
+//! engines reuse one flow-kernel arena across same-shape jobs (the
+//! reuse hits land in [`Metrics::record_arena_reuse`]).
 
-use crate::api::SolveRequest;
+use crate::api::{Solution, SolveRequest};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::job::{Engine, JobKind, JobOutcome, JobRequest};
 use crate::coordinator::metrics::Metrics;
@@ -104,8 +108,9 @@ impl Coordinator {
         let dispatcher = {
             let metrics = metrics.clone();
             let batcher_cfg = config.batcher.clone();
+            let router = router.clone();
             std::thread::spawn(move || {
-                dispatcher_loop(dispatch_rx, batch_tx, batcher_cfg, metrics)
+                dispatcher_loop(dispatch_rx, batch_tx, batcher_cfg, metrics, router)
             })
         };
 
@@ -181,14 +186,32 @@ impl Drop for Coordinator {
     }
 }
 
+/// Human/metrics label for a batch key: `engine` or `engine/bucket`.
+fn key_label(key: &crate::coordinator::batcher::BatchKey) -> String {
+    match key.1 {
+        Some(bucket) => format!("{}/{bucket}", key.0),
+        None => key.0.to_string(),
+    }
+}
+
 fn dispatcher_loop(
     rx: Receiver<DispatchMsg>,
     batch_tx: SyncSender<Vec<Envelope>>,
     cfg: BatcherConfig,
     metrics: Arc<Metrics>,
+    router: Arc<Router>,
 ) {
-    // Resolve engine names once per job so the batch key is 'static.
     let mut batcher: Batcher<Envelope> = Batcher::new(cfg);
+    let close = |batch: crate::coordinator::batcher::Batch<Envelope>,
+                     tx: &SyncSender<Vec<Envelope>>|
+     -> bool {
+        metrics.record_batch(
+            &key_label(&batch.key),
+            batch.jobs.len(),
+            batch.wait().as_micros() as u64,
+        );
+        tx.send(batch.jobs).is_ok()
+    };
     loop {
         // poll with a deadline so expiring batches flush promptly
         let timeout = batcher
@@ -196,40 +219,48 @@ fn dispatcher_loop(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(DispatchMsg::Job(env)) => {
-                let key = (env.engine.name(), None::<usize>);
-                // bucket refinement happens in the worker (needs registry);
-                // the engine name alone already separates XLA from native.
+            Ok(DispatchMsg::Job(mut env)) => {
+                // Resolve Auto and the artifact bucket here, once, so the
+                // batch key is final and workers never re-route.
+                let engine = router.resolve(&env.req);
+                env.engine = engine;
+                let key = (engine.name(), router.bucket(&env.req, engine));
                 if let Some(batch) = batcher.push(key, env) {
-                    metrics.record_batch(batch.jobs.len());
-                    if batch_tx.send(batch.jobs).is_err() {
+                    if !close(batch, &batch_tx) {
                         return;
                     }
                 }
             }
             Ok(DispatchMsg::Shutdown) => {
                 for batch in batcher.drain_all() {
-                    metrics.record_batch(batch.jobs.len());
-                    let _ = batch_tx.send(batch.jobs);
+                    let _ = close(batch, &batch_tx);
                 }
                 return; // dropping batch_tx stops workers
             }
             Err(RecvTimeoutError::Timeout) => {
                 for batch in batcher.drain_expired() {
-                    metrics.record_batch(batch.jobs.len());
-                    if batch_tx.send(batch.jobs).is_err() {
+                    if !close(batch, &batch_tx) {
                         return;
                     }
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 for batch in batcher.drain_all() {
-                    metrics.record_batch(batch.jobs.len());
-                    let _ = batch_tx.send(batch.jobs);
+                    let _ = close(batch, &batch_tx);
                 }
                 return;
             }
         }
+    }
+}
+
+/// Shape key for intra-batch grouping: jobs that can share one kernel
+/// arena (same problem kind and cost dimensions).
+fn shape_key(req: &JobRequest) -> (u8, usize, usize) {
+    let costs = req.kind.costs();
+    match req.kind {
+        crate::api::Problem::Assignment(_) => (0, costs.nb, costs.na),
+        crate::api::Problem::Ot(_) => (1, costs.nb, costs.na),
     }
 }
 
@@ -245,50 +276,109 @@ fn worker_loop(
             guard.recv()
         };
         let Ok(batch) = batch else { return };
-        for env in batch {
-            let queued = env.submitted.elapsed().as_secs_f64();
-            let mut req = env.req;
-            let engine = router.resolve(&req);
-            // Tee solver progress into a per-job atomic (folded into the
-            // metrics lock once per job, not per phase) without disturbing
-            // any caller-supplied observer.
-            let phase_count = Arc::new(AtomicU64::new(0));
-            let counter = phase_count.clone();
-            req.request = req.request.chain_observer(move |_p| {
-                counter.fetch_add(1, Ordering::Relaxed);
-            });
-            let t = Instant::now();
-            let result = router.execute(&req, engine).map_err(|e| e.to_string());
-            let solve = t.elapsed().as_secs_f64();
-            metrics.record_phases(engine.name(), phase_count.load(Ordering::Relaxed));
-            metrics.record_done(engine.name(), result.is_ok(), queued, solve);
-            // Audit sampling: independently re-verify every k-th served
-            // job and export pass/fail + gap histograms. A budget-stopped
-            // solve is exempt — it deliberately ships without a guarantee.
-            // The O(n²) certify pass runs *after* the reply is sent, so
-            // auditing never adds to client-observed latency (one solution
-            // clone buys that).
-            let audit_sol = if audit_every > 0 && req.id % audit_every == 0 {
-                match &result {
-                    Ok(sol) if !sol.is_cancelled() => Some(sol.clone()),
-                    _ => None,
-                }
-            } else {
-                None
-            };
-            let _ = env.reply.send(JobOutcome {
-                id: req.id,
-                engine_used: engine.name(),
-                result,
-                queued_secs: queued,
-                solve_secs: solve,
-            });
-            if let Some(sol) = audit_sol {
-                let cert = sol.certificate.clone().unwrap_or_else(|| {
-                    crate::core::certify::certify(&req.kind, &sol, &req.request)
+
+        // Prepare every job: queue time + a per-job phase counter teed
+        // into the request's observer chain (folded into the metrics lock
+        // once per job, not per phase) without disturbing any
+        // caller-supplied observer.
+        struct Prepared {
+            req: JobRequest,
+            engine: Engine,
+            reply: Sender<JobOutcome>,
+            submitted: Instant,
+            phase_count: Arc<AtomicU64>,
+        }
+        let jobs: Vec<Prepared> = batch
+            .into_iter()
+            .map(|env| {
+                let mut req = env.req;
+                let phase_count = Arc::new(AtomicU64::new(0));
+                let counter = phase_count.clone();
+                req.request = req.request.chain_observer(move |_p| {
+                    counter.fetch_add(1, Ordering::Relaxed);
                 });
-                metrics.record_audit(&cert);
+                Prepared {
+                    req,
+                    engine: env.engine,
+                    reply: env.reply,
+                    submitted: env.submitted,
+                    phase_count,
+                }
+            })
+            .collect();
+
+        // Group same-shape jobs (the dispatcher already grouped by
+        // engine+bucket) and execute each group as one closed batch, so
+        // kernel-backed engines reuse one arena across the group. Each
+        // group's replies flush as soon as it finishes — a fast group is
+        // never held behind a slow one.
+        let mut groups: Vec<((u8, usize, usize), Vec<usize>)> = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            let key = shape_key(&job.req);
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((key, vec![i])),
             }
+        }
+        // Audit sampling clones collected here and certified only after
+        // every reply is out, so the O(n²) certify pass never adds to any
+        // client-observed latency (one solution clone buys that).
+        let mut audits: Vec<(usize, Solution)> = Vec::new();
+        for (_, idxs) in &groups {
+            let engine = jobs[idxs[0]].engine;
+            // queue time up to the group start; head-of-line wait behind
+            // earlier items in the same group is added back below so
+            // batched jobs keep honest latency accounting
+            let at_group_start: Vec<f64> =
+                idxs.iter().map(|&i| jobs[i].submitted.elapsed().as_secs_f64()).collect();
+            let t = Instant::now();
+            let reqs: Vec<&JobRequest> = idxs.iter().map(|&i| &jobs[i].req).collect();
+            let outs: Vec<Result<Solution, String>> = router
+                .execute_batch(&reqs, engine)
+                .into_iter()
+                .map(|r| r.map_err(|e| e.to_string()))
+                .collect();
+            let per_job_fallback = t.elapsed().as_secs_f64() / idxs.len() as f64;
+            let mut head_wait = 0.0;
+            for ((&i, result), q0) in idxs.iter().zip(outs).zip(at_group_start) {
+                let job = &jobs[i];
+                let solve = match &result {
+                    Ok(sol) if sol.stats.seconds > 0.0 => sol.stats.seconds,
+                    _ => per_job_fallback,
+                };
+                let queued = q0 + head_wait;
+                head_wait += solve;
+                metrics.record_phases(job.engine.name(), job.phase_count.load(Ordering::Relaxed));
+                metrics.record_done(job.engine.name(), result.is_ok(), queued, solve);
+                if let Ok(sol) = &result {
+                    if sol.stats.arena_reused {
+                        metrics.record_arena_reuse(1);
+                    }
+                }
+                // A budget-stopped solve is exempt from auditing — it
+                // deliberately ships without a guarantee.
+                if audit_every > 0 && job.req.id % audit_every == 0 {
+                    if let Ok(sol) = &result {
+                        if !sol.is_cancelled() {
+                            audits.push((i, sol.clone()));
+                        }
+                    }
+                }
+                let _ = job.reply.send(JobOutcome {
+                    id: job.req.id,
+                    engine_used: job.engine.name(),
+                    result,
+                    queued_secs: queued,
+                    solve_secs: solve,
+                });
+            }
+        }
+        for (i, sol) in audits {
+            let job = &jobs[i];
+            let cert = sol.certificate.clone().unwrap_or_else(|| {
+                crate::core::certify::certify(&job.req.kind, &sol, &job.req.request)
+            });
+            metrics.record_audit(&cert);
         }
     }
 }
@@ -409,6 +499,43 @@ mod tests {
         assert_eq!(coord.metrics.audit_counters(), (0, 0, 0));
         assert!(!coord.metrics.snapshot().contains("audit:"));
         coord.shutdown();
+    }
+
+    #[test]
+    fn closed_batches_reuse_one_kernel_arena() {
+        // The batch-path acceptance scenario: 8 same-shape jobs close one
+        // batch (max_batch = 8, generous max_wait so expiry can't split
+        // it), the worker executes them as one group, and the kernel
+        // arena is reused for all but the first — asserted via the
+        // Metrics reuse-hit counter.
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(5) },
+                ..Default::default()
+            },
+            None,
+        );
+        let handles: Vec<_> = (0..8)
+            .map(|i| coord.submit(assignment_job(14, i), 0.3, Engine::NativeSeq).unwrap())
+            .collect();
+        for h in handles {
+            assert!(h.wait().unwrap().result.is_ok());
+        }
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        assert_eq!(
+            metrics.arena_reuse_hits.load(Ordering::Relaxed),
+            7,
+            "8 same-shape jobs in one batch must reuse one arena 7 times"
+        );
+        let counters = metrics.batch_counters();
+        let seq = counters.iter().find(|c| c.key == "native-seq").expect("keyed batch recorded");
+        assert_eq!((seq.batches, seq.jobs), (1, 8));
+        assert!((seq.occupancy() - 8.0).abs() < 1e-12);
+        let snap = metrics.snapshot();
+        assert!(snap.contains("batch[native-seq]"), "{snap}");
+        assert!(snap.contains("kernel arena reuse hits: 7"), "{snap}");
     }
 
     #[test]

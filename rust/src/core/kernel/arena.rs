@@ -1,0 +1,761 @@
+//! The flat SoA flow arena: all mutable push-relabel state for one
+//! instance, in contiguous buffers that are *reused* across `init` calls
+//! so batched solves over same-shape instances pay allocation cost once.
+//!
+//! State model (the §4 copy-compressed form; assignment is the unit-mass
+//! special case):
+//!
+//! * supply side — `b_free[b]` free units, `y_free[b]` the dual shared by
+//!   all of b's free copies (the §4 free-copies-at-max invariant);
+//! * demand side — `a_free[a]` free units at dual 0, plus up to
+//!   [`SLOTS`] *cluster slots* per vertex (`cls_y` / `cls_count` /
+//!   `cls_head`, fixed-width — Lemma 4.1 bounds live clusters by 2, the
+//!   extra slots absorb the transient values one phase can create);
+//! * flow — a pooled singly-linked edge list per cluster slot
+//!   (`edge_b` / `edge_units` / `edge_next`, recycled through
+//!   `edge_free`), so there is no `Vec<Vec<_>>` anywhere on the phase
+//!   loop;
+//! * worklists — `worklist` / `need` / `cursor` (`Vec<u32>`/`Vec<u64>`),
+//!   rebuilt per phase without reallocating.
+//!
+//! The phase itself ([`KernelArena::run_phase`]) is *round-structured*:
+//! every active free supply vertex proposes a take-plan against a stable
+//! snapshot (capacities only shrink inside a phase, so the pre-round
+//! state is the snapshot), then an accept pass commits grants
+//! sequentially in ascending vertex order. Because proposals depend only
+//! on the snapshot and commits are ordered, the result is **identical
+//! for every thread count** — the scalar backend runs the sweep inline,
+//! the chunked backend fans it out over `std::thread::scope`, and both
+//! produce byte-identical matchings, plans, and duals.
+
+use crate::core::cost::CostMatrix;
+use crate::core::duals::DualWeights;
+use crate::core::matching::Matching;
+use crate::core::quantize::QuantizedCosts;
+
+/// Cluster slots per demand vertex. Lemma 4.1 bounds *live* clusters by
+/// 2; one phase can transiently add values `{v−1 : v live} ∪ {−1}`, so 8
+/// slots can never overflow while the lemma holds (and overflowing is a
+/// solver bug, reported loudly by [`KernelArena::check_invariants`]).
+pub const SLOTS: usize = 8;
+
+/// Slot id used in a [`PlanItem`] for the free-copy pool (dual 0).
+pub const SLOT_FREE: u8 = u8::MAX;
+
+/// Sentinel for "no edge" in the pooled linked lists.
+const NIL: u32 = u32::MAX;
+
+/// Take-plan entries a proposing vertex may stage per round. Assignment
+/// needs 1 (unit budgets); OT budgets occasionally span several demand
+/// sources — anything beyond the width simply continues next round.
+pub const PLAN_WIDTH: usize = 4;
+
+/// One staged take: `units` from demand vertex `a`, out of the free pool
+/// (`slot == SLOT_FREE`) or matched cluster slot `slot`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanItem {
+    pub a: u32,
+    pub slot: u8,
+    pub units: u64,
+}
+
+/// Outcome of one kernel phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelPhase {
+    /// Free supply units at the start of the phase (the |B'| of Lemma 3.4).
+    pub free_at_start: u64,
+    /// Units matched by this phase's maximal M'.
+    pub matched_units: u64,
+    /// Propose–accept rounds used.
+    pub rounds: usize,
+    /// True when the termination threshold held and no work was done.
+    pub terminated: bool,
+}
+
+/// A pending M' match recorded during the accept pass and applied (with
+/// the a-side relabel to `y_pre − 1`) once the phase's rounds finish.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    a: u32,
+    b: u32,
+    units: u64,
+    y_pre: i32,
+}
+
+/// Read-only view of the arena state a propose sweep scans. `Sync`, so
+/// the chunked backend can share it across scoped threads.
+pub struct KernelView<'k> {
+    pub q: &'k QuantizedCosts,
+    pub y_free: &'k [i32],
+    pub a_free: &'k [u64],
+    pub cls_y: &'k [i32],
+    pub cls_count: &'k [u64],
+    pub worklist: &'k [u32],
+    pub need: &'k [u64],
+    pub cursor: &'k [u32],
+}
+
+impl KernelView<'_> {
+    /// Scan demand vertices from `cursor[wi]` and stage up to
+    /// [`PLAN_WIDTH`] takes for worklist entry `wi` against the snapshot
+    /// capacities. Returns `(plan_len, exhausted)`; `exhausted` means the
+    /// scan reached the end of the row with need remaining — no capacity
+    /// is left anywhere for this vertex this phase.
+    ///
+    /// Per (b, a) at most **one** source can be admissible: the free pool
+    /// needs `y_free[b] == cq+1` while a cluster at dual `v ≤ −1` needs
+    /// `y_free[b] == cq+1−v > cq+1`, and no two live clusters share a
+    /// dual. So the cursor is just a demand-vertex index.
+    pub fn propose_one(&self, wi: usize, out: &mut [PlanItem]) -> (usize, bool) {
+        let b = self.worklist[wi] as usize;
+        let mut need = self.need[wi];
+        let yb = self.y_free[b];
+        let row = self.q.row(b);
+        let na = row.len();
+        let mut len = 0usize;
+        let mut a = self.cursor[wi] as usize;
+        while a < na {
+            if need == 0 || len == out.len() {
+                return (len, false);
+            }
+            let want = row[a] as i64 + 1 - yb as i64;
+            if want == 0 {
+                let cap = self.a_free[a];
+                if cap > 0 {
+                    let take = need.min(cap);
+                    out[len] = PlanItem { a: a as u32, slot: SLOT_FREE, units: take };
+                    len += 1;
+                    need -= take;
+                }
+            } else if want < 0 {
+                let base = a * SLOTS;
+                for s in 0..SLOTS {
+                    if self.cls_count[base + s] > 0 && self.cls_y[base + s] as i64 == want {
+                        let take = need.min(self.cls_count[base + s]);
+                        out[len] = PlanItem { a: a as u32, slot: s as u8, units: take };
+                        len += 1;
+                        need -= take;
+                        break;
+                    }
+                }
+            }
+            a += 1;
+        }
+        (len, need > 0)
+    }
+}
+
+/// Propose sequentially for a window of the active list: `plans` /
+/// `plan_len` / `exhausted` are the window's aligned output slices
+/// (`plans.len() == actives.len() * PLAN_WIDTH`). This is **the** sweep
+/// body — the scalar backend runs it over the full active list, the
+/// chunked backend over per-thread windows — so every backend stages
+/// identical proposals by construction.
+pub fn sequential_sweep(
+    view: &KernelView<'_>,
+    actives: &[u32],
+    plans: &mut [PlanItem],
+    plan_len: &mut [u8],
+    exhausted: &mut [bool],
+) {
+    for (i, &wi) in actives.iter().enumerate() {
+        let out = &mut plans[i * PLAN_WIDTH..(i + 1) * PLAN_WIDTH];
+        let (len, ex) = view.propose_one(wi as usize, out);
+        plan_len[i] = len as u8;
+        exhausted[i] = ex;
+    }
+}
+
+/// The flat arena. Construct once, [`KernelArena::init`] per instance —
+/// a same-shape re-init reuses every buffer and bumps `reuse_hits`.
+#[derive(Debug)]
+pub struct KernelArena {
+    pub q: QuantizedCosts,
+    nb: usize,
+    na: usize,
+    /// Free supply units per b.
+    b_free: Vec<u64>,
+    /// Dual of b's free copies (ε-units; all free copies share it).
+    y_free: Vec<i32>,
+    /// Free demand units per a (dual 0).
+    a_free: Vec<u64>,
+    /// Cluster slots, `SLOTS` per demand vertex: dual value, unit count,
+    /// and the head of the slot's partner edge list.
+    cls_y: Vec<i32>,
+    cls_count: Vec<u64>,
+    cls_head: Vec<u32>,
+    /// Pooled partner edges (supply vertex, units, next edge).
+    edge_b: Vec<u32>,
+    edge_units: Vec<u64>,
+    edge_next: Vec<u32>,
+    edge_free: u32,
+    /// Phase worklist: free b's at phase start, their remaining need and
+    /// scan cursor, index-aligned.
+    worklist: Vec<u32>,
+    need: Vec<u64>,
+    cursor: Vec<u32>,
+    /// Scratch reused across rounds (taken/restored around the borrow).
+    active: Vec<u32>,
+    next_active: Vec<u32>,
+    plans: Vec<PlanItem>,
+    plan_len: Vec<u8>,
+    plan_exhausted: Vec<bool>,
+    pending: Vec<Pending>,
+    // --- counters ---
+    pub total_supply_units: u64,
+    pub phases: usize,
+    pub rounds: usize,
+    pub total_free_processed: u64,
+    /// Largest number of distinct simultaneous dual values on any demand
+    /// vertex (Lemma 4.1 says ≤ 2).
+    pub max_classes_seen: usize,
+    /// Arena lifetime counters for the batch path.
+    pub inits: u64,
+    pub reuse_hits: u64,
+    pub last_init_reused: bool,
+}
+
+impl Default for KernelArena {
+    fn default() -> Self {
+        Self {
+            q: QuantizedCosts {
+                nb: 0,
+                na: 0,
+                cq: Vec::new(),
+                eps_abs: 1.0,
+                eps: 0.5,
+                c_max: 0.0,
+            },
+            nb: 0,
+            na: 0,
+            b_free: Vec::new(),
+            y_free: Vec::new(),
+            a_free: Vec::new(),
+            cls_y: Vec::new(),
+            cls_count: Vec::new(),
+            cls_head: Vec::new(),
+            edge_b: Vec::new(),
+            edge_units: Vec::new(),
+            edge_next: Vec::new(),
+            edge_free: NIL,
+            worklist: Vec::new(),
+            need: Vec::new(),
+            cursor: Vec::new(),
+            active: Vec::new(),
+            next_active: Vec::new(),
+            plans: Vec::new(),
+            plan_len: Vec::new(),
+            plan_exhausted: Vec::new(),
+            pending: Vec::new(),
+            total_supply_units: 0,
+            phases: 0,
+            rounds: 0,
+            total_free_processed: 0,
+            max_classes_seen: 0,
+            inits: 0,
+            reuse_hits: 0,
+            last_init_reused: false,
+        }
+    }
+}
+
+impl KernelArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Prepare the arena for a new instance, reusing every allocation.
+    /// `masses = None` means the assignment special case (one unit per
+    /// vertex on both sides); `Some((supply_units, demand_units))` is the
+    /// θ-scaled §4 transport instance.
+    pub fn init(&mut self, costs: &CostMatrix, eps: f64, masses: Option<(&[u64], &[u64])>) {
+        let reused = self.inits > 0 && self.nb == costs.nb && self.na == costs.na;
+        self.inits += 1;
+        if reused {
+            self.reuse_hits += 1;
+        }
+        self.last_init_reused = reused;
+        self.nb = costs.nb;
+        self.na = costs.na;
+        self.q.requantize(costs, eps);
+        self.b_free.clear();
+        self.a_free.clear();
+        match masses {
+            Some((supply, demand)) => {
+                assert_eq!(supply.len(), self.nb, "supply units / cost rows mismatch");
+                assert_eq!(demand.len(), self.na, "demand units / cost cols mismatch");
+                self.b_free.extend_from_slice(supply);
+                self.a_free.extend_from_slice(demand);
+            }
+            None => {
+                self.b_free.resize(self.nb, 1);
+                self.a_free.resize(self.na, 1);
+            }
+        }
+        self.y_free.clear();
+        self.y_free.resize(self.nb, 1); // paper init: y(b) = 1 unit, y(a) = 0
+        self.total_supply_units = self.b_free.iter().sum();
+        self.cls_y.clear();
+        self.cls_y.resize(SLOTS * self.na, 0);
+        self.cls_count.clear();
+        self.cls_count.resize(SLOTS * self.na, 0);
+        self.cls_head.clear();
+        self.cls_head.resize(SLOTS * self.na, NIL);
+        self.edge_b.clear();
+        self.edge_units.clear();
+        self.edge_next.clear();
+        self.edge_free = NIL;
+        self.worklist.clear();
+        self.need.clear();
+        self.cursor.clear();
+        self.active.clear();
+        self.next_active.clear();
+        self.plans.clear();
+        self.plan_len.clear();
+        self.plan_exhausted.clear();
+        self.pending.clear();
+        self.phases = 0;
+        self.rounds = 0;
+        self.total_free_processed = 0;
+        self.max_classes_seen = 0;
+    }
+
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+
+    pub fn na(&self) -> usize {
+        self.na
+    }
+
+    pub fn b_free(&self) -> &[u64] {
+        &self.b_free
+    }
+
+    pub fn a_free(&self) -> &[u64] {
+        &self.a_free
+    }
+
+    pub fn y_free(&self) -> &[i32] {
+        &self.y_free
+    }
+
+    /// Free supply units remaining.
+    pub fn free_units(&self) -> u64 {
+        self.b_free.iter().sum()
+    }
+
+    /// Phase-termination threshold: run only while free units > ε·U.
+    pub fn threshold(&self) -> u64 {
+        (self.q.eps * self.total_supply_units as f64).floor() as u64
+    }
+
+    /// One phase, with the propose sweep run by `sweep`. Backends pass
+    /// either an inline sequential sweep or a scoped-thread fan-out; both
+    /// receive the same view + scratch and must fill the same outputs
+    /// (see [`KernelView::propose_one`]), which is what makes every
+    /// backend result-identical.
+    pub fn run_phase<S>(&mut self, mut sweep: S) -> KernelPhase
+    where
+        S: FnMut(&KernelView<'_>, &[u32], &mut [PlanItem], &mut [u8], &mut [bool]),
+    {
+        let free_now = self.free_units();
+        if free_now <= self.threshold() {
+            return KernelPhase {
+                free_at_start: free_now,
+                matched_units: 0,
+                rounds: 0,
+                terminated: true,
+            };
+        }
+        self.phases += 1;
+        self.total_free_processed += free_now;
+
+        // Worklist: free b's at phase start; evicted units arriving during
+        // the phase join b_free but not this phase's budget.
+        self.worklist.clear();
+        self.need.clear();
+        self.cursor.clear();
+        for b in 0..self.nb {
+            if self.b_free[b] > 0 {
+                self.worklist.push(b as u32);
+                self.need.push(self.b_free[b]);
+                self.cursor.push(0);
+            }
+        }
+        self.pending.clear();
+
+        let mut active = std::mem::take(&mut self.active);
+        let mut next_active = std::mem::take(&mut self.next_active);
+        let mut plans = std::mem::take(&mut self.plans);
+        let mut plan_len = std::mem::take(&mut self.plan_len);
+        let mut exhausted = std::mem::take(&mut self.plan_exhausted);
+        active.clear();
+        active.extend(0..self.worklist.len() as u32);
+
+        let mut rounds = 0usize;
+        while !active.is_empty() {
+            rounds += 1;
+            plans.clear();
+            plans.resize(active.len() * PLAN_WIDTH, PlanItem::default());
+            plan_len.clear();
+            plan_len.resize(active.len(), 0);
+            exhausted.clear();
+            exhausted.resize(active.len(), false);
+
+            // --- propose: reads only the snapshot view ---
+            {
+                let view = KernelView {
+                    q: &self.q,
+                    y_free: &self.y_free,
+                    a_free: &self.a_free,
+                    cls_y: &self.cls_y,
+                    cls_count: &self.cls_count,
+                    worklist: &self.worklist,
+                    need: &self.need,
+                    cursor: &self.cursor,
+                };
+                sweep(&view, &active, &mut plans, &mut plan_len, &mut exhausted);
+            }
+
+            // --- accept: sequential, ascending b (worklist order) ---
+            next_active.clear();
+            for (i, &wi) in active.iter().enumerate() {
+                let plan = &plans[i * PLAN_WIDTH..i * PLAN_WIDTH + plan_len[i] as usize];
+                if self.accept_one(wi as usize, plan, exhausted[i]) {
+                    next_active.push(wi);
+                }
+            }
+            std::mem::swap(&mut active, &mut next_active);
+        }
+
+        self.active = active;
+        self.next_active = next_active;
+        self.plans = plans;
+        self.plan_len = plan_len;
+        self.plan_exhausted = exhausted;
+
+        // --- apply M': matched a-copies relabel down to y_pre − 1 ---
+        let matched_units: u64 = self.pending.iter().map(|p| p.units).sum();
+        let pending = std::mem::take(&mut self.pending);
+        for p in &pending {
+            let slot = self.slot_for(p.a as usize, p.y_pre - 1);
+            self.cls_count[slot] += p.units;
+            self.add_edge(slot, p.b, p.units);
+        }
+        self.pending = pending;
+
+        // --- relabel: b's whose budget wasn't fully matched move up ---
+        for wi in 0..self.worklist.len() {
+            if self.need[wi] > 0 {
+                let b = self.worklist[wi] as usize;
+                self.y_free[b] += 1;
+            }
+        }
+
+        self.rounds += rounds;
+        self.track_classes();
+        KernelPhase { free_at_start: free_now, matched_units, rounds, terminated: false }
+    }
+
+    /// Commit worklist entry `wi`'s staged plan against current
+    /// capacities. Returns true while the vertex stays active. Inside a
+    /// phase capacities only shrink, so when need survives the walk every
+    /// plan target is exhausted and the cursor can skip past them all.
+    fn accept_one(&mut self, wi: usize, plan: &[PlanItem], exhausted: bool) -> bool {
+        if plan.is_empty() {
+            // A non-exhausted propose always stages ≥ 1 item, so an empty
+            // plan means the row holds nothing for this vertex: deactivate.
+            return false;
+        }
+        let b = self.worklist[wi] as usize;
+        let budget_left = self.need[wi];
+        let mut need = budget_left;
+        let mut last_a: Option<usize> = None;
+        for item in plan {
+            if need == 0 {
+                break;
+            }
+            last_a = Some(item.a as usize);
+            if item.slot == SLOT_FREE {
+                let g = need.min(self.a_free[item.a as usize]);
+                if g > 0 {
+                    self.a_free[item.a as usize] -= g;
+                    self.pending.push(Pending { a: item.a, b: b as u32, units: g, y_pre: 0 });
+                    need -= g;
+                }
+            } else {
+                let idx = item.a as usize * SLOTS + item.slot as usize;
+                let g = need.min(self.cls_count[idx]);
+                if g > 0 {
+                    let y_pre = self.cls_y[idx];
+                    self.steal_from_slot(idx, g);
+                    self.pending.push(Pending { a: item.a, b: b as u32, units: g, y_pre });
+                    need -= g;
+                }
+            }
+        }
+        // Matched units leave b's free pool now, so eviction bookkeeping
+        // stays exact (b_free may also grow through evictions).
+        self.b_free[b] -= budget_left - need;
+        self.need[wi] = need;
+        if need == 0 {
+            return false; // fully matched
+        }
+        if let Some(a) = last_a {
+            self.cursor[wi] = (a + 1) as u32;
+        }
+        !exhausted
+    }
+
+    /// Remove `take` matched units from a cluster slot, evicting their
+    /// supply partners back into `b_free` (raised to `y_free[b]`, the
+    /// free-copies-at-max invariant).
+    fn steal_from_slot(&mut self, idx: usize, mut take: u64) {
+        debug_assert!(self.cls_count[idx] >= take);
+        self.cls_count[idx] -= take;
+        let mut prev = NIL;
+        let mut e = self.cls_head[idx];
+        while e != NIL && take > 0 {
+            let k = take.min(self.edge_units[e as usize]);
+            self.edge_units[e as usize] -= k;
+            take -= k;
+            // evicted copies of the old partner become free again (raised
+            // to its y_free — the max-dual invariant)
+            let b_old = self.edge_b[e as usize] as usize;
+            self.b_free[b_old] += k;
+            let next = self.edge_next[e as usize];
+            if self.edge_units[e as usize] == 0 {
+                // unlink + recycle
+                if prev == NIL {
+                    self.cls_head[idx] = next;
+                } else {
+                    self.edge_next[prev as usize] = next;
+                }
+                self.edge_next[e as usize] = self.edge_free;
+                self.edge_free = e;
+            } else {
+                prev = e;
+            }
+            e = next;
+        }
+        debug_assert_eq!(take, 0, "cluster flow accounting out of sync");
+    }
+
+    /// Find the live slot of `a` at dual `y`, or claim an empty one.
+    fn slot_for(&mut self, a: usize, y: i32) -> usize {
+        let base = a * SLOTS;
+        let mut empty = None;
+        for s in 0..SLOTS {
+            if self.cls_count[base + s] > 0 {
+                if self.cls_y[base + s] == y {
+                    return base + s;
+                }
+            } else if empty.is_none() {
+                empty = Some(base + s);
+            }
+        }
+        let slot = empty.unwrap_or_else(|| {
+            panic!("cluster slots exhausted at a={a}: >{SLOTS} distinct dual values (Lemma 4.1 violated)")
+        });
+        debug_assert_eq!(self.cls_head[slot], NIL, "reused slot with stale edges");
+        self.cls_y[slot] = y;
+        slot
+    }
+
+    /// Add `units` of flow (slot → b), merging into an existing partner
+    /// edge when present.
+    fn add_edge(&mut self, slot: usize, b: u32, units: u64) {
+        let mut e = self.cls_head[slot];
+        while e != NIL {
+            if self.edge_b[e as usize] == b {
+                self.edge_units[e as usize] += units;
+                return;
+            }
+            e = self.edge_next[e as usize];
+        }
+        let e = if self.edge_free != NIL {
+            let e = self.edge_free;
+            self.edge_free = self.edge_next[e as usize];
+            self.edge_b[e as usize] = b;
+            self.edge_units[e as usize] = units;
+            self.edge_next[e as usize] = self.cls_head[slot];
+            e
+        } else {
+            let e = self.edge_b.len() as u32;
+            self.edge_b.push(b);
+            self.edge_units.push(units);
+            self.edge_next.push(self.cls_head[slot]);
+            e
+        };
+        self.cls_head[slot] = e;
+    }
+
+    /// Update `max_classes_seen` (distinct dual values per demand vertex;
+    /// Lemma 4.1 bounds it by 2).
+    fn track_classes(&mut self) {
+        for a in 0..self.na {
+            let base = a * SLOTS;
+            let live = (0..SLOTS).filter(|&s| self.cls_count[base + s] > 0).count();
+            let distinct = live + usize::from(self.a_free[a] > 0);
+            if distinct > self.max_classes_seen {
+                self.max_classes_seen = distinct;
+            }
+            debug_assert!(
+                live <= 2,
+                "Lemma 4.1 violated at a={a}: {live} matched clusters"
+            );
+        }
+    }
+
+    /// Export one ε-unit dual per *original* vertex for certification:
+    /// the maximum dual among a vertex's conceptual copies. For supply b
+    /// that is `y_free[b]`; for demand a it is 0 while free copies
+    /// remain, else the largest cluster dual; a zero-mass demand vertex
+    /// gets the largest edge-feasible value clamped to the sign
+    /// invariant, so the exported vector stays checkable.
+    pub fn export_duals(&self) -> DualWeights {
+        let ya = (0..self.na)
+            .map(|a| {
+                if self.a_free[a] > 0 {
+                    return 0;
+                }
+                let base = a * SLOTS;
+                let live_max = (0..SLOTS)
+                    .filter(|&s| self.cls_count[base + s] > 0)
+                    .map(|s| self.cls_y[base + s])
+                    .max();
+                match live_max {
+                    Some(y) => y,
+                    None => (0..self.nb)
+                        .map(|b| self.q.at(b, a) + 1 - self.y_free[b])
+                        .min()
+                        .unwrap_or(0)
+                        .min(0),
+                }
+            })
+            .collect();
+        DualWeights { ya, yb: self.y_free.clone() }
+    }
+
+    /// Extract the unit flow as a dense (b, a) matrix.
+    pub fn unit_flow(&self) -> Vec<u64> {
+        let mut flow = vec![0u64; self.nb * self.na];
+        for a in 0..self.na {
+            let base = a * SLOTS;
+            for s in 0..SLOTS {
+                if self.cls_count[base + s] == 0 {
+                    continue;
+                }
+                let mut e = self.cls_head[base + s];
+                while e != NIL {
+                    flow[self.edge_b[e as usize] as usize * self.na + a] +=
+                        self.edge_units[e as usize];
+                    e = self.edge_next[e as usize];
+                }
+            }
+        }
+        flow
+    }
+
+    /// Extract the matching (unit-mass instances: every vertex carries
+    /// one unit, so each live edge is one matched pair).
+    pub fn extract_matching(&self) -> Matching {
+        let mut m = Matching::empty(self.nb, self.na);
+        for a in 0..self.na {
+            let base = a * SLOTS;
+            for s in 0..SLOTS {
+                if self.cls_count[base + s] == 0 {
+                    continue;
+                }
+                let mut e = self.cls_head[base + s];
+                while e != NIL {
+                    debug_assert_eq!(
+                        self.edge_units[e as usize], 1,
+                        "extract_matching on a multi-unit instance"
+                    );
+                    m.link(self.edge_b[e as usize] as usize, a);
+                    e = self.edge_next[e as usize];
+                }
+            }
+        }
+        m
+    }
+
+    /// Structural feasibility of the cluster state: counts consistent,
+    /// dual signs, ε-feasibility (2)/(3) of every cluster pair, and the
+    /// free-copies-at-max invariant. O(n²) — tests and paranoid mode.
+    pub fn check_invariants(&self) -> std::result::Result<(), String> {
+        for b in 0..self.nb {
+            if self.y_free[b] < 0 {
+                return Err(format!("y_free[{b}] = {} < 0", self.y_free[b]));
+            }
+        }
+        for a in 0..self.na {
+            let base = a * SLOTS;
+            let live = (0..SLOTS).filter(|&s| self.cls_count[base + s] > 0).count();
+            if live > 2 {
+                return Err(format!("Lemma 4.1 violated at a={a}: {live} matched clusters"));
+            }
+            for s in 0..SLOTS {
+                let idx = base + s;
+                if self.cls_count[idx] == 0 {
+                    if self.cls_head[idx] != NIL {
+                        return Err(format!("empty slot with live edges at a={a}"));
+                    }
+                    continue;
+                }
+                if self.cls_y[idx] > 0 {
+                    return Err(format!("matched cluster at a={a} has positive dual"));
+                }
+                let mut total = 0u64;
+                let mut e = self.cls_head[idx];
+                while e != NIL {
+                    total += self.edge_units[e as usize];
+                    // (3) for matched copies: implicit b-copy dual
+                    // cq − y_cls must not exceed y_free[b] (free copies
+                    // sit at the max).
+                    let b = self.edge_b[e as usize] as usize;
+                    let implied_yb = self.q.at(b, a) - self.cls_y[idx];
+                    if implied_yb > self.y_free[b] {
+                        return Err(format!(
+                            "max-dual invariant violated: b={b} matched copy dual {implied_yb} > y_free {}",
+                            self.y_free[b]
+                        ));
+                    }
+                    e = self.edge_next[e as usize];
+                }
+                if total != self.cls_count[idx] {
+                    return Err(format!(
+                        "cluster count mismatch at a={a}: edges {total} != count {}",
+                        self.cls_count[idx]
+                    ));
+                }
+            }
+            // (2) for free b copies against free a copies (dual 0) and
+            // against matched clusters.
+            for b in 0..self.nb {
+                let cq1 = self.q.at(b, a) + 1;
+                if self.a_free[a] > 0 && self.b_free[b] > 0 && self.y_free[b] > cq1 {
+                    return Err(format!(
+                        "(2) violated free-free at (b={b},a={a}): y_free {} > cq+1 {cq1}",
+                        self.y_free[b]
+                    ));
+                }
+                if self.b_free[b] > 0 {
+                    for s in 0..SLOTS {
+                        if self.cls_count[base + s] > 0
+                            && self.cls_y[base + s] + self.y_free[b] > cq1
+                        {
+                            return Err(format!(
+                                "(2) violated free-b vs cluster at (b={b},a={a},y={})",
+                                self.cls_y[base + s]
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,68 @@
+//! Chunked flow-kernel backend: the per-phase propose sweep fans out
+//! over scoped threads in contiguous chunks of the active worklist —
+//! the `parallel_pr` thread-sweep generalized to the OT cluster state.
+//!
+//! Proposals read only the round snapshot and the accept pass stays
+//! sequential in ascending vertex order, so the result is identical to
+//! [`crate::core::kernel::ScalarKernel`] for every thread count; only
+//! wall-clock changes. §3.2's O(log n) expected round bound applies
+//! unchanged (ablation A2 measures it).
+
+use crate::core::kernel::arena::{sequential_sweep, KernelArena, KernelPhase, PLAN_WIDTH};
+use crate::core::kernel::FlowKernel;
+
+#[derive(Debug)]
+pub struct ChunkedKernel {
+    arena: KernelArena,
+    threads: usize,
+}
+
+impl ChunkedKernel {
+    pub fn new(threads: usize) -> Self {
+        Self { arena: KernelArena::new(), threads: threads.max(1) }
+    }
+}
+
+impl FlowKernel for ChunkedKernel {
+    fn name(&self) -> &'static str {
+        "kernel-chunked"
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn arena(&self) -> &KernelArena {
+        &self.arena
+    }
+
+    fn arena_mut(&mut self) -> &mut KernelArena {
+        &mut self.arena
+    }
+
+    fn run_phase(&mut self) -> KernelPhase {
+        let threads = self.threads;
+        self.arena.run_phase(|view, active, plans, plan_len, exhausted| {
+            let n = active.len();
+            let workers = threads.min(n.max(1));
+            if workers <= 1 {
+                sequential_sweep(view, active, plans, plan_len, exhausted);
+                return;
+            }
+            let chunk = n.div_ceil(workers);
+            std::thread::scope(|s| {
+                // chunks/chunks_mut yield disjoint windows, so each worker
+                // owns its slice of the plan buffers and runs the one
+                // shared sweep body over it
+                for (((acts, pl), ll), el) in active
+                    .chunks(chunk)
+                    .zip(plans.chunks_mut(chunk * PLAN_WIDTH))
+                    .zip(plan_len.chunks_mut(chunk))
+                    .zip(exhausted.chunks_mut(chunk))
+                {
+                    s.spawn(move || sequential_sweep(view, acts, pl, ll, el));
+                }
+            });
+        })
+    }
+}

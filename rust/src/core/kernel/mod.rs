@@ -1,0 +1,189 @@
+//! The shared flow kernel behind every push-relabel engine.
+//!
+//! The paper's framework (§2–§4) is one algorithm instantiated three
+//! ways; this module is the one tuned implementation all three drivers
+//! (`solvers/push_relabel`, `solvers/parallel_pr`,
+//! `solvers/ot_push_relabel`) sit on, and the layer any future backend
+//! (SIMD, GPU) plugs into:
+//!
+//! * [`KernelArena`] — the flat SoA state (quantized costs, duals,
+//!   residual units, fixed-width cluster slots, pooled flow edges,
+//!   contiguous worklists) with allocation reuse across `init` calls;
+//! * [`FlowKernel`] — the backend contract: `init` / `run_phase` /
+//!   `duals` / `extract_matching` / `unit_flow`;
+//! * [`ScalarKernel`] — sequential propose sweep;
+//! * [`ChunkedKernel`] — the same sweep fanned out over scoped threads.
+//!
+//! **Backend equivalence is a hard contract**: a phase proposes against a
+//! stable snapshot and commits sequentially in ascending vertex order,
+//! so scalar and chunked produce *identical* matchings, plans, duals,
+//! and round counts at every thread count
+//! (`tests/conformance_golden.rs` pins this on the golden corpus).
+//!
+//! Drivers own policy — ε semantics, θ-scaling, phase caps, completion —
+//! while invariant checks live here ([`KernelArena::check_invariants`],
+//! plus `debug_assertions` on the phase loop) so `certify` keeps working
+//! against any backend unchanged.
+
+pub mod arena;
+pub mod chunked;
+pub mod scalar;
+
+pub use arena::{KernelArena, KernelPhase, KernelView, PlanItem, PLAN_WIDTH, SLOTS, SLOT_FREE};
+pub use chunked::ChunkedKernel;
+pub use scalar::ScalarKernel;
+
+use crate::core::cost::CostMatrix;
+use crate::core::duals::DualWeights;
+use crate::core::matching::Matching;
+
+/// One flow-kernel backend: owns an arena and decides how the per-phase
+/// propose sweep executes. Everything else — state layout, accept order,
+/// relabels, extraction — is shared arena code, which is what guarantees
+/// backend-identical results.
+pub trait FlowKernel: Send {
+    /// Backend name (for notes/metrics).
+    fn name(&self) -> &'static str;
+
+    /// Worker threads the sweep uses (1 for the scalar backend).
+    fn threads(&self) -> usize {
+        1
+    }
+
+    fn arena(&self) -> &KernelArena;
+
+    fn arena_mut(&mut self) -> &mut KernelArena;
+
+    /// Prepare for a new instance (reusing the arena's allocations).
+    /// `masses = None` is the unit-mass assignment case.
+    fn init(&mut self, costs: &CostMatrix, eps: f64, masses: Option<(&[u64], &[u64])>) {
+        self.arena_mut().init(costs, eps, masses);
+    }
+
+    /// Run one phase; `terminated` means the ε-threshold held.
+    fn run_phase(&mut self) -> KernelPhase;
+
+    /// Run phases until termination or `phase_cap` is exceeded (the cap
+    /// bounds are Lemma 3.2/3.3; exceeding one is a bug, not slowness).
+    fn run_to_termination(&mut self, phase_cap: usize) -> std::result::Result<(), String> {
+        loop {
+            if self.run_phase().terminated {
+                return Ok(());
+            }
+            if self.arena().phases > phase_cap {
+                return Err(format!(
+                    "phase cap {phase_cap} exceeded — phase-count bound violated (bug)"
+                ));
+            }
+        }
+    }
+
+    /// Exported ε-unit duals (max copy dual per vertex).
+    fn duals(&self) -> DualWeights {
+        self.arena().export_duals()
+    }
+
+    /// Extract the matching (unit-mass instances only).
+    fn extract_matching(&self) -> Matching {
+        self.arena().extract_matching()
+    }
+
+    /// Extract the unit flow as a dense (b, a) matrix.
+    fn unit_flow(&self) -> Vec<u64> {
+        self.arena().unit_flow()
+    }
+
+    /// O(n²) structural invariant check (tests / paranoid mode).
+    fn check_invariants(&self) -> std::result::Result<(), String> {
+        self.arena().check_invariants()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CostMatrix;
+    use crate::util::rng::Pcg32;
+
+    fn random_costs(n: usize, seed: u64) -> CostMatrix {
+        let mut rng = Pcg32::new(seed);
+        CostMatrix::from_fn(n, n, |_, _| rng.next_f32())
+    }
+
+    #[test]
+    fn scalar_terminates_and_extracts_consistent_matching() {
+        let costs = random_costs(24, 1);
+        let mut k = ScalarKernel::new();
+        k.init(&costs, 0.15, None);
+        k.run_to_termination(10_000).unwrap();
+        k.check_invariants().unwrap();
+        let m = k.extract_matching();
+        m.check_consistent().unwrap();
+        // ≤ ε·n free vertices remain
+        assert!(k.arena().free_units() <= k.arena().threshold());
+        // duals export with the paper's sign invariants
+        let y = k.duals();
+        assert!(y.yb.iter().all(|&v| v >= 0));
+        assert!(y.ya.iter().all(|&v| v <= 0));
+    }
+
+    #[test]
+    fn scalar_and_chunked_are_result_identical() {
+        for seed in 0..4u64 {
+            let costs = random_costs(20, seed);
+            let mut ks = ScalarKernel::new();
+            ks.init(&costs, 0.2, None);
+            ks.run_to_termination(10_000).unwrap();
+            for threads in [1usize, 2, 5] {
+                let mut kc = ChunkedKernel::new(threads);
+                kc.init(&costs, 0.2, None);
+                kc.run_to_termination(10_000).unwrap();
+                assert_eq!(ks.extract_matching(), kc.extract_matching(), "seed {seed} t{threads}");
+                assert_eq!(ks.duals(), kc.duals(), "seed {seed} t{threads}");
+                assert_eq!(ks.arena().rounds, kc.arena().rounds);
+                assert_eq!(ks.arena().phases, kc.arena().phases);
+            }
+        }
+    }
+
+    #[test]
+    fn ot_masses_flow_conserved() {
+        let costs = random_costs(10, 7);
+        let supply: Vec<u64> = (0..10).map(|b| 3 + (b % 4) as u64).collect();
+        let demand: Vec<u64> = (0..10).map(|a| 5 + (a % 3) as u64).collect();
+        // total demand ≥ total supply so the transport is feasible
+        assert!(demand.iter().sum::<u64>() >= supply.iter().sum::<u64>());
+        let mut k = ScalarKernel::new();
+        k.init(&costs, 0.1, Some((&supply[..], &demand[..])));
+        k.run_to_termination(100_000).unwrap();
+        k.check_invariants().unwrap();
+        let flow = k.unit_flow();
+        // matched + free units account for all supply, per vertex
+        for b in 0..10 {
+            let shipped: u64 = (0..10).map(|a| flow[b * 10 + a]).sum();
+            assert_eq!(shipped + k.arena().b_free()[b], supply[b], "b={b}");
+        }
+        // no demand vertex over capacity
+        for a in 0..10 {
+            let got: u64 = (0..10).map(|b| flow[b * 10 + a]).sum();
+            assert!(got + k.arena().a_free()[a] == demand[a], "a={a}");
+        }
+        assert!(k.arena().max_classes_seen <= 2, "Lemma 4.1");
+    }
+
+    #[test]
+    fn arena_reuse_counts_same_shape_inits() {
+        let mut k = ScalarKernel::new();
+        k.init(&random_costs(8, 1), 0.2, None);
+        assert!(!k.arena().last_init_reused);
+        k.init(&random_costs(8, 2), 0.2, None);
+        assert!(k.arena().last_init_reused);
+        k.init(&random_costs(9, 3), 0.2, None);
+        assert!(!k.arena().last_init_reused, "shape change is not a reuse");
+        assert_eq!(k.arena().reuse_hits, 1);
+        assert_eq!(k.arena().inits, 3);
+        // the re-inited arena still solves correctly
+        k.run_to_termination(10_000).unwrap();
+        k.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! Sequential flow-kernel backend: the propose sweep runs inline on the
+//! calling thread. This is the reference semantics every other backend
+//! must reproduce bit-for-bit (see the module docs of
+//! [`crate::core::kernel`]).
+
+use crate::core::kernel::arena::{sequential_sweep, KernelArena, KernelPhase};
+use crate::core::kernel::FlowKernel;
+
+#[derive(Debug, Default)]
+pub struct ScalarKernel {
+    arena: KernelArena,
+}
+
+impl ScalarKernel {
+    pub fn new() -> Self {
+        Self { arena: KernelArena::new() }
+    }
+}
+
+impl FlowKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "kernel-scalar"
+    }
+
+    fn arena(&self) -> &KernelArena {
+        &self.arena
+    }
+
+    fn arena_mut(&mut self) -> &mut KernelArena {
+        &mut self.arena
+    }
+
+    fn run_phase(&mut self) -> KernelPhase {
+        self.arena.run_phase(sequential_sweep)
+    }
+}

@@ -20,6 +20,15 @@ impl Matching {
         Self { match_b: vec![FREE; nb], match_a: vec![FREE; na] }
     }
 
+    /// An arbitrary complete matching (index order) — the answer shape
+    /// every layer returns for a solve stopped at phase 0, defined once
+    /// (see `api::adapter` and the kernel drivers).
+    pub fn arbitrary_complete(nb: usize, na: usize) -> Self {
+        let mut m = Self::empty(nb, na);
+        m.complete_arbitrarily();
+        m
+    }
+
     pub fn nb(&self) -> usize {
         self.match_b.len()
     }

@@ -8,11 +8,13 @@ pub mod cost;
 pub mod duals;
 pub mod error;
 pub mod instance;
+pub mod kernel;
 pub mod matching;
 pub mod quantize;
 pub mod transport;
 
 pub use certify::{certify, Certificate};
+pub use kernel::{ChunkedKernel, FlowKernel, KernelArena, KernelPhase, ScalarKernel};
 pub use control::{CancelToken, Progress, ProgressFn, SolveControl, CANCELLED_NOTE};
 pub use cost::CostMatrix;
 pub use duals::DualWeights;

@@ -33,21 +33,31 @@ pub struct QuantizedCosts {
 impl QuantizedCosts {
     /// Quantize `costs` at relative precision `eps` ∈ (0, 1).
     pub fn new(costs: &CostMatrix, eps: f64) -> Self {
+        let mut q = Self { nb: 0, na: 0, cq: Vec::new(), eps_abs: 1.0, eps, c_max: 0.0 };
+        q.requantize(costs, eps);
+        q
+    }
+
+    /// Re-quantize in place, reusing the existing `cq` allocation — the
+    /// [`crate::core::kernel::KernelArena`] reuse path for batched solves
+    /// over same-shape instances.
+    pub fn requantize(&mut self, costs: &CostMatrix, eps: f64) {
         assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1), got {eps}");
         let c_max = costs.max() as f64;
         // All-zero costs: any plan is optimal; pick eps_abs=1 so cq is all 0.
         let eps_abs = if c_max > 0.0 { eps * c_max } else { 1.0 };
         let inv = 1.0 / eps_abs;
-        let cq = costs
-            .as_slice()
-            .iter()
-            .map(|&c| {
-                let q = (c as f64 * inv).floor();
-                debug_assert!(q >= 0.0 && q <= i32::MAX as f64);
-                q as i32
-            })
-            .collect();
-        Self { nb: costs.nb, na: costs.na, cq, eps_abs, eps, c_max }
+        self.cq.clear();
+        self.cq.extend(costs.as_slice().iter().map(|&c| {
+            let q = (c as f64 * inv).floor();
+            debug_assert!(q >= 0.0 && q <= i32::MAX as f64);
+            q as i32
+        }));
+        self.nb = costs.nb;
+        self.na = costs.na;
+        self.eps_abs = eps_abs;
+        self.eps = eps;
+        self.c_max = c_max;
     }
 
     #[inline]
@@ -129,5 +139,19 @@ mod tests {
     fn rejects_bad_eps() {
         let c = CostMatrix::zeros(1, 1);
         let _ = QuantizedCosts::new(&c, 1.5);
+    }
+
+    #[test]
+    fn requantize_reuses_allocation_and_matches_new() {
+        let c1 = CostMatrix::from_vec(1, 4, vec![0.0, 0.09, 0.11, 1.0]).unwrap();
+        let c2 = CostMatrix::from_vec(1, 3, vec![0.0, 9.0, 20.0]).unwrap();
+        let mut q = QuantizedCosts::new(&c1, 0.1);
+        let cap = q.cq.capacity();
+        q.requantize(&c2, 0.5);
+        assert_eq!(q.cq, QuantizedCosts::new(&c2, 0.5).cq);
+        assert!((q.eps_abs - 10.0).abs() < 1e-9);
+        assert!(q.cq.capacity() >= 3 && cap >= 3, "allocation reused, not shrunk");
+        q.requantize(&c1, 0.1);
+        assert_eq!(q.row(0), QuantizedCosts::new(&c1, 0.1).row(0));
     }
 }

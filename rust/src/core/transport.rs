@@ -14,6 +14,21 @@ impl TransportPlan {
         Self { nb, na, flow: vec![0.0; nb * na] }
     }
 
+    /// The product coupling ν⊗μ — always feasible for probability
+    /// marginals. The one plan every layer returns for a solve stopped
+    /// at phase 0 (see `api::adapter` and the kernel drivers), so the
+    /// cancelled-answer shape is defined in exactly one place.
+    pub fn product(supply: &[f64], demand: &[f64]) -> Self {
+        let (nb, na) = (supply.len(), demand.len());
+        let mut plan = Self::zeros(nb, na);
+        for (b, &s) in supply.iter().enumerate() {
+            for (a, &d) in demand.iter().enumerate() {
+                plan.set(b, a, s * d);
+            }
+        }
+        plan
+    }
+
     #[inline]
     pub fn at(&self, b: usize, a: usize) -> f64 {
         self.flow[b * self.na + a]

@@ -13,15 +13,16 @@
 //!
 //! Whole-solve measurements go through the [`SolverRegistry`] (raw-ε
 //! requests, like the paper's plots); phase-level instrumentation (A2, A4)
-//! drives the solver state machines directly since it measures quantities
-//! below the solve API.
+//! drives the shared flow kernel ([`crate::core::kernel`]) directly since
+//! it measures quantities below the solve API.
 
 use crate::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel};
 use crate::core::ScaledOtInstance;
 use crate::data::workloads::Workload;
 use crate::exp::report::Series;
-use crate::solvers::ot_push_relabel::OtPrState;
-use crate::solvers::parallel_pr::ParallelPrState;
+use crate::solvers::ot_push_relabel::ot_phase_cap;
+use crate::solvers::push_relabel::assignment_phase_cap;
 use crate::util::stats::power_fit;
 
 /// A1: phases and total work vs ε at fixed n.
@@ -44,15 +45,16 @@ pub fn phases_vs_eps(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
     vec![measured, bound, work]
 }
 
-/// A2: mean propose–accept rounds per phase vs n (state-level).
+/// A2: mean propose–accept rounds per phase vs n (kernel-level).
 pub fn rounds_vs_n(sizes: &[usize], eps: f64, seed: u64) -> Vec<Series> {
     let mut rounds = Series::new("rounds/phase");
     let mut log2n = Series::new("log2(n)");
     for &n in sizes {
         let inst = Workload::Fig1 { n }.assignment(seed);
-        let mut st = ParallelPrState::new(&inst.costs, eps, 4);
-        while st.run_phase().is_some() {}
-        let per_phase = st.rounds as f64 / st.phases.max(1) as f64;
+        let mut k = ChunkedKernel::new(4);
+        k.init(&inst.costs, eps, None);
+        k.run_to_termination(assignment_phase_cap(eps)).expect("terminate");
+        let per_phase = k.arena().rounds as f64 / k.arena().phases.max(1) as f64;
         rounds.push(n as f64, per_phase);
         log2n.push(n as f64, (n as f64).log2());
     }
@@ -104,15 +106,20 @@ pub fn ot_accuracy(n: usize, eps_grid: &[f64], seed: u64) -> Vec<Series> {
 }
 
 /// A4: observed max dual clusters per vertex (Lemma 4.1 says ≤ 2;
-/// state-level).
+/// kernel-level).
 pub fn clusters(sizes: &[usize], eps: f64, seed: u64) -> Vec<Series> {
     let mut s = Series::new("max clusters (bound = 2)");
     for &n in sizes {
         let inst = Workload::Fig1 { n }.ot_with_random_masses(seed);
         let scaled = ScaledOtInstance::build(&inst, eps);
-        let mut st = OtPrState::new(&inst.costs, &scaled, eps / 6.0);
-        st.run_to_termination().expect("terminate");
-        s.push(n as f64, st.max_classes_seen as f64);
+        let mut k = ScalarKernel::new();
+        k.init(
+            &inst.costs,
+            eps / 6.0,
+            Some((&scaled.supply_units[..], &scaled.demand_units[..])),
+        );
+        k.run_to_termination(ot_phase_cap(eps / 6.0)).expect("terminate");
+        s.push(n as f64, k.arena().max_classes_seen as f64);
     }
     vec![s]
 }

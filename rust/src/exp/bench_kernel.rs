@@ -1,0 +1,225 @@
+//! `otpr bench`: the fig1-style kernel timing sweep over
+//! {engines} × {n} × {ε}, emitting a machine-readable `BENCH_kernel.json`
+//! so the perf trajectory of the flow kernel is recorded run-over-run
+//! (nightly CI uploads it as an artifact next to the gap histogram).
+//!
+//! Every cell times whole solves through the [`SolverRegistry`] with
+//! raw-ε requests (the paper's parameterization) and reports robust
+//! per-solve statistics plus the kernel's own counters (phases, rounds,
+//! Σ|B'|), so a regression can be attributed to more work vs slower
+//! work.
+
+use crate::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use crate::data::workloads::Workload;
+use crate::util::minijson::{obj, Json};
+use crate::util::stats::Summary;
+use crate::util::timer::Stopwatch;
+
+#[derive(Debug, Clone)]
+pub struct BenchKernelConfig {
+    /// Registry keys or aliases to sweep.
+    pub engines: Vec<String>,
+    pub sizes: Vec<usize>,
+    /// Raw algorithm-parameter ε values.
+    pub eps: Vec<f64>,
+    /// Timed repetitions per cell.
+    pub reps: usize,
+    pub seed: u64,
+}
+
+impl Default for BenchKernelConfig {
+    fn default() -> Self {
+        Self {
+            engines: vec!["native-seq".into(), "native-parallel".into()],
+            sizes: vec![200, 400, 800],
+            eps: vec![0.1, 0.05],
+            reps: 3,
+            seed: 42,
+        }
+    }
+}
+
+impl BenchKernelConfig {
+    /// The `--smoke` grid: small enough for CI, still covering both
+    /// kernel backends.
+    pub fn smoke() -> Self {
+        Self {
+            sizes: vec![64, 128],
+            eps: vec![0.2],
+            reps: 1,
+            ..Self::default()
+        }
+    }
+}
+
+/// One measured (engine, n, ε) cell.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub engine: String,
+    pub n: usize,
+    pub eps: f64,
+    /// Robust stats over per-solve wall clock (seconds).
+    pub secs: Summary,
+    /// Completed timed solves (0 for an error cell).
+    pub samples: usize,
+    /// Nanoseconds per solve (mean) — the headline ns/op number.
+    pub ns_per_op: f64,
+    pub phases: usize,
+    pub rounds: usize,
+    pub total_free_processed: u64,
+    /// Error string when the cell could not run (engine unavailable).
+    pub error: Option<String>,
+}
+
+/// Run the sweep. Cells that cannot run (e.g. XLA without artifacts)
+/// report an error record rather than disappearing.
+pub fn run(cfg: &BenchKernelConfig) -> Vec<BenchRecord> {
+    let solvers = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let mut out = Vec::new();
+    for engine in &cfg.engines {
+        for &n in &cfg.sizes {
+            let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(cfg.seed));
+            for &eps in &cfg.eps {
+                let req = SolveRequest::new(eps).raw_eps();
+                let mut times = Vec::with_capacity(cfg.reps);
+                let mut phases = 0;
+                let mut rounds = 0;
+                let mut free = 0;
+                let mut error = None;
+                for _ in 0..cfg.reps.max(1) {
+                    let sw = Stopwatch::start();
+                    match solvers.solve(engine, &config, &problem, &req) {
+                        Ok(sol) => {
+                            times.push(sw.elapsed_secs());
+                            phases = sol.stats.phases;
+                            rounds = sol.stats.rounds;
+                            free = sol.stats.total_free_processed;
+                        }
+                        Err(e) => {
+                            error = Some(e.to_string());
+                            break;
+                        }
+                    }
+                }
+                let samples = times.len();
+                let secs = if times.is_empty() { Summary::of(&[f64::NAN]) } else { Summary::of(&times) };
+                let ns_per_op = if times.is_empty() { f64::NAN } else { secs.mean * 1e9 };
+                out.push(BenchRecord {
+                    engine: engine.clone(),
+                    n,
+                    eps,
+                    secs,
+                    samples,
+                    ns_per_op,
+                    phases,
+                    rounds,
+                    total_free_processed: free,
+                    error,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The `BENCH_kernel.json` document.
+pub fn to_json(cfg: &BenchKernelConfig, records: &[BenchRecord]) -> Json {
+    // non-finite (error cells) → null, so the artifact stays valid JSON
+    let num = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+    let recs = records
+        .iter()
+        .map(|r| {
+            let mut fields = vec![
+                ("engine", Json::Str(r.engine.clone())),
+                ("n", Json::Num(r.n as f64)),
+                ("eps", Json::Num(r.eps)),
+                ("ns_per_op", num(r.ns_per_op)),
+                ("mean_s", num(r.secs.mean)),
+                ("median_s", num(r.secs.median)),
+                ("stddev_s", num(r.secs.stddev)),
+                ("samples", Json::Num(r.samples as f64)),
+                ("phases", Json::Num(r.phases as f64)),
+                ("rounds", Json::Num(r.rounds as f64)),
+                ("total_free_processed", Json::Num(r.total_free_processed as f64)),
+            ];
+            if let Some(e) = &r.error {
+                fields.push(("error", Json::Str(e.clone())));
+            }
+            obj(fields)
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str("otpr-bench-kernel/1".into())),
+        ("reps", Json::Num(cfg.reps as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("records", Json::Arr(recs)),
+    ])
+}
+
+/// Fixed-width table for CLI output.
+pub fn table(records: &[BenchRecord]) -> String {
+    let mut out =
+        String::from("engine           n      eps    ns/op           phases  rounds\n");
+    for r in records {
+        match &r.error {
+            Some(e) => out.push_str(&format!(
+                "{:<16} {:<6} {:<6} unavailable: {e}\n",
+                r.engine, r.n, r.eps
+            )),
+            None => out.push_str(&format!(
+                "{:<16} {:<6} {:<6} {:<15.0} {:<7} {}\n",
+                r.engine, r.n, r.eps, r.ns_per_op, r.phases, r.rounds
+            )),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_sweep_produces_valid_json() {
+        let cfg = BenchKernelConfig {
+            engines: vec!["native-seq".into(), "native-parallel".into()],
+            sizes: vec![24],
+            eps: vec![0.3],
+            reps: 1,
+            seed: 1,
+        };
+        let records = run(&cfg);
+        assert_eq!(records.len(), 2);
+        for r in &records {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.ns_per_op > 0.0);
+            assert!(r.phases > 0);
+        }
+        let json = to_json(&cfg, &records).to_string();
+        let parsed = Json::parse(&json).expect("valid JSON");
+        assert_eq!(
+            parsed.get("records").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        assert!(table(&records).contains("native-seq"));
+    }
+
+    #[test]
+    fn unavailable_engine_reports_error_record() {
+        let cfg = BenchKernelConfig {
+            engines: vec!["xla".into()],
+            sizes: vec![16],
+            eps: vec![0.3],
+            reps: 1,
+            seed: 1,
+        };
+        let records = run(&cfg);
+        assert_eq!(records.len(), 1);
+        assert!(records[0].error.is_some(), "no runtime loaded here");
+        assert_eq!(records[0].samples, 0, "error cells report zero completed solves");
+        assert!(table(&records).contains("unavailable"));
+        // error cells still serialize to valid JSON (NaN → null)
+        assert!(Json::parse(&to_json(&cfg, &records).to_string()).is_ok());
+    }
+}

@@ -5,6 +5,7 @@
 //!   ot        solve one OT instance with random masses
 //!   serve     run the coordinator service on a synthetic job stream
 //!   engines   list the registered solver engines + aliases
+//!   bench     kernel timing sweep {engines}×{n}×{ε} → BENCH_kernel.json
 //!   fig1      regenerate Figure 1 (runtime vs n, synthetic points)
 //!   fig2      regenerate Figure 2 (runtime vs ε, MNIST-style images)
 //!   ablation  analytical ablations A1–A6 (see DESIGN.md §4)
@@ -39,6 +40,7 @@ fn main() {
         Some("ot") => cmd_ot(&args),
         Some("serve") => cmd_serve(&args),
         Some("engines") => cmd_engines(),
+        Some("bench") => cmd_bench(&args),
         Some("fig1") => cmd_fig1(&args),
         Some("fig2") => cmd_fig2(&args),
         Some("ablation") => cmd_ablation(&args),
@@ -56,7 +58,7 @@ fn main() {
 fn print_usage() {
     println!(
         "otpr — push-relabel additive approximation for optimal transport\n\
-         usage: otpr <solve|ot|serve|engines|fig1|fig2|ablation|validate|certify|info> [--options]\n\
+         usage: otpr <solve|ot|serve|engines|bench|fig1|fig2|ablation|validate|certify|info> [--options]\n\
          common options: --n N --eps E --seed S --engine KEY (see `otpr engines`)\n\
          see README.md for the full matrix"
     );
@@ -251,12 +253,72 @@ fn cmd_serve(args: &Args) -> i32 {
     if cancelled > 0 {
         println!("{cancelled}/{jobs} jobs hit the {budget_ms}ms budget");
     }
-    println!("{ok}/{jobs} jobs succeeded\n{}", coord.metrics.snapshot());
+    // Shut down BEFORE exporting: audit certificates are recorded after
+    // each reply is sent, so the export is only complete once the worker
+    // threads have been joined.
+    let metrics = coord.metrics.clone();
     coord.shutdown();
+    println!("{ok}/{jobs} jobs succeeded\n{}", metrics.snapshot());
+    // the service's /metrics document: job counters, per-key batch
+    // occupancy, kernel-arena reuse hits, audit section
+    if let Some(path) = args.get("metrics-out") {
+        let json = metrics.to_json().to_string();
+        match std::fs::write(path, json) {
+            Ok(()) => println!("metrics JSON written to {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
     if ok == jobs {
         0
     } else {
         1
+    }
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    use otpr::exp::bench_kernel::{run, table, to_json, BenchKernelConfig};
+    let mut cfg = if args.flag("smoke") {
+        BenchKernelConfig::smoke()
+    } else {
+        BenchKernelConfig::default()
+    };
+    if let Some(engines) = args.get("engines") {
+        cfg.engines = engines.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if args.get("sizes").is_some() {
+        cfg.sizes = args.list_usize("sizes", &cfg.sizes.clone());
+    }
+    if args.get("eps").is_some() {
+        cfg.eps = args.list_f64("eps", &cfg.eps.clone());
+    }
+    cfg.reps = args.usize_or("reps", cfg.reps);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    println!(
+        "kernel bench: {} engines × sizes {:?} × eps {:?}, {} reps",
+        cfg.engines.len(),
+        cfg.sizes,
+        cfg.eps,
+        cfg.reps
+    );
+    let records = run(&cfg);
+    println!("{}", table(&records));
+    let out = args.get_or("out", "BENCH_kernel.json");
+    let json = to_json(&cfg, &records).to_string();
+    if let Err(e) = std::fs::write(out, json) {
+        eprintln!("could not write {out}: {e}");
+        return 1;
+    }
+    println!("bench records written to {out}");
+    // unavailable XLA cells are expected offline; only native failures gate
+    let native_errors = records
+        .iter()
+        .filter(|r| r.error.is_some() && !r.engine.contains("xla") && !r.engine.contains("gpu"))
+        .count();
+    if native_errors > 0 {
+        eprintln!("{native_errors} native bench cell(s) failed");
+        1
+    } else {
+        0
     }
 }
 

@@ -158,6 +158,7 @@ impl XlaAssignment {
                 rounds: out.rounds,
                 seconds: sw.elapsed_secs(),
                 notes: vec![format!("bucket={bucket}")],
+                ..Default::default()
             },
         })
     }

@@ -88,6 +88,52 @@ pub fn solve_exact(costs: &CostMatrix) -> Result<(Matching, f64, Vec<f64>, Vec<f
     Ok((matching, cost, u[1..].to_vec(), v[1..].to_vec()))
 }
 
+/// Exhaustive O(n!) reference for *tiny* square instances only — the
+/// cross-check oracle for [`solve_exact`] itself. Hard-errors above
+/// n = 8 with a clear message instead of exploding combinatorially:
+/// exact baselines at n ≥ 10 must use the O(n³) [`solve_exact`]
+/// (golden-pin regeneration in `python/tools/gen_golden.py` follows the
+/// same rule with a rational-arithmetic Jonker–Volgenant).
+pub fn brute_force_reference(costs: &CostMatrix) -> Result<f64> {
+    let n = costs.nb;
+    if n != costs.na {
+        return Err(OtprError::InvalidInstance(format!(
+            "brute force needs square costs, got {}x{}",
+            costs.nb, costs.na
+        )));
+    }
+    if n > 8 {
+        return Err(OtprError::InvalidInstance(format!(
+            "brute-force reference is O(n!): refusing n = {n} > 8 — use solve_exact (O(n³))"
+        )));
+    }
+    if n == 0 {
+        return Ok(0.0);
+    }
+    // iterative Heap's algorithm over column permutations
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut c = vec![0usize; n];
+    let total = |p: &[usize]| -> f64 { (0..n).map(|b| costs.at(b, p[b]) as f64).sum() };
+    let mut best = total(&perm);
+    let mut i = 0;
+    while i < n {
+        if c[i] < i {
+            if i % 2 == 0 {
+                perm.swap(0, i);
+            } else {
+                perm.swap(c[i], i);
+            }
+            best = best.min(total(&perm));
+            c[i] += 1;
+            i = 0;
+        } else {
+            c[i] = 0;
+            i += 1;
+        }
+    }
+    Ok(best)
+}
+
 /// Exact solver as an [`AssignmentSolver`] (ignores `eps`).
 #[derive(Debug, Clone, Default)]
 pub struct Hungarian;
@@ -126,20 +172,26 @@ mod tests {
     }
 
     #[test]
-    fn matches_bruteforce_on_random_4x4() {
+    fn matches_bruteforce_on_random_small_instances() {
         let mut rng = Pcg32::new(42);
-        for _ in 0..25 {
-            let c = CostMatrix::from_fn(4, 4, |_, _| rng.next_f32());
-            let (_, cost, _, _) = solve_exact(&c).unwrap();
-            // brute force over all 24 permutations
-            let mut best = f64::INFINITY;
-            let perms = permutations(4);
-            for p in &perms {
-                let tot: f64 = (0..4).map(|b| c.at(b, p[b]) as f64).sum();
-                best = best.min(tot);
+        for n in [4usize, 5, 6] {
+            for _ in 0..8 {
+                let c = CostMatrix::from_fn(n, n, |_, _| rng.next_f32());
+                let (_, cost, _, _) = solve_exact(&c).unwrap();
+                let best = brute_force_reference(&c).unwrap();
+                assert!((cost - best).abs() < 1e-6, "hungarian {cost} != brute {best} (n={n})");
             }
-            assert!((cost - best).abs() < 1e-6, "hungarian {cost} != brute {best}");
         }
+    }
+
+    #[test]
+    fn brute_force_hard_errors_above_n8() {
+        let c = CostMatrix::zeros(10, 10);
+        let err = brute_force_reference(&c).unwrap_err();
+        assert!(err.to_string().contains("O(n!)"), "{err}");
+        assert!(err.to_string().contains("solve_exact"), "{err}");
+        assert!(brute_force_reference(&CostMatrix::zeros(8, 8)).is_ok());
+        assert!(brute_force_reference(&CostMatrix::zeros(2, 3)).is_err());
     }
 
     #[test]
@@ -175,20 +227,5 @@ mod tests {
         let sol = Hungarian.solve_assignment(&i, 0.0).unwrap();
         assert!(sol.matching.is_perfect());
         assert!(sol.cost > 0.0);
-    }
-
-    fn permutations(n: usize) -> Vec<Vec<usize>> {
-        if n == 1 {
-            return vec![vec![0]];
-        }
-        let mut out = Vec::new();
-        for p in permutations(n - 1) {
-            for i in 0..n {
-                let mut q: Vec<usize> = p.iter().map(|&x| if x >= i { x + 1 } else { x }).collect();
-                q.insert(0, i);
-                out.push(q);
-            }
-        }
-        out
     }
 }

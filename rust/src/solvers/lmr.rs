@@ -185,6 +185,7 @@ impl LmrBaseline {
                 rounds: 0,
                 seconds: sw.elapsed_secs(),
                 notes: vec![],
+                ..Default::default()
             },
         })
     }

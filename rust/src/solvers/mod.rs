@@ -1,6 +1,7 @@
 //! Solvers: the paper's push-relabel algorithm (sequential, parallel, OT
-//! extension) plus every baseline the evaluation needs (exact Hungarian,
-//! exact min-cost-flow OT, Sinkhorn, greedy).
+//! extension — all thin drivers over the shared [`crate::core::kernel`]
+//! flow kernel) plus every baseline the evaluation needs (exact
+//! Hungarian, exact min-cost-flow OT, Sinkhorn, greedy).
 
 pub mod greedy;
 pub mod lmr;
@@ -20,10 +21,13 @@ pub struct SolveStats {
     pub phases: usize,
     /// Σ|B'| over phases — the quantity bounded by O(n/ε) in eq. (4).
     pub total_free_processed: u64,
-    /// Propose–accept rounds (parallel solvers), Σ over phases.
+    /// Propose–accept rounds (kernel-backed solvers), Σ over phases.
     pub rounds: usize,
     /// Wall-clock seconds.
     pub seconds: f64,
+    /// True when this solve reused a warm kernel arena (batch path;
+    /// counted into `coordinator::Metrics` as a reuse hit).
+    pub arena_reused: bool,
     /// Free-form solver-specific notes (e.g. "underflow" for Sinkhorn).
     pub notes: Vec<String>,
 }

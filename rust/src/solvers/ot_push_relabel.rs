@@ -1,350 +1,194 @@
-//! Push-relabel OT solver (paper §4): scale masses by θ = 4n/ε, round
-//! demands up / supplies down to integer units, and run the unbalanced
-//! matching algorithm over the *conceptual* unit copies — without ever
-//! materializing them.
+//! Push-relabel OT solver (paper §4) as a thin driver over the shared
+//! flow kernel: scale masses by θ = 4n/ε, round demands up / supplies
+//! down to integer units, and run the unbalanced matching algorithm over
+//! the *conceptual* unit copies — without ever materializing them.
 //!
-//! Copy compression relies on two structural facts the paper proves:
-//!
-//! * free copies of a supply vertex b are kept at the maximum dual among
-//!   b's copies (the §4 speed-up invariant), so they form one cluster with
-//!   a single dual `y_free[b]`;
-//! * Lemma 4.1: copies of any vertex carry at most **two** distinct dual
-//!   values at any time, so the matched copies of a demand vertex a are
-//!   grouped into ≤ 2 [`AClass`] clusters (dual value → copy count →
-//!   partner multiset). The per-phase scan is then O(na · |B'|) over
-//!   original vertices, giving the paper's O(n²/ε²) total (Theorem 4.2).
+//! Copy compression lives in the kernel arena
+//! ([`crate::core::kernel::KernelArena`]): free copies of a supply
+//! vertex share one dual (the §4 speed-up invariant) and matched demand
+//! copies group into ≤ 2 dual clusters (Lemma 4.1), stored in
+//! fixed-width slots with pooled partner edges. The per-phase scan is
+//! O(na · |B'|) over original vertices, giving the paper's O(n²/ε²)
+//! total (Theorem 4.2). This driver owns the OT-specific policy: the
+//! ε budget split, θ-scaling, the phase cap, and the completion that
+//! ships residual supply.
 //!
 //! Error budget at target ε (additive ε·c_max on unit total mass):
 //! mass rounding ≤ ε/4 + matching at ε_m = ε/6 contributes 3·ε_m = ε/2
 //! + residual supply shipped greedily ≤ ε/4.
 
 use crate::core::control::{SolveControl, CANCELLED_NOTE};
-use crate::core::{
-    CostMatrix, DualWeights, OtInstance, OtprError, QuantizedCosts, Result, ScaledOtInstance,
-    TransportPlan,
-};
+use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel};
+use crate::core::{OtInstance, OtprError, Result, ScaledOtInstance, TransportPlan};
 use crate::solvers::{OtSolution, OtSolver, SolveStats};
 use crate::util::timer::Stopwatch;
-use std::collections::BTreeMap;
 
 /// Hard safety cap on OT phases at matching parameter `eps` (the OT
 /// analog of [`crate::solvers::push_relabel::assignment_phase_cap`]).
-fn ot_phase_cap(eps: f64) -> usize {
+pub fn ot_phase_cap(eps: f64) -> usize {
     (8.0 * (1.0 + 2.0 * eps) / (eps * eps)).ceil() as usize + 16
 }
 
-/// A cluster of matched copies of demand vertex `a` sharing dual `y`.
-#[derive(Debug, Clone)]
-struct AClass {
-    /// Dual value (units, ≤ 0).
-    y: i32,
-    /// Number of matched a-copies in this cluster.
-    count: u64,
-    /// Partner multiset: supply vertex b → units matched to it.
-    flow: BTreeMap<u32, u64>,
-}
-
-/// Pending M' match recorded during the greedy step.
-#[derive(Debug, Clone, Copy)]
-struct NewMatch {
-    a: usize,
-    /// Dual of the a-copies *before* the phase's relabel.
-    y_pre: i32,
-    b: usize,
-    units: u64,
-}
-
-/// Solver state over original vertices + clusters.
-pub struct OtPrState {
-    pub q: QuantizedCosts,
-    /// Free demand units per a (these copies have dual 0).
-    a_free: Vec<u64>,
-    /// Matched demand clusters per a (≤ 2 by Lemma 4.1).
-    a_classes: Vec<Vec<AClass>>,
-    /// Free supply units per b.
-    b_free: Vec<u64>,
-    /// Dual of b's free copies (= max dual among b's copies).
-    y_free: Vec<i32>,
-    pub total_supply_units: u64,
-    pub phases: usize,
-    pub total_free_processed: u64,
-    /// Largest number of simultaneous clusters on any vertex (A4 ablation;
-    /// Lemma 4.1 says this never exceeds 2).
-    pub max_classes_seen: usize,
-}
-
-impl OtPrState {
-    pub fn new(costs: &CostMatrix, scaled: &ScaledOtInstance, eps_match: f64) -> Self {
-        let q = QuantizedCosts::new(costs, eps_match);
-        let total_supply_units = scaled.total_supply_units();
-        Self {
-            a_free: scaled.demand_units.clone(),
-            a_classes: vec![Vec::new(); costs.na],
-            b_free: scaled.supply_units.clone(),
-            y_free: vec![1; costs.nb],
-            q,
-            total_supply_units,
-            phases: 0,
-            total_free_processed: 0,
-            max_classes_seen: 0,
+/// Drive any [`FlowKernel`] backend through a full OT solve: θ-scale,
+/// loop phases under the cap with `ctl` polled at every boundary, then
+/// complete (leftover units + sub-unit residuals) into a feasible plan.
+/// The *only* OT phase loop in the crate; sequential vs chunked OT
+/// differ purely in the backend passed here.
+pub(crate) fn drive_ot(
+    kernel: &mut dyn FlowKernel,
+    inst: &OtInstance,
+    eps_mass: f64,
+    eps_match: f64,
+    ctl: &SolveControl,
+    paranoid: bool,
+) -> Result<OtSolution> {
+    let sw = Stopwatch::start();
+    // Already stopped (e.g. a shared batch token fired): skip θ-scaling
+    // and the arena init entirely and ship the feasible product coupling
+    // ν⊗μ — the same cancelled-at-phase-0 answer the adapter layer uses.
+    if ctl.should_stop() {
+        let plan = TransportPlan::product(&inst.supply, &inst.demand);
+        let cost = plan.cost(&inst.costs);
+        return Ok(OtSolution {
+            plan,
+            cost,
+            duals: None,
+            stats: SolveStats {
+                seconds: sw.elapsed_secs(),
+                notes: vec![CANCELLED_NOTE.to_string()],
+                ..Default::default()
+            },
+        });
+    }
+    let scaled = ScaledOtInstance::build(inst, eps_mass);
+    kernel.init(
+        &inst.costs,
+        eps_match,
+        Some((&scaled.supply_units[..], &scaled.demand_units[..])),
+    );
+    let cap = ot_phase_cap(eps_match);
+    let mut cancelled = false;
+    loop {
+        if ctl.should_stop() {
+            cancelled = true;
+            break;
+        }
+        let out = kernel.run_phase();
+        if paranoid {
+            kernel.check_invariants().map_err(OtprError::Infeasible)?;
+        }
+        if out.terminated {
+            break;
+        }
+        ctl.report(kernel.arena().phases, kernel.arena().free_units() as f64);
+        if kernel.arena().phases > cap {
+            return Err(OtprError::Infeasible(format!("OT phase cap {cap} exceeded (bug)")));
         }
     }
 
-    pub fn free_units(&self) -> u64 {
-        self.b_free.iter().sum()
-    }
-
-    fn threshold(&self) -> u64 {
-        (self.q.eps * self.total_supply_units as f64).floor() as u64
-    }
-
-    /// One phase over unit copies. Returns false when terminated.
-    pub fn run_phase(&mut self) -> bool {
-        let free_now = self.free_units();
-        if free_now <= self.threshold() {
-            return false;
-        }
-        self.phases += 1;
-        self.total_free_processed += free_now;
-        let na = self.q.na;
-
-        // Budget = free units at phase start (evicted units arriving during
-        // the phase join b_free but not this phase's B').
-        let budgets: Vec<(usize, u64)> = (0..self.q.nb)
-            .filter(|&b| self.b_free[b] > 0)
-            .map(|b| (b, self.b_free[b]))
-            .collect();
-
-        let mut pending: Vec<NewMatch> = Vec::new();
-        let mut matched_of_b: Vec<u64> = vec![0; self.q.nb];
-
-        for &(b, budget) in &budgets {
-            let mut need = budget;
-            let yb = self.y_free[b];
-            let row = self.q.row(b);
-            for a in 0..na {
-                if need == 0 {
-                    break;
-                }
-                let cq1 = row[a] + 1;
-                // free a-copies (dual 0)
-                if yb == cq1 && self.a_free[a] > 0 {
-                    let take = need.min(self.a_free[a]);
-                    self.a_free[a] -= take;
-                    need -= take;
-                    pending.push(NewMatch { a, y_pre: 0, b, units: take });
-                }
-                if need == 0 {
-                    break;
-                }
-                // matched clusters (steal; evicts the victims' supply units)
-                let mut ci = 0;
-                while ci < self.a_classes[a].len() && need > 0 {
-                    let y_cls = self.a_classes[a][ci].y;
-                    if y_cls + yb == cq1 && self.a_classes[a][ci].count > 0 {
-                        let take = need.min(self.a_classes[a][ci].count);
-                        Self::steal_from_class(
-                            &mut self.a_classes[a][ci],
-                            take,
-                            &mut self.b_free,
-                        );
-                        need -= take;
-                        pending.push(NewMatch { a, y_pre: y_cls, b, units: take });
-                    }
-                    ci += 1;
-                }
-                self.a_classes[a].retain(|c| c.count > 0);
+    // Completion: remaining free supply units go to any demand with
+    // residual unit capacity (first fit — the paper's "arbitrarily").
+    let mut flow = kernel.unit_flow();
+    let na = inst.costs.na;
+    let nb = inst.costs.nb;
+    let mut a_free = kernel.arena().a_free().to_vec();
+    let b_free = kernel.arena().b_free();
+    let mut cursor = 0usize;
+    for b in 0..nb {
+        let mut need = b_free[b];
+        while need > 0 {
+            while cursor < na && a_free[cursor] == 0 {
+                cursor += 1;
             }
-            matched_of_b[b] = budget - need;
-            // Matched units leave b's free pool now so eviction bookkeeping
-            // stays exact (b_free may also have grown through evictions).
-            self.b_free[b] -= matched_of_b[b];
+            if cursor == na {
+                return Err(OtprError::Infeasible(
+                    "no demand capacity left for completion".into(),
+                ));
+            }
+            let k = need.min(a_free[cursor]);
+            flow[b * na + cursor] += k;
+            a_free[cursor] -= k;
+            need -= k;
         }
+    }
 
-        // Apply M': matched a-copies relabel down by 1 and join the cluster
-        // at y_pre − 1 with their new partner recorded.
-        for nm in &pending {
-            let new_y = nm.y_pre - 1;
-            let classes = &mut self.a_classes[nm.a];
-            let cls = match classes.iter_mut().find(|c| c.y == new_y) {
-                Some(c) => c,
-                None => {
-                    classes.push(AClass { y: new_y, count: 0, flow: BTreeMap::new() });
-                    classes.last_mut().unwrap()
-                }
-            };
-            cls.count += nm.units;
-            *cls.flow.entry(nm.b as u32).or_insert(0) += nm.units;
-        }
-        // Track cluster multiplicity (Lemma 4.1 check): distinct dual values
-        // among a's copies = matched clusters + (free copies at dual 0).
+    // Units → mass, then ship the sub-unit supply residuals into real
+    // remaining demand capacity (greedy by capacity; ≤ ε/4 mass total).
+    let mut plan = TransportPlan::zeros(nb, na);
+    let inv = 1.0 / scaled.theta;
+    for b in 0..nb {
         for a in 0..na {
-            let distinct =
-                self.a_classes[a].len() + usize::from(self.a_free[a] > 0);
-            self.max_classes_seen = self.max_classes_seen.max(distinct);
-            debug_assert!(
-                self.a_classes[a].len() <= 2,
-                "Lemma 4.1 violated at a={a}: {} matched clusters",
-                self.a_classes[a].len()
-            );
-        }
-
-        // Relabel: b's whose B'-budget wasn't fully matched move up. All of
-        // b's free copies share y_free (evicted copies are raised to the
-        // max — feasible because copies share b's cost row).
-        for &(b, budget) in &budgets {
-            if matched_of_b[b] < budget {
-                self.y_free[b] += 1;
+            let f = flow[b * na + a];
+            if f > 0 {
+                plan.set(b, a, f as f64 * inv);
             }
         }
-        true
     }
-
-    fn steal_from_class(cls: &mut AClass, mut take: u64, b_free: &mut [u64]) {
-        cls.count -= take;
-        let mut emptied: Vec<u32> = Vec::new();
-        for (&b_old, units) in cls.flow.iter_mut() {
-            if take == 0 {
-                break;
-            }
-            let k = take.min(*units);
-            *units -= k;
-            take -= k;
-            // evicted copies of b_old become free (raised to y_free[b_old])
-            b_free[b_old as usize] += k;
-            if *units == 0 {
-                emptied.push(b_old);
+    let mut received = plan.demand_marginal();
+    for b in 0..nb {
+        let mut resid = scaled.supply_residual[b];
+        if resid <= 0.0 {
+            continue;
+        }
+        for a in 0..na {
+            let cap = inst.demand[a] - received[a];
+            if cap > 1e-15 {
+                let k = resid.min(cap);
+                plan.add(b, a, k);
+                received[a] += k;
+                resid -= k;
+                if resid <= 1e-18 {
+                    break;
+                }
             }
         }
-        debug_assert_eq!(take, 0, "class accounting out of sync");
-        for b_old in emptied {
-            cls.flow.remove(&b_old);
+        // tiny float leftovers: dump on the last demand node
+        if resid > 0.0 {
+            plan.add(b, na - 1, resid);
         }
     }
 
-    pub fn run_to_termination(&mut self) -> Result<()> {
-        let cap = ot_phase_cap(self.q.eps);
-        while self.run_phase() {
-            if self.phases > cap {
-                return Err(OtprError::Infeasible(format!(
-                    "OT phase cap {cap} exceeded (bug)"
-                )));
-            }
-        }
-        Ok(())
+    let cost = plan.cost(&inst.costs);
+    let arena = kernel.arena();
+    let mut notes = vec![format!("max_clusters={}", arena.max_classes_seen)];
+    if cancelled {
+        notes.push(CANCELLED_NOTE.to_string());
     }
-
-    /// Export one ε-unit dual per *original* vertex for certification: the
-    /// maximum dual among a vertex's conceptual copies. For supply b that
-    /// is `y_free[b]` (the §4 free-copies-at-max invariant); for demand a
-    /// it is 0 while free copies remain, else the largest cluster dual.
-    /// Every copy pair satisfies `y(a)+y(b) ≤ cq+1` (conditions (2)/(3)),
-    /// and the componentwise max of each side is itself a copy pair, so
-    /// the exported vector inherits the relaxed feasibility the
-    /// [`crate::core::certify`] lower bound needs.
-    pub fn export_duals(&self) -> DualWeights {
-        let ya = (0..self.q.na)
-            .map(|a| {
-                if self.a_free[a] > 0 {
-                    0
-                } else if let Some(y) = self.a_classes[a].iter().map(|c| c.y).max() {
-                    y
-                } else {
-                    // Zero-mass demand vertex: no copies constrain it; pick
-                    // the largest edge-feasible value (clamped to the sign
-                    // invariant) so the exported vector stays checkable.
-                    (0..self.q.nb)
-                        .map(|b| self.q.at(b, a) + 1 - self.y_free[b])
-                        .min()
-                        .unwrap_or(0)
-                        .min(0)
-                }
-            })
-            .collect();
-        DualWeights { ya, yb: self.y_free.clone() }
-    }
-
-    /// Extract the unit flow as a dense (b, a) matrix.
-    pub fn unit_flow(&self) -> Vec<u64> {
-        let mut flow = vec![0u64; self.q.nb * self.q.na];
-        for (a, classes) in self.a_classes.iter().enumerate() {
-            for cls in classes {
-                for (&b, &units) in &cls.flow {
-                    flow[b as usize * self.q.na + a] += units;
-                }
-            }
-        }
-        flow
-    }
-
-    /// Structural feasibility of the cluster state: counts consistent,
-    /// dual signs, ε-feasibility (2)/(3) of every cluster pair, and the
-    /// free-copies-at-max invariant. O(n²) — tests only.
-    pub fn check_invariants(&self) -> std::result::Result<(), String> {
-        for b in 0..self.q.nb {
-            if self.y_free[b] < 0 {
-                return Err(format!("y_free[{b}] = {} < 0", self.y_free[b]));
-            }
-        }
-        for a in 0..self.q.na {
-            for cls in &self.a_classes[a] {
-                if cls.y > 0 {
-                    return Err(format!("matched a-class at a={a} has positive dual"));
-                }
-                let total: u64 = cls.flow.values().sum();
-                if total != cls.count {
-                    return Err(format!("class count mismatch at a={a}"));
-                }
-                // (3) for matched copies: implicit b-copy dual = cq − y_cls
-                // must not exceed y_free[b] (free copies are the max).
-                for (&b, _) in &cls.flow {
-                    let b = b as usize;
-                    let implied_yb = self.q.at(b, a) - cls.y;
-                    if implied_yb > self.y_free[b] {
-                        return Err(format!(
-                            "max-dual invariant violated: b={b} matched copy dual {} > y_free {}",
-                            implied_yb, self.y_free[b]
-                        ));
-                    }
-                }
-            }
-            // (2) for free b copies against free a copies (dual 0) and
-            // against matched clusters.
-            for b in 0..self.q.nb {
-                let cq1 = self.q.at(b, a) + 1;
-                if self.a_free[a] > 0 && self.b_free[b] > 0 && self.y_free[b] > cq1 {
-                    return Err(format!(
-                        "(2) violated free-free at (b={b},a={a}): y_free {} > cq+1 {cq1}",
-                        self.y_free[b]
-                    ));
-                }
-                if self.b_free[b] > 0 {
-                    for cls in &self.a_classes[a] {
-                        if cls.y + self.y_free[b] > cq1 {
-                            return Err(format!(
-                                "(2) violated free-b vs class at (b={b},a={a},y={})",
-                                cls.y
-                            ));
-                        }
-                    }
-                }
-            }
-        }
-        Ok(())
-    }
+    Ok(OtSolution {
+        plan,
+        cost,
+        duals: Some(kernel.duals()),
+        stats: SolveStats {
+            phases: arena.phases,
+            total_free_processed: arena.total_free_processed,
+            rounds: arena.rounds,
+            seconds: sw.elapsed_secs(),
+            arena_reused: arena.last_init_reused,
+            notes,
+        },
+    })
 }
 
 /// The §4 OT solver. `eps` on the trait is the overall additive target
-/// (error ≤ eps · c_max for unit total mass).
+/// (error ≤ eps · c_max for unit total mass). `threads = 1` runs the
+/// scalar kernel backend; more runs the chunked thread-sweep — both
+/// produce identical plans and duals (the kernel contract).
 #[derive(Debug, Clone, Default)]
 pub struct OtPushRelabel {
     /// Verify cluster invariants after every phase (tests only).
     pub paranoid: bool,
+    /// 0 or 1 → scalar backend; ≥ 2 → chunked backend.
+    pub threads: usize,
 }
 
 impl OtPushRelabel {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Run the chunked kernel backend with `threads` sweep threads.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { paranoid: false, threads }
     }
 
     /// Solve with explicit mass-scaling ε and matching ε parameters.
@@ -368,106 +212,13 @@ impl OtPushRelabel {
         eps_match: f64,
         ctl: &SolveControl,
     ) -> Result<OtSolution> {
-        let sw = Stopwatch::start();
-        let scaled = ScaledOtInstance::build(inst, eps_mass);
-        let mut st = OtPrState::new(&inst.costs, &scaled, eps_match);
-        let cap = ot_phase_cap(st.q.eps);
-        let mut cancelled = false;
-        loop {
-            if ctl.should_stop() {
-                cancelled = true;
-                break;
-            }
-            let progressed = st.run_phase();
-            if self.paranoid {
-                st.check_invariants().map_err(OtprError::Infeasible)?;
-            }
-            if !progressed {
-                break;
-            }
-            ctl.report(st.phases, st.free_units() as f64);
-            if st.phases > cap {
-                return Err(OtprError::Infeasible(format!("OT phase cap {cap} exceeded (bug)")));
-            }
+        if self.threads >= 2 {
+            let mut kernel = ChunkedKernel::new(self.threads);
+            drive_ot(&mut kernel, inst, eps_mass, eps_match, ctl, self.paranoid)
+        } else {
+            let mut kernel = ScalarKernel::new();
+            drive_ot(&mut kernel, inst, eps_mass, eps_match, ctl, self.paranoid)
         }
-
-        // Completion: remaining free supply units go to any demand with
-        // residual unit capacity (first fit — the paper's "arbitrarily").
-        let mut flow = st.unit_flow();
-        let na = inst.costs.na;
-        let mut a_free = st.a_free.clone();
-        let mut cursor = 0usize;
-        for b in 0..inst.costs.nb {
-            let mut need = st.b_free[b];
-            while need > 0 {
-                while cursor < na && a_free[cursor] == 0 {
-                    cursor += 1;
-                }
-                if cursor == na {
-                    return Err(OtprError::Infeasible(
-                        "no demand capacity left for completion".into(),
-                    ));
-                }
-                let k = need.min(a_free[cursor]);
-                flow[b * na + cursor] += k;
-                a_free[cursor] -= k;
-                need -= k;
-            }
-        }
-
-        // Units → mass, then ship the sub-unit supply residuals into real
-        // remaining demand capacity (greedy by capacity; ≤ ε/4 mass total).
-        let mut plan = TransportPlan::zeros(inst.costs.nb, na);
-        let inv = 1.0 / scaled.theta;
-        for b in 0..inst.costs.nb {
-            for a in 0..na {
-                let f = flow[b * na + a];
-                if f > 0 {
-                    plan.set(b, a, f as f64 * inv);
-                }
-            }
-        }
-        let mut received = plan.demand_marginal();
-        for b in 0..inst.costs.nb {
-            let mut resid = scaled.supply_residual[b];
-            if resid <= 0.0 {
-                continue;
-            }
-            for a in 0..na {
-                let cap = inst.demand[a] - received[a];
-                if cap > 1e-15 {
-                    let k = resid.min(cap);
-                    plan.add(b, a, k);
-                    received[a] += k;
-                    resid -= k;
-                    if resid <= 1e-18 {
-                        break;
-                    }
-                }
-            }
-            // tiny float leftovers: dump on the last demand node
-            if resid > 0.0 {
-                plan.add(b, na - 1, resid);
-            }
-        }
-
-        let cost = plan.cost(&inst.costs);
-        let mut notes = vec![format!("max_clusters={}", st.max_classes_seen)];
-        if cancelled {
-            notes.push(CANCELLED_NOTE.to_string());
-        }
-        Ok(OtSolution {
-            plan,
-            cost,
-            duals: Some(st.export_duals()),
-            stats: SolveStats {
-                phases: st.phases,
-                total_free_processed: st.total_free_processed,
-                rounds: 0,
-                seconds: sw.elapsed_secs(),
-                notes,
-            },
-        })
     }
 }
 
@@ -525,7 +276,7 @@ mod tests {
     #[test]
     fn invariants_hold_every_phase() {
         let inst = Workload::Fig1 { n: 10 }.ot_with_random_masses(3);
-        let sol = OtPushRelabel { paranoid: true }.solve_ot(&inst, 0.3).unwrap();
+        let sol = OtPushRelabel { paranoid: true, threads: 0 }.solve_ot(&inst, 0.3).unwrap();
         assert!(sol.cost.is_finite());
     }
 
@@ -533,12 +284,17 @@ mod tests {
     fn lemma_4_1_cluster_bound() {
         let inst = Workload::Fig1 { n: 20 }.ot_with_random_masses(5);
         let scaled = ScaledOtInstance::build(&inst, 0.2);
-        let mut st = OtPrState::new(&inst.costs, &scaled, 0.2 / 6.0);
-        st.run_to_termination().unwrap();
+        let mut k = ScalarKernel::new();
+        k.init(
+            &inst.costs,
+            0.2 / 6.0,
+            Some((&scaled.supply_units[..], &scaled.demand_units[..])),
+        );
+        k.run_to_termination(ot_phase_cap(0.2 / 6.0)).unwrap();
         assert!(
-            st.max_classes_seen <= 2,
+            k.arena().max_classes_seen <= 2,
             "observed {} clusters, Lemma 4.1 bounds 2",
-            st.max_classes_seen
+            k.arena().max_classes_seen
         );
     }
 
@@ -569,5 +325,22 @@ mod tests {
         let sol = OtPushRelabel::new().solve_ot(&inst, 0.3).unwrap();
         assert!(sol.stats.phases > 0);
         assert!(sol.stats.notes[0].starts_with("max_clusters="));
+    }
+
+    #[test]
+    fn chunked_backend_identical_to_scalar_on_ot() {
+        for seed in [1u64, 4] {
+            let inst = Workload::Fig1 { n: 14 }.ot_with_random_masses(seed);
+            let scalar = OtPushRelabel::new().solve_ot(&inst, 0.25).unwrap();
+            for threads in [2usize, 4] {
+                let par = OtPushRelabel::with_threads(threads).solve_ot(&inst, 0.25).unwrap();
+                assert_eq!(
+                    scalar.plan.as_slice(),
+                    par.plan.as_slice(),
+                    "seed {seed} threads {threads}"
+                );
+                assert_eq!(scalar.duals, par.duals);
+            }
+        }
     }
 }

@@ -1,178 +1,42 @@
 //! Multi-threaded push-relabel solver — the CPU analog of the paper's GPU
-//! implementation, and the same round structure as the XLA `phase_step`
-//! artifact.
+//! implementation, now a thin driver over the shared flow kernel's
+//! **chunked** backend ([`crate::core::kernel::ChunkedKernel`]).
 //!
-//! The greedy maximal matching of each phase is realized as Israeli–Itai
-//! style **propose–accept rounds**:
-//!
-//! * propose: every still-active free b scans (in parallel) for its first
-//!   admissible a not yet taken — reads a *snapshot* of the taken set, so
-//!   rounds are deterministic regardless of thread count;
-//! * accept: each proposed-to a accepts the smallest proposing b (sequential
-//!   O(proposals) pass);
-//! * losers stay active for the next round; b's with no admissible available
-//!   a deactivate.
-//!
-//! Rounds repeat until no proposals — at that point M' is maximal over the
-//! admissible graph (every admissible edge from a still-free b points at a
-//! taken a). §3.2 predicts O(log n) expected rounds; ablation A2 measures it.
+//! Each phase's greedy maximal matching runs as propose–accept rounds:
+//! active free vertices scan for their next admissible target in
+//! parallel against a stable round snapshot, then grants commit
+//! sequentially in ascending vertex order. Because proposals depend only
+//! on the snapshot and commits are ordered, the result is deterministic
+//! for every thread count **and identical to the sequential engine** —
+//! the two backends share one phase semantics, so the additive guarantee
+//! and every invariant transfer unchanged. §3.2 predicts O(log n)
+//! expected rounds; ablation A2 measures it.
 
-use crate::core::control::{SolveControl, CANCELLED_NOTE};
-use crate::core::duals::DualWeights;
-use crate::core::matching::{Matching, FREE};
-use crate::core::quantize::QuantizedCosts;
-use crate::core::{AssignmentInstance, CostMatrix, OtprError, Result};
-use crate::solvers::{AssignmentSolution, AssignmentSolver, SolveStats};
+use crate::core::control::SolveControl;
+use crate::core::kernel::ChunkedKernel;
+use crate::core::{AssignmentInstance, Result};
+use crate::solvers::push_relabel::drive_assignment;
+use crate::solvers::{AssignmentSolution, AssignmentSolver};
 use crate::util::pool;
-use crate::util::timer::Stopwatch;
-use std::sync::atomic::{AtomicI64, Ordering};
-
-/// Parallel phase state; also reused by the ablation bench to count rounds.
-#[derive(Debug, Clone)]
-pub struct ParallelPrState {
-    pub q: QuantizedCosts,
-    pub m: Matching,
-    pub y: DualWeights,
-    pub phases: usize,
-    pub rounds: usize,
-    pub total_free_processed: u64,
-    pub threads: usize,
-}
-
-impl ParallelPrState {
-    pub fn new(costs: &CostMatrix, eps: f64, threads: usize) -> Self {
-        let q = QuantizedCosts::new(costs, eps);
-        let (nb, na) = (q.nb, q.na);
-        Self {
-            q,
-            m: Matching::empty(nb, na),
-            y: DualWeights::init(nb, na),
-            phases: 0,
-            rounds: 0,
-            total_free_processed: 0,
-            threads: threads.max(1),
-        }
-    }
-
-    pub fn threshold(&self) -> usize {
-        (self.q.eps * self.q.nb as f64).floor() as usize
-    }
-
-    /// One phase; returns (free_at_start, rounds_used) or None if terminated.
-    pub fn run_phase(&mut self) -> Option<(usize, usize)> {
-        let free_b: Vec<usize> = self.m.free_b();
-        if free_b.len() <= self.threshold() {
-            return None;
-        }
-        self.phases += 1;
-        self.total_free_processed += free_b.len() as u64;
-
-        let na = self.q.na;
-        let mut taken = vec![false; na];
-        let mut active: Vec<usize> = free_b.clone();
-        let mut mprime: Vec<(usize, usize)> = Vec::with_capacity(free_b.len());
-        let mut rounds_this_phase = 0;
-
-        while !active.is_empty() {
-            rounds_this_phase += 1;
-            // --- propose (parallel over active b's; `taken` is a frozen
-            // snapshot for the whole round) ---
-            let proposals: Vec<i64> = {
-                let props: Vec<AtomicI64> =
-                    active.iter().map(|_| AtomicI64::new(-1)).collect();
-                let q = &self.q;
-                let y = &self.y;
-                let taken_ref = &taken;
-                let active_ref = &active;
-                pool::parallel_chunks(active_ref.len(), self.threads, |_, range| {
-                    for i in range {
-                        let b = active_ref[i];
-                        let yb = y.yb[b];
-                        let row = q.row(b);
-                        for a in 0..na {
-                            if !taken_ref[a] && y.ya[a] + yb == row[a] + 1 {
-                                props[i].store(a as i64, Ordering::Relaxed);
-                                break;
-                            }
-                        }
-                    }
-                });
-                props.into_iter().map(|p| p.into_inner()).collect()
-            };
-
-            // --- accept: smallest proposing b wins each a (sequential) ---
-            let mut winner_of_a: Vec<i64> = Vec::new(); // lazily sized
-            let mut any_proposal = false;
-            for (i, &p) in proposals.iter().enumerate() {
-                if p >= 0 {
-                    any_proposal = true;
-                    if winner_of_a.is_empty() {
-                        winner_of_a = vec![i64::MAX; na];
-                    }
-                    let a = p as usize;
-                    let b = active[i] as i64;
-                    if b < winner_of_a[a] {
-                        winner_of_a[a] = b;
-                    }
-                }
-            }
-            if !any_proposal {
-                break; // M' is maximal
-            }
-            // apply winners; losers and non-proposers filtered into next round
-            let mut next_active = Vec::with_capacity(active.len());
-            for (i, &p) in proposals.iter().enumerate() {
-                let b = active[i];
-                if p < 0 {
-                    continue; // no admissible available a: deactivate
-                }
-                let a = p as usize;
-                if winner_of_a[a] == b as i64 {
-                    taken[a] = true;
-                    mprime.push((b, a));
-                } else {
-                    next_active.push(b);
-                }
-            }
-            active = next_active;
-        }
-
-        // (II) push + (III.a) relabel a's
-        for &(b, a) in &mprime {
-            self.m.link(b, a);
-            self.y.ya[a] -= 1;
-        }
-        // (III.b) relabel b's left free
-        for &b in &free_b {
-            if self.m.match_b[b] == FREE {
-                self.y.yb[b] += 1;
-            }
-        }
-        self.rounds += rounds_this_phase;
-        Some((free_b.len(), rounds_this_phase))
-    }
-
-    pub fn check_invariants(&self) -> std::result::Result<(), String> {
-        crate::core::duals::check_feasible(&self.q, &self.m, &self.y)
-    }
-}
 
 /// The parallel solver as an [`AssignmentSolver`]. `eps` is the overall
 /// additive target; the core runs at ε/3 like [`super::push_relabel`].
 #[derive(Debug, Clone)]
 pub struct ParallelPushRelabel {
     pub threads: usize,
+    /// Verify invariants after every phase (tests; O(n²) per phase).
+    pub paranoid: bool,
 }
 
 impl Default for ParallelPushRelabel {
     fn default() -> Self {
-        Self { threads: pool::default_threads() }
+        Self { threads: pool::default_threads(), paranoid: false }
     }
 }
 
 impl ParallelPushRelabel {
     pub fn with_threads(threads: usize) -> Self {
-        Self { threads }
+        Self { threads, paranoid: false }
     }
 
     pub fn solve_with_param(
@@ -191,49 +55,10 @@ impl ParallelPushRelabel {
         eps_param: f64,
         ctl: &SolveControl,
     ) -> Result<AssignmentSolution> {
-        let sw = Stopwatch::start();
-        if inst.n() == 0 {
-            return Ok(AssignmentSolution {
-                matching: Matching::empty(0, 0),
-                cost: 0.0,
-                duals: None,
-                stats: SolveStats::default(),
-            });
-        }
-        let mut st = ParallelPrState::new(&inst.costs, eps_param, self.threads);
-        let cap = crate::solvers::push_relabel::assignment_phase_cap(eps_param);
-        let mut cancelled = false;
-        loop {
-            if ctl.should_stop() {
-                cancelled = true;
-                break;
-            }
-            let Some((free_at_start, _rounds)) = st.run_phase() else { break };
-            let free_left = st.m.match_b.iter().filter(|&&a| a == FREE).count();
-            debug_assert!(free_left <= free_at_start);
-            ctl.report(st.phases, free_left as f64);
-            if st.phases > cap {
-                return Err(OtprError::Infeasible("phase cap exceeded (bug)".into()));
-            }
-        }
-        st.m.complete_arbitrarily();
-        let cost = st.m.cost(&inst.costs);
-        let mut notes = vec![format!("threads={}", self.threads)];
-        if cancelled {
-            notes.push(CANCELLED_NOTE.to_string());
-        }
-        Ok(AssignmentSolution {
-            matching: st.m,
-            cost,
-            duals: Some(st.y),
-            stats: SolveStats {
-                phases: st.phases,
-                total_free_processed: st.total_free_processed,
-                rounds: st.rounds,
-                seconds: sw.elapsed_secs(),
-                notes,
-            },
-        })
+        let mut kernel = ChunkedKernel::new(self.threads);
+        let mut sol = drive_assignment(&mut kernel, inst, eps_param, ctl, self.paranoid)?;
+        sol.stats.notes.insert(0, format!("threads={}", self.threads.max(1)));
+        Ok(sol)
     }
 }
 
@@ -250,18 +75,26 @@ impl AssignmentSolver for ParallelPushRelabel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::kernel::FlowKernel;
     use crate::data::workloads::Workload;
-    use crate::solvers::push_relabel::PushRelabel;
+    use crate::solvers::push_relabel::{assignment_phase_cap, PushRelabel};
 
     #[test]
     fn perfect_matching_and_invariants() {
         let i = Workload::Fig1 { n: 40 }.assignment(1);
-        let mut st = ParallelPrState::new(&i.costs, 0.1, 4);
-        while st.run_phase().is_some() {
-            st.check_invariants().unwrap();
+        let mut k = ChunkedKernel::new(4);
+        k.init(&i.costs, 0.1, None);
+        loop {
+            let out = k.run_phase();
+            k.check_invariants().unwrap();
+            if out.terminated {
+                break;
+            }
+            assert!(k.arena().phases <= assignment_phase_cap(0.1));
         }
-        st.m.complete_arbitrarily();
-        assert!(st.m.is_perfect());
+        let mut m = k.extract_matching();
+        m.complete_arbitrarily();
+        assert!(m.is_perfect());
     }
 
     #[test]
@@ -271,19 +104,20 @@ mod tests {
         let s4 = ParallelPushRelabel::with_threads(4).solve_with_param(&i, 0.15).unwrap();
         assert_eq!(s1.matching, s4.matching, "snapshot rounds must be thread-invariant");
         assert_eq!(s1.stats.rounds, s4.stats.rounds);
+        assert_eq!(s1.duals, s4.duals, "duals byte-identical across thread counts");
     }
 
     #[test]
-    fn cost_within_3eps_of_sequential_guarantee() {
+    fn identical_to_sequential_engine() {
+        // The kernel contract: scalar and chunked backends share one
+        // phase semantics, so the engines agree exactly.
         let i = Workload::Fig1 { n: 50 }.assignment(3);
         let eps = 0.1;
         let par = ParallelPushRelabel::with_threads(4).solve_with_param(&i, eps).unwrap();
         let seq = PushRelabel::new().solve_with_param(&i, eps).unwrap();
-        let c_max = i.costs.max() as f64;
-        let budget = 3.0 * eps * 50.0 * c_max;
-        // both satisfy the additive bound; they may differ from each other
-        assert!(par.cost <= seq.cost + budget + 1e-9);
-        assert!(seq.cost <= par.cost + budget + 1e-9);
+        assert_eq!(par.matching, seq.matching);
+        assert_eq!(par.duals, seq.duals);
+        assert!((par.cost - seq.cost).abs() < 1e-12);
     }
 
     #[test]
@@ -302,5 +136,12 @@ mod tests {
             let sol = ParallelPushRelabel::with_threads(2).solve_with_param(&i, 0.4).unwrap();
             assert!(sol.matching.is_perfect());
         }
+    }
+
+    #[test]
+    fn threads_note_present() {
+        let i = Workload::RandomCosts { n: 12 }.assignment(6);
+        let sol = ParallelPushRelabel::with_threads(3).solve_with_param(&i, 0.3).unwrap();
+        assert_eq!(sol.stats.notes[0], "threads=3");
     }
 }

@@ -160,6 +160,59 @@ fn sinkhorn_contract_marginals_and_absent_duals() {
     }
 }
 
+/// Backend-equivalence satellite: on every golden instance, the scalar
+/// and chunked kernel backends must produce **identical** matchings /
+/// plans and byte-identical duals at every tested thread count — the
+/// kernel contract that makes `native-parallel` a pure wall-clock
+/// optimization of `native-seq`.
+#[test]
+fn kernel_backends_identical_on_golden_corpus() {
+    let registry = SolverRegistry::with_defaults();
+    let corpus = golden_corpus().unwrap();
+    for case in &corpus {
+        let problem = match case.ot() {
+            Some(inst) => Problem::Ot(inst),
+            None => Problem::Assignment(case.assignment().unwrap()),
+        };
+        for eps in [0.3, 0.1] {
+            let req = SolveRequest::new(eps);
+            let scalar = registry
+                .solve("native-seq", &SolverConfig::default(), &problem, &req)
+                .unwrap();
+            for threads in [1usize, 2, 4, 8] {
+                let config = SolverConfig::default().with_threads(threads);
+                let chunked = registry
+                    .solve("native-parallel", &config, &problem, &req)
+                    .unwrap();
+                match (scalar.matching(), chunked.matching()) {
+                    (Some(ms), Some(mc)) => assert_eq!(
+                        ms, mc,
+                        "{} eps={eps} threads={threads}: matchings differ",
+                        case.name
+                    ),
+                    (None, None) => assert_eq!(
+                        scalar.plan().unwrap().as_slice(),
+                        chunked.plan().unwrap().as_slice(),
+                        "{} eps={eps} threads={threads}: plans differ",
+                        case.name
+                    ),
+                    _ => panic!("{}: coupling shapes differ across backends", case.name),
+                }
+                assert_eq!(
+                    scalar.duals, chunked.duals,
+                    "{} eps={eps} threads={threads}: duals must be byte-identical",
+                    case.name
+                );
+                assert!(
+                    (scalar.cost - chunked.cost).abs() < 1e-12,
+                    "{} eps={eps} threads={threads}: costs differ",
+                    case.name
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn gap_histogram_artifact_is_consistent() {
     let cfg = ConformanceConfig {

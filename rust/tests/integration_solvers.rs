@@ -117,10 +117,12 @@ fn degenerate_zero_cost_instance() {
 // ---------------------------------------------------------------------------
 
 mod unbalanced {
+    use otpr::core::duals::check_feasible;
+    use otpr::core::kernel::{FlowKernel, ScalarKernel};
     use otpr::core::matching::FREE;
     use otpr::core::CostMatrix;
     use otpr::solvers::hungarian;
-    use otpr::solvers::push_relabel::PrState;
+    use otpr::solvers::push_relabel::assignment_phase_cap;
     use otpr::util::rng::Pcg32;
 
     fn rect_costs(nb: usize, na: usize, seed: u64) -> CostMatrix {
@@ -135,20 +137,23 @@ mod unbalanced {
             let costs = rect_costs(nb, na, seed);
             let (_, opt, _, _) = hungarian::solve_exact(&costs).unwrap();
             let eps = 0.1;
-            let mut st = PrState::new(&costs, eps);
-            st.run_to_termination().unwrap();
-            st.check_invariants().unwrap();
+            let mut k = ScalarKernel::new();
+            k.init(&costs, eps, None);
+            k.run_to_termination(assignment_phase_cap(eps)).unwrap();
+            k.check_invariants().unwrap();
+            let mut m = k.extract_matching();
+            check_feasible(&k.arena().q, &m, &k.duals()).unwrap();
             // cardinality ≥ (1 − ε)|B|
-            let size = st.m.size();
+            let size = m.size();
             assert!(
                 size as f64 >= (1.0 - eps) * nb as f64,
                 "matching size {size} < (1-ε)|B|"
             );
             // complete and compare: error ≤ ε|B| in rounded units plus the
             // rounding (ε|B|) and completion (ε|B|) terms → 3ε|B|·c_max.
-            st.m.complete_arbitrarily();
-            assert_eq!(st.m.size(), nb);
-            let cost = st.m.cost(&costs);
+            m.complete_arbitrarily();
+            assert_eq!(m.size(), nb);
+            let cost = m.cost(&costs);
             let budget = 3.0 * eps * nb as f64 * costs.max() as f64;
             assert!(
                 cost <= opt + budget + 1e-6,
@@ -160,16 +165,18 @@ mod unbalanced {
     #[test]
     fn invariants_hold_every_phase_unbalanced() {
         let costs = rect_costs(12, 30, 9);
-        let mut st = PrState::new(&costs, 0.2);
+        let mut k = ScalarKernel::new();
+        k.init(&costs, 0.2, None);
         for _ in 0..200 {
-            let out = st.run_phase();
-            st.check_invariants().unwrap();
+            let out = k.run_phase();
+            k.check_invariants().unwrap();
+            check_feasible(&k.arena().q, &k.extract_matching(), &k.duals()).unwrap();
             if out.terminated {
                 break;
             }
         }
         // every matched edge references a valid A vertex
-        for &a in &st.m.match_b {
+        for &a in &k.extract_matching().match_b {
             assert!(a == FREE || (a as usize) < 30);
         }
     }
@@ -177,10 +184,12 @@ mod unbalanced {
     #[test]
     fn all_b_matchable_when_na_much_larger() {
         let costs = rect_costs(8, 64, 3);
-        let mut st = PrState::new(&costs, 0.05);
-        st.run_to_termination().unwrap();
-        st.m.complete_arbitrarily();
-        assert_eq!(st.m.size(), 8);
-        assert!(st.m.check_consistent().is_ok());
+        let mut k = ScalarKernel::new();
+        k.init(&costs, 0.05, None);
+        k.run_to_termination(assignment_phase_cap(0.05)).unwrap();
+        let mut m = k.extract_matching();
+        m.complete_arbitrarily();
+        assert_eq!(m.size(), 8);
+        assert!(m.check_consistent().is_ok());
     }
 }

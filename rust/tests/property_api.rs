@@ -63,6 +63,77 @@ fn matching_to_plan_cost_is_matching_cost_over_n() {
     });
 }
 
+/// Batch-path satellite: `solve_many` must be *observationally identical*
+/// to solving each problem alone — same couplings, same costs, marginals
+/// preserved — while reusing one kernel arena across same-shape items.
+#[test]
+fn solve_many_matches_per_item_solves_and_reuses_arena() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    check(
+        "solve_many == per-item",
+        &PropConfig { cases: 12, ..Default::default() },
+        |rng| {
+            let k = 3 + rng.next_below(6) as usize; // 3..=8 instances
+            let eps = 0.1 + 0.3 * rng.next_f64();
+            let ot_kind = rng.next_below(2) == 1;
+            let n = 6 + rng.next_below(10) as usize;
+            let problems: Vec<Problem> = (0..k)
+                .map(|i| {
+                    let seed = rng.next_u64().wrapping_add(i as u64);
+                    if ot_kind {
+                        Problem::Ot(Workload::Fig1 { n }.ot_with_random_masses(seed))
+                    } else {
+                        Problem::Assignment(Workload::RandomCosts { n }.assignment(seed))
+                    }
+                })
+                .collect();
+            let engine = if rng.next_below(2) == 0 { "native-seq" } else { "native-parallel" };
+            let req = SolveRequest::new(eps);
+            let report = req
+                .solve_many(&registry, engine, &config, &problems)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                report.reuse_hits == k as u64 - 1,
+                "{engine}: {} reuse hits for {k} same-shape instances",
+                report.reuse_hits
+            );
+            for (i, (p, r)) in problems.iter().zip(&report.results).enumerate() {
+                let batched = r.as_ref().map_err(|e| e.to_string())?;
+                let single = registry.solve(engine, &config, p, &req).map_err(|e| e.to_string())?;
+                prop_assert!(
+                    (batched.cost - single.cost).abs() < 1e-12,
+                    "{engine} item {i}: batched cost {} != single {}",
+                    batched.cost,
+                    single.cost
+                );
+                match (batched.plan(), single.plan()) {
+                    (Some(bp), Some(sp)) => {
+                        prop_assert!(bp.as_slice() == sp.as_slice(), "{engine} item {i}: plans differ");
+                        // marginals preserved: the batched plan is feasible
+                        // for its own instance
+                        let inst = p.as_ot().expect("ot problem");
+                        let theta = 4.0 * inst.n() as f64 / eps;
+                        bp.check(&inst.supply, &inst.demand, 2.0 / theta + 1e-9)?;
+                    }
+                    (None, None) => {
+                        prop_assert!(
+                            batched.matching() == single.matching(),
+                            "{engine} item {i}: matchings differ"
+                        );
+                        prop_assert!(
+                            batched.matching().unwrap().is_perfect(),
+                            "{engine} item {i}: batched matching imperfect"
+                        );
+                    }
+                    _ => return Err(format!("{engine} item {i}: coupling shapes differ")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn cancelled_solve_returns_within_one_phase_and_notes_it() {
     let solvers = SolverRegistry::with_defaults();

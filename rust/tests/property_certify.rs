@@ -6,11 +6,12 @@
 
 use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
 use otpr::core::duals::dual_lower_bound_units;
+use otpr::core::kernel::{FlowKernel, ScalarKernel};
 use otpr::core::{AssignmentInstance, CostMatrix, OtInstance, QuantizedCosts};
 use otpr::data::workloads::random_simplex;
 use otpr::prop_assert;
 use otpr::solvers::hungarian;
-use otpr::solvers::push_relabel::PrState;
+use otpr::solvers::push_relabel::assignment_phase_cap;
 use otpr::solvers::ssp_ot::SspExactOt;
 use otpr::solvers::OtSolver;
 use otpr::util::proptest_mini::{check, check_default, PropConfig};
@@ -53,10 +54,11 @@ fn prop_dual_lower_bound_never_exceeds_exact_optimum() {
         let n = 2 + rng.next_below(15) as usize;
         let eps = [0.3, 0.15, 0.08][rng.next_below(3) as usize];
         let costs = random_costs(rng, n);
-        let mut st = PrState::new(&costs, eps);
-        st.run_to_termination().map_err(|e| e.to_string())?;
+        let mut k = ScalarKernel::new();
+        k.init(&costs, eps, None);
+        k.run_to_termination(assignment_phase_cap(eps))?;
         let (_, exact, _, _) = hungarian::solve_exact(&costs).map_err(|e| e.to_string())?;
-        let lb = dual_lower_bound_units(&st.y) as f64 * st.q.eps_abs;
+        let lb = dual_lower_bound_units(&k.duals()) as f64 * k.arena().q.eps_abs;
         prop_assert!(lb <= exact + 1e-9, "lb {lb} > exact {exact} (n={n}, eps={eps})");
         Ok(())
     });

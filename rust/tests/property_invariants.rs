@@ -1,14 +1,15 @@
 //! Property-based suite (util::proptest_mini): the paper's invariants hold
 //! after *every* phase on randomized instances, quantization laws hold,
-//! and solver outputs always satisfy their structural contracts.
+//! and solver outputs always satisfy their structural contracts. Phase
+//! state is driven through the shared flow kernel (`core::kernel`) — the
+//! one phase loop every push-relabel engine uses.
 
-use otpr::core::duals::dual_lower_bound_units;
+use otpr::core::duals::{check_feasible, dual_lower_bound_units};
+use otpr::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel};
 use otpr::core::{AssignmentInstance, CostMatrix, QuantizedCosts};
 use otpr::data::workloads::Workload;
 use otpr::prop_assert;
-use otpr::solvers::ot_push_relabel::OtPrState;
-use otpr::solvers::parallel_pr::ParallelPrState;
-use otpr::solvers::push_relabel::PrState;
+use otpr::solvers::push_relabel::assignment_phase_cap;
 use otpr::util::proptest_mini::{check, check_default, PropConfig};
 use otpr::util::rng::Pcg32;
 
@@ -22,10 +23,14 @@ fn prop_feasibility_after_every_phase_sequential() {
         let n = 4 + rng.next_below(28) as usize;
         let eps = [0.4, 0.2, 0.1][rng.next_below(3) as usize];
         let costs = random_costs(rng, n);
-        let mut st = PrState::new(&costs, eps);
+        let mut k = ScalarKernel::new();
+        k.init(&costs, eps, None);
         for _ in 0..500 {
-            let out = st.run_phase();
-            st.check_invariants().map_err(|e| format!("n={n} eps={eps}: {e}"))?;
+            let out = k.run_phase();
+            k.check_invariants().map_err(|e| format!("n={n} eps={eps}: {e}"))?;
+            // matching-form invariants: signs, (2)/(3), Lemma 3.2 bound
+            check_feasible(&k.arena().q, &k.extract_matching(), &k.duals())
+                .map_err(|e| format!("n={n} eps={eps}: {e}"))?;
             if out.terminated {
                 return Ok(());
             }
@@ -41,11 +46,15 @@ fn prop_feasibility_after_every_phase_parallel() {
         let eps = [0.4, 0.2][rng.next_below(2) as usize];
         let costs = random_costs(rng, n);
         let threads = 1 + rng.next_below(4) as usize;
-        let mut st = ParallelPrState::new(&costs, eps, threads);
+        let mut k = ChunkedKernel::new(threads);
+        k.init(&costs, eps, None);
         for _ in 0..500 {
-            match st.run_phase() {
-                Some(_) => st.check_invariants().map_err(|e| format!("n={n}: {e}"))?,
-                None => return Ok(()),
+            let out = k.run_phase();
+            k.check_invariants().map_err(|e| format!("n={n}: {e}"))?;
+            check_feasible(&k.arena().q, &k.extract_matching(), &k.duals())
+                .map_err(|e| format!("n={n}: {e}"))?;
+            if out.terminated {
+                return Ok(());
             }
         }
         Err("did not terminate".into())
@@ -61,20 +70,54 @@ fn prop_ot_cluster_invariants() {
             let n = 4 + rng.next_below(12) as usize;
             let inst = Workload::Fig1 { n }.ot_with_random_masses(rng.next_u64());
             let scaled = otpr::core::ScaledOtInstance::build(&inst, 0.25);
-            let mut st = OtPrState::new(&inst.costs, &scaled, 0.25 / 6.0);
+            let mut k = ScalarKernel::new();
+            k.init(
+                &inst.costs,
+                0.25 / 6.0,
+                Some((&scaled.supply_units[..], &scaled.demand_units[..])),
+            );
             for _ in 0..2000 {
-                let progressed = st.run_phase();
-                st.check_invariants()?;
+                let out = k.run_phase();
+                k.check_invariants()?;
                 prop_assert!(
-                    st.max_classes_seen <= 2,
+                    k.arena().max_classes_seen <= 2,
                     "Lemma 4.1 violated: {} clusters",
-                    st.max_classes_seen
+                    k.arena().max_classes_seen
                 );
-                if !progressed {
+                if out.terminated {
                     return Ok(());
                 }
             }
             Err("did not terminate".into())
+        },
+    );
+}
+
+#[test]
+fn prop_scalar_chunked_backends_identical() {
+    // The kernel contract: every backend produces byte-identical state.
+    check(
+        "backend equivalence",
+        &PropConfig { cases: 16, ..Default::default() },
+        |rng| {
+            let n = 4 + rng.next_below(20) as usize;
+            let eps = [0.4, 0.2, 0.1][rng.next_below(3) as usize];
+            let costs = random_costs(rng, n);
+            let cap = assignment_phase_cap(eps);
+            let mut ks = ScalarKernel::new();
+            ks.init(&costs, eps, None);
+            ks.run_to_termination(cap)?;
+            let threads = 2 + rng.next_below(5) as usize;
+            let mut kc = ChunkedKernel::new(threads);
+            kc.init(&costs, eps, None);
+            kc.run_to_termination(cap)?;
+            prop_assert!(
+                ks.extract_matching() == kc.extract_matching(),
+                "matchings differ (n={n}, eps={eps}, threads={threads})"
+            );
+            prop_assert!(ks.duals() == kc.duals(), "duals differ");
+            prop_assert!(ks.arena().rounds == kc.arena().rounds, "rounds differ");
+            Ok(())
         },
     );
 }
@@ -106,21 +149,24 @@ fn prop_dual_certificate_lower_bound() {
     check_default("dual certificate", |rng| {
         let n = 4 + rng.next_below(24) as usize;
         let costs = random_costs(rng, n);
-        let mut st = PrState::new(&costs, 0.15);
-        st.run_to_termination().map_err(|e| e.to_string())?;
+        let mut k = ScalarKernel::new();
+        k.init(&costs, 0.15, None);
+        k.run_to_termination(assignment_phase_cap(0.15))?;
+        let m = k.extract_matching();
+        let y = k.duals();
         let mut matched_units: i64 = 0;
-        for (b, &a) in st.m.match_b.iter().enumerate() {
+        for (b, &a) in m.match_b.iter().enumerate() {
             if a >= 0 {
-                matched_units += st.q.at(b, a as usize) as i64;
+                matched_units += k.arena().q.at(b, a as usize) as i64;
             }
         }
-        let total_dual: i64 = st.y.ya.iter().map(|&v| v as i64).sum::<i64>()
-            + st.y.yb.iter().map(|&v| v as i64).sum::<i64>();
+        let total_dual: i64 = y.ya.iter().map(|&v| v as i64).sum::<i64>()
+            + y.yb.iter().map(|&v| v as i64).sum::<i64>();
         prop_assert!(
             matched_units <= total_dual,
             "matched {matched_units} > Σy {total_dual}"
         );
-        let _ = dual_lower_bound_units(&st.y); // smoke the helper
+        let _ = dual_lower_bound_units(&y); // smoke the helper
         Ok(())
     });
 }
@@ -160,6 +206,7 @@ fn prop_parallel_thread_count_invariance() {
                 .solve_with_param(&inst, eps)
                 .map_err(|e| e.to_string())?;
             prop_assert!(s1.matching == s3.matching, "matchings differ across threads");
+            prop_assert!(s1.duals == s3.duals, "duals differ across threads");
             Ok(())
         },
     );
