@@ -4,7 +4,7 @@
 //! Lemma 3.4 O(n·nᵢ) scan) — driven through `core::kernel` directly,
 //! with one arena reused across samples the way the batch path does.
 
-use otpr::core::kernel::{FlowKernel, ScalarKernel};
+use otpr::core::kernel::{FlowKernel, ScalarKernel, VectorKernel};
 use otpr::data::workloads::Workload;
 use otpr::exp::ablation;
 use otpr::exp::report::figure_table;
@@ -54,5 +54,24 @@ fn main() {
         }));
     }
     println!("## Per-phase cost (greedy maximal-matching scan)\n");
+    println!("{}", to_markdown(&results));
+
+    // The same first-phase sweep on the vector backend: the scalar/vector
+    // ratio here is the propose-sweep speedup in isolation (results are
+    // byte-identical by the kernel contract, so only the timing differs).
+    let mut results = Vec::new();
+    let mut kernel = VectorKernel::new();
+    for &n in &sizes {
+        let costs = Workload::Fig1 { n }.costs(seed);
+        results.push(run_bench(&format!("vector first-phase n={n} eps=0.1"), &cfg, || {
+            kernel.init(&costs, 0.1, None);
+            let out = kernel.run_phase();
+            vec![
+                ("matched".into(), out.matched_units.to_string()),
+                ("free".into(), out.free_at_start.to_string()),
+            ]
+        }));
+    }
+    println!("## Per-phase cost, vector backend (lane-blocked scan)\n");
     println!("{}", to_markdown(&results));
 }

@@ -13,7 +13,7 @@
 use crate::api::problem::{Problem, ProblemKind, Solution};
 use crate::api::request::SolveRequest;
 use crate::core::control::CANCELLED_NOTE;
-use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel};
+use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, VectorKernel, WarmStart};
 use crate::core::{Matching, OtInstance, OtprError, Result, TransportPlan};
 use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
 use crate::solvers::ot_push_relabel::drive_ot;
@@ -130,46 +130,78 @@ impl<S: OtSolver + Send + Sync> Solver for OtAdapter<S> {
 }
 
 /// Solve one (problem, request) item on an already-initialized kernel —
-/// the shared body of both native engines. The kernel arena is reused
-/// across calls; `init` inside the drivers re-quantizes in place.
+/// the shared body of every native engine. The kernel arena is reused
+/// across calls; `init`/`warm_reinit` inside the drivers re-quantize in
+/// place, and `warm` selects the ε-scaling schedule / batch dual reuse.
 fn solve_one_on_kernel(
     kernel: &mut dyn FlowKernel,
     problem: &Problem,
     req: &SolveRequest,
     paranoid: bool,
+    warm: WarmStart,
 ) -> Result<Solution> {
     match problem {
         Problem::Assignment(inst) => {
-            drive_assignment(kernel, inst, req.eps_param(3.0), &req.control(), paranoid)
+            drive_assignment(kernel, inst, req.eps_param(3.0), &req.control(), paranoid, warm)
                 .map(Solution::from_assignment)
         }
         // OT ε is always the overall additive target (ε·c_max)
-        Problem::Ot(inst) => drive_ot(kernel, inst, req.eps, req.eps / 6.0, &req.control(), paranoid)
-            .map(Solution::from_ot),
+        Problem::Ot(inst) => {
+            drive_ot(kernel, inst, req.eps, req.eps / 6.0, &req.control(), paranoid, warm)
+                .map(Solution::from_ot)
+        }
     }
 }
 
+/// Batch body: item 0 runs `warm` as requested (for warm engines, the
+/// full ε schedule); later items additionally offer the drivers the
+/// arena's current duals (`carry`) — the drivers take them only when the
+/// shapes actually match, so mixed batches degrade gracefully.
 fn solve_items_on_kernel(
     kernel: &mut dyn FlowKernel,
     items: &[(&Problem, &SolveRequest)],
     paranoid: bool,
+    warm: WarmStart,
 ) -> Vec<Result<Solution>> {
     items
         .iter()
-        .map(|&(p, r)| solve_one_on_kernel(kernel, p, r, paranoid))
+        .enumerate()
+        .map(|(i, &(p, r))| {
+            let w = WarmStart { carry: warm.carry && i > 0, ..warm };
+            solve_one_on_kernel(kernel, p, r, paranoid, w)
+        })
         .collect()
 }
 
-/// `native-seq`: the paper's sequential push-relabel (§2.2) for assignment
-/// plus the §4 copy-compressed OT solver, behind one engine key — both
-/// driven over the scalar kernel backend.
+/// Warm-start policy shared by every kernel-backed engine: batch dual
+/// carry gates on the same predicate as the engine's warm name, so
+/// `warm_levels == 1` behaves exactly like the cold engine it reports
+/// itself as.
+fn kernel_warm(levels: u32) -> WarmStart {
+    WarmStart { levels, carry: levels > 1 }
+}
+
+fn kernel_engine_name(cold: &'static str, warm: &'static str, levels: u32) -> &'static str {
+    if levels > 1 {
+        warm
+    } else {
+        cold
+    }
+}
+
+/// `native-seq` / `native-seq-warm`: the paper's sequential push-relabel
+/// (§2.2) for assignment plus the §4 copy-compressed OT solver, behind
+/// one engine key — both driven over the scalar kernel backend.
+/// `warm_levels ≥ 2` adds the geometric ε-scaling schedule plus batch
+/// dual reuse across same-shape items.
 pub struct NativeSeqSolver {
     pub paranoid: bool,
+    pub warm_levels: u32,
 }
 
 impl Solver for NativeSeqSolver {
     fn name(&self) -> &'static str {
-        "native-seq"
+        kernel_engine_name("native-seq", "native-seq-warm", self.warm_levels)
     }
 
     fn supports(&self, _kind: ProblemKind) -> bool {
@@ -178,12 +210,42 @@ impl Solver for NativeSeqSolver {
 
     fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
         let mut kernel = ScalarKernel::new();
-        solve_one_on_kernel(&mut kernel, problem, req, self.paranoid)
+        solve_one_on_kernel(&mut kernel, problem, req, self.paranoid, kernel_warm(self.warm_levels))
     }
 
     fn solve_each(&self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
         let mut kernel = ScalarKernel::new();
-        solve_items_on_kernel(&mut kernel, items, self.paranoid)
+        solve_items_on_kernel(&mut kernel, items, self.paranoid, kernel_warm(self.warm_levels))
+    }
+}
+
+/// `native-vector` / `native-vector-warm`: the lane-blocked
+/// auto-vectorized kernel backend — byte-identical results to
+/// `native-seq` (the kernel contract), ~1/8 the propose-sweep memory
+/// traffic. `warm_levels ≥ 2` adds ε-scaling warm starts and batch dual
+/// reuse on top.
+pub struct NativeVectorSolver {
+    pub paranoid: bool,
+    pub warm_levels: u32,
+}
+
+impl Solver for NativeVectorSolver {
+    fn name(&self) -> &'static str {
+        kernel_engine_name("native-vector", "native-vector-warm", self.warm_levels)
+    }
+
+    fn supports(&self, _kind: ProblemKind) -> bool {
+        true
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        let mut kernel = VectorKernel::new();
+        solve_one_on_kernel(&mut kernel, problem, req, self.paranoid, kernel_warm(self.warm_levels))
+    }
+
+    fn solve_each(&self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
+        let mut kernel = VectorKernel::new();
+        solve_items_on_kernel(&mut kernel, items, self.paranoid, kernel_warm(self.warm_levels))
     }
 }
 
@@ -207,7 +269,8 @@ impl Solver for NativeParallelSolver {
 
     fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
         let mut kernel = ChunkedKernel::new(self.threads);
-        let mut sol = solve_one_on_kernel(&mut kernel, problem, req, self.paranoid)?;
+        let mut sol =
+            solve_one_on_kernel(&mut kernel, problem, req, self.paranoid, WarmStart::COLD)?;
         sol.stats.notes.insert(0, format!("threads={}", self.threads.max(1)));
         Ok(sol)
     }
@@ -215,7 +278,7 @@ impl Solver for NativeParallelSolver {
     fn solve_each(&self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
         let mut kernel = ChunkedKernel::new(self.threads);
         let note = format!("threads={}", self.threads.max(1));
-        solve_items_on_kernel(&mut kernel, items, self.paranoid)
+        solve_items_on_kernel(&mut kernel, items, self.paranoid, WarmStart::COLD)
             .into_iter()
             .map(|r| {
                 r.map(|mut sol| {
@@ -390,7 +453,7 @@ mod tests {
 
     #[test]
     fn native_seq_solves_both_kinds_with_duals() {
-        let s = NativeSeqSolver { paranoid: true };
+        let s = NativeSeqSolver { paranoid: true, warm_levels: 0 };
         let sol = s.solve(&assignment(12, 3), &SolveRequest::new(0.3)).unwrap();
         assert!(sol.matching().unwrap().is_perfect());
         assert!(sol.duals.is_some(), "push-relabel emits its dual certificate");
@@ -406,7 +469,7 @@ mod tests {
         let token = CancelToken::new();
         token.cancel();
         let req = SolveRequest::new(0.2).with_cancel(token);
-        let s = NativeSeqSolver { paranoid: false };
+        let s = NativeSeqSolver { paranoid: false, warm_levels: 0 };
         let sol = s.solve(&assignment(16, 4), &req).unwrap();
         assert!(sol.is_cancelled());
         assert_eq!(sol.stats.phases, 0, "cancelled before the first phase");
@@ -415,7 +478,7 @@ mod tests {
 
     #[test]
     fn solve_each_reuses_one_kernel_arena_across_same_shape_items() {
-        let s = NativeSeqSolver { paranoid: false };
+        let s = NativeSeqSolver { paranoid: false, warm_levels: 0 };
         let problems: Vec<Problem> = (0..4).map(|i| assignment(10, 100 + i)).collect();
         let req = SolveRequest::new(0.3);
         let items: Vec<(&Problem, &SolveRequest)> = problems.iter().map(|p| (p, &req)).collect();
@@ -435,6 +498,58 @@ mod tests {
         let sols = s.solve_each(&mixed);
         assert!(sols[0].as_ref().unwrap().matching().is_some());
         assert!(sols[1].as_ref().unwrap().plan().is_some());
+    }
+
+    #[test]
+    fn vector_engine_matches_seq_byte_for_byte() {
+        let seq = NativeSeqSolver { paranoid: false, warm_levels: 0 };
+        let vec_ = NativeVectorSolver { paranoid: true, warm_levels: 0 };
+        for seed in [11u64, 12] {
+            let p = assignment(13, seed); // non-multiple-of-8 width
+            let req = SolveRequest::new(0.3);
+            let a = seq.solve(&p, &req).unwrap();
+            let b = vec_.solve(&p, &req).unwrap();
+            assert_eq!(a.matching(), b.matching());
+            assert_eq!(a.duals, b.duals);
+            assert_eq!(a.stats.phases, b.stats.phases);
+            assert_eq!(a.stats.rounds, b.stats.rounds);
+        }
+        let ot = Problem::Ot(Workload::Fig1 { n: 9 }.ot_with_random_masses(5));
+        let req = SolveRequest::new(0.25);
+        let a = seq.solve(&ot, &req).unwrap();
+        let b = vec_.solve(&ot, &req).unwrap();
+        assert_eq!(a.plan().unwrap().as_slice(), b.plan().unwrap().as_slice());
+        assert_eq!(a.duals, b.duals);
+    }
+
+    #[test]
+    fn warm_engine_batch_carries_duals_across_same_shape_items() {
+        let s = NativeVectorSolver { paranoid: true, warm_levels: 3 };
+        let problems: Vec<Problem> = (0..3).map(|i| assignment(12, 200 + i)).collect();
+        let req = SolveRequest::new(0.3);
+        let items: Vec<(&Problem, &SolveRequest)> = problems.iter().map(|p| (p, &req)).collect();
+        let sols: Vec<Solution> = s.solve_each(&items).into_iter().map(|r| r.unwrap()).collect();
+        // item 0 runs the full schedule; later items carry duals instead
+        assert!(sols[0].stats.warm_started);
+        assert!(sols[0].stats.eps_levels >= 2);
+        for sol in &sols[1..] {
+            assert!(sol.stats.warm_started, "carried items report a warm start");
+            assert_eq!(sol.stats.eps_levels, 1, "carry skips the coarse levels");
+            assert!(sol.stats.arena_reused);
+        }
+        // every item is still a valid guaranteed solve
+        for (p, sol) in problems.iter().zip(&sols) {
+            assert!(sol.matching().unwrap().is_perfect());
+            let cert = crate::core::certify::certify(p, sol, &req);
+            assert!(cert.ok(), "{}", cert.summary());
+        }
+        // a shape change falls back to the schedule, not an error
+        let bigger = assignment(16, 300);
+        let mixed: Vec<(&Problem, &SolveRequest)> = vec![(&problems[0], &req), (&bigger, &req)];
+        let out = s.solve_each(&mixed);
+        let second = out[1].as_ref().unwrap();
+        assert!(second.stats.warm_started);
+        assert!(second.stats.eps_levels >= 2, "no carry across shapes — full schedule");
     }
 
     #[test]

@@ -10,8 +10,8 @@
 //! edits).
 
 use crate::api::adapter::{
-    AssignmentAdapter, LmrSolver, NativeParallelSolver, NativeSeqSolver, OtAdapter,
-    SinkhornSolver, Solver, XlaEngineSolver, XlaSinkhornSolver,
+    AssignmentAdapter, LmrSolver, NativeParallelSolver, NativeSeqSolver, NativeVectorSolver,
+    OtAdapter, SinkhornSolver, Solver, XlaEngineSolver, XlaSinkhornSolver,
 };
 use crate::api::problem::{Problem, ProblemKind, Solution};
 use crate::api::request::SolveRequest;
@@ -51,6 +51,27 @@ pub const ENGINE_SPECS: &[EngineSpec] = &[
         assignment: true,
         ot: true,
         doc: "propose-accept multi-threaded push-relabel (§3.2)",
+    },
+    EngineSpec {
+        key: "native-vector",
+        aliases: &["vector", "simd", "pr-vector"],
+        assignment: true,
+        ot: true,
+        doc: "lane-blocked auto-vectorized propose sweep (results byte-identical to native-seq)",
+    },
+    EngineSpec {
+        key: "native-vector-warm",
+        aliases: &["vector-warm"],
+        assignment: true,
+        ot: true,
+        doc: "vector kernel + geometric ε-scaling warm starts and batch dual reuse",
+    },
+    EngineSpec {
+        key: "native-seq-warm",
+        aliases: &["warm", "seq-warm"],
+        assignment: true,
+        ot: true,
+        doc: "sequential kernel + geometric ε-scaling warm starts and batch dual reuse",
     },
     EngineSpec {
         key: "xla",
@@ -140,6 +161,9 @@ pub struct SolverConfig {
     pub seed: u64,
     /// Verify solver invariants after every phase (tests, `otpr validate`).
     pub paranoid: bool,
+    /// Geometric ε levels the warm-start engines solve (≥ 2; the `*-warm`
+    /// engine keys read this, the cold keys ignore it).
+    pub warm_levels: u32,
     /// Sinkhorn update rule: log-domain (robust, the service default) vs
     /// standard kernel (faster; underflows at small ε — ablation A5).
     pub sinkhorn_log_domain: bool,
@@ -156,6 +180,7 @@ impl Default for SolverConfig {
             threads: pool::default_threads(),
             seed: 42,
             paranoid: false,
+            warm_levels: 3,
             sinkhorn_log_domain: true,
             sinkhorn_max_iters: 100_000,
             xla_runtime: None,
@@ -171,6 +196,7 @@ impl fmt::Debug for SolverConfig {
             .field("threads", &self.threads)
             .field("seed", &self.seed)
             .field("paranoid", &self.paranoid)
+            .field("warm_levels", &self.warm_levels)
             .field("sinkhorn_log_domain", &self.sinkhorn_log_domain)
             .field("sinkhorn_max_iters", &self.sinkhorn_max_iters)
             .field("xla_runtime", &self.xla_runtime.is_some())
@@ -404,7 +430,24 @@ impl BatchReport {
 
 fn default_builder(key: &'static str) -> BuilderFn {
     match key {
-        "native-seq" => Box::new(|cfg| Box::new(NativeSeqSolver { paranoid: cfg.paranoid })),
+        "native-seq" => {
+            Box::new(|cfg| Box::new(NativeSeqSolver { paranoid: cfg.paranoid, warm_levels: 0 }))
+        }
+        "native-seq-warm" => Box::new(|cfg| {
+            Box::new(NativeSeqSolver {
+                paranoid: cfg.paranoid,
+                warm_levels: cfg.warm_levels.max(2),
+            })
+        }),
+        "native-vector" => {
+            Box::new(|cfg| Box::new(NativeVectorSolver { paranoid: cfg.paranoid, warm_levels: 0 }))
+        }
+        "native-vector-warm" => Box::new(|cfg| {
+            Box::new(NativeVectorSolver {
+                paranoid: cfg.paranoid,
+                warm_levels: cfg.warm_levels.max(2),
+            })
+        }),
         "native-parallel" => Box::new(|cfg| {
             Box::new(NativeParallelSolver { threads: cfg.threads, paranoid: cfg.paranoid })
         }),
@@ -555,6 +598,32 @@ mod tests {
         let report = reg.solve_batch("hungarian", &cfg, &mixed, &req).unwrap();
         assert!(report.results[0].is_ok());
         assert!(report.results[1].is_err());
+    }
+
+    #[test]
+    fn vector_and_warm_engines_resolve_and_hold_their_contracts() {
+        let reg = SolverRegistry::with_defaults();
+        let cfg = SolverConfig::default();
+        assert_eq!(reg.canonical("vector"), Some("native-vector"));
+        assert_eq!(reg.canonical("simd"), Some("native-vector"));
+        assert_eq!(reg.canonical("warm"), Some("native-seq-warm"));
+        assert_eq!(reg.canonical("vector-warm"), Some("native-vector-warm"));
+        let p = Problem::Assignment(Workload::RandomCosts { n: 11 }.assignment(7));
+        let req = SolveRequest::new(0.3);
+        // the vector backend is byte-identical to the scalar one
+        let seq = reg.solve("native-seq", &cfg, &p, &req).unwrap();
+        let vec_ = reg.solve("vector", &cfg, &p, &req).unwrap();
+        assert_eq!(seq.matching(), vec_.matching());
+        assert_eq!(seq.duals, vec_.duals);
+        assert!(!vec_.stats.warm_started);
+        // the warm engines certify like the cold ones
+        for engine in ["native-seq-warm", "native-vector-warm"] {
+            let warm = reg.solve(engine, &cfg, &p, &req.clone().certify(true)).unwrap();
+            assert!(warm.stats.warm_started, "{engine}");
+            assert!(warm.stats.eps_levels >= 2, "{engine}");
+            let cert = warm.certificate.as_ref().unwrap();
+            assert!(cert.ok(), "{engine}: {}", cert.summary());
+        }
     }
 
     #[test]

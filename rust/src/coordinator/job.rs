@@ -20,6 +20,12 @@ pub enum Engine {
     NativeSeq,
     /// Propose–accept multi-threaded push-relabel (native Rust).
     NativeParallel,
+    /// Lane-blocked auto-vectorized kernel backend (scalar-identical).
+    NativeVector,
+    /// Vector backend + ε-scaling warm starts and batch dual reuse.
+    NativeVectorWarm,
+    /// Sequential backend + ε-scaling warm starts and batch dual reuse.
+    NativeSeqWarm,
     /// Device-resident push-relabel over the XLA artifacts.
     Xla,
     /// Sinkhorn baseline, native Rust (log-domain for robustness).
@@ -40,9 +46,12 @@ pub enum Engine {
 
 impl Engine {
     /// Every concrete (non-Auto) engine, i.e. every registry-backed one.
-    pub const CONCRETE: [Engine; 9] = [
+    pub const CONCRETE: [Engine; 12] = [
         Engine::NativeSeq,
         Engine::NativeParallel,
+        Engine::NativeVector,
+        Engine::NativeVectorWarm,
+        Engine::NativeSeqWarm,
         Engine::Xla,
         Engine::SinkhornNative,
         Engine::SinkhornXla,
@@ -57,6 +66,9 @@ impl Engine {
         match self {
             Engine::NativeSeq => "native-seq",
             Engine::NativeParallel => "native-parallel",
+            Engine::NativeVector => "native-vector",
+            Engine::NativeVectorWarm => "native-vector-warm",
+            Engine::NativeSeqWarm => "native-seq-warm",
             Engine::Xla => "xla",
             Engine::SinkhornNative => "sinkhorn-native",
             Engine::SinkhornXla => "sinkhorn-xla",
@@ -150,6 +162,10 @@ mod tests {
             ("native", Engine::NativeSeq),
             ("pr-cpu", Engine::NativeSeq),
             ("par", Engine::NativeParallel),
+            ("vector", Engine::NativeVector),
+            ("simd", Engine::NativeVector),
+            ("vector-warm", Engine::NativeVectorWarm),
+            ("warm", Engine::NativeSeqWarm),
             ("sinkhorn", Engine::SinkhornNative),
             ("sinkhorn-gpu", Engine::SinkhornXla),
             ("ssp", Engine::SspExact),

@@ -48,6 +48,9 @@ pub struct EngineCounters {
     /// Progress events (push-relabel phases / Sinkhorn stopping checks)
     /// reported while solving on this engine.
     pub phases: u64,
+    /// Jobs that warm-started (ε-scaling schedule or batch dual carry;
+    /// `SolveStats::warm_started`).
+    pub warm_started: u64,
 }
 
 /// Per batch key (engine name + optional artifact bucket) accounting:
@@ -141,12 +144,18 @@ impl Metrics {
         }
     }
 
+    /// Count one warm-started job (ε-scaling schedule or batch dual
+    /// carry) against `engine`.
+    pub fn record_warm_start(&self, engine: &'static str) {
+        self.with_engine(engine, |e| e.warm_started += 1);
+    }
+
     fn with_engine(&self, engine: &'static str, f: impl FnOnce(&mut EngineCounters)) {
         let mut per = self.per_engine.lock().unwrap();
         match per.iter_mut().find(|e| e.engine == engine) {
             Some(e) => f(e),
             None => {
-                let mut e = EngineCounters { engine, jobs: 0, phases: 0 };
+                let mut e = EngineCounters { engine, jobs: 0, phases: 0, warm_started: 0 };
                 f(&mut e);
                 per.push(e);
             }
@@ -236,6 +245,7 @@ impl Metrics {
                     ("engine", Json::Str(e.engine.to_string())),
                     ("jobs", Json::Num(e.jobs as f64)),
                     ("phase_events", Json::Num(e.phases as f64)),
+                    ("warm_started_jobs", Json::Num(e.warm_started as f64)),
                 ])
             })
             .collect();
@@ -326,8 +336,8 @@ impl Metrics {
         }
         for e in self.per_engine.lock().unwrap().iter() {
             out.push_str(&format!(
-                "engine {}: {} jobs, {} phase-events\n",
-                e.engine, e.jobs, e.phases
+                "engine {}: {} jobs, {} phase-events, {} warm-started\n",
+                e.engine, e.jobs, e.phases, e.warm_started
             ));
         }
         out
@@ -403,6 +413,22 @@ mod tests {
         let sk = counters.iter().find(|e| e.engine == "sinkhorn-native").unwrap();
         assert_eq!((sk.jobs, sk.phases), (0, 1));
         assert!(m.snapshot().contains("engine native-seq: 1 jobs, 2 phase-events"));
+    }
+
+    #[test]
+    fn warm_start_counter_tracked_per_engine_and_exported() {
+        let m = Metrics::new();
+        m.record_warm_start("native-vector-warm");
+        m.record_warm_start("native-vector-warm");
+        m.record_done("native-vector-warm", true, 0.0, 0.1);
+        let counters = m.engine_counters();
+        let e = counters.iter().find(|e| e.engine == "native-vector-warm").unwrap();
+        assert_eq!((e.jobs, e.warm_started), (1, 2));
+        assert!(m.snapshot().contains("2 warm-started"), "{}", m.snapshot());
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let engines = j.get("engines").unwrap().as_arr().unwrap();
+        assert_eq!(engines.len(), 1);
+        assert_eq!(engines[0].get("warm_started_jobs").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

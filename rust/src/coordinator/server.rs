@@ -354,6 +354,9 @@ fn worker_loop(
                     if sol.stats.arena_reused {
                         metrics.record_arena_reuse(1);
                     }
+                    if sol.stats.warm_started {
+                        metrics.record_warm_start(job.engine.name());
+                    }
                 }
                 // A budget-stopped solve is exempt from auditing — it
                 // deliberately ships without a guarantee.
@@ -536,6 +539,46 @@ mod tests {
         let snap = metrics.snapshot();
         assert!(snap.contains("batch[native-seq]"), "{snap}");
         assert!(snap.contains("kernel arena reuse hits: 7"), "{snap}");
+    }
+
+    #[test]
+    fn warm_engine_jobs_pin_warm_start_metrics() {
+        use crate::coordinator::batcher::BatcherConfig;
+        use crate::util::minijson::Json;
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_secs(5) },
+                ..Default::default()
+            },
+            None,
+        );
+        let handles: Vec<_> = (0..4)
+            .map(|i| coord.submit(assignment_job(12, i), 0.3, Engine::NativeSeqWarm).unwrap())
+            .collect();
+        for h in handles {
+            let out = h.wait().unwrap();
+            assert_eq!(out.engine_used, "native-seq-warm");
+            assert!(out.result.unwrap().stats.warm_started);
+        }
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        let counters = metrics.engine_counters();
+        let w = counters.iter().find(|e| e.engine == "native-seq-warm").expect("engine recorded");
+        assert_eq!(w.jobs, 4);
+        assert_eq!(w.warm_started, 4, "every job on the warm engine warm-starts");
+        // one batch of 4 same-shape jobs → items 1..3 carry the arena duals
+        assert!(metrics.arena_reuse_hits.load(Ordering::Relaxed) >= 3);
+        let j = Json::parse(&metrics.to_json().to_string()).expect("valid metrics JSON");
+        let warm_total: f64 = j
+            .get("engines")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("warm_started_jobs").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(warm_total, 4.0);
     }
 
     #[test]

@@ -465,7 +465,7 @@ mod tests {
     fn push_relabel_assignment_certifies() {
         let p = assignment(16, 1);
         let req = SolveRequest::new(0.3);
-        let sol = NativeSeqSolver { paranoid: true }.solve(&p, &req).unwrap();
+        let sol = NativeSeqSolver { paranoid: true, warm_levels: 0 }.solve(&p, &req).unwrap();
         let cert = certify(&p, &sol, &req);
         assert!(cert.primal_ok, "{:?}", cert.detail);
         assert_eq!(cert.dual_ok, Some(true), "{:?}", cert.detail);
@@ -478,7 +478,7 @@ mod tests {
     fn ot_push_relabel_certifies_with_duals() {
         let p = Problem::Ot(Workload::Fig1 { n: 12 }.ot_with_random_masses(3));
         let req = SolveRequest::new(0.25);
-        let sol = NativeSeqSolver { paranoid: true }.solve(&p, &req).unwrap();
+        let sol = NativeSeqSolver { paranoid: true, warm_levels: 0 }.solve(&p, &req).unwrap();
         let cert = certify(&p, &sol, &req);
         assert!(cert.primal_ok, "{:?}", cert.detail);
         assert_eq!(cert.dual_ok, Some(true), "{:?}", cert.detail);
@@ -503,7 +503,7 @@ mod tests {
     fn corrupted_matching_fails_primal() {
         let p = assignment(10, 2);
         let req = SolveRequest::new(0.3);
-        let mut sol = NativeSeqSolver { paranoid: false }.solve(&p, &req).unwrap();
+        let mut sol = NativeSeqSolver { paranoid: false, warm_levels: 0 }.solve(&p, &req).unwrap();
         if let crate::api::problem::Coupling::Matching(m) = &mut sol.coupling {
             m.unlink_b(0);
         }
@@ -517,7 +517,7 @@ mod tests {
     fn corrupted_duals_fail_with_both_units_and_dequantized() {
         let p = assignment(10, 3);
         let req = SolveRequest::new(0.3);
-        let mut sol = NativeSeqSolver { paranoid: false }.solve(&p, &req).unwrap();
+        let mut sol = NativeSeqSolver { paranoid: false, warm_levels: 0 }.solve(&p, &req).unwrap();
         sol.duals.as_mut().unwrap().yb[0] = 1_000;
         let cert = certify(&p, &sol, &req);
         assert_eq!(cert.dual_ok, Some(false));
@@ -531,7 +531,7 @@ mod tests {
     fn wrong_cost_fails_primal() {
         let p = assignment(8, 4);
         let req = SolveRequest::new(0.3);
-        let mut sol = NativeSeqSolver { paranoid: false }.solve(&p, &req).unwrap();
+        let mut sol = NativeSeqSolver { paranoid: false, warm_levels: 0 }.solve(&p, &req).unwrap();
         sol.cost += 1.0;
         let cert = certify(&p, &sol, &req);
         assert!(!cert.primal_ok);
@@ -552,7 +552,7 @@ mod tests {
     fn json_round_trips() {
         let p = assignment(6, 6);
         let req = SolveRequest::new(0.4);
-        let sol = NativeSeqSolver { paranoid: false }.solve(&p, &req).unwrap();
+        let sol = NativeSeqSolver { paranoid: false, warm_levels: 0 }.solve(&p, &req).unwrap();
         let cert = certify(&p, &sol, &req);
         let j = cert.to_json();
         assert_eq!(j.get("ok").unwrap(), &Json::Bool(true));

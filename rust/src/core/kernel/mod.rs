@@ -8,30 +8,99 @@
 //!
 //! * [`KernelArena`] — the flat SoA state (quantized costs, duals,
 //!   residual units, fixed-width cluster slots, pooled flow edges,
-//!   contiguous worklists) with allocation reuse across `init` calls;
+//!   bitset-backed worklists) with allocation reuse across `init` calls
+//!   and in-place ε re-targeting ([`KernelArena::rescale`] /
+//!   [`KernelArena::warm_reinit`]) for warm starts;
 //! * [`FlowKernel`] — the backend contract: `init` / `run_phase` /
 //!   `duals` / `extract_matching` / `unit_flow`;
 //! * [`ScalarKernel`] — sequential propose sweep;
-//! * [`ChunkedKernel`] — the same sweep fanned out over scoped threads.
+//! * [`ChunkedKernel`] — the same sweep fanned out over scoped threads;
+//! * [`VectorKernel`] — the sweep over a lane-blocked cost mirror with
+//!   block-min skipping (auto-vectorized, cache-tiled).
 //!
 //! **Backend equivalence is a hard contract**: a phase proposes against a
 //! stable snapshot and commits sequentially in ascending vertex order,
-//! so scalar and chunked produce *identical* matchings, plans, duals,
-//! and round counts at every thread count
+//! so scalar, chunked, and vector produce *identical* matchings, plans,
+//! duals, and round counts at every thread or lane count
 //! (`tests/conformance_golden.rs` pins this on the golden corpus).
 //!
-//! Drivers own policy — ε semantics, θ-scaling, phase caps, completion —
-//! while invariant checks live here ([`KernelArena::check_invariants`],
-//! plus `debug_assertions` on the phase loop) so `certify` keeps working
-//! against any backend unchanged.
+//! Drivers own policy — ε semantics, θ-scaling, phase caps, completion,
+//! and the [`WarmStart`] ε-scaling schedule — while invariant checks live
+//! here ([`KernelArena::check_invariants`], plus `debug_assertions` on
+//! the phase loop) so `certify` keeps working against any backend
+//! unchanged.
 
 pub mod arena;
 pub mod chunked;
 pub mod scalar;
+pub mod vector;
 
 pub use arena::{KernelArena, KernelPhase, KernelView, PlanItem, PLAN_WIDTH, SLOTS, SLOT_FREE};
 pub use chunked::ChunkedKernel;
 pub use scalar::ScalarKernel;
+pub use vector::VectorKernel;
+
+/// ε-scaling warm-start policy the drivers (`drive_assignment` /
+/// `drive_ot`) execute: solve a geometric ε schedule coarse→fine
+/// (e.g. 4ε → 2ε → ε), carrying the arena's duals and still-tight flow
+/// across levels via [`KernelArena::rescale`]; in batched solves,
+/// additionally reuse the previous same-shape instance's duals via
+/// [`KernelArena::warm_reinit`] instead of re-running the coarse levels.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WarmStart {
+    /// Geometric ε levels (…4ε, 2ε, ε). 0 or 1 = single-level cold solve.
+    pub levels: u32,
+    /// Reuse the arena's duals from the previous same-shape solve instead
+    /// of running the coarse levels (the batch path; silently falls back
+    /// to the schedule when the arena holds no compatible state).
+    pub carry: bool,
+}
+
+impl WarmStart {
+    /// Single-level solve, no dual reuse — the historical behavior.
+    pub const COLD: WarmStart = WarmStart { levels: 0, carry: false };
+
+    /// A `levels`-deep geometric schedule with batch dual reuse enabled.
+    pub fn geometric(levels: u32) -> Self {
+        Self { levels, carry: true }
+    }
+
+    /// The ε schedule ending at `eps`, coarsest first. Levels at or above
+    /// 1.0 are dropped (quantization requires ε < 1), so a coarse target
+    /// simply gets a shorter schedule.
+    pub fn schedule(&self, eps: f64) -> Vec<f64> {
+        let l = self.levels.max(1);
+        let mut v: Vec<f64> = (0..l)
+            .map(|i| eps * f64::powi(2.0, (l - 1 - i) as i32))
+            .filter(|e| *e < 1.0)
+            .collect();
+        if v.is_empty() {
+            v.push(eps);
+        }
+        v
+    }
+
+    /// Resolve the level plan for one solve against the arena's current
+    /// state — the single policy both drivers (`drive_assignment` /
+    /// `drive_ot`) share, so the carry predicate and schedule semantics
+    /// cannot drift apart. Returns `(schedule, carried, warm_started)`:
+    /// a batch carry (duals reused via [`KernelArena::warm_reinit`])
+    /// requires a previously initialized arena of exactly the instance's
+    /// shape and jumps straight to the target ε; otherwise the geometric
+    /// schedule runs.
+    pub fn plan(
+        &self,
+        arena: &KernelArena,
+        nb: usize,
+        na: usize,
+        eps: f64,
+    ) -> (Vec<f64>, bool, bool) {
+        let carried = self.carry && arena.inits > 0 && arena.nb() == nb && arena.na() == na;
+        let schedule = if carried { vec![eps] } else { self.schedule(eps) };
+        let warm_started = carried || schedule.len() > 1;
+        (schedule, carried, warm_started)
+    }
+}
 
 use crate::core::cost::CostMatrix;
 use crate::core::duals::DualWeights;
@@ -169,6 +238,77 @@ mod tests {
             assert!(got + k.arena().a_free()[a] == demand[a], "a={a}");
         }
         assert!(k.arena().max_classes_seen <= 2, "Lemma 4.1");
+    }
+
+    #[test]
+    fn warm_start_schedule_shapes() {
+        assert_eq!(WarmStart::COLD.schedule(0.1), vec![0.1]);
+        assert_eq!(WarmStart::geometric(3).schedule(0.1), vec![0.4, 0.2, 0.1]);
+        // coarse levels at or above 1.0 drop off the front
+        assert_eq!(WarmStart::geometric(3).schedule(0.3), vec![0.6, 0.3]);
+        assert_eq!(WarmStart::geometric(1).schedule(0.2), vec![0.2]);
+        assert!(WarmStart::geometric(3).carry);
+        assert!(!WarmStart::COLD.carry);
+
+        // plan(): a batch carry needs an initialized arena of the exact
+        // instance shape; anything else falls back to the schedule.
+        let mut k = ScalarKernel::new();
+        let w = WarmStart::geometric(3);
+        let (sched, carried, warm) = w.plan(k.arena(), 6, 6, 0.1);
+        assert!(!carried, "uninitialized arena cannot carry");
+        assert!(warm && sched.len() == 3);
+        k.init(&random_costs(6, 1), 0.2, None);
+        let (sched, carried, warm) = w.plan(k.arena(), 6, 6, 0.1);
+        assert!(carried && warm);
+        assert_eq!(sched, vec![0.1], "carry jumps straight to the target ε");
+        let (sched, carried, _) = w.plan(k.arena(), 7, 7, 0.1);
+        assert!(!carried && sched.len() == 3, "shape mismatch falls back");
+    }
+
+    #[test]
+    fn rescale_preserves_feasibility_and_reaches_fine_threshold() {
+        use crate::core::duals::check_feasible;
+        for seed in 0..3u64 {
+            let costs = random_costs(22, seed);
+            let mut k = ScalarKernel::new();
+            k.init(&costs, 0.4, None);
+            k.run_to_termination(10_000).unwrap();
+            let coarse_phases = k.arena().phases;
+            k.arena_mut().rescale(&costs, 0.1);
+            // immediately after the rescale the state is ε-feasible…
+            k.check_invariants().unwrap();
+            k.run_to_termination(100_000).unwrap();
+            k.check_invariants().unwrap();
+            // …and the continued solve meets the fine ε's free threshold
+            assert!(k.arena().free_units() <= k.arena().threshold(), "seed {seed}");
+            check_feasible(&k.arena().q, &k.extract_matching(), &k.duals()).unwrap();
+            assert!(k.arena().phases >= coarse_phases);
+            assert_eq!(k.arena().rescales, 1);
+        }
+    }
+
+    #[test]
+    fn warm_reinit_carries_clamped_duals_to_a_new_instance() {
+        use crate::core::duals::check_feasible;
+        let (c1, c2) = (random_costs(12, 1), random_costs(12, 2));
+        let mut k = ScalarKernel::new();
+        k.init(&c1, 0.2, None);
+        k.run_to_termination(10_000).unwrap();
+        k.arena_mut().warm_reinit(&c2, 0.2, None);
+        for b in 0..12 {
+            let y = k.arena().y_free()[b];
+            assert!(y >= 1, "carried duals stay in the paper's init band");
+            let bound = k.arena().q.row(b).iter().min().unwrap() + 1;
+            assert!(y <= bound, "b={b}: y={y} violates (2) against free demand");
+        }
+        k.check_invariants().unwrap();
+        k.run_to_termination(10_000).unwrap();
+        let m = k.extract_matching();
+        m.check_consistent().unwrap();
+        assert!(k.arena().free_units() <= k.arena().threshold());
+        check_feasible(&k.arena().q, &m, &k.duals()).unwrap();
+        assert_eq!(k.arena().warm_reinits, 1);
+        assert!(k.arena().last_init_reused, "warm_reinit reuses the arena allocations");
     }
 
     #[test]

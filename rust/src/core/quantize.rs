@@ -16,6 +16,12 @@
 
 use crate::core::cost::CostMatrix;
 
+/// Lane width of the vector kernel backend's blocked cost layout. Eight
+/// `i32` lanes fill one 256-bit register, so the per-block min reductions
+/// in [`QuantizedCosts::build_lane_blocks`] auto-vectorize on stable Rust
+/// without any SIMD intrinsics or new dependencies.
+pub const LANES: usize = 8;
+
 #[derive(Debug, Clone)]
 pub struct QuantizedCosts {
     pub nb: usize,
@@ -81,6 +87,39 @@ impl QuantizedCosts {
     pub fn max_units(&self) -> i32 {
         (1.0 / self.eps).floor() as i32
     }
+
+    /// `na` padded up to the vector backend's lane width.
+    pub fn na_padded(&self) -> usize {
+        self.na.div_ceil(LANES) * LANES
+    }
+
+    /// Mirror `cq` into a lane-padded slab (`nb × na_padded`, pad lanes =
+    /// `i32::MAX` so they can never look admissible) plus per-row block
+    /// minima (`nb × na_padded/LANES`) — the vector kernel's layout. The
+    /// propose sweep skips a whole block with one compare against its
+    /// minimum, touching 1/[`LANES`] of the memory on non-admissible row
+    /// segments. Reuses the caller's allocations across re-quantizations.
+    pub fn build_lane_blocks(&self, lane_cq: &mut Vec<i32>, lane_min: &mut Vec<i32>) {
+        let na_pad = self.na_padded();
+        let nblk = na_pad / LANES;
+        lane_cq.clear();
+        lane_cq.resize(self.nb * na_pad, i32::MAX);
+        lane_min.clear();
+        lane_min.resize(self.nb * nblk, i32::MAX);
+        for b in 0..self.nb {
+            lane_cq[b * na_pad..b * na_pad + self.na].copy_from_slice(self.row(b));
+            for blk in 0..nblk {
+                let lane = &lane_cq[b * na_pad + blk * LANES..b * na_pad + (blk + 1) * LANES];
+                // branchless fixed-width min: one lane-min + horizontal
+                // reduce once LLVM unrolls the 8 iterations
+                let mut m = lane[0];
+                for &v in &lane[1..] {
+                    m = if v < m { v } else { m };
+                }
+                lane_min[b * nblk + blk] = m;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +178,38 @@ mod tests {
     fn rejects_bad_eps() {
         let c = CostMatrix::zeros(1, 1);
         let _ = QuantizedCosts::new(&c, 1.5);
+    }
+
+    #[test]
+    fn lane_blocks_pad_and_min_correctly() {
+        // na = 5: one block, lanes 5..8 padded with i32::MAX
+        let c = CostMatrix::from_vec(2, 5, vec![0.3, 0.1, 0.9, 0.5, 0.7, 1.0, 0.2, 0.4, 0.6, 0.8])
+            .unwrap();
+        let q = QuantizedCosts::new(&c, 0.1);
+        assert_eq!(q.na_padded(), 8);
+        let (mut lane_cq, mut lane_min) = (Vec::new(), Vec::new());
+        q.build_lane_blocks(&mut lane_cq, &mut lane_min);
+        assert_eq!(lane_cq.len(), 2 * 8);
+        assert_eq!(lane_min.len(), 2);
+        for b in 0..2 {
+            assert_eq!(&lane_cq[b * 8..b * 8 + 5], q.row(b), "real lanes mirror cq");
+            assert!(lane_cq[b * 8 + 5..(b + 1) * 8].iter().all(|&v| v == i32::MAX));
+            assert_eq!(lane_min[b], *q.row(b).iter().min().unwrap());
+        }
+        // multiple blocks + allocation reuse across a requantize
+        let c = CostMatrix::from_fn(3, 17, |b, a| ((b * 7 + a) % 13) as f32 / 13.0);
+        let q2 = QuantizedCosts::new(&c, 0.2);
+        q2.build_lane_blocks(&mut lane_cq, &mut lane_min);
+        assert_eq!(q2.na_padded(), 24);
+        assert_eq!(lane_min.len(), 3 * 3);
+        for b in 0..3 {
+            for blk in 0..3 {
+                let lo = blk * LANES;
+                let hi = (lo + LANES).min(17);
+                let want = q2.row(b)[lo..hi].iter().copied().min().unwrap();
+                assert_eq!(lane_min[b * 3 + blk], want, "b={b} blk={blk}");
+            }
+        }
     }
 
     #[test]

@@ -30,7 +30,12 @@ pub struct BenchKernelConfig {
 impl Default for BenchKernelConfig {
     fn default() -> Self {
         Self {
-            engines: vec!["native-seq".into(), "native-parallel".into()],
+            engines: vec![
+                "native-seq".into(),
+                "native-parallel".into(),
+                "native-vector".into(),
+                "native-vector-warm".into(),
+            ],
             sizes: vec![200, 400, 800],
             eps: vec![0.1, 0.05],
             reps: 3,
@@ -157,6 +162,145 @@ pub fn to_json(cfg: &BenchKernelConfig, records: &[BenchRecord]) -> Json {
     ])
 }
 
+/// Engine every cell is normalized against for the regression gate:
+/// absolute ns/op is not comparable across hosts, but each engine's ratio
+/// to the scalar reference *is*, so that ratio is what gates.
+pub const COMPARE_REFERENCE: &str = "native-seq";
+
+/// Flat `(engine, n, eps, ns_per_op)` index of a bench artifact
+/// (`BENCH_kernel*.json`); error cells (null ns) are skipped.
+pub fn load_baseline(text: &str) -> Result<Vec<(String, usize, f64, f64)>, String> {
+    let json = Json::parse(text)?;
+    let records = json
+        .get("records")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| "baseline has no records array".to_string())?;
+    let mut out = Vec::new();
+    for r in records {
+        let engine = r
+            .get("engine")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| "record missing engine".to_string())?;
+        let n = r
+            .get("n")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| "record missing n".to_string())?;
+        let eps = r
+            .get("eps")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| "record missing eps".to_string())?;
+        if let Some(ns) = r.get("ns_per_op").and_then(|v| v.as_f64()) {
+            if ns.is_finite() && ns > 0.0 {
+                out.push((engine.to_string(), n, eps, ns));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// One (engine, n, eps) cell present in both the current run and the
+/// baseline artifact.
+#[derive(Debug, Clone)]
+pub struct CompareCell {
+    pub engine: String,
+    pub n: usize,
+    pub eps: f64,
+    pub base_ns: f64,
+    pub cur_ns: f64,
+    /// baseline/current wall clock (>1 = faster now). Host-dependent.
+    pub speedup: f64,
+    /// (engine/reference) ns ratio, current vs baseline (>1 = this engine
+    /// regressed relative to [`COMPARE_REFERENCE`]); `None` when either
+    /// run lacks the reference cell, or for the reference itself.
+    pub rel_change: Option<f64>,
+}
+
+/// Join the current records against a loaded baseline on (engine, n, eps).
+pub fn compare(
+    current: &[BenchRecord],
+    baseline: &[(String, usize, f64, f64)],
+) -> Vec<CompareCell> {
+    let find_base = |e: &str, n: usize, eps: f64| {
+        baseline
+            .iter()
+            .find(|(be, bn, beps, _)| be == e && *bn == n && (*beps - eps).abs() < 1e-12)
+            .map(|t| t.3)
+    };
+    let find_cur = |e: &str, n: usize, eps: f64| {
+        current
+            .iter()
+            .find(|r| r.engine == e && r.n == n && (r.eps - eps).abs() < 1e-12 && r.error.is_none())
+            .map(|r| r.ns_per_op)
+    };
+    let mut out = Vec::new();
+    for r in current {
+        if r.error.is_some() || !r.ns_per_op.is_finite() {
+            continue;
+        }
+        let Some(base_ns) = find_base(&r.engine, r.n, r.eps) else { continue };
+        let rel_change = if r.engine == COMPARE_REFERENCE {
+            None
+        } else {
+            match (
+                find_cur(COMPARE_REFERENCE, r.n, r.eps),
+                find_base(COMPARE_REFERENCE, r.n, r.eps),
+            ) {
+                (Some(cr), Some(br)) if cr > 0.0 && br > 0.0 => {
+                    Some((r.ns_per_op / cr) / (base_ns / br))
+                }
+                _ => None,
+            }
+        };
+        out.push(CompareCell {
+            engine: r.engine.clone(),
+            n: r.n,
+            eps: r.eps,
+            base_ns,
+            cur_ns: r.ns_per_op,
+            speedup: base_ns / r.ns_per_op,
+            rel_change,
+        });
+    }
+    out
+}
+
+/// Cells whose reference-relative cost grew more than `threshold`
+/// (0.10 = 10%) — the nightly perf-gate failures.
+pub fn regressions(cells: &[CompareCell], threshold: f64) -> Vec<String> {
+    cells
+        .iter()
+        .filter_map(|c| match c.rel_change {
+            Some(rc) if rc > 1.0 + threshold => Some(format!(
+                "{} n={} eps={}: {:.1}% slower relative to {COMPARE_REFERENCE} \
+                 (ratio {rc:.3}× baseline)",
+                c.engine,
+                c.n,
+                c.eps,
+                (rc - 1.0) * 100.0
+            )),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Per-config speedup table for `otpr bench --compare`.
+pub fn compare_table(cells: &[CompareCell]) -> String {
+    let mut out = String::from(
+        "engine             n      eps    base ns/op      now ns/op       speedup  vs-ref\n",
+    );
+    for c in cells {
+        let rel = match c.rel_change {
+            Some(rc) => format!("{rc:.3}x"),
+            None => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<18} {:<6} {:<6} {:<15.0} {:<15.0} {:<8.2} {rel}\n",
+            c.engine, c.n, c.eps, c.base_ns, c.cur_ns, c.speedup
+        ));
+    }
+    out
+}
+
 /// Fixed-width table for CLI output.
 pub fn table(records: &[BenchRecord]) -> String {
     let mut out =
@@ -203,6 +347,49 @@ mod tests {
             2
         );
         assert!(table(&records).contains("native-seq"));
+    }
+
+    #[test]
+    fn compare_round_trips_and_gates_on_relative_regression() {
+        let cfg = BenchKernelConfig {
+            engines: vec!["native-seq".into(), "native-vector".into()],
+            sizes: vec![20],
+            eps: vec![0.3],
+            reps: 1,
+            seed: 2,
+        };
+        let records = run(&cfg);
+        let artifact = to_json(&cfg, &records).to_string();
+        let baseline = load_baseline(&artifact).expect("artifact round-trips");
+        assert_eq!(baseline.len(), 2);
+        // self-comparison: speedup 1.0, relative ratio exactly 1.0, no gate
+        let cells = compare(&records, &baseline);
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!((c.speedup - 1.0).abs() < 1e-9);
+            if c.engine == COMPARE_REFERENCE {
+                assert!(c.rel_change.is_none(), "reference never gates on itself");
+            } else {
+                assert!((c.rel_change.unwrap() - 1.0).abs() < 1e-9);
+            }
+        }
+        assert!(regressions(&cells, 0.10).is_empty());
+        assert!(compare_table(&cells).contains("native-vector"));
+
+        // a baseline where the vector engine used to be 2× faster relative
+        // to native-seq than it is now → >10% relative regression fires
+        let slowed: Vec<(String, usize, f64, f64)> = baseline
+            .iter()
+            .map(|(e, n, eps, ns)| {
+                let ns = if e == "native-vector" { ns / 2.0 } else { *ns };
+                (e.clone(), *n, *eps, ns)
+            })
+            .collect();
+        let regs = regressions(&compare(&records, &slowed), 0.10);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("native-vector"));
+        // mismatched grids simply produce no cells (no false gate)
+        assert!(compare(&records, &[("native-seq".into(), 999, 0.3, 1.0)]).is_empty());
     }
 
     #[test]

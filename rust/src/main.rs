@@ -6,6 +6,7 @@
 //!   serve     run the coordinator service on a synthetic job stream
 //!   engines   list the registered solver engines + aliases
 //!   bench     kernel timing sweep {engines}×{n}×{ε} → BENCH_kernel.json
+//!             (--compare <baseline.json> adds the perf regression gate)
 //!   fig1      regenerate Figure 1 (runtime vs n, synthetic points)
 //!   fig2      regenerate Figure 2 (runtime vs ε, MNIST-style images)
 //!   ablation  analytical ablations A1–A6 (see DESIGN.md §4)
@@ -276,7 +277,9 @@ fn cmd_serve(args: &Args) -> i32 {
 }
 
 fn cmd_bench(args: &Args) -> i32 {
-    use otpr::exp::bench_kernel::{run, table, to_json, BenchKernelConfig};
+    use otpr::exp::bench_kernel::{
+        compare, compare_table, load_baseline, regressions, run, table, to_json, BenchKernelConfig,
+    };
     let mut cfg = if args.flag("smoke") {
         BenchKernelConfig::smoke()
     } else {
@@ -316,10 +319,45 @@ fn cmd_bench(args: &Args) -> i32 {
         .count();
     if native_errors > 0 {
         eprintln!("{native_errors} native bench cell(s) failed");
-        1
-    } else {
-        0
+        return 1;
     }
+    // perf regression gate: --compare <baseline.json> joins on
+    // (engine, n, eps) and fails on a >--gate (default 10%) regression of
+    // each engine's ns/op *relative to native-seq in the same run* — the
+    // host-independent ratio, so a committed baseline from another
+    // machine still gates meaningfully.
+    if let Some(base_path) = args.get("compare") {
+        let threshold = args.f64_or("gate", 0.10);
+        let baseline = match std::fs::read_to_string(base_path)
+            .map_err(|e| e.to_string())
+            .and_then(|t| load_baseline(&t))
+        {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("could not load baseline {base_path}: {e}");
+                return 1;
+            }
+        };
+        let cells = compare(&records, &baseline);
+        if cells.is_empty() {
+            eprintln!("no overlapping (engine, n, eps) cells between this run and {base_path}");
+            return 1;
+        }
+        println!("comparison vs {base_path}:\n{}", compare_table(&cells));
+        let regs = regressions(&cells, threshold);
+        if !regs.is_empty() {
+            for r in &regs {
+                eprintln!("PERF REGRESSION: {r}");
+            }
+            return 1;
+        }
+        println!(
+            "perf gate: no regression > {:.0}% vs {base_path} ({} cells)",
+            threshold * 100.0,
+            cells.len()
+        );
+    }
+    0
 }
 
 fn cmd_fig1(args: &Args) -> i32 {

@@ -28,6 +28,13 @@ pub struct SolveStats {
     /// True when this solve reused a warm kernel arena (batch path;
     /// counted into `coordinator::Metrics` as a reuse hit).
     pub arena_reused: bool,
+    /// True when the solve warm-started: either an ε-scaling schedule
+    /// (coarse→fine levels) or a batch dual carry-over from the previous
+    /// same-shape instance. Counted per engine by `coordinator::Metrics`.
+    pub warm_started: bool,
+    /// ε levels the solve ran (1 = single-level; 0 for engines without
+    /// the concept — exact oracles, Sinkhorn, XLA).
+    pub eps_levels: u32,
     /// Free-form solver-specific notes (e.g. "underflow" for Sinkhorn).
     pub notes: Vec<String>,
 }

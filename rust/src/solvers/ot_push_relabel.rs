@@ -18,7 +18,7 @@
 //! + residual supply shipped greedily ≤ ε/4.
 
 use crate::core::control::{SolveControl, CANCELLED_NOTE};
-use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel};
+use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, WarmStart};
 use crate::core::{OtInstance, OtprError, Result, ScaledOtInstance, TransportPlan};
 use crate::solvers::{OtSolution, OtSolver, SolveStats};
 use crate::util::timer::Stopwatch;
@@ -32,8 +32,12 @@ pub fn ot_phase_cap(eps: f64) -> usize {
 /// Drive any [`FlowKernel`] backend through a full OT solve: θ-scale,
 /// loop phases under the cap with `ctl` polled at every boundary, then
 /// complete (leftover units + sub-unit residuals) into a feasible plan.
-/// The *only* OT phase loop in the crate; sequential vs chunked OT
-/// differ purely in the backend passed here.
+/// The *only* OT phase loop in the crate; the engines differ purely in
+/// the backend and [`WarmStart`] policy passed here.
+///
+/// Warm starts schedule the **matching** ε (the kernel quantization);
+/// the mass scaling θ = 4n/ε_mass is fixed across levels, so the unit
+/// masses never change — only costs requantize and duals/flow carry.
 pub(crate) fn drive_ot(
     kernel: &mut dyn FlowKernel,
     inst: &OtInstance,
@@ -41,6 +45,7 @@ pub(crate) fn drive_ot(
     eps_match: f64,
     ctl: &SolveControl,
     paranoid: bool,
+    warm: WarmStart,
 ) -> Result<OtSolution> {
     let sw = Stopwatch::start();
     // Already stopped (e.g. a shared batch token fired): skip θ-scaling
@@ -61,28 +66,42 @@ pub(crate) fn drive_ot(
         });
     }
     let scaled = ScaledOtInstance::build(inst, eps_mass);
-    kernel.init(
-        &inst.costs,
-        eps_match,
-        Some((&scaled.supply_units[..], &scaled.demand_units[..])),
-    );
-    let cap = ot_phase_cap(eps_match);
+    let masses = Some((&scaled.supply_units[..], &scaled.demand_units[..]));
+    // Level plan shared with drive_assignment via WarmStart::plan.
+    let (schedule, carried, warm_started) =
+        warm.plan(kernel.arena(), inst.costs.nb, inst.costs.na, eps_match);
+    if carried {
+        kernel.arena_mut().warm_reinit(&inst.costs, eps_match, masses);
+    } else {
+        kernel.init(&inst.costs, schedule[0], masses);
+    }
     let mut cancelled = false;
-    loop {
-        if ctl.should_stop() {
-            cancelled = true;
-            break;
+    let mut levels_run = 0u32;
+    'levels: for (li, &eps_l) in schedule.iter().enumerate() {
+        if li > 0 {
+            kernel.arena_mut().rescale(&inst.costs, eps_l);
         }
-        let out = kernel.run_phase();
-        if paranoid {
-            kernel.check_invariants().map_err(OtprError::Infeasible)?;
-        }
-        if out.terminated {
-            break;
-        }
-        ctl.report(kernel.arena().phases, kernel.arena().free_units() as f64);
-        if kernel.arena().phases > cap {
-            return Err(OtprError::Infeasible(format!("OT phase cap {cap} exceeded (bug)")));
+        levels_run += 1;
+        let cap = ot_phase_cap(eps_l);
+        let level_start = kernel.arena().phases;
+        loop {
+            if ctl.should_stop() {
+                cancelled = true;
+                break 'levels;
+            }
+            let out = kernel.run_phase();
+            if paranoid {
+                kernel.check_invariants().map_err(OtprError::Infeasible)?;
+            }
+            if out.terminated {
+                break;
+            }
+            ctl.report(kernel.arena().phases, kernel.arena().free_units() as f64);
+            if kernel.arena().phases - level_start > cap {
+                return Err(OtprError::Infeasible(format!(
+                    "OT phase cap {cap} exceeded at eps={eps_l} (bug)"
+                )));
+            }
         }
     }
 
@@ -164,6 +183,10 @@ pub(crate) fn drive_ot(
             rounds: arena.rounds,
             seconds: sw.elapsed_secs(),
             arena_reused: arena.last_init_reused,
+            warm_started,
+            // levels actually entered — a cancellation mid-schedule must
+            // not report levels that never ran
+            eps_levels: levels_run.max(1),
             notes,
         },
     })
@@ -179,6 +202,8 @@ pub struct OtPushRelabel {
     pub paranoid: bool,
     /// 0 or 1 → scalar backend; ≥ 2 → chunked backend.
     pub threads: usize,
+    /// ε-scaling warm-start levels on the matching ε (0/1 = cold).
+    pub warm_levels: u32,
 }
 
 impl OtPushRelabel {
@@ -188,7 +213,7 @@ impl OtPushRelabel {
 
     /// Run the chunked kernel backend with `threads` sweep threads.
     pub fn with_threads(threads: usize) -> Self {
-        Self { paranoid: false, threads }
+        Self { paranoid: false, threads, warm_levels: 0 }
     }
 
     /// Solve with explicit mass-scaling ε and matching ε parameters.
@@ -212,12 +237,13 @@ impl OtPushRelabel {
         eps_match: f64,
         ctl: &SolveControl,
     ) -> Result<OtSolution> {
+        let warm = WarmStart { levels: self.warm_levels, carry: false };
         if self.threads >= 2 {
             let mut kernel = ChunkedKernel::new(self.threads);
-            drive_ot(&mut kernel, inst, eps_mass, eps_match, ctl, self.paranoid)
+            drive_ot(&mut kernel, inst, eps_mass, eps_match, ctl, self.paranoid, warm)
         } else {
             let mut kernel = ScalarKernel::new();
-            drive_ot(&mut kernel, inst, eps_mass, eps_match, ctl, self.paranoid)
+            drive_ot(&mut kernel, inst, eps_mass, eps_match, ctl, self.paranoid, warm)
         }
     }
 }
@@ -276,7 +302,9 @@ mod tests {
     #[test]
     fn invariants_hold_every_phase() {
         let inst = Workload::Fig1 { n: 10 }.ot_with_random_masses(3);
-        let sol = OtPushRelabel { paranoid: true, threads: 0 }.solve_ot(&inst, 0.3).unwrap();
+        let sol = OtPushRelabel { paranoid: true, threads: 0, warm_levels: 0 }
+            .solve_ot(&inst, 0.3)
+            .unwrap();
         assert!(sol.cost.is_finite());
     }
 
@@ -325,6 +353,27 @@ mod tests {
         let sol = OtPushRelabel::new().solve_ot(&inst, 0.3).unwrap();
         assert!(sol.stats.phases > 0);
         assert!(sol.stats.notes[0].starts_with("max_clusters="));
+    }
+
+    #[test]
+    fn warm_started_ot_keeps_the_additive_guarantee() {
+        let inst = Workload::Fig1 { n: 14 }.ot_with_random_masses(6);
+        let eps = 0.25;
+        let warm = OtPushRelabel { paranoid: true, threads: 0, warm_levels: 3 }
+            .solve_ot(&inst, eps)
+            .unwrap();
+        assert!(warm.stats.warm_started);
+        assert!(warm.stats.eps_levels >= 2);
+        assert!((warm.plan.total_mass() - 1.0).abs() < 1e-9, "all supply shipped");
+        let exact = SspExactOt::default().solve_ot(&inst, 0.0).unwrap();
+        let c_max = inst.costs.max() as f64;
+        assert!(
+            warm.cost <= exact.cost + eps * c_max + 1e-9,
+            "warm {} > exact {} + {}",
+            warm.cost,
+            exact.cost,
+            eps * c_max
+        );
     }
 
     #[test]

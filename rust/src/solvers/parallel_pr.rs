@@ -13,7 +13,7 @@
 //! expected rounds; ablation A2 measures it.
 
 use crate::core::control::SolveControl;
-use crate::core::kernel::ChunkedKernel;
+use crate::core::kernel::{ChunkedKernel, WarmStart};
 use crate::core::{AssignmentInstance, Result};
 use crate::solvers::push_relabel::drive_assignment;
 use crate::solvers::{AssignmentSolution, AssignmentSolver};
@@ -56,7 +56,8 @@ impl ParallelPushRelabel {
         ctl: &SolveControl,
     ) -> Result<AssignmentSolution> {
         let mut kernel = ChunkedKernel::new(self.threads);
-        let mut sol = drive_assignment(&mut kernel, inst, eps_param, ctl, self.paranoid)?;
+        let mut sol =
+            drive_assignment(&mut kernel, inst, eps_param, ctl, self.paranoid, WarmStart::COLD)?;
         sol.stats.notes.insert(0, format!("threads={}", self.threads.max(1)));
         Ok(sol)
     }

@@ -14,7 +14,7 @@
 
 use crate::core::control::{SolveControl, CANCELLED_NOTE};
 use crate::core::duals::check_feasible;
-use crate::core::kernel::{FlowKernel, ScalarKernel};
+use crate::core::kernel::{FlowKernel, ScalarKernel, WarmStart};
 use crate::core::matching::Matching;
 use crate::core::{AssignmentInstance, OtprError, Result};
 use crate::solvers::{AssignmentSolution, AssignmentSolver, SolveStats};
@@ -29,16 +29,24 @@ pub fn assignment_phase_cap(eps: f64) -> usize {
 }
 
 /// Drive any [`FlowKernel`] backend through a full assignment solve:
-/// init at `eps_param`, loop phases under the cap with `ctl` polled at
+/// init (or warm-start), loop phases under the cap with `ctl` polled at
 /// every boundary, then complete arbitrarily and extract. This is the
-/// *only* assignment phase loop in the crate — the sequential and
-/// parallel engines differ purely in the kernel backend they pass.
+/// *only* assignment phase loop in the crate — the engines differ purely
+/// in the kernel backend and [`WarmStart`] policy they pass.
+///
+/// Warm starts: a `warm.levels ≥ 2` request solves the geometric ε
+/// schedule (4ε → 2ε → ε), rescaling the arena in place between levels;
+/// `warm.carry` additionally reuses the arena's duals from a previous
+/// same-shape solve (the batch path) and jumps straight to the target ε.
+/// Either way the final state is exactly as ε-feasible as a cold solve,
+/// so the Theorem 1 guarantee and every certificate check carry over.
 pub(crate) fn drive_assignment(
     kernel: &mut dyn FlowKernel,
     inst: &AssignmentInstance,
     eps_param: f64,
     ctl: &SolveControl,
     paranoid: bool,
+    warm: WarmStart,
 ) -> Result<AssignmentSolution> {
     let sw = Stopwatch::start();
     if inst.n() == 0 {
@@ -66,30 +74,48 @@ pub(crate) fn drive_assignment(
             },
         });
     }
-    kernel.init(&inst.costs, eps_param, None);
-    let cap = assignment_phase_cap(eps_param);
+    // Level plan (shared with drive_ot via WarmStart::plan): a batch
+    // carry reuses the arena's duals and jumps straight to the target ε;
+    // otherwise a multi-level warm start solves the geometric schedule,
+    // rescaling the arena between levels.
+    let (schedule, carried, warm_started) =
+        warm.plan(kernel.arena(), inst.costs.nb, inst.costs.na, eps_param);
+    if carried {
+        kernel.arena_mut().warm_reinit(&inst.costs, eps_param, None);
+    } else {
+        kernel.init(&inst.costs, schedule[0], None);
+    }
     let mut cancelled = false;
-    loop {
-        if ctl.should_stop() {
-            cancelled = true;
-            break;
+    let mut levels_run = 0u32;
+    'levels: for (li, &eps_l) in schedule.iter().enumerate() {
+        if li > 0 {
+            kernel.arena_mut().rescale(&inst.costs, eps_l);
         }
-        let out = kernel.run_phase();
-        if paranoid {
-            kernel.check_invariants().map_err(OtprError::Infeasible)?;
-            check_feasible(&kernel.arena().q, &kernel.extract_matching(), &kernel.duals())
-                .map_err(OtprError::Infeasible)?;
-        }
-        if out.terminated {
-            break;
-        }
-        // Recount rather than free_at_start - matched: pushes can evict
-        // already-matched partners, which return to the free pool.
-        ctl.report(kernel.arena().phases, kernel.arena().free_units() as f64);
-        if kernel.arena().phases > cap {
-            return Err(OtprError::Infeasible(format!(
-                "phase cap {cap} exceeded — phase-count bound violated (bug)"
-            )));
+        levels_run += 1;
+        let cap = assignment_phase_cap(eps_l);
+        let level_start = kernel.arena().phases;
+        loop {
+            if ctl.should_stop() {
+                cancelled = true;
+                break 'levels;
+            }
+            let out = kernel.run_phase();
+            if paranoid {
+                kernel.check_invariants().map_err(OtprError::Infeasible)?;
+                check_feasible(&kernel.arena().q, &kernel.extract_matching(), &kernel.duals())
+                    .map_err(OtprError::Infeasible)?;
+            }
+            if out.terminated {
+                break;
+            }
+            // Recount rather than free_at_start - matched: pushes can evict
+            // already-matched partners, which return to the free pool.
+            ctl.report(kernel.arena().phases, kernel.arena().free_units() as f64);
+            if kernel.arena().phases - level_start > cap {
+                return Err(OtprError::Infeasible(format!(
+                    "phase cap {cap} exceeded at eps={eps_l} — phase-count bound violated (bug)"
+                )));
+            }
         }
     }
     // arbitrary completion of the ≤ εn leftover free vertices
@@ -113,6 +139,10 @@ pub(crate) fn drive_assignment(
             rounds: arena.rounds,
             seconds: sw.elapsed_secs(),
             arena_reused: arena.last_init_reused,
+            warm_started,
+            // levels actually entered — a cancellation mid-schedule must
+            // not report levels that never ran
+            eps_levels: levels_run.max(1),
             notes,
         },
     })
@@ -129,6 +159,9 @@ pub(crate) fn drive_assignment(
 pub struct PushRelabel {
     /// Verify invariants after every phase (tests; O(n²) per phase).
     pub paranoid: bool,
+    /// ε-scaling warm-start levels (0 or 1 = the historical cold solve;
+    /// ≥ 2 = geometric schedule, see [`WarmStart`]).
+    pub warm_levels: u32,
 }
 
 impl PushRelabel {
@@ -157,7 +190,8 @@ impl PushRelabel {
         ctl: &SolveControl,
     ) -> Result<AssignmentSolution> {
         let mut kernel = ScalarKernel::new();
-        drive_assignment(&mut kernel, inst, eps_param, ctl, self.paranoid)
+        let warm = WarmStart { levels: self.warm_levels, carry: false };
+        drive_assignment(&mut kernel, inst, eps_param, ctl, self.paranoid, warm)
     }
 }
 
@@ -194,7 +228,7 @@ mod tests {
     #[test]
     fn invariants_hold_every_phase() {
         let i = inst(30, 2);
-        let sol = PushRelabel { paranoid: true }.solve_with_param(&i, 0.2).unwrap();
+        let sol = PushRelabel { paranoid: true, warm_levels: 0 }.solve_with_param(&i, 0.2).unwrap();
         assert!(sol.matching.is_perfect());
     }
 
@@ -305,5 +339,39 @@ mod tests {
         let sol = PushRelabel::new().solve_with_param(&i, 0.2).unwrap();
         assert!(sol.stats.rounds >= sol.stats.phases, "each phase uses ≥ 1 round");
         assert!(!sol.stats.arena_reused, "fresh kernel per solve on this path");
+        assert!(!sol.stats.warm_started, "cold by default");
+        assert_eq!(sol.stats.eps_levels, 1);
+    }
+
+    #[test]
+    fn warm_start_keeps_the_additive_guarantee() {
+        let i = inst(40, 10);
+        let c_max = i.costs.max() as f64;
+        let exact = crate::solvers::hungarian::solve_exact(&i.costs).unwrap().1;
+        for eps in [0.2, 0.1, 0.05] {
+            let warm = PushRelabel { paranoid: true, warm_levels: 3 }
+                .solve_with_param(&i, eps)
+                .unwrap();
+            assert!(warm.matching.is_perfect());
+            assert!(warm.stats.warm_started);
+            assert!(warm.stats.eps_levels >= 2, "eps={eps} should run ≥ 2 levels");
+            let budget = 3.0 * eps * 40.0 * c_max;
+            assert!(
+                warm.cost <= exact + budget + 1e-6,
+                "eps={eps}: warm {} > exact {exact} + {budget}",
+                warm.cost
+            );
+        }
+    }
+
+    #[test]
+    fn warm_schedule_drops_infeasible_coarse_levels() {
+        // 2·0.6 ≥ 1 is unquantizable, so only the target level runs.
+        let i = inst(16, 11);
+        let sol =
+            PushRelabel { paranoid: false, warm_levels: 3 }.solve_with_param(&i, 0.6).unwrap();
+        assert_eq!(sol.stats.eps_levels, 1);
+        assert!(!sol.stats.warm_started, "single-level schedule is a cold solve");
+        assert!(sol.matching.is_perfect());
     }
 }

@@ -33,7 +33,14 @@ fn theorem1_push_relabel_family_within_eps_of_exact() {
     for case in &corpus {
         let c_max = case.costs.max() as f64;
         let n = case.costs.na as f64;
-        for engine in ["native-seq", "native-parallel"] {
+        let engines = [
+            "native-seq",
+            "native-parallel",
+            "native-vector",
+            "native-seq-warm",
+            "native-vector-warm",
+        ];
+        for engine in engines {
             for eps in [0.4, 0.2, 0.1, 0.05] {
                 let (problem, exact, u) = match case.ot() {
                     Some(inst) => (Problem::Ot(inst), case.exact_cost, c_max),
@@ -80,8 +87,16 @@ fn conformance_sweep_certifies_every_engine() {
         report.errors
     );
     // Dual-producing engines must actually produce verified duals on every
-    // cell they ran (the tentpole's acceptance criterion).
-    for engine in ["native-seq", "native-parallel"] {
+    // cell they ran (the tentpole's acceptance criterion) — including the
+    // vector backend and the ε-scaling warm-start engines.
+    let dual_engines = [
+        "native-seq",
+        "native-parallel",
+        "native-vector",
+        "native-seq-warm",
+        "native-vector-warm",
+    ];
+    for engine in dual_engines {
         let cells: Vec<_> =
             report.records.iter().filter(|r| r.engine == engine).collect();
         assert!(!cells.is_empty(), "{engine} ran no cells");
@@ -160,16 +175,22 @@ fn sinkhorn_contract_marginals_and_absent_duals() {
     }
 }
 
-/// Backend-equivalence satellite: on every golden instance, the scalar
-/// and chunked kernel backends must produce **identical** matchings /
-/// plans and byte-identical duals at every tested thread count — the
-/// kernel contract that makes `native-parallel` a pure wall-clock
-/// optimization of `native-seq`.
+/// Backend-equivalence satellite: on every golden instance, the chunked
+/// (at every tested thread count) and vector kernel backends must produce
+/// **identical** matchings / plans and byte-identical duals to the scalar
+/// backend — the kernel contract that makes `native-parallel` and
+/// `native-vector` pure wall-clock optimizations of `native-seq`. The
+/// corpus includes non-multiple-of-8 demand widths (n = 4, 5, 6 and the
+/// 3×4 OT case), so the vector backend's lane-padding path is exercised.
 #[test]
 fn kernel_backends_identical_on_golden_corpus() {
     let registry = SolverRegistry::with_defaults();
     let corpus = golden_corpus().unwrap();
+    let mut saw_unpadded_width = false;
     for case in &corpus {
+        if case.costs.na % 8 != 0 {
+            saw_unpadded_width = true;
+        }
         let problem = match case.ot() {
             Some(inst) => Problem::Ot(inst),
             None => Problem::Assignment(case.assignment().unwrap()),
@@ -179,38 +200,56 @@ fn kernel_backends_identical_on_golden_corpus() {
             let scalar = registry
                 .solve("native-seq", &SolverConfig::default(), &problem, &req)
                 .unwrap();
-            for threads in [1usize, 2, 4, 8] {
-                let config = SolverConfig::default().with_threads(threads);
-                let chunked = registry
-                    .solve("native-parallel", &config, &problem, &req)
-                    .unwrap();
-                match (scalar.matching(), chunked.matching()) {
+            let assert_identical = |other: &otpr::api::Solution, label: &str| {
+                match (scalar.matching(), other.matching()) {
                     (Some(ms), Some(mc)) => assert_eq!(
                         ms, mc,
-                        "{} eps={eps} threads={threads}: matchings differ",
+                        "{} eps={eps} {label}: matchings differ",
                         case.name
                     ),
                     (None, None) => assert_eq!(
                         scalar.plan().unwrap().as_slice(),
-                        chunked.plan().unwrap().as_slice(),
-                        "{} eps={eps} threads={threads}: plans differ",
+                        other.plan().unwrap().as_slice(),
+                        "{} eps={eps} {label}: plans differ",
                         case.name
                     ),
                     _ => panic!("{}: coupling shapes differ across backends", case.name),
                 }
                 assert_eq!(
-                    scalar.duals, chunked.duals,
-                    "{} eps={eps} threads={threads}: duals must be byte-identical",
+                    scalar.duals, other.duals,
+                    "{} eps={eps} {label}: duals must be byte-identical",
+                    case.name
+                );
+                assert_eq!(
+                    scalar.stats.phases, other.stats.phases,
+                    "{} eps={eps} {label}: phase counts differ",
+                    case.name
+                );
+                assert_eq!(
+                    scalar.stats.rounds, other.stats.rounds,
+                    "{} eps={eps} {label}: round counts differ",
                     case.name
                 );
                 assert!(
-                    (scalar.cost - chunked.cost).abs() < 1e-12,
-                    "{} eps={eps} threads={threads}: costs differ",
+                    (scalar.cost - other.cost).abs() < 1e-12,
+                    "{} eps={eps} {label}: costs differ",
                     case.name
                 );
+            };
+            for threads in [1usize, 2, 4, 8] {
+                let config = SolverConfig::default().with_threads(threads);
+                let chunked = registry
+                    .solve("native-parallel", &config, &problem, &req)
+                    .unwrap();
+                assert_identical(&chunked, &format!("threads={threads}"));
             }
+            let vector = registry
+                .solve("native-vector", &SolverConfig::default(), &problem, &req)
+                .unwrap();
+            assert_identical(&vector, "vector");
         }
     }
+    assert!(saw_unpadded_width, "corpus must cover the lane-padding path");
 }
 
 #[test]

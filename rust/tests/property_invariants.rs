@@ -5,7 +5,7 @@
 //! one phase loop every push-relabel engine uses.
 
 use otpr::core::duals::{check_feasible, dual_lower_bound_units};
-use otpr::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel};
+use otpr::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, VectorKernel};
 use otpr::core::{AssignmentInstance, CostMatrix, QuantizedCosts};
 use otpr::data::workloads::Workload;
 use otpr::prop_assert;
@@ -117,6 +117,94 @@ fn prop_scalar_chunked_backends_identical() {
             );
             prop_assert!(ks.duals() == kc.duals(), "duals differ");
             prop_assert!(ks.arena().rounds == kc.arena().rounds, "rounds differ");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_vector_backend_identical_to_scalar() {
+    // The kernel contract extended to the lane-blocked backend: identical
+    // matchings, duals, and round/phase counts on random widths — most of
+    // which are not multiples of 8, covering the padding path.
+    check(
+        "vector backend equivalence",
+        &PropConfig { cases: 16, ..Default::default() },
+        |rng| {
+            let n = 3 + rng.next_below(26) as usize;
+            let eps = [0.4, 0.2, 0.1][rng.next_below(3) as usize];
+            let costs = random_costs(rng, n);
+            let cap = assignment_phase_cap(eps);
+            let mut ks = ScalarKernel::new();
+            ks.init(&costs, eps, None);
+            ks.run_to_termination(cap)?;
+            let mut kv = VectorKernel::new();
+            kv.init(&costs, eps, None);
+            kv.run_to_termination(cap)?;
+            kv.check_invariants()?;
+            prop_assert!(
+                ks.extract_matching() == kv.extract_matching(),
+                "matchings differ (n={n}, eps={eps})"
+            );
+            prop_assert!(ks.duals() == kv.duals(), "duals differ (n={n}, eps={eps})");
+            prop_assert!(ks.arena().rounds == kv.arena().rounds, "rounds differ");
+            prop_assert!(ks.arena().phases == kv.arena().phases, "phases differ");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_warm_start_invariants_threshold_and_certificates() {
+    // The ε-scaling satellite: warm-started solves still satisfy the
+    // kernel invariants, meet the final ε's free-unit threshold, and
+    // certify with the same gap bound as cold solves.
+    use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default().with_paranoid(true);
+    check(
+        "warm-start guarantees",
+        &PropConfig { cases: 10, ..Default::default() },
+        |rng| {
+            let n = 6 + rng.next_below(20) as usize;
+            let eps = [0.3, 0.15][rng.next_below(2) as usize];
+            let costs = random_costs(rng, n);
+
+            // kernel level: schedule 4ε→2ε→ε by hand, checking invariants
+            // and the ε-unit free-vertex threshold at every level
+            let mut k = VectorKernel::new();
+            let schedule = [4.0 * eps / 3.0, 2.0 * eps / 3.0, eps / 3.0];
+            k.init(&costs, schedule[0], None);
+            for (li, &eps_l) in schedule.iter().enumerate() {
+                if li > 0 {
+                    k.arena_mut().rescale(&costs, eps_l);
+                    k.check_invariants().map_err(|e| format!("post-rescale: {e}"))?;
+                }
+                k.run_to_termination(assignment_phase_cap(eps_l))?;
+                k.check_invariants().map_err(|e| format!("level {li}: {e}"))?;
+                prop_assert!(
+                    k.arena().free_units() <= k.arena().threshold(),
+                    "level {li} missed its ε threshold"
+                );
+            }
+            check_feasible(&k.arena().q, &k.extract_matching(), &k.duals())?;
+
+            // engine level: warm certificate passes with the cold bound
+            let problem = Problem::Assignment(AssignmentInstance::new(costs).unwrap());
+            let req = SolveRequest::new(eps).certify(true);
+            let cold = registry.solve("native-seq", &config, &problem, &req).unwrap();
+            let warm = registry.solve("native-vector-warm", &config, &problem, &req).unwrap();
+            prop_assert!(warm.stats.warm_started, "warm engine must report warm_started");
+            prop_assert!(warm.stats.eps_levels >= 2, "schedule must run ≥ 2 levels");
+            let (cc, wc) = (cold.certificate.unwrap(), warm.certificate.unwrap());
+            prop_assert!(wc.ok(), "warm certificate failed: {}", wc.summary());
+            prop_assert!(
+                (wc.bound - cc.bound).abs() < 1e-12,
+                "warm gap bound {} != cold bound {}",
+                wc.bound,
+                cc.bound
+            );
+            prop_assert!(wc.gap.unwrap() <= wc.bound + 1e-9, "warm gap above bound");
             Ok(())
         },
     );
