@@ -34,9 +34,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let solvers = SolverRegistry::with_defaults();
     let config = SolverConfig::default();
     let exact_of = |problem: &Problem| -> Result<f64, Box<dyn std::error::Error>> {
+        // the exact oracles need a slab: materialize implicit problems
+        let dense;
+        let problem = match problem {
+            Problem::Implicit(_) => {
+                dense = problem.to_dense()?;
+                &dense
+            }
+            other => other,
+        };
         let key = match problem {
             Problem::Assignment(_) => "hungarian",
             Problem::Ot(_) => "ssp-exact",
+            Problem::Implicit(_) => unreachable!("materialized above"),
         };
         Ok(solvers.solve(key, &config, problem, &SolveRequest::new(0.0))?.cost)
     };

@@ -16,8 +16,8 @@ use crate::core::control::CANCELLED_NOTE;
 use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, VectorKernel, WarmStart};
 use crate::core::{Matching, OtInstance, OtprError, Result, TransportPlan};
 use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
-use crate::solvers::ot_push_relabel::drive_ot;
-use crate::solvers::push_relabel::drive_assignment;
+use crate::solvers::ot_push_relabel::{drive_ot, drive_ot_src};
+use crate::solvers::push_relabel::{drive_assignment, drive_assignment_src};
 use crate::solvers::sinkhorn::{Sinkhorn, SinkhornConfig};
 use crate::solvers::{AssignmentSolution, AssignmentSolver, OtSolution, OtSolver, SolveStats};
 use std::sync::Arc;
@@ -57,6 +57,19 @@ pub trait Solver: Send + Sync {
 
 fn unsupported(name: &str, kind: ProblemKind) -> OtprError {
     OtprError::Coordinator(format!("engine {name} does not support {} problems", kind.name()))
+}
+
+/// Error for slab-bound engines handed an implicit problem: the cause is
+/// the cost representation, not the problem kind, so say so.
+fn dense_required(name: &str, problem: &Problem) -> OtprError {
+    match problem {
+        Problem::Implicit(i) => OtprError::Coordinator(format!(
+            "engine {name} requires dense costs: implicit-cost problem ({}) must be \
+             materialized with Problem::to_dense() or routed to a kernel engine",
+            i.costs.kind()
+        )),
+        _ => unsupported(name, problem.kind()),
+    }
 }
 
 /// The coupling a cancelled-before-any-work solve returns, matching what
@@ -104,7 +117,7 @@ impl<S: AssignmentSolver + Send + Sync> Solver for AssignmentAdapter<S> {
     fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
         let inst = problem
             .as_assignment()
-            .ok_or_else(|| unsupported(self.name(), problem.kind()))?;
+            .ok_or_else(|| dense_required(self.name(), problem))?;
         Ok(Solution::from_assignment(self.0.solve_assignment(inst, req.eps)?))
     }
 }
@@ -150,6 +163,32 @@ fn solve_one_on_kernel(
             drive_ot(kernel, inst, req.eps, req.eps / 6.0, &req.control(), paranoid, warm)
                 .map(Solution::from_ot)
         }
+        // Implicit (provider-backed) instances run the same drivers over
+        // a streamed CostSource — no O(n²) slab is ever materialized, and
+        // results are byte-identical to the dense form of the instance.
+        Problem::Implicit(inst) => match &inst.masses {
+            None => drive_assignment_src(
+                kernel,
+                &inst.costs.source(),
+                req.eps_param(3.0),
+                &req.control(),
+                paranoid,
+                warm,
+            )
+            .map(Solution::from_assignment),
+            Some((supply, demand)) => drive_ot_src(
+                kernel,
+                &inst.costs.source(),
+                supply,
+                demand,
+                req.eps,
+                req.eps / 6.0,
+                &req.control(),
+                paranoid,
+                warm,
+            )
+            .map(Solution::from_ot),
+        },
     }
 }
 
@@ -308,7 +347,7 @@ impl Solver for LmrSolver {
     fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
         let inst = problem
             .as_assignment()
-            .ok_or_else(|| unsupported(self.name(), problem.kind()))?;
+            .ok_or_else(|| dense_required(self.name(), problem))?;
         let sol = crate::solvers::lmr::LmrBaseline.solve_with_param(inst, req.eps_param(2.0))?;
         Ok(Solution::from_assignment(sol))
     }
@@ -370,8 +409,11 @@ impl Solver for XlaEngineSolver {
             .runtime
             .clone()
             .ok_or_else(|| OtprError::Coordinator("no XLA runtime loaded".into()))?;
-        let inst = problem.as_assignment().ok_or_else(|| {
-            OtprError::Coordinator("XLA engine supports assignment jobs only (OT runs native)".into())
+        let inst = problem.as_assignment().ok_or_else(|| match problem {
+            Problem::Implicit(_) => dense_required(self.name(), problem),
+            _ => OtprError::Coordinator(
+                "XLA engine supports assignment jobs only (OT runs native)".into(),
+            ),
         })?;
         if req.control().should_stop() {
             return Ok(cancelled_assignment(inst.n(), &inst.costs));

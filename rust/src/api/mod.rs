@@ -36,7 +36,12 @@ pub mod registry;
 pub mod request;
 
 pub use adapter::{AssignmentAdapter, OtAdapter, Solver};
-pub use problem::{Coupling, Problem, ProblemKind, Solution};
+pub use problem::{Coupling, ImplicitInstance, Problem, ProblemKind, Solution};
+// Implicit-cost building blocks are part of the public problem surface
+// (`Problem::implicit_assignment` / `Problem::implicit_ot` take them).
+pub use crate::core::provider::{
+    CostProvider, CostSource, Costs, GeneratedCosts, L1PointCosts, SqEuclideanCosts,
+};
 // The certification entry points live in `core::certify`; re-exported here
 // because `SolveRequest::certify` / `Solution::certificate` make them part
 // of the public solve surface.

@@ -8,6 +8,7 @@
 //! remain as internal carrier types inside `solvers/`.
 
 use crate::core::certify::Certificate;
+use crate::core::provider::{CostSource, Costs};
 use crate::core::{
     AssignmentInstance, CostMatrix, DualWeights, Matching, OtInstance, OtprError, Result,
     TransportPlan,
@@ -29,11 +30,60 @@ impl ProblemKind {
     }
 }
 
-/// What to solve: an n×n assignment or a general discrete-OT instance.
+/// A provider-backed instance: costs are computed on demand from O(n)
+/// data ([`Costs::Points`] / [`Costs::L1Points`] / [`Costs::Generated`]),
+/// so neither the problem payload nor the kernel ever holds the O(n²)
+/// slab. `masses = None` is the assignment case (square); `Some((supply,
+/// demand))` is general OT.
+#[derive(Debug, Clone)]
+pub struct ImplicitInstance {
+    pub costs: Costs,
+    /// `(supply over rows, demand over columns)`; `None` = assignment.
+    pub masses: Option<(Vec<f64>, Vec<f64>)>,
+}
+
+impl ImplicitInstance {
+    /// Assignment instance over a cost provider (requires square costs).
+    pub fn assignment(costs: Costs) -> Result<Self> {
+        if costs.nb() != costs.na() {
+            return Err(OtprError::InvalidInstance(format!(
+                "assignment requires square costs, got {}x{} ({})",
+                costs.nb(),
+                costs.na(),
+                costs.kind()
+            )));
+        }
+        Ok(Self { costs, masses: None })
+    }
+
+    /// OT instance over a cost provider (the same mass validation as
+    /// [`OtInstance::new`] — one shared checker, so dense and implicit
+    /// representations accept exactly the same marginals).
+    pub fn ot(costs: Costs, demand: Vec<f64>, supply: Vec<f64>) -> Result<Self> {
+        crate::core::instance::validate_marginals(&demand, &supply, costs.na(), costs.nb())?;
+        Ok(Self { costs, masses: Some((supply, demand)) })
+    }
+
+    pub fn kind(&self) -> ProblemKind {
+        if self.masses.is_none() {
+            ProblemKind::Assignment
+        } else {
+            ProblemKind::Ot
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.costs.nb().max(self.costs.na())
+    }
+}
+
+/// What to solve: an n×n assignment, a general discrete-OT instance, or
+/// an implicit (provider-backed) instance of either kind.
 #[derive(Debug, Clone)]
 pub enum Problem {
     Assignment(AssignmentInstance),
     Ot(OtInstance),
+    Implicit(ImplicitInstance),
 }
 
 impl Problem {
@@ -48,10 +98,22 @@ impl Problem {
         Ok(Problem::Ot(OtInstance::new(costs, demand, supply)?))
     }
 
+    /// Assignment problem over an implicit cost provider: the kernel
+    /// engines solve it without ever materializing the O(n²) slab.
+    pub fn implicit_assignment(costs: Costs) -> Result<Self> {
+        Ok(Problem::Implicit(ImplicitInstance::assignment(costs)?))
+    }
+
+    /// OT problem over an implicit cost provider.
+    pub fn implicit_ot(costs: Costs, demand: Vec<f64>, supply: Vec<f64>) -> Result<Self> {
+        Ok(Problem::Implicit(ImplicitInstance::ot(costs, demand, supply)?))
+    }
+
     pub fn kind(&self) -> ProblemKind {
         match self {
             Problem::Assignment(_) => ProblemKind::Assignment,
             Problem::Ot(_) => ProblemKind::Ot,
+            Problem::Implicit(i) => i.kind(),
         }
     }
 
@@ -60,13 +122,66 @@ impl Problem {
         match self {
             Problem::Assignment(i) => i.n(),
             Problem::Ot(i) => i.n(),
+            Problem::Implicit(i) => i.n(),
         }
     }
 
+    /// (nb, na) of the cost relation — works for every representation.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Problem::Assignment(i) => (i.costs.nb, i.costs.na),
+            Problem::Ot(i) => (i.costs.nb, i.costs.na),
+            Problem::Implicit(i) => (i.costs.nb(), i.costs.na()),
+        }
+    }
+
+    /// Largest cost (the normalization constant) — every representation.
+    pub fn max_cost(&self) -> f64 {
+        match self {
+            Problem::Assignment(i) => i.costs.max() as f64,
+            Problem::Ot(i) => i.costs.max() as f64,
+            Problem::Implicit(i) => i.costs.max_cost() as f64,
+        }
+    }
+
+    /// The per-call cost view the kernel drivers consume.
+    pub fn cost_source(&self) -> CostSource<'_> {
+        match self {
+            Problem::Assignment(i) => CostSource::Dense(&i.costs),
+            Problem::Ot(i) => CostSource::Dense(&i.costs),
+            Problem::Implicit(i) => i.costs.source(),
+        }
+    }
+
+    /// Dense cost matrix. **Panics** for implicit problems — those have no
+    /// slab by design; use [`Problem::dims`] / [`Problem::max_cost`] /
+    /// [`Problem::cost_source`] instead (or [`Problem::to_dense`] to
+    /// materialize deliberately).
     pub fn costs(&self) -> &CostMatrix {
         match self {
             Problem::Assignment(i) => &i.costs,
             Problem::Ot(i) => &i.costs,
+            Problem::Implicit(i) => panic!(
+                "implicit-cost problem ({}) has no dense matrix; \
+                 use dims()/max_cost()/cost_source() or to_dense()",
+                i.costs.kind()
+            ),
+        }
+    }
+
+    /// Materialize an implicit problem into its dense form (O(n²) —
+    /// deliberate, for baselines that genuinely need a slab). Dense
+    /// problems return a clone of themselves.
+    pub fn to_dense(&self) -> Result<Problem> {
+        match self {
+            Problem::Implicit(i) => {
+                let dense = i.costs.to_dense();
+                match &i.masses {
+                    None => Problem::assignment(dense),
+                    Some((supply, demand)) => Problem::ot(dense, demand.clone(), supply.clone()),
+                }
+            }
+            other => Ok(other.clone()),
         }
     }
 
@@ -84,12 +199,26 @@ impl Problem {
         }
     }
 
+    pub fn as_implicit(&self) -> Option<&ImplicitInstance> {
+        match self {
+            Problem::Implicit(i) => Some(i),
+            _ => None,
+        }
+    }
+
     /// View the problem as OT: assignment instances become uniform-mass OT
-    /// (how the paper benchmarks Sinkhorn on assignment inputs).
+    /// (how the paper benchmarks Sinkhorn on assignment inputs). Implicit
+    /// problems refuse — engines that need a dense OT instance cannot run
+    /// them (materialize deliberately with [`Problem::to_dense`]).
     pub fn to_ot_instance(&self) -> Result<OtInstance> {
         match self {
             Problem::Assignment(i) => OtInstance::uniform(i.costs.clone()),
             Problem::Ot(i) => Ok(i.clone()),
+            Problem::Implicit(i) => Err(OtprError::InvalidInstance(format!(
+                "implicit-cost problem ({}) has no dense OT form; \
+                 route it to a kernel engine or materialize with to_dense()",
+                i.costs.kind()
+            ))),
         }
     }
 }
@@ -205,6 +334,33 @@ mod tests {
         let ot = p.to_ot_instance().unwrap();
         assert_eq!(ot.demand.len(), 4);
         assert!(Problem::assignment(CostMatrix::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn implicit_problems_expose_dims_without_a_slab() {
+        use crate::core::provider::{Costs, GeneratedCosts};
+        let costs =
+            Costs::generated(GeneratedCosts::new(5, 5, |b, a| (b + a) as f32 / 8.0).unwrap());
+        let p = Problem::implicit_assignment(costs.clone()).unwrap();
+        assert_eq!(p.kind(), ProblemKind::Assignment);
+        assert_eq!(p.dims(), (5, 5));
+        assert_eq!(p.n(), 5);
+        assert!((p.max_cost() - 1.0).abs() < 1e-9);
+        assert!(p.cost_source().is_implicit());
+        assert!(p.as_assignment().is_none() && p.as_implicit().is_some());
+        assert!(p.to_ot_instance().is_err(), "no silent materialization");
+        // deliberate materialization round-trips
+        let dense = p.to_dense().unwrap();
+        assert_eq!(dense.kind(), ProblemKind::Assignment);
+        assert_eq!(dense.costs().at(4, 4), 1.0);
+
+        let uni = vec![0.2; 5];
+        let p = Problem::implicit_ot(costs.clone(), uni.clone(), uni.clone()).unwrap();
+        assert_eq!(p.kind(), ProblemKind::Ot);
+        assert!(Problem::implicit_ot(costs.clone(), vec![0.5; 5], uni).is_err());
+        let rect =
+            Costs::generated(GeneratedCosts::new(2, 3, |_, _| 0.1).unwrap());
+        assert!(Problem::implicit_assignment(rect).is_err(), "square required");
     }
 
     #[test]

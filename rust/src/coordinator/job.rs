@@ -5,6 +5,12 @@
 //! keys of [`crate::api::registry::ENGINE_SPECS`] — parsing and printing
 //! round-trip through that single table, so every name the coordinator
 //! accepts is a name the registry can build.
+//!
+//! Payload size: a dense job carries its O(n²) cost slab, but an
+//! implicit job ([`Problem::Implicit`] over point clouds or a generator)
+//! ships **O(n) bytes** — the coordinator, batcher, and workers never
+//! materialize costs for it, and `Auto` routes it to the no-slab vector
+//! backend.
 
 use crate::api::registry::canonical_key;
 use crate::api::{Problem, SolveRequest, Solution};

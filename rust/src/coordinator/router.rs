@@ -56,6 +56,9 @@ impl Router {
                     Problem::Assignment(_) => Engine::NativeSeq,
                     // OT has no XLA phase-loop (assignment only); route native
                     Problem::Ot(_) => Engine::NativeSeq,
+                    // Implicit costs: the vector backend keeps only the
+                    // block-min cache resident — the no-slab path.
+                    Problem::Implicit(_) => Engine::NativeVector,
                 }
             }
             e => e,

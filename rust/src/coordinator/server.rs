@@ -255,12 +255,16 @@ fn dispatcher_loop(
 }
 
 /// Shape key for intra-batch grouping: jobs that can share one kernel
-/// arena (same problem kind and cost dimensions).
+/// arena (same problem kind and cost dimensions). Implicit (provider-
+/// backed) jobs group separately from dense ones — the payloads are O(n),
+/// and mixing storage modes in one warm-carry run buys nothing.
 fn shape_key(req: &JobRequest) -> (u8, usize, usize) {
-    let costs = req.kind.costs();
-    match req.kind {
-        crate::api::Problem::Assignment(_) => (0, costs.nb, costs.na),
-        crate::api::Problem::Ot(_) => (1, costs.nb, costs.na),
+    let (nb, na) = req.kind.dims();
+    match &req.kind {
+        crate::api::Problem::Assignment(_) => (0, nb, na),
+        crate::api::Problem::Ot(_) => (1, nb, na),
+        crate::api::Problem::Implicit(i) if i.masses.is_none() => (2, nb, na),
+        crate::api::Problem::Implicit(_) => (3, nb, na),
     }
 }
 

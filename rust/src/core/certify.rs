@@ -45,6 +45,7 @@ use crate::api::request::SolveRequest;
 use crate::core::duals::{dual_lower_bound_units, DualWeights};
 use crate::core::instance::{AssignmentInstance, OtInstance};
 use crate::core::matching::Matching;
+use crate::core::provider::CostSource;
 use crate::core::quantize::QuantizedCosts;
 use crate::core::transport::TransportPlan;
 use crate::util::minijson::{obj, Json};
@@ -173,10 +174,39 @@ pub fn certify(problem: &Problem, sol: &Solution, req: &SolveRequest) -> Certifi
         (Coupling::Matching(m), Problem::Assignment(inst)) => {
             certify_matching(inst, m, sol.duals.as_ref(), sol.cost, req)
         }
-        (Coupling::Matching(_), Problem::Ot(_)) => Certificate::failed(
+        // Implicit instances certify by streaming rows from the provider —
+        // the checker itself never materializes the O(n²) slab either.
+        (Coupling::Matching(m), Problem::Implicit(inst)) if inst.masses.is_none() => {
+            certify_matching_src(&inst.costs.source(), m, sol.duals.as_ref(), sol.cost, req)
+        }
+        (Coupling::Matching(_), _) => Certificate::failed(
             sol.cost,
             "matching coupling cannot answer an OT problem".to_string(),
         ),
+        (Coupling::Plan(p), Problem::Implicit(inst)) => {
+            let src = inst.costs.source();
+            match &inst.masses {
+                Some((supply, demand)) => {
+                    certify_plan_src(&src, supply, demand, p, sol.duals.as_ref(), sol.cost, req.eps)
+                }
+                // plan answer to an implicit assignment problem: certify
+                // against the uniform-mass relaxation, streamed
+                None => {
+                    let (nb, na) = (src.nb(), src.na());
+                    let supply = vec![1.0 / nb as f64; nb];
+                    let demand = vec![1.0 / na as f64; na];
+                    certify_plan_src(
+                        &src,
+                        &supply,
+                        &demand,
+                        p,
+                        sol.duals.as_ref(),
+                        sol.cost,
+                        req.eps,
+                    )
+                }
+            }
+        }
         // Plans answer both kinds: an assignment problem answered by an OT
         // engine is certified against its uniform-mass relaxation (whose
         // optimum equals the assignment optimum / n, by Birkhoff).
@@ -194,8 +224,18 @@ fn certify_matching(
     cost: f64,
     req: &SolveRequest,
 ) -> Certificate {
-    let n = inst.n();
-    let c_max = inst.costs.max() as f64;
+    certify_matching_src(&CostSource::Dense(&inst.costs), m, duals, cost, req)
+}
+
+fn certify_matching_src(
+    src: &CostSource<'_>,
+    m: &Matching,
+    duals: Option<&DualWeights>,
+    cost: f64,
+    req: &SolveRequest,
+) -> Certificate {
+    let n = src.na();
+    let c_max = src.max_cost() as f64;
     // The assignment engines run the core at `eps_param` and guarantee
     // 3·ε_param·n·c_max (rounding + feasibility + completion) — which is
     // eps·n·c_max for Overall-semantics requests.
@@ -203,7 +243,7 @@ fn certify_matching(
     let bound = 3.0 * eps_param * n as f64 * c_max;
     let mut detail: Option<String> = None;
 
-    let primal_ok = match check_matching_primal(inst, m, cost) {
+    let primal_ok = match check_matching_primal(src, m, cost) {
         Ok(()) => true,
         Err(e) => {
             detail = Some(e);
@@ -222,7 +262,7 @@ fn certify_matching(
                 }
                 (Some(false), None, None)
             } else {
-                let q = QuantizedCosts::new(&inst.costs, eps_param);
+                let q = QuantizedCosts::from_source(src, eps_param);
                 match check_matching_duals(&q, y) {
                     Err(e) => {
                         if detail.is_none() {
@@ -242,25 +282,21 @@ fn certify_matching(
     Certificate { primal_ok, dual_ok, gap, dual_lower_bound: lb, bound, cost, detail }
 }
 
-fn check_matching_primal(
-    inst: &AssignmentInstance,
-    m: &Matching,
-    cost: f64,
-) -> Result<(), String> {
-    if m.nb() != inst.costs.nb || m.na() != inst.costs.na {
+fn check_matching_primal(src: &CostSource<'_>, m: &Matching, cost: f64) -> Result<(), String> {
+    if m.nb() != src.nb() || m.na() != src.na() {
         return Err(format!(
             "matching dimensions {}x{} do not fit the {}x{} instance",
             m.nb(),
             m.na(),
-            inst.costs.nb,
-            inst.costs.na
+            src.nb(),
+            src.na()
         ));
     }
     m.check_consistent()?;
     if !m.is_perfect() {
         return Err(format!("matching not perfect: {} free supply vertices", m.free_b().len()));
     }
-    let recomputed = m.cost(&inst.costs);
+    let recomputed = src.matching_cost(m);
     if (recomputed - cost).abs() > 1e-6 * cost.abs().max(1.0) {
         return Err(format!("reported cost {cost} != recomputed matching cost {recomputed}"));
     }
@@ -305,18 +341,38 @@ fn certify_plan(
     cost: f64,
     eps: f64,
 ) -> Certificate {
-    let c_max = ot.costs.max() as f64;
+    certify_plan_src(
+        &CostSource::Dense(&ot.costs),
+        &ot.supply,
+        &ot.demand,
+        plan,
+        duals,
+        cost,
+        eps,
+    )
+}
+
+fn certify_plan_src(
+    src: &CostSource<'_>,
+    supply: &[f64],
+    demand: &[f64],
+    plan: &TransportPlan,
+    duals: Option<&DualWeights>,
+    cost: f64,
+    eps: f64,
+) -> Certificate {
+    let c_max = src.max_cost() as f64;
     // Unit total mass ⇒ the additive target is ε·c_max (Theorem 4.2 /
     // AWR'17 parameterization alike).
     let bound = eps * c_max;
-    let n = ot.n() as f64;
+    let n = src.nb().max(src.na()) as f64;
     let mut detail: Option<String> = None;
 
     // §4 mass scaling rounds at θ = 4n/ε, so demand marginals may
     // legitimately overshoot by up to 2/θ = ε/(2n) per vertex; 1e-6 floors
     // the tolerance for exact and Sinkhorn-rounded plans at eps → 0.
     let tol = if eps > 0.0 { (eps / (2.0 * n)).max(1e-6) } else { 1e-6 };
-    let primal_ok = match check_plan_primal(ot, plan, cost, tol) {
+    let primal_ok = match check_plan_primal(src, supply, demand, plan, cost, tol) {
         Ok(()) => true,
         Err(e) => {
             detail = Some(e);
@@ -337,7 +393,7 @@ fn certify_plan(
                 }
                 (Some(false), None, None)
             } else {
-                let q = QuantizedCosts::new(&ot.costs, eps_match);
+                let q = QuantizedCosts::from_source(src, eps_match);
                 match check_plan_duals(&q, y) {
                     Err(e) => {
                         if detail.is_none() {
@@ -346,7 +402,7 @@ fn certify_plan(
                         (Some(false), None, None)
                     }
                     Ok(()) => {
-                        let lb = ot_dual_lower_bound(&q, y, &ot.demand, &ot.supply);
+                        let lb = ot_dual_lower_bound(&q, y, demand, supply);
                         (Some(true), Some(cost - lb), Some(lb))
                     }
                 }
@@ -358,19 +414,24 @@ fn certify_plan(
 }
 
 fn check_plan_primal(
-    ot: &OtInstance,
+    src: &CostSource<'_>,
+    supply: &[f64],
+    demand: &[f64],
     plan: &TransportPlan,
     cost: f64,
     tol: f64,
 ) -> Result<(), String> {
-    if plan.nb != ot.costs.nb || plan.na != ot.costs.na {
+    if plan.nb != src.nb() || plan.na != src.na() {
         return Err(format!(
             "plan dimensions {}x{} do not fit the {}x{} instance",
-            plan.nb, plan.na, ot.costs.nb, ot.costs.na
+            plan.nb,
+            plan.na,
+            src.nb(),
+            src.na()
         ));
     }
-    plan.check(&ot.supply, &ot.demand, tol)?;
-    let recomputed = plan.cost(&ot.costs);
+    plan.check(supply, demand, tol)?;
+    let recomputed = src.plan_cost(plan);
     if (recomputed - cost).abs() > 1e-6 * cost.abs().max(1.0) {
         return Err(format!("reported cost {cost} != recomputed plan cost {recomputed}"));
     }
@@ -413,20 +474,24 @@ fn check_signs(y: &DualWeights) -> Result<(), String> {
 /// shapes need for their lower bound, reported with units *and*
 /// dequantized values so failing seeds are debuggable.
 fn check_relaxed_feasibility(q: &QuantizedCosts, y: &DualWeights) -> Result<(), String> {
+    // rows stream through one scratch buffer so implicit quantizations
+    // certify without a resident slab
+    let mut rowbuf: Vec<i32> = Vec::new();
     for b in 0..q.nb {
         let yb = y.yb[b];
-        let row = q.row(b);
+        let row = q.row_units(b, &mut rowbuf);
         for (a, &cq) in row.iter().enumerate() {
             let sum = y.ya[a] + yb;
             if sum > cq + 1 {
                 return Err(format!(
                     "relaxed feasibility violated on edge (b={b},a={a}): \
                      y(a)+y(b) = {sum} units > cq+1 = {} units \
-                     (dequantized: {:.6} > {:.6}, eps_abs = {:.3e})",
+                     (dequantized: {:.6} > {:.6}, eps_abs = {:.3e}, provider={})",
                     cq + 1,
                     sum as f64 * q.eps_abs,
                     (cq + 1) as f64 * q.eps_abs,
-                    q.eps_abs
+                    q.eps_abs,
+                    q.kind()
                 ));
             }
         }

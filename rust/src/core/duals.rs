@@ -60,9 +60,11 @@ pub fn check_feasible(
             return Err(format!("I1 violated: free a={a} has y={ya} != 0"));
         }
     }
-    // (2) and (3)
+    // (2) and (3) — rows stream through one scratch buffer so implicit
+    // (provider-backed) quantizations check without a resident slab
+    let mut rowbuf: Vec<i32> = Vec::new();
     for b in 0..q.nb {
-        let row = q.row(b);
+        let row = q.row_units(b, &mut rowbuf);
         let yb = y.yb[b];
         let matched_a = m.match_b[b];
         for (a, &cq) in row.iter().enumerate() {
@@ -75,23 +77,25 @@ pub fn check_feasible(
                     return Err(format!(
                         "(3) violated on matching edge (b={b},a={a}): \
                          y(a)+y(b)={} units, cq={cq} units \
-                         (dequantized: {:.6} vs c̄={:.6}, eps_abs={:.3e})",
+                         (dequantized: {:.6} vs c̄={:.6}, eps_abs={:.3e}, provider={})",
                         y.ya[a] + yb,
                         (y.ya[a] + yb) as f64 * q.eps_abs,
                         cq as f64 * q.eps_abs,
-                        q.eps_abs
+                        q.eps_abs,
+                        q.kind()
                     ));
                 }
             } else if s < 0 {
                 return Err(format!(
                     "(2) violated on edge (b={b},a={a}): \
                      y(a)+y(b)={} units > cq+1={} units \
-                     (dequantized: {:.6} > {:.6}, eps_abs={:.3e})",
+                     (dequantized: {:.6} > {:.6}, eps_abs={:.3e}, provider={})",
                     y.ya[a] + yb,
                     cq + 1,
                     (y.ya[a] + yb) as f64 * q.eps_abs,
                     (cq + 1) as f64 * q.eps_abs,
-                    q.eps_abs
+                    q.eps_abs,
+                    q.kind()
                 ));
             }
         }
@@ -200,6 +204,21 @@ mod tests {
         let msg = check_feasible(&q, &m, &y).unwrap_err();
         assert!(msg.contains("1 units, cq=0 units"), "{msg}");
         assert!(msg.contains("c̄=0.000000"), "{msg}");
+        assert!(msg.contains("provider=dense"), "{msg}");
+    }
+
+    #[test]
+    fn implicit_quantizations_check_and_name_their_provider() {
+        use crate::core::provider::{Costs, GeneratedCosts};
+        let costs =
+            Costs::generated(GeneratedCosts::new(2, 2, |b, a| (b + a) as f32 / 2.0).unwrap());
+        let q = QuantizedCosts::from_source(&costs.source(), 0.5);
+        let m = Matching::empty(2, 2);
+        let mut y = DualWeights::init(2, 2);
+        check_feasible(&q, &m, &y).unwrap();
+        y.yb[0] = 9; // (2) violation
+        let msg = check_feasible(&q, &m, &y).unwrap_err();
+        assert!(msg.contains("provider=generated"), "{msg}");
     }
 
     #[test]

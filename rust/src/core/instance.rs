@@ -38,22 +38,30 @@ pub struct OtInstance {
     pub supply: Vec<f64>,
 }
 
+/// Shared marginal validation for every OT-instance representation
+/// (dense [`OtInstance::new`] and the implicit `api::ImplicitInstance`):
+/// lengths match the cost relation, each side is a probability vector.
+pub fn validate_marginals(demand: &[f64], supply: &[f64], na: usize, nb: usize) -> Result<()> {
+    if demand.len() != na || supply.len() != nb {
+        return Err(OtprError::InvalidInstance("mass dimension mismatch".into()));
+    }
+    for (name, v) in [("demand", demand), ("supply", supply)] {
+        let sum: f64 = v.iter().sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            return Err(OtprError::InvalidInstance(format!(
+                "{name} masses sum to {sum}, expected 1"
+            )));
+        }
+        if v.iter().any(|&x| x < 0.0 || !x.is_finite()) {
+            return Err(OtprError::InvalidInstance(format!("negative/NaN {name} mass")));
+        }
+    }
+    Ok(())
+}
+
 impl OtInstance {
     pub fn new(costs: CostMatrix, demand: Vec<f64>, supply: Vec<f64>) -> Result<Self> {
-        if demand.len() != costs.na || supply.len() != costs.nb {
-            return Err(OtprError::InvalidInstance("mass dimension mismatch".into()));
-        }
-        for (name, v) in [("demand", &demand), ("supply", &supply)] {
-            let sum: f64 = v.iter().sum();
-            if (sum - 1.0).abs() > 1e-6 {
-                return Err(OtprError::InvalidInstance(format!(
-                    "{name} masses sum to {sum}, expected 1"
-                )));
-            }
-            if v.iter().any(|&x| x < 0.0 || !x.is_finite()) {
-                return Err(OtprError::InvalidInstance(format!("negative/NaN {name} mass")));
-            }
-        }
+        validate_marginals(&demand, &supply, costs.na, costs.nb)?;
         Ok(Self { costs, demand, supply })
     }
 
@@ -87,15 +95,19 @@ pub struct ScaledOtInstance {
 
 impl ScaledOtInstance {
     pub fn build(inst: &OtInstance, eps: f64) -> Self {
+        Self::from_parts(&inst.supply, &inst.demand, inst.n(), eps)
+    }
+
+    /// θ-scale raw marginals without an [`OtInstance`] — the entry the
+    /// implicit-cost driver uses (masses are O(n) data; no cost slab is
+    /// involved in the scaling at all).
+    pub fn from_parts(supply: &[f64], demand: &[f64], n: usize, eps: f64) -> Self {
         assert!(eps > 0.0 && eps < 1.0);
-        let n = inst.n() as f64;
+        let n = n as f64;
         let theta = 4.0 * n / eps;
-        let demand_units: Vec<u64> =
-            inst.demand.iter().map(|&d| (d * theta).ceil() as u64).collect();
-        let supply_units: Vec<u64> =
-            inst.supply.iter().map(|&s| (s * theta).floor() as u64).collect();
-        let supply_residual: Vec<f64> = inst
-            .supply
+        let demand_units: Vec<u64> = demand.iter().map(|&d| (d * theta).ceil() as u64).collect();
+        let supply_units: Vec<u64> = supply.iter().map(|&s| (s * theta).floor() as u64).collect();
+        let supply_residual: Vec<f64> = supply
             .iter()
             .zip(&supply_units)
             .map(|(&s, &u)| (s * theta - u as f64) / theta)

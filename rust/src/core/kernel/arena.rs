@@ -37,6 +37,7 @@
 use crate::core::cost::CostMatrix;
 use crate::core::duals::DualWeights;
 use crate::core::matching::Matching;
+use crate::core::provider::CostSource;
 use crate::core::quantize::{QuantizedCosts, LANES};
 
 /// Cluster slots per demand vertex. Lemma 4.1 bounds *live* clusters by
@@ -111,12 +112,79 @@ pub struct KernelView<'k> {
     pub na_pad: usize,
 }
 
+/// Per-entry quantized-unit reader the shared stage body is generic over:
+/// dense sweeps read a slice (identical codegen to the historical loop),
+/// implicit sweeps quantize from the provider on demand.
+trait RowUnits {
+    fn get(&self, a: usize) -> i32;
+}
+
+struct SliceRow<'a>(&'a [i32]);
+
+impl RowUnits for SliceRow<'_> {
+    #[inline]
+    fn get(&self, a: usize) -> i32 {
+        self.0[a]
+    }
+}
+
+struct ImplicitRow<'a> {
+    q: &'a QuantizedCosts,
+    b: usize,
+}
+
+impl RowUnits for ImplicitRow<'_> {
+    #[inline]
+    fn get(&self, a: usize) -> i32 {
+        self.q.at(self.b, a)
+    }
+}
+
+/// Per-backend row-window LRU for the implicit scalar/chunked propose
+/// path: a handful of quantized rows ([`RowScratch::CAP`], O(CAP·na)
+/// resident) cached across rounds *and* phases, keyed by
+/// `QuantizedCosts::epoch` so any requantize/rescale/new-instance
+/// self-invalidates the cache. Values are exactly the dense `cq` row, so
+/// caching never affects results — only how often the provider streams.
+#[derive(Debug, Default)]
+pub struct RowScratch {
+    epoch: u64,
+    /// (b, quantized row), least-recently-used first.
+    slots: Vec<(u32, Vec<i32>)>,
+}
+
+impl RowScratch {
+    const CAP: usize = 32;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn row(&mut self, q: &QuantizedCosts, b: usize) -> &[i32] {
+        if self.epoch != q.epoch {
+            self.slots.clear();
+            self.epoch = q.epoch;
+        }
+        if let Some(i) = self.slots.iter().position(|(bb, _)| *bb == b as u32) {
+            let hit = self.slots.remove(i);
+            self.slots.push(hit);
+        } else {
+            let mut buf =
+                if self.slots.len() >= Self::CAP { self.slots.remove(0).1 } else { Vec::new() };
+            q.fill_row_units(b, &mut buf);
+            self.slots.push((b as u32, buf));
+        }
+        &self.slots.last().expect("slot just pushed").1
+    }
+}
+
 impl KernelView<'_> {
     /// Scan demand vertices from `cursor[wi]` and stage up to
     /// [`PLAN_WIDTH`] takes for worklist entry `wi` against the snapshot
     /// capacities. Returns `(plan_len, exhausted)`; `exhausted` means the
     /// scan reached the end of the row with need remaining — no capacity
-    /// is left anywhere for this vertex this phase.
+    /// is left anywhere for this vertex this phase. Dense mode only; the
+    /// implicit scalar path is [`KernelView::propose_one_cached`].
     ///
     /// Per (b, a) at most **one** source can be admissible: the free pool
     /// needs `y_free[b] == cq+1` while a cluster at dual `v ≤ −1` needs
@@ -124,13 +192,34 @@ impl KernelView<'_> {
     /// dual. So the cursor is just a demand-vertex index.
     pub fn propose_one(&self, wi: usize, out: &mut [PlanItem]) -> (usize, bool) {
         let b = self.worklist[wi] as usize;
+        self.propose_over_row(wi, self.q.row(b), out)
+    }
+
+    /// [`KernelView::propose_one`] for implicit costs: the quantized row
+    /// streams through the backend's [`RowScratch`] row-window LRU, then
+    /// the identical dense stage body runs over it — byte-identical
+    /// proposals, O(CAP·na) resident state instead of the cq slab.
+    pub fn propose_one_cached(
+        &self,
+        wi: usize,
+        out: &mut [PlanItem],
+        scratch: &mut RowScratch,
+    ) -> (usize, bool) {
+        let b = self.worklist[wi] as usize;
+        let row = scratch.row(self.q, b);
+        self.propose_over_row(wi, row, out)
+    }
+
+    /// The one scalar-propose body both row sources share — any change to
+    /// the propose epilogue lands in dense and implicit sweeps alike.
+    fn propose_over_row(&self, wi: usize, row: &[i32], out: &mut [PlanItem]) -> (usize, bool) {
+        let b = self.worklist[wi] as usize;
         let mut need = self.need[wi];
         let yb = self.y_free[b] as i64;
-        let row = self.q.row(b);
         let na = row.len();
         let mut len = 0usize;
         let mut a = self.cursor[wi] as usize;
-        if self.stage_segment(row, yb, na, &mut a, &mut need, &mut len, out) {
+        if self.stage_segment(&SliceRow(row), yb, na, &mut a, &mut need, &mut len, out) {
             return (len, false);
         }
         (len, need > 0)
@@ -143,9 +232,9 @@ impl KernelView<'_> {
     /// historical scalar loop, so both sweeps stay byte-identical by
     /// construction.
     #[inline]
-    fn stage_segment(
+    fn stage_segment<R: RowUnits>(
         &self,
-        row: &[i32],
+        row: &R,
         yb: i64,
         end: usize,
         a: &mut usize,
@@ -157,7 +246,7 @@ impl KernelView<'_> {
             if *need == 0 || *len == out.len() {
                 return true;
             }
-            let want = row[*a] as i64 + 1 - yb;
+            let want = row.get(*a) as i64 + 1 - yb;
             if want == 0 {
                 let cap = self.a_free[*a];
                 if cap > 0 {
@@ -200,10 +289,33 @@ impl KernelView<'_> {
         let na_pad = self.na_pad;
         debug_assert!(na_pad >= na, "lane mirror not built for this arena");
         let nblk = na_pad / LANES;
-        let lrow = &self.lane_cq[b * na_pad..(b + 1) * na_pad];
         let bmin = &self.lane_min[b * nblk..(b + 1) * nblk];
         let mut len = 0usize;
         let mut a = self.cursor[wi] as usize;
+        if self.q.is_implicit() {
+            // Implicit costs: the block-min cache is the only resident
+            // lane state (no lane_cq mirror); blocks that pass the skip
+            // filter quantize their entries on demand from the provider.
+            // Same skip decisions, same per-entry units ⇒ identical
+            // proposals to the dense lane sweep.
+            let prow = ImplicitRow { q: self.q, b };
+            while a < na {
+                if need == 0 || len == out.len() {
+                    return (len, false);
+                }
+                let blk = a / LANES;
+                if bmin[blk] as i64 + 1 - yb > 0 {
+                    a = (blk + 1) * LANES;
+                    continue;
+                }
+                let end = ((blk + 1) * LANES).min(na);
+                if self.stage_segment(&prow, yb, end, &mut a, &mut need, &mut len, out) {
+                    return (len, false);
+                }
+            }
+            return (len, need > 0);
+        }
+        let lrow = &self.lane_cq[b * na_pad..(b + 1) * na_pad];
         while a < na {
             if need == 0 || len == out.len() {
                 return (len, false);
@@ -214,7 +326,7 @@ impl KernelView<'_> {
                 continue;
             }
             let end = ((blk + 1) * LANES).min(na);
-            if self.stage_segment(lrow, yb, end, &mut a, &mut need, &mut len, out) {
+            if self.stage_segment(&SliceRow(lrow), yb, end, &mut a, &mut need, &mut len, out) {
                 return (len, false);
             }
         }
@@ -227,17 +339,24 @@ impl KernelView<'_> {
 /// (`plans.len() == actives.len() * PLAN_WIDTH`). This is **the** sweep
 /// body — the scalar backend runs it over the full active list, the
 /// chunked backend over per-thread windows — so every backend stages
-/// identical proposals by construction.
+/// identical proposals by construction. `scratch` is the backend's
+/// row-window LRU, touched only for implicit costs.
 pub fn sequential_sweep(
     view: &KernelView<'_>,
     actives: &[u32],
     plans: &mut [PlanItem],
     plan_len: &mut [u8],
     exhausted: &mut [bool],
+    scratch: &mut RowScratch,
 ) {
+    let implicit = view.q.is_implicit();
     for (i, &wi) in actives.iter().enumerate() {
         let out = &mut plans[i * PLAN_WIDTH..(i + 1) * PLAN_WIDTH];
-        let (len, ex) = view.propose_one(wi as usize, out);
+        let (len, ex) = if implicit {
+            view.propose_one_cached(wi as usize, out, &mut *scratch)
+        } else {
+            view.propose_one(wi as usize, out)
+        };
         plan_len[i] = len as u8;
         exhausted[i] = ex;
     }
@@ -321,14 +440,7 @@ pub struct KernelArena {
 impl Default for KernelArena {
     fn default() -> Self {
         Self {
-            q: QuantizedCosts {
-                nb: 0,
-                na: 0,
-                cq: Vec::new(),
-                eps_abs: 1.0,
-                eps: 0.5,
-                c_max: 0.0,
-            },
+            q: QuantizedCosts::empty(),
             nb: 0,
             na: 0,
             b_free: Vec::new(),
@@ -385,17 +497,27 @@ impl KernelArena {
     /// Prepare the arena for a new instance, reusing every allocation.
     /// `masses = None` means the assignment special case (one unit per
     /// vertex on both sides); `Some((supply_units, demand_units))` is the
-    /// θ-scaled §4 transport instance.
+    /// θ-scaled §4 transport instance. Dense entry — implicit providers go
+    /// through [`KernelArena::init_src`].
     pub fn init(&mut self, costs: &CostMatrix, eps: f64, masses: Option<(&[u64], &[u64])>) {
-        let reused = self.inits > 0 && self.nb == costs.nb && self.na == costs.na;
+        self.init_src(&CostSource::Dense(costs), eps, masses);
+    }
+
+    /// [`KernelArena::init`] over either cost representation. The dense
+    /// arm is byte-identical to the historical path; the implicit arm
+    /// materializes **no** per-entry cost state — only the block-min cache
+    /// when lanes are enabled.
+    pub fn init_src(&mut self, costs: &CostSource<'_>, eps: f64, masses: Option<(&[u64], &[u64])>) {
+        let (cnb, cna) = (costs.nb(), costs.na());
+        let reused = self.inits > 0 && self.nb == cnb && self.na == cna;
         self.inits += 1;
         if reused {
             self.reuse_hits += 1;
         }
         self.last_init_reused = reused;
-        self.nb = costs.nb;
-        self.na = costs.na;
-        self.q.requantize(costs, eps);
+        self.nb = cnb;
+        self.na = cna;
+        self.q.requantize_src(costs, eps);
         self.b_free.clear();
         self.a_free.clear();
         match masses {
@@ -440,9 +562,32 @@ impl KernelArena {
         self.slot_evictions = 0;
         self.release_fixup_needed = false;
         self.lemma41_strict = true;
+        self.rebuild_lanes();
+    }
+
+    /// (Re)build the vector backend's lane state for the current
+    /// quantization: dense keeps the full `lane_cq` mirror + block minima;
+    /// implicit keeps **only** the block minima (the O(n²/[`LANES`])
+    /// cache), streamed row-by-row from the provider.
+    fn rebuild_lanes(&mut self) {
         if self.lanes_enabled {
-            self.q.build_lane_blocks(&mut self.lane_cq, &mut self.lane_min);
+            if self.q.is_implicit() {
+                self.lane_cq = Vec::new();
+                self.q.build_lane_min_implicit(&mut self.lane_min);
+            } else {
+                self.q.build_lane_blocks(&mut self.lane_cq, &mut self.lane_min);
+            }
         }
+    }
+
+    /// Resident cost-derived state in bytes: the quantized slab (dense
+    /// mode) plus the lane mirror/minima (vector backend). This is the
+    /// number the no-slab acceptance gate asserts on — an implicit solve
+    /// through the vector backend holds only the block-min cache,
+    /// `nb · na_padded/LANES · 4` bytes, never an O(n²) slab.
+    pub fn cost_state_bytes(&self) -> u64 {
+        ((self.q.cq.len() + self.lane_cq.len() + self.lane_min.len())
+            * std::mem::size_of::<i32>()) as u64
     }
 
     /// Re-target the arena to a new quantization **without discarding the
@@ -462,11 +607,18 @@ impl KernelArena {
     /// would still be feasible for OT, but could strand unit-mass edges
     /// below their free-copy dual and fail the strict matching check).
     pub fn rescale(&mut self, costs: &CostMatrix, eps_next: f64) {
-        assert_eq!(costs.nb, self.nb, "rescale requires the same instance shape");
-        assert_eq!(costs.na, self.na, "rescale requires the same instance shape");
+        self.rescale_src(&CostSource::Dense(costs), eps_next);
+    }
+
+    /// [`KernelArena::rescale`] over either cost representation: the
+    /// implicit arm requantizes by **re-streaming rows from the provider**
+    /// (constant extra memory), never by re-reading an O(n²) slab.
+    pub fn rescale_src(&mut self, costs: &CostSource<'_>, eps_next: f64) {
+        assert_eq!(costs.nb(), self.nb, "rescale requires the same instance shape");
+        assert_eq!(costs.na(), self.na, "rescale requires the same instance shape");
         assert!(self.inits > 0, "rescale needs an initialized arena");
         let old_abs = self.q.eps_abs;
-        self.q.requantize(costs, eps_next);
+        self.q.requantize_src(costs, eps_next);
         self.rescales += 1;
         // Lemma 4.1 is proven from the cold init; a rescaled state can
         // transiently hold more live clusters (the slot pool absorbs
@@ -503,9 +655,7 @@ impl KernelArena {
         self.enforce_feasibility();
         // worklists and round scratch rebuild per phase; lane mirrors
         // track the requantized costs.
-        if self.lanes_enabled {
-            self.q.build_lane_blocks(&mut self.lane_cq, &mut self.lane_min);
-        }
+        self.rebuild_lanes();
     }
 
     /// Restore ε-feasibility after out-of-band releases or dual
@@ -524,6 +674,8 @@ impl KernelArena {
     /// hence the loop. Both passes only shrink duals/matched flow, so it
     /// terminates (in practice 1–2 iterations).
     fn enforce_feasibility(&mut self) {
+        // one-row scratch so implicit costs stream instead of materializing
+        let mut rowbuf: Vec<i32> = Vec::new();
         loop {
             // clamp: each a's max copy dual, computed once per pass
             let mut ymax: Vec<Option<i64>> = Vec::with_capacity(self.na);
@@ -539,7 +691,7 @@ impl KernelArena {
                 });
             }
             for b in 0..self.nb {
-                let row = self.q.row(b);
+                let row = self.q.row_units(b, &mut rowbuf);
                 let mut bound = i64::MAX;
                 for (a, ym) in ymax.iter().enumerate() {
                     if let Some(y) = ym {
@@ -598,12 +750,23 @@ impl KernelArena {
     /// (`y(b) ≤ min_a cq(b,a) + 1`), so the state is exactly a cold init
     /// whose relabel counters start near where a similar instance ended.
     pub fn warm_reinit(&mut self, costs: &CostMatrix, eps: f64, masses: Option<(&[u64], &[u64])>) {
-        assert_eq!(costs.nb, self.nb, "warm_reinit requires the same shape");
-        assert_eq!(costs.na, self.na, "warm_reinit requires the same shape");
+        self.warm_reinit_src(&CostSource::Dense(costs), eps, masses);
+    }
+
+    /// [`KernelArena::warm_reinit`] over either cost representation (the
+    /// per-row minima stream from the provider in implicit mode).
+    pub fn warm_reinit_src(
+        &mut self,
+        costs: &CostSource<'_>,
+        eps: f64,
+        masses: Option<(&[u64], &[u64])>,
+    ) {
+        assert_eq!(costs.nb(), self.nb, "warm_reinit requires the same shape");
+        assert_eq!(costs.na(), self.na, "warm_reinit requires the same shape");
         assert!(self.inits > 0, "warm_reinit needs a previously initialized arena");
         let old_abs = self.q.eps_abs;
         let carried: Vec<i32> = std::mem::take(&mut self.y_free);
-        self.init(costs, eps, masses);
+        self.init_src(costs, eps, masses);
         self.warm_reinits += 1;
         // Lemma 4.1's ≤2-live-cluster proof assumes the cold y(b)=1 init;
         // carried (heterogeneous) supply duals can transiently stack more
@@ -612,9 +775,18 @@ impl KernelArena {
         self.lemma41_strict = false;
         let f = old_abs / self.q.eps_abs;
         let band = (1.0 / self.q.eps).ceil() as i64 + 2;
+        // Per-row minima: the vector backend's fresh block-min cache
+        // already holds them (pads are i32::MAX, so the block fold IS the
+        // row min) — reusing it avoids re-streaming an implicit provider's
+        // whole cost relation a second time right after init_src did.
+        let nblk = self.q.na_padded() / LANES;
         for b in 0..self.nb {
             let scaled = ((carried[b] as f64) * f).round() as i64;
-            let row_min = self.q.row(b).iter().copied().min().unwrap_or(0) as i64;
+            let row_min = if self.lanes_enabled {
+                self.lane_min[b * nblk..(b + 1) * nblk].iter().copied().min().unwrap_or(0) as i64
+            } else {
+                self.q.row_min(b) as i64
+            };
             self.y_free[b] = scaled.clamp(1, (row_min + 1).min(band).max(1)) as i32;
         }
     }

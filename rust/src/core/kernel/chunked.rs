@@ -8,18 +8,27 @@
 //! wall-clock changes. §3.2's O(log n) expected round bound applies
 //! unchanged (ablation A2 measures it).
 
-use crate::core::kernel::arena::{sequential_sweep, KernelArena, KernelPhase, PLAN_WIDTH};
+use crate::core::kernel::arena::{
+    sequential_sweep, KernelArena, KernelPhase, RowScratch, PLAN_WIDTH,
+};
 use crate::core::kernel::FlowKernel;
 
 #[derive(Debug)]
 pub struct ChunkedKernel {
     arena: KernelArena,
     threads: usize,
+    /// One row-window LRU per sweep thread for implicit costs (values are
+    /// pure per-row quantizations, so per-thread caching cannot perturb
+    /// the thread-invariant result contract).
+    scratch: Vec<RowScratch>,
 }
 
 impl ChunkedKernel {
     pub fn new(threads: usize) -> Self {
-        Self { arena: KernelArena::new(), threads: threads.max(1) }
+        let threads = threads.max(1);
+        let mut scratch = Vec::with_capacity(threads);
+        scratch.resize_with(threads, RowScratch::default);
+        Self { arena: KernelArena::new(), threads, scratch }
     }
 }
 
@@ -42,25 +51,27 @@ impl FlowKernel for ChunkedKernel {
 
     fn run_phase(&mut self) -> KernelPhase {
         let threads = self.threads;
+        let scratch = &mut self.scratch;
         self.arena.run_phase(|view, active, plans, plan_len, exhausted| {
             let n = active.len();
             let workers = threads.min(n.max(1));
             if workers <= 1 {
-                sequential_sweep(view, active, plans, plan_len, exhausted);
+                sequential_sweep(view, active, plans, plan_len, exhausted, &mut scratch[0]);
                 return;
             }
             let chunk = n.div_ceil(workers);
             std::thread::scope(|s| {
                 // chunks/chunks_mut yield disjoint windows, so each worker
-                // owns its slice of the plan buffers and runs the one
-                // shared sweep body over it
-                for (((acts, pl), ll), el) in active
+                // owns its slice of the plan buffers (and its own row
+                // scratch) and runs the one shared sweep body over it
+                for ((((acts, pl), ll), el), rs) in active
                     .chunks(chunk)
                     .zip(plans.chunks_mut(chunk * PLAN_WIDTH))
                     .zip(plan_len.chunks_mut(chunk))
                     .zip(exhausted.chunks_mut(chunk))
+                    .zip(scratch.iter_mut())
                 {
-                    s.spawn(move || sequential_sweep(view, acts, pl, ll, el));
+                    s.spawn(move || sequential_sweep(view, acts, pl, ll, el, rs));
                 }
             });
         })

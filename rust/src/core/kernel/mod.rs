@@ -35,7 +35,9 @@ pub mod chunked;
 pub mod scalar;
 pub mod vector;
 
-pub use arena::{KernelArena, KernelPhase, KernelView, PlanItem, PLAN_WIDTH, SLOTS, SLOT_FREE};
+pub use arena::{
+    KernelArena, KernelPhase, KernelView, PlanItem, RowScratch, PLAN_WIDTH, SLOTS, SLOT_FREE,
+};
 pub use chunked::ChunkedKernel;
 pub use scalar::ScalarKernel;
 pub use vector::VectorKernel;
@@ -105,6 +107,7 @@ impl WarmStart {
 use crate::core::cost::CostMatrix;
 use crate::core::duals::DualWeights;
 use crate::core::matching::Matching;
+use crate::core::provider::CostSource;
 
 /// One flow-kernel backend: owns an arena and decides how the per-phase
 /// propose sweep executes. Everything else — state layout, accept order,
@@ -127,6 +130,13 @@ pub trait FlowKernel: Send {
     /// `masses = None` is the unit-mass assignment case.
     fn init(&mut self, costs: &CostMatrix, eps: f64, masses: Option<(&[u64], &[u64])>) {
         self.arena_mut().init(costs, eps, masses);
+    }
+
+    /// [`FlowKernel::init`] over either cost representation — implicit
+    /// providers never materialize the O(n²) slab (see
+    /// [`KernelArena::init_src`]).
+    fn init_src(&mut self, costs: &CostSource<'_>, eps: f64, masses: Option<(&[u64], &[u64])>) {
+        self.arena_mut().init_src(costs, eps, masses);
     }
 
     /// Run one phase; `terminated` means the ε-threshold held.
@@ -309,6 +319,44 @@ mod tests {
         check_feasible(&k.arena().q, &m, &k.duals()).unwrap();
         assert_eq!(k.arena().warm_reinits, 1);
         assert!(k.arena().last_init_reused, "warm_reinit reuses the arena allocations");
+    }
+
+    #[test]
+    fn implicit_costs_identical_across_scalar_and_chunked() {
+        use crate::core::provider::{Costs, GeneratedCosts};
+        let dense = random_costs(18, 5);
+        let grid = dense.clone();
+        let costs =
+            Costs::generated(GeneratedCosts::new(18, 18, move |b, a| grid.at(b, a)).unwrap());
+        let mut kd = ScalarKernel::new();
+        kd.init(&dense, 0.2, None);
+        kd.run_to_termination(10_000).unwrap();
+        let mut ki = ScalarKernel::new();
+        ki.init_src(&costs.source(), 0.2, None);
+        ki.run_to_termination(10_000).unwrap();
+        ki.check_invariants().unwrap();
+        assert_eq!(kd.extract_matching(), ki.extract_matching());
+        assert_eq!(kd.duals(), ki.duals());
+        assert_eq!(kd.arena().rounds, ki.arena().rounds);
+        assert_eq!(ki.arena().cost_state_bytes(), 0, "scalar implicit holds no cost state");
+        for threads in [2usize, 5] {
+            let mut kc = ChunkedKernel::new(threads);
+            kc.init_src(&costs.source(), 0.2, None);
+            kc.run_to_termination(10_000).unwrap();
+            assert_eq!(kd.extract_matching(), kc.extract_matching(), "t{threads}");
+            assert_eq!(kd.duals(), kc.duals(), "t{threads}");
+        }
+        // OT masses through the implicit path
+        let supply: Vec<u64> = (0..18).map(|b| 2 + (b % 3) as u64).collect();
+        let demand: Vec<u64> = (0..18).map(|a| 3 + (a % 2) as u64).collect();
+        let mut od = ScalarKernel::new();
+        od.init(&dense, 0.15, Some((&supply[..], &demand[..])));
+        od.run_to_termination(100_000).unwrap();
+        let mut oi = ScalarKernel::new();
+        oi.init_src(&costs.source(), 0.15, Some((&supply[..], &demand[..])));
+        oi.run_to_termination(100_000).unwrap();
+        assert_eq!(od.unit_flow(), oi.unit_flow());
+        assert_eq!(od.duals(), oi.duals());
     }
 
     #[test]

@@ -3,17 +3,19 @@
 //! must reproduce bit-for-bit (see the module docs of
 //! [`crate::core::kernel`]).
 
-use crate::core::kernel::arena::{sequential_sweep, KernelArena, KernelPhase};
+use crate::core::kernel::arena::{sequential_sweep, KernelArena, KernelPhase, RowScratch};
 use crate::core::kernel::FlowKernel;
 
 #[derive(Debug, Default)]
 pub struct ScalarKernel {
     arena: KernelArena,
+    /// Row-window LRU for implicit costs (untouched on dense solves).
+    scratch: RowScratch,
 }
 
 impl ScalarKernel {
     pub fn new() -> Self {
-        Self { arena: KernelArena::new() }
+        Self::default()
     }
 }
 
@@ -31,6 +33,9 @@ impl FlowKernel for ScalarKernel {
     }
 
     fn run_phase(&mut self) -> KernelPhase {
-        self.arena.run_phase(sequential_sweep)
+        let scratch = &mut self.scratch;
+        self.arena.run_phase(|view, active, plans, plan_len, exhausted| {
+            sequential_sweep(view, active, plans, plan_len, exhausted, &mut *scratch)
+        })
     }
 }

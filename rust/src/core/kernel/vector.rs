@@ -146,6 +146,57 @@ mod tests {
     }
 
     #[test]
+    fn implicit_costs_identical_to_dense_without_lane_mirror() {
+        use crate::core::provider::{Costs, GeneratedCosts};
+        // n = 11 exercises the lane-padding path under implicit costs.
+        for n in [8usize, 11] {
+            let dense = random_costs(n, 21);
+            let grid = dense.clone();
+            let costs = Costs::generated(
+                GeneratedCosts::new(n, n, move |b, a| grid.at(b, a)).unwrap(),
+            );
+            let mut kd = VectorKernel::new();
+            kd.init(&dense, 0.2, None);
+            kd.run_to_termination(10_000).unwrap();
+            let mut ki = VectorKernel::new();
+            ki.init_src(&costs.source(), 0.2, None);
+            ki.run_to_termination(10_000).unwrap();
+            ki.check_invariants().unwrap();
+            assert_eq!(kd.extract_matching(), ki.extract_matching(), "n={n}");
+            assert_eq!(kd.duals(), ki.duals(), "n={n}");
+            assert_eq!(kd.arena().rounds, ki.arena().rounds, "n={n}");
+            assert_eq!(kd.arena().phases, ki.arena().phases, "n={n}");
+            // dense holds cq + lane mirror + minima; implicit only minima
+            assert!(ki.arena().cost_state_bytes() < kd.arena().cost_state_bytes() / 4);
+            assert!(ki.arena().q.is_implicit() && ki.arena().q.cq.is_empty());
+        }
+    }
+
+    #[test]
+    fn implicit_rescale_restreams_and_matches_dense_schedule() {
+        use crate::core::provider::{Costs, GeneratedCosts};
+        let dense = random_costs(12, 4);
+        let grid = dense.clone();
+        let costs =
+            Costs::generated(GeneratedCosts::new(12, 12, move |b, a| grid.at(b, a)).unwrap());
+        let mut kd = VectorKernel::new();
+        kd.init(&dense, 0.4, None);
+        kd.run_to_termination(10_000).unwrap();
+        kd.arena_mut().rescale(&dense, 0.2);
+        kd.run_to_termination(10_000).unwrap();
+        let mut ki = VectorKernel::new();
+        ki.init_src(&costs.source(), 0.4, None);
+        ki.run_to_termination(10_000).unwrap();
+        ki.arena_mut().rescale_src(&costs.source(), 0.2);
+        ki.check_invariants().unwrap();
+        ki.run_to_termination(10_000).unwrap();
+        assert_eq!(kd.extract_matching(), ki.extract_matching());
+        assert_eq!(kd.duals(), ki.duals());
+        assert_eq!(ki.arena().rescales, 1);
+        assert!(ki.arena().q.cq.is_empty(), "rescale must not materialize a slab");
+    }
+
+    #[test]
     fn arena_reuse_works_for_vector_backend() {
         let mut kv = VectorKernel::new();
         kv.init(&random_costs(10, 1), 0.2, None);

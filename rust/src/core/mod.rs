@@ -10,6 +10,7 @@ pub mod error;
 pub mod instance;
 pub mod kernel;
 pub mod matching;
+pub mod provider;
 pub mod quantize;
 pub mod transport;
 
@@ -21,5 +22,8 @@ pub use duals::DualWeights;
 pub use error::{OtprError, Result};
 pub use instance::{AssignmentInstance, OtInstance, ScaledOtInstance};
 pub use matching::{Matching, FREE};
+pub use provider::{
+    CostProvider, CostSource, Costs, DenseCosts, GeneratedCosts, L1PointCosts, SqEuclideanCosts,
+};
 pub use quantize::QuantizedCosts;
 pub use transport::TransportPlan;

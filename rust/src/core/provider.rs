@@ -1,0 +1,664 @@
+//! Implicit cost matrices: the [`CostProvider`] abstraction that breaks
+//! the O(n²) memory wall.
+//!
+//! The push-relabel solver only ever *reads* costs inside the propose
+//! sweep, yet historically every layer — [`crate::core::QuantizedCosts`],
+//! the kernel arena, the API problem model, the coordinator job payloads —
+//! materialized and shipped the dense O(n²) slab. For geometric OT
+//! instances (point clouds under (squared-)Euclidean or L1 cost — exactly
+//! the workloads the experimental literature benchmarks) the cost is a
+//! pure function of O(n) data, so nothing above the propose sweep needs
+//! the slab at all.
+//!
+//! * [`CostProvider`] — the read contract: dimensions, per-edge
+//!   [`CostProvider::cost_at`], row streaming via
+//!   [`CostProvider::fill_row`], the normalization constant
+//!   [`CostProvider::max_cost`], and an optional dense fast path.
+//! * [`DenseCosts`] / the blanket impl on [`CostMatrix`] — the existing
+//!   slab, byte-identical behavior preserved (the kernel detects the
+//!   [`CostProvider::dense`] fast path and runs the historical code).
+//! * [`SqEuclideanCosts`] — 2-D point clouds under squared-Euclidean or
+//!   plain Euclidean distance (the latter reproduces
+//!   `data::synthetic::euclidean_costs` bit-for-bit).
+//! * [`L1PointCosts`] — d-dimensional f32 vectors under L1 distance
+//!   (reproduces `data::images::l1_costs` bit-for-bit).
+//! * [`GeneratedCosts`] — an arbitrary pure closure `(b, a) → cost`
+//!   (the `data::workloads` golden-corpus generator uses this).
+//! * [`Costs`] — the cheaply-clonable owned representation
+//!   (`Dense | Points | L1Points | Generated`, all behind `Arc`) that
+//!   `api::Problem` threads through requests, the registry, and the
+//!   coordinator — an implicit job payload is O(n) bytes, not O(n²).
+//! * [`CostSource`] — the borrowed per-call view the kernel and the
+//!   drivers take: either a dense slab reference or an owned provider
+//!   handle the arena can keep across phases.
+//!
+//! **Byte-identity contract.** A provider must be a *pure function* of its
+//! construction data, and [`CostProvider::max_cost`] must equal the
+//! row-major f32 max-fold [`CostMatrix::max`] would compute over the
+//! materialized matrix. Under that contract the implicit path quantizes
+//! every entry to exactly the dense path's integer units, so matchings,
+//! plans, duals, and round/phase counts are **byte-identical** dense vs
+//! implicit on every kernel backend (pinned by `tests/implicit_costs.rs`
+//! and the golden corpus).
+
+use crate::core::cost::CostMatrix;
+use crate::core::error::{OtprError, Result};
+use crate::core::matching::{Matching, FREE};
+use crate::core::transport::TransportPlan;
+use std::fmt;
+use std::sync::Arc;
+
+/// Read-only cost oracle: everything the solver stack needs from a cost
+/// matrix, without requiring the O(n²) slab to exist.
+pub trait CostProvider: Send + Sync {
+    /// |B| — number of supply vertices (rows).
+    fn nb(&self) -> usize;
+
+    /// |A| — number of demand vertices (columns).
+    fn na(&self) -> usize;
+
+    /// Cost of edge (b, a). Must be pure and deterministic: the same
+    /// (b, a) always yields the same f32.
+    fn cost_at(&self, b: usize, a: usize) -> f32;
+
+    /// Fill `out` (length ≥ [`CostProvider::na`]) with row `b`.
+    fn fill_row(&self, b: usize, out: &mut [f32]) {
+        for (a, slot) in out.iter_mut().take(self.na()).enumerate() {
+            *slot = self.cost_at(b, a);
+        }
+    }
+
+    /// Largest cost of the instance — the quantization normalization
+    /// constant. Must equal [`CostMatrix::max`] of the materialized
+    /// matrix (providers compute it once at construction by streaming).
+    fn max_cost(&self) -> f32;
+
+    /// Dense fast path: when the provider is backed by a real slab the
+    /// kernel keeps the historical in-place requantize/lane-mirror code,
+    /// byte-identical to pre-provider behavior.
+    fn dense(&self) -> Option<&CostMatrix> {
+        None
+    }
+
+    /// Short provider kind for diagnostics ("dense", "points",
+    /// "l1-points", "generated") — quoted by quantize/feasibility error
+    /// strings so failures on streamed costs are attributable.
+    fn kind(&self) -> &'static str;
+}
+
+impl CostProvider for CostMatrix {
+    fn nb(&self) -> usize {
+        self.nb
+    }
+
+    fn na(&self) -> usize {
+        self.na
+    }
+
+    #[inline]
+    fn cost_at(&self, b: usize, a: usize) -> f32 {
+        self.at(b, a)
+    }
+
+    fn fill_row(&self, b: usize, out: &mut [f32]) {
+        out[..self.na].copy_from_slice(self.row(b));
+    }
+
+    fn max_cost(&self) -> f32 {
+        self.max()
+    }
+
+    fn dense(&self) -> Option<&CostMatrix> {
+        Some(self)
+    }
+
+    fn kind(&self) -> &'static str {
+        "dense"
+    }
+}
+
+/// Named wrapper for an owned dense matrix behind the provider trait —
+/// every method forwards to the canonical [`CostMatrix`] impl above, so
+/// there is exactly one dense provider implementation to maintain.
+#[derive(Debug, Clone)]
+pub struct DenseCosts(pub CostMatrix);
+
+impl CostProvider for DenseCosts {
+    fn nb(&self) -> usize {
+        CostProvider::nb(&self.0)
+    }
+
+    fn na(&self) -> usize {
+        CostProvider::na(&self.0)
+    }
+
+    #[inline]
+    fn cost_at(&self, b: usize, a: usize) -> f32 {
+        self.0.cost_at(b, a)
+    }
+
+    fn fill_row(&self, b: usize, out: &mut [f32]) {
+        self.0.fill_row(b, out)
+    }
+
+    fn max_cost(&self) -> f32 {
+        CostProvider::max_cost(&self.0)
+    }
+
+    fn dense(&self) -> Option<&CostMatrix> {
+        Some(&self.0)
+    }
+
+    fn kind(&self) -> &'static str {
+        CostProvider::kind(&self.0)
+    }
+}
+
+/// Stream the row-major f32 max-fold a dense materialization would
+/// produce ([`CostMatrix::max`] folds with 0.0), validating entries along
+/// the way. O(nb·na) time, O(1) memory — run once at construction.
+fn stream_max(
+    nb: usize,
+    na: usize,
+    kind: &'static str,
+    mut f: impl FnMut(usize, usize) -> f32,
+) -> Result<f32> {
+    let mut max = 0.0f32;
+    for b in 0..nb {
+        for a in 0..na {
+            let c = f(b, a);
+            if !c.is_finite() || c < 0.0 {
+                return Err(OtprError::InvalidInstance(format!(
+                    "{kind} cost provider yields invalid cost {c} at ({b},{a}): \
+                     costs must be finite and non-negative"
+                )));
+            }
+            max = max.max(c);
+        }
+    }
+    Ok(max)
+}
+
+/// 2-D point-cloud costs: squared Euclidean (the benchmark-literature
+/// default) or plain Euclidean (the paper's Figure-1 workload). O(n)
+/// resident data; `cost_at` reproduces `Point2::dist` arithmetic
+/// bit-for-bit, so the Euclidean form matches
+/// `data::synthetic::euclidean_costs` exactly.
+#[derive(Debug, Clone)]
+pub struct SqEuclideanCosts {
+    /// Supply points (rows), (x, y).
+    b_pts: Vec<[f64; 2]>,
+    /// Demand points (columns), (x, y).
+    a_pts: Vec<[f64; 2]>,
+    /// Take the square root (plain Euclidean) instead of squared.
+    take_sqrt: bool,
+    max: f32,
+}
+
+impl SqEuclideanCosts {
+    /// Squared-Euclidean costs over (supply, demand) point clouds.
+    pub fn new(b_pts: Vec<[f64; 2]>, a_pts: Vec<[f64; 2]>) -> Result<Self> {
+        Self::build(b_pts, a_pts, false)
+    }
+
+    /// Plain Euclidean distance — byte-identical to
+    /// `data::synthetic::euclidean_costs` on the same points.
+    pub fn euclidean(b_pts: Vec<[f64; 2]>, a_pts: Vec<[f64; 2]>) -> Result<Self> {
+        Self::build(b_pts, a_pts, true)
+    }
+
+    fn build(b_pts: Vec<[f64; 2]>, a_pts: Vec<[f64; 2]>, take_sqrt: bool) -> Result<Self> {
+        let mut s = Self { b_pts, a_pts, take_sqrt, max: 0.0 };
+        s.max = stream_max(s.b_pts.len(), s.a_pts.len(), s.kind(), |b, a| s.eval(b, a))?;
+        Ok(s)
+    }
+
+    #[inline]
+    fn eval(&self, b: usize, a: usize) -> f32 {
+        let dx = self.b_pts[b][0] - self.a_pts[a][0];
+        let dy = self.b_pts[b][1] - self.a_pts[a][1];
+        let d2 = dx * dx + dy * dy;
+        (if self.take_sqrt { d2.sqrt() } else { d2 }) as f32
+    }
+}
+
+impl CostProvider for SqEuclideanCosts {
+    fn nb(&self) -> usize {
+        self.b_pts.len()
+    }
+
+    fn na(&self) -> usize {
+        self.a_pts.len()
+    }
+
+    #[inline]
+    fn cost_at(&self, b: usize, a: usize) -> f32 {
+        self.eval(b, a)
+    }
+
+    fn max_cost(&self) -> f32 {
+        self.max
+    }
+
+    fn kind(&self) -> &'static str {
+        "points"
+    }
+}
+
+/// d-dimensional f32 vectors under L1 distance — the image workload
+/// (normalized 28×28 images are 784-d points). O(n·d) resident data;
+/// `cost_at` reproduces `data::images::l1_distance`'s sequential f32
+/// accumulation bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct L1PointCosts {
+    b_vecs: Vec<Vec<f32>>,
+    a_vecs: Vec<Vec<f32>>,
+    max: f32,
+}
+
+impl L1PointCosts {
+    pub fn new(b_vecs: Vec<Vec<f32>>, a_vecs: Vec<Vec<f32>>) -> Result<Self> {
+        // every vector on both sides must share one dimension — a ragged
+        // vector would silently truncate the zip in eval() otherwise
+        let dim = b_vecs.first().or(a_vecs.first()).map(Vec::len).unwrap_or(0);
+        for (side, vecs) in [("b", &b_vecs), ("a", &a_vecs)] {
+            if let Some(i) = vecs.iter().position(|v| v.len() != dim) {
+                return Err(OtprError::InvalidInstance(format!(
+                    "l1-points dimension mismatch: {side}[{i}] has {} entries, expected {dim}",
+                    vecs[i].len()
+                )));
+            }
+        }
+        let mut s = Self { b_vecs, a_vecs, max: 0.0 };
+        s.max = stream_max(s.b_vecs.len(), s.a_vecs.len(), s.kind(), |b, a| s.eval(b, a))?;
+        Ok(s)
+    }
+
+    #[inline]
+    fn eval(&self, b: usize, a: usize) -> f32 {
+        // same zip/fold order as data::images::l1_distance(b_vec, a_vec)
+        self.b_vecs[b].iter().zip(&self.a_vecs[a]).map(|(&x, &y)| (x - y).abs()).sum()
+    }
+}
+
+impl CostProvider for L1PointCosts {
+    fn nb(&self) -> usize {
+        self.b_vecs.len()
+    }
+
+    fn na(&self) -> usize {
+        self.a_vecs.len()
+    }
+
+    #[inline]
+    fn cost_at(&self, b: usize, a: usize) -> f32 {
+        self.eval(b, a)
+    }
+
+    fn max_cost(&self) -> f32 {
+        self.max
+    }
+
+    fn kind(&self) -> &'static str {
+        "l1-points"
+    }
+}
+
+/// Arbitrary pure-closure costs: `(b, a) → cost`. The closure must be
+/// deterministic; construction streams every entry once to validate and
+/// compute the max.
+pub struct GeneratedCosts {
+    nb: usize,
+    na: usize,
+    f: Box<dyn Fn(usize, usize) -> f32 + Send + Sync>,
+    max: f32,
+}
+
+impl GeneratedCosts {
+    pub fn new(
+        nb: usize,
+        na: usize,
+        f: impl Fn(usize, usize) -> f32 + Send + Sync + 'static,
+    ) -> Result<Self> {
+        let max = stream_max(nb, na, "generated", |b, a| f(b, a))?;
+        Ok(Self { nb, na, f: Box::new(f), max })
+    }
+}
+
+impl fmt::Debug for GeneratedCosts {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("GeneratedCosts")
+            .field("nb", &self.nb)
+            .field("na", &self.na)
+            .field("max", &self.max)
+            .finish()
+    }
+}
+
+impl CostProvider for GeneratedCosts {
+    fn nb(&self) -> usize {
+        self.nb
+    }
+
+    fn na(&self) -> usize {
+        self.na
+    }
+
+    #[inline]
+    fn cost_at(&self, b: usize, a: usize) -> f32 {
+        (self.f)(b, a)
+    }
+
+    fn max_cost(&self) -> f32 {
+        self.max
+    }
+
+    fn kind(&self) -> &'static str {
+        "generated"
+    }
+}
+
+/// Owned, cheaply-clonable cost representation threaded through
+/// `api::Problem`, the registry, and the coordinator. Cloning clones an
+/// `Arc`, never a slab — an implicit job payload is O(n) bytes.
+#[derive(Clone)]
+pub enum Costs {
+    /// The historical dense slab (O(n²) resident).
+    Dense(Arc<CostMatrix>),
+    /// 2-D point clouds under (squared-)Euclidean distance (O(n)).
+    Points(Arc<SqEuclideanCosts>),
+    /// d-dimensional vectors under L1 distance (O(n·d)).
+    L1Points(Arc<L1PointCosts>),
+    /// Pure-closure costs (O(1) + captured data).
+    Generated(Arc<GeneratedCosts>),
+}
+
+impl fmt::Debug for Costs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Costs::{}({}x{})", self.kind(), self.nb(), self.na())
+    }
+}
+
+impl Costs {
+    pub fn dense(costs: CostMatrix) -> Self {
+        Costs::Dense(Arc::new(costs))
+    }
+
+    pub fn points(p: SqEuclideanCosts) -> Self {
+        Costs::Points(Arc::new(p))
+    }
+
+    pub fn l1_points(p: L1PointCosts) -> Self {
+        Costs::L1Points(Arc::new(p))
+    }
+
+    pub fn generated(p: GeneratedCosts) -> Self {
+        Costs::Generated(Arc::new(p))
+    }
+
+    /// The provider view (trait object) of whichever representation this is.
+    pub fn provider(&self) -> &dyn CostProvider {
+        match self {
+            Costs::Dense(m) => &**m,
+            Costs::Points(p) => &**p,
+            Costs::L1Points(p) => &**p,
+            Costs::Generated(p) => &**p,
+        }
+    }
+
+    /// Owned provider handle (Arc clone + unsize coercion).
+    pub fn provider_arc(&self) -> Arc<dyn CostProvider> {
+        match self {
+            Costs::Dense(m) => m.clone(),
+            Costs::Points(p) => p.clone(),
+            Costs::L1Points(p) => p.clone(),
+            Costs::Generated(p) => p.clone(),
+        }
+    }
+
+    /// The per-call view the kernel and the drivers consume: dense stays a
+    /// borrowed slab (historical fast path), everything else becomes an
+    /// owned provider handle.
+    pub fn source(&self) -> CostSource<'_> {
+        match self {
+            Costs::Dense(m) => CostSource::Dense(&**m),
+            other => CostSource::Implicit(other.provider_arc()),
+        }
+    }
+
+    pub fn as_dense(&self) -> Option<&CostMatrix> {
+        match self {
+            Costs::Dense(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Materialize the O(n²) slab (baselines that genuinely need one).
+    pub fn to_dense(&self) -> CostMatrix {
+        match self {
+            Costs::Dense(m) => (**m).clone(),
+            other => {
+                let p = other.provider();
+                CostMatrix::from_fn(p.nb(), p.na(), |b, a| p.cost_at(b, a))
+            }
+        }
+    }
+
+    pub fn nb(&self) -> usize {
+        self.provider().nb()
+    }
+
+    pub fn na(&self) -> usize {
+        self.provider().na()
+    }
+
+    pub fn max_cost(&self) -> f32 {
+        self.provider().max_cost()
+    }
+
+    pub fn kind(&self) -> &'static str {
+        self.provider().kind()
+    }
+
+    #[inline]
+    pub fn at(&self, b: usize, a: usize) -> f32 {
+        self.provider().cost_at(b, a)
+    }
+}
+
+/// Borrowed per-call cost view for the kernel and the drivers: either the
+/// historical dense slab (byte-identical fast path) or an owned provider
+/// handle the arena keeps across phases/rescales.
+#[derive(Clone)]
+pub enum CostSource<'a> {
+    Dense(&'a CostMatrix),
+    Implicit(Arc<dyn CostProvider>),
+}
+
+impl fmt::Debug for CostSource<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "CostSource::{}({}x{})", self.kind(), self.nb(), self.na())
+    }
+}
+
+impl<'a> From<&'a CostMatrix> for CostSource<'a> {
+    fn from(m: &'a CostMatrix) -> Self {
+        CostSource::Dense(m)
+    }
+}
+
+impl CostSource<'_> {
+    pub fn nb(&self) -> usize {
+        match self {
+            CostSource::Dense(m) => m.nb,
+            CostSource::Implicit(p) => p.nb(),
+        }
+    }
+
+    pub fn na(&self) -> usize {
+        match self {
+            CostSource::Dense(m) => m.na,
+            CostSource::Implicit(p) => p.na(),
+        }
+    }
+
+    pub fn max_cost(&self) -> f32 {
+        match self {
+            CostSource::Dense(m) => m.max(),
+            CostSource::Implicit(p) => p.max_cost(),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CostSource::Dense(_) => "dense",
+            CostSource::Implicit(p) => p.kind(),
+        }
+    }
+
+    pub fn is_implicit(&self) -> bool {
+        matches!(self, CostSource::Implicit(_))
+    }
+
+    #[inline]
+    pub fn at(&self, b: usize, a: usize) -> f32 {
+        match self {
+            CostSource::Dense(m) => m.at(b, a),
+            CostSource::Implicit(p) => p.cost_at(b, a),
+        }
+    }
+
+    /// Total matching cost under the original costs — same iteration and
+    /// accumulation order as [`Matching::cost`], so dense and implicit
+    /// report bit-identical totals.
+    pub fn matching_cost(&self, m: &Matching) -> f64 {
+        match self {
+            CostSource::Dense(c) => m.cost(c),
+            CostSource::Implicit(p) => m
+                .match_b
+                .iter()
+                .enumerate()
+                .filter(|(_, &a)| a != FREE)
+                .map(|(b, &a)| p.cost_at(b, a as usize) as f64)
+                .sum(),
+        }
+    }
+
+    /// Total plan cost — same row-major full-matrix fold as
+    /// [`TransportPlan::cost`] (zero entries included), so dense and
+    /// implicit report bit-identical totals.
+    pub fn plan_cost(&self, plan: &TransportPlan) -> f64 {
+        match self {
+            CostSource::Dense(c) => plan.cost(c),
+            CostSource::Implicit(p) => {
+                let na = plan.na;
+                plan.as_slice()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &f)| f * p.cost_at(i / na, i % na) as f64)
+                    .sum()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_provider_round_trips() {
+        let c = CostMatrix::from_fn(3, 4, |b, a| (b * 4 + a) as f32 / 11.0);
+        assert_eq!(c.dense().unwrap(), &c);
+        assert_eq!(CostProvider::max_cost(&c), c.max());
+        assert_eq!(c.cost_at(2, 3), c.at(2, 3));
+        let mut row = vec![0.0f32; 4];
+        CostProvider::fill_row(&c, 1, &mut row);
+        assert_eq!(&row[..], c.row(1));
+        assert_eq!(CostProvider::kind(&c), "dense");
+        let wrapped = DenseCosts(c.clone());
+        assert_eq!(wrapped.dense().unwrap(), &c);
+    }
+
+    #[test]
+    fn sq_euclidean_matches_materialization() {
+        let b_pts = vec![[0.0, 0.0], [0.5, 0.25], [1.0, 1.0]];
+        let a_pts = vec![[0.25, 0.75], [0.125, 0.5]];
+        for provider in [
+            SqEuclideanCosts::new(b_pts.clone(), a_pts.clone()).unwrap(),
+            SqEuclideanCosts::euclidean(b_pts.clone(), a_pts.clone()).unwrap(),
+        ] {
+            let dense = CostMatrix::from_fn(3, 2, |b, a| provider.cost_at(b, a));
+            assert_eq!(provider.max_cost(), dense.max(), "max must match the slab fold");
+            let mut row = vec![0.0f32; 2];
+            provider.fill_row(2, &mut row);
+            assert_eq!(&row[..], dense.row(2));
+        }
+        // euclidean = sqrt of squared, bit-for-bit
+        let sq = SqEuclideanCosts::new(b_pts.clone(), a_pts.clone()).unwrap();
+        let eu = SqEuclideanCosts::euclidean(b_pts, a_pts).unwrap();
+        for b in 0..3 {
+            for a in 0..2 {
+                let d2 = sq.cost_at(b, a) as f64;
+                assert!(((eu.cost_at(b, a) as f64).powi(2) - d2).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn l1_points_match_materialization() {
+        let b_vecs = vec![vec![0.5f32, 0.5, 0.0], vec![0.0, 0.25, 0.75]];
+        let a_vecs = vec![vec![1.0f32, 0.0, 0.0], vec![0.25, 0.25, 0.5]];
+        let p = L1PointCosts::new(b_vecs, a_vecs).unwrap();
+        let dense = CostMatrix::from_fn(2, 2, |b, a| p.cost_at(b, a));
+        assert_eq!(p.max_cost(), dense.max());
+        // |0.5−1| + |0.5−0| + |0−0| = 1.0
+        assert!((p.cost_at(0, 0) - 1.0).abs() < 1e-6);
+        assert!(L1PointCosts::new(vec![vec![0.0; 3]], vec![vec![0.0; 2]]).is_err());
+        // ragged inner vectors must be rejected, not silently truncated
+        assert!(L1PointCosts::new(vec![vec![0.0; 3], vec![0.0; 2]], vec![vec![0.0; 3]]).is_err());
+    }
+
+    #[test]
+    fn generated_validates_and_computes_max() {
+        let g = GeneratedCosts::new(4, 4, |b, a| ((b * 7 + a * 3) % 5) as f32 / 4.0).unwrap();
+        assert_eq!(g.max_cost(), 1.0);
+        assert_eq!(g.kind(), "generated");
+        assert!(GeneratedCosts::new(2, 2, |_, _| -1.0).is_err());
+        assert!(GeneratedCosts::new(2, 2, |_, _| f32::NAN).is_err());
+    }
+
+    #[test]
+    fn costs_enum_sources_and_materializes() {
+        let g = GeneratedCosts::new(3, 3, |b, a| (b + a) as f32 / 4.0).unwrap();
+        let costs = Costs::generated(g);
+        assert_eq!((costs.nb(), costs.na()), (3, 3));
+        assert_eq!(costs.kind(), "generated");
+        assert!(costs.as_dense().is_none());
+        assert!(costs.source().is_implicit());
+        let dense = costs.to_dense();
+        assert_eq!(dense.at(2, 2), 1.0);
+        let dc = Costs::dense(dense.clone());
+        assert!(!dc.source().is_implicit());
+        assert_eq!(dc.as_dense().unwrap(), &dense);
+        assert_eq!(format!("{costs:?}"), "Costs::generated(3x3)");
+    }
+
+    #[test]
+    fn source_cost_folds_match_dense() {
+        let g = GeneratedCosts::new(3, 3, |b, a| ((b * 5 + a * 2) % 7) as f32 / 6.0).unwrap();
+        let costs = Costs::generated(g);
+        let dense = costs.to_dense();
+        let mut m = Matching::empty(3, 3);
+        m.link(0, 2);
+        m.link(1, 0);
+        m.link(2, 1);
+        let src = costs.source();
+        assert_eq!(src.matching_cost(&m), m.cost(&dense), "bit-identical matching cost");
+        let mut plan = TransportPlan::zeros(3, 3);
+        plan.add(0, 1, 0.5);
+        plan.add(2, 2, 0.5);
+        assert_eq!(src.plan_cost(&plan), plan.cost(&dense), "bit-identical plan cost");
+        assert_eq!(CostSource::from(&dense).matching_cost(&m), m.cost(&dense));
+    }
+}

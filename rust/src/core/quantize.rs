@@ -13,8 +13,23 @@
 //! `ε_abs = ε · c_max` because the paper assumes costs scaled so the largest
 //! equals 1; quantizing relative to the instance's own max reproduces that
 //! scaling without mutating the input.
+//!
+//! **Storage modes.** Dense sources keep the historical in-place `cq`
+//! slab (O(n²) i32, byte-identical behavior). Implicit sources
+//! ([`crate::core::CostProvider`]) keep **no** per-entry state at all:
+//! [`QuantizedCosts::at`] quantizes `provider.cost_at(b, a)` on demand
+//! with exactly the dense formula, rows stream through caller scratch
+//! ([`QuantizedCosts::fill_row_units`] / [`QuantizedCosts::row_units`]),
+//! and the vector backend's block-min cache builds by streaming one f32
+//! row at a time ([`QuantizedCosts::build_lane_min_implicit`]) so the
+//! only O(n²)-shaped resident state is the O(n²/[`LANES`]) minima. The
+//! `epoch` counter bumps on every (re)quantization so row caches
+//! ([`crate::core::kernel::arena::RowScratch`]) self-invalidate.
 
 use crate::core::cost::CostMatrix;
+use crate::core::provider::{CostProvider, CostSource};
+use std::fmt;
+use std::sync::Arc;
 
 /// Lane width of the vector kernel backend's blocked cost layout. Eight
 /// `i32` lanes fill one 256-bit register, so the per-block min reductions
@@ -22,11 +37,40 @@ use crate::core::cost::CostMatrix;
 /// without any SIMD intrinsics or new dependencies.
 pub const LANES: usize = 8;
 
+/// Owned implicit source kept by the quantization so `at`/row streaming
+/// work for the arena's whole lifetime (phases, rescales, certificates).
+#[derive(Clone)]
+pub struct ImplicitSource {
+    pub provider: Arc<dyn CostProvider>,
+}
+
+impl fmt::Debug for ImplicitSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "ImplicitSource({}, {}x{})",
+            self.provider.kind(),
+            self.provider.nb(),
+            self.provider.na()
+        )
+    }
+}
+
+/// Quantize one raw cost into ε-units — the single formula both storage
+/// modes share, which is what makes implicit byte-identical to dense.
+#[inline]
+fn unit_of(c: f32, inv: f64) -> i32 {
+    let q = (c as f64 * inv).floor();
+    debug_assert!(q >= 0.0 && q <= i32::MAX as f64);
+    q as i32
+}
+
 #[derive(Debug, Clone)]
 pub struct QuantizedCosts {
     pub nb: usize,
     pub na: usize,
-    /// `cq[b*na + a] = ⌊c(b,a)/eps_abs⌋`, row-major, rows = B.
+    /// `cq[b*na + a] = ⌊c(b,a)/eps_abs⌋`, row-major, rows = B. **Empty in
+    /// implicit mode** — entries quantize on demand from the provider.
     pub cq: Vec<i32>,
     /// The absolute ε used: `eps * c_max` (1.0 fallback when c_max == 0).
     pub eps_abs: f64,
@@ -34,47 +78,169 @@ pub struct QuantizedCosts {
     pub eps: f64,
     /// Max raw cost of the instance (the normalization constant).
     pub c_max: f64,
+    /// Bumped on every (re)quantization; row caches key on it.
+    pub epoch: u64,
+    /// Cached `1.0 / eps_abs` — keeps the implicit per-entry quantize
+    /// (`at` on the vector backend's propose hot path) division-free.
+    inv_abs: f64,
+    implicit: Option<ImplicitSource>,
 }
 
 impl QuantizedCosts {
     /// Quantize `costs` at relative precision `eps` ∈ (0, 1).
     pub fn new(costs: &CostMatrix, eps: f64) -> Self {
-        let mut q = Self { nb: 0, na: 0, cq: Vec::new(), eps_abs: 1.0, eps, c_max: 0.0 };
+        let mut q = Self::empty();
         q.requantize(costs, eps);
         q
+    }
+
+    /// Quantize either storage mode of a [`CostSource`].
+    pub fn from_source(costs: &CostSource<'_>, eps: f64) -> Self {
+        let mut q = Self::empty();
+        q.requantize_src(costs, eps);
+        q
+    }
+
+    /// The zero-size placeholder the kernel arena starts from.
+    pub fn empty() -> Self {
+        Self {
+            nb: 0,
+            na: 0,
+            cq: Vec::new(),
+            eps_abs: 1.0,
+            eps: 0.5,
+            c_max: 0.0,
+            epoch: 0,
+            inv_abs: 1.0,
+            implicit: None,
+        }
     }
 
     /// Re-quantize in place, reusing the existing `cq` allocation — the
     /// [`crate::core::kernel::KernelArena`] reuse path for batched solves
     /// over same-shape instances.
     pub fn requantize(&mut self, costs: &CostMatrix, eps: f64) {
-        assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1), got {eps}");
+        assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1), got {eps} (provider=dense)");
         let c_max = costs.max() as f64;
         // All-zero costs: any plan is optimal; pick eps_abs=1 so cq is all 0.
         let eps_abs = if c_max > 0.0 { eps * c_max } else { 1.0 };
         let inv = 1.0 / eps_abs;
         self.cq.clear();
-        self.cq.extend(costs.as_slice().iter().map(|&c| {
-            let q = (c as f64 * inv).floor();
-            debug_assert!(q >= 0.0 && q <= i32::MAX as f64);
-            q as i32
-        }));
+        self.cq.extend(costs.as_slice().iter().map(|&c| unit_of(c, inv)));
         self.nb = costs.nb;
         self.na = costs.na;
         self.eps_abs = eps_abs;
+        self.inv_abs = inv;
         self.eps = eps;
         self.c_max = c_max;
+        self.implicit = None;
+        self.epoch = self.epoch.wrapping_add(1);
+    }
+
+    /// Re-target either storage mode: the dense arm is the historical
+    /// in-place requantize (byte-identical), the implicit arm re-streams
+    /// from the provider instead of re-reading a slab.
+    pub fn requantize_src(&mut self, costs: &CostSource<'_>, eps: f64) {
+        match costs {
+            CostSource::Dense(m) => self.requantize(m, eps),
+            CostSource::Implicit(p) => self.requantize_implicit(p.clone(), eps),
+        }
+    }
+
+    /// Switch to (or re-target) implicit mode: no per-entry state is
+    /// materialized — any dense slab from a previous instance is dropped.
+    pub fn requantize_implicit(&mut self, provider: Arc<dyn CostProvider>, eps: f64) {
+        assert!(
+            eps > 0.0 && eps < 1.0,
+            "eps must be in (0,1), got {eps} (provider={})",
+            provider.kind()
+        );
+        let c_max = provider.max_cost() as f64;
+        let eps_abs = if c_max > 0.0 { eps * c_max } else { 1.0 };
+        self.nb = provider.nb();
+        self.na = provider.na();
+        self.cq = Vec::new();
+        self.eps_abs = eps_abs;
+        self.inv_abs = 1.0 / eps_abs;
+        self.eps = eps;
+        self.c_max = c_max;
+        self.implicit = Some(ImplicitSource { provider });
+        self.epoch = self.epoch.wrapping_add(1);
+    }
+
+    /// True when entries quantize on demand from a provider (no `cq` slab).
+    #[inline]
+    pub fn is_implicit(&self) -> bool {
+        self.implicit.is_some()
+    }
+
+    /// Storage-mode kind for diagnostics ("dense" or the provider's kind).
+    pub fn kind(&self) -> &'static str {
+        match &self.implicit {
+            None => "dense",
+            Some(s) => s.provider.kind(),
+        }
+    }
+
+    /// Resident per-entry quantized state, in bytes (0 in implicit mode).
+    pub fn cost_state_bytes(&self) -> u64 {
+        (self.cq.len() * std::mem::size_of::<i32>()) as u64
     }
 
     #[inline]
     pub fn at(&self, b: usize, a: usize) -> i32 {
         debug_assert!(b < self.nb && a < self.na);
-        self.cq[b * self.na + a]
+        match &self.implicit {
+            None => self.cq[b * self.na + a],
+            Some(s) => unit_of(s.provider.cost_at(b, a), self.inv_abs),
+        }
     }
 
+    /// Dense row slice. **Dense mode only** — implicit callers stream via
+    /// [`QuantizedCosts::row_units`] / [`QuantizedCosts::fill_row_units`].
     #[inline]
     pub fn row(&self, b: usize) -> &[i32] {
+        debug_assert!(!self.is_implicit(), "row() needs the dense slab; use row_units()");
         &self.cq[b * self.na..(b + 1) * self.na]
+    }
+
+    /// Fill `out` with the quantized units of row `b` (either mode).
+    pub fn fill_row_units(&self, b: usize, out: &mut Vec<i32>) {
+        out.clear();
+        match &self.implicit {
+            None => out.extend_from_slice(self.row(b)),
+            Some(s) => {
+                let inv = self.inv_abs;
+                out.extend((0..self.na).map(|a| unit_of(s.provider.cost_at(b, a), inv)));
+            }
+        }
+    }
+
+    /// Row units as a slice: the dense slab directly, or `buf` filled from
+    /// the provider — the streaming accessor every O(n²) checker uses so
+    /// it never needs more than one row resident.
+    pub fn row_units<'a>(&'a self, b: usize, buf: &'a mut Vec<i32>) -> &'a [i32] {
+        match &self.implicit {
+            None => self.row(b),
+            Some(_) => {
+                self.fill_row_units(b, &mut *buf);
+                &buf[..]
+            }
+        }
+    }
+
+    /// Minimum quantized unit of row `b` (either mode).
+    pub fn row_min(&self, b: usize) -> i32 {
+        match &self.implicit {
+            None => self.row(b).iter().copied().min().unwrap_or(0),
+            Some(s) => {
+                let inv = self.inv_abs;
+                (0..self.na)
+                    .map(|a| unit_of(s.provider.cost_at(b, a), inv))
+                    .min()
+                    .unwrap_or(0)
+            }
+        }
     }
 
     /// Rounded-cost value c̄ in original units.
@@ -100,6 +266,7 @@ impl QuantizedCosts {
     /// minimum, touching 1/[`LANES`] of the memory on non-admissible row
     /// segments. Reuses the caller's allocations across re-quantizations.
     pub fn build_lane_blocks(&self, lane_cq: &mut Vec<i32>, lane_min: &mut Vec<i32>) {
+        debug_assert!(!self.is_implicit(), "dense mode only; use build_lane_min_implicit()");
         let na_pad = self.na_padded();
         let nblk = na_pad / LANES;
         lane_cq.clear();
@@ -117,6 +284,32 @@ impl QuantizedCosts {
                     m = if v < m { v } else { m };
                 }
                 lane_min[b * nblk + blk] = m;
+            }
+        }
+    }
+
+    /// Implicit-mode sibling of [`QuantizedCosts::build_lane_blocks`]:
+    /// build **only** the per-row block minima (`nb × na_padded/LANES`) by
+    /// streaming one f32 row at a time from the provider — the block-min
+    /// cache becomes the only O(n²/[`LANES`])-shaped resident cost state,
+    /// and there is no `lane_cq` mirror at all. Minima equal the dense
+    /// build's exactly (pad lanes hold `i32::MAX` there and never win).
+    pub fn build_lane_min_implicit(&self, lane_min: &mut Vec<i32>) {
+        let src = self.implicit.as_ref().expect("implicit mode only; use build_lane_blocks()");
+        let na_pad = self.na_padded();
+        let nblk = na_pad / LANES;
+        lane_min.clear();
+        lane_min.resize(self.nb * nblk, i32::MAX);
+        let inv = self.inv_abs;
+        let mut row = vec![0.0f32; self.na];
+        for b in 0..self.nb {
+            src.provider.fill_row(b, &mut row);
+            for (a, &c) in row.iter().enumerate() {
+                let v = unit_of(c, inv);
+                let m = &mut lane_min[b * nblk + a / LANES];
+                if v < *m {
+                    *m = v;
+                }
             }
         }
     }
@@ -210,6 +403,50 @@ mod tests {
                 assert_eq!(lane_min[b * 3 + blk], want, "b={b} blk={blk}");
             }
         }
+    }
+
+    #[test]
+    fn implicit_mode_matches_dense_units_without_a_slab() {
+        use crate::core::provider::{Costs, GeneratedCosts};
+        let dense = CostMatrix::from_fn(5, 13, |b, a| ((b * 7 + a * 5) % 11) as f32 / 10.0);
+        let costs = Costs::generated(
+            GeneratedCosts::new(5, 13, |b, a| ((b * 7 + a * 5) % 11) as f32 / 10.0).unwrap(),
+        );
+        let qd = QuantizedCosts::new(&dense, 0.15);
+        let qi = QuantizedCosts::from_source(&costs.source(), 0.15);
+        assert!(qi.is_implicit() && !qd.is_implicit());
+        assert_eq!(qi.kind(), "generated");
+        assert_eq!(qi.cost_state_bytes(), 0, "no per-entry state in implicit mode");
+        assert!(qd.cost_state_bytes() > 0);
+        assert_eq!(qi.eps_abs, qd.eps_abs, "identical normalization");
+        let mut buf = Vec::new();
+        for b in 0..5 {
+            assert_eq!(qi.row_units(b, &mut buf), qd.row(b), "row {b}");
+            assert_eq!(qi.row_min(b), qd.row_min(b));
+            for a in 0..13 {
+                assert_eq!(qi.at(b, a), qd.at(b, a), "({b},{a})");
+            }
+        }
+        // lane minima: implicit streaming build == dense mirror build
+        let (mut lane_cq, mut dense_min, mut impl_min) = (Vec::new(), Vec::new(), Vec::new());
+        qd.build_lane_blocks(&mut lane_cq, &mut dense_min);
+        qi.build_lane_min_implicit(&mut impl_min);
+        assert_eq!(impl_min, dense_min);
+        // epoch bumps on every requantize (row-cache invalidation key)
+        let e0 = qi.epoch;
+        let mut qi2 = qi.clone();
+        qi2.requantize_src(&costs.source(), 0.1);
+        assert_ne!(qi2.epoch, e0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn implicit_rejects_bad_eps_naming_the_provider() {
+        use crate::core::provider::GeneratedCosts;
+        use std::sync::Arc;
+        let g = Arc::new(GeneratedCosts::new(2, 2, |_, _| 0.5).unwrap());
+        let mut q = QuantizedCosts::empty();
+        q.requantize_implicit(g, 1.5);
     }
 
     #[test]

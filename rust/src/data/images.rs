@@ -7,7 +7,7 @@
 //! the properties that drive solver behaviour: 28×28, sparse support,
 //! unit-normalized mass, L1 costs in [0, 2]. See DESIGN.md §2.
 
-use crate::core::CostMatrix;
+use crate::core::{CostMatrix, L1PointCosts};
 use crate::util::pool;
 use crate::util::rng::Pcg32;
 
@@ -93,6 +93,14 @@ pub fn l1_costs(b_imgs: &[Image], a_imgs: &[Image]) -> CostMatrix {
     CostMatrix::from_vec(nb, na, data).expect("l1 costs are valid")
 }
 
+/// The implicit (no-slab) form of [`l1_costs`]: an [`L1PointCosts`]
+/// provider computing the same L1 distances bit-for-bit from O(n·784)
+/// image data instead of the O(n²) matrix.
+pub fn l1_cost_provider(b_imgs: &[Image], a_imgs: &[Image]) -> L1PointCosts {
+    L1PointCosts::new(b_imgs.to_vec(), a_imgs.to_vec())
+        .expect("normalized images yield valid costs")
+}
+
 /// Images packed as a flat [n, 784] f32 row-major array — the layout the
 /// `cost_l1` XLA artifact consumes.
 pub fn images_to_f32(imgs: &[Image]) -> Vec<f32> {
@@ -160,6 +168,22 @@ mod tests {
         for i in 0..7 {
             for j in 0..5 {
                 assert!((c.at(i, j) - l1_distance(&b[i], &a[j])).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn l1_provider_matches_dense_costs_bit_for_bit() {
+        use crate::core::CostProvider;
+        let mut rng = Pcg32::new(9);
+        let a = synthetic_digits(4, &mut rng);
+        let b = synthetic_digits(6, &mut rng);
+        let dense = l1_costs(&b, &a);
+        let provider = l1_cost_provider(&b, &a);
+        assert_eq!(provider.max_cost(), dense.max());
+        for i in 0..6 {
+            for j in 0..4 {
+                assert_eq!(provider.cost_at(i, j), dense.at(i, j), "({i},{j})");
             }
         }
     }

@@ -1,7 +1,7 @@
 //! Synthetic geometric workloads (paper §5, Figure 1): point sets A and B
 //! sampled uniformly from the unit square, costs = Euclidean distances.
 
-use crate::core::CostMatrix;
+use crate::core::{CostMatrix, SqEuclideanCosts};
 use crate::util::rng::Pcg32;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,13 +28,28 @@ pub fn euclidean_costs(b_pts: &[Point2], a_pts: &[Point2]) -> CostMatrix {
     CostMatrix::from_fn(b_pts.len(), a_pts.len(), |b, a| b_pts[b].dist(&a_pts[a]) as f32)
 }
 
-/// The Figure-1 instance: A, B ~ U([0,1]²)ⁿ, Euclidean costs (max ≤ √2).
-pub fn fig1_instance(n: usize, seed: u64) -> CostMatrix {
+/// The Figure-1 point sets: A, B ~ U([0,1]²)ⁿ — `(a_pts, b_pts)`.
+pub fn fig1_points(n: usize, seed: u64) -> (Vec<Point2>, Vec<Point2>) {
     let mut rng_a = Pcg32::with_stream(seed, 1);
     let mut rng_b = Pcg32::with_stream(seed, 2);
     let a = uniform_points(n, &mut rng_a);
     let b = uniform_points(n, &mut rng_b);
+    (a, b)
+}
+
+/// The Figure-1 instance: A, B ~ U([0,1]²)ⁿ, Euclidean costs (max ≤ √2).
+pub fn fig1_instance(n: usize, seed: u64) -> CostMatrix {
+    let (a, b) = fig1_points(n, seed);
     euclidean_costs(&b, &a)
+}
+
+/// The implicit (no-slab) form of [`euclidean_costs`]: a
+/// [`SqEuclideanCosts`] provider computing the same Euclidean distances
+/// bit-for-bit from O(n) point data.
+pub fn euclidean_cost_provider(b_pts: &[Point2], a_pts: &[Point2]) -> SqEuclideanCosts {
+    let to_core = |pts: &[Point2]| pts.iter().map(|p| [p.x, p.y]).collect::<Vec<[f64; 2]>>();
+    SqEuclideanCosts::euclidean(to_core(b_pts), to_core(a_pts))
+        .expect("finite unit-square points yield valid costs")
 }
 
 /// Points packed as a flat [n,2] f32 row-major array — the layout the
@@ -108,6 +123,20 @@ mod tests {
     fn packed_points_layout() {
         let pts = vec![Point2 { x: 0.25, y: 0.5 }, Point2 { x: 1.0, y: 0.0 }];
         assert_eq!(points_to_f32(&pts), vec![0.25, 0.5, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn provider_matches_dense_costs_bit_for_bit() {
+        use crate::core::CostProvider;
+        let (a, b) = fig1_points(23, 11); // non-multiple-of-8 width
+        let dense = euclidean_costs(&b, &a);
+        let provider = euclidean_cost_provider(&b, &a);
+        assert_eq!(provider.max_cost(), dense.max(), "identical normalization constant");
+        for i in 0..23 {
+            for j in 0..23 {
+                assert_eq!(provider.cost_at(i, j), dense.at(i, j), "({i},{j})");
+            }
+        }
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! optima pinned in committed JSON fixtures, swept by every engine in
 //! `exp/conformance.rs` and `otpr certify`.
 
-use crate::core::{AssignmentInstance, CostMatrix, OtInstance, OtprError, Result};
+use crate::core::{
+    AssignmentInstance, CostMatrix, Costs, GeneratedCosts, OtInstance, OtprError, Result,
+};
 use crate::data::{images, mnist, synthetic};
 use crate::util::minijson::Json;
 use crate::util::rng::Pcg32;
@@ -67,6 +69,32 @@ impl Workload {
 
     pub fn assignment(&self, seed: u64) -> AssignmentInstance {
         AssignmentInstance::new(self.costs(seed)).expect("workloads are square")
+    }
+
+    /// The implicit (provider-backed) form of [`Workload::costs`]:
+    /// byte-identical costs computed on demand from O(n) data, so solves
+    /// never materialize the O(n²) slab. `None` for workloads without a
+    /// pure-function form (`RandomCosts` draws a sequential RNG stream).
+    pub fn implicit_costs(&self, seed: u64) -> Option<Costs> {
+        match *self {
+            Workload::Fig1 { n } => {
+                let (a, b) = synthetic::fig1_points(n, seed);
+                Some(Costs::points(synthetic::euclidean_cost_provider(&b, &a)))
+            }
+            Workload::Clustered { n, k, sigma } => {
+                let mut ra = Pcg32::with_stream(seed, 31);
+                let mut rb = Pcg32::with_stream(seed, 32);
+                let a = synthetic::clustered_points(n, k, sigma, &mut ra);
+                let b = synthetic::clustered_points(n, k, sigma, &mut rb);
+                Some(Costs::points(synthetic::euclidean_cost_provider(&b, &a)))
+            }
+            Workload::Fig2 { n } => {
+                let (a, _) = mnist::load_or_synthesize(n, seed);
+                let (b, _) = mnist::load_or_synthesize(n, seed.wrapping_add(0x5EED));
+                Some(Costs::l1_points(images::l1_cost_provider(&b, &a)))
+            }
+            Workload::RandomCosts { .. } => None,
+        }
     }
 
     /// OT instance with random (Dirichlet-ish) masses derived from the seed.
@@ -144,6 +172,17 @@ impl GoldenSpec {
     pub fn costs(&self) -> CostMatrix {
         let salt = self.salt;
         CostMatrix::from_fn(self.nb, self.na, |b, a| golden_cost(b, a, salt))
+    }
+
+    /// The implicit form of [`GoldenSpec::costs`]: a [`GeneratedCosts`]
+    /// closure over the same formula — the dense-vs-implicit golden
+    /// equivalence suite runs every engine on both representations.
+    pub fn generated(&self) -> Costs {
+        let salt = self.salt;
+        Costs::generated(
+            GeneratedCosts::new(self.nb, self.na, move |b, a| golden_cost(b, a, salt))
+                .expect("golden formula yields valid costs"),
+        )
     }
 
     /// (supply over rows, demand over cols) as probability masses.
@@ -330,6 +369,35 @@ mod tests {
         let w = Workload::Clustered { n: 20, k: 3, sigma: 0.05 };
         let c = w.costs(9);
         assert_eq!(c.na, 20);
+    }
+
+    #[test]
+    fn implicit_workload_costs_match_dense_bit_for_bit() {
+        for w in [
+            Workload::Fig1 { n: 13 },
+            Workload::Clustered { n: 10, k: 3, sigma: 0.05 },
+            Workload::Fig2 { n: 4 },
+        ] {
+            let dense = w.costs(7);
+            let implicit = w.implicit_costs(7).expect("workload has an implicit form");
+            assert_eq!((implicit.nb(), implicit.na()), (dense.nb, dense.na), "{}", w.name());
+            assert_eq!(implicit.max_cost(), dense.max(), "{}", w.name());
+            for b in 0..dense.nb {
+                for a in 0..dense.na {
+                    assert_eq!(implicit.at(b, a), dense.at(b, a), "{} ({b},{a})", w.name());
+                }
+            }
+        }
+        assert!(Workload::RandomCosts { n: 8 }.implicit_costs(1).is_none());
+        // the golden generator has an implicit form too
+        let spec = &GOLDEN_SPECS[0];
+        let implicit = spec.generated();
+        let dense = spec.costs();
+        for b in 0..spec.nb {
+            for a in 0..spec.na {
+                assert_eq!(implicit.at(b, a), dense.at(b, a), "{} ({b},{a})", spec.name);
+            }
+        }
     }
 
     #[test]

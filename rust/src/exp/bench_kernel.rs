@@ -25,6 +25,11 @@ pub struct BenchKernelConfig {
     /// Timed repetitions per cell.
     pub reps: usize,
     pub seed: u64,
+    /// Solve the Fig1 workload through its implicit point-cloud
+    /// `CostProvider` instead of the dense slab (`otpr bench --points`):
+    /// byte-identical results, and each record's `cost_state_bytes`
+    /// shows the block-min cache instead of the dense slab.
+    pub points: bool,
 }
 
 impl Default for BenchKernelConfig {
@@ -40,6 +45,7 @@ impl Default for BenchKernelConfig {
             eps: vec![0.1, 0.05],
             reps: 3,
             seed: 42,
+            points: false,
         }
     }
 }
@@ -72,6 +78,12 @@ pub struct BenchRecord {
     pub phases: usize,
     pub rounds: usize,
     pub total_free_processed: u64,
+    /// Peak resident cost-state bytes of the solve (dense slab + lane
+    /// mirrors vs the implicit block-min cache) — the memory half of the
+    /// bench trajectory.
+    pub cost_state_bytes: u64,
+    /// Cost representation the cell solved ("dense" or "points").
+    pub costs: &'static str,
     /// Error string when the cell could not run (engine unavailable).
     pub error: Option<String>,
 }
@@ -82,15 +94,25 @@ pub fn run(cfg: &BenchKernelConfig) -> Vec<BenchRecord> {
     let solvers = SolverRegistry::with_defaults();
     let config = SolverConfig::default();
     let mut out = Vec::new();
+    let costs_mode = if cfg.points { "points" } else { "dense" };
     for engine in &cfg.engines {
         for &n in &cfg.sizes {
-            let problem = Problem::Assignment(Workload::Fig1 { n }.assignment(cfg.seed));
+            let workload = Workload::Fig1 { n };
+            let problem = if cfg.points {
+                Problem::implicit_assignment(
+                    workload.implicit_costs(cfg.seed).expect("fig1 has an implicit form"),
+                )
+                .expect("fig1 is square")
+            } else {
+                Problem::Assignment(workload.assignment(cfg.seed))
+            };
             for &eps in &cfg.eps {
                 let req = SolveRequest::new(eps).raw_eps();
                 let mut times = Vec::with_capacity(cfg.reps);
                 let mut phases = 0;
                 let mut rounds = 0;
                 let mut free = 0;
+                let mut cost_bytes = 0;
                 let mut error = None;
                 for _ in 0..cfg.reps.max(1) {
                     let sw = Stopwatch::start();
@@ -100,6 +122,7 @@ pub fn run(cfg: &BenchKernelConfig) -> Vec<BenchRecord> {
                             phases = sol.stats.phases;
                             rounds = sol.stats.rounds;
                             free = sol.stats.total_free_processed;
+                            cost_bytes = sol.stats.cost_state_bytes;
                         }
                         Err(e) => {
                             error = Some(e.to_string());
@@ -120,6 +143,8 @@ pub fn run(cfg: &BenchKernelConfig) -> Vec<BenchRecord> {
                     phases,
                     rounds,
                     total_free_processed: free,
+                    cost_state_bytes: cost_bytes,
+                    costs: costs_mode,
                     error,
                 });
             }
@@ -147,6 +172,8 @@ pub fn to_json(cfg: &BenchKernelConfig, records: &[BenchRecord]) -> Json {
                 ("phases", Json::Num(r.phases as f64)),
                 ("rounds", Json::Num(r.rounds as f64)),
                 ("total_free_processed", Json::Num(r.total_free_processed as f64)),
+                ("cost_state_bytes", Json::Num(r.cost_state_bytes as f64)),
+                ("costs", Json::Str(r.costs.to_string())),
             ];
             if let Some(e) = &r.error {
                 fields.push(("error", Json::Str(e.clone())));
@@ -177,6 +204,13 @@ pub fn load_baseline(text: &str) -> Result<Vec<(String, usize, f64, f64)>, Strin
         .ok_or_else(|| "baseline has no records array".to_string())?;
     let mut out = Vec::new();
     for r in records {
+        // the perf gate joins dense cells only — implicit (points) cells
+        // share (engine, n, eps) keys and would corrupt the join
+        if let Some(mode) = r.get("costs").and_then(|v| v.as_str()) {
+            if mode != "dense" {
+                continue;
+            }
+        }
         let engine = r
             .get("engine")
             .and_then(|v| v.as_str())
@@ -234,7 +268,7 @@ pub fn compare(
     };
     let mut out = Vec::new();
     for r in current {
-        if r.error.is_some() || !r.ns_per_op.is_finite() {
+        if r.error.is_some() || !r.ns_per_op.is_finite() || r.costs != "dense" {
             continue;
         }
         let Some(base_ns) = find_base(&r.engine, r.n, r.eps) else { continue };
@@ -303,8 +337,9 @@ pub fn compare_table(cells: &[CompareCell]) -> String {
 
 /// Fixed-width table for CLI output.
 pub fn table(records: &[BenchRecord]) -> String {
-    let mut out =
-        String::from("engine           n      eps    ns/op           phases  rounds\n");
+    let mut out = String::from(
+        "engine           n      eps    ns/op           phases  rounds  cost-state-bytes\n",
+    );
     for r in records {
         match &r.error {
             Some(e) => out.push_str(&format!(
@@ -312,8 +347,8 @@ pub fn table(records: &[BenchRecord]) -> String {
                 r.engine, r.n, r.eps
             )),
             None => out.push_str(&format!(
-                "{:<16} {:<6} {:<6} {:<15.0} {:<7} {}\n",
-                r.engine, r.n, r.eps, r.ns_per_op, r.phases, r.rounds
+                "{:<16} {:<6} {:<6} {:<15.0} {:<7} {:<7} {} ({})\n",
+                r.engine, r.n, r.eps, r.ns_per_op, r.phases, r.rounds, r.cost_state_bytes, r.costs
             )),
         }
     }
@@ -332,6 +367,7 @@ mod tests {
             eps: vec![0.3],
             reps: 1,
             seed: 1,
+            points: false,
         };
         let records = run(&cfg);
         assert_eq!(records.len(), 2);
@@ -357,6 +393,7 @@ mod tests {
             eps: vec![0.3],
             reps: 1,
             seed: 2,
+            points: false,
         };
         let records = run(&cfg);
         let artifact = to_json(&cfg, &records).to_string();
@@ -393,6 +430,41 @@ mod tests {
     }
 
     #[test]
+    fn points_mode_runs_no_slab_cells_and_never_joins_the_gate() {
+        let mut cfg = BenchKernelConfig {
+            engines: vec!["native-vector".into()],
+            sizes: vec![24],
+            eps: vec![0.3],
+            reps: 1,
+            seed: 3,
+            points: true,
+        };
+        let points = run(&cfg);
+        assert_eq!(points.len(), 1);
+        assert!(points[0].error.is_none(), "{:?}", points[0].error);
+        assert_eq!(points[0].costs, "points");
+        let dense_slab_bytes: u64 = 24 * 24 * 4;
+        assert!(
+            points[0].cost_state_bytes < dense_slab_bytes,
+            "implicit cell holds {} bytes ≥ the dense slab",
+            points[0].cost_state_bytes
+        );
+        // dense cells on the same grid report the slab + mirrors
+        cfg.points = false;
+        let dense = run(&cfg);
+        assert_eq!(dense[0].costs, "dense");
+        assert!(dense[0].cost_state_bytes >= dense_slab_bytes);
+        assert_eq!(dense[0].phases, points[0].phases, "byte-identical solve");
+        assert_eq!(dense[0].rounds, points[0].rounds);
+        // a points artifact contributes no baseline cells (and no compare
+        // cells), so it can never corrupt the dense perf gate
+        let artifact = to_json(&cfg, &points).to_string();
+        assert!(load_baseline(&artifact).unwrap().is_empty());
+        assert!(compare(&points, &load_baseline(&to_json(&cfg, &dense).to_string()).unwrap())
+            .is_empty());
+    }
+
+    #[test]
     fn unavailable_engine_reports_error_record() {
         let cfg = BenchKernelConfig {
             engines: vec!["xla".into()],
@@ -400,6 +472,7 @@ mod tests {
             eps: vec![0.3],
             reps: 1,
             seed: 1,
+            points: false,
         };
         let records = run(&cfg);
         assert_eq!(records.len(), 1);

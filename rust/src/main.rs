@@ -61,6 +61,7 @@ fn print_usage() {
         "otpr — push-relabel additive approximation for optimal transport\n\
          usage: otpr <solve|ot|serve|engines|bench|fig1|fig2|ablation|validate|certify|info> [--options]\n\
          common options: --n N --eps E --seed S --engine KEY (see `otpr engines`)\n\
+         implicit costs: --workload points (solve/serve; O(n) payload, no n² slab), bench --points\n\
          see README.md for the full matrix"
     );
 }
@@ -123,20 +124,35 @@ fn cmd_solve(args: &Args) -> i32 {
     };
     let config = SolverConfig::default()
         .with_runtime(if key == "xla" || key == "sinkhorn-xla" { registry(args) } else { None });
-    let problem = Problem::Assignment(workload(args, n).assignment(seed));
+    // `--workload points` (alias `implicit`) solves the Fig1 point cloud
+    // through its CostProvider: the job payload and the kernel hold O(n)
+    // data — no n² slab is ever materialized.
+    let wl_name = args.get_or("workload", "fig1");
+    let problem = if wl_name == "points" || wl_name == "implicit" {
+        let costs = Workload::Fig1 { n }.implicit_costs(seed).expect("fig1 has an implicit form");
+        Problem::implicit_assignment(costs).expect("fig1 is square")
+    } else {
+        Problem::Assignment(workload(args, n).assignment(seed))
+    };
     // ε is the raw algorithm parameter here, matching the paper's plots.
     let request = SolveRequest::new(eps).raw_eps();
     match solvers.solve(key, &config, &problem, &request) {
         Ok(sol) => {
             println!(
-                "n={n} eps={eps} engine={key}: cost={:.6} phases={} rounds={} time={:.3}s",
-                sol.cost, sol.stats.phases, sol.stats.rounds, sol.stats.seconds
+                "n={n} eps={eps} engine={key}: cost={:.6} phases={} rounds={} time={:.3}s \
+                 cost-state-bytes={}",
+                sol.cost,
+                sol.stats.phases,
+                sol.stats.rounds,
+                sol.stats.seconds,
+                sol.stats.cost_state_bytes
             );
             if args.flag("exact") {
+                let dense = problem.to_dense().expect("materializable for the exact oracle");
                 let ex = solvers
-                    .solve("hungarian", &config, &problem, &SolveRequest::new(0.0))
+                    .solve("hungarian", &config, &dense, &SolveRequest::new(0.0))
                     .expect("exact baseline");
-                let c_max = problem.costs().max() as f64;
+                let c_max = problem.max_cost();
                 println!(
                     "exact={:.6} additive-error={:.6} (guarantee 3εn·c_max = {:.6})",
                     ex.cost,
@@ -225,9 +241,18 @@ fn cmd_serve(args: &Args) -> i32 {
         CoordinatorConfig { workers, audit_sample_every: audit, ..Default::default() },
         reg,
     );
+    let implicit_jobs = matches!(args.get_or("workload", "fig1"), "points" | "implicit");
     let handles: Vec<_> = (0..jobs)
         .map(|i| {
-            let kind = JobKind::Assignment(workload(args, n).assignment(i as u64));
+            // implicit job payloads ship O(n) point data, not the n² slab
+            let kind = if implicit_jobs {
+                JobKind::implicit_assignment(
+                    Workload::Fig1 { n }.implicit_costs(i as u64).expect("fig1 implicit"),
+                )
+                .expect("fig1 is square")
+            } else {
+                JobKind::Assignment(workload(args, n).assignment(i as u64))
+            };
             let mut request = SolveRequest::new(eps);
             if budget_ms > 0 {
                 request = request.with_budget(Duration::from_millis(budget_ms));
@@ -296,12 +321,14 @@ fn cmd_bench(args: &Args) -> i32 {
     }
     cfg.reps = args.usize_or("reps", cfg.reps);
     cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.points = args.flag("points");
     println!(
-        "kernel bench: {} engines × sizes {:?} × eps {:?}, {} reps",
+        "kernel bench: {} engines × sizes {:?} × eps {:?}, {} reps ({} costs)",
         cfg.engines.len(),
         cfg.sizes,
         cfg.eps,
-        cfg.reps
+        cfg.reps,
+        if cfg.points { "implicit point-cloud" } else { "dense" }
     );
     let records = run(&cfg);
     println!("{}", table(&records));

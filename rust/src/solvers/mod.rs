@@ -33,8 +33,16 @@ pub struct SolveStats {
     /// same-shape instance. Counted per engine by `coordinator::Metrics`.
     pub warm_started: bool,
     /// ε levels the solve ran (1 = single-level; 0 for engines without
-    /// the concept — exact oracles, Sinkhorn, XLA).
+    /// the concept — exact oracles, Sinkhorn, XLA). Warm schedules may
+    /// report fewer levels than requested: a coarse level that terminates
+    /// in ≤ 1 phase early-stops the remaining intermediate levels.
     pub eps_levels: u32,
+    /// Resident cost-derived kernel state in bytes at the end of the
+    /// solve (quantized slab + lane mirror/minima;
+    /// `KernelArena::cost_state_bytes`). An implicit-cost solve through
+    /// the vector backend reports only the O(n²/8) block-min cache — the
+    /// no-slab acceptance gate asserts on this. 0 for non-kernel engines.
+    pub cost_state_bytes: u64,
     /// Free-form solver-specific notes (e.g. "underflow" for Sinkhorn).
     pub notes: Vec<String>,
 }

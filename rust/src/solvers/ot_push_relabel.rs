@@ -19,6 +19,7 @@
 
 use crate::core::control::{SolveControl, CANCELLED_NOTE};
 use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, WarmStart};
+use crate::core::provider::CostSource;
 use crate::core::{OtInstance, OtprError, Result, ScaledOtInstance, TransportPlan};
 use crate::solvers::{OtSolution, OtSolver, SolveStats};
 use crate::util::timer::Stopwatch;
@@ -47,13 +48,43 @@ pub(crate) fn drive_ot(
     paranoid: bool,
     warm: WarmStart,
 ) -> Result<OtSolution> {
+    drive_ot_src(
+        kernel,
+        &CostSource::Dense(&inst.costs),
+        &inst.supply,
+        &inst.demand,
+        eps_mass,
+        eps_match,
+        ctl,
+        paranoid,
+        warm,
+    )
+}
+
+/// [`drive_ot`] over either cost representation: masses are plain O(n)
+/// marginal vectors, costs stream through the [`CostSource`] — an
+/// implicit OT solve holds no O(n²) cost state (the plan itself stays a
+/// dense matrix; sparsifying plans is a separate concern).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drive_ot_src(
+    kernel: &mut dyn FlowKernel,
+    src: &CostSource<'_>,
+    supply: &[f64],
+    demand: &[f64],
+    eps_mass: f64,
+    eps_match: f64,
+    ctl: &SolveControl,
+    paranoid: bool,
+    warm: WarmStart,
+) -> Result<OtSolution> {
     let sw = Stopwatch::start();
+    let (nb, na) = (src.nb(), src.na());
     // Already stopped (e.g. a shared batch token fired): skip θ-scaling
     // and the arena init entirely and ship the feasible product coupling
     // ν⊗μ — the same cancelled-at-phase-0 answer the adapter layer uses.
     if ctl.should_stop() {
-        let plan = TransportPlan::product(&inst.supply, &inst.demand);
-        let cost = plan.cost(&inst.costs);
+        let plan = TransportPlan::product(supply, demand);
+        let cost = src.plan_cost(&plan);
         return Ok(OtSolution {
             plan,
             cost,
@@ -65,21 +96,23 @@ pub(crate) fn drive_ot(
             },
         });
     }
-    let scaled = ScaledOtInstance::build(inst, eps_mass);
+    let scaled = ScaledOtInstance::from_parts(supply, demand, nb.max(na), eps_mass);
     let masses = Some((&scaled.supply_units[..], &scaled.demand_units[..]));
     // Level plan shared with drive_assignment via WarmStart::plan.
-    let (schedule, carried, warm_started) =
-        warm.plan(kernel.arena(), inst.costs.nb, inst.costs.na, eps_match);
+    let (schedule, carried, warm_started) = warm.plan(kernel.arena(), nb, na, eps_match);
     if carried {
-        kernel.arena_mut().warm_reinit(&inst.costs, eps_match, masses);
+        kernel.arena_mut().warm_reinit_src(src, eps_match, masses);
     } else {
-        kernel.init(&inst.costs, schedule[0], masses);
+        kernel.init_src(src, schedule[0], masses);
     }
     let mut cancelled = false;
     let mut levels_run = 0u32;
-    'levels: for (li, &eps_l) in schedule.iter().enumerate() {
-        if li > 0 {
-            kernel.arena_mut().rescale(&inst.costs, eps_l);
+    let mut levels_skipped = 0u32;
+    let mut li = 0usize;
+    'levels: while li < schedule.len() {
+        let eps_l = schedule[li];
+        if levels_run > 0 {
+            kernel.arena_mut().rescale_src(src, eps_l);
         }
         levels_run += 1;
         let cap = ot_phase_cap(eps_l);
@@ -103,13 +136,20 @@ pub(crate) fn drive_ot(
                 )));
             }
         }
+        // Warm-start early-stop, mirroring drive_assignment: a level done
+        // in ≤ 1 phase jumps the schedule straight to the target ε.
+        let used = kernel.arena().phases - level_start;
+        if used <= 1 && li + 1 < schedule.len() - 1 {
+            levels_skipped += (schedule.len() - 2 - li) as u32;
+            li = schedule.len() - 1;
+        } else {
+            li += 1;
+        }
     }
 
     // Completion: remaining free supply units go to any demand with
     // residual unit capacity (first fit — the paper's "arbitrarily").
     let mut flow = kernel.unit_flow();
-    let na = inst.costs.na;
-    let nb = inst.costs.nb;
     let mut a_free = kernel.arena().a_free().to_vec();
     let b_free = kernel.arena().b_free();
     let mut cursor = 0usize;
@@ -150,7 +190,7 @@ pub(crate) fn drive_ot(
             continue;
         }
         for a in 0..na {
-            let cap = inst.demand[a] - received[a];
+            let cap = demand[a] - received[a];
             if cap > 1e-15 {
                 let k = resid.min(cap);
                 plan.add(b, a, k);
@@ -167,11 +207,14 @@ pub(crate) fn drive_ot(
         }
     }
 
-    let cost = plan.cost(&inst.costs);
+    let cost = src.plan_cost(&plan);
     let arena = kernel.arena();
     let mut notes = vec![format!("max_clusters={}", arena.max_classes_seen)];
     if cancelled {
         notes.push(CANCELLED_NOTE.to_string());
+    }
+    if levels_skipped > 0 {
+        notes.push(format!("warm_skip={levels_skipped}"));
     }
     Ok(OtSolution {
         plan,
@@ -184,9 +227,10 @@ pub(crate) fn drive_ot(
             seconds: sw.elapsed_secs(),
             arena_reused: arena.last_init_reused,
             warm_started,
-            // levels actually entered — a cancellation mid-schedule must
-            // not report levels that never ran
+            // levels actually entered — a cancellation or an early-stop
+            // mid-schedule must not report levels that never ran
             eps_levels: levels_run.max(1),
+            cost_state_bytes: arena.cost_state_bytes(),
             notes,
         },
     })

@@ -16,6 +16,7 @@ use crate::core::control::{SolveControl, CANCELLED_NOTE};
 use crate::core::duals::check_feasible;
 use crate::core::kernel::{FlowKernel, ScalarKernel, WarmStart};
 use crate::core::matching::Matching;
+use crate::core::provider::CostSource;
 use crate::core::{AssignmentInstance, OtprError, Result};
 use crate::solvers::{AssignmentSolution, AssignmentSolver, SolveStats};
 use crate::util::timer::Stopwatch;
@@ -48,8 +49,24 @@ pub(crate) fn drive_assignment(
     paranoid: bool,
     warm: WarmStart,
 ) -> Result<AssignmentSolution> {
+    drive_assignment_src(kernel, &CostSource::Dense(&inst.costs), eps_param, ctl, paranoid, warm)
+}
+
+/// [`drive_assignment`] over either cost representation
+/// ([`CostSource::Dense`] is the historical byte-identical path;
+/// [`CostSource::Implicit`] streams rows from a
+/// [`crate::core::CostProvider`] and never materializes the O(n²) slab).
+pub(crate) fn drive_assignment_src(
+    kernel: &mut dyn FlowKernel,
+    src: &CostSource<'_>,
+    eps_param: f64,
+    ctl: &SolveControl,
+    paranoid: bool,
+    warm: WarmStart,
+) -> Result<AssignmentSolution> {
     let sw = Stopwatch::start();
-    if inst.n() == 0 {
+    let (nb, na) = (src.nb(), src.na());
+    if nb.max(na) == 0 {
         return Ok(AssignmentSolution {
             matching: Matching::empty(0, 0),
             cost: 0.0,
@@ -57,12 +74,12 @@ pub(crate) fn drive_assignment(
             stats: SolveStats::default(),
         });
     }
-    // Already stopped (e.g. a shared batch token fired): skip the O(n²)
-    // arena init entirely — remaining batch items abandon near-free with
-    // the same cancelled-at-phase-0 coupling a mid-run stop produces.
+    // Already stopped (e.g. a shared batch token fired): skip the arena
+    // init entirely — remaining batch items abandon near-free with the
+    // same cancelled-at-phase-0 coupling a mid-run stop produces.
     if ctl.should_stop() {
-        let matching = Matching::arbitrary_complete(inst.costs.nb, inst.costs.na);
-        let cost = matching.cost(&inst.costs);
+        let matching = Matching::arbitrary_complete(nb, na);
+        let cost = src.matching_cost(&matching);
         return Ok(AssignmentSolution {
             matching,
             cost,
@@ -78,18 +95,20 @@ pub(crate) fn drive_assignment(
     // carry reuses the arena's duals and jumps straight to the target ε;
     // otherwise a multi-level warm start solves the geometric schedule,
     // rescaling the arena between levels.
-    let (schedule, carried, warm_started) =
-        warm.plan(kernel.arena(), inst.costs.nb, inst.costs.na, eps_param);
+    let (schedule, carried, warm_started) = warm.plan(kernel.arena(), nb, na, eps_param);
     if carried {
-        kernel.arena_mut().warm_reinit(&inst.costs, eps_param, None);
+        kernel.arena_mut().warm_reinit_src(src, eps_param, None);
     } else {
-        kernel.init(&inst.costs, schedule[0], None);
+        kernel.init_src(src, schedule[0], None);
     }
     let mut cancelled = false;
     let mut levels_run = 0u32;
-    'levels: for (li, &eps_l) in schedule.iter().enumerate() {
-        if li > 0 {
-            kernel.arena_mut().rescale(&inst.costs, eps_l);
+    let mut levels_skipped = 0u32;
+    let mut li = 0usize;
+    'levels: while li < schedule.len() {
+        let eps_l = schedule[li];
+        if levels_run > 0 {
+            kernel.arena_mut().rescale_src(src, eps_l);
         }
         levels_run += 1;
         let cap = assignment_phase_cap(eps_l);
@@ -117,16 +136,31 @@ pub(crate) fn drive_assignment(
                 )));
             }
         }
+        // Warm-start early-stop: a level that terminated in ≤ 1 phase
+        // says the carried duals are already essentially feasible at this
+        // coarseness — intermediate levels would only rescale state that
+        // no longer changes, so jump straight to the target ε. (The ε
+        // ratio stays a power of two, which the rescale contract needs.)
+        let used = kernel.arena().phases - level_start;
+        if used <= 1 && li + 1 < schedule.len() - 1 {
+            levels_skipped += (schedule.len() - 2 - li) as u32;
+            li = schedule.len() - 1;
+        } else {
+            li += 1;
+        }
     }
     // arbitrary completion of the ≤ εn leftover free vertices
     let mut matching = kernel.extract_matching();
     matching.complete_arbitrarily();
-    debug_assert!(inst.costs.nb > inst.costs.na || matching.is_perfect());
-    let cost = matching.cost(&inst.costs);
+    debug_assert!(nb > na || matching.is_perfect());
+    let cost = src.matching_cost(&matching);
     let duals = kernel.duals();
     let mut notes = Vec::new();
     if cancelled {
         notes.push(CANCELLED_NOTE.to_string());
+    }
+    if levels_skipped > 0 {
+        notes.push(format!("warm_skip={levels_skipped}"));
     }
     let arena = kernel.arena();
     Ok(AssignmentSolution {
@@ -140,9 +174,10 @@ pub(crate) fn drive_assignment(
             seconds: sw.elapsed_secs(),
             arena_reused: arena.last_init_reused,
             warm_started,
-            // levels actually entered — a cancellation mid-schedule must
-            // not report levels that never ran
+            // levels actually entered — a cancellation or an early-stop
+            // mid-schedule must not report levels that never ran
             eps_levels: levels_run.max(1),
+            cost_state_bytes: arena.cost_state_bytes(),
             notes,
         },
     })
@@ -362,6 +397,29 @@ mod tests {
                 warm.cost
             );
         }
+    }
+
+    #[test]
+    fn warm_early_stop_skips_intermediate_levels() {
+        // A zero-cost instance terminates every level in one phase, so the
+        // coarsest level must early-stop the schedule straight to the
+        // target ε: 3 requested levels, 2 actually run, skip recorded.
+        let i = AssignmentInstance::new(CostMatrix::zeros(12, 12)).unwrap();
+        let sol =
+            PushRelabel { paranoid: true, warm_levels: 3 }.solve_with_param(&i, 0.1).unwrap();
+        assert!(sol.matching.is_perfect());
+        assert!(sol.stats.warm_started);
+        assert_eq!(sol.stats.eps_levels, 2, "coarse + target only");
+        assert!(
+            sol.stats.notes.iter().any(|n| n == "warm_skip=1"),
+            "skip must be recorded: {:?}",
+            sol.stats.notes
+        );
+        // a 2-level schedule has no intermediate level to skip
+        let sol =
+            PushRelabel { paranoid: false, warm_levels: 2 }.solve_with_param(&i, 0.1).unwrap();
+        assert_eq!(sol.stats.eps_levels, 2);
+        assert!(!sol.stats.notes.iter().any(|n| n.starts_with("warm_skip")));
     }
 
     #[test]

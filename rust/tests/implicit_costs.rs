@@ -1,0 +1,283 @@
+//! Implicit-cost (CostProvider) conformance: dense and provider-backed
+//! representations of the same instance must be **byte-identical** through
+//! every kernel engine — matchings, plans, duals, costs, phase/round
+//! counts — while the implicit path never materializes the O(n²) slab.
+//!
+//! Covers the PR-5 acceptance gates:
+//! * dense-vs-implicit identity on the golden corpus for all kernel
+//!   engines including the warm variants;
+//! * a property sweep over point clouds (dense `euclidean_costs` vs
+//!   `SqEuclideanCosts`) across all backends, with non-multiple-of-8
+//!   widths exercising the lane-padding path;
+//! * rescale-via-provider invariants;
+//! * the n=4096 no-slab solve through `native-vector`, asserted by
+//!   `SolveStats::cost_state_bytes`.
+
+use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry};
+use otpr::core::certify::certify;
+use otpr::core::kernel::{FlowKernel, VectorKernel};
+use otpr::data::workloads::{Workload, GOLDEN_SPECS};
+use otpr::prop_assert;
+use otpr::util::proptest_mini::{check, PropConfig};
+
+const KERNEL_ENGINES: [&str; 5] = [
+    "native-seq",
+    "native-parallel",
+    "native-vector",
+    "native-seq-warm",
+    "native-vector-warm",
+];
+
+fn assert_identical(
+    dense: &otpr::api::Solution,
+    implicit: &otpr::api::Solution,
+    label: &str,
+) {
+    match (dense.matching(), implicit.matching()) {
+        (Some(md), Some(mi)) => assert_eq!(md, mi, "{label}: matchings differ"),
+        (None, None) => assert_eq!(
+            dense.plan().unwrap().as_slice(),
+            implicit.plan().unwrap().as_slice(),
+            "{label}: plans differ"
+        ),
+        _ => panic!("{label}: coupling shapes differ across representations"),
+    }
+    assert_eq!(dense.duals, implicit.duals, "{label}: duals must be byte-identical");
+    assert_eq!(dense.cost, implicit.cost, "{label}: costs must be bit-identical");
+    assert_eq!(dense.stats.phases, implicit.stats.phases, "{label}: phase counts differ");
+    assert_eq!(dense.stats.rounds, implicit.stats.rounds, "{label}: round counts differ");
+}
+
+/// The acceptance sweep: every golden case, dense vs generated-provider,
+/// every kernel engine (cold and warm), two ε values — byte-identical.
+#[test]
+fn golden_corpus_dense_vs_implicit_identical_on_all_kernel_engines() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    for spec in GOLDEN_SPECS {
+        let costs = spec.costs();
+        let (dense_p, implicit_p) = match spec.masses() {
+            None => (
+                Problem::assignment(costs).unwrap(),
+                Problem::implicit_assignment(spec.generated()).unwrap(),
+            ),
+            Some((supply, demand)) => (
+                Problem::ot(costs, demand.clone(), supply.clone()).unwrap(),
+                Problem::implicit_ot(spec.generated(), demand, supply).unwrap(),
+            ),
+        };
+        assert_eq!(dense_p.kind(), implicit_p.kind(), "{}", spec.name);
+        for engine in KERNEL_ENGINES {
+            for eps in [0.3, 0.1] {
+                let req = SolveRequest::new(eps);
+                let d = registry.solve(engine, &config, &dense_p, &req).unwrap();
+                let i = registry.solve(engine, &config, &implicit_p, &req).unwrap();
+                assert_identical(&d, &i, &format!("{} × {engine} eps={eps}", spec.name));
+                assert!(
+                    i.stats.cost_state_bytes <= d.stats.cost_state_bytes,
+                    "{} × {engine}: implicit holds more cost state than dense",
+                    spec.name
+                );
+                // implicit solutions certify through streamed rows
+                let cert = certify(&implicit_p, &i, &req);
+                assert!(cert.ok(), "{} × {engine}: {}", spec.name, cert.summary());
+                if i.duals.is_some() {
+                    assert_eq!(cert.dual_ok, Some(true), "{} × {engine}", spec.name);
+                }
+            }
+        }
+    }
+}
+
+/// Satellite property test: dense Euclidean costs and the
+/// `SqEuclideanCosts` provider built from the same point cloud are
+/// byte-identical across all kernel backends; random widths cover the
+/// non-multiple-of-8 lane-padding path.
+#[test]
+fn prop_point_cloud_dense_vs_provider_identical() {
+    let registry = SolverRegistry::with_defaults();
+    check(
+        "point-cloud provider equivalence",
+        &PropConfig { cases: 8, ..Default::default() },
+        |rng| {
+            let n = 5 + rng.next_below(24) as usize;
+            let seed = rng.next_u64();
+            let eps = [0.3, 0.15][rng.next_below(2) as usize];
+            let w = Workload::Fig1 { n };
+            let dense_p = Problem::Assignment(w.assignment(seed));
+            let implicit_p =
+                Problem::implicit_assignment(w.implicit_costs(seed).expect("fig1 implicit"))
+                    .expect("square");
+            let req = SolveRequest::new(eps);
+            for engine in KERNEL_ENGINES {
+                let config = SolverConfig::default().with_threads(1 + (seed % 4) as usize);
+                let d = registry.solve(engine, &config, &dense_p, &req).map_err(|e| e.to_string())?;
+                let i = registry
+                    .solve(engine, &config, &implicit_p, &req)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    d.matching() == i.matching(),
+                    "matchings differ (n={n}, seed={seed}, {engine})"
+                );
+                prop_assert!(d.duals == i.duals, "duals differ (n={n}, seed={seed}, {engine})");
+                prop_assert!(d.cost == i.cost, "costs differ (n={n}, seed={seed}, {engine})");
+                prop_assert!(
+                    d.stats.rounds == i.stats.rounds,
+                    "rounds differ (n={n}, seed={seed}, {engine})"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Satellite: rescale-via-provider keeps every invariant — after each
+/// in-place ε re-target the implicit arena is ε-feasible, reaches the
+/// finer threshold, and matches the dense arena driven through the same
+/// schedule.
+#[test]
+fn prop_rescale_via_provider_invariants() {
+    use otpr::core::duals::check_feasible;
+    check(
+        "implicit rescale invariants",
+        &PropConfig { cases: 8, ..Default::default() },
+        |rng| {
+            let n = 6 + rng.next_below(18) as usize;
+            let seed = rng.next_u64();
+            let w = Workload::Fig1 { n };
+            let dense = w.costs(seed);
+            let costs = w.implicit_costs(seed).expect("fig1 implicit");
+            let schedule = [0.4, 0.2, 0.1];
+            let mut ki = VectorKernel::new();
+            ki.init_src(&costs.source(), schedule[0], None);
+            let mut kd = VectorKernel::new();
+            kd.init(&dense, schedule[0], None);
+            for (li, &eps_l) in schedule.iter().enumerate() {
+                if li > 0 {
+                    ki.arena_mut().rescale_src(&costs.source(), eps_l);
+                    kd.arena_mut().rescale(&dense, eps_l);
+                    ki.check_invariants().map_err(|e| format!("post-rescale: {e}"))?;
+                }
+                ki.run_to_termination(100_000)?;
+                kd.run_to_termination(100_000)?;
+                ki.check_invariants().map_err(|e| format!("level {li}: {e}"))?;
+                prop_assert!(
+                    ki.arena().free_units() <= ki.arena().threshold(),
+                    "level {li} missed its ε threshold (n={n}, seed={seed})"
+                );
+                prop_assert!(
+                    ki.duals() == kd.duals(),
+                    "level {li}: implicit duals diverge from dense (n={n}, seed={seed})"
+                );
+                prop_assert!(
+                    ki.arena().q.cq.is_empty(),
+                    "rescale materialized a slab (n={n}, seed={seed})"
+                );
+            }
+            check_feasible(&ki.arena().q, &ki.extract_matching(), &ki.duals())?;
+            prop_assert!(ki.arena().rescales == 2, "both rescales must run");
+            Ok(())
+        },
+    );
+}
+
+/// The no-slab acceptance gate: an n=4096 point-cloud assignment solves
+/// through `native-vector` while the kernel's resident cost state stays
+/// far below the dense n² f32 slab (the block-min cache is n²/8 i32s).
+#[test]
+fn n4096_point_cloud_solves_without_dense_slab() {
+    let n = 4096usize;
+    let costs = Workload::Fig1 { n }.implicit_costs(42).expect("fig1 implicit");
+    assert!(costs.source().is_implicit());
+    let problem = Problem::implicit_assignment(costs).unwrap();
+    let registry = SolverRegistry::with_defaults();
+    let sol = registry
+        .solve(
+            "native-vector",
+            &SolverConfig::default(),
+            &problem,
+            // raw algorithm ε (the paper's parameterization) keeps the
+            // phase count small enough for a CI-friendly runtime
+            &SolveRequest::new(0.3).raw_eps(),
+        )
+        .expect("implicit n=4096 solve");
+    assert!(sol.matching().unwrap().is_perfect());
+    let dense_slab = (n * n * 4) as u64;
+    assert!(sol.stats.cost_state_bytes > 0, "kernel engines report their cost state");
+    assert!(
+        sol.stats.cost_state_bytes < dense_slab / 4,
+        "no-slab violated: {} bytes resident vs {} for the dense f32 slab",
+        sol.stats.cost_state_bytes,
+        dense_slab
+    );
+    // exactly the block-min cache: nb × na_padded/8 i32s
+    assert_eq!(sol.stats.cost_state_bytes, (n * (n / 8) * 4) as u64);
+}
+
+/// Implicit jobs flow through the coordinator end-to-end with O(n)
+/// payloads: Auto routes them to the no-slab vector backend.
+#[test]
+fn coordinator_serves_implicit_jobs_via_auto() {
+    use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind};
+    let coord = Coordinator::start(CoordinatorConfig::default(), None);
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let costs = Workload::Fig1 { n: 24 }.implicit_costs(i).expect("fig1 implicit");
+            let kind = JobKind::implicit_assignment(costs).unwrap();
+            coord.submit(kind, 0.3, Engine::Auto).unwrap()
+        })
+        .collect();
+    for h in handles {
+        let out = h.wait().unwrap();
+        assert_eq!(out.engine_used, "native-vector", "Auto routes implicit to the no-slab path");
+        let sol = out.result.unwrap();
+        assert!(sol.matching().unwrap().is_perfect());
+        assert!(sol.stats.cost_state_bytes < (24 * 24 * 4) as u64);
+    }
+    coord.shutdown();
+}
+
+/// Engines that genuinely need a dense slab refuse implicit problems with
+/// a diagnosable error instead of silently materializing.
+#[test]
+fn slab_engines_reject_implicit_problems_cleanly() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let problem = Problem::implicit_assignment(
+        Workload::Fig1 { n: 8 }.implicit_costs(1).expect("fig1 implicit"),
+    )
+    .unwrap();
+    for engine in ["hungarian", "greedy", "lmr"] {
+        let err = registry.solve(engine, &config, &problem, &SolveRequest::new(0.1)).unwrap_err();
+        assert!(
+            err.to_string().contains("requires dense costs"),
+            "{engine}: unexpected error {err}"
+        );
+    }
+    let err = registry
+        .solve("sinkhorn-native", &config, &problem, &SolveRequest::new(0.2))
+        .unwrap_err();
+    assert!(err.to_string().contains("implicit"), "sinkhorn error must name the cause: {err}");
+    // ...and the deliberate escape hatch works
+    let dense = problem.to_dense().unwrap();
+    let sol = registry.solve("hungarian", &config, &dense, &SolveRequest::new(0.0)).unwrap();
+    assert!(sol.matching().unwrap().is_perfect());
+}
+
+/// Warm engines early-stop redundant intermediate levels and still hold
+/// the dense-vs-implicit identity (both paths share the driver policy).
+#[test]
+fn warm_early_stop_identical_dense_vs_implicit() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    let w = Workload::Fig1 { n: 20 };
+    let dense_p = Problem::Assignment(w.assignment(9));
+    let implicit_p =
+        Problem::implicit_assignment(w.implicit_costs(9).expect("fig1 implicit")).unwrap();
+    let req = SolveRequest::new(0.25);
+    let d = registry.solve("native-vector-warm", &config, &dense_p, &req).unwrap();
+    let i = registry.solve("native-vector-warm", &config, &implicit_p, &req).unwrap();
+    assert_identical(&d, &i, "warm early-stop");
+    assert_eq!(d.stats.eps_levels, i.stats.eps_levels, "identical level schedules");
+    assert_eq!(d.stats.notes, i.stats.notes, "identical skip records");
+}
