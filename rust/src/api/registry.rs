@@ -473,6 +473,8 @@ fn default_builder(key: &'static str) -> BuilderFn {
         "greedy" => Box::new(|_| Box::new(AssignmentAdapter(GreedyMatcher))),
         "lmr" => Box::new(|_| Box::new(LmrSolver)),
         "ssp-exact" => Box::new(|_| Box::new(OtAdapter(SspExactOt::default()))),
+        // panic-ok: the match arms mirror ENGINE_SPECS; a missing builder is
+        // a compile-time drift bug the registry self-test pins, not input
         other => unreachable!("no default builder for engine key {other}"),
     }
 }

@@ -5,11 +5,19 @@
 use crate::core::certify::{gap_ratio_bucket, Certificate, GAP_RATIO_BUCKETS};
 use crate::util::minijson::{obj, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Latency histogram buckets (seconds, upper bounds).
 pub const LATENCY_BUCKETS: [f64; 10] =
     [0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 30.0, f64::INFINITY];
+
+/// Lock a metrics mutex, recovering from poisoning. Every guarded section
+/// here appends or increments monotone counters, so a panicking writer
+/// cannot leave state worth halting the coordinator for — losing one
+/// update beats taking the serve loop down with it.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -93,7 +101,7 @@ impl Metrics {
     pub fn record_batch(&self, key: &str, jobs: usize, wait_us: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_jobs.fetch_add(jobs as u64, Ordering::Relaxed);
-        let mut per = self.per_batch_key.lock().unwrap();
+        let mut per = locked(&self.per_batch_key);
         match per.iter_mut().find(|c| c.key == key) {
             Some(c) => {
                 c.batches += 1;
@@ -118,7 +126,7 @@ impl Metrics {
 
     /// Per-key batch occupancy snapshot.
     pub fn batch_counters(&self) -> Vec<BatchCounters> {
-        self.per_batch_key.lock().unwrap().clone()
+        locked(&self.per_batch_key).clone()
     }
 
     pub fn record_done(&self, engine: &'static str, ok: bool, queued: f64, solve: f64) {
@@ -130,8 +138,8 @@ impl Metrics {
         let total = queued + solve;
         let idx = LATENCY_BUCKETS.iter().position(|&ub| total <= ub).unwrap_or(9);
         self.latency[idx].fetch_add(1, Ordering::Relaxed);
-        *self.queue_secs_total.lock().unwrap() += queued;
-        *self.solve_secs_total.lock().unwrap() += solve;
+        *locked(&self.queue_secs_total) += queued;
+        *locked(&self.solve_secs_total) += solve;
         self.with_engine(engine, |e| e.jobs += 1);
     }
 
@@ -151,7 +159,7 @@ impl Metrics {
     }
 
     fn with_engine(&self, engine: &'static str, f: impl FnOnce(&mut EngineCounters)) {
-        let mut per = self.per_engine.lock().unwrap();
+        let mut per = locked(&self.per_engine);
         match per.iter_mut().find(|e| e.engine == engine) {
             Some(e) => f(e),
             None => {
@@ -216,7 +224,7 @@ impl Metrics {
 
     /// Per-engine counters snapshot (jobs + phase events).
     pub fn engine_counters(&self) -> Vec<EngineCounters> {
-        self.per_engine.lock().unwrap().clone()
+        locked(&self.per_engine).clone()
     }
 
     /// Full metrics export for the serve layer's `/metrics` JSON
@@ -303,8 +311,8 @@ impl Metrics {
         }
         out.push_str(&format!(
             "time: queued={:.3}s solve={:.3}s\n",
-            *self.queue_secs_total.lock().unwrap(),
-            *self.solve_secs_total.lock().unwrap()
+            *locked(&self.queue_secs_total),
+            *locked(&self.solve_secs_total)
         ));
         out.push_str("latency histogram (s):");
         for (i, ub) in LATENCY_BUCKETS.iter().enumerate() {
@@ -334,7 +342,7 @@ impl Metrics {
             }
             out.push('\n');
         }
-        for e in self.per_engine.lock().unwrap().iter() {
+        for e in locked(&self.per_engine).iter() {
             out.push_str(&format!(
                 "engine {}: {} jobs, {} phase-events, {} warm-started\n",
                 e.engine, e.jobs, e.phases, e.warm_started

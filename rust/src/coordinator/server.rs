@@ -276,7 +276,10 @@ fn worker_loop(
 ) {
     loop {
         let batch = {
-            let guard = rx.lock().unwrap();
+            // A poisoned receiver lock means a sibling worker panicked
+            // mid-recv; the channel itself is still sound, so keep draining
+            // rather than wedging the whole worker pool.
+            let guard = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             guard.recv()
         };
         let Ok(batch) = batch else { return };

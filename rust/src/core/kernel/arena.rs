@@ -34,6 +34,11 @@
 //! the chunked backend fans it out over `std::thread::scope`, and both
 //! produce byte-identical matchings, plans, and duals.
 
+// Kernel-scope lint wall: a truncating cast here silently corrupts slot
+// indices at large n, so every lossy cast goes through the checked
+// helpers below (see the `kernel-cast` rule in `otpr analyze`).
+#![deny(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+
 use crate::core::cost::CostMatrix;
 use crate::core::duals::DualWeights;
 use crate::core::matching::Matching;
@@ -59,6 +64,70 @@ const NIL: u32 = u32::MAX;
 /// needs 1 (unit budgets); OT budgets occasionally span several demand
 /// sources — anything beyond the width simply continues next round.
 pub const PLAN_WIDTH: usize = 4;
+
+/// Widen a stored `u32` id (vertex, edge, worklist rank) to a `usize`
+/// index — lossless on every supported target; the typed helper is what
+/// keeps the analyzer's kernel-cast rule meaningful for real narrowings.
+#[inline]
+pub(crate) fn idx(x: u32) -> usize {
+    x as usize // cast-ok: u32→usize is lossless on 32/64-bit targets
+}
+
+/// Narrow a vertex/edge index into the arena's `u32` id space. The
+/// instance shape bounds every caller's argument; the debug assert
+/// catches any future violation before it can corrupt an index.
+#[inline]
+#[allow(clippy::cast_possible_truncation)]
+pub(crate) fn to_u32(x: usize) -> u32 {
+    debug_assert!(u32::try_from(x).is_ok(), "index {x} exceeds the u32 id space");
+    // cast-ok: debug-asserted in range; indices are bounded by the instance shape
+    x as u32
+}
+
+/// Narrow a staged-plan length to its `u8` slot (`PLAN_WIDTH`/`SLOTS`-bounded).
+#[inline]
+#[allow(clippy::cast_possible_truncation)]
+pub(crate) fn to_u8(x: usize) -> u8 {
+    debug_assert!(x <= usize::from(u8::MAX), "plan/slot width {x} exceeds u8");
+    // cast-ok: plan lengths and slot ids are ≤ PLAN_WIDTH/SLOTS, far below 255
+    x as u8
+}
+
+/// Narrow a band-clamped dual back into the `i32` dual representation.
+#[inline]
+#[allow(clippy::cast_possible_truncation)]
+fn narrow_i32(v: i64) -> i32 {
+    debug_assert!(i32::try_from(v).is_ok(), "dual {v} exceeds i32 range");
+    // cast-ok: callers clamp into the Lemma 3.2 band before narrowing
+    v as i32
+}
+
+/// `x.round()` as an integer — the dual re-scaling step.
+#[inline]
+#[allow(clippy::cast_possible_truncation)]
+fn round_i64(x: f64) -> i64 {
+    // cast-ok: rescale ratios keep duals far inside i64 range, and float→int
+    // casts saturate (defined behavior) since Rust 1.45
+    x.round() as i64
+}
+
+/// `⌊x⌋` as `u64` for non-negative `x` — the phase-termination threshold.
+#[inline]
+#[allow(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+fn floor_u64(x: f64) -> u64 {
+    debug_assert!(x >= 0.0, "threshold must be non-negative, got {x}");
+    // cast-ok: ε·U ≥ 0 and far below 2^53; saturating float→int semantics
+    x.floor() as u64
+}
+
+/// The dual band bound `⌈1/ε⌉ + 2` in ε-units — the same bound
+/// `core::duals::check_feasible` enforces; shared by `rescale_src` and
+/// `warm_reinit_src` so the two warm-start paths can never disagree.
+#[allow(clippy::cast_possible_truncation)]
+fn dual_band(eps: f64) -> i64 {
+    // cast-ok: ε ∈ (0,1) is validated at requantize, so ⌈1/ε⌉ ∈ [1, 2^53)
+    (1.0 / eps).ceil() as i64 + 2
+}
 
 /// One staged take: `units` from demand vertex `a`, out of the free pool
 /// (`slot == SLOT_FREE`) or matched cluster slot `slot`.
@@ -165,15 +234,16 @@ impl RowScratch {
             self.slots.clear();
             self.epoch = q.epoch;
         }
-        if let Some(i) = self.slots.iter().position(|(bb, _)| *bb == b as u32) {
+        if let Some(i) = self.slots.iter().position(|(bb, _)| *bb == to_u32(b)) {
             let hit = self.slots.remove(i);
             self.slots.push(hit);
         } else {
             let mut buf =
                 if self.slots.len() >= Self::CAP { self.slots.remove(0).1 } else { Vec::new() };
             q.fill_row_units(b, &mut buf);
-            self.slots.push((b as u32, buf));
+            self.slots.push((to_u32(b), buf));
         }
+        // panic-ok: the branch above pushed a slot unconditionally
         &self.slots.last().expect("slot just pushed").1
     }
 }
@@ -191,7 +261,7 @@ impl KernelView<'_> {
     /// `y_free[b] == cq+1−v > cq+1`, and no two live clusters share a
     /// dual. So the cursor is just a demand-vertex index.
     pub fn propose_one(&self, wi: usize, out: &mut [PlanItem]) -> (usize, bool) {
-        let b = self.worklist[wi] as usize;
+        let b = idx(self.worklist[wi]);
         self.propose_over_row(wi, self.q.row(b), out)
     }
 
@@ -205,7 +275,7 @@ impl KernelView<'_> {
         out: &mut [PlanItem],
         scratch: &mut RowScratch,
     ) -> (usize, bool) {
-        let b = self.worklist[wi] as usize;
+        let b = idx(self.worklist[wi]);
         let row = scratch.row(self.q, b);
         self.propose_over_row(wi, row, out)
     }
@@ -213,12 +283,12 @@ impl KernelView<'_> {
     /// The one scalar-propose body both row sources share — any change to
     /// the propose epilogue lands in dense and implicit sweeps alike.
     fn propose_over_row(&self, wi: usize, row: &[i32], out: &mut [PlanItem]) -> (usize, bool) {
-        let b = self.worklist[wi] as usize;
+        let b = idx(self.worklist[wi]);
         let mut need = self.need[wi];
         let yb = self.y_free[b] as i64;
         let na = row.len();
         let mut len = 0usize;
-        let mut a = self.cursor[wi] as usize;
+        let mut a = idx(self.cursor[wi]);
         if self.stage_segment(&SliceRow(row), yb, na, &mut a, &mut need, &mut len, out) {
             return (len, false);
         }
@@ -251,7 +321,7 @@ impl KernelView<'_> {
                 let cap = self.a_free[*a];
                 if cap > 0 {
                     let take = (*need).min(cap);
-                    out[*len] = PlanItem { a: *a as u32, slot: SLOT_FREE, units: take };
+                    out[*len] = PlanItem { a: to_u32(*a), slot: SLOT_FREE, units: take };
                     *len += 1;
                     *need -= take;
                 }
@@ -260,7 +330,7 @@ impl KernelView<'_> {
                 for s in 0..SLOTS {
                     if self.cls_count[base + s] > 0 && self.cls_y[base + s] as i64 == want {
                         let take = (*need).min(self.cls_count[base + s]);
-                        out[*len] = PlanItem { a: *a as u32, slot: s as u8, units: take };
+                        out[*len] = PlanItem { a: to_u32(*a), slot: to_u8(s), units: take };
                         *len += 1;
                         *need -= take;
                         break;
@@ -282,7 +352,7 @@ impl KernelView<'_> {
     /// the staged proposals are **identical** to the scalar sweep's —
     /// only the memory traffic changes.
     pub fn propose_one_lanes(&self, wi: usize, out: &mut [PlanItem]) -> (usize, bool) {
-        let b = self.worklist[wi] as usize;
+        let b = idx(self.worklist[wi]);
         let mut need = self.need[wi];
         let yb = self.y_free[b] as i64;
         let na = self.q.na;
@@ -291,7 +361,7 @@ impl KernelView<'_> {
         let nblk = na_pad / LANES;
         let bmin = &self.lane_min[b * nblk..(b + 1) * nblk];
         let mut len = 0usize;
-        let mut a = self.cursor[wi] as usize;
+        let mut a = idx(self.cursor[wi]);
         if self.q.is_implicit() {
             // Implicit costs: the block-min cache is the only resident
             // lane state (no lane_cq mirror); blocks that pass the skip
@@ -341,6 +411,8 @@ impl KernelView<'_> {
 /// chunked backend over per-thread windows — so every backend stages
 /// identical proposals by construction. `scratch` is the backend's
 /// row-window LRU, touched only for implicit costs.
+// CONTRACT: round-structured accept order — this sweep stages against the
+// stable snapshot only; commits happen sequentially in `accept_one`.
 pub fn sequential_sweep(
     view: &KernelView<'_>,
     actives: &[u32],
@@ -353,11 +425,11 @@ pub fn sequential_sweep(
     for (i, &wi) in actives.iter().enumerate() {
         let out = &mut plans[i * PLAN_WIDTH..(i + 1) * PLAN_WIDTH];
         let (len, ex) = if implicit {
-            view.propose_one_cached(wi as usize, out, &mut *scratch)
+            view.propose_one_cached(idx(wi), out, &mut *scratch)
         } else {
-            view.propose_one(wi as usize, out)
+            view.propose_one(idx(wi), out)
         };
-        plan_len[i] = len as u8;
+        plan_len[i] = to_u8(len);
         exhausted[i] = ex;
     }
 }
@@ -417,6 +489,10 @@ pub struct KernelArena {
     pub lemma41_strict: bool,
     // --- counters ---
     pub total_supply_units: u64,
+    /// Total demand units of the current instance (θ-scaled); together
+    /// with `total_supply_units` this anchors the phase-boundary
+    /// conservation asserts.
+    pub total_demand_units: u64,
     pub phases: usize,
     pub rounds: usize,
     pub total_free_processed: u64,
@@ -468,6 +544,7 @@ impl Default for KernelArena {
             release_fixup_needed: false,
             lemma41_strict: true,
             total_supply_units: 0,
+            total_demand_units: 0,
             phases: 0,
             rounds: 0,
             total_free_processed: 0,
@@ -535,6 +612,7 @@ impl KernelArena {
         self.y_free.clear();
         self.y_free.resize(self.nb, 1); // paper init: y(b) = 1 unit, y(a) = 0
         self.total_supply_units = self.b_free.iter().sum();
+        self.total_demand_units = self.a_free.iter().sum();
         self.cls_y.clear();
         self.cls_y.resize(SLOTS * self.na, 0);
         self.cls_count.clear();
@@ -625,13 +703,13 @@ impl KernelArena {
         // them, with forced release as the backstop).
         self.lemma41_strict = false;
         let f = old_abs / self.q.eps_abs;
-        let scale = |y: i32| ((y as f64) * f).round() as i64;
+        let scale = |y: i32| round_i64(f64::from(y) * f);
         // Dual band in the new units (same bound `check_feasible` enforces).
-        let band = (1.0 / self.q.eps).ceil() as i64 + 2;
+        let band = dual_band(self.q.eps);
 
         // 1) supply duals into the new units.
         for y in &mut self.y_free {
-            *y = scale(*y).clamp(0, band) as i32;
+            *y = narrow_i32(scale(*y).clamp(0, band));
         }
         // 2) cluster duals; a cluster pushed below the band releases its
         // flow entirely (only near-extremal duals, if ever) — the evicted
@@ -647,7 +725,7 @@ impl KernelArena {
                 self.steal_from_slot(idx, n);
                 self.a_free[idx / SLOTS] += n;
             } else {
-                self.cls_y[idx] = v as i32;
+                self.cls_y[idx] = narrow_i32(v);
             }
         }
         // 3) clamp the supply duals back into (2) and release whatever
@@ -699,7 +777,7 @@ impl KernelArena {
                     }
                 }
                 if bound < self.y_free[b] as i64 {
-                    self.y_free[b] = bound.max(0) as i32;
+                    self.y_free[b] = narrow_i32(bound.max(0));
                 }
             }
             // release pass
@@ -714,20 +792,20 @@ impl KernelArena {
                     let mut prev = NIL;
                     let mut e = self.cls_head[idx];
                     while e != NIL {
-                        let next = self.edge_next[e as usize];
-                        let b = self.edge_b[e as usize] as usize;
+                        let next = self.edge_next[idx(e)];
+                        let b = idx(self.edge_b[idx(e)]);
                         if self.q.at(b, a) as i64 - v > self.y_free[b] as i64 {
-                            let units = self.edge_units[e as usize];
+                            let units = self.edge_units[idx(e)];
                             self.b_free[b] += units;
                             self.a_free[a] += units;
                             self.cls_count[idx] -= units;
-                            self.edge_units[e as usize] = 0;
+                            self.edge_units[idx(e)] = 0;
                             if prev == NIL {
                                 self.cls_head[idx] = next;
                             } else {
-                                self.edge_next[prev as usize] = next;
+                                self.edge_next[idx(prev)] = next;
                             }
-                            self.edge_next[e as usize] = self.edge_free;
+                            self.edge_next[idx(e)] = self.edge_free;
                             self.edge_free = e;
                             released = true;
                         } else {
@@ -774,20 +852,20 @@ impl KernelArena {
         // assertions like `rescale` does.
         self.lemma41_strict = false;
         let f = old_abs / self.q.eps_abs;
-        let band = (1.0 / self.q.eps).ceil() as i64 + 2;
+        let band = dual_band(self.q.eps);
         // Per-row minima: the vector backend's fresh block-min cache
         // already holds them (pads are i32::MAX, so the block fold IS the
         // row min) — reusing it avoids re-streaming an implicit provider's
         // whole cost relation a second time right after init_src did.
         let nblk = self.q.na_padded() / LANES;
         for b in 0..self.nb {
-            let scaled = ((carried[b] as f64) * f).round() as i64;
+            let scaled = round_i64(f64::from(carried[b]) * f);
             let row_min = if self.lanes_enabled {
                 self.lane_min[b * nblk..(b + 1) * nblk].iter().copied().min().unwrap_or(0) as i64
             } else {
                 self.q.row_min(b) as i64
             };
-            self.y_free[b] = scaled.clamp(1, (row_min + 1).min(band).max(1)) as i32;
+            self.y_free[b] = narrow_i32(scaled.clamp(1, (row_min + 1).min(band).max(1)));
         }
     }
 
@@ -818,7 +896,8 @@ impl KernelArena {
 
     /// Phase-termination threshold: run only while free units > ε·U.
     pub fn threshold(&self) -> u64 {
-        (self.q.eps * self.total_supply_units as f64).floor() as u64
+        // cast-ok: u64→f64 loses precision only above 2^53 total units
+        floor_u64(self.q.eps * self.total_supply_units as f64)
     }
 
     /// One phase, with the propose sweep run by `sweep`. Backends pass
@@ -826,6 +905,9 @@ impl KernelArena {
     /// receive the same view + scratch and must fill the same outputs
     /// (see [`KernelView::propose_one`]), which is what makes every
     /// backend result-identical.
+    // CONTRACT: round-structured accept order — proposals read only the
+    // pre-round snapshot; the accept pass commits in ascending vertex
+    // order, so every backend and thread count is byte-identical.
     pub fn run_phase<S>(&mut self, mut sweep: S) -> KernelPhase
     where
         S: FnMut(&KernelView<'_>, &[u32], &mut [PlanItem], &mut [u8], &mut [bool]),
@@ -841,6 +923,10 @@ impl KernelArena {
         }
         self.phases += 1;
         self.total_free_processed += free_now;
+        #[cfg(debug_assertions)]
+        let y_before: Vec<i32> = self.y_free.clone();
+        #[cfg(debug_assertions)]
+        let evictions_before = self.slot_evictions;
 
         // Worklist: free b's at phase start; evicted units arriving during
         // the phase join b_free but not this phase's budget.
@@ -849,7 +935,7 @@ impl KernelArena {
         self.cursor.clear();
         for b in 0..self.nb {
             if self.b_free[b] > 0 {
-                self.worklist.push(b as u32);
+                self.worklist.push(to_u32(b));
                 self.need.push(self.b_free[b]);
                 self.cursor.push(0);
             }
@@ -882,7 +968,7 @@ impl KernelArena {
             for (w, &word) in bits.iter().enumerate() {
                 let mut m = word;
                 while m != 0 {
-                    active.push((w * 64 + m.trailing_zeros() as usize) as u32);
+                    active.push(to_u32(w * 64 + idx(m.trailing_zeros())));
                     m &= m - 1;
                 }
             }
@@ -917,9 +1003,9 @@ impl KernelArena {
 
             // --- accept: sequential, ascending b (worklist order) ---
             for (i, &wi) in active.iter().enumerate() {
-                let plan = &plans[i * PLAN_WIDTH..i * PLAN_WIDTH + plan_len[i] as usize];
-                if !self.accept_one(wi as usize, plan, exhausted[i]) {
-                    bits[wi as usize / 64] &= !(1u64 << (wi as usize % 64));
+                let plan = &plans[i * PLAN_WIDTH..i * PLAN_WIDTH + usize::from(plan_len[i])];
+                if !self.accept_one(idx(wi), plan, exhausted[i]) {
+                    bits[idx(wi) / 64] &= !(1u64 << (idx(wi) % 64));
                 }
             }
         }
@@ -934,7 +1020,7 @@ impl KernelArena {
         let matched_units: u64 = self.pending.iter().map(|p| p.units).sum();
         let pending = std::mem::take(&mut self.pending);
         for p in &pending {
-            let slot = self.slot_for(p.a as usize, p.y_pre - 1);
+            let slot = self.slot_for(idx(p.a), p.y_pre - 1);
             self.cls_count[slot] += p.units;
             self.add_edge(slot, p.b, p.units);
         }
@@ -943,7 +1029,7 @@ impl KernelArena {
         // --- relabel: b's whose budget wasn't fully matched move up ---
         for wi in 0..self.worklist.len() {
             if self.need[wi] > 0 {
-                let b = self.worklist[wi] as usize;
+                let b = idx(self.worklist[wi]);
                 self.y_free[b] += 1;
             }
         }
@@ -956,20 +1042,65 @@ impl KernelArena {
             self.enforce_feasibility();
         }
         self.track_classes();
+        #[cfg(debug_assertions)]
+        self.assert_phase_boundary(&y_before, evictions_before);
         KernelPhase { free_at_start: free_now, matched_units, rounds, terminated: false }
+    }
+
+    /// Phase-boundary invariants, checked in debug builds only (Miri and
+    /// TSan runs exercise them for free): unit conservation on both
+    /// sides, dual monotonicity within a scale, and Lemma-4.1 slot
+    /// occupancy.
+    #[cfg(debug_assertions)]
+    fn assert_phase_boundary(&self, y_before: &[i32], evictions_before: u64) {
+        // conservation: free + matched units account for every θ-scaled
+        // unit on each side (each matched unit pairs one supply and one
+        // demand copy, so the cluster counts serve both equations)
+        let matched: u64 = self.cls_count.iter().sum();
+        debug_assert_eq!(
+            self.free_units() + matched,
+            self.total_supply_units,
+            "supply units leaked across a phase"
+        );
+        let a_free: u64 = self.a_free.iter().sum();
+        debug_assert_eq!(
+            a_free + matched,
+            self.total_demand_units,
+            "demand units leaked across a phase"
+        );
+        // dual monotonicity within a scale: relabels only raise supply
+        // duals; only a forced slot release (and its feasibility fixup)
+        // may lower them
+        if evictions_before == self.slot_evictions {
+            for (b, (&y0, &y1)) in y_before.iter().zip(&self.y_free).enumerate() {
+                debug_assert!(y1 >= y0, "y_free[{b}] decreased {y0} -> {y1} within a scale");
+            }
+        }
+        // Lemma-4.1 slot occupancy (strict only for cold solves)
+        for a in 0..self.na {
+            let base = a * SLOTS;
+            let live = (0..SLOTS).filter(|&s| self.cls_count[base + s] > 0).count();
+            debug_assert!(
+                !self.lemma41_strict || live <= 2,
+                "Lemma 4.1 violated at a={a}: {live} matched clusters"
+            );
+        }
     }
 
     /// Commit worklist entry `wi`'s staged plan against current
     /// capacities. Returns true while the vertex stays active. Inside a
     /// phase capacities only shrink, so when need survives the walk every
     /// plan target is exhausted and the cursor can skip past them all.
+    // CONTRACT: round-structured accept order — called sequentially in
+    // ascending rank order; reordering commits breaks byte-identity.
     fn accept_one(&mut self, wi: usize, plan: &[PlanItem], exhausted: bool) -> bool {
         if plan.is_empty() {
             // A non-exhausted propose always stages ≥ 1 item, so an empty
             // plan means the row holds nothing for this vertex: deactivate.
             return false;
         }
-        let b = self.worklist[wi] as usize;
+        let b32 = self.worklist[wi];
+        let b = idx(b32);
         let budget_left = self.need[wi];
         let mut need = budget_left;
         let mut last_a: Option<usize> = None;
@@ -977,21 +1108,21 @@ impl KernelArena {
             if need == 0 {
                 break;
             }
-            last_a = Some(item.a as usize);
+            last_a = Some(idx(item.a));
             if item.slot == SLOT_FREE {
-                let g = need.min(self.a_free[item.a as usize]);
+                let g = need.min(self.a_free[idx(item.a)]);
                 if g > 0 {
-                    self.a_free[item.a as usize] -= g;
-                    self.pending.push(Pending { a: item.a, b: b as u32, units: g, y_pre: 0 });
+                    self.a_free[idx(item.a)] -= g;
+                    self.pending.push(Pending { a: item.a, b: b32, units: g, y_pre: 0 });
                     need -= g;
                 }
             } else {
-                let idx = item.a as usize * SLOTS + item.slot as usize;
-                let g = need.min(self.cls_count[idx]);
+                let ci = idx(item.a) * SLOTS + usize::from(item.slot);
+                let g = need.min(self.cls_count[ci]);
                 if g > 0 {
-                    let y_pre = self.cls_y[idx];
-                    self.steal_from_slot(idx, g);
-                    self.pending.push(Pending { a: item.a, b: b as u32, units: g, y_pre });
+                    let y_pre = self.cls_y[ci];
+                    self.steal_from_slot(ci, g);
+                    self.pending.push(Pending { a: item.a, b: b32, units: g, y_pre });
                     need -= g;
                 }
             }
@@ -1004,7 +1135,7 @@ impl KernelArena {
             return false; // fully matched
         }
         if let Some(a) = last_a {
-            self.cursor[wi] = (a + 1) as u32;
+            self.cursor[wi] = to_u32(a + 1);
         }
         !exhausted
     }
@@ -1018,22 +1149,22 @@ impl KernelArena {
         let mut prev = NIL;
         let mut e = self.cls_head[idx];
         while e != NIL && take > 0 {
-            let k = take.min(self.edge_units[e as usize]);
-            self.edge_units[e as usize] -= k;
+            let k = take.min(self.edge_units[idx(e)]);
+            self.edge_units[idx(e)] -= k;
             take -= k;
             // evicted copies of the old partner become free again (raised
             // to its y_free — the max-dual invariant)
-            let b_old = self.edge_b[e as usize] as usize;
+            let b_old = idx(self.edge_b[idx(e)]);
             self.b_free[b_old] += k;
-            let next = self.edge_next[e as usize];
-            if self.edge_units[e as usize] == 0 {
+            let next = self.edge_next[idx(e)];
+            if self.edge_units[idx(e)] == 0 {
                 // unlink + recycle
                 if prev == NIL {
                     self.cls_head[idx] = next;
                 } else {
-                    self.edge_next[prev as usize] = next;
+                    self.edge_next[idx(prev)] = next;
                 }
-                self.edge_next[e as usize] = self.edge_free;
+                self.edge_next[idx(e)] = self.edge_free;
                 self.edge_free = e;
             } else {
                 prev = e;
@@ -1059,6 +1190,10 @@ impl KernelArena {
         let slot = match empty {
             Some(s) => s,
             None if self.lemma41_strict => {
+                // Slot exhaustion on a cold solve means the Lemma 4.1
+                // proof was violated — an algorithm bug, not a recoverable
+                // input error.
+                // panic-ok: algorithm-invariant violations must fail loudly
                 panic!("cluster slots exhausted at a={a}: >{SLOTS} distinct dual values (Lemma 4.1 violated)")
             }
             None => {
@@ -1070,8 +1205,12 @@ impl KernelArena {
                 // phase, before the next phase proposes. (Later rounds of
                 // the current phase see the freed capacity but stay
                 // conservative: an over-dual supply simply skips it.)
-                let s = base
-                    + (0..SLOTS).min_by_key(|&s| self.cls_count[base + s]).expect("SLOTS > 0");
+                let mut s = base;
+                for t in base + 1..base + SLOTS {
+                    if self.cls_count[t] < self.cls_count[s] {
+                        s = t;
+                    }
+                }
                 let n = self.cls_count[s];
                 self.steal_from_slot(s, n);
                 self.a_free[a] += n;
@@ -1090,21 +1229,21 @@ impl KernelArena {
     fn add_edge(&mut self, slot: usize, b: u32, units: u64) {
         let mut e = self.cls_head[slot];
         while e != NIL {
-            if self.edge_b[e as usize] == b {
-                self.edge_units[e as usize] += units;
+            if self.edge_b[idx(e)] == b {
+                self.edge_units[idx(e)] += units;
                 return;
             }
-            e = self.edge_next[e as usize];
+            e = self.edge_next[idx(e)];
         }
         let e = if self.edge_free != NIL {
             let e = self.edge_free;
-            self.edge_free = self.edge_next[e as usize];
-            self.edge_b[e as usize] = b;
-            self.edge_units[e as usize] = units;
-            self.edge_next[e as usize] = self.cls_head[slot];
+            self.edge_free = self.edge_next[idx(e)];
+            self.edge_b[idx(e)] = b;
+            self.edge_units[idx(e)] = units;
+            self.edge_next[idx(e)] = self.cls_head[slot];
             e
         } else {
-            let e = self.edge_b.len() as u32;
+            let e = to_u32(self.edge_b.len());
             self.edge_b.push(b);
             self.edge_units.push(units);
             self.edge_next.push(self.cls_head[slot]);
@@ -1171,9 +1310,9 @@ impl KernelArena {
                 }
                 let mut e = self.cls_head[base + s];
                 while e != NIL {
-                    flow[self.edge_b[e as usize] as usize * self.na + a] +=
-                        self.edge_units[e as usize];
-                    e = self.edge_next[e as usize];
+                    flow[idx(self.edge_b[idx(e)]) * self.na + a] +=
+                        self.edge_units[idx(e)];
+                    e = self.edge_next[idx(e)];
                 }
             }
         }
@@ -1193,11 +1332,11 @@ impl KernelArena {
                 let mut e = self.cls_head[base + s];
                 while e != NIL {
                     debug_assert_eq!(
-                        self.edge_units[e as usize], 1,
+                        self.edge_units[idx(e)], 1,
                         "extract_matching on a multi-unit instance"
                     );
-                    m.link(self.edge_b[e as usize] as usize, a);
-                    e = self.edge_next[e as usize];
+                    m.link(idx(self.edge_b[idx(e)]), a);
+                    e = self.edge_next[idx(e)];
                 }
             }
         }
@@ -1233,11 +1372,11 @@ impl KernelArena {
                 let mut total = 0u64;
                 let mut e = self.cls_head[idx];
                 while e != NIL {
-                    total += self.edge_units[e as usize];
+                    total += self.edge_units[idx(e)];
                     // (3) for matched copies: implicit b-copy dual
                     // cq − y_cls must not exceed y_free[b] (free copies
                     // sit at the max).
-                    let b = self.edge_b[e as usize] as usize;
+                    let b = idx(self.edge_b[idx(e)]);
                     let implied_yb = self.q.at(b, a) - self.cls_y[idx];
                     if implied_yb > self.y_free[b] {
                         return Err(format!(
@@ -1245,7 +1384,7 @@ impl KernelArena {
                             self.y_free[b]
                         ));
                     }
-                    e = self.edge_next[e as usize];
+                    e = self.edge_next[idx(e)];
                 }
                 if total != self.cls_count[idx] {
                     return Err(format!(

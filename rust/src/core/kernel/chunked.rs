@@ -8,6 +8,10 @@
 //! wall-clock changes. §3.2's O(log n) expected round bound applies
 //! unchanged (ablation A2 measures it).
 
+// Kernel-scope lint wall: all narrowing index math must go through the
+// checked helpers in `arena` (`idx`/`to_u32`/`to_u8`).
+#![deny(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+
 use crate::core::kernel::arena::{
     sequential_sweep, KernelArena, KernelPhase, RowScratch, PLAN_WIDTH,
 };
@@ -49,6 +53,10 @@ impl FlowKernel for ChunkedKernel {
         &mut self.arena
     }
 
+    // CONTRACT: round-structured accept order — worker threads only stage
+    // proposals into disjoint plan windows against the round snapshot;
+    // commits happen inside KernelArena::run_phase in ascending rank order,
+    // so the result is identical to the scalar backend at any thread count.
     fn run_phase(&mut self) -> KernelPhase {
         let threads = self.threads;
         let scratch = &mut self.scratch;

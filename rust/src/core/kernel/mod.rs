@@ -73,6 +73,7 @@ impl WarmStart {
     pub fn schedule(&self, eps: f64) -> Vec<f64> {
         let l = self.levels.max(1);
         let mut v: Vec<f64> = (0..l)
+            // cast-ok: levels are a small user-facing u32 count, far below i32::MAX
             .map(|i| eps * f64::powi(2.0, (l - 1 - i) as i32))
             .filter(|e| *e < 1.0)
             .collect();

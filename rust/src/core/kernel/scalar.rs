@@ -3,6 +3,10 @@
 //! must reproduce bit-for-bit (see the module docs of
 //! [`crate::core::kernel`]).
 
+// Kernel-scope lint wall: all narrowing index math must go through the
+// checked helpers in `arena` (`idx`/`to_u32`/`to_u8`).
+#![deny(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+
 use crate::core::kernel::arena::{sequential_sweep, KernelArena, KernelPhase, RowScratch};
 use crate::core::kernel::FlowKernel;
 
@@ -32,6 +36,9 @@ impl FlowKernel for ScalarKernel {
         &mut self.arena
     }
 
+    // CONTRACT: round-structured accept order — proposals stage against the
+    // round snapshot via sequential_sweep; commits happen inside
+    // KernelArena::run_phase in ascending rank order.
     fn run_phase(&mut self) -> KernelPhase {
         let scratch = &mut self.scratch;
         self.arena.run_phase(|view, active, plans, plan_len, exhausted| {

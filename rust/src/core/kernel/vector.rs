@@ -14,12 +14,21 @@
 //! exercise the padding path). Only the memory traffic changes: a
 //! propose-dominated sweep reads ~1/8 of the cost slab.
 
-use crate::core::kernel::arena::{KernelArena, KernelPhase, KernelView, PlanItem, PLAN_WIDTH};
+// Kernel-scope lint wall: all narrowing index math must go through the
+// checked helpers in `arena` (`idx`/`to_u32`/`to_u8`).
+#![deny(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+
+use crate::core::kernel::arena::{
+    idx, to_u8, KernelArena, KernelPhase, KernelView, PlanItem, PLAN_WIDTH,
+};
 use crate::core::kernel::FlowKernel;
 
 /// The lane-blocked sweep body: identical proposals to
 /// [`crate::core::kernel::arena::sequential_sweep`], staged through
 /// [`KernelView::propose_one_lanes`].
+// CONTRACT: round-structured accept order — this sweep only stages
+// proposals against the round snapshot; commits happen sequentially in
+// KernelArena::run_phase in ascending rank order.
 pub fn vector_sweep(
     view: &KernelView<'_>,
     actives: &[u32],
@@ -29,8 +38,8 @@ pub fn vector_sweep(
 ) {
     for (i, &wi) in actives.iter().enumerate() {
         let out = &mut plans[i * PLAN_WIDTH..(i + 1) * PLAN_WIDTH];
-        let (len, ex) = view.propose_one_lanes(wi as usize, out);
-        plan_len[i] = len as u8;
+        let (len, ex) = view.propose_one_lanes(idx(wi), out);
+        plan_len[i] = to_u8(len);
         exhausted[i] = ex;
     }
 }
@@ -65,6 +74,8 @@ impl FlowKernel for VectorKernel {
         &mut self.arena
     }
 
+    // CONTRACT: round-structured accept order — see vector_sweep; commits
+    // stay sequential inside KernelArena::run_phase.
     fn run_phase(&mut self) -> KernelPhase {
         self.arena.run_phase(vector_sweep)
     }

@@ -26,6 +26,10 @@
 //! `epoch` counter bumps on every (re)quantization so row caches
 //! ([`crate::core::kernel::arena::RowScratch`]) self-invalidate.
 
+// Kernel-scope lint wall: narrowing casts are confined to the two audited
+// sites below (`unit_of`, `max_units`), each range-guarded and annotated.
+#![deny(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+
 use crate::core::cost::CostMatrix;
 use crate::core::provider::{CostProvider, CostSource};
 use std::fmt;
@@ -59,9 +63,11 @@ impl fmt::Debug for ImplicitSource {
 /// Quantize one raw cost into ε-units — the single formula both storage
 /// modes share, which is what makes implicit byte-identical to dense.
 #[inline]
+#[allow(clippy::cast_possible_truncation)]
 fn unit_of(c: f32, inv: f64) -> i32 {
-    let q = (c as f64 * inv).floor();
-    debug_assert!(q >= 0.0 && q <= i32::MAX as f64);
+    let q = (f64::from(c) * inv).floor();
+    debug_assert!(q >= 0.0 && q <= f64::from(i32::MAX));
+    // cast-ok: floored and debug-asserted in [0, i32::MAX]
     q as i32
 }
 
@@ -250,7 +256,9 @@ impl QuantizedCosts {
     }
 
     /// Upper bound on any quantized entry: costs ≤ c_max ⇒ cq ≤ ⌊1/ε⌋.
+    #[allow(clippy::cast_possible_truncation)]
     pub fn max_units(&self) -> i32 {
+        // cast-ok: ε ∈ (0, 1) is validated at requantize, bounding ⌊1/ε⌋
         (1.0 / self.eps).floor() as i32
     }
 
@@ -295,6 +303,9 @@ impl QuantizedCosts {
     /// and there is no `lane_cq` mirror at all. Minima equal the dense
     /// build's exactly (pad lanes hold `i32::MAX` there and never win).
     pub fn build_lane_min_implicit(&self, lane_min: &mut Vec<i32>) {
+        // panic-ok: mode-confusion here is a kernel-internal programming
+        // error (the arena picks the build path off is_implicit()), not a
+        // caller-reachable state
         let src = self.implicit.as_ref().expect("implicit mode only; use build_lane_blocks()");
         let na_pad = self.na_padded();
         let nblk = na_pad / LANES;
@@ -406,6 +417,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(clippy::float_cmp)] // eps_abs must replicate exactly, not approximately
     fn implicit_mode_matches_dense_units_without_a_slab() {
         use crate::core::provider::{Costs, GeneratedCosts};
         let dense = CostMatrix::from_fn(5, 13, |b, a| ((b * 7 + a * 5) % 11) as f32 / 10.0);

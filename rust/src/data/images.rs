@@ -84,12 +84,15 @@ pub fn l1_costs(b_imgs: &[Image], a_imgs: &[Image]) -> CostMatrix {
         let slots: Vec<std::sync::Mutex<&mut [f32]>> =
             rows.into_iter().map(std::sync::Mutex::new).collect();
         pool::parallel_for_each(nb, pool::default_threads(), |b| {
-            let mut row = slots[b].lock().unwrap();
+            // Each row mutex is touched by exactly one closure invocation;
+            // recovery keeps the fill total if a sibling row panicked.
+            let mut row = slots[b].lock().unwrap_or_else(std::sync::PoisonError::into_inner);
             for a in 0..na {
                 row[a] = l1_distance(&b_imgs[b], &a_imgs[a]);
             }
         });
     }
+    // panic-ok: L1 distances of normalized images are finite and non-negative
     CostMatrix::from_vec(nb, na, data).expect("l1 costs are valid")
 }
 
@@ -97,8 +100,9 @@ pub fn l1_costs(b_imgs: &[Image], a_imgs: &[Image]) -> CostMatrix {
 /// provider computing the same L1 distances bit-for-bit from O(n·784)
 /// image data instead of the O(n²) matrix.
 pub fn l1_cost_provider(b_imgs: &[Image], a_imgs: &[Image]) -> L1PointCosts {
-    L1PointCosts::new(b_imgs.to_vec(), a_imgs.to_vec())
-        .expect("normalized images yield valid costs")
+    let costs = L1PointCosts::new(b_imgs.to_vec(), a_imgs.to_vec());
+    // panic-ok: generated images share one fixed dimension and finite pixels
+    costs.expect("normalized images yield valid costs")
 }
 
 /// Images packed as a flat [n, 784] f32 row-major array — the layout the

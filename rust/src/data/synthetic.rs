@@ -48,8 +48,9 @@ pub fn fig1_instance(n: usize, seed: u64) -> CostMatrix {
 /// bit-for-bit from O(n) point data.
 pub fn euclidean_cost_provider(b_pts: &[Point2], a_pts: &[Point2]) -> SqEuclideanCosts {
     let to_core = |pts: &[Point2]| pts.iter().map(|p| [p.x, p.y]).collect::<Vec<[f64; 2]>>();
-    SqEuclideanCosts::euclidean(to_core(b_pts), to_core(a_pts))
-        .expect("finite unit-square points yield valid costs")
+    let costs = SqEuclideanCosts::euclidean(to_core(b_pts), to_core(a_pts));
+    // panic-ok: sampled points are finite by construction (unit square)
+    costs.expect("finite unit-square points yield valid costs")
 }
 
 /// Points packed as a flat [n,2] f32 row-major array — the layout the

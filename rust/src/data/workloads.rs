@@ -68,6 +68,7 @@ impl Workload {
     }
 
     pub fn assignment(&self, seed: u64) -> AssignmentInstance {
+        // panic-ok: every Workload variant generates a square cost matrix
         AssignmentInstance::new(self.costs(seed)).expect("workloads are square")
     }
 
@@ -103,6 +104,7 @@ impl Workload {
         let mut rng = Pcg32::with_stream(seed, 34);
         let demand = random_simplex(costs.na, &mut rng);
         let supply = random_simplex(costs.nb, &mut rng);
+        // panic-ok: random_simplex emits normalized positive masses
         OtInstance::new(costs, demand, supply).expect("valid masses")
     }
 }
@@ -179,10 +181,9 @@ impl GoldenSpec {
     /// equivalence suite runs every engine on both representations.
     pub fn generated(&self) -> Costs {
         let salt = self.salt;
-        Costs::generated(
-            GeneratedCosts::new(self.nb, self.na, move |b, a| golden_cost(b, a, salt))
-                .expect("golden formula yields valid costs"),
-        )
+        let gen = GeneratedCosts::new(self.nb, self.na, move |b, a| golden_cost(b, a, salt));
+        // panic-ok: golden_cost maps into [0, 1] for all (b, a, salt)
+        Costs::generated(gen.expect("golden formula yields valid costs"))
     }
 
     /// (supply over rows, demand over cols) as probability masses.

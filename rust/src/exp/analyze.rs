@@ -1,0 +1,955 @@
+//! `otpr analyze` — the in-tree static-analysis pass (zero dependencies).
+//!
+//! Walks `rust/src/**` and enforces the repo-specific rules clippy cannot
+//! express, all centered on the kernel's correctness contracts:
+//!
+//! * `safety-comment` — every `unsafe` carries a `// SAFETY:` comment;
+//! * `kernel-cast` — no bare narrowing `as` casts in `core/kernel/**` or
+//!   `core/quantize.rs` (truncation at large `n` silently corrupts slot
+//!   indices); use the checked helpers or annotate `// cast-ok: <reason>`;
+//! * `float-eq` — no `f64`/`f32` `==`/`!=` outside annotated
+//!   exact-replication sites (`// float-eq-ok: <reason>`);
+//! * `no-panic` — no `unwrap`/`expect`/`panic!` family in library solve
+//!   paths (`api`, `core`, `solvers`, `coordinator`, `runtime`, `data`);
+//!   CLI, `exp`, `util`, tests, and benches are exempt; annotate
+//!   `// panic-ok: <reason>` where a panic is the documented contract;
+//! * `error-convention` — eps validation messages name their cost source
+//!   (`provider=...`), the PR-5 diagnostics convention;
+//! * `contract-marker` — the byte-identity tripwire: any function in
+//!   `core/kernel/{arena,scalar,chunked,vector}.rs` that stages or commits
+//!   against the active worklist must carry a
+//!   `// CONTRACT: round-structured accept order` marker, so a refactor
+//!   that breaks determinism fails this gate instead of the golden suite
+//!   several PRs later.
+//!
+//! Findings can be suppressed through `rust/analyze-allow.toml`
+//! (`[[allow]]` entries; a reason is mandatory, unused entries are flagged
+//! as `stale-allow`), so the gate blocks from day one. Source views are
+//! computed by a small classifier that strips comments and string-literal
+//! contents, and `#[cfg(test)]` modules are skipped entirely.
+
+use crate::util::minijson::{obj, Json};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The marker the byte-identity tripwire requires.
+pub const CONTRACT_MARKER: &str = "CONTRACT: round-structured accept order";
+
+/// Body tokens that mean a function stages into or commits against the
+/// round-structured active worklist (see `core/kernel/arena.rs`).
+const CONTRACT_TRIGGERS: [&str; 3] = ["accept_one(", "sequential_sweep(", "vector_sweep"];
+
+/// Cast targets the kernel-cast rule rejects: the narrowing or
+/// sign-changing targets plus `f32` (lossy), including `usize` so index
+/// conversions go through the typed `idx()` helper. Casts to
+/// `i64`/`u64`/`f64` stay allowed — they are widening (or exact) for
+/// every value the kernel produces.
+const CAST_TARGETS: [&str; 8] = ["u8", "u16", "u32", "usize", "i8", "i16", "i32", "f32"];
+
+const PANIC_TOKENS: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the analyzed root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+    /// The trimmed offending source line (allowlist patterns match on it).
+    pub snippet: String,
+}
+
+/// One `[[allow]]` entry from `analyze-allow.toml`.
+#[derive(Debug, Clone, Default)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub file: String,
+    /// Substring of the offending line; empty = any line in `file`.
+    pub pattern: String,
+    pub reason: String,
+    /// 1-based line of the entry in the allowlist file (for diagnostics).
+    pub line: usize,
+}
+
+impl AllowEntry {
+    fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule
+            && self.file == f.file
+            && (self.pattern.is_empty() || f.snippet.contains(&self.pattern))
+    }
+}
+
+/// The committed suppression list (TOML subset: `[[allow]]` tables with
+/// `key = "value"` pairs and `#` comment lines).
+#[derive(Debug, Clone, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut entries: Vec<AllowEntry> = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "[[allow]]" {
+                entries.push(AllowEntry { line: i + 1, ..AllowEntry::default() });
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(format!("allowlist line {}: expected `key = \"value\"`", i + 1));
+            };
+            let value = value.trim();
+            let value = value
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+                .ok_or_else(|| format!("allowlist line {}: value must be quoted", i + 1))?;
+            let Some(entry) = entries.last_mut() else {
+                return Err(format!("allowlist line {}: key before any [[allow]]", i + 1));
+            };
+            match key.trim() {
+                "rule" => entry.rule = value.to_string(),
+                "file" => entry.file = value.to_string(),
+                "pattern" => entry.pattern = value.to_string(),
+                "reason" => entry.reason = value.to_string(),
+                other => return Err(format!("allowlist line {}: unknown key {other}", i + 1)),
+            }
+        }
+        Ok(Self { entries })
+    }
+}
+
+/// Result of one analyzer run.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub files: usize,
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "  {:<20} {}:{}  {}\n      {}\n",
+                f.rule, f.file, f.line, f.message, f.snippet
+            ));
+        }
+        out.push_str(&format!(
+            "analyzed {} file(s): {} finding(s), {} suppressed by the allowlist",
+            self.files,
+            self.findings.len(),
+            self.suppressed
+        ));
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("rule", Json::Str(f.rule.to_string())),
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                    ("snippet", Json::Str(f.snippet.clone())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("files", Json::Num(self.files as f64)),
+            ("findings", Json::Arr(findings)),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+        ])
+    }
+}
+
+/// Analyze every `.rs` file under `root`, then fold the allowlist in:
+/// matched findings are suppressed (counted), entries without a reason or
+/// matching nothing become findings themselves.
+pub fn run(root: &Path, allow: &Allowlist) -> Result<Report, String> {
+    let files = rust_files(root)?;
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|e| format!("{}: {e}", path.display()))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        findings.extend(analyze_source(&rel, &text));
+    }
+    let mut used = vec![0usize; allow.entries.len()];
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        match allow.entries.iter().position(|e| e.matches(&f)) {
+            Some(i) => {
+                used[i] += 1;
+                suppressed += 1;
+            }
+            None => kept.push(f),
+        }
+    }
+    for (i, e) in allow.entries.iter().enumerate() {
+        if e.reason.trim().is_empty() {
+            kept.push(Finding {
+                rule: "allow-missing-reason",
+                file: "analyze-allow.toml".to_string(),
+                line: e.line,
+                message: format!(
+                    "allowlist entry (rule={}, file={}) has no reason — every suppression must \
+                     be justified",
+                    e.rule, e.file
+                ),
+                snippet: String::new(),
+            });
+        } else if used[i] == 0 {
+            kept.push(Finding {
+                rule: "stale-allow",
+                file: "analyze-allow.toml".to_string(),
+                line: e.line,
+                message: format!(
+                    "allowlist entry (rule={}, file={}) matched nothing — remove it",
+                    e.rule, e.file
+                ),
+                snippet: e.pattern.clone(),
+            });
+        }
+    }
+    Ok(Report { files: files.len(), findings: kept, suppressed })
+}
+
+/// All rules over one file. `rel` is the `/`-separated path relative to
+/// the analyzed root (rule scoping keys on it).
+pub fn analyze_source(rel: &str, text: &str) -> Vec<Finding> {
+    let raw: Vec<&str> = text.lines().collect();
+    let (code, keepstr) = views(text);
+    debug_assert_eq!(code.len(), raw.len());
+    let masked = test_mod_mask(&code);
+    let mut out = Vec::new();
+
+    let finding = |rule: &'static str, line: usize, message: String| Finding {
+        rule,
+        file: rel.to_string(),
+        line: line + 1,
+        message,
+        snippet: clip(raw.get(line).unwrap_or(&"").trim()),
+    };
+    // In-source suppressions sit on the offending line or anywhere in the
+    // contiguous comment/attribute block directly above it (so multi-line
+    // justifications can carry the tag on any of their lines).
+    let annotated = |idx: usize, tag: &str| {
+        if has_tag(&raw, idx, tag) {
+            return true;
+        }
+        let mut k = idx;
+        while k > 0 {
+            k -= 1;
+            let t = raw[k].trim_start();
+            if !(t.starts_with("//") || t.starts_with("#[")) {
+                return false;
+            }
+            if has_tag(&raw, k, tag) {
+                return true;
+            }
+        }
+        false
+    };
+
+    for idx in 0..code.len() {
+        if masked[idx] {
+            continue;
+        }
+        let line = &code[idx];
+
+        // safety-comment: any `unsafe` needs a SAFETY note nearby.
+        if has_word(line, "unsafe") && !comment_block_contains(&raw, idx, "SAFETY:") {
+            out.push(finding(
+                "safety-comment",
+                idx,
+                "`unsafe` without a `// SAFETY:` comment on it or the block above".to_string(),
+            ));
+        }
+
+        // kernel-cast: no bare lossy `as` casts on the kernel hot paths.
+        if kernel_cast_scope(rel) && !annotated(idx, "cast-ok:") {
+            if let Some(ty) = bare_cast(line) {
+                out.push(finding(
+                    "kernel-cast",
+                    idx,
+                    format!(
+                        "bare `as {ty}` cast in kernel scope — use a checked helper or \
+                         annotate `// cast-ok: <reason>`"
+                    ),
+                ));
+            }
+        }
+
+        // float-eq: literal float compared with == / !=.
+        if (line.contains("==") || line.contains("!="))
+            && has_float_token(line)
+            && !annotated(idx, "float-eq-ok:")
+        {
+            out.push(finding(
+                "float-eq",
+                idx,
+                "float `==`/`!=` comparison — annotate `// float-eq-ok: <reason>` if this is \
+                 an exact-replication site"
+                    .to_string(),
+            ));
+        }
+
+        // no-panic: library solve paths return OtprError instead.
+        if no_panic_scope(rel) && !annotated(idx, "panic-ok:") {
+            if let Some(tok) = PANIC_TOKENS.iter().find(|t| line.contains(*t)) {
+                out.push(finding(
+                    "no-panic",
+                    idx,
+                    format!(
+                        "`{}` in a library solve path — route through OtprError or annotate \
+                         `// panic-ok: <reason>`",
+                        tok.trim_start_matches('.')
+                    ),
+                ));
+            }
+        }
+
+        // error-convention: eps diagnostics name their cost source.
+        if rel.starts_with("core/") && keepstr[idx].contains("eps must be") {
+            let near = keepstr[idx..(idx + 3).min(keepstr.len())]
+                .iter()
+                .any(|l| l.contains("provider="));
+            if !near {
+                out.push(finding(
+                    "error-convention",
+                    idx,
+                    "eps validation message must name its cost source (`provider=...`)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+
+    // contract-marker: the byte-identity tripwire over the kernel backends.
+    if contract_scope(rel) {
+        for span in fn_spans(&code) {
+            if masked[span.start] {
+                continue;
+            }
+            let body = code[span.start..=span.end.min(code.len() - 1)].join("\n");
+            if CONTRACT_TRIGGERS.iter().any(|t| body.contains(t))
+                && !span_has_marker(&raw, span.start, span.end)
+            {
+                out.push(finding(
+                    "contract-marker",
+                    span.start,
+                    format!(
+                        "fn `{}` stages or commits against the active worklist but lacks a \
+                         `// {CONTRACT_MARKER}` marker",
+                        span.name
+                    ),
+                ));
+            }
+        }
+    }
+
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule scoping
+// ---------------------------------------------------------------------
+
+fn kernel_cast_scope(rel: &str) -> bool {
+    rel.starts_with("core/kernel/") || rel == "core/quantize.rs"
+}
+
+fn no_panic_scope(rel: &str) -> bool {
+    let top = rel.split('/').next().unwrap_or(rel);
+    matches!(top, "api" | "core" | "solvers" | "coordinator" | "runtime" | "data")
+}
+
+fn contract_scope(rel: &str) -> bool {
+    matches!(
+        rel,
+        "core/kernel/arena.rs"
+            | "core/kernel/scalar.rs"
+            | "core/kernel/chunked.rs"
+            | "core/kernel/vector.rs"
+    )
+}
+
+// ---------------------------------------------------------------------
+// per-line predicates
+// ---------------------------------------------------------------------
+
+fn clip(s: &str) -> String {
+    if s.len() > 120 {
+        let mut end = 120;
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        format!("{}…", &s[..end])
+    } else {
+        s.to_string()
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Whole-word occurrence of `word` in `line`.
+fn has_word(line: &str, word: &str) -> bool {
+    let mut rest = line;
+    let mut base = 0usize;
+    while let Some(p) = rest.find(word) {
+        let start = base + p;
+        let end = start + word.len();
+        let before_ok = start == 0 || !line[..start].ends_with(is_ident);
+        let after_ok = !line[end..].starts_with(is_ident);
+        if before_ok && after_ok {
+            return true;
+        }
+        rest = &rest[p + word.len()..];
+        base = end;
+    }
+    false
+}
+
+fn has_tag(raw: &[&str], idx: usize, tag: &str) -> bool {
+    raw.get(idx).is_some_and(|l| {
+        l.find(tag).is_some_and(|p| !l[p + tag.len()..].trim().is_empty() || !l.ends_with(tag))
+    })
+}
+
+/// `needle` on the line itself or in the contiguous comment/attribute
+/// block directly above it.
+fn comment_block_contains(raw: &[&str], idx: usize, needle: &str) -> bool {
+    if raw.get(idx).is_some_and(|l| l.contains(needle)) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let t = raw[k].trim();
+        if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#![") {
+            if t.contains(needle) {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// First lossy cast target on a code-view line, if any. Matches the
+/// rustfmt spelling ` as <ty>` with the type at an identifier boundary.
+fn bare_cast(code: &str) -> Option<&'static str> {
+    let mut rest = code;
+    while let Some(p) = rest.find(" as ") {
+        let after = &rest[p + 4..];
+        for ty in CAST_TARGETS {
+            if after.starts_with(ty) && !after[ty.len()..].starts_with(is_ident) {
+                return Some(ty);
+            }
+        }
+        rest = &rest[p + 4..];
+    }
+    None
+}
+
+/// A float-typed token: a `1.5`-style literal (not tuple access like
+/// `x.0.1`) or an `f64::`/`f32::` associated item.
+fn has_float_token(code: &str) -> bool {
+    if code.contains("f64::") || code.contains("f32::") {
+        return true;
+    }
+    let chars: Vec<char> = code.chars().collect();
+    for i in 0..chars.len() {
+        if !chars[i].is_ascii_digit() {
+            continue;
+        }
+        if i > 0 && (is_ident(chars[i - 1]) || chars[i - 1] == '.') {
+            continue;
+        }
+        let mut j = i;
+        while j < chars.len() && chars[j].is_ascii_digit() {
+            j += 1;
+        }
+        if j + 1 < chars.len() && chars[j] == '.' && chars[j + 1].is_ascii_digit() {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// source views: comment / string classification, test-mod mask, fn spans
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq)]
+enum Cls {
+    Code,
+    Comment,
+    Str,
+}
+
+/// Per-line views of `text`: `(code, keepstr)` where `code` drops
+/// comments and string-literal contents (delimiting quotes stay) and
+/// `keepstr` drops only comments. Line counts match `text.lines()`.
+fn views(text: &str) -> (Vec<String>, Vec<String>) {
+    let classified = classify(text);
+    let mut code = Vec::new();
+    let mut keepstr = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_keep = String::new();
+    for (c, cls) in classified {
+        if c == '\n' {
+            code.push(std::mem::take(&mut cur_code));
+            keepstr.push(std::mem::take(&mut cur_keep));
+            continue;
+        }
+        match cls {
+            Cls::Code => {
+                cur_code.push(c);
+                cur_keep.push(c);
+            }
+            Cls::Str => cur_keep.push(c),
+            Cls::Comment => {}
+        }
+    }
+    if !cur_code.is_empty() || !cur_keep.is_empty() || text.ends_with('\n') {
+        // text.lines() drops a trailing newline's empty line; mirror it.
+        if !text.ends_with('\n') {
+            code.push(cur_code);
+            keepstr.push(cur_keep);
+        }
+    }
+    (code, keepstr)
+}
+
+/// Classify every character as code, comment, or string content. Handles
+/// line and nested block comments, plain/escaped/raw strings, char
+/// literals vs lifetimes (`'a'` is a literal, `&'a` is not).
+fn classify(text: &str) -> Vec<(char, Cls)> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::with_capacity(chars.len());
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < chars.len() && chars[i] != '\n' {
+                out.push((chars[i], Cls::Comment));
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < chars.len() {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push((chars[i], Cls::Comment));
+                    out.push((chars[i + 1], Cls::Comment));
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth = depth.saturating_sub(1);
+                    out.push((chars[i], Cls::Comment));
+                    out.push((chars[i + 1], Cls::Comment));
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push((chars[i], Cls::Comment));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string r"..." / r#"..."# (optionally byte-prefixed)
+        let prev_ident = i > 0 && is_ident(chars[i - 1]);
+        if (c == 'r' || (c == 'b' && chars.get(i + 1) == Some(&'r'))) && !prev_ident {
+            let start = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while chars.get(start + hashes) == Some(&'#') {
+                hashes += 1;
+            }
+            if chars.get(start + hashes) == Some(&'"') {
+                for &ch in &chars[i..=start + hashes] {
+                    out.push((ch, Cls::Code));
+                }
+                i = start + hashes + 1;
+                while i < chars.len() {
+                    if chars[i] == '"'
+                        && (0..hashes).all(|h| chars.get(i + 1 + h) == Some(&'#'))
+                    {
+                        for &ch in &chars[i..=i + hashes] {
+                            out.push((ch, Cls::Code));
+                        }
+                        i += hashes + 1;
+                        break;
+                    }
+                    out.push((chars[i], Cls::Str));
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        if c == '"' {
+            out.push((c, Cls::Code));
+            i += 1;
+            while i < chars.len() {
+                if chars[i] == '\\' && i + 1 < chars.len() {
+                    out.push((chars[i], Cls::Str));
+                    out.push((chars[i + 1], Cls::Str));
+                    i += 2;
+                } else if chars[i] == '"' {
+                    out.push((chars[i], Cls::Code));
+                    i += 1;
+                    break;
+                } else {
+                    out.push((chars[i], Cls::Str));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == '\'' {
+            let is_char_lit = match chars.get(i + 1) {
+                Some('\\') => true,
+                Some(_) => chars.get(i + 2) == Some(&'\''),
+                None => false,
+            };
+            if is_char_lit {
+                out.push((c, Cls::Code));
+                i += 1;
+                while i < chars.len() {
+                    if chars[i] == '\\' && i + 1 < chars.len() {
+                        out.push((chars[i], Cls::Str));
+                        out.push((chars[i + 1], Cls::Str));
+                        i += 2;
+                    } else if chars[i] == '\'' {
+                        out.push((chars[i], Cls::Code));
+                        i += 1;
+                        break;
+                    } else {
+                        out.push((chars[i], Cls::Str));
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+        }
+        out.push((c, Cls::Code));
+        i += 1;
+    }
+    out
+}
+
+/// Mask over code lines marking `#[cfg(test)] mod ... { ... }` bodies
+/// (tests are exempt from every rule).
+fn test_mod_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut skip_from: Option<i64> = None;
+    for (idx, line) in code.iter().enumerate() {
+        let t = line.trim();
+        let opens = line.matches('{').count() as i64;
+        let closes = line.matches('}').count() as i64;
+        match skip_from {
+            Some(d0) => {
+                mask[idx] = true;
+                depth += opens - closes;
+                if depth <= d0 {
+                    skip_from = None;
+                }
+            }
+            None => {
+                if t.starts_with("#[cfg(test)]") {
+                    pending = true;
+                } else if pending && (t.starts_with("mod ") || t.starts_with("pub mod ")) {
+                    mask[idx] = true;
+                    skip_from = Some(depth);
+                    pending = false;
+                } else if !t.is_empty() && !t.starts_with("#[") {
+                    pending = false;
+                }
+                depth += opens - closes;
+                if let Some(d0) = skip_from {
+                    if depth <= d0 {
+                        skip_from = None;
+                    }
+                }
+            }
+        }
+    }
+    mask
+}
+
+struct FnSpan {
+    name: String,
+    /// 0-based inclusive line range of the definition + body.
+    start: usize,
+    end: usize,
+}
+
+/// `fn` item spans over the code view (closures stay inside their
+/// enclosing fn's span, which is exactly what the contract rule wants).
+fn fn_spans(code: &[String]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for (i, line) in code.iter().enumerate() {
+        let Some(name) = fn_def_name(line) else {
+            continue;
+        };
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut end = i;
+        'scan: for (j, body_line) in code.iter().enumerate().skip(i) {
+            for ch in body_line.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth <= 0 {
+                            end = j;
+                            break 'scan;
+                        }
+                    }
+                    ';' if !opened && depth == 0 => {
+                        end = j;
+                        break 'scan; // bodyless trait declaration
+                    }
+                    _ => {}
+                }
+            }
+            end = j;
+        }
+        spans.push(FnSpan { name, start: i, end });
+    }
+    spans
+}
+
+/// Name of the `fn` defined on a code-view line, if any.
+fn fn_def_name(code: &str) -> Option<String> {
+    let mut rest = code;
+    let mut base = 0usize;
+    while let Some(p) = rest.find("fn ") {
+        let start = base + p;
+        let before_ok = start == 0 || !code[..start].ends_with(is_ident);
+        if before_ok {
+            let name: String =
+                code[start + 3..].chars().take_while(|&c| is_ident(c)).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        rest = &rest[p + 3..];
+        base = start + 3;
+    }
+    None
+}
+
+/// Marker anywhere in the fn span or in its contiguous leading
+/// comment/attribute block.
+fn span_has_marker(raw: &[&str], start: usize, end: usize) -> bool {
+    let hi = end.min(raw.len().saturating_sub(1));
+    if raw[start..=hi].iter().any(|l| l.contains(CONTRACT_MARKER)) {
+        return true;
+    }
+    let mut k = start;
+    while k > 0 {
+        k -= 1;
+        let t = raw[k].trim();
+        if t.starts_with("//") || t.starts_with("#[") {
+            if t.contains(CONTRACT_MARKER) {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// file walking
+// ---------------------------------------------------------------------
+
+fn rust_files(root: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries =
+            fs::read_dir(&dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|x| x == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classifier_strips_comments_and_strings() {
+        let (code, keepstr) = views("let x = \"a // b\"; // tail\nlet y = 'c';\n");
+        assert_eq!(code[0], "let x = \"\"; ");
+        assert_eq!(keepstr[0], "let x = \"a // b\"; ");
+        assert_eq!(code[1], "let y = '';");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let (code, _) = views("fn f<'a>(x: &'a str) -> &'a str { x }\n");
+        assert_eq!(code[0], "fn f<'a>(x: &'a str) -> &'a str { x }");
+        let (code, _) = views("let c = 'x'; let s: &'static str = \"y\";\n");
+        assert_eq!(code[0], "let c = ''; let s: &'static str = \"\";");
+    }
+
+    #[test]
+    fn raw_strings_and_escapes_classified() {
+        let (code, keepstr) = views("let s = r#\"un\"closed // not a comment\"#;\n");
+        assert_eq!(code[0], "let s = r#\"\"#;");
+        assert!(keepstr[0].contains("not a comment"));
+        let (code, _) = views("let q = \"a\\\"b\";\n");
+        assert_eq!(code[0], "let q = \"\";");
+    }
+
+    #[test]
+    fn test_mods_are_masked() {
+        let src = "fn lib() { x.unwrap() }\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap() }\n}\nfn tail() {}\n";
+        let (code, _) = views(src);
+        let mask = test_mod_mask(&code);
+        assert_eq!(mask, vec![false, false, true, true, true, false]);
+    }
+
+    #[test]
+    fn no_panic_fires_in_scope_only() {
+        let bad = "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n";
+        assert_eq!(analyze_source("core/foo.rs", bad).len(), 1);
+        assert_eq!(analyze_source("core/foo.rs", bad)[0].rule, "no-panic");
+        assert!(analyze_source("exp/foo.rs", bad).is_empty(), "exp is exempt");
+        let ok = "// panic-ok: documented contract\npub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n";
+        assert!(analyze_source("core/foo.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn kernel_cast_scoped_and_annotatable() {
+        let bad = "fn f(x: usize) -> u32 { x as u32 }\n";
+        let hits = analyze_source("core/kernel/arena.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "kernel-cast");
+        assert!(analyze_source("solvers/foo.rs", bad).is_empty(), "out of scope");
+        let widen = "fn f(x: u32) -> f64 { x as f64 }\n";
+        assert!(analyze_source("core/kernel/arena.rs", widen).is_empty(), "f64 widening ok");
+        let ok = "fn f(x: usize) -> u32 { x as u32 } // cast-ok: x < nb <= u32::MAX\n";
+        assert!(analyze_source("core/kernel/arena.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn float_eq_needs_a_float_token() {
+        let bad = "let same = x == 0.0;\n";
+        let hits = analyze_source("solvers/foo.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "float-eq");
+        assert!(analyze_source("solvers/foo.rs", "let same = n == 0;\n").is_empty());
+        assert!(
+            analyze_source("solvers/foo.rs", "let t = v.0.1 == w;\n").is_empty(),
+            "tuple access is not a float literal"
+        );
+        let ok = "let same = x == 0.0; // float-eq-ok: exact replication of the dense fold\n";
+        assert!(analyze_source("solvers/foo.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_rule() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let hits = analyze_source("runtime/foo.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "safety-comment");
+        let ok = "// SAFETY: p is valid for reads by the caller contract\nfn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        assert!(analyze_source("runtime/foo.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn error_convention_requires_provider() {
+        let bad = "fn f(eps: f64) { assert!(eps > 0.0, \"eps must be in (0,1), got {eps}\"); }\n";
+        let hits = analyze_source("core/quantize.rs", bad);
+        assert!(hits.iter().any(|f| f.rule == "error-convention"));
+        let ok =
+            "fn f(eps: f64) { assert!(eps > 0.0, \"eps must be in (0,1), got {eps} (provider=dense)\"); }\n";
+        assert!(analyze_source("core/quantize.rs", ok)
+            .iter()
+            .all(|f| f.rule != "error-convention"));
+    }
+
+    #[test]
+    fn contract_marker_tripwire() {
+        let bad = "pub fn run_phase(&mut self) {\n    self.accept_one(0);\n}\n";
+        let hits = analyze_source("core/kernel/scalar.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "contract-marker");
+        assert!(hits[0].message.contains("run_phase"));
+        let ok = "// CONTRACT: round-structured accept order\npub fn run_phase(&mut self) {\n    self.accept_one(0);\n}\n";
+        assert!(analyze_source("core/kernel/scalar.rs", ok).is_empty());
+        // a fn that never touches the worklist needs no marker
+        let other = "pub fn threshold(&self) -> u64 {\n    self.q.len()\n}\n";
+        assert!(analyze_source("core/kernel/scalar.rs", other).is_empty());
+    }
+
+    #[test]
+    fn allowlist_parses_suppresses_and_flags_stale() {
+        let toml = "# comment\n[[allow]]\nrule = \"no-panic\"\nfile = \"core/foo.rs\"\npattern = \"v.unwrap()\"\nreason = \"documented contract\"\n\n[[allow]]\nrule = \"no-panic\"\nfile = \"core/nothing.rs\"\nreason = \"dead entry\"\n";
+        let allow = Allowlist::parse(toml).unwrap();
+        assert_eq!(allow.entries.len(), 2);
+        let f = Finding {
+            rule: "no-panic",
+            file: "core/foo.rs".to_string(),
+            line: 1,
+            message: String::new(),
+            snippet: "let x = v.unwrap();".to_string(),
+        };
+        assert!(allow.entries[0].matches(&f));
+        assert!(!allow.entries[1].matches(&f));
+        assert!(Allowlist::parse("[[allow]]\nbogus\n").is_err());
+        assert!(Allowlist::parse("rule = \"x\"\n").is_err(), "key before [[allow]]");
+    }
+
+    #[test]
+    fn missing_reason_is_a_finding_via_run() {
+        // exercised end-to-end in tests/analyze_rules.rs against a temp
+        // tree; here just pin the entry-level predicate.
+        let allow = Allowlist::parse("[[allow]]\nrule = \"no-panic\"\nfile = \"f.rs\"\n").unwrap();
+        assert!(allow.entries[0].reason.is_empty());
+    }
+}

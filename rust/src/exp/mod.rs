@@ -4,6 +4,7 @@
 //! All whole-solve measurements go through [`crate::api::SolverRegistry`].
 
 pub mod ablation;
+pub mod analyze;
 pub mod bench_kernel;
 pub mod conformance;
 pub mod fig1;

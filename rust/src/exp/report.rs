@@ -80,7 +80,9 @@ pub fn figure_csv(x_label: &str, series: &[Series]) -> String {
     out
 }
 
+#[allow(clippy::float_cmp)]
 fn fmt_x(x: f64) -> String {
+    // float-eq-ok: fract() returns exactly 0.0 for integral f64s
     if x.fract() == 0.0 && x.abs() < 1e12 {
         format!("{}", x as i64)
     } else {

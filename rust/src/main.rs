@@ -12,6 +12,8 @@
 //!   ablation  analytical ablations A1–A6 (see DESIGN.md §4)
 //!   validate  certify solver output against exact baselines + invariants
 //!   certify   golden-corpus conformance sweep: certificates + Theorem 1
+//!   analyze   in-tree static analysis: SAFETY/cast/float-eq/no-panic rules
+//!             + the kernel byte-identity CONTRACT tripwire (--gate for CI)
 //!   info      environment/artifact status
 //!
 //! Every solve goes through `otpr::api::SolverRegistry` + `SolveRequest`;
@@ -47,6 +49,7 @@ fn main() {
         Some("ablation") => cmd_ablation(&args),
         Some("validate") => cmd_validate(&args),
         Some("certify") => cmd_certify(&args),
+        Some("analyze") => cmd_analyze(&args),
         Some("info") => cmd_info(&args),
         _ => {
             print_usage();
@@ -59,7 +62,7 @@ fn main() {
 fn print_usage() {
     println!(
         "otpr — push-relabel additive approximation for optimal transport\n\
-         usage: otpr <solve|ot|serve|engines|bench|fig1|fig2|ablation|validate|certify|info> [--options]\n\
+         usage: otpr <solve|ot|serve|engines|bench|fig1|fig2|ablation|validate|certify|analyze|info> [--options]\n\
          common options: --n N --eps E --seed S --engine KEY (see `otpr engines`)\n\
          implicit costs: --workload points (solve/serve; O(n) payload, no n² slab), bench --points\n\
          see README.md for the full matrix"
@@ -613,6 +616,64 @@ fn cmd_certify(args: &Args) -> i32 {
         0
     } else {
         eprintln!("{failures} conformance failure(s)");
+        1
+    }
+}
+
+fn cmd_analyze(args: &Args) -> i32 {
+    use otpr::exp::analyze::{run, Allowlist};
+    use std::path::{Path, PathBuf};
+    // default root works both from the repo top (`rust/src`) and from
+    // inside `rust/` (`src`), matching how the other subcommands locate
+    // their fixtures
+    let root = PathBuf::from(
+        args.get_or("root", if Path::new("rust/src").is_dir() { "rust/src" } else { "src" }),
+    );
+    let default_allow = root
+        .parent()
+        .map(|p| p.join("analyze-allow.toml"))
+        .unwrap_or_else(|| PathBuf::from("analyze-allow.toml"));
+    let allow_path = args.get("allow").map(PathBuf::from).unwrap_or(default_allow);
+    let allow = if allow_path.exists() {
+        match std::fs::read_to_string(&allow_path)
+            .map_err(|e| e.to_string())
+            .and_then(|t| Allowlist::parse(&t))
+        {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("could not load allowlist {}: {e}", allow_path.display());
+                return 2;
+            }
+        }
+    } else {
+        Allowlist::empty()
+    };
+    let report = match run(&root, &allow) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("analyze failed: {e}");
+            return 2;
+        }
+    };
+    println!("{}", report.table());
+    if let Some(out) = args.get("json") {
+        let json = report.to_json().to_string();
+        if let Err(e) = std::fs::write(out, json) {
+            eprintln!("could not write {out}: {e}");
+            return 2;
+        }
+        println!("analyze report written to {out}");
+    }
+    if report.findings.is_empty() {
+        0
+    } else {
+        if args.flag("gate") {
+            eprintln!(
+                "analyze gate: {} finding(s) — fix, annotate in-source, or add a justified \
+                 allowlist entry",
+                report.findings.len()
+            );
+        }
         1
     }
 }

@@ -106,7 +106,8 @@ fn phase_loop(
                     });
                 }
             }
-            _ => unreachable!(),
+            // panic-ok: the loader guarantees one of the two artifact forms
+            _ => unreachable!("artifact bundle lost both phase executables"),
         }
         if phases > cap {
             return Err(OtprError::Runtime(format!(

@@ -237,8 +237,10 @@ fn solve_log_domain(
 }
 
 #[inline]
+#[allow(clippy::float_cmp)]
 fn lse(xs: &[f64]) -> f64 {
     let m = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    // float-eq-ok: −∞ is the exact fold identity, only hit on empty/all-−∞ input
     if m == f64::NEG_INFINITY {
         return f64::NEG_INFINITY;
     }
@@ -275,6 +277,7 @@ fn marginal_violation(
 /// Altschuler et al. rounding (Algorithm 2): scale rows then columns down to
 /// the marginal caps, then add the rank-one completion of the deficiencies.
 /// The output satisfies the marginals exactly.
+#[allow(clippy::float_cmp)] // exact-zero skip below, annotated inline
 pub fn round_to_feasible(p: &TransportPlan, r: &[f64], c: &[f64]) -> TransportPlan {
     let nb = p.nb;
     let na = p.na;
@@ -302,6 +305,7 @@ pub fn round_to_feasible(p: &TransportPlan, r: &[f64], c: &[f64]) -> TransportPl
     let total: f64 = err_r.iter().sum();
     if total > 1e-300 {
         for b in 0..nb {
+            // float-eq-ok: exact-zero skip of rows .max(0.0) clamped to 0
             if err_r[b] == 0.0 {
                 continue;
             }

@@ -27,7 +27,7 @@ pub fn quantize_masses(masses: &[f64], total: u64) -> Vec<u64> {
         .enumerate()
         .map(|(i, &m)| (m * total as f64 - (m * total as f64).floor(), i))
         .collect();
-    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    fracs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut k = 0;
     while remainder > 0 && n > 0 {
         units[fracs[k % n].1] += 1;

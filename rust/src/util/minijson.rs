@@ -65,11 +65,13 @@ impl Json {
 }
 
 impl fmt::Display for Json {
+    #[allow(clippy::float_cmp)] // integral-f64 detection below, annotated inline
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
+                // float-eq-ok: fract() returns exactly 0.0 for integral f64s
                 if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {

@@ -52,6 +52,7 @@ pub fn percentile_sorted(sorted: &[f64], pct: f64) -> f64 {
 }
 
 /// Ordinary least squares fit y = a + b·x. Returns (intercept, slope, r²).
+#[allow(clippy::float_cmp)] // exact-zero degenerate-fit guard, annotated inline
 pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
     assert_eq!(xs.len(), ys.len());
     assert!(xs.len() >= 2);
@@ -63,6 +64,7 @@ pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
     let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
     let slope = sxy / sxx;
     let intercept = my - slope * mx;
+    // float-eq-ok: syy is a sum of squares; exact 0 means constant ys
     let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
     (intercept, slope, r2)
 }

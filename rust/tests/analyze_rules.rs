@@ -1,0 +1,292 @@
+//! Self-tests for the `otpr analyze` rule set (PR 6): one positive and one
+//! negative case per rule, the in-source suppression grammar, rule scoping
+//! by path, and the allowlist lifecycle (suppression, stale entries,
+//! missing reasons) through the same `run()` entry the CLI gate uses.
+
+use std::fs;
+use std::path::PathBuf;
+
+use otpr::exp::analyze::{analyze_source, run, Allowlist, CONTRACT_MARKER};
+
+fn rules_of(rel: &str, src: &str) -> Vec<&'static str> {
+    analyze_source(rel, src).into_iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------
+// safety-comment (unscoped)
+// ---------------------------------------------------------------------
+
+#[test]
+fn unsafe_without_safety_comment_is_flagged() {
+    let src = "pub fn read(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+    let f = analyze_source("util/x.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, "safety-comment");
+    assert_eq!(f[0].line, 2, "1-based line of the `unsafe` token");
+}
+
+#[test]
+fn safety_comment_above_or_inline_suppresses() {
+    let above = "pub fn read(p: *const u32) -> u32 {\n    // SAFETY: caller guarantees p is valid\n    unsafe { *p }\n}\n";
+    assert!(rules_of("util/x.rs", above).is_empty());
+    let inline = "pub fn read(p: *const u32) -> u32 {\n    unsafe { *p } // SAFETY: caller guarantees p is valid\n}\n";
+    assert!(rules_of("util/x.rs", inline).is_empty());
+    // an attribute between the comment and the keyword keeps the block contiguous
+    let gapped = "// SAFETY: checked by the caller\n#[inline]\nunsafe fn f() {}\n";
+    assert!(rules_of("util/x.rs", gapped).is_empty());
+}
+
+#[test]
+fn unsafe_in_comments_and_strings_is_ignored() {
+    let src = "// unsafe is discussed here, not used\npub fn f() -> &'static str {\n    \"unsafe\"\n}\n";
+    assert!(rules_of("util/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// kernel-cast (core/kernel/** + core/quantize.rs only)
+// ---------------------------------------------------------------------
+
+#[test]
+fn bare_lossy_cast_in_kernel_scope_is_flagged() {
+    let src = "pub fn f(v: u64) -> u32 {\n    v as u32\n}\n";
+    let f = analyze_source("core/quantize.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, "kernel-cast");
+    assert!(f[0].message.contains("as u32"), "{}", f[0].message);
+    assert!(rules_of("core/kernel/arena.rs", src).contains(&"kernel-cast"));
+}
+
+#[test]
+fn kernel_cast_scoping_annotation_and_widening_exemptions() {
+    let src = "pub fn f(v: u64) -> u32 {\n    v as u32\n}\n";
+    // same code outside the kernel scope: not this rule's business
+    assert!(rules_of("solvers/x.rs", src).is_empty());
+    // widening / same-width targets are exempt
+    let widen = "pub fn f(v: u32) -> u64 {\n    v as u64\n}\n";
+    assert!(rules_of("core/quantize.rs", widen).is_empty());
+    // cast-ok with a reason suppresses; the tag may sit anywhere in the
+    // contiguous comment block directly above the cast
+    let ok = "pub fn f(v: u64) -> u32 {\n    // cast-ok: v is bounded by n, which fits u32\n    // (validated at construction)\n    v as u32\n}\n";
+    assert!(rules_of("core/quantize.rs", ok).is_empty());
+    // a bare tag with no reason does NOT suppress
+    let bare = "pub fn f(v: u64) -> u32 {\n    // cast-ok:\n    v as u32\n}\n";
+    assert!(rules_of("core/quantize.rs", bare).contains(&"kernel-cast"));
+    // a blank line breaks the comment block: the tag no longer applies
+    let gap = "pub fn f(v: u64) -> u32 {\n    // cast-ok: bounded\n\n    v as u32\n}\n";
+    assert!(rules_of("core/quantize.rs", gap).contains(&"kernel-cast"));
+}
+
+// ---------------------------------------------------------------------
+// float-eq (unscoped)
+// ---------------------------------------------------------------------
+
+#[test]
+fn float_equality_is_flagged() {
+    let lit = "pub fn f(x: f64) -> bool {\n    x == 0.0\n}\n";
+    assert_eq!(rules_of("solvers/x.rs", lit), vec!["float-eq"]);
+    let assoc = "pub fn f(m: f64) -> bool {\n    m != f64::NEG_INFINITY\n}\n";
+    assert_eq!(rules_of("solvers/x.rs", assoc), vec!["float-eq"]);
+}
+
+#[test]
+fn float_eq_annotation_and_non_float_compares() {
+    let ok = "pub fn f(x: f64) -> bool {\n    // float-eq-ok: exact fold identity, not a tolerance check\n    x == 0.0\n}\n";
+    assert!(rules_of("solvers/x.rs", ok).is_empty());
+    let int = "pub fn f(x: u32) -> bool {\n    x == 10\n}\n";
+    assert!(rules_of("solvers/x.rs", int).is_empty());
+    // tuple field access is not a float literal
+    let tuple = "pub fn f(a: (u32, u32), b: (u32, u32)) -> bool {\n    a.0 == b.0\n}\n";
+    assert!(rules_of("solvers/x.rs", tuple).is_empty());
+    // float text inside a string literal is not a comparison
+    let instr = "pub fn f() -> &'static str {\n    \"x == 0.0\"\n}\n";
+    assert!(rules_of("solvers/x.rs", instr).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// no-panic (api/core/solvers/coordinator/runtime/data only)
+// ---------------------------------------------------------------------
+
+#[test]
+fn panics_in_library_solve_paths_are_flagged() {
+    let unwrap = "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
+    assert_eq!(rules_of("solvers/x.rs", unwrap), vec!["no-panic"]);
+    let panic = "pub fn f() {\n    panic!(\"boom\");\n}\n";
+    assert_eq!(rules_of("api/x.rs", panic), vec!["no-panic"]);
+    let expect = "pub fn f(v: Option<u32>) -> u32 {\n    v.expect(\"present\")\n}\n";
+    assert_eq!(rules_of("coordinator/x.rs", expect), vec!["no-panic"]);
+}
+
+#[test]
+fn no_panic_scoping_annotation_and_test_mask() {
+    let unwrap = "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
+    // exp/ and util/ are harness code, out of scope
+    assert!(rules_of("exp/x.rs", unwrap).is_empty());
+    assert!(rules_of("util/x.rs", unwrap).is_empty());
+    // panic-ok with a reason suppresses
+    let ok = "pub fn f(v: Option<u32>) -> u32 {\n    // panic-ok: v is Some by construction two lines up\n    v.unwrap()\n}\n";
+    assert!(rules_of("solvers/x.rs", ok).is_empty());
+    // unwrap_or_else is the panic-free idiom, not a panic site
+    let recover =
+        "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap_or_else(|| 0)\n}\n";
+    assert!(rules_of("solvers/x.rs", recover).is_empty());
+    // #[cfg(test)] mod tests is exempt even in scoped files
+    let tested = "pub fn ok() -> u32 {\n    1\n}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let v: Option<u32> = Some(1);\n        v.unwrap();\n    }\n}\n";
+    assert!(rules_of("core/x.rs", tested).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// error-convention (core/** eps messages must name their provider)
+// ---------------------------------------------------------------------
+
+#[test]
+fn eps_message_without_provider_is_flagged() {
+    let src = "pub fn check(eps: f64) -> Result<(), String> {\n    if eps <= 0.0 {\n        return Err(format!(\"eps must be in (0, 1); got {eps}\"));\n    }\n    Ok(())\n}\n";
+    assert_eq!(rules_of("core/quantize.rs", src), vec!["error-convention"]);
+    // out of core/: the convention does not apply
+    assert!(rules_of("solvers/x.rs", src).is_empty());
+}
+
+#[test]
+fn eps_message_naming_provider_passes() {
+    let same = "pub fn check(eps: f64, kind: &str) -> Result<(), String> {\n    if eps <= 0.0 {\n        return Err(format!(\"eps must be in (0, 1); provider={kind}\"));\n    }\n    Ok(())\n}\n";
+    assert!(rules_of("core/quantize.rs", same).is_empty());
+    // provider= within the next two lines also satisfies the rule
+    let near = "pub fn check(eps: f64, kind: &str) -> Result<(), String> {\n    if eps <= 0.0 {\n        return Err(format!(\n            \"eps must be in (0, 1); \\\n             provider={kind}\"\n        ));\n    }\n    Ok(())\n}\n";
+    assert!(rules_of("core/quantize.rs", near).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// contract-marker (the four kernel backend files)
+// ---------------------------------------------------------------------
+
+#[test]
+fn worklist_fn_without_contract_marker_is_flagged() {
+    let src = "impl Kernel {\n    fn run_phase(&mut self) {\n        self.accept_one(3);\n    }\n}\n";
+    let f = analyze_source("core/kernel/scalar.rs", src);
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, "contract-marker");
+    assert!(f[0].message.contains("run_phase"), "{}", f[0].message);
+    // same code outside the backend files is not checked
+    assert!(rules_of("core/kernel/mod.rs", src).is_empty());
+}
+
+#[test]
+fn contract_marker_above_or_inside_the_fn_passes() {
+    let above = format!(
+        "impl Kernel {{\n    // {CONTRACT_MARKER} — staged per round.\n    fn run_phase(&mut self) {{\n        self.accept_one(3);\n    }}\n}}\n"
+    );
+    assert!(rules_of("core/kernel/chunked.rs", &above).is_empty());
+    let inside = format!(
+        "fn vector_sweep(&mut self) {{\n    // {CONTRACT_MARKER}\n    self.stage();\n}}\n"
+    );
+    assert!(rules_of("core/kernel/vector.rs", &inside).is_empty());
+    // a fn that never touches the worklist needs no marker
+    let clean = "fn helper(x: u32) -> u32 {\n    x + 1\n}\n";
+    assert!(rules_of("core/kernel/vector.rs", clean).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// allowlist lifecycle through run()
+// ---------------------------------------------------------------------
+
+struct TempTree(PathBuf);
+
+impl TempTree {
+    fn new(tag: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!("otpr-analyze-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(dir.join("solvers")).unwrap();
+        Self(dir)
+    }
+}
+
+impl Drop for TempTree {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+const BAD_SOLVER: &str = "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n";
+
+#[test]
+fn run_reports_findings_and_allowlist_suppresses_them() {
+    let tree = TempTree::new("suppress");
+    fs::write(tree.0.join("solvers/bad.rs"), BAD_SOLVER).unwrap();
+
+    let report = run(&tree.0, &Allowlist::empty()).unwrap();
+    assert_eq!(report.files, 1);
+    assert_eq!(report.suppressed, 0);
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "no-panic");
+    assert_eq!(report.findings[0].file, "solvers/bad.rs");
+
+    let allow = Allowlist::parse(
+        "[[allow]]\nrule = \"no-panic\"\nfile = \"solvers/bad.rs\"\npattern = \"unwrap\"\nreason = \"exercise the suppression path in tests\"\n",
+    )
+    .unwrap();
+    let report = run(&tree.0, &allow).unwrap();
+    assert_eq!(report.suppressed, 1);
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+}
+
+#[test]
+fn stale_allowlist_entries_are_themselves_findings() {
+    let tree = TempTree::new("stale");
+    fs::write(tree.0.join("solvers/clean.rs"), "pub fn f() -> u32 {\n    1\n}\n").unwrap();
+    let allow = Allowlist::parse(
+        "[[allow]]\nrule = \"no-panic\"\nfile = \"solvers/clean.rs\"\npattern = \"unwrap\"\nreason = \"nothing matches this any more\"\n",
+    )
+    .unwrap();
+    let report = run(&tree.0, &allow).unwrap();
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "stale-allow");
+    assert_eq!(report.findings[0].file, "analyze-allow.toml");
+}
+
+#[test]
+fn allowlist_entries_without_reasons_are_rejected() {
+    let tree = TempTree::new("noreason");
+    fs::write(tree.0.join("solvers/bad.rs"), BAD_SOLVER).unwrap();
+    let allow = Allowlist::parse(
+        "[[allow]]\nrule = \"no-panic\"\nfile = \"solvers/bad.rs\"\npattern = \"unwrap\"\n",
+    )
+    .unwrap();
+    let report = run(&tree.0, &allow).unwrap();
+    // the suppression still applies, but the missing reason is a finding
+    assert_eq!(report.suppressed, 1);
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "allow-missing-reason");
+}
+
+#[test]
+fn report_json_carries_counts_and_findings() {
+    let tree = TempTree::new("json");
+    fs::write(tree.0.join("solvers/bad.rs"), BAD_SOLVER).unwrap();
+    let report = run(&tree.0, &Allowlist::empty()).unwrap();
+    let json = report.to_json().to_string();
+    assert!(json.contains("\"findings\""), "{json}");
+    assert!(json.contains("no-panic"), "{json}");
+    let table = report.table();
+    assert!(table.contains("solvers/bad.rs"), "{table}");
+}
+
+// ---------------------------------------------------------------------
+// the committed tree itself stays gate-clean
+// ---------------------------------------------------------------------
+
+/// The in-repo equivalent of `otpr analyze --gate`: the committed sources
+/// plus the committed allowlist must produce zero findings (and no stale
+/// or reasonless allow entries). This keeps the gate honest even in
+/// environments that run tests without the CLI step.
+#[test]
+fn committed_tree_is_gate_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+    let allow_path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("analyze-allow.toml");
+    let allow = Allowlist::parse(&fs::read_to_string(&allow_path).unwrap()).unwrap();
+    let report = run(&root, &allow).unwrap();
+    assert!(
+        report.findings.is_empty(),
+        "committed tree has analyzer findings:\n{}",
+        report.table()
+    );
+}

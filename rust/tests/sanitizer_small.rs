@@ -1,0 +1,243 @@
+//! Size-shrunk kernel tests for the sanitizer CI jobs (PR 6).
+//!
+//! * `miri_*` — tiny-n variants of the arena init / rescale / warm_reinit,
+//!   implicit-row-LRU, quantize, and provider tests. They run in normal
+//!   `cargo test` too (they are fast), but their real job is
+//!   `cargo +nightly miri test --test sanitizer_small -- miri_`, where the
+//!   full-size suites would be prohibitively slow. The phase-boundary
+//!   `debug_assert!` invariants in `KernelArena` fire for free here.
+//! * `tsan_*` — the Chunked-vs-Scalar byte-identity contract at ≥4 sweep
+//!   threads, the suite the ThreadSanitizer job
+//!   (`RUSTFLAGS=-Zsanitizer=thread`) drives. Any data race in the
+//!   propose fan-out is a determinism bug before it is a safety bug —
+//!   TSan catches it at the memory level, the asserts at the result level.
+//!
+//! See "Correctness tooling" in `rust/src/api/README.md` for how to run
+//! both locally.
+
+use otpr::core::duals::check_feasible;
+use otpr::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, VectorKernel};
+use otpr::core::provider::{Costs, GeneratedCosts};
+use otpr::core::quantize::QuantizedCosts;
+use otpr::core::CostMatrix;
+use otpr::util::rng::Pcg32;
+
+fn random_costs(n: usize, seed: u64) -> CostMatrix {
+    let mut rng = Pcg32::new(seed);
+    CostMatrix::from_fn(n, n, |_, _| rng.next_f32())
+}
+
+fn generated_mirror(dense: &CostMatrix, n: usize) -> Costs {
+    let grid = dense.clone();
+    Costs::generated(GeneratedCosts::new(n, n, move |b, a| grid.at(b, a)).unwrap())
+}
+
+// ---------------------------------------------------------------------
+// miri_* — small-n arena/quantize/provider coverage
+// ---------------------------------------------------------------------
+
+#[test]
+fn miri_arena_init_and_solve_small() {
+    let costs = random_costs(8, 3);
+    let mut k = ScalarKernel::new();
+    k.init(&costs, 0.25, None);
+    k.run_to_termination(10_000).unwrap();
+    k.check_invariants().unwrap();
+    let m = k.extract_matching();
+    m.check_consistent().unwrap();
+    assert!(k.arena().free_units() <= k.arena().threshold());
+    let y = k.duals();
+    assert!(y.yb.iter().all(|&v| v >= 0));
+    assert!(y.ya.iter().all(|&v| v <= 0));
+}
+
+#[test]
+fn miri_rescale_small() {
+    let costs = random_costs(8, 5);
+    let mut k = ScalarKernel::new();
+    k.init(&costs, 0.4, None);
+    k.run_to_termination(10_000).unwrap();
+    k.arena_mut().rescale(&costs, 0.2);
+    k.check_invariants().unwrap();
+    k.run_to_termination(10_000).unwrap();
+    k.check_invariants().unwrap();
+    assert!(k.arena().free_units() <= k.arena().threshold());
+    assert_eq!(k.arena().rescales, 1);
+    check_feasible(&k.arena().q, &k.extract_matching(), &k.duals()).unwrap();
+}
+
+#[test]
+fn miri_warm_reinit_small() {
+    let (c1, c2) = (random_costs(8, 1), random_costs(8, 2));
+    let mut k = ScalarKernel::new();
+    k.init(&c1, 0.25, None);
+    k.run_to_termination(10_000).unwrap();
+    k.arena_mut().warm_reinit(&c2, 0.25, None);
+    k.check_invariants().unwrap();
+    k.run_to_termination(10_000).unwrap();
+    let m = k.extract_matching();
+    m.check_consistent().unwrap();
+    check_feasible(&k.arena().q, &m, &k.duals()).unwrap();
+    assert_eq!(k.arena().warm_reinits, 1);
+    assert!(k.arena().last_init_reused);
+}
+
+#[test]
+fn miri_ot_masses_conserved_small() {
+    let n = 6;
+    let costs = random_costs(n, 7);
+    let supply: Vec<u64> = (0..n as u64).map(|b| 2 + b % 3).collect();
+    let demand: Vec<u64> = (0..n as u64).map(|a| 3 + a % 2).collect();
+    assert!(demand.iter().sum::<u64>() >= supply.iter().sum::<u64>());
+    let mut k = ScalarKernel::new();
+    k.init(&costs, 0.2, Some((&supply[..], &demand[..])));
+    k.run_to_termination(100_000).unwrap();
+    k.check_invariants().unwrap();
+    let flow = k.unit_flow();
+    for b in 0..n {
+        let shipped: u64 = (0..n).map(|a| flow[b * n + a]).sum();
+        assert_eq!(shipped + k.arena().b_free()[b], supply[b], "b={b}");
+    }
+    assert!(k.arena().max_classes_seen <= 2, "Lemma 4.1");
+}
+
+/// The implicit-row-LRU path: scalar implicit solves stream rows through
+/// the `RowScratch` cache, and the result must be byte-identical to dense.
+#[test]
+fn miri_implicit_row_lru_small() {
+    let n = 10;
+    let dense = random_costs(n, 11);
+    let costs = generated_mirror(&dense, n);
+    let mut kd = ScalarKernel::new();
+    kd.init(&dense, 0.25, None);
+    kd.run_to_termination(10_000).unwrap();
+    let mut ki = ScalarKernel::new();
+    ki.init_src(&costs.source(), 0.25, None);
+    ki.run_to_termination(10_000).unwrap();
+    ki.check_invariants().unwrap();
+    assert_eq!(kd.extract_matching(), ki.extract_matching());
+    assert_eq!(kd.duals(), ki.duals());
+    assert_eq!(kd.arena().rounds, ki.arena().rounds);
+    assert_eq!(ki.arena().cost_state_bytes(), 0, "no resident slab in implicit mode");
+}
+
+/// Vector-backend implicit mode builds only the streamed block minima
+/// (n = 10 exercises the lane-padding path under Miri).
+#[test]
+fn miri_implicit_vector_lane_min_small() {
+    let n = 10;
+    let dense = random_costs(n, 13);
+    let costs = generated_mirror(&dense, n);
+    let mut kd = VectorKernel::new();
+    kd.init(&dense, 0.25, None);
+    kd.run_to_termination(10_000).unwrap();
+    let mut ki = VectorKernel::new();
+    ki.init_src(&costs.source(), 0.25, None);
+    ki.run_to_termination(10_000).unwrap();
+    ki.check_invariants().unwrap();
+    assert_eq!(kd.extract_matching(), ki.extract_matching());
+    assert_eq!(kd.duals(), ki.duals());
+    assert!(ki.arena().q.is_implicit() && ki.arena().q.cq.is_empty());
+}
+
+#[test]
+fn miri_quantize_dense_vs_implicit_small() {
+    let dense = CostMatrix::from_fn(4, 9, |b, a| ((b * 7 + a * 5) % 11) as f32 / 10.0);
+    let costs = Costs::generated(
+        GeneratedCosts::new(4, 9, |b, a| ((b * 7 + a * 5) % 11) as f32 / 10.0).unwrap(),
+    );
+    let qd = QuantizedCosts::new(&dense, 0.15);
+    let qi = QuantizedCosts::from_source(&costs.source(), 0.15);
+    let mut buf = Vec::new();
+    for b in 0..4 {
+        assert_eq!(qi.row_units(b, &mut buf), qd.row(b), "row {b}");
+        assert_eq!(qi.row_min(b), qd.row_min(b));
+    }
+    let (mut lane_cq, mut dense_min, mut impl_min) = (Vec::new(), Vec::new(), Vec::new());
+    qd.build_lane_blocks(&mut lane_cq, &mut dense_min);
+    qi.build_lane_min_implicit(&mut impl_min);
+    assert_eq!(impl_min, dense_min);
+    let e0 = qi.epoch;
+    let mut qi2 = qi.clone();
+    qi2.requantize_src(&costs.source(), 0.1);
+    assert_ne!(qi2.epoch, e0, "requantize must bump the row-cache epoch");
+}
+
+#[test]
+fn miri_point_providers_match_dense_small() {
+    use otpr::data::synthetic::{euclidean_cost_provider, euclidean_costs, fig1_points};
+    let (a, b) = fig1_points(6, 17);
+    let dense = euclidean_costs(&b, &a);
+    let p = euclidean_cost_provider(&b, &a);
+    let costs = Costs::points(p);
+    let src = costs.source();
+    for bi in 0..6 {
+        for ai in 0..6 {
+            assert_eq!(src.at(bi, ai), dense.at(bi, ai), "({bi},{ai})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// tsan_* — Chunked-vs-Scalar byte-identity at ≥4 threads
+// ---------------------------------------------------------------------
+
+#[test]
+fn tsan_chunked_matches_scalar_at_4_and_8_threads() {
+    for seed in 0..3u64 {
+        let costs = random_costs(24, seed);
+        let mut ks = ScalarKernel::new();
+        ks.init(&costs, 0.2, None);
+        ks.run_to_termination(10_000).unwrap();
+        for threads in [4usize, 8] {
+            let mut kc = ChunkedKernel::new(threads);
+            kc.init(&costs, 0.2, None);
+            kc.run_to_termination(10_000).unwrap();
+            kc.check_invariants().unwrap();
+            assert_eq!(ks.extract_matching(), kc.extract_matching(), "seed {seed} t{threads}");
+            assert_eq!(ks.duals(), kc.duals(), "seed {seed} t{threads}");
+            assert_eq!(ks.arena().rounds, kc.arena().rounds, "seed {seed} t{threads}");
+            assert_eq!(ks.arena().phases, kc.arena().phases, "seed {seed} t{threads}");
+        }
+    }
+}
+
+/// Implicit costs add per-thread `RowScratch` caches to the fan-out; the
+/// result contract (and TSan's race check) must hold there too.
+#[test]
+fn tsan_chunked_implicit_matches_scalar_at_4_threads() {
+    let n = 20;
+    let dense = random_costs(n, 9);
+    let costs = generated_mirror(&dense, n);
+    let mut ks = ScalarKernel::new();
+    ks.init_src(&costs.source(), 0.2, None);
+    ks.run_to_termination(10_000).unwrap();
+    let mut kc = ChunkedKernel::new(4);
+    kc.init_src(&costs.source(), 0.2, None);
+    kc.run_to_termination(10_000).unwrap();
+    kc.check_invariants().unwrap();
+    assert_eq!(ks.extract_matching(), kc.extract_matching());
+    assert_eq!(ks.duals(), kc.duals());
+    assert_eq!(ks.arena().rounds, kc.arena().rounds);
+}
+
+/// OT masses exercise the cluster-slot accept path under the thread
+/// fan-out (Lemma 4.1 slot state is the shared structure TSan watches).
+#[test]
+fn tsan_ot_masses_chunked_matches_scalar() {
+    let n = 16;
+    let costs = random_costs(n, 21);
+    let supply: Vec<u64> = (0..n as u64).map(|b| 2 + b % 4).collect();
+    let demand: Vec<u64> = (0..n as u64).map(|a| 4 + a % 3).collect();
+    assert!(demand.iter().sum::<u64>() >= supply.iter().sum::<u64>());
+    let mut ks = ScalarKernel::new();
+    ks.init(&costs, 0.15, Some((&supply[..], &demand[..])));
+    ks.run_to_termination(100_000).unwrap();
+    for threads in [4usize, 8] {
+        let mut kc = ChunkedKernel::new(threads);
+        kc.init(&costs, 0.15, Some((&supply[..], &demand[..])));
+        kc.run_to_termination(100_000).unwrap();
+        assert_eq!(ks.unit_flow(), kc.unit_flow(), "t{threads}");
+        assert_eq!(ks.duals(), kc.duals(), "t{threads}");
+    }
+}
