@@ -13,7 +13,9 @@
 use crate::api::problem::{Problem, ProblemKind, Solution};
 use crate::api::request::SolveRequest;
 use crate::core::control::CANCELLED_NOTE;
-use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, VectorKernel, WarmStart};
+use crate::core::kernel::{
+    ChunkedKernel, FlowKernel, HybridKernel, ScalarKernel, VectorKernel, WarmStart,
+};
 use crate::core::{Matching, OtInstance, OtprError, Result, TransportPlan};
 use crate::runtime::{XlaAssignment, XlaRuntime, XlaSinkhorn};
 use crate::solvers::ot_push_relabel::{drive_ot, drive_ot_src};
@@ -316,6 +318,48 @@ impl Solver for NativeParallelSolver {
 
     fn solve_each(&self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
         let mut kernel = ChunkedKernel::new(self.threads);
+        let note = format!("threads={}", self.threads.max(1));
+        solve_items_on_kernel(&mut kernel, items, self.paranoid, WarmStart::COLD)
+            .into_iter()
+            .map(|r| {
+                r.map(|mut sol| {
+                    sol.stats.notes.insert(0, note.clone());
+                    sol
+                })
+            })
+            .collect()
+    }
+}
+
+/// `native-hybrid`: the lane-blocked propose sweep fanned over scoped
+/// threads (vector × chunked) for both problem kinds, dense *and*
+/// implicit costs — every core runs the block-min skip path. Identical
+/// results to `native-seq` at every thread count (the kernel contract);
+/// only wall-clock differs.
+pub struct NativeHybridSolver {
+    pub threads: usize,
+    pub paranoid: bool,
+}
+
+impl Solver for NativeHybridSolver {
+    fn name(&self) -> &'static str {
+        "native-hybrid"
+    }
+
+    fn supports(&self, _kind: ProblemKind) -> bool {
+        true
+    }
+
+    fn solve(&self, problem: &Problem, req: &SolveRequest) -> Result<Solution> {
+        let mut kernel = HybridKernel::new(self.threads);
+        let mut sol =
+            solve_one_on_kernel(&mut kernel, problem, req, self.paranoid, WarmStart::COLD)?;
+        sol.stats.notes.insert(0, format!("threads={}", self.threads.max(1)));
+        Ok(sol)
+    }
+
+    fn solve_each(&self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
+        let mut kernel = HybridKernel::new(self.threads);
         let note = format!("threads={}", self.threads.max(1));
         solve_items_on_kernel(&mut kernel, items, self.paranoid, WarmStart::COLD)
             .into_iter()

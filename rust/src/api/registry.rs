@@ -10,8 +10,8 @@
 //! edits).
 
 use crate::api::adapter::{
-    AssignmentAdapter, LmrSolver, NativeParallelSolver, NativeSeqSolver, NativeVectorSolver,
-    OtAdapter, SinkhornSolver, Solver, XlaEngineSolver, XlaSinkhornSolver,
+    AssignmentAdapter, LmrSolver, NativeHybridSolver, NativeParallelSolver, NativeSeqSolver,
+    NativeVectorSolver, OtAdapter, SinkhornSolver, Solver, XlaEngineSolver, XlaSinkhornSolver,
 };
 use crate::api::problem::{Problem, ProblemKind, Solution};
 use crate::api::request::SolveRequest;
@@ -58,6 +58,13 @@ pub const ENGINE_SPECS: &[EngineSpec] = &[
         assignment: true,
         ot: true,
         doc: "lane-blocked auto-vectorized propose sweep (results byte-identical to native-seq)",
+    },
+    EngineSpec {
+        key: "native-hybrid",
+        aliases: &["hybrid", "pr-hybrid"],
+        assignment: true,
+        ot: true,
+        doc: "lane-blocked propose sweep fanned over threads (vector × chunked; byte-identical to native-seq)",
     },
     EngineSpec {
         key: "native-vector-warm",
@@ -450,6 +457,9 @@ fn default_builder(key: &'static str) -> BuilderFn {
         }),
         "native-parallel" => Box::new(|cfg| {
             Box::new(NativeParallelSolver { threads: cfg.threads, paranoid: cfg.paranoid })
+        }),
+        "native-hybrid" => Box::new(|cfg| {
+            Box::new(NativeHybridSolver { threads: cfg.threads, paranoid: cfg.paranoid })
         }),
         "xla" => Box::new(|cfg| {
             Box::new(XlaEngineSolver {

@@ -9,8 +9,8 @@
 //! Payload size: a dense job carries its O(n²) cost slab, but an
 //! implicit job ([`Problem::Implicit`] over point clouds or a generator)
 //! ships **O(n) bytes** — the coordinator, batcher, and workers never
-//! materialize costs for it, and `Auto` routes it to the no-slab vector
-//! backend.
+//! materialize costs for it, and `Auto` routes it to a no-slab lane
+//! backend (vector sequentially, hybrid when threads are available).
 
 use crate::api::registry::canonical_key;
 use crate::api::{Problem, SolveRequest, Solution};
@@ -28,6 +28,8 @@ pub enum Engine {
     NativeParallel,
     /// Lane-blocked auto-vectorized kernel backend (scalar-identical).
     NativeVector,
+    /// Lane-blocked sweep fanned over threads (vector × chunked hybrid).
+    NativeHybrid,
     /// Vector backend + ε-scaling warm starts and batch dual reuse.
     NativeVectorWarm,
     /// Sequential backend + ε-scaling warm starts and batch dual reuse.
@@ -52,10 +54,11 @@ pub enum Engine {
 
 impl Engine {
     /// Every concrete (non-Auto) engine, i.e. every registry-backed one.
-    pub const CONCRETE: [Engine; 12] = [
+    pub const CONCRETE: [Engine; 13] = [
         Engine::NativeSeq,
         Engine::NativeParallel,
         Engine::NativeVector,
+        Engine::NativeHybrid,
         Engine::NativeVectorWarm,
         Engine::NativeSeqWarm,
         Engine::Xla,
@@ -73,6 +76,7 @@ impl Engine {
             Engine::NativeSeq => "native-seq",
             Engine::NativeParallel => "native-parallel",
             Engine::NativeVector => "native-vector",
+            Engine::NativeHybrid => "native-hybrid",
             Engine::NativeVectorWarm => "native-vector-warm",
             Engine::NativeSeqWarm => "native-seq-warm",
             Engine::Xla => "xla",
@@ -170,6 +174,8 @@ mod tests {
             ("par", Engine::NativeParallel),
             ("vector", Engine::NativeVector),
             ("simd", Engine::NativeVector),
+            ("hybrid", Engine::NativeHybrid),
+            ("pr-hybrid", Engine::NativeHybrid),
             ("vector-warm", Engine::NativeVectorWarm),
             ("warm", Engine::NativeSeqWarm),
             ("sinkhorn", Engine::SinkhornNative),

@@ -59,6 +59,9 @@ pub struct EngineCounters {
     /// Jobs that warm-started (ε-scaling schedule or batch dual carry;
     /// `SolveStats::warm_started`).
     pub warm_started: u64,
+    /// Jobs the router sent here by resolving `Engine::Auto` — the signal
+    /// that the routing table (`auto_kernel_engine`) picks this backend.
+    pub auto_routed: u64,
 }
 
 /// Per batch key (engine name + optional artifact bucket) accounting:
@@ -158,12 +161,19 @@ impl Metrics {
         self.with_engine(engine, |e| e.warm_started += 1);
     }
 
+    /// Count one `Engine::Auto` job the router resolved to `engine` — the
+    /// observability hook for the shared routing table.
+    pub fn record_auto_route(&self, engine: &'static str) {
+        self.with_engine(engine, |e| e.auto_routed += 1);
+    }
+
     fn with_engine(&self, engine: &'static str, f: impl FnOnce(&mut EngineCounters)) {
         let mut per = locked(&self.per_engine);
         match per.iter_mut().find(|e| e.engine == engine) {
             Some(e) => f(e),
             None => {
-                let mut e = EngineCounters { engine, jobs: 0, phases: 0, warm_started: 0 };
+                let mut e =
+                    EngineCounters { engine, jobs: 0, phases: 0, warm_started: 0, auto_routed: 0 };
                 f(&mut e);
                 per.push(e);
             }
@@ -254,6 +264,7 @@ impl Metrics {
                     ("jobs", Json::Num(e.jobs as f64)),
                     ("phase_events", Json::Num(e.phases as f64)),
                     ("warm_started_jobs", Json::Num(e.warm_started as f64)),
+                    ("auto_routed_jobs", Json::Num(e.auto_routed as f64)),
                 ])
             })
             .collect();
@@ -344,8 +355,8 @@ impl Metrics {
         }
         for e in locked(&self.per_engine).iter() {
             out.push_str(&format!(
-                "engine {}: {} jobs, {} phase-events, {} warm-started\n",
-                e.engine, e.jobs, e.phases, e.warm_started
+                "engine {}: {} jobs, {} phase-events, {} warm-started, {} auto-routed\n",
+                e.engine, e.jobs, e.phases, e.warm_started, e.auto_routed
             ));
         }
         out
@@ -437,6 +448,28 @@ mod tests {
         let engines = j.get("engines").unwrap().as_arr().unwrap();
         assert_eq!(engines.len(), 1);
         assert_eq!(engines[0].get("warm_started_jobs").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn auto_route_counter_tracked_per_engine_and_exported() {
+        let m = Metrics::new();
+        m.record_auto_route("native-hybrid");
+        m.record_auto_route("native-hybrid");
+        m.record_auto_route("native-seq");
+        m.record_done("native-hybrid", true, 0.0, 0.1);
+        let counters = m.engine_counters();
+        let h = counters.iter().find(|e| e.engine == "native-hybrid").unwrap();
+        assert_eq!((h.jobs, h.auto_routed), (1, 2));
+        let s = counters.iter().find(|e| e.engine == "native-seq").unwrap();
+        assert_eq!(s.auto_routed, 1);
+        assert!(m.snapshot().contains("2 auto-routed"), "{}", m.snapshot());
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let engines = j.get("engines").unwrap().as_arr().unwrap();
+        let hy = engines
+            .iter()
+            .find(|e| e.get("engine").unwrap().as_str() == Some("native-hybrid"))
+            .unwrap();
+        assert_eq!(hy.get("auto_routed_jobs").unwrap().as_f64(), Some(2.0));
     }
 
     #[test]

@@ -2,11 +2,14 @@
 //! and execute jobs through the [`SolverRegistry`] — the coordinator holds
 //! no per-engine construction code of its own.
 //!
-//! Auto policy (mirrors how the paper splits CPU vs GPU work): small
-//! instances go to the native sequential solver (per-phase scan is
-//! cache-friendly and has no dispatch overhead); larger ones go to the XLA
-//! path when an artifact bucket exists, else to the multi-threaded native
-//! solver.
+//! Auto policy (mirrors how the paper splits CPU vs GPU work): one shared
+//! table — [`auto_kernel_engine`] — picks the native kernel backend by
+//! (n, available threads, dense-vs-implicit): small instances stay
+//! sequential (per-phase scan is cache-friendly and has no dispatch
+//! overhead; implicit ones on the no-slab vector backend), large ones fan
+//! the lane sweep over threads via the hybrid backend — never when only
+//! one thread is available. Large dense assignment still prefers the XLA
+//! path when an artifact bucket exists.
 
 use crate::api::{Problem, Solution, SolverConfig, SolverRegistry};
 use crate::coordinator::job::{Engine, JobRequest};
@@ -16,6 +19,33 @@ use std::sync::Arc;
 
 /// Instances below this size always run natively under `Auto`.
 pub const AUTO_NATIVE_CUTOFF: usize = 512;
+
+/// The one `Auto` kernel-routing table — the small-instance fast path,
+/// the implicit route, and the hybrid route all read from here, so the
+/// thresholds cannot drift apart again (the pre-PR-7 bug: resolve still
+/// hardcoded `native-parallel` for large dense and `native-vector` for
+/// implicit, leaving every core on the slow scalar sweep).
+///
+/// * `threads <= 1` resolves to a **sequential** engine, never hybrid:
+///   the no-slab vector backend for implicit costs, the plain sequential
+///   kernel below the cutoff, the lane-blocked vector sweep above it.
+/// * `threads >= 2` and `n >= AUTO_NATIVE_CUTOFF` fan the lane sweep
+///   over threads: [`Engine::NativeHybrid`], dense *and* implicit.
+/// * Small instances stay sequential regardless of thread count — the
+///   per-phase scan is cache-friendly and fan-out dispatch would cost
+///   more than it saves.
+pub fn auto_kernel_engine(n: usize, threads: usize, implicit: bool) -> Engine {
+    let large = n >= AUTO_NATIVE_CUTOFF;
+    if large && threads > 1 {
+        return Engine::NativeHybrid;
+    }
+    if implicit || large {
+        // lane backend: no-slab streaming for implicit, block-min skip
+        // for large dense — the fastest sequential sweep either way
+        return Engine::NativeVector;
+    }
+    Engine::NativeSeq
+}
 
 pub struct Router {
     registry: SolverRegistry,
@@ -41,24 +71,26 @@ impl Router {
         self.config.xla_runtime.as_ref()
     }
 
-    /// Resolve Auto to a concrete engine for this job.
+    /// Resolve Auto to a concrete engine for this job: XLA when a dense
+    /// assignment is large and an artifact bucket exists, otherwise the
+    /// shared [`auto_kernel_engine`] table.
     pub fn resolve(&self, req: &JobRequest) -> Engine {
         match req.engine {
             Engine::Auto => {
                 let n = req.kind.n();
+                let threads = self.config.threads;
                 let xla_ok = self
                     .runtime()
                     .map(|r| r.registry.bucket_for(n).is_ok())
                     .unwrap_or(false);
                 match req.kind {
                     Problem::Assignment(_) if n >= AUTO_NATIVE_CUTOFF && xla_ok => Engine::Xla,
-                    Problem::Assignment(_) if n >= AUTO_NATIVE_CUTOFF => Engine::NativeParallel,
-                    Problem::Assignment(_) => Engine::NativeSeq,
-                    // OT has no XLA phase-loop (assignment only); route native
-                    Problem::Ot(_) => Engine::NativeSeq,
-                    // Implicit costs: the vector backend keeps only the
-                    // block-min cache resident — the no-slab path.
-                    Problem::Implicit(_) => Engine::NativeVector,
+                    // OT has no XLA phase-loop (assignment only); the
+                    // kernel engines all serve both problem kinds
+                    Problem::Assignment(_) | Problem::Ot(_) => {
+                        auto_kernel_engine(n, threads, false)
+                    }
+                    Problem::Implicit(_) => auto_kernel_engine(n, threads, true),
                 }
             }
             e => e,
@@ -125,7 +157,54 @@ mod tests {
     fn auto_routes_small_to_native() {
         let r = Router::new(None, 2);
         assert_eq!(r.resolve(&req(16, Engine::Auto)), Engine::NativeSeq);
-        assert_eq!(r.resolve(&req(1000, Engine::Auto)), Engine::NativeParallel);
+        assert_eq!(r.resolve(&req(1000, Engine::Auto)), Engine::NativeHybrid);
+    }
+
+    /// Every branch of the shared Auto table, including the `threads == 1`
+    /// degenerate case — which must resolve to a sequential engine, never
+    /// hybrid (a single-thread fan-out is pure dispatch overhead).
+    #[test]
+    fn auto_kernel_table_covers_every_branch() {
+        let big = AUTO_NATIVE_CUTOFF;
+        // threads == 1: sequential engines only
+        assert_eq!(auto_kernel_engine(16, 1, false), Engine::NativeSeq);
+        assert_eq!(auto_kernel_engine(16, 1, true), Engine::NativeVector);
+        assert_eq!(auto_kernel_engine(big, 1, false), Engine::NativeVector);
+        assert_eq!(auto_kernel_engine(big, 1, true), Engine::NativeVector);
+        // threads >= 2, small: still sequential (fan-out costs more than
+        // it saves below the cutoff)
+        assert_eq!(auto_kernel_engine(big - 1, 8, false), Engine::NativeSeq);
+        assert_eq!(auto_kernel_engine(big - 1, 8, true), Engine::NativeVector);
+        // threads >= 2, large: hybrid, dense and implicit alike
+        assert_eq!(auto_kernel_engine(big, 2, false), Engine::NativeHybrid);
+        assert_eq!(auto_kernel_engine(big, 2, true), Engine::NativeHybrid);
+        // threads == 0 behaves like 1 (never hybrid)
+        assert_eq!(auto_kernel_engine(big, 0, false), Engine::NativeVector);
+    }
+
+    #[test]
+    fn auto_single_thread_router_never_picks_hybrid() {
+        let r = Router::new(None, 1);
+        assert_eq!(r.resolve(&req(16, Engine::Auto)), Engine::NativeSeq);
+        assert_eq!(r.resolve(&req(1000, Engine::Auto)), Engine::NativeVector);
+    }
+
+    #[test]
+    fn auto_routes_implicit_through_the_shared_table() {
+        let mk = |n: usize| JobRequest {
+            id: 7,
+            kind: JobKind::implicit_assignment(
+                Workload::Fig1 { n }.implicit_costs(5).expect("fig1 implicit"),
+            )
+            .expect("implicit problem"),
+            request: SolveRequest::new(0.3),
+            engine: Engine::Auto,
+        };
+        let r2 = Router::new(None, 2);
+        assert_eq!(r2.resolve(&mk(16)), Engine::NativeVector);
+        assert_eq!(r2.resolve(&mk(1000)), Engine::NativeHybrid);
+        let r1 = Router::new(None, 1);
+        assert_eq!(r1.resolve(&mk(1000)), Engine::NativeVector);
     }
 
     #[test]

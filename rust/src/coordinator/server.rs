@@ -223,6 +223,9 @@ fn dispatcher_loop(
                 // Resolve Auto and the artifact bucket here, once, so the
                 // batch key is final and workers never re-route.
                 let engine = router.resolve(&env.req);
+                if env.req.engine == Engine::Auto {
+                    metrics.record_auto_route(engine.name());
+                }
                 env.engine = engine;
                 let key = (engine.name(), router.bucket(&env.req, engine));
                 if let Some(batch) = batcher.push(key, env) {

@@ -402,6 +402,53 @@ impl KernelView<'_> {
         }
         (len, need > 0)
     }
+
+    /// [`KernelView::propose_one_lanes`] with a per-thread row cache for
+    /// implicit costs: the hybrid backend fans this over scoped threads,
+    /// each thread owning one [`RowScratch`] LRU so repeat rows stream
+    /// from the provider once per window instead of once per block.
+    /// Dense costs delegate straight to the lane mirror (no cache needed
+    /// — the mirror *is* resident). The cached row holds exactly the
+    /// dense `cq` units and the block-min skip filter is shared, so skip
+    /// decisions and staged takes are identical to both the dense lane
+    /// sweep and the scalar sweep — byte-identity by construction.
+    pub fn propose_one_lanes_cached(
+        &self,
+        wi: usize,
+        out: &mut [PlanItem],
+        scratch: &mut RowScratch,
+    ) -> (usize, bool) {
+        if !self.q.is_implicit() {
+            return self.propose_one_lanes(wi, out);
+        }
+        let b = idx(self.worklist[wi]);
+        let mut need = self.need[wi];
+        let yb = self.y_free[b] as i64;
+        let na = self.q.na;
+        let na_pad = self.na_pad;
+        debug_assert!(na_pad >= na, "lane mirror not built for this arena");
+        let nblk = na_pad / LANES;
+        let bmin = &self.lane_min[b * nblk..(b + 1) * nblk];
+        let row = scratch.row(self.q, b);
+        let mut len = 0usize;
+        let mut a = idx(self.cursor[wi]);
+        while a < na {
+            if need == 0 || len == out.len() {
+                return (len, false);
+            }
+            let blk = a / LANES;
+            if bmin[blk] as i64 + 1 - yb > 0 {
+                a = (blk + 1) * LANES;
+                continue;
+            }
+            // `end ≤ na` always (the cached row is na-wide, not padded).
+            let end = ((blk + 1) * LANES).min(na);
+            if self.stage_segment(&SliceRow(row), yb, end, &mut a, &mut need, &mut len, out) {
+                return (len, false);
+            }
+        }
+        (len, need > 0)
+    }
 }
 
 /// Propose sequentially for a window of the active list: `plans` /

@@ -1,0 +1,243 @@
+//! Hybrid flow-kernel backend: the lane-blocked propose sweep of
+//! [`crate::core::kernel::VectorKernel`] fanned over scoped threads in
+//! contiguous chunks of the active worklist, exactly as
+//! [`crate::core::kernel::ChunkedKernel`] fans the scalar sweep. Every
+//! core runs the fast path: per-block-min skip over
+//! [`crate::core::quantize::LANES`]-wide `i32` blocks, fixed-width inner
+//! loops that auto-vectorize on stable Rust.
+//!
+//! Byte-identity holds by construction at every thread count: workers
+//! stage proposals only against the round snapshot into disjoint plan
+//! windows, and commits happen sequentially in ascending rank order
+//! inside `KernelArena::run_phase` — the same contract Scalar, Chunked,
+//! and Vector already share (`tests/conformance_golden.rs` pins it on
+//! the golden corpus; `tests/sanitizer_small.rs` `tsan_hybrid_*` runs it
+//! under ThreadSanitizer).
+//!
+//! Implicit costs keep the vector backend's memory model — the streamed
+//! per-block-min cache is the only n²-shaped state — and add one
+//! [`RowScratch`] row-window LRU *per sweep thread*: blocks that survive
+//! the skip filter read their quantized row from the thread's cache
+//! (filled from the provider once per window) instead of re-quantizing
+//! per block. Cached rows are exactly the dense `cq` rows, so caching
+//! never changes results, only how often the provider streams.
+
+// Kernel-scope lint wall: all narrowing index math must go through the
+// checked helpers in `arena` (`idx`/`to_u32`/`to_u8`).
+#![deny(clippy::cast_possible_truncation, clippy::cast_sign_loss)]
+
+use crate::core::kernel::arena::{
+    idx, to_u8, KernelArena, KernelPhase, KernelView, PlanItem, RowScratch, PLAN_WIDTH,
+};
+use crate::core::kernel::FlowKernel;
+
+/// The lane-blocked sweep body with a per-thread row cache: identical
+/// proposals to [`crate::core::kernel::vector::vector_sweep`] (and hence
+/// to `sequential_sweep`), staged through
+/// [`KernelView::propose_one_lanes_cached`]. Each worker thread of the
+/// hybrid backend runs this over its contiguous window of the active
+/// worklist with its own `scratch`.
+// CONTRACT: round-structured accept order — this sweep only stages
+// proposals against the round snapshot; commits happen sequentially in
+// KernelArena::run_phase in ascending rank order.
+pub fn hybrid_sweep(
+    view: &KernelView<'_>,
+    actives: &[u32],
+    plans: &mut [PlanItem],
+    plan_len: &mut [u8],
+    exhausted: &mut [bool],
+    scratch: &mut RowScratch,
+) {
+    for (i, &wi) in actives.iter().enumerate() {
+        let out = &mut plans[i * PLAN_WIDTH..(i + 1) * PLAN_WIDTH];
+        let (len, ex) = view.propose_one_lanes_cached(idx(wi), out, &mut *scratch);
+        plan_len[i] = to_u8(len);
+        exhausted[i] = ex;
+    }
+}
+
+#[derive(Debug)]
+pub struct HybridKernel {
+    arena: KernelArena,
+    threads: usize,
+    /// One row-window LRU per sweep thread for implicit costs (values are
+    /// pure per-row quantizations, so per-thread caching cannot perturb
+    /// the thread-invariant result contract).
+    scratch: Vec<RowScratch>,
+}
+
+impl HybridKernel {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let mut scratch = Vec::with_capacity(threads);
+        scratch.resize_with(threads, RowScratch::default);
+        Self { arena: KernelArena::with_lanes(), threads, scratch }
+    }
+}
+
+impl FlowKernel for HybridKernel {
+    fn name(&self) -> &'static str {
+        "kernel-hybrid"
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn arena(&self) -> &KernelArena {
+        &self.arena
+    }
+
+    fn arena_mut(&mut self) -> &mut KernelArena {
+        &mut self.arena
+    }
+
+    // CONTRACT: round-structured accept order — worker threads only stage
+    // proposals into disjoint plan windows against the round snapshot;
+    // commits happen inside KernelArena::run_phase in ascending rank order,
+    // so the result is identical to the scalar backend at any thread count.
+    fn run_phase(&mut self) -> KernelPhase {
+        let threads = self.threads;
+        let scratch = &mut self.scratch;
+        self.arena.run_phase(|view, active, plans, plan_len, exhausted| {
+            let n = active.len();
+            let workers = threads.min(n.max(1));
+            if workers <= 1 {
+                hybrid_sweep(view, active, plans, plan_len, exhausted, &mut scratch[0]);
+                return;
+            }
+            let chunk = n.div_ceil(workers);
+            std::thread::scope(|s| {
+                // chunks/chunks_mut yield disjoint windows, so each worker
+                // owns its slice of the plan buffers (and its own row
+                // scratch) and runs the one shared lane-sweep body over it
+                for ((((acts, pl), ll), el), rs) in active
+                    .chunks(chunk)
+                    .zip(plans.chunks_mut(chunk * PLAN_WIDTH))
+                    .zip(plan_len.chunks_mut(chunk))
+                    .zip(exhausted.chunks_mut(chunk))
+                    .zip(scratch.iter_mut())
+                {
+                    s.spawn(move || hybrid_sweep(view, acts, pl, ll, el, rs));
+                }
+            });
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::kernel::ScalarKernel;
+    use crate::core::provider::{Costs, GeneratedCosts};
+    use crate::core::CostMatrix;
+    use crate::util::rng::Pcg32;
+
+    fn random_costs(n: usize, seed: u64) -> CostMatrix {
+        let mut rng = Pcg32::new(seed);
+        CostMatrix::from_fn(n, n, |_, _| rng.next_f32())
+    }
+
+    fn generated_mirror(dense: &CostMatrix, n: usize) -> Costs {
+        let grid = dense.clone();
+        Costs::generated(GeneratedCosts::new(n, n, move |b, a| grid.at(b, a)).unwrap())
+    }
+
+    #[test]
+    fn hybrid_identical_to_scalar_across_threads_and_padding_widths() {
+        // n = 8, 24 exercise the exact-multiple path, the rest the padding.
+        for n in [5usize, 8, 11, 20, 24] {
+            for seed in [1u64, 3] {
+                let costs = random_costs(n, seed);
+                let mut ks = ScalarKernel::new();
+                ks.init(&costs, 0.2, None);
+                ks.run_to_termination(10_000).unwrap();
+                for threads in [1usize, 2, 4, 8] {
+                    let mut kh = HybridKernel::new(threads);
+                    kh.init(&costs, 0.2, None);
+                    kh.run_to_termination(10_000).unwrap();
+                    kh.check_invariants().unwrap();
+                    let tag = format!("n={n} seed={seed} t{threads}");
+                    assert_eq!(ks.extract_matching(), kh.extract_matching(), "{tag}");
+                    assert_eq!(ks.duals(), kh.duals(), "{tag}");
+                    assert_eq!(ks.arena().rounds, kh.arena().rounds, "{tag}");
+                    assert_eq!(ks.arena().phases, kh.arena().phases, "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_identical_to_scalar_on_ot_masses() {
+        let n = 13; // non-multiple-of-8 demand side
+        let costs = random_costs(n, 9);
+        let supply: Vec<u64> = (0..n).map(|b| 2 + (b % 5) as u64).collect();
+        let demand: Vec<u64> = (0..n).map(|a| 4 + (a % 3) as u64).collect();
+        assert!(demand.iter().sum::<u64>() >= supply.iter().sum::<u64>());
+        let mut ks = ScalarKernel::new();
+        ks.init(&costs, 0.15, Some((&supply[..], &demand[..])));
+        ks.run_to_termination(100_000).unwrap();
+        for threads in [2usize, 4] {
+            let mut kh = HybridKernel::new(threads);
+            kh.init(&costs, 0.15, Some((&supply[..], &demand[..])));
+            kh.run_to_termination(100_000).unwrap();
+            assert_eq!(ks.unit_flow(), kh.unit_flow(), "t{threads}");
+            assert_eq!(ks.duals(), kh.duals(), "t{threads}");
+            assert_eq!(ks.arena().rounds, kh.arena().rounds, "t{threads}");
+        }
+    }
+
+    #[test]
+    fn hybrid_implicit_identical_to_dense_with_per_thread_caches() {
+        // n = 11 exercises the lane-padding path under implicit costs.
+        for n in [8usize, 11, 20] {
+            let dense = random_costs(n, 21);
+            let costs = generated_mirror(&dense, n);
+            let mut kd = HybridKernel::new(4);
+            kd.init(&dense, 0.2, None);
+            kd.run_to_termination(10_000).unwrap();
+            let mut ki = HybridKernel::new(4);
+            ki.init_src(&costs.source(), 0.2, None);
+            ki.run_to_termination(10_000).unwrap();
+            ki.check_invariants().unwrap();
+            assert_eq!(kd.extract_matching(), ki.extract_matching(), "n={n}");
+            assert_eq!(kd.duals(), ki.duals(), "n={n}");
+            assert_eq!(kd.arena().rounds, ki.arena().rounds, "n={n}");
+            assert_eq!(kd.arena().phases, ki.arena().phases, "n={n}");
+            // implicit mode keeps only the streamed block minima resident
+            assert!(ki.arena().q.is_implicit() && ki.arena().q.cq.is_empty(), "n={n}");
+            assert!(ki.arena().cost_state_bytes() < kd.arena().cost_state_bytes() / 4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn hybrid_rescale_matches_scalar_schedule() {
+        let costs = random_costs(12, 4);
+        let mut kh = HybridKernel::new(4);
+        kh.init(&costs, 0.4, None);
+        kh.run_to_termination(10_000).unwrap();
+        kh.arena_mut().rescale(&costs, 0.2);
+        kh.check_invariants().unwrap();
+        kh.run_to_termination(10_000).unwrap();
+        assert!(kh.arena().free_units() <= kh.arena().threshold());
+        assert_eq!(kh.arena().rescales, 1);
+        let mut ks = ScalarKernel::new();
+        ks.init(&costs, 0.4, None);
+        ks.run_to_termination(10_000).unwrap();
+        ks.arena_mut().rescale(&costs, 0.2);
+        ks.run_to_termination(10_000).unwrap();
+        assert_eq!(ks.extract_matching(), kh.extract_matching());
+        assert_eq!(ks.duals(), kh.duals());
+    }
+
+    #[test]
+    fn arena_reuse_works_for_hybrid_backend() {
+        let mut kh = HybridKernel::new(2);
+        kh.init(&random_costs(10, 1), 0.2, None);
+        kh.run_to_termination(10_000).unwrap();
+        kh.init(&random_costs(10, 2), 0.2, None);
+        assert!(kh.arena().last_init_reused);
+        kh.run_to_termination(10_000).unwrap();
+        kh.check_invariants().unwrap();
+    }
+}

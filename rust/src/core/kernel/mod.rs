@@ -16,12 +16,14 @@
 //! * [`ScalarKernel`] — sequential propose sweep;
 //! * [`ChunkedKernel`] — the same sweep fanned out over scoped threads;
 //! * [`VectorKernel`] — the sweep over a lane-blocked cost mirror with
-//!   block-min skipping (auto-vectorized, cache-tiled).
+//!   block-min skipping (auto-vectorized, cache-tiled);
+//! * [`HybridKernel`] — the lane-blocked sweep fanned out over scoped
+//!   threads: every core runs the fast path (vector × chunked).
 //!
 //! **Backend equivalence is a hard contract**: a phase proposes against a
 //! stable snapshot and commits sequentially in ascending vertex order,
-//! so scalar, chunked, and vector produce *identical* matchings, plans,
-//! duals, and round counts at every thread or lane count
+//! so scalar, chunked, vector, and hybrid produce *identical* matchings,
+//! plans, duals, and round counts at every thread or lane count
 //! (`tests/conformance_golden.rs` pins this on the golden corpus).
 //!
 //! Drivers own policy — ε semantics, θ-scaling, phase caps, completion,
@@ -32,6 +34,7 @@
 
 pub mod arena;
 pub mod chunked;
+pub mod hybrid;
 pub mod scalar;
 pub mod vector;
 
@@ -39,6 +42,7 @@ pub use arena::{
     KernelArena, KernelPhase, KernelView, PlanItem, RowScratch, PLAN_WIDTH, SLOTS, SLOT_FREE,
 };
 pub use chunked::ChunkedKernel;
+pub use hybrid::HybridKernel;
 pub use scalar::ScalarKernel;
 pub use vector::VectorKernel;
 
@@ -358,6 +362,52 @@ mod tests {
         oi.run_to_termination(100_000).unwrap();
         assert_eq!(od.unit_flow(), oi.unit_flow());
         assert_eq!(od.duals(), oi.duals());
+    }
+
+    /// Stale-row-cache regression (PR 7 audit): one backend reused across
+    /// two *different* implicit instances of the same shape must not serve
+    /// quantized rows from the first instance to the second. Every
+    /// arena-reuse path (`init_src` reuse, `rescale_src`, `warm_reinit`)
+    /// routes through `requantize`/`requantize_implicit`, which bump the
+    /// `QuantizedCosts::epoch` keying the per-thread `RowScratch` LRUs —
+    /// this pins that the reused solve is byte-identical to a cold one.
+    #[test]
+    fn implicit_row_cache_invalidates_across_reused_instances() {
+        use crate::core::provider::{Costs, GeneratedCosts};
+        let n = 16;
+        let mk = |seed: u64| {
+            let dense = random_costs(n, seed);
+            let grid = dense.clone();
+            (dense, Costs::generated(GeneratedCosts::new(n, n, move |b, a| grid.at(b, a)).unwrap()))
+        };
+        let (_, c1) = mk(31);
+        let (_, c2) = mk(32);
+        // warm: one kernel solves instance 1, then is re-inited on
+        // instance 2 (same shape → arena + row caches are reused)
+        let mut warm = ChunkedKernel::new(4);
+        warm.init_src(&c1.source(), 0.2, None);
+        warm.run_to_termination(10_000).unwrap();
+        let epoch1 = warm.arena().q.epoch;
+        warm.init_src(&c2.source(), 0.2, None);
+        assert!(warm.arena().last_init_reused, "same shape must reuse the arena");
+        assert_ne!(warm.arena().q.epoch, epoch1, "reuse must bump the row-cache epoch");
+        warm.run_to_termination(10_000).unwrap();
+        warm.check_invariants().unwrap();
+        // cold: a fresh kernel solves instance 2 from scratch
+        let mut cold = ChunkedKernel::new(4);
+        cold.init_src(&c2.source(), 0.2, None);
+        cold.run_to_termination(10_000).unwrap();
+        assert_eq!(warm.extract_matching(), cold.extract_matching());
+        assert_eq!(warm.duals(), cold.duals());
+        assert_eq!(warm.arena().rounds, cold.arena().rounds);
+        // same audit for the hybrid backend's per-thread lane/LRU path
+        let mut hwarm = HybridKernel::new(4);
+        hwarm.init_src(&c1.source(), 0.2, None);
+        hwarm.run_to_termination(10_000).unwrap();
+        hwarm.init_src(&c2.source(), 0.2, None);
+        hwarm.run_to_termination(10_000).unwrap();
+        assert_eq!(hwarm.extract_matching(), cold.extract_matching());
+        assert_eq!(hwarm.duals(), cold.duals());
     }
 
     #[test]

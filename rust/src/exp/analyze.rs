@@ -16,8 +16,8 @@
 //! * `error-convention` — eps validation messages name their cost source
 //!   (`provider=...`), the PR-5 diagnostics convention;
 //! * `contract-marker` — the byte-identity tripwire: any function in
-//!   `core/kernel/{arena,scalar,chunked,vector}.rs` that stages or commits
-//!   against the active worklist must carry a
+//!   `core/kernel/{arena,scalar,chunked,vector,hybrid}.rs` that stages or
+//!   commits against the active worklist must carry a
 //!   `// CONTRACT: round-structured accept order` marker, so a refactor
 //!   that breaks determinism fails this gate instead of the golden suite
 //!   several PRs later.
@@ -37,7 +37,8 @@ pub const CONTRACT_MARKER: &str = "CONTRACT: round-structured accept order";
 
 /// Body tokens that mean a function stages into or commits against the
 /// round-structured active worklist (see `core/kernel/arena.rs`).
-const CONTRACT_TRIGGERS: [&str; 3] = ["accept_one(", "sequential_sweep(", "vector_sweep"];
+const CONTRACT_TRIGGERS: [&str; 4] =
+    ["accept_one(", "sequential_sweep(", "vector_sweep", "hybrid_sweep"];
 
 /// Cast targets the kernel-cast rule rejects: the narrowing or
 /// sign-changing targets plus `f32` (lossy), including `usize` so index
@@ -390,6 +391,7 @@ fn contract_scope(rel: &str) -> bool {
             | "core/kernel/scalar.rs"
             | "core/kernel/chunked.rs"
             | "core/kernel/vector.rs"
+            | "core/kernel/hybrid.rs"
     )
 }
 

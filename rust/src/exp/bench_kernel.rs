@@ -317,6 +317,31 @@ pub fn regressions(cells: &[CompareCell], threshold: f64) -> Vec<String> {
         .collect()
 }
 
+/// Is the joined cell set actually able to gate? A perf gate that joins
+/// zero dense cells, or joins cells but never computes a reference-
+/// relative ratio (the [`COMPARE_REFERENCE`] cell missing from either
+/// side), passes vacuously — `regressions` has nothing to inspect. That
+/// exact failure shipped before PR 7: a baseline on a disjoint grid made
+/// the nightly `--compare --gate` silently green. Callers must treat an
+/// `Err` here as a distinct loud failure, not an empty-but-passing gate.
+pub fn gate_health(cells: &[CompareCell]) -> Result<(), String> {
+    if cells.is_empty() {
+        return Err(
+            "joined zero dense cells — current run and baseline share no (engine, n, eps) \
+             grid point, so the gate is vacuous"
+                .to_string(),
+        );
+    }
+    if !cells.iter().any(|c| c.rel_change.is_some()) {
+        return Err(format!(
+            "no joined cell has a reference-relative ratio — the {COMPARE_REFERENCE} \
+             reference cell is missing from the current run or the baseline, so the \
+             gate is vacuous"
+        ));
+    }
+    Ok(())
+}
+
 /// Per-config speedup table for `otpr bench --compare`.
 pub fn compare_table(cells: &[CompareCell]) -> String {
     let mut out = String::from(
@@ -425,8 +450,41 @@ mod tests {
         let regs = regressions(&compare(&records, &slowed), 0.10);
         assert_eq!(regs.len(), 1, "{regs:?}");
         assert!(regs[0].contains("native-vector"));
-        // mismatched grids simply produce no cells (no false gate)
-        assert!(compare(&records, &[("native-seq".into(), 999, 0.3, 1.0)]).is_empty());
+        // a healthy join passes the vacuity check
+        gate_health(&cells).expect("self-compare is a usable gate");
+        // mismatched grids produce no cells — that is a gate-health
+        // FAILURE (pre-PR-7 this passed silently as "no regressions")
+        let disjoint = compare(&records, &[("native-seq".into(), 999, 0.3, 1.0)]);
+        assert!(disjoint.is_empty());
+        let err = gate_health(&disjoint).expect_err("empty join must fail the gate");
+        assert!(err.contains("zero dense cells"), "{err}");
+    }
+
+    /// The other vacuous-pass mode: cells join, but the `native-seq`
+    /// reference is absent from the baseline, so every `rel_change` is
+    /// `None` and `regressions` can never fire. The gate must refuse.
+    #[test]
+    fn gate_health_fails_when_reference_cell_is_missing() {
+        let cfg = BenchKernelConfig {
+            engines: vec!["native-seq".into(), "native-vector".into()],
+            sizes: vec![20],
+            eps: vec![0.3],
+            reps: 1,
+            seed: 2,
+            points: false,
+        };
+        let records = run(&cfg);
+        let baseline = load_baseline(&to_json(&cfg, &records).to_string()).unwrap();
+        // strip the reference engine from the baseline: the vector cell
+        // still joins (on its own key) but has no ratio to gate on
+        let no_ref: Vec<(String, usize, f64, f64)> =
+            baseline.into_iter().filter(|(e, ..)| e != COMPARE_REFERENCE).collect();
+        let cells = compare(&records, &no_ref);
+        assert!(!cells.is_empty(), "non-reference cells still join");
+        assert!(cells.iter().all(|c| c.rel_change.is_none()));
+        assert!(regressions(&cells, 0.10).is_empty(), "nothing to inspect");
+        let err = gate_health(&cells).expect_err("ratio-less join must fail the gate");
+        assert!(err.contains(COMPARE_REFERENCE), "{err}");
     }
 
     #[test]

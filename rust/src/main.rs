@@ -306,7 +306,8 @@ fn cmd_serve(args: &Args) -> i32 {
 
 fn cmd_bench(args: &Args) -> i32 {
     use otpr::exp::bench_kernel::{
-        compare, compare_table, load_baseline, regressions, run, table, to_json, BenchKernelConfig,
+        compare, compare_table, gate_health, load_baseline, regressions, run, table, to_json,
+        BenchKernelConfig,
     };
     let mut cfg = if args.flag("smoke") {
         BenchKernelConfig::smoke()
@@ -369,8 +370,10 @@ fn cmd_bench(args: &Args) -> i32 {
             }
         };
         let cells = compare(&records, &baseline);
-        if cells.is_empty() {
-            eprintln!("no overlapping (engine, n, eps) cells between this run and {base_path}");
+        // A gate that cannot inspect anything must fail loudly, not pass
+        // with zero joined cells (the pre-PR-7 vacuous-green bug).
+        if let Err(e) = gate_health(&cells) {
+            eprintln!("PERF GATE UNUSABLE vs {base_path}: {e}");
             return 1;
         }
         println!("comparison vs {base_path}:\n{}", compare_table(&cells));

@@ -156,7 +156,7 @@ fn eps_message_naming_provider_passes() {
 }
 
 // ---------------------------------------------------------------------
-// contract-marker (the four kernel backend files)
+// contract-marker (the five kernel backend files)
 // ---------------------------------------------------------------------
 
 #[test]
@@ -183,6 +183,20 @@ fn contract_marker_above_or_inside_the_fn_passes() {
     // a fn that never touches the worklist needs no marker
     let clean = "fn helper(x: u32) -> u32 {\n    x + 1\n}\n";
     assert!(rules_of("core/kernel/vector.rs", clean).is_empty());
+}
+
+/// The hybrid backend (PR 7) is in the contract scope, and its sweep name
+/// is a trigger: an unmarked fn fanning `hybrid_sweep` must be flagged.
+#[test]
+fn hybrid_backend_is_covered_by_the_contract_tripwire() {
+    let src = "fn run_phase(&mut self) {\n    hybrid_sweep(view, acts, pl, ll, el, rs);\n}\n";
+    let f = analyze_source("core/kernel/hybrid.rs", src);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "contract-marker");
+    let marked = format!(
+        "// {CONTRACT_MARKER}\nfn run_phase(&mut self) {{\n    hybrid_sweep(view, acts, pl, ll, el, rs);\n}}\n"
+    );
+    assert!(rules_of("core/kernel/hybrid.rs", &marked).is_empty());
 }
 
 // ---------------------------------------------------------------------

@@ -37,6 +37,7 @@ fn theorem1_push_relabel_family_within_eps_of_exact() {
             "native-seq",
             "native-parallel",
             "native-vector",
+            "native-hybrid",
             "native-seq-warm",
             "native-vector-warm",
         ];
@@ -93,6 +94,7 @@ fn conformance_sweep_certifies_every_engine() {
         "native-seq",
         "native-parallel",
         "native-vector",
+        "native-hybrid",
         "native-seq-warm",
         "native-vector-warm",
     ];
@@ -176,10 +178,11 @@ fn sinkhorn_contract_marginals_and_absent_duals() {
 }
 
 /// Backend-equivalence satellite: on every golden instance, the chunked
-/// (at every tested thread count) and vector kernel backends must produce
-/// **identical** matchings / plans and byte-identical duals to the scalar
-/// backend — the kernel contract that makes `native-parallel` and
-/// `native-vector` pure wall-clock optimizations of `native-seq`. The
+/// and hybrid backends (at every tested thread count) and the vector
+/// backend must produce **identical** matchings / plans and byte-identical
+/// duals to the scalar backend — the kernel contract that makes
+/// `native-parallel`, `native-hybrid`, and `native-vector` pure
+/// wall-clock optimizations of `native-seq`. The
 /// corpus includes non-multiple-of-8 demand widths (n = 4, 5, 6 and the
 /// 3×4 OT case), so the vector backend's lane-padding path is exercised.
 #[test]
@@ -242,6 +245,12 @@ fn kernel_backends_identical_on_golden_corpus() {
                     .solve("native-parallel", &config, &problem, &req)
                     .unwrap();
                 assert_identical(&chunked, &format!("threads={threads}"));
+                // the hybrid backend: the lane sweep fanned over the same
+                // thread counts (the PR 7 acceptance criterion)
+                let hybrid = registry
+                    .solve("native-hybrid", &config, &problem, &req)
+                    .unwrap();
+                assert_identical(&hybrid, &format!("hybrid-threads={threads}"));
             }
             let vector = registry
                 .solve("native-vector", &SolverConfig::default(), &problem, &req)

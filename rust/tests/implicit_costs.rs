@@ -20,10 +20,11 @@ use otpr::data::workloads::{Workload, GOLDEN_SPECS};
 use otpr::prop_assert;
 use otpr::util::proptest_mini::{check, PropConfig};
 
-const KERNEL_ENGINES: [&str; 5] = [
+const KERNEL_ENGINES: [&str; 6] = [
     "native-seq",
     "native-parallel",
     "native-vector",
+    "native-hybrid",
     "native-seq-warm",
     "native-vector-warm",
 ];

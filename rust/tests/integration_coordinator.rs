@@ -169,6 +169,83 @@ fn caller_cancellation_token_respected() {
     coord.shutdown();
 }
 
+fn implicit(n: usize, seed: u64) -> JobKind {
+    JobKind::implicit_assignment(Workload::Fig1 { n }.implicit_costs(seed).expect("fig1 implicit"))
+        .expect("implicit problem")
+}
+
+/// Every branch of the shared Auto table (`auto_kernel_engine`) observed
+/// end-to-end through `engine_used`, at 4 solver threads: the small dense
+/// fast path, the small implicit route, and both large routes fan to the
+/// hybrid backend. The resolved engines also show up in the
+/// `auto_routed_jobs` metric.
+#[test]
+fn auto_routing_pins_each_branch_at_4_threads() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, solver_threads: 4, ..Default::default() },
+        None,
+    );
+    let cases: [(JobKind, f64, &str); 4] = [
+        (assignment(16, 1), 0.3, "native-seq"),
+        (implicit(16, 2), 0.3, "native-vector"),
+        (assignment(600, 3), 0.4, "native-hybrid"),
+        (implicit(600, 4), 0.4, "native-hybrid"),
+    ];
+    for (kind, eps, expect) in cases {
+        let h = coord.submit(kind, eps, Engine::Auto).unwrap();
+        let out = h.wait().unwrap();
+        assert_eq!(out.engine_used, expect);
+        assert!(out.result.is_ok(), "{expect} job failed");
+    }
+    let counters = coord.metrics.engine_counters();
+    let routed: u64 = counters.iter().map(|c| c.auto_routed).sum();
+    assert_eq!(routed, 4, "every Auto job is counted against its resolved engine");
+    let hybrid = counters.iter().find(|c| c.engine == "native-hybrid").unwrap();
+    assert_eq!(hybrid.auto_routed, 2);
+    coord.shutdown();
+}
+
+/// The `threads == 1` degenerate case must resolve to a sequential
+/// engine — never hybrid (a single-thread fan-out is pure overhead).
+#[test]
+fn auto_routing_single_thread_never_hybrid() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 1, solver_threads: 1, ..Default::default() },
+        None,
+    );
+    for (kind, expect) in [
+        (assignment(16, 1), "native-seq"),
+        (assignment(600, 2), "native-vector"),
+        (implicit(600, 3), "native-vector"),
+    ] {
+        let h = coord.submit(kind, 0.4, Engine::Auto).unwrap();
+        let out = h.wait().unwrap();
+        assert_eq!(out.engine_used, expect);
+        assert!(out.result.is_ok());
+    }
+    coord.shutdown();
+}
+
+/// Explicitly requested hybrid jobs run end-to-end through the service
+/// (dense and implicit) and report the fan-out width.
+#[test]
+fn hybrid_engine_through_coordinator() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, solver_threads: 4, ..Default::default() },
+        None,
+    );
+    let hd = coord.submit(assignment(24, 5), 0.3, Engine::NativeHybrid).unwrap();
+    let hi = coord.submit(implicit(24, 5), 0.3, Engine::NativeHybrid).unwrap();
+    let sd = hd.wait().unwrap().result.unwrap();
+    let si = hi.wait().unwrap().result.unwrap();
+    assert!(sd.matching().unwrap().is_perfect());
+    assert!(sd.stats.notes.iter().any(|n| n == "threads=4"), "{:?}", sd.stats.notes);
+    // same instance through the implicit path: byte-identical coupling
+    assert_eq!(sd.matching(), si.matching());
+    assert_eq!(sd.duals, si.duals);
+    coord.shutdown();
+}
+
 #[test]
 fn xla_engine_through_coordinator_when_artifacts_exist() {
     let Ok(runtime) = XlaRuntime::open_default() else {

@@ -6,17 +6,18 @@
 //!   `cargo +nightly miri test --test sanitizer_small -- miri_`, where the
 //!   full-size suites would be prohibitively slow. The phase-boundary
 //!   `debug_assert!` invariants in `KernelArena` fire for free here.
-//! * `tsan_*` — the Chunked-vs-Scalar byte-identity contract at ≥4 sweep
-//!   threads, the suite the ThreadSanitizer job
-//!   (`RUSTFLAGS=-Zsanitizer=thread`) drives. Any data race in the
-//!   propose fan-out is a determinism bug before it is a safety bug —
-//!   TSan catches it at the memory level, the asserts at the result level.
+//! * `tsan_*` — the Chunked-vs-Scalar and Hybrid-vs-Scalar byte-identity
+//!   contracts at ≥4 sweep threads (dense + implicit + OT masses), the
+//!   suite the ThreadSanitizer job (`RUSTFLAGS=-Zsanitizer=thread`)
+//!   drives. Any data race in the propose fan-out is a determinism bug
+//!   before it is a safety bug — TSan catches it at the memory level,
+//!   the asserts at the result level.
 //!
 //! See "Correctness tooling" in `rust/src/api/README.md` for how to run
 //! both locally.
 
 use otpr::core::duals::check_feasible;
-use otpr::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, VectorKernel};
+use otpr::core::kernel::{ChunkedKernel, FlowKernel, HybridKernel, ScalarKernel, VectorKernel};
 use otpr::core::provider::{Costs, GeneratedCosts};
 use otpr::core::quantize::QuantizedCosts;
 use otpr::core::CostMatrix;
@@ -179,7 +180,7 @@ fn miri_point_providers_match_dense_small() {
 }
 
 // ---------------------------------------------------------------------
-// tsan_* — Chunked-vs-Scalar byte-identity at ≥4 threads
+// tsan_* — Chunked/Hybrid-vs-Scalar byte-identity at ≥4 threads
 // ---------------------------------------------------------------------
 
 #[test]
@@ -219,6 +220,72 @@ fn tsan_chunked_implicit_matches_scalar_at_4_threads() {
     assert_eq!(ks.extract_matching(), kc.extract_matching());
     assert_eq!(ks.duals(), kc.duals());
     assert_eq!(ks.arena().rounds, kc.arena().rounds);
+}
+
+/// Hybrid backend: the lane-blocked sweep fanned over threads. Same
+/// byte-identity contract as chunked, with the shared `lane_min` skip
+/// filter as the extra read-only state TSan watches across workers.
+#[test]
+fn tsan_hybrid_matches_scalar_at_4_and_8_threads() {
+    for seed in 0..3u64 {
+        let costs = random_costs(24, seed);
+        let mut ks = ScalarKernel::new();
+        ks.init(&costs, 0.2, None);
+        ks.run_to_termination(10_000).unwrap();
+        for threads in [4usize, 8] {
+            let mut kh = HybridKernel::new(threads);
+            kh.init(&costs, 0.2, None);
+            kh.run_to_termination(10_000).unwrap();
+            kh.check_invariants().unwrap();
+            assert_eq!(ks.extract_matching(), kh.extract_matching(), "seed {seed} t{threads}");
+            assert_eq!(ks.duals(), kh.duals(), "seed {seed} t{threads}");
+            assert_eq!(ks.arena().rounds, kh.arena().rounds, "seed {seed} t{threads}");
+            assert_eq!(ks.arena().phases, kh.arena().phases, "seed {seed} t{threads}");
+        }
+    }
+}
+
+/// Hybrid implicit costs: per-thread `RowScratch` LRUs feed the lane
+/// sweep, with rows quantized on demand from the provider — the richest
+/// shared-state configuration the fan-out has.
+#[test]
+fn tsan_hybrid_implicit_matches_scalar_at_4_and_8_threads() {
+    let n = 20;
+    let dense = random_costs(n, 9);
+    let costs = generated_mirror(&dense, n);
+    let mut ks = ScalarKernel::new();
+    ks.init_src(&costs.source(), 0.2, None);
+    ks.run_to_termination(10_000).unwrap();
+    for threads in [4usize, 8] {
+        let mut kh = HybridKernel::new(threads);
+        kh.init_src(&costs.source(), 0.2, None);
+        kh.run_to_termination(10_000).unwrap();
+        kh.check_invariants().unwrap();
+        assert_eq!(ks.extract_matching(), kh.extract_matching(), "t{threads}");
+        assert_eq!(ks.duals(), kh.duals(), "t{threads}");
+        assert_eq!(ks.arena().rounds, kh.arena().rounds, "t{threads}");
+    }
+}
+
+/// OT masses through the hybrid fan-out: cluster-slot accept state plus
+/// the lane skip filter, at 4 and 8 threads.
+#[test]
+fn tsan_ot_masses_hybrid_matches_scalar() {
+    let n = 16;
+    let costs = random_costs(n, 21);
+    let supply: Vec<u64> = (0..n as u64).map(|b| 2 + b % 4).collect();
+    let demand: Vec<u64> = (0..n as u64).map(|a| 4 + a % 3).collect();
+    assert!(demand.iter().sum::<u64>() >= supply.iter().sum::<u64>());
+    let mut ks = ScalarKernel::new();
+    ks.init(&costs, 0.15, Some((&supply[..], &demand[..])));
+    ks.run_to_termination(100_000).unwrap();
+    for threads in [4usize, 8] {
+        let mut kh = HybridKernel::new(threads);
+        kh.init(&costs, 0.15, Some((&supply[..], &demand[..])));
+        kh.run_to_termination(100_000).unwrap();
+        assert_eq!(ks.unit_flow(), kh.unit_flow(), "t{threads}");
+        assert_eq!(ks.duals(), kh.duals(), "t{threads}");
+    }
 }
 
 /// OT masses exercise the cluster-slot accept path under the thread
