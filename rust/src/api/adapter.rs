@@ -90,6 +90,10 @@ fn cancelled_assignment(n: usize, costs: &crate::core::CostMatrix) -> Solution {
 }
 
 fn cancelled_ot(ot: &OtInstance) -> Solution {
+    // Lazy product (PR 8): O(nb+na) resident — the cost fold streams the
+    // entries without ever allocating the nb·na slab, so cancelling a
+    // large solve costs no plan memory (regression-pinned at n=4096 in
+    // tests/sparse_plan.rs).
     let plan = TransportPlan::product(&ot.supply, &ot.demand);
     let cost = plan.cost(&ot.costs);
     Solution::from_ot(OtSolution {

@@ -226,6 +226,13 @@ impl Problem {
 /// The coupling a solver produced: a perfect matching (assignment engines)
 /// or a transport plan (OT engines — including OT engines answering
 /// assignment problems via uniform masses).
+///
+/// Since PR 8 a `Plan` may be *compact* — O(nnz) CSR from the kernel
+/// engines, or the O(nb+na) lazy product for cancelled solves — rather
+/// than a dense slab. Every read API (`at`, `cost`, marginals, `check`)
+/// works on any representation; `TransportPlan::as_slice` still returns
+/// the dense view but materializes (and caches) the nb·na slab on first
+/// call. See "Plan memory model" in `api/README.md`.
 #[derive(Debug, Clone)]
 pub enum Coupling {
     Matching(Matching),
@@ -262,12 +269,18 @@ impl Solution {
     }
 
     pub fn from_ot(sol: OtSolution) -> Self {
+        let mut stats = sol.stats;
+        // Every OT route reports its plan-memory footprint, whether the
+        // solver filled the field or not: kernel engines return O(nnz)
+        // CSR, Sinkhorn/SSP/XLA the dense slab, cancelled answers the
+        // O(nb+na) lazy product.
+        stats.plan_state_bytes = sol.plan.state_bytes();
         Self {
             coupling: Coupling::Plan(sol.plan),
             cost: sol.cost,
             duals: sol.duals,
             certificate: None,
-            stats: sol.stats,
+            stats,
         }
     }
 

@@ -11,6 +11,11 @@
 //! ships **O(n) bytes** — the coordinator, batcher, and workers never
 //! materialize costs for it, and `Auto` routes it to a no-slab lane
 //! backend (vector sequentially, hybrid when threads are available).
+//! Result payloads are compact too (PR 8): kernel-engine OT answers
+//! carry an O(nnz) CSR `TransportPlan`, so an implicit job round-trips
+//! through the coordinator in O(n) bytes end-to-end —
+//! `SolveStats::plan_state_bytes` reports the figure per job, and
+//! `/metrics` accumulates it per engine.
 
 use crate::api::registry::canonical_key;
 use crate::api::{Problem, SolveRequest, Solution};

@@ -62,6 +62,11 @@ pub struct EngineCounters {
     /// Jobs the router sent here by resolving `Engine::Auto` — the signal
     /// that the routing table (`auto_kernel_engine`) picks this backend.
     pub auto_routed: u64,
+    /// Σ `SolveStats::plan_state_bytes` over this engine's completed OT
+    /// jobs — result payloads are O(nnz) for the kernel engines' CSR
+    /// plans, so this stays O(n)-shaped where the dense solvers report
+    /// the full nb·na·8 slab.
+    pub plan_bytes: u64,
 }
 
 /// Per batch key (engine name + optional artifact bucket) accounting:
@@ -167,13 +172,29 @@ impl Metrics {
         self.with_engine(engine, |e| e.auto_routed += 1);
     }
 
+    /// Accumulate a completed job's plan-representation bytes
+    /// (`SolveStats::plan_state_bytes`) against `engine` — the serve
+    /// layer's view of how much plan memory each backend's answers carry
+    /// (O(nnz) CSR for the kernel engines vs the dense solvers' slabs).
+    pub fn record_plan_bytes(&self, engine: &'static str, bytes: u64) {
+        if bytes > 0 {
+            self.with_engine(engine, |e| e.plan_bytes += bytes);
+        }
+    }
+
     fn with_engine(&self, engine: &'static str, f: impl FnOnce(&mut EngineCounters)) {
         let mut per = locked(&self.per_engine);
         match per.iter_mut().find(|e| e.engine == engine) {
             Some(e) => f(e),
             None => {
-                let mut e =
-                    EngineCounters { engine, jobs: 0, phases: 0, warm_started: 0, auto_routed: 0 };
+                let mut e = EngineCounters {
+                    engine,
+                    jobs: 0,
+                    phases: 0,
+                    warm_started: 0,
+                    auto_routed: 0,
+                    plan_bytes: 0,
+                };
                 f(&mut e);
                 per.push(e);
             }
@@ -265,6 +286,7 @@ impl Metrics {
                     ("phase_events", Json::Num(e.phases as f64)),
                     ("warm_started_jobs", Json::Num(e.warm_started as f64)),
                     ("auto_routed_jobs", Json::Num(e.auto_routed as f64)),
+                    ("plan_state_bytes", Json::Num(e.plan_bytes as f64)),
                 ])
             })
             .collect();
@@ -355,8 +377,9 @@ impl Metrics {
         }
         for e in locked(&self.per_engine).iter() {
             out.push_str(&format!(
-                "engine {}: {} jobs, {} phase-events, {} warm-started, {} auto-routed\n",
-                e.engine, e.jobs, e.phases, e.warm_started, e.auto_routed
+                "engine {}: {} jobs, {} phase-events, {} warm-started, {} auto-routed, \
+                 {} plan-bytes\n",
+                e.engine, e.jobs, e.phases, e.warm_started, e.auto_routed, e.plan_bytes
             ));
         }
         out
@@ -470,6 +493,23 @@ mod tests {
             .find(|e| e.get("engine").unwrap().as_str() == Some("native-hybrid"))
             .unwrap();
         assert_eq!(hy.get("auto_routed_jobs").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn plan_bytes_tracked_per_engine_and_exported() {
+        let m = Metrics::new();
+        m.record_plan_bytes("native-vector", 640);
+        m.record_plan_bytes("native-vector", 360);
+        m.record_plan_bytes("native-seq", 0); // no-op, must not create churn
+        m.record_done("native-vector", true, 0.0, 0.1);
+        let counters = m.engine_counters();
+        let v = counters.iter().find(|e| e.engine == "native-vector").unwrap();
+        assert_eq!(v.plan_bytes, 1000);
+        assert!(counters.iter().all(|e| e.engine != "native-seq"));
+        assert!(m.snapshot().contains("1000 plan-bytes"), "{}", m.snapshot());
+        let j = Json::parse(&m.to_json().to_string()).unwrap();
+        let engines = j.get("engines").unwrap().as_arr().unwrap();
+        assert_eq!(engines[0].get("plan_state_bytes").unwrap().as_f64(), Some(1000.0));
     }
 
     #[test]

@@ -367,6 +367,9 @@ fn worker_loop(
                     if sol.stats.warm_started {
                         metrics.record_warm_start(job.engine.name());
                     }
+                    // plan-payload accounting: O(nnz) for kernel CSR
+                    // answers, the dense slab for Sinkhorn/SSP/XLA
+                    metrics.record_plan_bytes(job.engine.name(), sol.stats.plan_state_bytes);
                 }
                 // A budget-stopped solve is exempt from auditing — it
                 // deliberately ships without a guarantee.

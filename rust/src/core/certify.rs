@@ -413,6 +413,14 @@ fn certify_plan_src(
     Certificate { primal_ok, dual_ok, gap, dual_lower_bound: lb, bound, cost, detail }
 }
 
+/// Primal side of the plan certificate: dimensions, feasibility
+/// (`TransportPlan::check`), and cost recomputation. All three stream
+/// over the plan's own representation — O(nnz) work and no dense
+/// materialization for the kernel engines' CSR plans — while the cost
+/// fold prices entries through the [`CostSource`] row streams, so an
+/// implicit instance certifies without a cost slab either. (The dual
+/// side below still streams full rows via `QuantizedCosts::from_source`:
+/// dual feasibility is a statement about *every* edge, not the support.)
 fn check_plan_primal(
     src: &CostSource<'_>,
     supply: &[f64],

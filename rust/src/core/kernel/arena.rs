@@ -129,6 +129,19 @@ fn dual_band(eps: f64) -> i64 {
     (1.0 / eps).ceil() as i64 + 2
 }
 
+/// Compact unit-flow export: the CSR twin of [`KernelArena::unit_flow`].
+/// Rows are supply vertices b (ascending), columns demand vertices a
+/// (strictly ascending within a row), values integer flow units — the
+/// canonical order `TransportPlan::from_csr` requires, produced straight
+/// from the cluster edge lists with no nb·na densification.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct UnitFlowCsr {
+    /// `row_ptr.len() == nb + 1`; row b occupies `row_ptr[b]..row_ptr[b+1]`.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub units: Vec<u64>,
+}
+
 /// One staged take: `units` from demand vertex `a`, out of the free pool
 /// (`slot == SLOT_FREE`) or matched cluster slot `slot`.
 #[derive(Debug, Clone, Copy, Default)]
@@ -1364,6 +1377,87 @@ impl KernelArena {
             }
         }
         flow
+    }
+
+    /// Extract the unit flow as CSR in canonical (b-ascending rows,
+    /// strictly a-ascending columns) order — the sparse twin of
+    /// [`KernelArena::unit_flow`] with no nb·na densification: resident
+    /// state is O(nnz), and nnz is bounded by the live cluster edges.
+    ///
+    /// Counting sort by supply row over the same a-major cluster-edge
+    /// walk `unit_flow` performs. Because the outer loop ascends `a`,
+    /// each row's columns arrive non-decreasing; the only duplicates a
+    /// row can see are the *adjacent* kind — the same (b, a) pair held
+    /// by two different slots of one demand vertex (`add_edge` merges
+    /// within a slot only) — and those fold into one entry in place.
+    // CONTRACT: sparse extraction order == dense fold order — rows emit
+    // b-ascending with strictly a-ascending columns, so a fold over this
+    // CSR visits exactly the positive entries of `unit_flow` in dense
+    // row-major order and downstream bit-identity claims hold.
+    pub fn extract_plan_sparse(&self) -> UnitFlowCsr {
+        // pass 1: per-row entry upper bounds (slot-duplicate pairs count
+        // twice here; the write pass merges them and rows compact after)
+        let mut counts = vec![0usize; self.nb];
+        for a in 0..self.na {
+            let base = a * SLOTS;
+            for s in 0..SLOTS {
+                if self.cls_count[base + s] == 0 {
+                    continue;
+                }
+                let mut e = self.cls_head[base + s];
+                while e != NIL {
+                    counts[idx(self.edge_b[idx(e)])] += 1;
+                    e = self.edge_next[idx(e)];
+                }
+            }
+        }
+        let mut start = vec![0usize; self.nb + 1];
+        for b in 0..self.nb {
+            start[b + 1] = start[b] + counts[b];
+        }
+        let cap = start[self.nb];
+        let mut col_idx = vec![0u32; cap];
+        let mut units = vec![0u64; cap];
+        let mut cursor = start.clone();
+        // pass 2: scatter edges to their rows, merging adjacent duplicates
+        for a in 0..self.na {
+            let base = a * SLOTS;
+            let ac = to_u32(a);
+            for s in 0..SLOTS {
+                if self.cls_count[base + s] == 0 {
+                    continue;
+                }
+                let mut e = self.cls_head[base + s];
+                while e != NIL {
+                    let b = idx(self.edge_b[idx(e)]);
+                    let u = self.edge_units[idx(e)];
+                    let c = cursor[b];
+                    if c > start[b] && col_idx[c - 1] == ac {
+                        units[c - 1] += u;
+                    } else {
+                        col_idx[c] = ac;
+                        units[c] = u;
+                        cursor[b] = c + 1;
+                    }
+                    e = self.edge_next[idx(e)];
+                }
+            }
+        }
+        // pass 3: close the merge gaps (writes never overtake reads —
+        // w ≤ start[b] ≤ lo for every row) and finalize row_ptr
+        let mut row_ptr = vec![0usize; self.nb + 1];
+        let mut w = 0usize;
+        for b in 0..self.nb {
+            for r in start[b]..cursor[b] {
+                col_idx[w] = col_idx[r];
+                units[w] = units[r];
+                w += 1;
+            }
+            row_ptr[b + 1] = w;
+        }
+        col_idx.truncate(w);
+        units.truncate(w);
+        UnitFlowCsr { row_ptr, col_idx, units }
     }
 
     /// Extract the matching (unit-mass instances: every vertex carries

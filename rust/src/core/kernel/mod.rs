@@ -39,7 +39,8 @@ pub mod scalar;
 pub mod vector;
 
 pub use arena::{
-    KernelArena, KernelPhase, KernelView, PlanItem, RowScratch, PLAN_WIDTH, SLOTS, SLOT_FREE,
+    KernelArena, KernelPhase, KernelView, PlanItem, RowScratch, UnitFlowCsr, PLAN_WIDTH, SLOTS,
+    SLOT_FREE,
 };
 pub use chunked::ChunkedKernel;
 pub use hybrid::HybridKernel;
@@ -175,6 +176,13 @@ pub trait FlowKernel: Send {
     /// Extract the unit flow as a dense (b, a) matrix.
     fn unit_flow(&self) -> Vec<u64> {
         self.arena().unit_flow()
+    }
+
+    /// Extract the unit flow as canonical-order CSR — O(nnz) resident,
+    /// no nb·na slab (see [`KernelArena::extract_plan_sparse`]). The OT
+    /// driver builds its `TransportPlan` from this.
+    fn extract_plan_sparse(&self) -> arena::UnitFlowCsr {
+        self.arena().extract_plan_sparse()
     }
 
     /// O(n²) structural invariant check (tests / paranoid mode).

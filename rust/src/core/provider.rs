@@ -544,20 +544,15 @@ impl CostSource<'_> {
         }
     }
 
-    /// Total plan cost — same row-major full-matrix fold as
-    /// [`TransportPlan::cost`] (zero entries included), so dense and
-    /// implicit report bit-identical totals.
+    /// Total plan cost — the representation-aware fold
+    /// [`TransportPlan::cost_with`], which replicates the dense row-major
+    /// accumulation order per representation (CSR plans skip only
+    /// exact-`+0.0` terms), so dense and implicit costs stay bit-identical
+    /// without ever materializing a compact plan.
     pub fn plan_cost(&self, plan: &TransportPlan) -> f64 {
         match self {
             CostSource::Dense(c) => plan.cost(c),
-            CostSource::Implicit(p) => {
-                let na = plan.na;
-                plan.as_slice()
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &f)| f * p.cost_at(i / na, i % na) as f64)
-                    .sum()
-            }
+            CostSource::Implicit(p) => plan.cost_with(|b, a| p.cost_at(b, a) as f64),
         }
     }
 }

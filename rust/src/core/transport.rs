@@ -1,74 +1,334 @@
 //! Transport plans σ: A×B → ℝ≥0 (stored (b, a) to match [`CostMatrix`]).
+//!
+//! Since PR 8 a plan carries one of three representations behind the same
+//! API, so the O(n²) slab is an *option*, not an obligation (mirroring
+//! what PR 5 did for costs):
+//!
+//! * `Dense` — the historical row-major `nb·na` slab (Sinkhorn, SSP, XLA
+//!   output stays here: those algorithms inherently produce dense
+//!   couplings);
+//! * `Csr` — the compact support form the push-relabel kernel emits:
+//!   `row_ptr`/`col_idx`/`vals` in canonical **(b-ascending, a-ascending)**
+//!   order, O(nnz) resident;
+//! * `Product` — the lazy product coupling ν⊗μ (`supply`/`demand` only,
+//!   O(nb+na) resident), the cancelled-at-phase-0 answer — a dense slab is
+//!   materialized only if a caller actually asks for `as_slice()`.
+//!
+//! Every fold below (`cost`, `cost_with`, marginals, `total_mass`,
+//! `support_size`) replicates the dense row-major accumulation order
+//! exactly. For CSR this is bit-identical because all stored values and
+//! costs are non-negative: every entry the sparse fold skips would have
+//! contributed `0.0 · c = +0.0`, and adding `+0.0` to a non-negative
+//! accumulator is an IEEE-754 identity. The `Product` folds iterate
+//! (b, a) row-major computing `supply[b] · demand[a]` in place — the same
+//! arithmetic the old eagerly-materialized product performed.
 
 use crate::core::cost::CostMatrix;
+use std::sync::OnceLock;
+
+/// Widen a stored CSR column id to a `usize` index.
+#[inline]
+fn ai(a: u32) -> usize {
+    a as usize // cast-ok: u32→usize is lossless on 32/64-bit targets
+}
 
 #[derive(Debug, Clone)]
+enum Repr {
+    /// Row-major `nb·na` slab.
+    Dense(Vec<f64>),
+    /// Compressed sparse rows in canonical (b-asc, a-asc) order.
+    /// `row_ptr.len() == nb + 1`; entries of row `b` live at
+    /// `row_ptr[b]..row_ptr[b+1]` with strictly ascending `col_idx`.
+    Csr { row_ptr: Vec<usize>, col_idx: Vec<u32>, vals: Vec<f64> },
+    /// The product coupling ν⊗μ: entry (b, a) is `supply[b] · demand[a]`,
+    /// never stored.
+    Product { supply: Vec<f64>, demand: Vec<f64> },
+}
+
+#[derive(Debug)]
 pub struct TransportPlan {
     pub nb: usize,
     pub na: usize,
-    flow: Vec<f64>,
+    repr: Repr,
+    /// Lazily materialized dense view for compact representations —
+    /// filled only when a caller insists on [`TransportPlan::as_slice`].
+    dense_cache: OnceLock<Vec<f64>>,
+}
+
+impl Clone for TransportPlan {
+    fn clone(&self) -> Self {
+        // The dense cache is a per-instance convenience, not state: a
+        // clone of a compact plan stays compact (O(nnz) clone cost).
+        Self { nb: self.nb, na: self.na, repr: self.repr.clone(), dense_cache: OnceLock::new() }
+    }
 }
 
 impl TransportPlan {
     pub fn zeros(nb: usize, na: usize) -> Self {
-        Self { nb, na, flow: vec![0.0; nb * na] }
+        Self { nb, na, repr: Repr::Dense(vec![0.0; nb * na]), dense_cache: OnceLock::new() }
     }
 
     /// The product coupling ν⊗μ — always feasible for probability
     /// marginals. The one plan every layer returns for a solve stopped
     /// at phase 0 (see `api::adapter` and the kernel drivers), so the
-    /// cancelled-answer shape is defined in exactly one place.
+    /// cancelled-answer shape is defined in exactly one place. Lazy: the
+    /// plan holds only the two marginal vectors (O(nb+na) bytes); the
+    /// n² slab exists only if someone calls [`TransportPlan::as_slice`].
     pub fn product(supply: &[f64], demand: &[f64]) -> Self {
-        let (nb, na) = (supply.len(), demand.len());
-        let mut plan = Self::zeros(nb, na);
-        for (b, &s) in supply.iter().enumerate() {
-            for (a, &d) in demand.iter().enumerate() {
-                plan.set(b, a, s * d);
+        Self {
+            nb: supply.len(),
+            na: demand.len(),
+            repr: Repr::Product { supply: supply.to_vec(), demand: demand.to_vec() },
+            dense_cache: OnceLock::new(),
+        }
+    }
+
+    // CONTRACT: sparse extraction order == dense fold order — rows must
+    // arrive b-ascending with strictly a-ascending columns, or every
+    // bit-identity claim between this plan and its dense twin breaks.
+    /// Build a plan directly in CSR form. Validates the canonical order
+    /// (b-ascending rows, strictly a-ascending columns), bounds, and that
+    /// every value is finite and non-negative — the preconditions the
+    /// bit-identical fold replication relies on.
+    pub fn from_csr(
+        nb: usize,
+        na: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        vals: Vec<f64>,
+    ) -> Result<Self, String> {
+        if row_ptr.len() != nb + 1 {
+            return Err(format!("row_ptr len {} != nb + 1 = {}", row_ptr.len(), nb + 1));
+        }
+        if row_ptr[0] != 0 || *row_ptr.last().unwrap_or(&0) != col_idx.len() {
+            return Err("row_ptr must start at 0 and end at nnz".into());
+        }
+        if col_idx.len() != vals.len() {
+            return Err(format!("col_idx len {} != vals len {}", col_idx.len(), vals.len()));
+        }
+        for b in 0..nb {
+            let (lo, hi) = (row_ptr[b], row_ptr[b + 1]);
+            if lo > hi || hi > col_idx.len() {
+                return Err(format!("row_ptr not monotone at row {b}"));
+            }
+            let mut prev: Option<u32> = None;
+            for i in lo..hi {
+                let a = col_idx[i];
+                if ai(a) >= na {
+                    return Err(format!("col {a} out of bounds (na={na}) in row {b}"));
+                }
+                if prev.is_some_and(|p| p >= a) {
+                    return Err(format!("columns not strictly ascending in row {b}"));
+                }
+                prev = Some(a);
+                let v = vals[i];
+                if !v.is_finite() || v < 0.0 {
+                    return Err(format!("value {v} at ({b},{a}) is not finite non-negative"));
+                }
             }
         }
-        plan
+        let repr = Repr::Csr { row_ptr, col_idx, vals };
+        Ok(Self { nb, na, repr, dense_cache: OnceLock::new() })
+    }
+
+    /// Which representation the plan currently holds — for diagnostics
+    /// and memory accounting (`"dense"`, `"csr"`, or `"product"`).
+    pub fn repr_kind(&self) -> &'static str {
+        match &self.repr {
+            Repr::Dense(_) => "dense",
+            Repr::Csr { .. } => "csr",
+            Repr::Product { .. } => "product",
+        }
+    }
+
+    /// The CSR triplet when the plan is in sparse form (`None` otherwise).
+    pub fn csr_view(&self) -> Option<(&[usize], &[u32], &[f64])> {
+        match &self.repr {
+            Repr::Csr { row_ptr, col_idx, vals } => Some((row_ptr, col_idx, vals)),
+            _ => None,
+        }
+    }
+
+    /// Resident bytes of the plan's representation (plus the lazy dense
+    /// cache if a caller forced it): O(n²)·8 dense, O(nnz) CSR,
+    /// O(nb+na) product. This is what `SolveStats::plan_state_bytes`
+    /// reports — the plan-side counterpart of `cost_state_bytes`.
+    pub fn state_bytes(&self) -> u64 {
+        let repr = match &self.repr {
+            Repr::Dense(flow) => flow.len() * 8,
+            Repr::Csr { row_ptr, col_idx, vals } => {
+                row_ptr.len() * 8 + col_idx.len() * 4 + vals.len() * 8
+            }
+            Repr::Product { supply, demand } => (supply.len() + demand.len()) * 8,
+        };
+        let cache = self.dense_cache.get().map_or(0, |c| c.len() * 8);
+        (repr + cache) as u64
+    }
+
+    /// Materialize the dense row-major slab for the current repr.
+    fn materialized(&self) -> Vec<f64> {
+        match &self.repr {
+            Repr::Dense(flow) => flow.clone(),
+            Repr::Csr { row_ptr, col_idx, vals } => {
+                let mut flow = vec![0.0; self.nb * self.na];
+                for b in 0..self.nb {
+                    for i in row_ptr[b]..row_ptr[b + 1] {
+                        flow[b * self.na + ai(col_idx[i])] = vals[i];
+                    }
+                }
+                flow
+            }
+            Repr::Product { supply, demand } => {
+                let mut flow = vec![0.0; self.nb * self.na];
+                for (b, &s) in supply.iter().enumerate() {
+                    for (a, &d) in demand.iter().enumerate() {
+                        flow[b * self.na + a] = s * d;
+                    }
+                }
+                flow
+            }
+        }
+    }
+
+    /// Switch a compact representation to the dense slab in place
+    /// (mutation entry points only — readers stay compact).
+    fn ensure_dense(&mut self) {
+        if matches!(self.repr, Repr::Dense(_)) {
+            return;
+        }
+        let flow = self.materialized();
+        self.repr = Repr::Dense(flow);
+        self.dense_cache = OnceLock::new();
     }
 
     #[inline]
     pub fn at(&self, b: usize, a: usize) -> f64 {
-        self.flow[b * self.na + a]
+        match &self.repr {
+            Repr::Dense(flow) => flow[b * self.na + a],
+            Repr::Csr { row_ptr, col_idx, vals } => {
+                let row = &col_idx[row_ptr[b]..row_ptr[b + 1]];
+                // cast-ok: stored columns are < na which fits u32 (checked
+                // at construction), so probing with a truncated too-large
+                // `a` could only miss — and callers pass a < na anyway
+                match row.binary_search(&(a as u32)) {
+                    Ok(i) => vals[row_ptr[b] + i],
+                    Err(_) => 0.0,
+                }
+            }
+            Repr::Product { supply, demand } => supply[b] * demand[a],
+        }
     }
 
+    /// Mutating writes densify a compact plan first — the builder API for
+    /// the inherently-dense solvers (Sinkhorn, SSP, XLA). The kernel
+    /// drivers never call these; they assemble CSR directly.
     #[inline]
     pub fn add(&mut self, b: usize, a: usize, amount: f64) {
-        self.flow[b * self.na + a] += amount;
+        self.ensure_dense();
+        if let Repr::Dense(flow) = &mut self.repr {
+            flow[b * self.na + a] += amount;
+        }
     }
 
     pub fn set(&mut self, b: usize, a: usize, amount: f64) {
-        self.flow[b * self.na + a] = amount;
+        self.ensure_dense();
+        if let Repr::Dense(flow) = &mut self.repr {
+            flow[b * self.na + a] = amount;
+        }
     }
 
+    /// Dense row-major view. **Materializes** a compact representation on
+    /// first call (cached for the plan's lifetime) — prefer the fold
+    /// methods below, which stay O(nnz) on sparse plans.
     pub fn as_slice(&self) -> &[f64] {
-        &self.flow
+        match &self.repr {
+            Repr::Dense(flow) => flow,
+            _ => self.dense_cache.get_or_init(|| self.materialized()),
+        }
     }
 
-    /// Transport cost Σ σ(b,a)·c(b,a).
+    /// Transport cost Σ σ(b,a)·c(b,a) — row-major fold, O(nnz) on CSR.
     pub fn cost(&self, costs: &CostMatrix) -> f64 {
-        self.flow
-            .iter()
-            .zip(costs.as_slice())
-            .map(|(&f, &c)| f * c as f64)
-            .sum()
+        self.cost_with(|b, a| costs.at(b, a) as f64)
+    }
+
+    /// The cost fold against an arbitrary per-entry cost function — how
+    /// implicit [`crate::core::provider::CostSource`]s price a plan
+    /// without a slab. Replicates the dense row-major fold order per
+    /// representation (CSR skips only exact-`+0.0` terms).
+    pub fn cost_with<F: FnMut(usize, usize) -> f64>(&self, mut cost: F) -> f64 {
+        match &self.repr {
+            Repr::Dense(flow) => {
+                let mut sum = 0.0;
+                for b in 0..self.nb {
+                    for a in 0..self.na {
+                        sum += flow[b * self.na + a] * cost(b, a);
+                    }
+                }
+                sum
+            }
+            Repr::Csr { row_ptr, col_idx, vals } => {
+                let mut sum = 0.0;
+                for b in 0..self.nb {
+                    for i in row_ptr[b]..row_ptr[b + 1] {
+                        sum += vals[i] * cost(b, ai(col_idx[i]));
+                    }
+                }
+                sum
+            }
+            Repr::Product { supply, demand } => {
+                let mut sum = 0.0;
+                for (b, &s) in supply.iter().enumerate() {
+                    for (a, &d) in demand.iter().enumerate() {
+                        sum += (s * d) * cost(b, a);
+                    }
+                }
+                sum
+            }
+        }
     }
 
     /// Row sums: total mass shipped out of each supply b.
     pub fn supply_marginal(&self) -> Vec<f64> {
-        (0..self.nb)
-            .map(|b| self.flow[b * self.na..(b + 1) * self.na].iter().sum())
-            .collect()
+        match &self.repr {
+            Repr::Dense(flow) => (0..self.nb)
+                .map(|b| flow[b * self.na..(b + 1) * self.na].iter().sum())
+                .collect(),
+            Repr::Csr { row_ptr, vals, .. } => (0..self.nb)
+                .map(|b| vals[row_ptr[b]..row_ptr[b + 1]].iter().sum())
+                .collect(),
+            Repr::Product { supply, demand } => supply
+                .iter()
+                .map(|&s| demand.iter().map(|&d| s * d).sum())
+                .collect(),
+        }
     }
 
-    /// Column sums: total mass received by each demand a.
+    /// Column sums: total mass received by each demand a (accumulated in
+    /// b-ascending order, matching the dense fold).
     pub fn demand_marginal(&self) -> Vec<f64> {
         let mut out = vec![0.0; self.na];
-        for b in 0..self.nb {
-            for a in 0..self.na {
-                out[a] += self.at(b, a);
+        match &self.repr {
+            Repr::Dense(flow) => {
+                for b in 0..self.nb {
+                    for (a, o) in out.iter_mut().enumerate() {
+                        *o += flow[b * self.na + a];
+                    }
+                }
+            }
+            Repr::Csr { row_ptr, col_idx, vals } => {
+                for b in 0..self.nb {
+                    for i in row_ptr[b]..row_ptr[b + 1] {
+                        out[ai(col_idx[i])] += vals[i];
+                    }
+                }
+            }
+            Repr::Product { supply, demand } => {
+                for &s in supply {
+                    for (o, &d) in out.iter_mut().zip(demand) {
+                        *o += s * d;
+                    }
+                }
             }
         }
         out
@@ -76,22 +336,46 @@ impl TransportPlan {
 
     /// Total mass moved.
     pub fn total_mass(&self) -> f64 {
-        self.flow.iter().sum()
+        match &self.repr {
+            Repr::Dense(flow) => flow.iter().sum(),
+            Repr::Csr { vals, .. } => vals.iter().sum(),
+            Repr::Product { supply, demand } => supply
+                .iter()
+                .map(|&s| demand.iter().map(|&d| s * d).sum::<f64>())
+                .sum(),
+        }
     }
 
     /// Number of non-zero entries — the paper advertises a *compact* plan
     /// (≤ na+nb−1 support for vertex-form solutions).
     pub fn support_size(&self) -> usize {
-        self.flow.iter().filter(|&&f| f > 0.0).count()
+        match &self.repr {
+            Repr::Dense(flow) => flow.iter().filter(|&&f| f > 0.0).count(),
+            Repr::Csr { vals, .. } => vals.iter().filter(|&&f| f > 0.0).count(),
+            Repr::Product { supply, demand } => supply
+                .iter()
+                .map(|&s| demand.iter().filter(|&&d| s * d > 0.0).count())
+                .sum(),
+        }
     }
 
     /// Check the plan is a valid transport plan for (supply, demand):
     /// non-negative, marginals within `tol` of bounds, all supply moved.
+    /// O(nnz + nb + na) on CSR plans.
     pub fn check(&self, supply: &[f64], demand: &[f64], tol: f64) -> Result<(), String> {
         if supply.len() != self.nb || demand.len() != self.na {
             return Err("marginal dimension mismatch".into());
         }
-        if self.flow.iter().any(|&f| f < -tol) {
+        let negative = match &self.repr {
+            Repr::Dense(flow) => flow.iter().any(|&f| f < -tol),
+            // zero entries outside the support can never fall below -tol
+            // (tol ≥ 0 for every caller), so scanning the values suffices
+            Repr::Csr { vals, .. } => vals.iter().any(|&f| f < -tol),
+            Repr::Product { supply: s, demand: d } => {
+                s.iter().any(|&sv| d.iter().any(|&dv| sv * dv < -tol))
+            }
+        };
+        if negative {
             return Err("negative flow".into());
         }
         for (b, (&got, &want)) in self.supply_marginal().iter().zip(supply).enumerate() {
@@ -151,5 +435,100 @@ mod tests {
         let mut p = TransportPlan::zeros(1, 1);
         p.add(0, 0, 2.0);
         assert!(p.check(&[2.0], &[1.0], 1e-9).is_err());
+    }
+
+    #[test]
+    fn csr_plan_matches_its_dense_twin_bit_for_bit() {
+        // same plan, both representations, every fold identical
+        let sparse = TransportPlan::from_csr(
+            3,
+            3,
+            vec![0, 2, 3, 5],
+            vec![0, 2, 1, 0, 2],
+            vec![0.125, 0.25, 0.375, 0.125, 0.125],
+        )
+        .unwrap();
+        let mut dense = TransportPlan::zeros(3, 3);
+        for b in 0..3 {
+            for a in 0..3 {
+                dense.set(b, a, sparse.at(b, a));
+            }
+        }
+        let c = CostMatrix::from_fn(3, 3, |b, a| ((b * 3 + a) % 4) as f32 / 4.0);
+        assert_eq!(sparse.cost(&c).to_bits(), dense.cost(&c).to_bits());
+        assert_eq!(sparse.supply_marginal(), dense.supply_marginal());
+        assert_eq!(sparse.demand_marginal(), dense.demand_marginal());
+        assert_eq!(sparse.total_mass().to_bits(), dense.total_mass().to_bits());
+        assert_eq!(sparse.support_size(), dense.support_size());
+        assert_eq!(sparse.as_slice(), dense.as_slice());
+        assert_eq!(sparse.repr_kind(), "csr");
+        assert_eq!(dense.repr_kind(), "dense");
+        assert!(sparse.state_bytes() < 3 * 3 * 8, "CSR without the forced cache stays compact");
+    }
+
+    #[test]
+    fn from_csr_rejects_malformed_input() {
+        // unsorted columns
+        assert!(TransportPlan::from_csr(1, 3, vec![0, 2], vec![2, 1], vec![0.5, 0.5]).is_err());
+        // duplicate columns
+        assert!(TransportPlan::from_csr(1, 3, vec![0, 2], vec![1, 1], vec![0.5, 0.5]).is_err());
+        // column out of bounds
+        assert!(TransportPlan::from_csr(1, 2, vec![0, 1], vec![2], vec![0.5]).is_err());
+        // row_ptr shape
+        assert!(TransportPlan::from_csr(2, 2, vec![0, 1], vec![0], vec![0.5]).is_err());
+        // negative value
+        assert!(TransportPlan::from_csr(1, 2, vec![0, 1], vec![0], vec![-0.5]).is_err());
+        // valid empty row is fine
+        let p = TransportPlan::from_csr(2, 2, vec![0, 0, 1], vec![1], vec![1.0]).unwrap();
+        assert_eq!(p.at(0, 1), 0.0);
+        assert_eq!(p.at(1, 1), 1.0);
+    }
+
+    #[test]
+    fn product_plan_is_lazy_and_exact() {
+        let supply = vec![0.25, 0.75];
+        let demand = vec![0.5, 0.25, 0.25];
+        let p = TransportPlan::product(&supply, &demand);
+        assert_eq!(p.repr_kind(), "product");
+        assert_eq!(p.state_bytes(), (2 + 3) * 8, "O(nb+na) before any dense access");
+        assert!((p.total_mass() - 1.0).abs() < 1e-12);
+        p.check(&supply, &demand, 1e-12).unwrap();
+        // eager twin for the bit-identity check
+        let mut dense = TransportPlan::zeros(2, 3);
+        for (b, &s) in supply.iter().enumerate() {
+            for (a, &d) in demand.iter().enumerate() {
+                dense.set(b, a, s * d);
+            }
+        }
+        let c = CostMatrix::from_fn(2, 3, |b, a| (b + a) as f32 / 4.0);
+        assert_eq!(p.cost(&c).to_bits(), dense.cost(&c).to_bits());
+        assert_eq!(p.supply_marginal(), dense.supply_marginal());
+        assert_eq!(p.demand_marginal(), dense.demand_marginal());
+        // as_slice materializes (and is counted by state_bytes thereafter)
+        assert_eq!(p.as_slice(), dense.as_slice());
+        assert!(p.state_bytes() >= (2 * 3) * 8);
+    }
+
+    #[test]
+    fn mutation_densifies_compact_reprs() {
+        let mut p = TransportPlan::from_csr(2, 2, vec![0, 1, 2], vec![0, 1], vec![0.5, 0.5])
+            .unwrap();
+        p.add(0, 1, 0.25);
+        assert_eq!(p.repr_kind(), "dense");
+        assert!((p.at(0, 1) - 0.25).abs() < 1e-15);
+        assert!((p.at(0, 0) - 0.5).abs() < 1e-15);
+        let mut q = TransportPlan::product(&[1.0], &[1.0]);
+        q.set(0, 0, 0.5);
+        assert_eq!(q.repr_kind(), "dense");
+        assert!((q.total_mass() - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn clone_keeps_compact_representation() {
+        let p = TransportPlan::from_csr(1, 2, vec![0, 1], vec![1], vec![1.0]).unwrap();
+        let _ = p.as_slice(); // force the cache on the original
+        let q = p.clone();
+        assert_eq!(q.repr_kind(), "csr");
+        assert_eq!(q.state_bytes(), 2 * 8 + 4 + 8, "clone drops the dense cache");
     }
 }

@@ -107,6 +107,21 @@ impl Workload {
         // panic-ok: random_simplex emits normalized positive masses
         OtInstance::new(costs, demand, supply).expect("valid masses")
     }
+
+    /// The implicit twin of [`Workload::ot_with_random_masses`]: the same
+    /// mass stream over provider-backed costs, so solves are byte-identical
+    /// to the dense OT instance while holding O(n) cost bytes. `None` for
+    /// workloads without a pure-function cost form.
+    pub fn implicit_ot_with_random_masses(
+        &self,
+        seed: u64,
+    ) -> Option<(Costs, Vec<f64>, Vec<f64>)> {
+        let costs = self.implicit_costs(seed)?;
+        let mut rng = Pcg32::with_stream(seed, 34);
+        let demand = random_simplex(costs.na(), &mut rng);
+        let supply = random_simplex(costs.nb(), &mut rng);
+        Some((costs, demand, supply))
+    }
 }
 
 // ---------------------------------------------------------------------------

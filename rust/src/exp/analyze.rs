@@ -4,9 +4,10 @@
 //! express, all centered on the kernel's correctness contracts:
 //!
 //! * `safety-comment` — every `unsafe` carries a `// SAFETY:` comment;
-//! * `kernel-cast` — no bare narrowing `as` casts in `core/kernel/**` or
-//!   `core/quantize.rs` (truncation at large `n` silently corrupts slot
-//!   indices); use the checked helpers or annotate `// cast-ok: <reason>`;
+//! * `kernel-cast` — no bare narrowing `as` casts in `core/kernel/**`,
+//!   `core/quantize.rs`, or `core/transport.rs` (truncation at large `n`
+//!   silently corrupts slot indices and CSR column ids); use the checked
+//!   helpers or annotate `// cast-ok: <reason>`;
 //! * `float-eq` — no `f64`/`f32` `==`/`!=` outside annotated
 //!   exact-replication sites (`// float-eq-ok: <reason>`);
 //! * `no-panic` — no `unwrap`/`expect`/`panic!` family in library solve
@@ -20,7 +21,12 @@
 //!   commits against the active worklist must carry a
 //!   `// CONTRACT: round-structured accept order` marker, so a refactor
 //!   that breaks determinism fails this gate instead of the golden suite
-//!   several PRs later.
+//!   several PRs later. A second marker guards the sparse-plan path: any
+//!   function in `core/kernel/arena.rs` or `core/transport.rs` that
+//!   builds or emits CSR plan data must carry a
+//!   `// CONTRACT: sparse extraction order == dense fold order` marker —
+//!   CSR entries must be visited (b asc, a asc) or the compact plan's
+//!   cost/marginal folds silently drift from their dense twin.
 //!
 //! Findings can be suppressed through `rust/analyze-allow.toml`
 //! (`[[allow]]` entries; a reason is mandatory, unused entries are flagged
@@ -39,6 +45,16 @@ pub const CONTRACT_MARKER: &str = "CONTRACT: round-structured accept order";
 /// round-structured active worklist (see `core/kernel/arena.rs`).
 const CONTRACT_TRIGGERS: [&str; 4] =
     ["accept_one(", "sequential_sweep(", "vector_sweep", "hybrid_sweep"];
+
+/// The marker the sparse-plan byte-identity tripwire requires: CSR
+/// extraction and assembly must visit entries in the dense row-major
+/// fold order (b ascending, a ascending), or `TransportPlan::cost` and
+/// the certificates silently drift from the dense twin.
+pub const SPARSE_CONTRACT_MARKER: &str = "CONTRACT: sparse extraction order == dense fold order";
+
+/// Body tokens that mean a function builds or emits CSR plan data
+/// (see `core/kernel/arena.rs` and `core/transport.rs`).
+const SPARSE_CONTRACT_TRIGGERS: [&str; 2] = ["extract_plan_sparse(", "from_csr("];
 
 /// Cast targets the kernel-cast rule rejects: the narrowing or
 /// sign-changing targets plus `f32` (lossy), including `usize` so index
@@ -353,7 +369,7 @@ pub fn analyze_source(rel: &str, text: &str) -> Vec<Finding> {
             }
             let body = code[span.start..=span.end.min(code.len() - 1)].join("\n");
             if CONTRACT_TRIGGERS.iter().any(|t| body.contains(t))
-                && !span_has_marker(&raw, span.start, span.end)
+                && !span_has_marker(&raw, span.start, span.end, CONTRACT_MARKER)
             {
                 out.push(finding(
                     "contract-marker",
@@ -361,6 +377,30 @@ pub fn analyze_source(rel: &str, text: &str) -> Vec<Finding> {
                     format!(
                         "fn `{}` stages or commits against the active worklist but lacks a \
                          `// {CONTRACT_MARKER}` marker",
+                        span.name
+                    ),
+                ));
+            }
+        }
+    }
+
+    // contract-marker (sparse): CSR extraction/assembly must declare the
+    // dense-fold-order contract, same mechanics as the worklist tripwire.
+    if sparse_contract_scope(rel) {
+        for span in fn_spans(&code) {
+            if masked[span.start] {
+                continue;
+            }
+            let body = code[span.start..=span.end.min(code.len() - 1)].join("\n");
+            if SPARSE_CONTRACT_TRIGGERS.iter().any(|t| body.contains(t))
+                && !span_has_marker(&raw, span.start, span.end, SPARSE_CONTRACT_MARKER)
+            {
+                out.push(finding(
+                    "contract-marker",
+                    span.start,
+                    format!(
+                        "fn `{}` builds or emits CSR plan data but lacks a \
+                         `// {SPARSE_CONTRACT_MARKER}` marker",
                         span.name
                     ),
                 ));
@@ -376,7 +416,7 @@ pub fn analyze_source(rel: &str, text: &str) -> Vec<Finding> {
 // ---------------------------------------------------------------------
 
 fn kernel_cast_scope(rel: &str) -> bool {
-    rel.starts_with("core/kernel/") || rel == "core/quantize.rs"
+    rel.starts_with("core/kernel/") || rel == "core/quantize.rs" || rel == "core/transport.rs"
 }
 
 fn no_panic_scope(rel: &str) -> bool {
@@ -393,6 +433,12 @@ fn contract_scope(rel: &str) -> bool {
             | "core/kernel/vector.rs"
             | "core/kernel/hybrid.rs"
     )
+}
+
+/// Files where CSR plan data is extracted or assembled — the sparse
+/// byte-identity contract's blast radius.
+fn sparse_contract_scope(rel: &str) -> bool {
+    matches!(rel, "core/kernel/arena.rs" | "core/transport.rs")
 }
 
 // ---------------------------------------------------------------------
@@ -774,9 +820,9 @@ fn fn_def_name(code: &str) -> Option<String> {
 
 /// Marker anywhere in the fn span or in its contiguous leading
 /// comment/attribute block.
-fn span_has_marker(raw: &[&str], start: usize, end: usize) -> bool {
+fn span_has_marker(raw: &[&str], start: usize, end: usize, marker: &str) -> bool {
     let hi = end.min(raw.len().saturating_sub(1));
-    if raw[start..=hi].iter().any(|l| l.contains(CONTRACT_MARKER)) {
+    if raw[start..=hi].iter().any(|l| l.contains(marker)) {
         return true;
     }
     let mut k = start;
@@ -784,7 +830,7 @@ fn span_has_marker(raw: &[&str], start: usize, end: usize) -> bool {
         k -= 1;
         let t = raw[k].trim();
         if t.starts_with("//") || t.starts_with("#[") {
-            if t.contains(CONTRACT_MARKER) {
+            if t.contains(marker) {
                 return true;
             }
         } else {
@@ -927,6 +973,30 @@ mod tests {
         // a fn that never touches the worklist needs no marker
         let other = "pub fn threshold(&self) -> u64 {\n    self.q.len()\n}\n";
         assert!(analyze_source("core/kernel/scalar.rs", other).is_empty());
+    }
+
+    #[test]
+    fn sparse_contract_marker_tripwire() {
+        let bad = "pub fn assemble(&self) -> UnitFlowCsr {\n    self.extract_plan_sparse()\n}\n";
+        let hits = analyze_source("core/kernel/arena.rs", bad);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, "contract-marker");
+        assert!(hits[0].message.contains("assemble"));
+        assert!(hits[0].message.contains(SPARSE_CONTRACT_MARKER));
+        let ok = format!("// {SPARSE_CONTRACT_MARKER}\n{bad}");
+        assert!(analyze_source("core/kernel/arena.rs", &ok).is_empty());
+        // from_csr assembly in transport.rs is guarded by the same rule
+        let bad2 = "pub fn build(v: Vec<f64>) -> TransportPlan {\n    TransportPlan::from_csr(1, 1, vec![0, 1], vec![0], v).unwrap_or_default()\n}\n";
+        let hits2 = analyze_source("core/transport.rs", bad2);
+        assert!(
+            hits2.iter().any(|f| f.rule == "contract-marker"),
+            "{hits2:?}"
+        );
+        // the worklist marker does not satisfy the sparse rule
+        let wrong = format!("// {CONTRACT_MARKER}\n{bad}");
+        assert_eq!(analyze_source("core/kernel/arena.rs", &wrong).len(), 1);
+        // out of scope: the sparse triggers fire nowhere else
+        assert!(analyze_source("solvers/mod.rs", bad).is_empty());
     }
 
     #[test]

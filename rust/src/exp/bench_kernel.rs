@@ -82,6 +82,10 @@ pub struct BenchRecord {
     /// mirrors vs the implicit block-min cache) — the memory half of the
     /// bench trajectory.
     pub cost_state_bytes: u64,
+    /// Resident bytes of the answer's transport plan (O(nnz) for the CSR
+    /// plans kernel OT solves emit, nb·na·8 for dense baselines).
+    /// Assignment cells report 0 — their answer is a matching, not a plan.
+    pub plan_state_bytes: u64,
     /// Cost representation the cell solved ("dense" or "points").
     pub costs: &'static str,
     /// Error string when the cell could not run (engine unavailable).
@@ -113,6 +117,7 @@ pub fn run(cfg: &BenchKernelConfig) -> Vec<BenchRecord> {
                 let mut rounds = 0;
                 let mut free = 0;
                 let mut cost_bytes = 0;
+                let mut plan_bytes = 0;
                 let mut error = None;
                 for _ in 0..cfg.reps.max(1) {
                     let sw = Stopwatch::start();
@@ -123,6 +128,7 @@ pub fn run(cfg: &BenchKernelConfig) -> Vec<BenchRecord> {
                             rounds = sol.stats.rounds;
                             free = sol.stats.total_free_processed;
                             cost_bytes = sol.stats.cost_state_bytes;
+                            plan_bytes = sol.stats.plan_state_bytes;
                         }
                         Err(e) => {
                             error = Some(e.to_string());
@@ -144,6 +150,7 @@ pub fn run(cfg: &BenchKernelConfig) -> Vec<BenchRecord> {
                     rounds,
                     total_free_processed: free,
                     cost_state_bytes: cost_bytes,
+                    plan_state_bytes: plan_bytes,
                     costs: costs_mode,
                     error,
                 });
@@ -173,6 +180,7 @@ pub fn to_json(cfg: &BenchKernelConfig, records: &[BenchRecord]) -> Json {
                 ("rounds", Json::Num(r.rounds as f64)),
                 ("total_free_processed", Json::Num(r.total_free_processed as f64)),
                 ("cost_state_bytes", Json::Num(r.cost_state_bytes as f64)),
+                ("plan_state_bytes", Json::Num(r.plan_state_bytes as f64)),
                 ("costs", Json::Str(r.costs.to_string())),
             ];
             if let Some(e) = &r.error {
@@ -363,7 +371,7 @@ pub fn compare_table(cells: &[CompareCell]) -> String {
 /// Fixed-width table for CLI output.
 pub fn table(records: &[BenchRecord]) -> String {
     let mut out = String::from(
-        "engine           n      eps    ns/op           phases  rounds  cost-state-bytes\n",
+        "engine           n      eps    ns/op           phases  rounds  cost-state-bytes  plan-state-bytes\n",
     );
     for r in records {
         match &r.error {
@@ -372,8 +380,16 @@ pub fn table(records: &[BenchRecord]) -> String {
                 r.engine, r.n, r.eps
             )),
             None => out.push_str(&format!(
-                "{:<16} {:<6} {:<6} {:<15.0} {:<7} {:<7} {} ({})\n",
-                r.engine, r.n, r.eps, r.ns_per_op, r.phases, r.rounds, r.cost_state_bytes, r.costs
+                "{:<16} {:<6} {:<6} {:<15.0} {:<7} {:<7} {:<11} ({})  {}\n",
+                r.engine,
+                r.n,
+                r.eps,
+                r.ns_per_op,
+                r.phases,
+                r.rounds,
+                r.cost_state_bytes,
+                r.costs,
+                r.plan_state_bytes
             )),
         }
     }
@@ -407,7 +423,16 @@ mod tests {
             parsed.get("records").unwrap().as_arr().unwrap().len(),
             2
         );
+        // assignment cells answer with a matching, not a plan — the
+        // plan-bytes column exists but is honestly zero for them
+        for rec in parsed.get("records").unwrap().as_arr().unwrap() {
+            assert_eq!(
+                rec.get("plan_state_bytes").and_then(|v| v.as_f64()),
+                Some(0.0)
+            );
+        }
         assert!(table(&records).contains("native-seq"));
+        assert!(table(&records).contains("plan-state-bytes"));
     }
 
     #[test]

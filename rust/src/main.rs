@@ -194,27 +194,45 @@ fn cmd_ot(args: &Args) -> i32 {
         },
     };
     let config = SolverConfig::default();
-    let problem = Problem::Ot(workload(args, n).ot_with_random_masses(seed));
+    // `--workload points` (alias `implicit`) solves the Fig1 point cloud
+    // through its CostProvider with the same random masses: the kernel
+    // holds O(n²/8) block-min bytes and the answer is an O(nnz) CSR plan —
+    // no nb·na slab on either side of the solve.
+    let wl_name = args.get_or("workload", "fig1");
+    let problem = if wl_name == "points" || wl_name == "implicit" {
+        let (costs, demand, supply) = Workload::Fig1 { n }
+            .implicit_ot_with_random_masses(seed)
+            .expect("fig1 has an implicit form");
+        Problem::implicit_ot(costs, demand, supply).expect("valid masses")
+    } else {
+        Problem::Ot(workload(args, n).ot_with_random_masses(seed))
+    };
     match solvers.solve(key, &config, &problem, &SolveRequest::new(eps)) {
         Ok(sol) => {
             let support = sol.plan().map(|p| p.support_size()).unwrap_or(0);
+            let repr = sol.plan().map(|p| p.repr_kind()).unwrap_or("-");
             println!(
-                "OT n={n} eps={eps} engine={key}: cost={:.6} phases={} support={} time={:.3}s {}",
+                "OT n={n} eps={eps} engine={key}: cost={:.6} phases={} support={} plan={repr} \
+                 time={:.3}s cost-state-bytes={} plan-state-bytes={} {}",
                 sol.cost,
                 sol.stats.phases,
                 support,
                 sol.stats.seconds,
+                sol.stats.cost_state_bytes,
+                sol.stats.plan_state_bytes,
                 sol.stats.notes.join(" ")
             );
             if args.flag("exact") && key != "ssp-exact" {
+                // the exact oracle is slab-bound: hand it a dense twin
+                let dense = problem.to_dense().expect("materializable for the exact oracle");
                 let ex = solvers
-                    .solve("ssp-exact", &config, &problem, &SolveRequest::new(0.0))
+                    .solve("ssp-exact", &config, &dense, &SolveRequest::new(0.0))
                     .expect("exact baseline");
                 println!(
                     "exact={:.6} additive-error={:.6} (guarantee ε·c_max = {:.6})",
                     ex.cost,
                     sol.cost - ex.cost,
-                    eps * problem.costs().max() as f64
+                    eps * problem.max_cost()
                 );
             }
             0

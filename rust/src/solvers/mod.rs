@@ -43,6 +43,12 @@ pub struct SolveStats {
     /// the vector backend reports only the O(n²/8) block-min cache — the
     /// no-slab acceptance gate asserts on this. 0 for non-kernel engines.
     pub cost_state_bytes: u64,
+    /// Resident bytes of the returned transport plan's representation
+    /// (`TransportPlan::state_bytes`): O(nnz) for the kernel engines'
+    /// CSR plans, O(nb+na) for the lazy cancelled-answer product, and
+    /// the full nb·na·8 slab for the inherently-dense solvers (Sinkhorn,
+    /// SSP, XLA). 0 for assignment solves, which return no plan.
+    pub plan_state_bytes: u64,
     /// Free-form solver-specific notes (e.g. "underflow" for Sinkhorn).
     pub notes: Vec<String>,
 }
@@ -88,17 +94,38 @@ pub trait OtSolver {
 }
 
 /// Convert a perfect matching into the uniform-mass transport plan it
-/// induces (each matched edge carries 1/n mass).
+/// induces (each matched edge carries 1/n mass). Built directly in CSR
+/// form — a matching plan has at most one entry per supply row, so the
+/// dense nb·na slab would be pure waste.
 pub fn matching_to_plan(m: &Matching) -> TransportPlan {
-    let n = m.nb();
-    let mut plan = TransportPlan::zeros(m.nb(), m.na());
-    let unit = 1.0 / n as f64;
-    for (b, &a) in m.match_b.iter().enumerate() {
+    let (nb, na) = (m.nb(), m.na());
+    let unit = 1.0 / nb as f64;
+    let mut row_ptr = Vec::with_capacity(nb + 1);
+    let mut col_idx = Vec::with_capacity(nb);
+    let mut vals = Vec::with_capacity(nb);
+    row_ptr.push(0);
+    for &a in &m.match_b {
         if a >= 0 {
-            plan.add(b, a as usize, unit);
+            col_idx.push(a as u32);
+            vals.push(unit);
+        }
+        row_ptr.push(col_idx.len());
+    }
+    // a consistent matching always yields valid canonical CSR; an
+    // inconsistent one (a ≥ na) falls back to the dense builder rather
+    // than panicking in a conversion helper
+    match TransportPlan::from_csr(nb, na, row_ptr, col_idx, vals) {
+        Ok(plan) => plan,
+        Err(_) => {
+            let mut plan = TransportPlan::zeros(nb, na);
+            for (b, &a) in m.match_b.iter().enumerate() {
+                if a >= 0 {
+                    plan.add(b, a as usize, unit);
+                }
+            }
+            plan
         }
     }
-    plan
 }
 
 #[cfg(test)]
@@ -111,6 +138,8 @@ mod tests {
         m.link(0, 1);
         m.link(1, 0);
         let p = matching_to_plan(&m);
+        assert_eq!(p.repr_kind(), "csr", "matching plans are compact");
+        assert_eq!(p.support_size(), 2);
         assert!((p.at(0, 1) - 0.5).abs() < 1e-12);
         assert!((p.at(1, 0) - 0.5).abs() < 1e-12);
         assert!((p.total_mass() - 1.0).abs() < 1e-12);

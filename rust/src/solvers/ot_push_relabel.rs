@@ -30,6 +30,16 @@ pub fn ot_phase_cap(eps: f64) -> usize {
     (8.0 * (1.0 + 2.0 * eps) / (eps * eps)).ceil() as usize + 16
 }
 
+/// Accumulate `amount` at column `a` of a sorted sparse row — the CSR
+/// equivalent of `flow[b·na+a] += amount` on the old dense slab (same
+/// single f64 addition when the entry exists).
+fn row_add(row: &mut Vec<(u32, f64)>, a: u32, amount: f64) {
+    match row.binary_search_by_key(&a, |&(c, _)| c) {
+        Ok(i) => row[i].1 += amount,
+        Err(i) => row.insert(i, (a, amount)),
+    }
+}
+
 /// Drive any [`FlowKernel`] backend through a full OT solve: θ-scale,
 /// loop phases under the cap with `ctl` polled at every boundary, then
 /// complete (leftover units + sub-unit residuals) into a feasible plan.
@@ -63,8 +73,9 @@ pub(crate) fn drive_ot(
 
 /// [`drive_ot`] over either cost representation: masses are plain O(n)
 /// marginal vectors, costs stream through the [`CostSource`] — an
-/// implicit OT solve holds no O(n²) cost state (the plan itself stays a
-/// dense matrix; sparsifying plans is a separate concern).
+/// implicit OT solve holds no O(n²) cost state, and since PR 8 the plan
+/// comes back in O(nnz) CSR form too (assembled below straight from
+/// [`FlowKernel::extract_plan_sparse`]; no nb·na slab on the solve path).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn drive_ot_src(
     kernel: &mut dyn FlowKernel,
@@ -83,17 +94,20 @@ pub(crate) fn drive_ot_src(
     // and the arena init entirely and ship the feasible product coupling
     // ν⊗μ — the same cancelled-at-phase-0 answer the adapter layer uses.
     if ctl.should_stop() {
+        // `product` is lazy since PR 8: O(nb+na) resident, never an n²
+        // slab unless a caller later forces `as_slice()`.
         let plan = TransportPlan::product(supply, demand);
         let cost = src.plan_cost(&plan);
         return Ok(OtSolution {
-            plan,
             cost,
             duals: None,
             stats: SolveStats {
                 seconds: sw.elapsed_secs(),
+                plan_state_bytes: plan.state_bytes(),
                 notes: vec![CANCELLED_NOTE.to_string()],
                 ..Default::default()
             },
+            plan,
         });
     }
     let scaled = ScaledOtInstance::from_parts(supply, demand, nb.max(na), eps_mass);
@@ -149,10 +163,16 @@ pub(crate) fn drive_ot_src(
 
     // Completion: remaining free supply units go to any demand with
     // residual unit capacity (first fit — the paper's "arbitrarily").
-    let mut flow = kernel.unit_flow();
+    // The solved flow leaves the arena already sparse (canonical-order
+    // CSR, no nb·na densification); completion is recorded as a sparse
+    // (b, a, units) list. The global first-fit cursor only moves forward,
+    // so the list arrives b-ascending with strictly a-ascending entries
+    // per row — mergeable against the CSR in one pass.
+    let base = kernel.extract_plan_sparse();
     let mut a_free = kernel.arena().a_free().to_vec();
     let b_free = kernel.arena().b_free();
     let mut cursor = 0usize;
+    let mut extra: Vec<(usize, u32, u64)> = Vec::new();
     for b in 0..nb {
         let mut need = b_free[b];
         while need > 0 {
@@ -165,25 +185,56 @@ pub(crate) fn drive_ot_src(
                 ));
             }
             let k = need.min(a_free[cursor]);
-            flow[b * na + cursor] += k;
+            extra.push((b, cursor as u32, k));
             a_free[cursor] -= k;
             need -= k;
         }
     }
 
-    // Units → mass, then ship the sub-unit supply residuals into real
-    // remaining demand capacity (greedy by capacity; ≤ ε/4 mass total).
-    let mut plan = TransportPlan::zeros(nb, na);
+    // Units → mass in canonical order: merge each solved CSR row with its
+    // completion entries (both a-ascending), scaling units by 1/θ exactly
+    // as the dense path did — a completion unit landing on an existing
+    // entry sums in units first, so the produced value is bit-identical
+    // to the old `flow[b·na+a] += k; f as f64 * inv` slab arithmetic.
     let inv = 1.0 / scaled.theta;
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(nb);
+    let mut ei = 0usize;
     for b in 0..nb {
-        for a in 0..na {
-            let f = flow[b * na + a];
-            if f > 0 {
-                plan.set(b, a, f as f64 * inv);
+        let (lo, hi) = (base.row_ptr[b], base.row_ptr[b + 1]);
+        let mut row: Vec<(u32, f64)> = Vec::with_capacity(hi - lo + 1);
+        let mut i = lo;
+        while ei < extra.len() && extra[ei].0 == b {
+            let (_, a, k) = extra[ei];
+            while i < hi && base.col_idx[i] < a {
+                row.push((base.col_idx[i], base.units[i] as f64 * inv));
+                i += 1;
             }
+            if i < hi && base.col_idx[i] == a {
+                row.push((a, (base.units[i] + k) as f64 * inv));
+                i += 1;
+            } else {
+                row.push((a, k as f64 * inv));
+            }
+            ei += 1;
+        }
+        while i < hi {
+            row.push((base.col_idx[i], base.units[i] as f64 * inv));
+            i += 1;
+        }
+        rows.push(row);
+    }
+
+    // Ship the sub-unit supply residuals into real remaining demand
+    // capacity (greedy by capacity; ≤ ε/4 mass total). `received` is
+    // accumulated per column in b-ascending order — the same fold
+    // `demand_marginal` runs on the dense slab, so every comparison below
+    // sees bit-identical values.
+    let mut received = vec![0.0; na];
+    for row in &rows {
+        for &(a, v) in row {
+            received[a as usize] += v;
         }
     }
-    let mut received = plan.demand_marginal();
     for b in 0..nb {
         let mut resid = scaled.supply_residual[b];
         if resid <= 0.0 {
@@ -193,7 +244,7 @@ pub(crate) fn drive_ot_src(
             let cap = demand[a] - received[a];
             if cap > 1e-15 {
                 let k = resid.min(cap);
-                plan.add(b, a, k);
+                row_add(&mut rows[b], a as u32, k);
                 received[a] += k;
                 resid -= k;
                 if resid <= 1e-18 {
@@ -203,9 +254,25 @@ pub(crate) fn drive_ot_src(
         }
         // tiny float leftovers: dump on the last demand node
         if resid > 0.0 {
-            plan.add(b, na - 1, resid);
+            row_add(&mut rows[b], (na - 1) as u32, resid);
         }
     }
+
+    // Flatten into the canonical-order CSR plan (validated on entry).
+    let nnz: usize = rows.iter().map(Vec::len).sum();
+    let mut row_ptr = Vec::with_capacity(nb + 1);
+    let mut col_idx = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz);
+    row_ptr.push(0);
+    for row in &rows {
+        for &(a, v) in row {
+            col_idx.push(a);
+            vals.push(v);
+        }
+        row_ptr.push(col_idx.len());
+    }
+    let plan = TransportPlan::from_csr(nb, na, row_ptr, col_idx, vals)
+        .map_err(|e| OtprError::Infeasible(format!("sparse plan assembly: {e}")))?;
 
     let cost = src.plan_cost(&plan);
     let arena = kernel.arena();
@@ -217,7 +284,6 @@ pub(crate) fn drive_ot_src(
         notes.push(format!("warm_skip={levels_skipped}"));
     }
     Ok(OtSolution {
-        plan,
         cost,
         duals: Some(kernel.duals()),
         stats: SolveStats {
@@ -231,8 +297,10 @@ pub(crate) fn drive_ot_src(
             // mid-schedule must not report levels that never ran
             eps_levels: levels_run.max(1),
             cost_state_bytes: arena.cost_state_bytes(),
+            plan_state_bytes: plan.state_bytes(),
             notes,
         },
+        plan,
     })
 }
 

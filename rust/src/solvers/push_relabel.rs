@@ -178,6 +178,8 @@ pub(crate) fn drive_assignment_src(
             // mid-schedule must not report levels that never ran
             eps_levels: levels_run.max(1),
             cost_state_bytes: arena.cost_state_bytes(),
+            // assignment solves return a matching, not a plan
+            plan_state_bytes: 0,
             notes,
         },
     })

@@ -6,7 +6,9 @@
 use std::fs;
 use std::path::PathBuf;
 
-use otpr::exp::analyze::{analyze_source, run, Allowlist, CONTRACT_MARKER};
+use otpr::exp::analyze::{
+    analyze_source, run, Allowlist, CONTRACT_MARKER, SPARSE_CONTRACT_MARKER,
+};
 
 fn rules_of(rel: &str, src: &str) -> Vec<&'static str> {
     analyze_source(rel, src).into_iter().map(|f| f.rule).collect()
@@ -197,6 +199,49 @@ fn hybrid_backend_is_covered_by_the_contract_tripwire() {
         "// {CONTRACT_MARKER}\nfn run_phase(&mut self) {{\n    hybrid_sweep(view, acts, pl, ll, el, rs);\n}}\n"
     );
     assert!(rules_of("core/kernel/hybrid.rs", &marked).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// contract-marker, sparse-plan flavor (arena.rs + transport.rs, PR 8)
+// ---------------------------------------------------------------------
+
+/// CSR extraction/assembly without the sparse fold-order marker is
+/// flagged in both files of its scope, and the worklist marker does NOT
+/// substitute — the two contracts are distinct invariants.
+#[test]
+fn csr_fn_without_sparse_contract_marker_is_flagged() {
+    let extract = "pub fn plan(&self) -> UnitFlowCsr {\n    self.extract_plan_sparse()\n}\n";
+    let f = analyze_source("core/kernel/arena.rs", extract);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "contract-marker");
+    assert!(f[0].message.contains("plan"), "{}", f[0].message);
+    assert!(f[0].message.contains(SPARSE_CONTRACT_MARKER), "{}", f[0].message);
+
+    let assemble = "pub fn build(n: usize) -> Result<TransportPlan, String> {\n    TransportPlan::from_csr(n, n, vec![0; n + 1], Vec::new(), Vec::new())\n}\n";
+    assert_eq!(rules_of("core/transport.rs", assemble), vec!["contract-marker"]);
+
+    // the (different) worklist marker does not satisfy the sparse rule
+    let wrong = format!("// {CONTRACT_MARKER}\n{extract}");
+    assert_eq!(rules_of("core/kernel/arena.rs", &wrong), vec!["contract-marker"]);
+
+    // same code outside the sparse scope is not checked
+    assert!(rules_of("solvers/ot_push_relabel.rs", extract).is_empty());
+    assert!(rules_of("core/kernel/mod.rs", extract).is_empty());
+}
+
+#[test]
+fn sparse_contract_marker_above_or_inside_the_fn_passes() {
+    let above = format!(
+        "// {SPARSE_CONTRACT_MARKER}\npub fn plan(&self) -> UnitFlowCsr {{\n    self.extract_plan_sparse()\n}}\n"
+    );
+    assert!(rules_of("core/kernel/arena.rs", &above).is_empty());
+    let inside = format!(
+        "pub fn plan(&self) -> UnitFlowCsr {{\n    // {SPARSE_CONTRACT_MARKER}\n    self.extract_plan_sparse()\n}}\n"
+    );
+    assert!(rules_of("core/kernel/arena.rs", &inside).is_empty());
+    // a fn that never touches CSR data needs no marker
+    let clean = "pub fn nnz(&self) -> usize {\n    self.vals.len()\n}\n";
+    assert!(rules_of("core/transport.rs", clean).is_empty());
 }
 
 // ---------------------------------------------------------------------

@@ -288,6 +288,42 @@ fn tsan_ot_masses_hybrid_matches_scalar() {
     }
 }
 
+/// Sparse plan extraction after a threaded OT solve (PR 8): the CSR
+/// walk reads the pooled cluster edge lists the fan-out wrote, so TSan
+/// verifies the workers' writes are all visible (happens-before the
+/// extraction) — and the CSR must agree with both the scalar twin's CSR
+/// and the dense `unit_flow` slab entry-for-entry.
+#[test]
+fn tsan_hybrid_sparse_extraction_matches_scalar() {
+    let n = 16;
+    let costs = random_costs(n, 21);
+    let supply: Vec<u64> = (0..n as u64).map(|b| 2 + b % 4).collect();
+    let demand: Vec<u64> = (0..n as u64).map(|a| 4 + a % 3).collect();
+    let mut ks = ScalarKernel::new();
+    ks.init(&costs, 0.15, Some((&supply[..], &demand[..])));
+    ks.run_to_termination(100_000).unwrap();
+    let scalar_csr = ks.extract_plan_sparse();
+    for threads in [4usize, 8] {
+        let mut kh = HybridKernel::new(threads);
+        kh.init(&costs, 0.15, Some((&supply[..], &demand[..])));
+        kh.run_to_termination(100_000).unwrap();
+        let csr = kh.extract_plan_sparse();
+        assert_eq!(csr, scalar_csr, "t{threads}");
+        // CSR vs the dense slab: same units at the same (b, a) cells
+        let flow = kh.unit_flow();
+        let mut total = 0u64;
+        for b in 0..n {
+            for i in csr.row_ptr[b]..csr.row_ptr[b + 1] {
+                let a = csr.col_idx[i] as usize;
+                assert_eq!(csr.units[i], flow[b * n + a], "t{threads} b={b} a={a}");
+                assert!(csr.units[i] > 0, "CSR stores support entries only");
+                total += csr.units[i];
+            }
+        }
+        assert_eq!(total, flow.iter().sum::<u64>(), "t{threads}: no cell missed");
+    }
+}
+
 /// OT masses exercise the cluster-slot accept path under the thread
 /// fan-out (Lemma 4.1 slot state is the shared structure TSan watches).
 #[test]

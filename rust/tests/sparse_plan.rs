@@ -1,0 +1,332 @@
+//! Sparse transport plans end-to-end (PR 8): kernel OT solves come back
+//! as canonical-order CSR, cancelled solves as a lazy product coupling,
+//! and both are **bit-identical** to the dense slab they replace —
+//! identical cost folds, identical marginals, identical certificates —
+//! while the resident plan state drops from O(n²) to O(nnz) / O(n).
+//!
+//! Covers the PR-8 acceptance gates:
+//! * dense-vs-CSR equivalence on the golden OT corpus for all six kernel
+//!   engines (dense and implicit problems, warm variants included);
+//! * a property sweep asserting extracted support compactness on
+//!   feasible solves (≤ θ + O(nb+na) entries, never the dense slab);
+//! * the n=4096 allocation-free cancellation regression (lazy product,
+//!   O(nb+na) plan bytes — the old code allocated the n² slab even for
+//!   a solve that never ran);
+//! * the n=4096 implicit OT solve with O(n) plan bytes on top of the
+//!   PR-5 no-cost-slab guarantee;
+//! * `matching_to_plan` / `from_csr` construction contracts.
+
+use otpr::api::{CancelToken, Problem, SolveRequest, SolverConfig, SolverRegistry};
+use otpr::core::certify::certify;
+use otpr::core::transport::TransportPlan;
+use otpr::data::workloads::{Workload, GOLDEN_SPECS};
+use otpr::prop_assert;
+use otpr::solvers::matching_to_plan;
+use otpr::util::proptest_mini::{check, PropConfig};
+
+const KERNEL_ENGINES: [&str; 6] = [
+    "native-seq",
+    "native-parallel",
+    "native-vector",
+    "native-hybrid",
+    "native-seq-warm",
+    "native-vector-warm",
+];
+
+/// θ as the mass-scaling layer computes it for an overall-ε OT request
+/// (`ScaledOtInstance::from_parts` with eps_mass = the request ε).
+fn theta(nb: usize, na: usize, eps: f64) -> f64 {
+    4.0 * nb.max(na) as f64 / eps
+}
+
+/// Rebuild `plan` as a dense-slab twin through the random-access reader,
+/// then assert every fold the old dense representation answered is
+/// bit-identical on the compact one: cost, both marginals, total mass.
+fn assert_folds_match_dense_twin(plan: &TransportPlan, costs: &otpr::core::cost::CostMatrix) {
+    let (nb, na) = (costs.nb, costs.na);
+    let mut twin = TransportPlan::zeros(nb, na);
+    for b in 0..nb {
+        for a in 0..na {
+            let v = plan.at(b, a);
+            if v != 0.0 {
+                twin.add(b, a, v);
+            }
+        }
+    }
+    assert_eq!(twin.repr_kind(), "dense");
+    // The CSR fold skips only exact +0.0 terms of a non-negative sum, so
+    // every aggregate must agree to the bit, not to a tolerance.
+    assert_eq!(plan.cost(costs).to_bits(), twin.cost(costs).to_bits(), "cost fold diverged");
+    assert_eq!(plan.supply_marginal(), twin.supply_marginal(), "supply marginal diverged");
+    assert_eq!(plan.demand_marginal(), twin.demand_marginal(), "demand marginal diverged");
+    assert_eq!(plan.total_mass().to_bits(), twin.total_mass().to_bits(), "total mass diverged");
+    assert_eq!(plan.support_size(), twin.support_size(), "support count diverged");
+}
+
+/// The acceptance sweep: every golden OT case through every kernel
+/// engine, dense and implicit problems — the plan arrives in CSR form,
+/// dense-vs-implicit CSR triplets are byte-identical, every fold matches
+/// a densified twin bit-for-bit, and certificates still pass.
+#[test]
+fn golden_corpus_csr_plans_identical_across_kernel_engines() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    for spec in GOLDEN_SPECS {
+        let Some((supply, demand)) = spec.masses() else {
+            continue; // assignment cases answer with a matching, not a plan
+        };
+        let costs = spec.costs();
+        let dense_p = Problem::ot(costs.clone(), demand.clone(), supply.clone()).unwrap();
+        let implicit_p = Problem::implicit_ot(spec.generated(), demand, supply).unwrap();
+        for engine in KERNEL_ENGINES {
+            for eps in [0.3, 0.1] {
+                let label = format!("{} × {engine} eps={eps}", spec.name);
+                let req = SolveRequest::new(eps);
+                let d = registry.solve(engine, &config, &dense_p, &req).unwrap();
+                let i = registry.solve(engine, &config, &implicit_p, &req).unwrap();
+                let (dp, ip) = (d.plan().unwrap(), i.plan().unwrap());
+                assert_eq!(dp.repr_kind(), "csr", "{label}: dense problem plan repr");
+                assert_eq!(ip.repr_kind(), "csr", "{label}: implicit problem plan repr");
+                // byte-identity of the whole triplet, not just the folds
+                assert_eq!(dp.csr_view(), ip.csr_view(), "{label}: CSR triplets differ");
+                assert_eq!(d.duals, i.duals, "{label}: duals differ");
+                assert_eq!(d.cost.to_bits(), i.cost.to_bits(), "{label}: costs differ");
+                assert_folds_match_dense_twin(dp, &costs);
+                // memory accounting flows through to the solve stats
+                assert_eq!(d.stats.plan_state_bytes, dp.state_bytes(), "{label}: stats bytes");
+                assert_eq!(i.stats.plan_state_bytes, ip.state_bytes(), "{label}: stats bytes");
+                for (sol, p) in [(&d, &dense_p), (&i, &implicit_p)] {
+                    let cert = certify(p, sol, &req);
+                    assert!(cert.ok(), "{label}: {}", cert.summary());
+                }
+            }
+        }
+    }
+}
+
+/// Property: extracted support is compact on feasible solves. Every CSR
+/// entry comes from a live arena edge (≥ 1 of ≤ θ supply units), the
+/// completion cursor only moves forward, and sub-unit residuals land on
+/// existing capacity — so nnz stays O(θ + nb + na), far under the n²
+/// slab. (The na+nb−1 vertex-form bound does *not* apply: push-relabel
+/// flows are not extreme points, which is why the assert uses θ.)
+#[test]
+fn prop_kernel_ot_plans_have_compact_support() {
+    let registry = SolverRegistry::with_defaults();
+    let config = SolverConfig::default();
+    check(
+        "kernel OT plans stay compact",
+        &PropConfig { cases: 10, ..Default::default() },
+        |rng| {
+            let n = 48 + rng.next_below(49) as usize;
+            let seed = rng.next_u64();
+            let eps = [0.5, 0.7, 0.9][rng.next_below(3) as usize];
+            let engine = KERNEL_ENGINES[rng.next_below(6) as usize];
+            let inst = Workload::Fig1 { n }.ot_with_random_masses(seed);
+            let (supply, demand) = (inst.supply.clone(), inst.demand.clone());
+            let problem = Problem::Ot(inst);
+            let sol = registry
+                .solve(engine, &config, &problem, &SolveRequest::new(eps))
+                .map_err(|e| e.to_string())?;
+            let plan = sol.plan().expect("OT answers with a plan");
+            prop_assert!(plan.repr_kind() == "csr", "repr={} ({engine})", plan.repr_kind());
+            let th = theta(n, n, eps);
+            // kernel edges ≤ θ, completion ≤ nb+na, residual fill gets
+            // generous slack — and in all cases nowhere near the slab
+            let bound = th.ceil() as usize + 4 * (2 * n);
+            let nnz = plan.support_size();
+            prop_assert!(
+                nnz <= bound,
+                "support {nnz} > θ+slack bound {bound} (n={n}, eps={eps}, seed={seed}, {engine})"
+            );
+            prop_assert!(
+                nnz < n * n / 2,
+                "support {nnz} not compact vs dense {} (n={n}, seed={seed})",
+                n * n
+            );
+            prop_assert!(
+                plan.state_bytes() < (n * n * 8) as u64,
+                "plan bytes {} ≥ dense slab (n={n}, seed={seed}, {engine})",
+                plan.state_bytes()
+            );
+            plan.check(&supply, &demand, 2.0 / th + 1e-9)
+                .map_err(|e| format!("{e} (n={n}, eps={eps}, seed={seed}, {engine})"))?;
+            Ok(())
+        },
+    );
+}
+
+/// The allocation-free cancellation regression (satellite 1): a solve
+/// cancelled before phase 0 at n=4096 answers with the lazy ν⊗μ product
+/// plan — O(nb+na) resident bytes. The pre-PR-8 representation dense-
+/// allocated the product into an n²·8 = 134 MB slab just to throw it at
+/// a caller who asked to stop.
+#[test]
+fn n4096_cancelled_ot_plan_stays_lazy_product() {
+    let n = 4096usize;
+    let (costs, demand, supply) =
+        Workload::Fig1 { n }.implicit_ot_with_random_masses(7).expect("fig1 implicit");
+    let problem = Problem::implicit_ot(costs, demand, supply).unwrap();
+    let token = CancelToken::new();
+    token.cancel();
+    let req = SolveRequest::new(0.25).with_cancel(token);
+    let registry = SolverRegistry::with_defaults();
+    let sol = registry.solve("native-vector", &SolverConfig::default(), &problem, &req).unwrap();
+    assert!(sol.is_cancelled());
+    assert_eq!(sol.stats.phases, 0, "cancelled before any phase ran");
+    let plan = sol.plan().expect("cancelled OT still answers with a feasible coupling");
+    assert_eq!(plan.repr_kind(), "product");
+    // exactly the two marginal vectors — nothing n²-shaped anywhere
+    let lazy_bytes = ((n + n) * 8) as u64;
+    assert_eq!(plan.state_bytes(), lazy_bytes);
+    assert_eq!(sol.stats.plan_state_bytes, lazy_bytes);
+    assert!(sol.cost.is_finite() && sol.cost >= 0.0, "priced by streaming, no slab");
+}
+
+/// The dense-problem twin of the regression above: the phase-0 branch in
+/// `drive_ot_src` ships the identical lazy shape whichever cost
+/// representation backs the solve, and the cost it reports is the exact
+/// dense product-fold value.
+#[test]
+fn cancelled_dense_ot_plan_matches_product_fold() {
+    let inst = Workload::Fig1 { n: 64 }.ot_with_random_masses(3);
+    let (nb, na) = (inst.costs.nb, inst.costs.na);
+    let expected = TransportPlan::product(&inst.supply, &inst.demand).cost(&inst.costs);
+    let problem = Problem::Ot(inst);
+    let token = CancelToken::new();
+    token.cancel();
+    let req = SolveRequest::new(0.3).with_cancel(token);
+    let registry = SolverRegistry::with_defaults();
+    let sol = registry.solve("native-seq", &SolverConfig::default(), &problem, &req).unwrap();
+    assert!(sol.is_cancelled());
+    let plan = sol.plan().unwrap();
+    assert_eq!(plan.repr_kind(), "product");
+    assert_eq!(plan.state_bytes(), ((nb + na) * 8) as u64);
+    assert_eq!(sol.stats.plan_state_bytes, plan.state_bytes());
+    assert_eq!(sol.cost.to_bits(), expected.to_bits(), "streamed pricing == dense fold");
+}
+
+/// The PR-8 memory wall, in-process: an n=4096 implicit OT solve holds
+/// the O(n²/8) block-min cache as its *only* quadratic state (PR 5) and
+/// now returns an O(n) CSR plan instead of the 134 MB dense slab.
+#[test]
+fn n4096_implicit_ot_solves_with_sparse_plan() {
+    let n = 4096usize;
+    // overall ε = 0.75 keeps the phase count debug-runtime-friendly,
+    // mirroring the n=4096 assignment precedent in implicit_costs.rs
+    let eps = 0.75;
+    let (costs, demand, supply) =
+        Workload::Fig1 { n }.implicit_ot_with_random_masses(42).expect("fig1 implicit");
+    let (s_check, d_check) = (supply.clone(), demand.clone());
+    let problem = Problem::implicit_ot(costs, demand, supply).unwrap();
+    let registry = SolverRegistry::with_defaults();
+    let sol = registry
+        .solve("native-vector", &SolverConfig::default(), &problem, &SolveRequest::new(eps))
+        .expect("implicit n=4096 OT solve");
+    // cost side: still exactly the block-min cache (nb × na_padded/8 i32s)
+    assert_eq!(sol.stats.cost_state_bytes, (n * (n / 8) * 4) as u64);
+    // plan side: CSR with provably-bounded support
+    let plan = sol.plan().unwrap();
+    assert_eq!(plan.repr_kind(), "csr");
+    let th = theta(n, n, eps);
+    assert!(
+        plan.support_size() <= th.ceil() as usize + 4 * (2 * n),
+        "support {} exceeds the θ bound",
+        plan.support_size()
+    );
+    let dense_slab = (n * n * 8) as u64;
+    assert_eq!(sol.stats.plan_state_bytes, plan.state_bytes());
+    assert!(
+        sol.stats.plan_state_bytes < 1_000_000,
+        "plan is not O(n): {} bytes vs {} dense",
+        sol.stats.plan_state_bytes,
+        dense_slab
+    );
+    plan.check(&s_check, &d_check, 2.0 / th + 1e-9).expect("feasible marginals");
+    assert!(sol.cost.is_finite() && sol.cost >= 0.0);
+}
+
+/// `matching_to_plan` builds straight into CSR: ≤ 1 entry per supply row,
+/// uniform 1/n mass, folds bit-identical to its densified twin.
+#[test]
+fn matching_to_plan_is_compact_csr() {
+    let registry = SolverRegistry::with_defaults();
+    let inst = Workload::Fig1 { n: 24 }.assignment(5);
+    let costs = inst.costs.clone();
+    let problem = Problem::Assignment(inst);
+    let sol = registry
+        .solve("native-seq", &SolverConfig::default(), &problem, &SolveRequest::new(0.2))
+        .unwrap();
+    let m = sol.matching().unwrap();
+    assert!(m.is_perfect());
+    let plan = matching_to_plan(m);
+    assert_eq!(plan.repr_kind(), "csr");
+    let (row_ptr, _, vals) = plan.csr_view().unwrap();
+    assert_eq!(plan.support_size(), m.nb(), "one entry per matched supply");
+    for b in 0..m.nb() {
+        assert!(row_ptr[b + 1] - row_ptr[b] <= 1, "row {b} has multiple entries");
+    }
+    let unit = 1.0 / m.nb() as f64;
+    assert!(vals.iter().all(|&v| v == unit), "uniform mass per matched edge");
+    assert_folds_match_dense_twin(&plan, &costs);
+    plan.check(&vec![unit; m.nb()], &vec![unit; m.na()], 1e-12).unwrap();
+}
+
+/// `from_csr` refuses anything that would break the canonical-order
+/// contract the bit-identical folds rely on.
+#[test]
+fn from_csr_rejects_non_canonical_input() {
+    // columns out of order within a row
+    let err = TransportPlan::from_csr(1, 3, vec![0, 2], vec![2, 0], vec![0.5, 0.5]);
+    assert!(err.unwrap_err().contains("strictly ascending"));
+    // duplicate column (not strictly ascending either)
+    let err = TransportPlan::from_csr(1, 3, vec![0, 2], vec![1, 1], vec![0.5, 0.5]);
+    assert!(err.unwrap_err().contains("strictly ascending"));
+    // column out of bounds
+    let err = TransportPlan::from_csr(1, 2, vec![0, 1], vec![5], vec![1.0]);
+    assert!(err.unwrap_err().contains("out of bounds"));
+    // row_ptr shape mismatches
+    let err = TransportPlan::from_csr(2, 2, vec![0, 1], vec![0], vec![1.0]);
+    assert!(err.unwrap_err().contains("row_ptr len"));
+    let err = TransportPlan::from_csr(1, 2, vec![0, 2], vec![0], vec![1.0]);
+    assert!(err.unwrap_err().contains("end at nnz"));
+    // negative / non-finite values
+    let err = TransportPlan::from_csr(1, 2, vec![0, 1], vec![0], vec![-0.5]);
+    assert!(err.unwrap_err().contains("finite non-negative"));
+    let err = TransportPlan::from_csr(1, 2, vec![0, 1], vec![0], vec![f64::NAN]);
+    assert!(err.unwrap_err().contains("finite non-negative"));
+    // and the happy path round-trips
+    let plan = TransportPlan::from_csr(2, 2, vec![0, 1, 2], vec![0, 1], vec![0.5, 0.5]).unwrap();
+    assert_eq!(plan.at(0, 0), 0.5);
+    assert_eq!(plan.at(0, 1), 0.0);
+    assert_eq!(plan.support_size(), 2);
+}
+
+/// The product repr is lazy until a caller *forces* the slab — and the
+/// byte accounting reports the forced cache honestly.
+#[test]
+fn product_plan_materializes_only_on_demand() {
+    let supply = vec![0.25, 0.75];
+    let demand = vec![0.5, 0.3, 0.2];
+    let plan = TransportPlan::product(&supply, &demand);
+    assert_eq!(plan.repr_kind(), "product");
+    assert_eq!(plan.state_bytes(), ((2 + 3) * 8) as u64);
+    assert_eq!(plan.at(1, 0), 0.75 * 0.5);
+    assert_eq!(plan.supply_marginal(), vec![0.25, 0.75]);
+    // forcing the dense view allocates the cache — and the accounting
+    // grows by exactly the nb·na slab while the repr stays compact
+    let slab = plan.as_slice().to_vec();
+    assert_eq!(slab.len(), 6);
+    assert_eq!(plan.repr_kind(), "product");
+    assert_eq!(plan.state_bytes(), ((2 + 3) * 8 + 2 * 3 * 8) as u64);
+    let twin = TransportPlan::product(&supply, &demand);
+    assert_eq!(twin.cost_with(|b, a| (b + a) as f64).to_bits(), {
+        let mut sum = 0.0;
+        for b in 0..2 {
+            for a in 0..3 {
+                sum += slab[b * 3 + a] * (b + a) as f64;
+            }
+        }
+        sum.to_bits()
+    });
+}
