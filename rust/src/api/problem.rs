@@ -326,6 +326,16 @@ impl Solution {
         self.stats.notes.iter().any(|n| n == crate::core::control::CANCELLED_NOTE)
     }
 
+    /// When a deadline-pressured warm-ladder solve degraded to a coarser
+    /// level, the matching-quantization ε the returned state is actually
+    /// feasible for (see [`crate::core::control::DEGRADED_NOTE_PREFIX`]).
+    /// `None` for solves that ran to their requested accuracy.
+    pub fn degraded_eps_param(&self) -> Option<f64> {
+        self.stats.notes.iter().find_map(|n| {
+            n.strip_prefix(crate::core::control::DEGRADED_NOTE_PREFIX)?.parse::<f64>().ok()
+        })
+    }
+
     pub fn phases(&self) -> usize {
         self.stats.phases
     }

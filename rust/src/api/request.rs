@@ -47,6 +47,14 @@ pub struct SolveRequest {
     /// Attach a verified [`crate::core::certify::Certificate`] to the
     /// solution after the solve (registry path). O(n²) post-pass.
     pub want_certificate: bool,
+    /// Deadline pressure degrades instead of cancelling: warm-ladder
+    /// engines stop at a level boundary and return the last completed
+    /// level's certified coarser-ε answer, noting
+    /// [`crate::core::control::DEGRADED_NOTE_PREFIX`]. Engines without a
+    /// ladder (single-level schedules) ignore the flag and keep the
+    /// cancel-at-next-phase behavior. Off by default; the coordinator's
+    /// `DegradePolicy` turns it on for deadline-carrying jobs.
+    pub degrade_on_deadline: bool,
 }
 
 impl Default for SolveRequest {
@@ -77,6 +85,7 @@ impl SolveRequest {
             cancel: CancelToken::new(),
             observer: None,
             want_certificate: false,
+            degrade_on_deadline: false,
         }
     }
 
@@ -97,6 +106,29 @@ impl SolveRequest {
     pub fn with_budget(mut self, budget: Duration) -> Self {
         self.budget = Some(budget);
         self
+    }
+
+    /// Prefer a certified coarser-ε answer over cancellation when the
+    /// budget expires (see the field doc on `degrade_on_deadline`).
+    pub fn degrade_on_deadline(mut self, on: bool) -> Self {
+        self.degrade_on_deadline = on;
+        self
+    }
+
+    /// The job's effective deadline: the tighter of the request's own
+    /// budget and a per-tenant default, both measured from `submitted`.
+    /// `None` only when neither bound exists.
+    pub fn effective_deadline(
+        &self,
+        submitted: Instant,
+        default: Option<Duration>,
+    ) -> Option<Instant> {
+        match (self.budget, default) {
+            (Some(b), Some(d)) => Some(submitted + b.min(d)),
+            (Some(b), None) => Some(submitted + b),
+            (None, Some(d)) => Some(submitted + d),
+            (None, None) => None,
+        }
     }
 
     pub fn with_cancel(mut self, token: CancelToken) -> Self {
@@ -154,6 +186,7 @@ impl SolveRequest {
             cancel: Some(self.cancel.clone()),
             deadline: self.budget.map(|b| Instant::now() + b),
             observer: self.observer.clone(),
+            degrade_on_deadline: self.degrade_on_deadline,
         }
     }
 }
@@ -196,6 +229,27 @@ mod tests {
         assert!(!SolveRequest::new(0.1).want_certificate);
         assert!(SolveRequest::new(0.1).certify(true).want_certificate);
         assert!(!SolveRequest::new(0.1).certify(true).certify(false).want_certificate);
+    }
+
+    #[test]
+    fn effective_deadline_takes_the_tighter_bound() {
+        let t0 = Instant::now();
+        let short = Duration::from_millis(10);
+        let long = Duration::from_secs(10);
+        let req = SolveRequest::new(0.1);
+        assert_eq!(req.effective_deadline(t0, None), None);
+        assert_eq!(req.effective_deadline(t0, Some(long)), Some(t0 + long));
+        let req = SolveRequest::new(0.1).with_budget(short);
+        assert_eq!(req.effective_deadline(t0, None), Some(t0 + short));
+        assert_eq!(req.effective_deadline(t0, Some(long)), Some(t0 + short));
+        let req = SolveRequest::new(0.1).with_budget(long);
+        assert_eq!(req.effective_deadline(t0, Some(short)), Some(t0 + short));
+    }
+
+    #[test]
+    fn degrade_flag_snapshots_into_control() {
+        assert!(!SolveRequest::new(0.1).control().degrade_on_deadline());
+        assert!(SolveRequest::new(0.1).degrade_on_deadline(true).control().degrade_on_deadline());
     }
 
     #[test]

@@ -64,6 +64,20 @@ impl<T> Batcher<T> {
         None
     }
 
+    /// Close `job` into a batch immediately, bypassing accumulation; any
+    /// same-key jobs already waiting ride along. Retries use this — they
+    /// paid their accumulation wait on the first attempt, and stacking
+    /// `max_wait` on top of the retry backoff would double-charge them.
+    pub fn push_now(&mut self, key: BatchKey, job: T) -> Batch<T> {
+        match self.open.remove(&key) {
+            Some(mut batch) => {
+                batch.jobs.push(job);
+                batch
+            }
+            None => Batch { key, jobs: vec![job], opened: Instant::now() },
+        }
+    }
+
     /// Batches whose max_wait expired (call periodically).
     pub fn drain_expired(&mut self) -> Vec<Batch<T>> {
         let now = Instant::now();
@@ -113,6 +127,20 @@ mod tests {
         b.push(("native-seq", None), 3);
         assert_eq!(b.pending(), 3);
         assert_eq!(b.open.len(), 3);
+    }
+
+    #[test]
+    fn push_now_closes_immediately_and_takes_waiters_along() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_secs(9) });
+        // empty key: a one-job batch closes with no accumulation wait
+        let solo = b.push_now(("e", None), 1);
+        assert_eq!(solo.jobs, vec![1]);
+        assert_eq!(b.pending(), 0);
+        // open key: the waiting job rides along with the immediate one
+        assert!(b.push(("e", None), 2).is_none());
+        let joint = b.push_now(("e", None), 3);
+        assert_eq!(joint.jobs, vec![2, 3]);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

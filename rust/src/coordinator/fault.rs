@@ -1,0 +1,180 @@
+//! Deterministic fault injection for the coordinator.
+//!
+//! Chaos behavior you cannot reproduce is chaos you cannot debug: a
+//! [`FaultPlan`] is a *seeded, step-indexed* schedule of failures keyed by
+//! `(job id, attempt)` — job ids are assigned sequentially at submit time,
+//! so "panic the worker holding job 7" means the same thing on every run.
+//! The plan is threaded through
+//! [`crate::coordinator::CoordinatorConfig::faults`] and consulted by
+//! workers at pickup, inside the supervised (`catch_unwind`) region, which
+//! is exactly where real solver panics would fire.
+//!
+//! Keying on the attempt means an injured job's *retry* succeeds by
+//! default — the shape real transient faults have — while
+//! [`FaultPlan::at_attempt`] can pin a fault to every attempt to test
+//! retry-budget exhaustion.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::util::rng::Pcg32;
+
+/// One injected fault, applied when a worker picks up the matching
+/// `(job id, attempt)` step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic the worker thread mid-batch. Supervision catches it: the
+    /// batch's unreplied jobs are retried or failed, `worker_panics` is
+    /// incremented, and the worker is respawned under the restart budget.
+    Panic,
+    /// Sleep before solving the job's group (latency injection; shows up
+    /// in the per-engine p95/p99 metrics).
+    Delay(Duration),
+    /// Fail the job with a retryable transient error instead of solving.
+    Transient,
+}
+
+/// A deterministic fault schedule. Defaults to empty (no faults).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    faults: HashMap<(u64, u32), Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Panic the worker when it picks up `job` (first attempt only).
+    pub fn panic_at(mut self, job: u64) -> Self {
+        self.faults.insert((job, 0), Fault::Panic);
+        self
+    }
+
+    /// Delay `job`'s group by `d` before solving (first attempt only).
+    pub fn delay_at(mut self, job: u64, d: Duration) -> Self {
+        self.faults.insert((job, 0), Fault::Delay(d));
+        self
+    }
+
+    /// Fail `job` with a transient error (first attempt only).
+    pub fn transient_at(mut self, job: u64) -> Self {
+        self.faults.insert((job, 0), Fault::Transient);
+        self
+    }
+
+    /// Pin `fault` to a specific retry attempt of `job` (attempt 0 is the
+    /// first execution). Lets tests exhaust the retry budget.
+    pub fn at_attempt(mut self, job: u64, attempt: u32, fault: Fault) -> Self {
+        self.faults.insert((job, attempt), fault);
+        self
+    }
+
+    /// Seeded random plan over jobs `1..=jobs` (the ids a fresh
+    /// coordinator assigns): `panics` worker panics, `transients`
+    /// transient errors, and `delays` sleeps of `delay` each, on disjoint
+    /// jobs, all on the first attempt. Deterministic in `seed`.
+    pub fn seeded(
+        seed: u64,
+        jobs: u64,
+        panics: usize,
+        transients: usize,
+        delays: usize,
+        delay: Duration,
+    ) -> Self {
+        let mut rng = Pcg32::with_stream(seed, 0x0fa1_75);
+        let mut plan = FaultPlan::new();
+        if jobs == 0 {
+            return plan;
+        }
+        let mut pick = |plan: &FaultPlan| -> Option<u64> {
+            if plan.faults.len() as u64 >= jobs {
+                return None;
+            }
+            loop {
+                let id = 1 + u64::from(rng.next_u32()) % jobs;
+                if !plan.faults.contains_key(&(id, 0)) {
+                    return Some(id);
+                }
+            }
+        };
+        for _ in 0..panics {
+            match pick(&plan) {
+                Some(id) => plan = plan.panic_at(id),
+                None => return plan,
+            }
+        }
+        for _ in 0..transients {
+            match pick(&plan) {
+                Some(id) => plan = plan.transient_at(id),
+                None => return plan,
+            }
+        }
+        for _ in 0..delays {
+            match pick(&plan) {
+                Some(id) => plan = plan.delay_at(id, delay),
+                None => return plan,
+            }
+        }
+        plan
+    }
+
+    /// The fault scheduled for this `(job, attempt)` step, if any.
+    pub fn lookup(&self, job: u64, attempt: u32) -> Option<Fault> {
+        self.faults.get(&(job, attempt)).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Count of scheduled faults matching `f`'s discriminant class.
+    pub fn count(&self, class: fn(&Fault) -> bool) -> usize {
+        self.faults.values().filter(|f| class(f)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_key_on_job_and_attempt() {
+        let plan = FaultPlan::new()
+            .panic_at(3)
+            .transient_at(5)
+            .delay_at(7, Duration::from_millis(2))
+            .at_attempt(5, 1, Fault::Transient);
+        assert_eq!(plan.lookup(3, 0), Some(Fault::Panic));
+        assert_eq!(plan.lookup(3, 1), None, "retries succeed by default");
+        assert_eq!(plan.lookup(5, 0), Some(Fault::Transient));
+        assert_eq!(plan.lookup(5, 1), Some(Fault::Transient));
+        assert_eq!(plan.lookup(7, 0), Some(Fault::Delay(Duration::from_millis(2))));
+        assert_eq!(plan.lookup(1, 0), None);
+        assert_eq!(plan.len(), 4);
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_disjoint() {
+        let a = FaultPlan::seeded(42, 64, 3, 4, 2, Duration::from_millis(1));
+        let b = FaultPlan::seeded(42, 64, 3, 4, 2, Duration::from_millis(1));
+        assert_eq!(a.faults, b.faults, "same seed, same plan");
+        assert_eq!(a.len(), 9, "disjoint jobs: every scheduled fault lands");
+        assert_eq!(a.count(|f| matches!(f, Fault::Panic)), 3);
+        assert_eq!(a.count(|f| matches!(f, Fault::Transient)), 4);
+        assert_eq!(a.count(|f| matches!(f, Fault::Delay(_))), 2);
+        let c = FaultPlan::seeded(43, 64, 3, 4, 2, Duration::from_millis(1));
+        assert_ne!(a.faults, c.faults, "different seed, different plan");
+    }
+
+    #[test]
+    fn seeded_saturates_instead_of_spinning() {
+        // More faults than jobs: the plan fills every job once and stops.
+        let plan = FaultPlan::seeded(7, 4, 10, 10, 0, Duration::ZERO);
+        assert_eq!(plan.len(), 4);
+    }
+}

@@ -19,6 +19,8 @@
 
 use crate::api::registry::canonical_key;
 use crate::api::{Problem, SolveRequest, Solution};
+use crate::core::{OtprError, Result};
+use std::time::Duration;
 
 /// Re-export: the coordinator's job payload *is* the unified API problem.
 pub type JobKind = Problem;
@@ -112,6 +114,35 @@ impl Engine {
         }
         Engine::from_key(canonical_key(s)?)
     }
+
+    /// [`Engine::parse`] with a typed error for config-input paths
+    /// (CLI flags, registry round-trips) — an unknown name becomes
+    /// [`OtprError::Coordinator`] instead of a silent fallback or panic.
+    pub fn try_parse(s: &str) -> Result<Engine> {
+        Engine::parse(s).ok_or_else(|| {
+            OtprError::Coordinator(format!(
+                "unknown engine {s:?} — try `otpr engines` for the registry keys and aliases"
+            ))
+        })
+    }
+}
+
+/// Terminal disposition of a job — every submitted job reaches exactly one.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobStatus {
+    /// Solved at the requested accuracy.
+    Served,
+    /// Deadline pressure resolved the job at a coarser accuracy: `eps` is
+    /// the overall target the answer's attached certificate verifies
+    /// against (see `DegradePolicy`). The partial-answer fallback (lazy
+    /// product / arbitrary completion) also lands here, with its
+    /// certificate reporting what actually holds.
+    Degraded { eps: f64 },
+    /// Dropped before solving because its effective deadline had already
+    /// passed; `retry_after` is the coordinator's backoff hint.
+    Shed { retry_after: Duration },
+    /// Errored terminally after `attempts` executions.
+    Failed { attempts: u32 },
 }
 
 /// A submitted job: problem + full solve request + engine choice.
@@ -125,11 +156,16 @@ pub struct JobRequest {
 }
 
 /// Completed job with queueing/solve timing for the metrics layer.
+///
+/// `status` is the typed disposition; `result` keeps the historical
+/// Ok/Err shape (Shed and Failed statuses carry an `Err`, Served and
+/// Degraded an `Ok`), so `handle.wait()?.result?` keeps working.
 #[derive(Debug)]
 pub struct JobOutcome {
     pub id: u64,
     pub engine_used: &'static str,
-    pub result: Result<Solution, String>,
+    pub status: JobStatus,
+    pub result: std::result::Result<Solution, String>,
     pub queued_secs: f64,
     pub solve_secs: f64,
 }
@@ -151,12 +187,25 @@ mod tests {
     }
 
     #[test]
+    fn try_parse_reports_unknown_engines_as_typed_errors() {
+        assert_eq!(Engine::try_parse("auto").ok(), Some(Engine::Auto));
+        assert_eq!(Engine::try_parse("simd").ok(), Some(Engine::NativeVector));
+        let err = Engine::try_parse("bogus").err().map(|e| e.to_string());
+        let msg = err.as_deref().unwrap_or_default();
+        assert!(msg.contains("coordinator error"), "typed OtprError::Coordinator: {msg}");
+        assert!(msg.contains("bogus") && msg.contains("otpr engines"), "actionable hint: {msg}");
+    }
+
+    #[test]
     fn every_registry_key_round_trips_through_engine() {
         // The dedup satellite: registry keys and Engine names are one set.
+        // `try_parse` carries the diagnostic as a typed error now, so the
+        // assertion reports it without a hand-rolled panic.
         let reg = SolverRegistry::with_defaults();
         for key in reg.keys() {
-            let engine = Engine::parse(key)
-                .unwrap_or_else(|| panic!("registry key {key} must parse as an Engine"));
+            let parsed = Engine::try_parse(key);
+            assert!(parsed.is_ok(), "registry key {key} must parse as an Engine: {parsed:?}");
+            let engine = parsed.expect("checked above");
             assert_eq!(engine.name(), key, "Engine::name must round-trip the key");
             assert_eq!(Engine::from_key(key), Some(engine));
         }

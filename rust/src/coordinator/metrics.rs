@@ -31,6 +31,25 @@ pub struct Metrics {
     /// Solves that reused a warm kernel arena inside a batch — the
     /// counter the batch path's amortization claim is asserted on.
     pub arena_reuse_hits: AtomicU64,
+    /// Jobs dropped before solving because their effective deadline had
+    /// already passed (`JobStatus::Shed`). Not counted as `failed`.
+    pub shed: AtomicU64,
+    /// Jobs resolved at a coarser ε under deadline pressure
+    /// (`JobStatus::Degraded`); also counted in `completed`.
+    pub degraded: AtomicU64,
+    /// Transient failures requeued for another attempt (each requeue
+    /// counts once; terminal outcomes are counted separately).
+    pub retried: AtomicU64,
+    /// Worker panics caught by supervision — injected or real.
+    pub worker_panics: AtomicU64,
+    /// Supervised worker respawns (bounded by the restart budget).
+    pub worker_restarts: AtomicU64,
+    /// Terminal outcomes whose `JobHandle` was dropped before `wait()` —
+    /// the reply had nowhere to go.
+    pub abandoned_jobs: AtomicU64,
+    /// In-flight jobs (accepted, no terminal outcome yet) — the
+    /// saturation gauge a load balancer sheds on.
+    queue_depth: AtomicU64,
     /// Per-(engine, bucket) batch occupancy + accumulated wait.
     per_batch_key: Mutex<Vec<BatchCounters>>,
     /// Audit-mode certification outcomes (see
@@ -67,6 +86,34 @@ pub struct EngineCounters {
     /// plans, so this stays O(n)-shaped where the dense solvers report
     /// the full nb·na·8 slab.
     pub plan_bytes: u64,
+    /// Per-engine total-latency (queued + solve) histogram over
+    /// [`LATENCY_BUCKETS`] — the p50/p95/p99 source.
+    pub latency: [u64; LATENCY_BUCKETS.len()],
+}
+
+impl EngineCounters {
+    /// (p50, p95, p99) total-latency estimates in seconds, read as the
+    /// upper bound of the histogram bucket containing each quantile —
+    /// `f64::INFINITY` when the quantile lands in the overflow bucket,
+    /// `None` when no job has completed on this engine yet.
+    pub fn latency_percentiles(&self) -> Option<(f64, f64, f64)> {
+        let total: u64 = self.latency.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let at = |q: f64| -> f64 {
+            let target = ((q * total as f64).ceil() as u64).max(1);
+            let mut cum = 0u64;
+            for (i, &c) in self.latency.iter().enumerate() {
+                cum += c;
+                if cum >= target {
+                    return LATENCY_BUCKETS[i];
+                }
+            }
+            f64::INFINITY
+        };
+        Some((at(0.50), at(0.95), at(0.99)))
+    }
 }
 
 /// Per batch key (engine name + optional artifact bucket) accounting:
@@ -98,10 +145,57 @@ impl Metrics {
 
     pub fn record_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_reject(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.dec_queue_depth();
+    }
+
+    /// In-flight jobs right now (accepted, not yet terminal).
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    fn dec_queue_depth(&self) {
+        // Saturating: a stray double-decrement must not wrap the gauge.
+        let _ = self
+            .queue_depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
+    }
+
+    /// One job shed at dispatch/pickup (deadline already passed). Shed is
+    /// a terminal outcome but neither `completed` nor `failed`.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        self.dec_queue_depth();
+    }
+
+    /// One job served at a coarser ε under deadline pressure. The job also
+    /// goes through [`Metrics::record_done`]; this only tags it.
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One transient failure requeued for another attempt (not terminal).
+    pub fn record_retry(&self) {
+        self.retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One worker panic caught by supervision.
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One supervised worker respawn.
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One terminal reply that found its `JobHandle` already dropped.
+    pub fn record_abandoned(&self) {
+        self.abandoned_jobs.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one closed batch: its key (engine name + optional artifact
@@ -143,12 +237,16 @@ impl Metrics {
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
+        self.dec_queue_depth();
         let total = queued + solve;
         let idx = LATENCY_BUCKETS.iter().position(|&ub| total <= ub).unwrap_or(9);
         self.latency[idx].fetch_add(1, Ordering::Relaxed);
         *locked(&self.queue_secs_total) += queued;
         *locked(&self.solve_secs_total) += solve;
-        self.with_engine(engine, |e| e.jobs += 1);
+        self.with_engine(engine, |e| {
+            e.jobs += 1;
+            e.latency[idx] += 1;
+        });
     }
 
     /// Fold `count` solver progress events (phases completed) into
@@ -194,6 +292,7 @@ impl Metrics {
                     warm_started: 0,
                     auto_routed: 0,
                     plan_bytes: 0,
+                    latency: [0; LATENCY_BUCKETS.len()],
                 };
                 f(&mut e);
                 per.push(e);
@@ -280,6 +379,13 @@ impl Metrics {
             .engine_counters()
             .into_iter()
             .map(|e| {
+                // Percentiles as bucket upper bounds; the overflow bucket
+                // and "no jobs yet" both export as null (JSON has no inf).
+                let pct = e.latency_percentiles();
+                let q = |pick: fn((f64, f64, f64)) -> f64| match pct.map(pick) {
+                    Some(v) if v.is_finite() => Json::Num(v),
+                    _ => Json::Null,
+                };
                 obj(vec![
                     ("engine", Json::Str(e.engine.to_string())),
                     ("jobs", Json::Num(e.jobs as f64)),
@@ -287,6 +393,13 @@ impl Metrics {
                     ("warm_started_jobs", Json::Num(e.warm_started as f64)),
                     ("auto_routed_jobs", Json::Num(e.auto_routed as f64)),
                     ("plan_state_bytes", Json::Num(e.plan_bytes as f64)),
+                    ("latency_p50_s", q(|p| p.0)),
+                    ("latency_p95_s", q(|p| p.1)),
+                    ("latency_p99_s", q(|p| p.2)),
+                    (
+                        "latency_counts",
+                        Json::Arr(e.latency.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    ),
                 ])
             })
             .collect();
@@ -307,6 +420,16 @@ impl Metrics {
                 "arena_reuse_hits",
                 Json::Num(self.arena_reuse_hits.load(Ordering::Relaxed) as f64),
             ),
+            ("shed", Json::Num(self.shed.load(Ordering::Relaxed) as f64)),
+            ("degraded", Json::Num(self.degraded.load(Ordering::Relaxed) as f64)),
+            ("retried", Json::Num(self.retried.load(Ordering::Relaxed) as f64)),
+            ("worker_panics", Json::Num(self.worker_panics.load(Ordering::Relaxed) as f64)),
+            (
+                "worker_restarts",
+                Json::Num(self.worker_restarts.load(Ordering::Relaxed) as f64),
+            ),
+            ("abandoned_jobs", Json::Num(self.abandoned_jobs.load(Ordering::Relaxed) as f64)),
+            ("queue_depth", Json::Num(self.queue_depth() as f64)),
             ("batch_keys", Json::Arr(batch_keys)),
             ("engines", Json::Arr(engines)),
             ("audit", self.audit_json()),
@@ -323,6 +446,22 @@ impl Metrics {
         let mut out = format!(
             "jobs: submitted={sub} completed={done} failed={failed} rejected={rejected}\n"
         );
+        let shed = self.shed.load(Ordering::Relaxed);
+        let degraded = self.degraded.load(Ordering::Relaxed);
+        let retried = self.retried.load(Ordering::Relaxed);
+        let panics = self.worker_panics.load(Ordering::Relaxed);
+        let restarts = self.worker_restarts.load(Ordering::Relaxed);
+        let abandoned = self.abandoned_jobs.load(Ordering::Relaxed);
+        if shed + degraded + retried + panics + restarts + abandoned > 0 {
+            out.push_str(&format!(
+                "faults: shed={shed} degraded={degraded} retried={retried} \
+                 worker-panics={panics} worker-restarts={restarts} abandoned={abandoned}\n"
+            ));
+        }
+        let depth = self.queue_depth();
+        if depth > 0 {
+            out.push_str(&format!("queue depth: {depth}\n"));
+        }
         if batches > 0 {
             out.push_str(&format!(
                 "batches: {batches} (avg {:.2} jobs/batch)\n",
@@ -378,9 +517,25 @@ impl Metrics {
         for e in locked(&self.per_engine).iter() {
             out.push_str(&format!(
                 "engine {}: {} jobs, {} phase-events, {} warm-started, {} auto-routed, \
-                 {} plan-bytes\n",
+                 {} plan-bytes",
                 e.engine, e.jobs, e.phases, e.warm_started, e.auto_routed, e.plan_bytes
             ));
+            if let Some((p50, p95, p99)) = e.latency_percentiles() {
+                let fmt = |v: f64| {
+                    if v.is_finite() {
+                        format!("{v}")
+                    } else {
+                        "inf".to_string()
+                    }
+                };
+                out.push_str(&format!(
+                    ", p50/p95/p99 {}/{}/{}s",
+                    fmt(p50),
+                    fmt(p95),
+                    fmt(p99)
+                ));
+            }
+            out.push('\n');
         }
         out
     }
@@ -546,6 +701,86 @@ mod tests {
             .map(|c| c.as_f64().unwrap())
             .sum();
         assert_eq!(counts as u64, 2, "only dual-certified audits land in the histogram");
+    }
+
+    #[test]
+    fn fault_counters_and_queue_depth_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.queue_depth(), 0);
+        m.record_submit();
+        m.record_submit();
+        m.record_submit();
+        m.record_submit();
+        assert_eq!(m.queue_depth(), 4);
+        m.record_reject();
+        m.record_shed();
+        m.record_retry(); // not terminal: depth unchanged
+        assert_eq!(m.queue_depth(), 2);
+        m.record_degraded();
+        m.record_done("native-seq", true, 0.0, 0.01); // the degraded job lands
+        m.record_done("native-seq", false, 0.0, 0.01);
+        assert_eq!(m.queue_depth(), 0);
+        m.record_worker_panic();
+        m.record_worker_restart();
+        m.record_abandoned();
+        let snap = m.snapshot();
+        assert!(
+            snap.contains(
+                "faults: shed=1 degraded=1 retried=1 worker-panics=1 worker-restarts=1 \
+                 abandoned=1"
+            ),
+            "{snap}"
+        );
+        assert!(!snap.contains("queue depth:"), "drained gauge stays silent: {snap}");
+        let j = Json::parse(&m.to_json().to_string()).expect("valid JSON");
+        let keys =
+            ["shed", "degraded", "retried", "worker_panics", "worker_restarts", "abandoned_jobs"];
+        for key in keys {
+            assert_eq!(j.get(key).and_then(|v| v.as_f64()), Some(1.0), "{key}");
+        }
+        assert_eq!(j.get("queue_depth").and_then(|v| v.as_f64()), Some(0.0));
+        // shed/rejected jobs never count as failed
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn queue_depth_saturates_at_zero() {
+        let m = Metrics::new();
+        m.record_shed(); // stray decrement on an empty gauge
+        assert_eq!(m.queue_depth(), 0, "gauge must not wrap");
+        m.record_submit();
+        assert_eq!(m.queue_depth(), 1);
+    }
+
+    #[test]
+    fn per_engine_latency_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..98 {
+            m.record_done("e", true, 0.0, 0.0005); // ≤ 0.001 bucket
+        }
+        m.record_done("e", true, 0.0, 0.08); // ≤ 0.1 bucket
+        m.record_done("e", true, 0.0, 100.0); // overflow bucket
+        let counters = m.engine_counters();
+        let e = counters.iter().find(|e| e.engine == "e").unwrap();
+        let (p50, p95, p99) = e.latency_percentiles().unwrap();
+        assert_eq!(p50, 0.001);
+        assert_eq!(p95, 0.001);
+        assert_eq!(p99, 0.1);
+        let j = Json::parse(&m.to_json().to_string()).expect("valid JSON");
+        let engines = j.get("engines").unwrap().as_arr().unwrap();
+        assert_eq!(engines[0].get("latency_p50_s").unwrap().as_f64(), Some(0.001));
+        assert_eq!(engines[0].get("latency_p99_s").unwrap().as_f64(), Some(0.1));
+        // p100 would be inf; check the snapshot renders percentiles
+        assert!(m.snapshot().contains("p50/p95/p99 0.001/0.001/0.1s"), "{}", m.snapshot());
+        // untouched engines export null percentiles, not 0
+        m.record_phases("idle", 1);
+        let j = Json::parse(&m.to_json().to_string()).expect("valid JSON");
+        let engines = j.get("engines").unwrap().as_arr().unwrap();
+        let idle = engines
+            .iter()
+            .find(|e| e.get("engine").unwrap().as_str() == Some("idle"))
+            .unwrap();
+        assert!(idle.get("latency_p50_s").unwrap().as_f64().is_none());
     }
 
     #[test]

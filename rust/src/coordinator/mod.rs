@@ -3,13 +3,22 @@
 //! and metrics. This is the L3 "coordination contribution" host — OT
 //! solves consumable as a service with backpressure, per-job wall-clock
 //! budgets/cancellation, and live per-engine phase observability.
+//!
+//! Since PR 9 the server is fault-tolerant: supervised workers
+//! (`catch_unwind` + respawn under a restart budget), deadline-driven
+//! shedding and retries with backoff, degraded-ε answers under deadline
+//! pressure ([`server::DegradePolicy`]), and deterministic fault
+//! injection ([`fault::FaultPlan`]) for chaos testing. Every submitted
+//! job reaches exactly one terminal [`JobStatus`].
 
 pub mod batcher;
+pub mod fault;
 pub mod job;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use job::{Engine, JobKind, JobOutcome, JobRequest};
+pub use fault::{Fault, FaultPlan};
+pub use job::{Engine, JobKind, JobOutcome, JobRequest, JobStatus};
 pub use metrics::EngineCounters;
-pub use server::{Coordinator, CoordinatorConfig, JobHandle};
+pub use server::{Coordinator, CoordinatorConfig, DegradePolicy, JobHandle};

@@ -47,6 +47,22 @@ pub fn auto_kernel_engine(n: usize, threads: usize, implicit: bool) -> Engine {
     Engine::NativeSeq
 }
 
+/// The warm-ladder sibling of a kernel engine — what the coordinator's
+/// `DegradePolicy` re-solves on when a deadline-pressured job needs a
+/// coarser-ε answer fast: the ε-scaling schedule makes the coarse levels
+/// cheap and stoppable at certified boundaries. Engines without a warm
+/// variant (exact oracles, Sinkhorn, XLA) degrade on themselves by just
+/// re-solving at the coarser ε.
+pub fn warm_variant(engine: Engine) -> Engine {
+    match engine {
+        Engine::NativeSeq => Engine::NativeSeqWarm,
+        Engine::NativeVector | Engine::NativeParallel | Engine::NativeHybrid => {
+            Engine::NativeVectorWarm
+        }
+        e => e,
+    }
+}
+
 pub struct Router {
     registry: SolverRegistry,
     config: SolverConfig,
@@ -205,6 +221,17 @@ mod tests {
         assert_eq!(r2.resolve(&mk(1000)), Engine::NativeHybrid);
         let r1 = Router::new(None, 1);
         assert_eq!(r1.resolve(&mk(1000)), Engine::NativeVector);
+    }
+
+    #[test]
+    fn warm_variant_maps_kernel_engines_onto_ladders() {
+        assert_eq!(warm_variant(Engine::NativeSeq), Engine::NativeSeqWarm);
+        assert_eq!(warm_variant(Engine::NativeVector), Engine::NativeVectorWarm);
+        assert_eq!(warm_variant(Engine::NativeHybrid), Engine::NativeVectorWarm);
+        assert_eq!(warm_variant(Engine::NativeParallel), Engine::NativeVectorWarm);
+        assert_eq!(warm_variant(Engine::NativeSeqWarm), Engine::NativeSeqWarm);
+        assert_eq!(warm_variant(Engine::Hungarian), Engine::Hungarian);
+        assert_eq!(warm_variant(Engine::SinkhornNative), Engine::SinkhornNative);
     }
 
     #[test]

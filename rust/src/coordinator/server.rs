@@ -4,9 +4,15 @@
 //!
 //! ```text
 //! submit() ──sync_channel(backpressure)──► dispatcher ──batcher──► job queue
-//!                                                                 ▲   │
-//!                                               workers (N) ──────┘   ▼
+//!               retries (delayed) ▲            │                  ▲   │
+//!                                 │            ▼                  │   ▼
+//!                                 │     shed expired        workers (N)
+//!                                 │                               │
+//!                                 └───────────────────────────────┤
+//!                                                                 ▼
 //!                                   JobHandle ◄──per-job channel── execute
+//!                                              supervisor respawns panicked
+//!                                              workers (restart budget)
 //! ```
 //!
 //! The dispatcher resolves `Engine::Auto` and the artifact bucket up
@@ -16,19 +22,82 @@
 //! reuse the compiled executable back-to-back and the CPU kernel
 //! engines reuse one flow-kernel arena across same-shape jobs (the
 //! reuse hits land in [`Metrics::record_arena_reuse`]).
+//!
+//! # Fault tolerance
+//!
+//! Every submitted job reaches **exactly one terminal outcome** — a
+//! [`JobStatus`] of Served, Degraded, Shed, or Failed — no matter what
+//! panics, stalls, or dies along the way:
+//!
+//! - **Supervision.** Workers run each batch inside `catch_unwind`; a
+//!   panic (solver bug or injected fault) marks only that batch's
+//!   unreplied jobs for retry, never siblings on other workers. The
+//!   panicked worker exits and a supervisor thread respawns it with
+//!   exponential backoff, up to [`CoordinatorConfig::restart_budget`];
+//!   when the whole pool is gone, queued jobs fail terminally instead
+//!   of hanging.
+//! - **Deadlines.** Each job carries an effective deadline (request
+//!   budget ∧ [`CoordinatorConfig::default_deadline`]). When a tenant
+//!   default is configured, expired jobs are shed at dispatch, at retry
+//!   release, and at worker pickup with a `retry_after` hint; a job
+//!   whose deadline comes only from its own request budget keeps the
+//!   legacy semantics (the solve runs and returns a cancelled
+//!   completion) except on retries, which are always shed once expired.
+//!   Live deadline-carrying jobs get their solve budget clamped to the
+//!   remaining time.
+//! - **Retries.** Transient failures (worker death mid-batch, injected
+//!   transients, arena epoch mismatches) requeue through the dispatcher
+//!   with jittered exponential backoff, up to
+//!   [`CoordinatorConfig::max_retries`] extra attempts.
+//! - **Degradation.** Under [`DegradePolicy`], a deadline-pressured job
+//!   prefers a *certified coarser-ε answer* over a cancelled one: warm
+//!   ladder engines stop at a completed level
+//!   (`SolveRequest::degrade_on_deadline`), other engines re-solve at
+//!   geometrically coarser ε on their warm variant under a grace
+//!   budget, and the final fallback ships the partial answer with an
+//!   honest certificate attached.
+//! - **Fault injection.** A seeded [`FaultPlan`] injects panics,
+//!   delays, and transient errors at chosen `(job, attempt)` steps,
+//!   deterministically, inside the supervised region — the chaos-test
+//!   hook `otpr serve --fault-seed` and `tests/fault_injection.rs` use.
 
-use crate::api::{Solution, SolveRequest};
+use crate::api::{Coupling, Solution, SolveRequest};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
-use crate::coordinator::job::{Engine, JobKind, JobOutcome, JobRequest};
+use crate::coordinator::fault::{Fault, FaultPlan};
+use crate::coordinator::job::{Engine, JobKind, JobOutcome, JobRequest, JobStatus};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::router::Router;
+use crate::coordinator::router::{warm_variant, Router};
 use crate::core::{OtprError, Result};
 use crate::runtime::XlaRuntime;
 use crate::util::pool;
+use crate::util::rng::SplitMix64;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// When and how deadline-pressured jobs trade accuracy for an answer
+/// instead of returning a cancelled, guarantee-free completion.
+#[derive(Debug, Clone)]
+pub struct DegradePolicy {
+    /// Master switch; off preserves the legacy cancel-at-deadline
+    /// behavior exactly.
+    pub enabled: bool,
+    /// ε multiplier per coordinator-side re-solve step (warm ladders
+    /// degrade on their own level schedule first).
+    pub eps_factor: f64,
+    /// Coarser-ε re-solve attempts before falling back to the partial
+    /// answer with its certificate.
+    pub max_steps: u32,
+    /// Extra wall-clock granted to each re-solve step.
+    pub grace: Duration,
+}
+
+impl Default for DegradePolicy {
+    fn default() -> Self {
+        Self { enabled: false, eps_factor: 2.0, max_steps: 2, grace: Duration::from_millis(100) }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -43,6 +112,24 @@ pub struct CoordinatorConfig {
     /// ([`Metrics::record_audit`]). `0` disables auditing; `1` certifies
     /// every job. Cancelled solves are exempt (they carry no guarantee).
     pub audit_sample_every: u64,
+    /// Per-tenant default deadline applied to every job; a job's
+    /// effective deadline is the tighter of this and its own request
+    /// budget. `None` leaves budget-less jobs deadline-free.
+    pub default_deadline: Option<Duration>,
+    /// Transient-failure retry budget per job (extra attempts beyond the
+    /// first; `0` fails on the first transient).
+    pub max_retries: u32,
+    /// Base backoff before a retry re-enters the dispatcher; doubles per
+    /// attempt with deterministic per-job jitter.
+    pub retry_backoff: Duration,
+    /// Worker respawns allowed across the coordinator's lifetime; once
+    /// exhausted, dead workers stay dead and — with the pool empty —
+    /// queued jobs fail terminally rather than hang.
+    pub restart_budget: u32,
+    pub degrade: DegradePolicy,
+    /// Deterministic fault injection (tests and chaos runs); `None`
+    /// injects nothing.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -53,6 +140,12 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             solver_threads: pool::default_threads(),
             audit_sample_every: 0,
+            default_deadline: None,
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(5),
+            restart_budget: 4,
+            degrade: DegradePolicy::default(),
+            faults: None,
         }
     }
 }
@@ -61,6 +154,10 @@ struct Envelope {
     req: JobRequest,
     engine: Engine,
     submitted: Instant,
+    /// 0 on first execution; retries re-enter with `attempt + 1`.
+    attempt: u32,
+    /// Effective deadline resolved at submit (budget ∧ tenant default).
+    deadline: Option<Instant>,
     reply: Sender<JobOutcome>,
 }
 
@@ -92,8 +189,9 @@ pub struct Coordinator {
     tx: SyncSender<DispatchMsg>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    default_deadline: Option<Duration>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -104,28 +202,55 @@ impl Coordinator {
         // batch queue: dispatcher -> workers
         let (batch_tx, batch_rx) = sync_channel::<Vec<Envelope>>(config.queue_capacity);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
+        // retry path: workers -> dispatcher, unbounded so a worker can
+        // never deadlock against a full dispatcher
+        let (retry_tx, retry_rx) = channel::<(Instant, Envelope)>();
 
         let dispatcher = {
             let metrics = metrics.clone();
             let batcher_cfg = config.batcher.clone();
             let router = router.clone();
+            let retry_backoff = config.retry_backoff;
+            let shed_enabled = config.default_deadline.is_some();
             std::thread::spawn(move || {
-                dispatcher_loop(dispatch_rx, batch_tx, batcher_cfg, metrics, router)
+                dispatcher_loop(
+                    dispatch_rx,
+                    retry_rx,
+                    batch_tx,
+                    batcher_cfg,
+                    metrics,
+                    router,
+                    retry_backoff,
+                    shed_enabled,
+                )
             })
         };
 
-        let mut workers = Vec::new();
-        for _ in 0..config.workers.max(1) {
-            let rx = batch_rx.clone();
-            let router = router.clone();
-            let metrics = metrics.clone();
-            let audit_every = config.audit_sample_every;
-            workers.push(std::thread::spawn(move || {
-                worker_loop(rx, router, metrics, audit_every)
-            }));
-        }
+        let ctx = Arc::new(WorkerCtx {
+            router,
+            metrics: metrics.clone(),
+            audit_every: config.audit_sample_every,
+            max_retries: config.max_retries,
+            retry_backoff: config.retry_backoff,
+            degrade: config.degrade.clone(),
+            faults: config.faults.clone(),
+            shed_enabled: config.default_deadline.is_some(),
+            retry_tx,
+        });
+        let workers = config.workers.max(1);
+        let restart_budget = config.restart_budget;
+        let supervisor = std::thread::spawn(move || {
+            supervisor_loop(batch_rx, ctx, workers, restart_budget)
+        });
 
-        Self { tx, metrics, next_id: AtomicU64::new(1), dispatcher: Some(dispatcher), workers }
+        Self {
+            tx,
+            metrics,
+            next_id: AtomicU64::new(1),
+            default_deadline: config.default_deadline,
+            dispatcher: Some(dispatcher),
+            supervisor: Some(supervisor),
+        }
     }
 
     /// Submit a job at accuracy `eps` with default request settings;
@@ -137,7 +262,9 @@ impl Coordinator {
     /// Submit a job with a full [`SolveRequest`] — wall-clock budget,
     /// cancellation token, and progress observer are honored by the
     /// executing engine; progress additionally feeds the coordinator's
-    /// per-engine phase metrics.
+    /// per-engine phase metrics. The job's effective deadline is resolved
+    /// here: the tighter of the request budget and the coordinator's
+    /// [`CoordinatorConfig::default_deadline`].
     pub fn submit_request(
         &self,
         kind: JobKind,
@@ -146,13 +273,17 @@ impl Coordinator {
     ) -> Result<JobHandle> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let submitted = Instant::now();
+        let deadline = request.effective_deadline(submitted, self.default_deadline);
         let req = JobRequest { id, kind, request, engine };
         self.metrics.record_submit();
         self.tx
             .send(DispatchMsg::Job(Envelope {
                 req,
                 engine,
-                submitted: Instant::now(),
+                submitted,
+                attempt: 0,
+                deadline,
                 reply: reply_tx,
             }))
             .map_err(|_| {
@@ -162,14 +293,16 @@ impl Coordinator {
         Ok(JobHandle { id, rx: reply_rx })
     }
 
-    /// Graceful shutdown: flush batches, join threads.
+    /// Graceful shutdown: flush batches, join threads. Retries still in
+    /// backoff at this point resolve terminally (Failed) — shutdown never
+    /// waits out a backoff timer and never leaves a handle hanging.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(DispatchMsg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
     }
 }
@@ -180,10 +313,74 @@ impl Drop for Coordinator {
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
     }
+}
+
+/// Reply to the job's handle; a receiver dropped without `wait()` is
+/// counted as an abandoned job (the outcome had nowhere to land).
+fn send_outcome(metrics: &Metrics, reply: &Sender<JobOutcome>, outcome: JobOutcome) {
+    if reply.send(outcome).is_err() {
+        metrics.record_abandoned();
+    }
+}
+
+/// Terminal failure for a job that never got (or kept) a worker.
+fn fail_env(metrics: &Metrics, env: Envelope, msg: &str) {
+    let queued = env.submitted.elapsed().as_secs_f64();
+    metrics.record_done(env.engine.name(), false, queued, 0.0);
+    send_outcome(
+        metrics,
+        &env.reply,
+        JobOutcome {
+            id: env.req.id,
+            engine_used: env.engine.name(),
+            status: JobStatus::Failed { attempts: env.attempt },
+            result: Err(msg.to_string()),
+            queued_secs: queued,
+            solve_secs: 0.0,
+        },
+    );
+}
+
+/// Shed a job whose deadline passed before it could be solved.
+fn shed_env(metrics: &Metrics, env: Envelope, retry_after: Duration) {
+    metrics.record_shed();
+    let queued = env.submitted.elapsed().as_secs_f64();
+    send_outcome(
+        metrics,
+        &env.reply,
+        JobOutcome {
+            id: env.req.id,
+            engine_used: env.engine.name(),
+            status: JobStatus::Shed { retry_after },
+            result: Err(format!(
+                "shed: deadline passed before solving; retry after {}ms",
+                retry_after.as_millis()
+            )),
+            queued_secs: queued,
+            solve_secs: 0.0,
+        },
+    );
+}
+
+/// Transient failures are worth retrying: worker death mid-batch,
+/// injected transients, arena-reuse epoch mismatches. Anything else
+/// (unknown engine, unsupported problem kind, missing runtime) is
+/// deterministic and fails fast.
+fn is_transient(msg: &str) -> bool {
+    msg.contains("transient") || msg.contains("panic") || msg.contains("epoch mismatch")
+}
+
+/// Exponential backoff with deterministic per-(job, attempt) jitter in
+/// [0.75, 1.25)× so a batch of retried siblings doesn't re-collide.
+fn backoff_jitter(base: Duration, id: u64, attempt: u32) -> Duration {
+    let exp = base.saturating_mul(1u32 << attempt.min(10));
+    let mut mix = SplitMix64::new(id ^ (u64::from(attempt) << 32));
+    let frac = (mix.next_u64() % 512) as f64 / 1024.0;
+    exp.mul_f64(0.75 + frac)
 }
 
 /// Human/metrics label for a batch key: `engine` or `engine/bucket`.
@@ -194,67 +391,361 @@ fn key_label(key: &crate::coordinator::batcher::BatchKey) -> String {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_loop(
     rx: Receiver<DispatchMsg>,
+    retry_rx: Receiver<(Instant, Envelope)>,
     batch_tx: SyncSender<Vec<Envelope>>,
     cfg: BatcherConfig,
     metrics: Arc<Metrics>,
     router: Arc<Router>,
+    retry_backoff: Duration,
+    shed_enabled: bool,
 ) {
     let mut batcher: Batcher<Envelope> = Batcher::new(cfg);
-    let close = |batch: crate::coordinator::batcher::Batch<Envelope>,
-                     tx: &SyncSender<Vec<Envelope>>|
-     -> bool {
+    // Retries waiting out their backoff; folded into the poll timeout.
+    let mut pending: Vec<(Instant, Envelope)> = Vec::new();
+
+    // Close a batch toward the worker pool. When every worker is gone
+    // (restart budget exhausted) the send fails and the batch's jobs are
+    // failed terminally — queued work must never hang on a dead pool.
+    let close = |batch: crate::coordinator::batcher::Batch<Envelope>| -> bool {
         metrics.record_batch(
             &key_label(&batch.key),
             batch.jobs.len(),
             batch.wait().as_micros() as u64,
         );
-        tx.send(batch.jobs).is_ok()
-    };
-    loop {
-        // poll with a deadline so expiring batches flush promptly
-        let timeout = batcher
-            .next_deadline()
-            .map(|d| d.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(DispatchMsg::Job(mut env)) => {
-                // Resolve Auto and the artifact bucket here, once, so the
-                // batch key is final and workers never re-route.
-                let engine = router.resolve(&env.req);
-                if env.req.engine == Engine::Auto {
-                    metrics.record_auto_route(engine.name());
+        match batch_tx.send(batch.jobs) {
+            Ok(()) => true,
+            Err(std::sync::mpsc::SendError(jobs)) => {
+                for env in jobs {
+                    fail_env(&metrics, env, "worker pool exhausted; job was not executed");
                 }
-                env.engine = engine;
-                let key = (engine.name(), router.bucket(&env.req, engine));
-                if let Some(batch) = batcher.push(key, env) {
-                    if !close(batch, &batch_tx) {
-                        return;
-                    }
+                false
+            }
+        }
+    };
+
+    // Shed or enqueue one job; false = worker pool gone. Shedding applies
+    // under a tenant default deadline, and always to expired retries; a
+    // first-attempt job deadlined only by its own budget keeps the legacy
+    // run-and-return-cancelled semantics.
+    let push_job = |batcher: &mut Batcher<Envelope>, mut env: Envelope| -> bool {
+        if (shed_enabled || env.attempt > 0) && env.deadline.is_some_and(|d| d <= Instant::now()) {
+            shed_env(&metrics, env, retry_backoff);
+            return true;
+        }
+        // Resolve Auto and the artifact bucket here, once, so the batch
+        // key is final and workers never re-route.
+        let engine = router.resolve(&env.req);
+        if env.req.engine == Engine::Auto && env.attempt == 0 {
+            metrics.record_auto_route(engine.name());
+        }
+        env.engine = engine;
+        let key = (engine.name(), router.bucket(&env.req, engine));
+        if env.attempt > 0 {
+            // A retry already paid its accumulation wait once — close it
+            // (plus any same-key waiters) toward the pool immediately.
+            let batch = batcher.push_now(key, env);
+            return close(batch);
+        }
+        match batcher.push(key, env) {
+            Some(batch) => close(batch),
+            None => true,
+        }
+    };
+
+    let drain_retry_rx = |pending: &mut Vec<(Instant, Envelope)>| {
+        while let Ok(item) = retry_rx.try_recv() {
+            pending.push(item);
+        }
+    };
+    let fail_pending = |pending: &mut Vec<(Instant, Envelope)>, msg: &str| {
+        for (_, env) in pending.drain(..) {
+            fail_env(&metrics, env, msg);
+        }
+    };
+
+    'live: loop {
+        drain_retry_rx(&mut pending);
+        // Release retries whose backoff elapsed (push_job sheds the ones
+        // whose deadline expired while backing off).
+        let now = Instant::now();
+        let mut i = 0;
+        while i < pending.len() {
+            if pending[i].0 <= now {
+                let (_, env) = pending.swap_remove(i);
+                if !push_job(&mut batcher, env) {
+                    break 'live;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        let next_retry = pending.iter().map(|(due, _)| *due).min();
+        let timeout = [batcher.next_deadline(), next_retry]
+            .into_iter()
+            .flatten()
+            .min()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50))
+            .min(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(DispatchMsg::Job(env)) => {
+                if !push_job(&mut batcher, env) {
+                    break 'live;
                 }
             }
             Ok(DispatchMsg::Shutdown) => {
                 for batch in batcher.drain_all() {
-                    let _ = close(batch, &batch_tx);
+                    let _ = close(batch);
                 }
+                drain_retry_rx(&mut pending);
+                fail_pending(&mut pending, "coordinator shut down before the retry could run");
                 return; // dropping batch_tx stops workers
             }
             Err(RecvTimeoutError::Timeout) => {
+                let mut dead = false;
                 for batch in batcher.drain_expired() {
-                    if !close(batch, &batch_tx) {
-                        return;
+                    if !close(batch) {
+                        dead = true;
                     }
+                }
+                if dead {
+                    break 'live;
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 for batch in batcher.drain_all() {
-                    let _ = close(batch, &batch_tx);
+                    let _ = close(batch);
                 }
+                drain_retry_rx(&mut pending);
+                fail_pending(&mut pending, "coordinator dropped before the retry could run");
                 return;
             }
         }
     }
+
+    // Worker pool exhausted: fail everything queued, then keep answering
+    // (terminally) until shutdown so no submitter ever hangs or loses a
+    // reply.
+    for batch in batcher.drain_all() {
+        let _ = close(batch);
+    }
+    drain_retry_rx(&mut pending);
+    fail_pending(&mut pending, "worker pool exhausted; job was not executed");
+    loop {
+        match rx.recv() {
+            Ok(DispatchMsg::Job(env)) => {
+                fail_env(&metrics, env, "worker pool exhausted; job was not executed")
+            }
+            Ok(DispatchMsg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+/// Base pause before respawning a panicked worker; doubles per restart
+/// (capped) so a crash-looping batch cannot spin the supervisor.
+const RESTART_BACKOFF: Duration = Duration::from_millis(2);
+const RESTART_BACKOFF_CAP: Duration = Duration::from_millis(250);
+
+/// Owns the worker pool: spawns the initial workers, collects their exit
+/// events, and respawns panicked ones under the restart budget. Holds the
+/// last clone of the batch receiver, so when the supervisor returns (all
+/// slots empty) the dispatcher's sends start failing and queued jobs
+/// resolve terminally instead of hanging.
+fn supervisor_loop(
+    rx: Arc<Mutex<Receiver<Vec<Envelope>>>>,
+    ctx: Arc<WorkerCtx>,
+    workers: usize,
+    restart_budget: u32,
+) {
+    let (event_tx, event_rx) = channel::<bool>();
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let spawn_worker = |handles: &mut Vec<std::thread::JoinHandle<()>>| {
+        let rx = rx.clone();
+        let ctx = ctx.clone();
+        let tx = event_tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let panicked = worker_loop(rx, ctx);
+            let _ = tx.send(panicked);
+        }));
+    };
+    for _ in 0..workers {
+        spawn_worker(&mut handles);
+    }
+    let mut live = workers;
+    let mut restarts = 0u32;
+    while live > 0 {
+        // Every live worker sends exactly one exit event, so this recv
+        // cannot block past the pool's lifetime.
+        let Ok(panicked) = event_rx.recv() else { break };
+        if panicked && restarts < restart_budget {
+            let backoff =
+                RESTART_BACKOFF.saturating_mul(1u32 << restarts.min(7)).min(RESTART_BACKOFF_CAP);
+            std::thread::sleep(backoff);
+            restarts += 1;
+            ctx.metrics.record_worker_restart();
+            spawn_worker(&mut handles);
+        } else {
+            // Clean exit (channel closed at shutdown) or restart budget
+            // exhausted: the slot stays empty.
+            live -= 1;
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Everything a worker needs besides the batch receiver.
+struct WorkerCtx {
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    audit_every: u64,
+    max_retries: u32,
+    retry_backoff: Duration,
+    degrade: DegradePolicy,
+    faults: Option<Arc<FaultPlan>>,
+    /// Mirror of `default_deadline.is_some()`: pickup-shedding applies
+    /// under a tenant default (and always to retries), never to a
+    /// first-attempt job deadlined only by its own budget.
+    shed_enabled: bool,
+    retry_tx: Sender<(Instant, Envelope)>,
+}
+
+/// One job being processed by a worker. `reply` is taken exactly when a
+/// terminal outcome (or a retry hand-off) happens — after a caught panic,
+/// any job still holding its reply is known to be unresolved.
+struct Prepared {
+    req: JobRequest,
+    engine: Engine,
+    submitted: Instant,
+    attempt: u32,
+    deadline: Option<Instant>,
+    reply: Option<Sender<JobOutcome>>,
+    phase_count: Arc<AtomicU64>,
+}
+
+/// Queue time + a per-job phase counter teed into the request's observer
+/// chain (folded into the metrics lock once per job, not per phase)
+/// without disturbing any caller-supplied observer.
+fn prepare(batch: Vec<Envelope>) -> Vec<Prepared> {
+    batch
+        .into_iter()
+        .map(|env| {
+            let mut req = env.req;
+            let phase_count = Arc::new(AtomicU64::new(0));
+            let counter = phase_count.clone();
+            req.request = req.request.chain_observer(move |_p| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+            Prepared {
+                req,
+                engine: env.engine,
+                submitted: env.submitted,
+                attempt: env.attempt,
+                deadline: env.deadline,
+                reply: Some(env.reply),
+                phase_count,
+            }
+        })
+        .collect()
+}
+
+/// Returns `true` when the worker is exiting because it caught a panic
+/// (the supervisor then decides about a respawn); `false` on clean
+/// shutdown (batch channel closed).
+fn worker_loop(rx: Arc<Mutex<Receiver<Vec<Envelope>>>>, ctx: Arc<WorkerCtx>) -> bool {
+    loop {
+        let batch = {
+            // A poisoned receiver lock means a sibling worker panicked
+            // mid-recv; the channel itself is still sound, so keep draining
+            // rather than wedging the whole worker pool.
+            let guard = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            guard.recv()
+        };
+        let Ok(batch) = batch else { return false };
+        let mut jobs = prepare(batch);
+        // The whole batch runs supervised: a panic (solver bug or injected
+        // fault) unwinds to here instead of killing the process, and only
+        // this batch's unresolved jobs are affected.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            process_batch(&mut jobs, &ctx);
+        }));
+        if caught.is_err() {
+            ctx.metrics.record_worker_panic();
+            // Jobs still holding their reply never reached a terminal
+            // outcome — requeue (or fail) each, then exit and let the
+            // supervisor decide whether this worker is replaced.
+            for job in jobs {
+                if job.reply.is_some() {
+                    retry_or_fail(&ctx, job, "transient: worker panicked over this batch");
+                }
+            }
+            return true;
+        }
+    }
+}
+
+/// Requeue a transient casualty through the dispatcher with backoff, or
+/// fail it terminally when the retry budget (or the dispatcher) is gone.
+fn retry_or_fail(ctx: &WorkerCtx, mut job: Prepared, reason: &str) {
+    let Some(reply) = job.reply.take() else { return };
+    let queued = job.submitted.elapsed().as_secs_f64();
+    if is_transient(reason) && job.attempt < ctx.max_retries {
+        ctx.metrics.record_retry();
+        let due = Instant::now() + backoff_jitter(ctx.retry_backoff, job.req.id, job.attempt);
+        let env = Envelope {
+            req: job.req,
+            engine: job.engine,
+            submitted: job.submitted,
+            attempt: job.attempt + 1,
+            deadline: job.deadline,
+            reply,
+        };
+        match ctx.retry_tx.send((due, env)) {
+            Ok(()) => return,
+            Err(std::sync::mpsc::SendError((_, env))) => {
+                fail_env(&ctx.metrics, env, reason);
+                return;
+            }
+        }
+    }
+    ctx.metrics.record_done(job.engine.name(), false, queued, 0.0);
+    send_outcome(
+        &ctx.metrics,
+        &reply,
+        JobOutcome {
+            id: job.req.id,
+            engine_used: job.engine.name(),
+            status: JobStatus::Failed { attempts: job.attempt + 1 },
+            result: Err(reason.to_string()),
+            queued_secs: queued,
+            solve_secs: 0.0,
+        },
+    );
+}
+
+/// Shed one prepared job whose deadline passed at pickup.
+fn shed_prepared(ctx: &WorkerCtx, mut job: Prepared) {
+    let Some(reply) = job.reply.take() else { return };
+    ctx.metrics.record_shed();
+    send_outcome(
+        &ctx.metrics,
+        &reply,
+        JobOutcome {
+            id: job.req.id,
+            engine_used: job.engine.name(),
+            status: JobStatus::Shed { retry_after: ctx.retry_backoff },
+            result: Err(format!(
+                "shed: deadline passed before solving; retry after {}ms",
+                ctx.retry_backoff.as_millis()
+            )),
+            queued_secs: job.submitted.elapsed().as_secs_f64(),
+            solve_secs: 0.0,
+        },
+    );
 }
 
 /// Shape key for intra-batch grouping: jobs that can share one kernel
@@ -271,131 +762,254 @@ fn shape_key(req: &JobRequest) -> (u8, usize, usize) {
     }
 }
 
-fn worker_loop(
-    rx: Arc<Mutex<Receiver<Vec<Envelope>>>>,
-    router: Arc<Router>,
-    metrics: Arc<Metrics>,
-    audit_every: u64,
-) {
-    loop {
-        let batch = {
-            // A poisoned receiver lock means a sibling worker panicked
-            // mid-recv; the channel itself is still sound, so keep draining
-            // rather than wedging the whole worker pool.
-            let guard = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
-            guard.recv()
-        };
-        let Ok(batch) = batch else { return };
+/// The overall-semantics ε a degraded answer's certificate verifies
+/// against, from the raw ladder parameter `p` it stopped at: the core
+/// runs matchings at ε/3 of the overall target, and OT plans certify at
+/// 6× the matching quantization (see `core::certify::degraded_request`).
+fn degraded_overall_eps(sol: &Solution, p: f64) -> f64 {
+    match &sol.coupling {
+        Coupling::Matching(_) => 3.0 * p,
+        Coupling::Plan(_) => 6.0 * p,
+    }
+}
 
-        // Prepare every job: queue time + a per-job phase counter teed
-        // into the request's observer chain (folded into the metrics lock
-        // once per job, not per phase) without disturbing any
-        // caller-supplied observer.
-        struct Prepared {
-            req: JobRequest,
-            engine: Engine,
-            reply: Sender<JobOutcome>,
-            submitted: Instant,
-            phase_count: Arc<AtomicU64>,
+/// Decide the terminal status of a successful solve, re-solving at a
+/// coarser ε when deadline pressure cancelled it and the policy allows.
+fn disposition_ok(ctx: &WorkerCtx, job: &Prepared, sol: Solution) -> (Solution, JobStatus) {
+    if let Some(p) = sol.degraded_eps_param() {
+        // The warm ladder already degraded (mechanism A): attach the
+        // certificate the status promises and report the overall ε it
+        // verifies against.
+        ctx.metrics.record_degraded();
+        let mut sol = sol;
+        if sol.certificate.is_none() {
+            sol.certificate =
+                Some(crate::core::certify::certify(&job.req.kind, &sol, &job.req.request));
         }
-        let jobs: Vec<Prepared> = batch
-            .into_iter()
-            .map(|env| {
-                let mut req = env.req;
-                let phase_count = Arc::new(AtomicU64::new(0));
-                let counter = phase_count.clone();
-                req.request = req.request.chain_observer(move |_p| {
-                    counter.fetch_add(1, Ordering::Relaxed);
-                });
-                Prepared {
-                    req,
-                    engine: env.engine,
-                    reply: env.reply,
-                    submitted: env.submitted,
-                    phase_count,
-                }
-            })
-            .collect();
+        let eps = degraded_overall_eps(&sol, p);
+        return (sol, JobStatus::Degraded { eps });
+    }
+    if sol.is_cancelled()
+        && ctx.degrade.enabled
+        && job.deadline.is_some()
+        && !job.req.request.cancel.is_cancelled()
+    {
+        // The deadline — not the caller's token — cancelled a ladder-less
+        // solve: trade accuracy for an answer (mechanism B).
+        return resolve_degraded(ctx, job, sol);
+    }
+    (sol, JobStatus::Served)
+}
 
-        // Group same-shape jobs (the dispatcher already grouped by
-        // engine+bucket) and execute each group as one closed batch, so
-        // kernel-backed engines reuse one arena across the group. Each
-        // group's replies flush as soon as it finishes — a fast group is
-        // never held behind a slow one.
-        let mut groups: Vec<((u8, usize, usize), Vec<usize>)> = Vec::new();
-        for (i, job) in jobs.iter().enumerate() {
-            let key = shape_key(&job.req);
-            match groups.iter_mut().find(|(k, _)| *k == key) {
-                Some((_, idxs)) => idxs.push(i),
-                None => groups.push((key, vec![i])),
+/// Mechanism B: re-solve at geometrically coarser ε on the engine's warm
+/// variant under the grace budget, asking the registry to attach a
+/// certificate. Falls back to the partial (lazy-product / arbitrary-
+/// completion) answer with an honest certificate when grace runs out.
+fn resolve_degraded(ctx: &WorkerCtx, job: &Prepared, partial: Solution) -> (Solution, JobStatus) {
+    let engine = warm_variant(job.engine);
+    let mut eps = job.req.request.eps;
+    for _ in 0..ctx.degrade.max_steps {
+        eps *= ctx.degrade.eps_factor;
+        let mut request = job.req.request.clone();
+        request.eps = eps;
+        request.budget = Some(ctx.degrade.grace);
+        request.want_certificate = true;
+        request.degrade_on_deadline = false;
+        let retry = JobRequest { id: job.req.id, kind: job.req.kind.clone(), request, engine };
+        if let Ok(sol) = ctx.router.execute(&retry, engine) {
+            if !sol.is_cancelled() {
+                ctx.metrics.record_degraded();
+                return (sol, JobStatus::Degraded { eps });
             }
         }
-        // Audit sampling clones collected here and certified only after
-        // every reply is out, so the O(n²) certify pass never adds to any
-        // client-observed latency (one solution clone buys that).
-        let mut audits: Vec<(usize, Solution)> = Vec::new();
-        for (_, idxs) in &groups {
-            let engine = jobs[idxs[0]].engine;
-            // queue time up to the group start; head-of-line wait behind
-            // earlier items in the same group is added back below so
-            // batched jobs keep honest latency accounting
-            let at_group_start: Vec<f64> =
-                idxs.iter().map(|&i| jobs[i].submitted.elapsed().as_secs_f64()).collect();
-            let t = Instant::now();
-            let reqs: Vec<&JobRequest> = idxs.iter().map(|&i| &jobs[i].req).collect();
-            let outs: Vec<Result<Solution, String>> = router
-                .execute_batch(&reqs, engine)
-                .into_iter()
-                .map(|r| r.map_err(|e| e.to_string()))
-                .collect();
-            let per_job_fallback = t.elapsed().as_secs_f64() / idxs.len() as f64;
-            let mut head_wait = 0.0;
-            for ((&i, result), q0) in idxs.iter().zip(outs).zip(at_group_start) {
-                let job = &jobs[i];
-                let solve = match &result {
-                    Ok(sol) if sol.stats.seconds > 0.0 => sol.stats.seconds,
-                    _ => per_job_fallback,
-                };
-                let queued = q0 + head_wait;
-                head_wait += solve;
-                metrics.record_phases(job.engine.name(), job.phase_count.load(Ordering::Relaxed));
-                metrics.record_done(job.engine.name(), result.is_ok(), queued, solve);
-                if let Ok(sol) = &result {
+    }
+    ctx.metrics.record_degraded();
+    let mut sol = partial;
+    if sol.certificate.is_none() {
+        sol.certificate =
+            Some(crate::core::certify::certify(&job.req.kind, &sol, &job.req.request));
+    }
+    // No accuracy claim survives — the certificate reports what holds.
+    let eps = f64::INFINITY;
+    (sol, JobStatus::Degraded { eps })
+}
+
+/// Execute one batch: disposal pass (pickup-deadline shed, injected
+/// faults, budget clamping), then shape-grouped solves with per-job
+/// terminal dispositions. Runs entirely inside the worker's supervised
+/// (`catch_unwind`) region.
+fn process_batch(jobs: &mut Vec<Prepared>, ctx: &WorkerCtx) {
+    // Disposal pass. Order matters: an injected panic fires before the
+    // job could be shed or failed, exactly like a real solver panic.
+    let mut i = 0;
+    while i < jobs.len() {
+        let now = Instant::now();
+        let id = jobs[i].req.id;
+        let attempt = jobs[i].attempt;
+        let fault = ctx.faults.as_ref().and_then(|p| p.lookup(id, attempt));
+        match fault {
+            Some(Fault::Panic) => {
+                // panic-ok: deterministic fault injection — supervision
+                // must observe a real unwind exactly where a solver panic
+                // would fire.
+                panic!("injected fault: worker panic at job {id} (attempt {attempt})");
+            }
+            Some(Fault::Delay(d)) => std::thread::sleep(d),
+            _ => {}
+        }
+        if (ctx.shed_enabled || attempt > 0) && jobs[i].deadline.is_some_and(|d| d <= now) {
+            let job = jobs.swap_remove(i);
+            shed_prepared(ctx, job);
+            continue;
+        }
+        if matches!(fault, Some(Fault::Transient)) {
+            let job = jobs.swap_remove(i);
+            retry_or_fail(ctx, job, "injected transient fault");
+            continue;
+        }
+        if let Some(d) = jobs[i].deadline {
+            // Clamp the solve to the remaining deadline and let the policy
+            // prefer a degraded answer over a cancelled one.
+            let rem = d.saturating_duration_since(now);
+            if jobs[i].req.request.budget.map_or(true, |b| rem < b) {
+                jobs[i].req.request.budget = Some(rem);
+            }
+            if ctx.degrade.enabled {
+                jobs[i].req.request.degrade_on_deadline = true;
+            }
+        }
+        i += 1;
+    }
+
+    // Group same-shape jobs (the dispatcher already grouped by
+    // engine+bucket) and execute each group as one closed batch, so
+    // kernel-backed engines reuse one arena across the group. Each
+    // group's replies flush as soon as it finishes — a fast group is
+    // never held behind a slow one.
+    let mut groups: Vec<((u8, usize, usize), Vec<usize>)> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        let key = shape_key(&job.req);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((key, vec![i])),
+        }
+    }
+    // Audit sampling clones collected here and certified only after
+    // every reply is out, so the O(n²) certify pass never adds to any
+    // client-observed latency (one solution clone buys that).
+    let mut audits: Vec<(usize, Solution)> = Vec::new();
+    for (_, idxs) in &groups {
+        let engine = jobs[idxs[0]].engine;
+        // queue time up to the group start; head-of-line wait behind
+        // earlier items in the same group is added back below so
+        // batched jobs keep honest latency accounting
+        let at_group_start: Vec<f64> =
+            idxs.iter().map(|&i| jobs[i].submitted.elapsed().as_secs_f64()).collect();
+        let t = Instant::now();
+        let reqs: Vec<&JobRequest> = idxs.iter().map(|&i| &jobs[i].req).collect();
+        let outs: Vec<std::result::Result<Solution, String>> = ctx
+            .router
+            .execute_batch(&reqs, engine)
+            .into_iter()
+            .map(|r| r.map_err(|e| e.to_string()))
+            .collect();
+        let per_job_fallback = t.elapsed().as_secs_f64() / idxs.len() as f64;
+        let mut head_wait = 0.0;
+        for ((&i, result), q0) in idxs.iter().zip(outs).zip(at_group_start) {
+            let solve = match &result {
+                Ok(sol) if sol.stats.seconds > 0.0 => sol.stats.seconds,
+                _ => per_job_fallback,
+            };
+            let queued = q0 + head_wait;
+            head_wait += solve;
+            let engine_name = jobs[i].engine.name();
+            match result {
+                Ok(sol) => {
+                    let (sol, status) = disposition_ok(ctx, &jobs[i], sol);
+                    ctx.metrics
+                        .record_phases(engine_name, jobs[i].phase_count.load(Ordering::Relaxed));
+                    ctx.metrics.record_done(engine_name, true, queued, solve);
                     if sol.stats.arena_reused {
-                        metrics.record_arena_reuse(1);
+                        ctx.metrics.record_arena_reuse(1);
                     }
                     if sol.stats.warm_started {
-                        metrics.record_warm_start(job.engine.name());
+                        ctx.metrics.record_warm_start(engine_name);
                     }
                     // plan-payload accounting: O(nnz) for kernel CSR
                     // answers, the dense slab for Sinkhorn/SSP/XLA
-                    metrics.record_plan_bytes(job.engine.name(), sol.stats.plan_state_bytes);
+                    ctx.metrics.record_plan_bytes(engine_name, sol.stats.plan_state_bytes);
+                    // A budget-stopped solve is exempt from auditing — it
+                    // deliberately ships without a guarantee.
+                    if ctx.audit_every > 0
+                        && jobs[i].req.id % ctx.audit_every == 0
+                        && !sol.is_cancelled()
+                    {
+                        audits.push((i, sol.clone()));
+                    }
+                    if let Some(reply) = jobs[i].reply.take() {
+                        send_outcome(
+                            &ctx.metrics,
+                            &reply,
+                            JobOutcome {
+                                id: jobs[i].req.id,
+                                engine_used: engine_name,
+                                status,
+                                result: Ok(sol),
+                                queued_secs: queued,
+                                solve_secs: solve,
+                            },
+                        );
+                    }
                 }
-                // A budget-stopped solve is exempt from auditing — it
-                // deliberately ships without a guarantee.
-                if audit_every > 0 && job.req.id % audit_every == 0 {
-                    if let Ok(sol) = &result {
-                        if !sol.is_cancelled() {
-                            audits.push((i, sol.clone()));
+                Err(msg) => {
+                    ctx.metrics
+                        .record_phases(engine_name, jobs[i].phase_count.load(Ordering::Relaxed));
+                    if is_transient(&msg) && jobs[i].attempt < ctx.max_retries {
+                        if let Some(reply) = jobs[i].reply.take() {
+                            ctx.metrics.record_retry();
+                            let due = Instant::now()
+                                + backoff_jitter(ctx.retry_backoff, jobs[i].req.id, jobs[i].attempt);
+                            let env = Envelope {
+                                req: jobs[i].req.clone(),
+                                engine: jobs[i].engine,
+                                submitted: jobs[i].submitted,
+                                attempt: jobs[i].attempt + 1,
+                                deadline: jobs[i].deadline,
+                                reply,
+                            };
+                            if let Err(std::sync::mpsc::SendError((_, env))) =
+                                ctx.retry_tx.send((due, env))
+                            {
+                                fail_env(&ctx.metrics, env, &msg);
+                            }
+                        }
+                    } else {
+                        ctx.metrics.record_done(engine_name, false, queued, solve);
+                        if let Some(reply) = jobs[i].reply.take() {
+                            send_outcome(
+                                &ctx.metrics,
+                                &reply,
+                                JobOutcome {
+                                    id: jobs[i].req.id,
+                                    engine_used: engine_name,
+                                    status: JobStatus::Failed { attempts: jobs[i].attempt + 1 },
+                                    result: Err(msg),
+                                    queued_secs: queued,
+                                    solve_secs: solve,
+                                },
+                            );
                         }
                     }
                 }
-                let _ = job.reply.send(JobOutcome {
-                    id: job.req.id,
-                    engine_used: job.engine.name(),
-                    result,
-                    queued_secs: queued,
-                    solve_secs: solve,
-                });
             }
         }
-        for (i, sol) in audits {
-            let job = &jobs[i];
-            let cert = sol.certificate.clone().unwrap_or_else(|| {
-                crate::core::certify::certify(&job.req.kind, &sol, &job.req.request)
-            });
-            metrics.record_audit(&cert);
-        }
+    }
+    for (i, sol) in audits {
+        let job = &jobs[i];
+        let cert = sol.certificate.clone().unwrap_or_else(|| {
+            crate::core::certify::certify(&job.req.kind, &sol, &job.req.request)
+        });
+        ctx.metrics.record_audit(&cert);
     }
 }
 
@@ -416,6 +1030,7 @@ mod tests {
         let o1 = h1.wait().unwrap();
         let o2 = h2.wait().unwrap();
         assert!(o1.result.is_ok());
+        assert_eq!(o1.status, JobStatus::Served);
         assert!(o2.result.is_ok());
         assert_eq!(o2.engine_used, "native-seq");
         let snap = coord.metrics.snapshot();
@@ -448,6 +1063,11 @@ mod tests {
         let h = coord.submit(assignment_job(8, 1), 0.3, Engine::Xla).unwrap();
         let out = h.wait().unwrap();
         assert!(out.result.is_err());
+        assert!(
+            matches!(out.status, JobStatus::Failed { attempts: 1 }),
+            "a deterministic error fails on the first attempt: {:?}",
+            out.status
+        );
         // coordinator still serves afterwards
         let h2 = coord.submit(assignment_job(8, 2), 0.3, Engine::NativeSeq).unwrap();
         assert!(h2.wait().unwrap().result.is_ok());
@@ -464,6 +1084,79 @@ mod tests {
         assert!(sol.cost.is_finite());
         assert!(sol.plan().is_some(), "OT jobs return a transport plan");
         coord.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_jobs_are_shed_with_retry_hint() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { default_deadline: Some(Duration::ZERO), ..Default::default() },
+            None,
+        );
+        let h = coord.submit(assignment_job(8, 1), 0.3, Engine::NativeSeq).unwrap();
+        let out = h.wait().unwrap();
+        assert!(matches!(out.status, JobStatus::Shed { .. }), "{:?}", out.status);
+        assert!(out.result.is_err());
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        assert_eq!(metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.queue_depth(), 0, "shed jobs leave the queue-depth gauge");
+    }
+
+    #[test]
+    fn injected_worker_panic_is_supervised_and_the_job_retries() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                faults: Some(Arc::new(FaultPlan::new().panic_at(1))),
+                ..Default::default()
+            },
+            None,
+        );
+        let h = coord.submit(assignment_job(10, 1), 0.3, Engine::NativeSeq).unwrap();
+        let out = h.wait().unwrap();
+        assert!(out.result.is_ok(), "the retry after the panic must serve: {:?}", out.result);
+        assert_eq!(out.status, JobStatus::Served);
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        assert_eq!(metrics.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.worker_restarts.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.retried.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.queue_depth(), 0);
+    }
+
+    #[test]
+    fn transient_faults_exhaust_the_retry_budget_into_failed() {
+        let plan = FaultPlan::new()
+            .at_attempt(1, 0, Fault::Transient)
+            .at_attempt(1, 1, Fault::Transient)
+            .at_attempt(1, 2, Fault::Transient);
+        let coord = Coordinator::start(
+            CoordinatorConfig { max_retries: 2, faults: Some(Arc::new(plan)), ..Default::default() },
+            None,
+        );
+        let h = coord.submit(assignment_job(8, 1), 0.3, Engine::NativeSeq).unwrap();
+        let out = h.wait().unwrap();
+        assert!(
+            matches!(out.status, JobStatus::Failed { attempts: 3 }),
+            "attempt 0 + 2 retries, all transient: {:?}",
+            out.status
+        );
+        assert!(out.result.is_err());
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        assert_eq!(metrics.retried.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.queue_depth(), 0);
+    }
+
+    #[test]
+    fn dropped_handles_count_as_abandoned_jobs() {
+        let coord = Coordinator::start(CoordinatorConfig::default(), None);
+        let h = coord.submit(assignment_job(8, 1), 0.3, Engine::NativeSeq).unwrap();
+        drop(h); // never wait()ed — the reply has nowhere to land
+        let metrics = coord.metrics.clone();
+        coord.shutdown(); // joins workers, so the reply attempt has happened
+        assert_eq!(metrics.abandoned_jobs.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.queue_depth(), 0, "abandoned jobs still resolve terminally");
     }
 
     #[test]

@@ -170,6 +170,19 @@ impl Certificate {
 /// `dual_ok = Some(false)` rather than a false pass, because the integer
 /// feasibility identities only hold in the solver's own units.
 pub fn certify(problem: &Problem, sol: &Solution, req: &SolveRequest) -> Certificate {
+    // Degraded answers (deadline-pressured warm ladders stopping at a
+    // level boundary) are feasible in the *achieved* level's quantization,
+    // not the requested one — certify against what the solve actually
+    // delivered, which the caller can read back from the certificate and
+    // `Solution::degraded_eps_param`.
+    let adjusted;
+    let req = match sol.degraded_eps_param() {
+        Some(p) if p > 0.0 => {
+            adjusted = degraded_request(sol, req, p);
+            &adjusted
+        }
+        _ => req,
+    };
     match (&sol.coupling, problem) {
         (Coupling::Matching(m), Problem::Assignment(inst)) => {
             certify_matching(inst, m, sol.duals.as_ref(), sol.cost, req)
@@ -215,6 +228,28 @@ pub fn certify(problem: &Problem, sol: &Solution, req: &SolveRequest) -> Certifi
             Err(e) => Certificate::failed(sol.cost, e.to_string()),
         },
     }
+}
+
+/// The request a degraded answer actually satisfies. Matching answers
+/// carry the 3·ε_param·n·c_max guarantee at the achieved level's ε_param
+/// (raw semantics). Plan answers ran θ at the original eps_mass and
+/// terminated their matching phase at ε_match = `eps_param`; since the
+/// ladder only coarsens (ε_match ≥ eps/6), the overall OT guarantee
+/// `eps_mass/2 + 3·ε_match ≤ 6·ε_match` holds, and the plan checker's
+/// quantization `eps/6` lands back on the achieved ε_match.
+fn degraded_request(sol: &Solution, req: &SolveRequest, eps_param: f64) -> SolveRequest {
+    let mut r = req.clone();
+    match &sol.coupling {
+        Coupling::Matching(_) => {
+            r.eps = eps_param;
+            r.eps_semantics = crate::api::request::EpsSemantics::AlgorithmParam;
+        }
+        Coupling::Plan(_) => {
+            r.eps = 6.0 * eps_param;
+            r.eps_semantics = crate::api::request::EpsSemantics::Overall;
+        }
+    }
+    r
 }
 
 fn certify_matching(

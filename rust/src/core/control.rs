@@ -8,11 +8,20 @@
 use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Note appended to [`crate::solvers::SolveStats::notes`] when a solve was
 /// stopped early by cancellation or budget exhaustion.
 pub const CANCELLED_NOTE: &str = "cancelled";
+
+/// Note prefix recording that a deadline-pressured warm-ladder solve
+/// stopped at a level boundary and returned the last *completed* level's
+/// answer: `degraded_eps_param=<ε>` where `<ε>` is the matching-quantization
+/// parameter the returned state is actually feasible for. Unlike
+/// [`CANCELLED_NOTE`], a degraded answer still carries the paper's additive
+/// guarantee — just at the coarser ε — and certifies against it
+/// ([`crate::core::certify::certify`] is degraded-aware).
+pub const DEGRADED_NOTE_PREFIX: &str = "degraded_eps_param=";
 
 /// Shared cancellation flag. Clone freely; all clones observe `cancel()`.
 #[derive(Debug, Clone, Default)]
@@ -55,6 +64,11 @@ pub struct SolveControl {
     pub(crate) cancel: Option<CancelToken>,
     pub(crate) deadline: Option<Instant>,
     pub(crate) observer: Option<ProgressFn>,
+    /// When set, warm-ladder drivers treat the deadline as a *degrade*
+    /// signal at level boundaries (return the last completed level's
+    /// certified coarser-ε answer) instead of cancelling mid-ladder.
+    /// Explicit token cancellation always cancels.
+    pub(crate) degrade_on_deadline: bool,
 }
 
 impl SolveControl {
@@ -65,10 +79,8 @@ impl SolveControl {
 
     /// True when the solve should stop at the next phase boundary.
     pub fn should_stop(&self) -> bool {
-        if let Some(c) = &self.cancel {
-            if c.is_cancelled() {
-                return true;
-            }
+        if self.cancel_requested() {
+            return true;
         }
         if let Some(d) = self.deadline {
             if Instant::now() >= d {
@@ -76,6 +88,23 @@ impl SolveControl {
             }
         }
         false
+    }
+
+    /// True only when the caller's token was cancelled (ignores deadline).
+    pub fn cancel_requested(&self) -> bool {
+        self.cancel.as_ref().is_some_and(CancelToken::is_cancelled)
+    }
+
+    /// Wall-clock budget left before the deadline (None = unbounded).
+    /// Saturates at zero once the deadline has passed.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+
+    /// Whether deadline pressure should degrade (coarser ε at a ladder
+    /// level boundary) rather than cancel. See the field doc.
+    pub fn degrade_on_deadline(&self) -> bool {
+        self.degrade_on_deadline
     }
 
     pub fn report(&self, phase: usize, free: f64) {
@@ -126,8 +155,24 @@ mod tests {
                 assert_eq!(p.phase, 2);
                 h.fetch_add(1, Ordering::Relaxed);
             })),
+            degrade_on_deadline: false,
         };
         ctl.report(2, 5.0);
         assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn cancel_requested_ignores_deadline() {
+        let ctl = SolveControl {
+            cancel: Some(CancelToken::new()),
+            deadline: Some(Instant::now() - Duration::from_secs(1)),
+            observer: None,
+            degrade_on_deadline: true,
+        };
+        assert!(ctl.should_stop(), "expired deadline must trip should_stop");
+        assert!(!ctl.cancel_requested(), "token not cancelled");
+        assert_eq!(ctl.remaining(), Some(Duration::ZERO));
+        ctl.cancel.as_ref().unwrap().cancel();
+        assert!(ctl.cancel_requested());
     }
 }

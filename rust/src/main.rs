@@ -4,6 +4,9 @@
 //!   solve     solve one assignment instance (any registry engine)
 //!   ot        solve one OT instance with random masses
 //!   serve     run the coordinator service on a synthetic job stream
+//!             (--deadline-ms/--max-retries/--degrade arm fault tolerance;
+//!             --fault-seed + --fault-{panics,transients,delays} inject a
+//!             deterministic chaos storm)
 //!   engines   list the registered solver engines + aliases
 //!   bench     kernel timing sweep {engines}×{n}×{ε} → BENCH_kernel.json
 //!             (--compare <baseline.json> adds the perf regression gate)
@@ -21,7 +24,9 @@
 //! `sinkhorn` are accepted everywhere).
 
 use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry, ENGINE_SPECS};
-use otpr::coordinator::{Coordinator, CoordinatorConfig, Engine, JobKind};
+use otpr::coordinator::{
+    Coordinator, CoordinatorConfig, DegradePolicy, Engine, FaultPlan, JobKind, JobStatus,
+};
 use otpr::data::workloads::Workload;
 use otpr::exp::report::{figure_csv, figure_table};
 use otpr::exp::{ablation, fig1, fig2};
@@ -249,9 +254,39 @@ fn cmd_serve(args: &Args) -> i32 {
     let workers = args.usize_or("workers", 4);
     let n = args.usize_or("n", 200);
     let eps = args.f64_or("eps", 0.2);
-    let engine = Engine::parse(args.get_or("engine", "auto")).unwrap_or(Engine::Auto);
+    let engine = match Engine::try_parse(args.get_or("engine", "auto")) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let budget_ms = args.u64_or("budget-ms", 0);
     let audit = args.u64_or("audit", 0);
+    // fault-tolerance knobs: per-tenant deadline, retry budget, degraded-ε
+    // answers under deadline pressure, and a seeded chaos plan
+    let deadline_ms = args.u64_or("deadline-ms", 0);
+    let max_retries = args.u64_or("max-retries", 2) as u32;
+    let restart_budget = args.u64_or("restart-budget", 4) as u32;
+    let degrade_enabled = args.flag("degrade");
+    let grace_ms = args.u64_or("grace-ms", 100);
+    let fault_panics = args.usize_or("fault-panics", 0);
+    let fault_transients = args.usize_or("fault-transients", 0);
+    let fault_delays = args.usize_or("fault-delays", 0);
+    let faults = if fault_panics + fault_transients + fault_delays > 0 {
+        let plan = FaultPlan::seeded(
+            args.u64_or("fault-seed", 42),
+            jobs as u64,
+            fault_panics,
+            fault_transients,
+            fault_delays,
+            Duration::from_millis(args.u64_or("fault-delay-ms", 5)),
+        );
+        println!("fault plan: {} scheduled fault(s) across {jobs} jobs", plan.len());
+        Some(Arc::new(plan))
+    } else {
+        None
+    };
     let reg = registry(args);
     println!(
         "coordinator: {workers} workers, {jobs} jobs of n={n} (engine={}{})",
@@ -259,7 +294,20 @@ fn cmd_serve(args: &Args) -> i32 {
         if audit > 0 { format!(", auditing every {audit}th job") } else { String::new() }
     );
     let coord = Coordinator::start(
-        CoordinatorConfig { workers, audit_sample_every: audit, ..Default::default() },
+        CoordinatorConfig {
+            workers,
+            audit_sample_every: audit,
+            default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            max_retries,
+            restart_budget,
+            degrade: DegradePolicy {
+                enabled: degrade_enabled,
+                grace: Duration::from_millis(grace_ms),
+                ..Default::default()
+            },
+            faults,
+            ..Default::default()
+        },
         reg,
     );
     let implicit_jobs = matches!(args.get_or("workload", "fig1"), "points" | "implicit");
@@ -283,22 +331,38 @@ fn cmd_serve(args: &Args) -> i32 {
         .collect();
     let mut ok = 0;
     let mut cancelled = 0;
+    let mut degraded = 0;
+    let mut shed = 0;
     for h in handles {
         match h.wait() {
-            Ok(out) => match out.result {
-                Ok(sol) => {
+            Ok(out) => match (out.status, out.result) {
+                (JobStatus::Shed { retry_after }, _) => {
+                    shed += 1;
+                    eprintln!("job {} shed: deadline passed (retry after {retry_after:?})", out.id);
+                }
+                (status, Ok(sol)) => {
                     ok += 1;
+                    if let JobStatus::Degraded { eps } = status {
+                        degraded += 1;
+                        println!("job {} answered at degraded eps={eps:.4}", out.id);
+                    }
                     if sol.is_cancelled() {
                         cancelled += 1;
                     }
                 }
-                Err(e) => eprintln!("job {} failed: {e}", out.id),
+                (_, Err(e)) => eprintln!("job {} failed: {e}", out.id),
             },
             Err(e) => eprintln!("join error: {e}"),
         }
     }
     if cancelled > 0 {
         println!("{cancelled}/{jobs} jobs hit the {budget_ms}ms budget");
+    }
+    if degraded + shed > 0 {
+        println!(
+            "degraded answers: {degraded}/{jobs}, shed past deadline: {shed}/{jobs} \
+             (shed jobs are a contract outcome, not failures)"
+        );
     }
     // Shut down BEFORE exporting: audit certificates are recorded after
     // each reply is sent, so the export is only complete once the worker
@@ -315,7 +379,9 @@ fn cmd_serve(args: &Args) -> i32 {
             Err(e) => eprintln!("could not write {path}: {e}"),
         }
     }
-    if ok == jobs {
+    // Every job must reach a contract outcome: served/degraded (ok) or
+    // shed with a retry hint. Only Failed jobs make the exit nonzero.
+    if ok + shed == jobs {
         0
     } else {
         1

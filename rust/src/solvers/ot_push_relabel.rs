@@ -17,7 +17,7 @@
 //! mass rounding ≤ ε/4 + matching at ε_m = ε/6 contributes 3·ε_m = ε/2
 //! + residual supply shipped greedily ≤ ε/4.
 
-use crate::core::control::{SolveControl, CANCELLED_NOTE};
+use crate::core::control::{SolveControl, CANCELLED_NOTE, DEGRADED_NOTE_PREFIX};
 use crate::core::kernel::{ChunkedKernel, FlowKernel, ScalarKernel, WarmStart};
 use crate::core::provider::CostSource;
 use crate::core::{OtInstance, OtprError, Result, ScaledOtInstance, TransportPlan};
@@ -90,10 +90,19 @@ pub(crate) fn drive_ot_src(
 ) -> Result<OtSolution> {
     let sw = Stopwatch::start();
     let (nb, na) = (src.nb(), src.na());
+    // Level plan shared with drive_assignment via WarmStart::plan.
+    let (schedule, carried, warm_started) = warm.plan(kernel.arena(), nb, na, eps_match);
+    // Degrade mode (opt-in, multi-level ladders only): honor the deadline
+    // at level boundaries, where the arena is a terminated — certifiable —
+    // solve at that level's matching ε; mid-level only the token stops us.
+    // θ is fixed across levels, so a degraded plan is still mass-feasible.
+    let degrade = ctl.degrade_on_deadline() && schedule.len() >= 2;
     // Already stopped (e.g. a shared batch token fired): skip θ-scaling
     // and the arena init entirely and ship the feasible product coupling
     // ν⊗μ — the same cancelled-at-phase-0 answer the adapter layer uses.
-    if ctl.should_stop() {
+    // Degrade-mode deadline expiry instead falls through to run the
+    // coarsest level (capped work, certified answer).
+    if ctl.cancel_requested() || (!degrade && ctl.should_stop()) {
         // `product` is lazy since PR 8: O(nb+na) resident, never an n²
         // slab unless a caller later forces `as_slice()`.
         let plan = TransportPlan::product(supply, demand);
@@ -112,27 +121,47 @@ pub(crate) fn drive_ot_src(
     }
     let scaled = ScaledOtInstance::from_parts(supply, demand, nb.max(na), eps_mass);
     let masses = Some((&scaled.supply_units[..], &scaled.demand_units[..]));
-    // Level plan shared with drive_assignment via WarmStart::plan.
-    let (schedule, carried, warm_started) = warm.plan(kernel.arena(), nb, na, eps_match);
     if carried {
         kernel.arena_mut().warm_reinit_src(src, eps_match, masses);
     } else {
         kernel.init_src(src, schedule[0], masses);
     }
     let mut cancelled = false;
+    let mut degraded_at: Option<f64> = None;
+    let mut last_completed: Option<f64> = None;
+    let mut last_level_secs = 0.0f64;
     let mut levels_run = 0u32;
     let mut levels_skipped = 0u32;
     let mut li = 0usize;
     'levels: while li < schedule.len() {
         let eps_l = schedule[li];
+        if degrade && levels_run > 0 {
+            // Boundary degrade gate, mirroring drive_assignment: stop with
+            // the previous level's certified answer when the deadline
+            // passed or the remaining budget cannot cover another level.
+            let pressed = ctl.should_stop()
+                || ctl.remaining().is_some_and(|r| r.as_secs_f64() < last_level_secs);
+            if pressed {
+                if ctl.cancel_requested() {
+                    cancelled = true;
+                } else {
+                    degraded_at = last_completed;
+                }
+                break 'levels;
+            }
+        }
         if levels_run > 0 {
             kernel.arena_mut().rescale_src(src, eps_l);
         }
         levels_run += 1;
+        let level_sw = Stopwatch::start();
         let cap = ot_phase_cap(eps_l);
         let level_start = kernel.arena().phases;
         loop {
-            if ctl.should_stop() {
+            // Mid-level, degrade mode only honors the caller's token —
+            // the deadline is deferred to the next level boundary.
+            let interrupt = if degrade { ctl.cancel_requested() } else { ctl.should_stop() };
+            if interrupt {
                 cancelled = true;
                 break 'levels;
             }
@@ -150,6 +179,8 @@ pub(crate) fn drive_ot_src(
                 )));
             }
         }
+        last_level_secs = level_sw.elapsed_secs();
+        last_completed = Some(eps_l);
         // Warm-start early-stop, mirroring drive_assignment: a level done
         // in ≤ 1 phase jumps the schedule straight to the target ε.
         let used = kernel.arena().phases - level_start;
@@ -279,6 +310,9 @@ pub(crate) fn drive_ot_src(
     let mut notes = vec![format!("max_clusters={}", arena.max_classes_seen)];
     if cancelled {
         notes.push(CANCELLED_NOTE.to_string());
+    }
+    if let Some(eps_l) = degraded_at {
+        notes.push(format!("{DEGRADED_NOTE_PREFIX}{eps_l}"));
     }
     if levels_skipped > 0 {
         notes.push(format!("warm_skip={levels_skipped}"));

@@ -12,7 +12,7 @@
 //! ≤ ε·nb free vertices are matched arbitrarily for a total additive
 //! error ≤ 3ε·n·c_max (rounding + feasibility + completion).
 
-use crate::core::control::{SolveControl, CANCELLED_NOTE};
+use crate::core::control::{SolveControl, CANCELLED_NOTE, DEGRADED_NOTE_PREFIX};
 use crate::core::duals::check_feasible;
 use crate::core::kernel::{FlowKernel, ScalarKernel, WarmStart};
 use crate::core::matching::Matching;
@@ -74,10 +74,23 @@ pub(crate) fn drive_assignment_src(
             stats: SolveStats::default(),
         });
     }
+    // Level plan (shared with drive_ot via WarmStart::plan): a batch
+    // carry reuses the arena's duals and jumps straight to the target ε;
+    // otherwise a multi-level warm start solves the geometric schedule,
+    // rescaling the arena between levels.
+    let (schedule, carried, warm_started) = warm.plan(kernel.arena(), nb, na, eps_param);
+    // Degrade mode (opt-in, multi-level ladders only): the deadline is
+    // honored at level *boundaries*, where the arena state is a terminated
+    // — hence certifiable — solve at that level's ε. Mid-level the state is
+    // worthless to return, so only the caller's token interrupts phases.
+    let degrade = ctl.degrade_on_deadline() && schedule.len() >= 2;
     // Already stopped (e.g. a shared batch token fired): skip the arena
     // init entirely — remaining batch items abandon near-free with the
-    // same cancelled-at-phase-0 coupling a mid-run stop produces.
-    if ctl.should_stop() {
+    // same cancelled-at-phase-0 coupling a mid-run stop produces. A
+    // degrade-mode deadline expiry instead falls through and runs the
+    // coarsest level: its cost is bounded by the level phase cap and it
+    // yields a certified answer where cancellation yields none.
+    if ctl.cancel_requested() || (!degrade && ctl.should_stop()) {
         let matching = Matching::arbitrary_complete(nb, na);
         let cost = src.matching_cost(&matching);
         return Ok(AssignmentSolution {
@@ -91,30 +104,48 @@ pub(crate) fn drive_assignment_src(
             },
         });
     }
-    // Level plan (shared with drive_ot via WarmStart::plan): a batch
-    // carry reuses the arena's duals and jumps straight to the target ε;
-    // otherwise a multi-level warm start solves the geometric schedule,
-    // rescaling the arena between levels.
-    let (schedule, carried, warm_started) = warm.plan(kernel.arena(), nb, na, eps_param);
     if carried {
         kernel.arena_mut().warm_reinit_src(src, eps_param, None);
     } else {
         kernel.init_src(src, schedule[0], None);
     }
     let mut cancelled = false;
+    let mut degraded_at: Option<f64> = None;
+    let mut last_completed: Option<f64> = None;
+    let mut last_level_secs = 0.0f64;
     let mut levels_run = 0u32;
     let mut levels_skipped = 0u32;
     let mut li = 0usize;
     'levels: while li < schedule.len() {
         let eps_l = schedule[li];
+        if degrade && levels_run > 0 {
+            // Boundary degrade gate: stop with the previous level's
+            // certified answer when the deadline passed, or when the
+            // remaining budget cannot cover a level at least as expensive
+            // as the one just finished (finer levels only cost more).
+            let pressed = ctl.should_stop()
+                || ctl.remaining().is_some_and(|r| r.as_secs_f64() < last_level_secs);
+            if pressed {
+                if ctl.cancel_requested() {
+                    cancelled = true;
+                } else {
+                    degraded_at = last_completed;
+                }
+                break 'levels;
+            }
+        }
         if levels_run > 0 {
             kernel.arena_mut().rescale_src(src, eps_l);
         }
         levels_run += 1;
+        let level_sw = Stopwatch::start();
         let cap = assignment_phase_cap(eps_l);
         let level_start = kernel.arena().phases;
         loop {
-            if ctl.should_stop() {
+            // Mid-level, degrade mode only honors the caller's token —
+            // the deadline is deferred to the next level boundary.
+            let interrupt = if degrade { ctl.cancel_requested() } else { ctl.should_stop() };
+            if interrupt {
                 cancelled = true;
                 break 'levels;
             }
@@ -136,6 +167,8 @@ pub(crate) fn drive_assignment_src(
                 )));
             }
         }
+        last_level_secs = level_sw.elapsed_secs();
+        last_completed = Some(eps_l);
         // Warm-start early-stop: a level that terminated in ≤ 1 phase
         // says the carried duals are already essentially feasible at this
         // coarseness — intermediate levels would only rescale state that
@@ -158,6 +191,9 @@ pub(crate) fn drive_assignment_src(
     let mut notes = Vec::new();
     if cancelled {
         notes.push(CANCELLED_NOTE.to_string());
+    }
+    if let Some(eps_l) = degraded_at {
+        notes.push(format!("{DEGRADED_NOTE_PREFIX}{eps_l}"));
     }
     if levels_skipped > 0 {
         notes.push(format!("warm_skip={levels_skipped}"));

@@ -1,0 +1,230 @@
+//! Chaos tests for the fault-tolerant coordinator (PR 9).
+//!
+//! The contract under test: **every submitted job reaches exactly one
+//! terminal outcome** — Served, Degraded, Shed, or Failed — no matter
+//! what panics, stalls, or dies along the way, and a deadline-pressured
+//! job can trade accuracy for an answer whose certificate still
+//! verifies. Faults are injected through the seeded, step-indexed
+//! [`FaultPlan`], so every run here is deterministic in its seed.
+//!
+//! The soak's fault rate scales with `OTPR_CHAOS_JOBS` (nightly chaos CI
+//! sets 512; the default 64 keeps the tier-1 wall-clock small).
+
+use otpr::api::SolveRequest;
+use otpr::coordinator::batcher::BatcherConfig;
+use otpr::coordinator::{
+    Coordinator, CoordinatorConfig, DegradePolicy, Engine, Fault, FaultPlan, JobKind, JobStatus,
+};
+use otpr::data::workloads::Workload;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn assignment(n: usize, seed: u64) -> JobKind {
+    JobKind::Assignment(Workload::Fig1 { n }.assignment(seed))
+}
+
+fn ot(n: usize, seed: u64) -> JobKind {
+    JobKind::Ot(Workload::Fig1 { n }.ot_with_random_masses(seed))
+}
+
+/// The acceptance soak: a seeded storm of worker panics, transient
+/// errors, and latency injections over a mixed job stream. Every handle
+/// must resolve (a hang fails the test via the harness timeout), the
+/// status taxonomy must account for every job exactly once, and the
+/// queue-depth gauge must drain to zero.
+#[test]
+fn soak_every_job_reaches_exactly_one_terminal_outcome() {
+    let jobs: u64 = std::env::var("OTPR_CHAOS_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    // fault counts scale with the soak size: ~5% panics, ~9% transients,
+    // ~6% delays, all on disjoint jobs
+    let plan = FaultPlan::seeded(
+        9,
+        jobs,
+        (jobs / 20).max(2) as usize,
+        (jobs / 11).max(3) as usize,
+        (jobs / 16).max(2) as usize,
+        Duration::from_millis(3),
+    );
+    let scheduled = plan.len();
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 3,
+            restart_budget: jobs as u32, // panics must never strand the pool mid-soak
+            // Batch composition is scheduling-dependent: an innocent job can
+            // be swept into retry by a panic-faulted batch-mate more than
+            // once, so the retry budget (like the restart budget) must be
+            // generous enough that only fault-plan exhaustion is terminal.
+            max_retries: jobs as u32,
+            default_deadline: Some(Duration::from_secs(60)),
+            faults: Some(Arc::new(plan)),
+            ..Default::default()
+        },
+        None,
+    );
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            let kind = if i % 4 == 0 { ot(10, i) } else { assignment(12, i) };
+            coord.submit(kind, 0.3, Engine::NativeSeq).unwrap()
+        })
+        .collect();
+    let (mut served, mut degraded, mut shed, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    for h in handles {
+        let out = h.wait().expect("every handle resolves — no lost replies");
+        match out.status {
+            JobStatus::Served => served += 1,
+            JobStatus::Degraded { .. } => degraded += 1,
+            JobStatus::Shed { .. } => shed += 1,
+            JobStatus::Failed { .. } => failed += 1,
+        }
+    }
+    assert_eq!(served + degraded + shed + failed, jobs, "status taxonomy covers every job");
+    // a 60s tenant deadline and a generous retry budget absorb the whole
+    // storm: injected faults retry into success, nothing fails or sheds
+    assert_eq!(failed, 0, "transients and panics must retry into success");
+    assert_eq!(shed, 0, "nothing expires under a 60s deadline");
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert!(metrics.worker_panics.load(Ordering::Relaxed) >= 1, "the storm included panics");
+    assert!(metrics.retried.load(Ordering::Relaxed) >= 1, "injured jobs re-entered the queue");
+    assert_eq!(
+        metrics.worker_panics.load(Ordering::Relaxed),
+        metrics.worker_restarts.load(Ordering::Relaxed),
+        "under budget, every panicked worker is replaced"
+    );
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), jobs);
+    assert_eq!(metrics.queue_depth(), 0, "the saturation gauge drains to zero");
+    assert!(scheduled > 0, "the plan actually scheduled faults");
+}
+
+/// Supervision isolates a panic to its own batch: with one job per batch
+/// (max_batch = 1) and two workers, a panic-faulted job's siblings keep
+/// their worker and serve untouched, while the casualty retries on the
+/// respawned worker. This pins the poisoned-receiver recovery path in
+/// `worker_loop` — the surviving worker keeps draining the shared
+/// receiver its sibling panicked around.
+#[test]
+fn sibling_jobs_survive_a_worker_panic_untouched() {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            faults: Some(Arc::new(FaultPlan::new().panic_at(1))),
+            ..Default::default()
+        },
+        None,
+    );
+    let victim = coord.submit(assignment(12, 0), 0.3, Engine::NativeSeq).unwrap();
+    let siblings: Vec<_> = (1..6)
+        .map(|i| coord.submit(assignment(12, i), 0.3, Engine::NativeSeq).unwrap())
+        .collect();
+    for h in siblings {
+        let out = h.wait().unwrap();
+        assert_eq!(out.status, JobStatus::Served, "siblings never see the panic");
+        assert!(out.result.is_ok());
+    }
+    let out = victim.wait().unwrap();
+    assert_eq!(out.status, JobStatus::Served, "the victim's retry lands: {:?}", out.result);
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert_eq!(metrics.worker_panics.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.worker_restarts.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.queue_depth(), 0);
+}
+
+/// The degradation acceptance criterion: an OT job whose wall-clock
+/// budget cancels the solve resolves — under [`DegradePolicy`] — to a
+/// coarser-ε answer from the warm ladder, with a certificate attached
+/// that verifies.
+#[test]
+fn deadline_pressured_ot_job_degrades_with_a_verified_certificate() {
+    let eps = 0.2;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            degrade: DegradePolicy {
+                enabled: true,
+                grace: Duration::from_secs(30), // the re-solve itself must not be rushed
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        None,
+    );
+    // a zero budget cancels the first solve before any phase completes
+    let rushed = SolveRequest::new(eps).with_budget(Duration::ZERO);
+    let h = coord.submit_request(ot(20, 7), rushed, Engine::NativeSeq).unwrap();
+    let out = h.wait().unwrap();
+    let JobStatus::Degraded { eps: got } = out.status else {
+        panic!("expected a degraded answer, got {:?}", out.status);
+    };
+    assert!(got > eps, "degraded ε {got} must be coarser than the requested {eps}");
+    let sol = out.result.expect("a degraded answer is still an answer");
+    assert!(!sol.is_cancelled(), "the grace re-solve ran to completion");
+    let cert = sol.certificate.as_ref().expect("degraded answers carry their certificate");
+    assert!(cert.primal_ok, "certificate: {}", cert.summary());
+    assert!(cert.gap_ok(), "certificate: {}", cert.summary());
+    assert!(cert.ok(), "certificate: {}", cert.summary());
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert_eq!(metrics.degraded.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.queue_depth(), 0);
+}
+
+/// A tenant default deadline of zero sheds everything at dispatch with a
+/// retry hint — the load-shedding contract a caller can program against.
+#[test]
+fn expired_tenant_deadline_sheds_with_a_retry_hint() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { default_deadline: Some(Duration::ZERO), ..Default::default() },
+        None,
+    );
+    let handles: Vec<_> =
+        (0..4).map(|i| coord.submit(assignment(10, i), 0.3, Engine::NativeSeq).unwrap()).collect();
+    for h in handles {
+        let out = h.wait().unwrap();
+        let JobStatus::Shed { retry_after } = out.status else {
+            panic!("expected shed, got {:?}", out.status);
+        };
+        assert!(retry_after > Duration::ZERO, "the hint tells the caller when to come back");
+        let err = out.result.expect_err("shed jobs carry no solution");
+        assert!(err.contains("shed"), "{err}");
+    }
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert_eq!(metrics.shed.load(Ordering::Relaxed), 4);
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.failed.load(Ordering::Relaxed), 0, "shed is not failure");
+    assert_eq!(metrics.queue_depth(), 0);
+}
+
+/// Retry-budget exhaustion is a terminal, attributed failure: a job hit
+/// by a transient fault on every attempt reports `Failed` with the full
+/// attempt count, and the metrics show each re-entry.
+#[test]
+fn transient_storm_exhausts_the_retry_budget_terminally() {
+    let plan = FaultPlan::new()
+        .at_attempt(1, 0, Fault::Transient)
+        .at_attempt(1, 1, Fault::Transient);
+    let coord = Coordinator::start(
+        CoordinatorConfig { max_retries: 1, faults: Some(Arc::new(plan)), ..Default::default() },
+        None,
+    );
+    let h = coord.submit(assignment(10, 1), 0.3, Engine::NativeSeq).unwrap();
+    let out = h.wait().unwrap();
+    assert!(
+        matches!(out.status, JobStatus::Failed { attempts: 2 }),
+        "one execution + one retry, both transient: {:?}",
+        out.status
+    );
+    // the coordinator keeps serving after the casualty
+    let h2 = coord.submit(assignment(10, 2), 0.3, Engine::NativeSeq).unwrap();
+    assert_eq!(h2.wait().unwrap().status, JobStatus::Served);
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert_eq!(metrics.retried.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.failed.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.queue_depth(), 0);
+}
