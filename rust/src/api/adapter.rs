@@ -226,6 +226,83 @@ fn kernel_warm(levels: u32) -> WarmStart {
     WarmStart { levels, carry: levels > 1 }
 }
 
+/// A kernel-backed engine holding its kernel (and therefore its arena)
+/// **across calls** — the arena-affinity primitive behind the
+/// coordinator's shape-keyed shards. A plain `Solver::solve_each` builds
+/// a fresh kernel per call, so warm reuse stops at batch boundaries;
+/// a `WarmKernelSolver` pinned by a shard worker keeps one arena alive
+/// for that worker's whole lifetime, so every same-shape solve after the
+/// very first reports `SolveStats::arena_reused`.
+///
+/// Only the six native kernel engines have one ([`WarmKernelSolver::
+/// for_engine`] returns `None` for XLA/Sinkhorn/exact oracles — they own
+/// no arena worth pinning). Holders must drop the instance if a solve
+/// panics out from under them (`catch_unwind`): the arena state is then
+/// unspecified and the next build starts cold, which is always correct.
+pub struct WarmKernelSolver {
+    kernel: Box<dyn FlowKernel>,
+    paranoid: bool,
+    warm: WarmStart,
+    /// `"threads=N"` note prepended by the parallel/hybrid engines.
+    note: Option<String>,
+    /// Whether any item has run on this kernel yet — generalizes the
+    /// `i > 0` dual-carry gate across call boundaries.
+    solved: bool,
+}
+
+impl WarmKernelSolver {
+    /// Build the persistent form of a native kernel engine, mirroring the
+    /// registry's builders exactly (same kernel backend, same paranoia,
+    /// same warm policy for the given canonical engine key).
+    pub fn for_engine(key: &str, cfg: &crate::api::registry::SolverConfig) -> Option<Self> {
+        let (kernel, warm, note): (Box<dyn FlowKernel>, WarmStart, Option<String>) = match key {
+            "native-seq" => (Box::new(ScalarKernel::new()), kernel_warm(0), None),
+            "native-seq-warm" => {
+                (Box::new(ScalarKernel::new()), kernel_warm(cfg.warm_levels.max(2)), None)
+            }
+            "native-vector" => (Box::new(VectorKernel::new()), kernel_warm(0), None),
+            "native-vector-warm" => {
+                (Box::new(VectorKernel::new()), kernel_warm(cfg.warm_levels.max(2)), None)
+            }
+            "native-parallel" => (
+                Box::new(ChunkedKernel::new(cfg.threads)),
+                WarmStart::COLD,
+                Some(format!("threads={}", cfg.threads.max(1))),
+            ),
+            "native-hybrid" => (
+                Box::new(HybridKernel::new(cfg.threads)),
+                WarmStart::COLD,
+                Some(format!("threads={}", cfg.threads.max(1))),
+            ),
+            _ => return None,
+        };
+        Some(Self { kernel, paranoid: cfg.paranoid, warm, note, solved: false })
+    }
+
+    /// Solve a batch on the pinned kernel. Semantics match
+    /// [`Solver::solve_each`] on the same engine, except the arena (and,
+    /// for warm engines, the dual carry) persists from previous calls.
+    pub fn solve_each(&mut self, items: &[(&Problem, &SolveRequest)]) -> Vec<Result<Solution>> {
+        items
+            .iter()
+            .map(|&(p, r)| {
+                let w = WarmStart { carry: self.warm.carry && self.solved, ..self.warm };
+                let result = solve_one_on_kernel(self.kernel.as_mut(), p, r, self.paranoid, w);
+                // The arena holds state after any attempt that reached the
+                // drivers, successful or not.
+                self.solved = true;
+                match (result, &self.note) {
+                    (Ok(mut sol), Some(note)) => {
+                        sol.stats.notes.insert(0, note.clone());
+                        Ok(sol)
+                    }
+                    (r, _) => r,
+                }
+            })
+            .collect()
+    }
+}
+
 fn kernel_engine_name(cold: &'static str, warm: &'static str, levels: u32) -> &'static str {
     if levels > 1 {
         warm
@@ -588,6 +665,58 @@ mod tests {
         let sols = s.solve_each(&mixed);
         assert!(sols[0].as_ref().unwrap().matching().is_some());
         assert!(sols[1].as_ref().unwrap().plan().is_some());
+    }
+
+    #[test]
+    fn warm_kernel_solver_pins_the_arena_across_calls() {
+        let cfg = crate::api::registry::SolverConfig::default();
+        let mut pinned = WarmKernelSolver::for_engine("native-seq", &cfg).expect("native engine");
+        let req = SolveRequest::new(0.3);
+        let problems: Vec<Problem> = (0..4).map(|i| assignment(10, 400 + i)).collect();
+        // four *separate* calls — a plain Solver would rebuild the kernel
+        // each time and never report a reuse after the first call either
+        let mut sols = Vec::new();
+        for p in &problems {
+            let items: Vec<(&Problem, &SolveRequest)> = vec![(p, &req)];
+            sols.push(pinned.solve_each(&items).remove(0).unwrap());
+        }
+        assert!(!sols[0].stats.arena_reused, "first-ever solve builds the arena");
+        assert!(
+            sols[1..].iter().all(|s| s.stats.arena_reused),
+            "every later same-shape call reuses the pinned arena"
+        );
+        // results identical to a throwaway solver (cold engine: pinning
+        // only changes memory traffic, never answers)
+        let throwaway = NativeSeqSolver { paranoid: false, warm_levels: 0 };
+        for (p, pinned_sol) in problems.iter().zip(&sols) {
+            let fresh = throwaway.solve(p, &req).unwrap();
+            assert_eq!(fresh.matching(), pinned_sol.matching());
+            assert_eq!(fresh.duals, pinned_sol.duals);
+        }
+        // non-kernel engines have nothing to pin
+        assert!(WarmKernelSolver::for_engine("hungarian", &cfg).is_none());
+        assert!(WarmKernelSolver::for_engine("sinkhorn-native", &cfg).is_none());
+    }
+
+    #[test]
+    fn warm_kernel_solver_carries_duals_across_calls() {
+        let cfg = crate::api::registry::SolverConfig::default();
+        let mut pinned =
+            WarmKernelSolver::for_engine("native-vector-warm", &cfg).expect("native engine");
+        let req = SolveRequest::new(0.3);
+        let first = {
+            let p = assignment(12, 500);
+            let items: Vec<(&Problem, &SolveRequest)> = vec![(&p, &req)];
+            pinned.solve_each(&items).remove(0).unwrap()
+        };
+        assert!(first.stats.warm_started && first.stats.eps_levels >= 2, "full schedule");
+        let p2 = assignment(12, 501);
+        let items: Vec<(&Problem, &SolveRequest)> = vec![(&p2, &req)];
+        let second = pinned.solve_each(&items).remove(0).unwrap();
+        assert!(second.stats.arena_reused, "arena persisted across the call");
+        assert_eq!(second.stats.eps_levels, 1, "dual carry crosses call boundaries");
+        let cert = crate::core::certify::certify(&p2, &second, &req);
+        assert!(cert.ok(), "{}", cert.summary());
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub mod problem;
 pub mod registry;
 pub mod request;
 
-pub use adapter::{AssignmentAdapter, OtAdapter, Solver};
+pub use adapter::{AssignmentAdapter, OtAdapter, Solver, WarmKernelSolver};
 pub use problem::{Coupling, ImplicitInstance, Problem, ProblemKind, Solution};
 // Implicit-cost building blocks are part of the public problem surface
 // (`Problem::implicit_assignment` / `Problem::implicit_ot` take them).

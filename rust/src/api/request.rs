@@ -55,6 +55,12 @@ pub struct SolveRequest {
     /// cancel-at-next-phase behavior. Off by default; the coordinator's
     /// `DegradePolicy` turns it on for deadline-carrying jobs.
     pub degrade_on_deadline: bool,
+    /// Tenant this request bills to. The coordinator resolves it against
+    /// its configured quotas: admission-queue depth, in-flight caps, and
+    /// the tenant's default deadline (tighter of this and the request's
+    /// own `budget`; see `coordinator::TenantQuota`). `None` uses the
+    /// anonymous default quota.
+    pub tenant: Option<String>,
 }
 
 impl Default for SolveRequest {
@@ -72,6 +78,7 @@ impl fmt::Debug for SolveRequest {
             .field("cancelled", &self.cancel.is_cancelled())
             .field("observer", &self.observer.is_some())
             .field("want_certificate", &self.want_certificate)
+            .field("tenant", &self.tenant)
             .finish()
     }
 }
@@ -86,7 +93,14 @@ impl SolveRequest {
             observer: None,
             want_certificate: false,
             degrade_on_deadline: false,
+            tenant: None,
         }
+    }
+
+    /// Bill this request to `tenant` (see the field doc).
+    pub fn for_tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = Some(tenant.into());
+        self
     }
 
     /// Interpret `eps` as the raw algorithm parameter (harness mode).

@@ -1,0 +1,349 @@
+//! The `(problem digest, ε, engine)` result cache.
+//!
+//! Serving real traffic means serving *repeated* traffic: the same
+//! distributions re-solved at the same ε (dashboards, retries, fan-out
+//! consumers). A hit here bypasses dispatch entirely — no shard, no
+//! batcher, no kernel — and returns a `Solution` byte-identical to the
+//! fresh solve that populated the entry (golden-pinned in
+//! `tests/serving_layer.rs`).
+//!
+//! Keys combine [`crate::coordinator::digest::problem_digest`] with every
+//! request knob that changes the answer payload: ε bits, ε semantics, the
+//! *resolved* engine (an `Engine::Auto` job is keyed under the engine it
+//! actually routes to), and whether a certificate was requested. Jobs
+//! whose problems have no canonical payload (closure-backed costs) never
+//! reach the cache at all.
+//!
+//! Capacity is bounded by bytes, not entries — entry weight reuses the
+//! `plan_state_bytes`/`cost_state_bytes` style of accounting (the CSR
+//! wire bytes we actually store, duals, certificate, fixed overhead) —
+//! with least-recently-used eviction on overflow. CSR plans are stored in
+//! the compact [`TransportPlan::to_bytes`] wire form and re-validated on
+//! the way out, so the cache holds O(nnz) bytes per OT entry, not O(n²).
+
+use crate::api::{Certificate, Coupling, Solution};
+use crate::core::{DualWeights, Matching, TransportPlan};
+use crate::solvers::SolveStats;
+use std::collections::HashMap;
+use std::sync::{Mutex, PoisonError};
+
+/// What makes two jobs share an answer. `engine` is the canonical
+/// registry key of the engine that actually ran (Auto resolves first).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// [`crate::coordinator::digest::problem_digest`] of the payload.
+    pub digest: u64,
+    /// `eps.to_bits()` — exact, no float comparisons.
+    pub eps_bits: u64,
+    /// `true` for [`crate::api::EpsSemantics::AlgorithmParam`] requests.
+    pub raw_eps: bool,
+    /// Canonical engine key the job resolved to.
+    pub engine: &'static str,
+    /// Certified and uncertified answers are different payloads.
+    pub want_certificate: bool,
+}
+
+/// A stored coupling: matchings and the rare dense/product plans are kept
+/// as-is; CSR plans live as compact wire bytes.
+enum StoredCoupling {
+    Matching(Matching),
+    PlanBytes(Vec<u8>),
+    Plan(TransportPlan),
+}
+
+struct StoredSolution {
+    coupling: StoredCoupling,
+    cost: f64,
+    duals: Option<DualWeights>,
+    certificate: Option<Certificate>,
+    stats: SolveStats,
+}
+
+struct Entry {
+    value: StoredSolution,
+    bytes: u64,
+    /// Monotone LRU clock value of the last touch.
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    bytes: u64,
+    tick: u64,
+}
+
+/// Outcome of an insert, for the metrics layer.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct InsertReport {
+    /// Entries evicted to make room (0 when the value didn't fit at all).
+    pub evictions: u64,
+    /// Resident bytes after the insert.
+    pub bytes: u64,
+    /// Whether the value was actually stored (false ⇒ larger than the
+    /// whole cache budget).
+    pub stored: bool,
+}
+
+/// Byte-bounded LRU result cache. All methods take `&self`; one mutex
+/// guards the map (lookups are rare relative to solves, and entries are
+/// swapped out by value, so the critical sections stay short).
+pub struct ResultCache {
+    cap_bytes: u64,
+    inner: Mutex<Inner>,
+}
+
+/// Poison recovery, same convention as `coordinator::metrics`: a panicked
+/// worker died *between* atomic updates, never mid-invariant — recover the
+/// guard rather than cascading the panic into every later caller.
+fn locked<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl ResultCache {
+    /// `cap_bytes == 0` disables the cache (every lookup misses, every
+    /// insert is dropped) — the default, so serving behavior only changes
+    /// when a deployment opts in.
+    pub fn new(cap_bytes: u64) -> Self {
+        Self { cap_bytes, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cap_bytes > 0
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.cap_bytes
+    }
+
+    pub fn bytes(&self) -> u64 {
+        locked(&self.inner).bytes
+    }
+
+    pub fn len(&self) -> usize {
+        locked(&self.inner).map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up a stored answer, refreshing its LRU position. Returns a
+    /// freshly materialized `Solution` (stored wire bytes are re-validated
+    /// through `from_bytes` → `from_csr` on every hit).
+    pub fn get(&self, key: &CacheKey) -> Option<Solution> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = locked(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = inner.map.get_mut(key)?;
+        entry.tick = tick;
+        let sol = materialize(&entry.value);
+        if sol.is_none() {
+            // A stored entry that no longer decodes is a corrupt entry;
+            // drop it so it cannot shadow fresh solves.
+            let bytes = entry.bytes;
+            inner.map.remove(key);
+            inner.bytes = inner.bytes.saturating_sub(bytes);
+        }
+        sol
+    }
+
+    /// Store a fresh answer under `key`, evicting least-recently-used
+    /// entries until it fits. Oversized values (weight > whole budget) are
+    /// rejected rather than flushing the entire cache for one entry.
+    pub fn insert(&self, key: CacheKey, sol: &Solution) -> InsertReport {
+        if !self.enabled() {
+            return InsertReport::default();
+        }
+        let value = store(sol);
+        let weight = weigh(&value);
+        let mut report = InsertReport { stored: weight <= self.cap_bytes, ..Default::default() };
+        let mut inner = locked(&self.inner);
+        if !report.stored {
+            report.bytes = inner.bytes;
+            return report;
+        }
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes = inner.bytes.saturating_sub(old.bytes);
+        }
+        while inner.bytes + weight > self.cap_bytes {
+            let Some(lru) = inner.map.iter().min_by_key(|(_, e)| e.tick).map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            if let Some(evicted) = inner.map.remove(&lru) {
+                inner.bytes = inner.bytes.saturating_sub(evicted.bytes);
+                report.evictions += 1;
+            }
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key, Entry { value, bytes: weight, tick });
+        inner.bytes += weight;
+        report.bytes = inner.bytes;
+        report
+    }
+}
+
+/// Convert a live solution into its stored form. CSR plans go to wire
+/// bytes; everything else is cloned structurally.
+fn store(sol: &Solution) -> StoredSolution {
+    let coupling = match &sol.coupling {
+        Coupling::Matching(m) => StoredCoupling::Matching(m.clone()),
+        Coupling::Plan(p) => match p.to_bytes() {
+            Some(bytes) => StoredCoupling::PlanBytes(bytes),
+            None => StoredCoupling::Plan(p.clone()),
+        },
+    };
+    StoredSolution {
+        coupling,
+        cost: sol.cost,
+        duals: sol.duals.clone(),
+        certificate: sol.certificate.clone(),
+        stats: sol.stats.clone(),
+    }
+}
+
+/// Rebuild the `Solution` a hit returns. `None` only if stored bytes fail
+/// re-validation, which [`ResultCache::get`] treats as a dropped entry.
+fn materialize(stored: &StoredSolution) -> Option<Solution> {
+    let coupling = match &stored.coupling {
+        StoredCoupling::Matching(m) => Coupling::Matching(m.clone()),
+        StoredCoupling::PlanBytes(bytes) => {
+            Coupling::Plan(TransportPlan::from_bytes(bytes).ok()?)
+        }
+        StoredCoupling::Plan(p) => Coupling::Plan(p.clone()),
+    };
+    Some(Solution {
+        coupling,
+        cost: stored.cost,
+        duals: stored.duals.clone(),
+        certificate: stored.certificate.clone(),
+        stats: stored.stats.clone(),
+    })
+}
+
+/// Entry weight in resident bytes — the same style of accounting as
+/// `SolveStats::{plan_state_bytes, cost_state_bytes}`: count what this
+/// representation actually keeps resident, plus a fixed overhead for the
+/// key, map slot, and scalar fields.
+fn weigh(v: &StoredSolution) -> u64 {
+    const FIXED: u64 = 256;
+    let coupling = match &v.coupling {
+        StoredCoupling::Matching(m) => ((m.match_b.len() + m.match_a.len()) * 4) as u64,
+        StoredCoupling::PlanBytes(bytes) => bytes.len() as u64,
+        StoredCoupling::Plan(p) => p.state_bytes(),
+    };
+    let duals = v.duals.as_ref().map_or(0, |d| ((d.ya.len() + d.yb.len()) * 4) as u64);
+    let notes: u64 = v.stats.notes.iter().map(|n| n.len() as u64).sum();
+    FIXED + coupling + duals + notes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(digest: u64) -> CacheKey {
+        CacheKey {
+            digest,
+            eps_bits: 0.1f64.to_bits(),
+            raw_eps: false,
+            engine: "native-seq",
+            want_certificate: false,
+        }
+    }
+
+    fn csr_solution(nnz_rows: usize) -> Solution {
+        let mut row_ptr = vec![0usize];
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        for b in 0..nnz_rows {
+            col_idx.push(b as u32);
+            vals.push(1.0 / nnz_rows as f64);
+            row_ptr.push(col_idx.len());
+        }
+        let plan = TransportPlan::from_csr(nnz_rows, nnz_rows, row_ptr, col_idx, vals).unwrap();
+        Solution {
+            coupling: Coupling::Plan(plan),
+            cost: 0.5,
+            duals: Some(DualWeights { ya: vec![0; nnz_rows], yb: vec![1; nnz_rows] }),
+            certificate: None,
+            stats: SolveStats::default(),
+        }
+    }
+
+    fn plan_bits(sol: &Solution) -> Vec<u64> {
+        match &sol.coupling {
+            Coupling::Plan(p) => {
+                let (_, _, vals) = p.csr_view().unwrap();
+                vals.iter().map(|v| v.to_bits()).collect()
+            }
+            Coupling::Matching(_) => panic!("expected a plan"),
+        }
+    }
+
+    #[test]
+    fn round_trips_solutions_bit_for_bit() {
+        let cache = ResultCache::new(1 << 20);
+        let sol = csr_solution(8);
+        assert!(cache.insert(key(1), &sol).stored);
+        let hit = cache.get(&key(1)).expect("hit");
+        assert_eq!(hit.cost.to_bits(), sol.cost.to_bits());
+        assert_eq!(plan_bits(&hit), plan_bits(&sol));
+        assert_eq!(hit.duals.as_ref().unwrap().yb, sol.duals.as_ref().unwrap().yb);
+        assert!(cache.get(&key(2)).is_none(), "different digest must miss");
+    }
+
+    #[test]
+    fn zero_capacity_disables_everything() {
+        let cache = ResultCache::new(0);
+        let sol = csr_solution(4);
+        assert!(!cache.insert(key(1), &sol).stored);
+        assert!(cache.get(&key(1)).is_none());
+        assert_eq!(cache.bytes(), 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency_and_byte_bound() {
+        let sol = csr_solution(4);
+        let one = weigh(&store(&sol));
+        // room for exactly two entries
+        let cache = ResultCache::new(2 * one);
+        assert!(cache.insert(key(1), &sol).stored);
+        assert!(cache.insert(key(2), &sol).stored);
+        // touch 1 so 2 becomes the LRU victim
+        assert!(cache.get(&key(1)).is_some());
+        let report = cache.insert(key(3), &sol);
+        assert!(report.stored);
+        assert_eq!(report.evictions, 1);
+        assert!(cache.get(&key(1)).is_some(), "recently used survives");
+        assert!(cache.get(&key(2)).is_none(), "LRU evicted");
+        assert!(cache.get(&key(3)).is_some());
+        assert!(cache.bytes() <= 2 * one);
+    }
+
+    #[test]
+    fn oversized_values_are_rejected_not_flushed() {
+        let small = csr_solution(2);
+        let big = csr_solution(512);
+        let cache = ResultCache::new(weigh(&store(&small)) + 8);
+        assert!(cache.insert(key(1), &small).stored);
+        let report = cache.insert(key(2), &big);
+        assert!(!report.stored);
+        assert_eq!(report.evictions, 0);
+        assert!(cache.get(&key(1)).is_some(), "existing entries survive an oversized insert");
+    }
+
+    #[test]
+    fn reinserting_a_key_replaces_its_bytes() {
+        let cache = ResultCache::new(1 << 20);
+        cache.insert(key(1), &csr_solution(4));
+        let b1 = cache.bytes();
+        cache.insert(key(1), &csr_solution(4));
+        assert_eq!(cache.bytes(), b1, "same key re-insert must not leak bytes");
+        assert_eq!(cache.len(), 1);
+    }
+}

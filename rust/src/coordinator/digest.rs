@@ -1,0 +1,258 @@
+//! Streaming problem digests for the result cache.
+//!
+//! A digest is a 64-bit FNV-1a hash (with a SplitMix64 finalizer to
+//! spread the avalanche) over the **canonical problem payload** — the
+//! same data a cross-node shipper would serialize:
+//!
+//! * dense problems hash the raw f32 cost slab (bit patterns, LE) plus
+//!   marginals, so two instances digest equal iff their slabs and masses
+//!   are bit-identical;
+//! * implicit (provider-backed) problems hash the provider kind and its
+//!   O(n) payload — points, vectors, the metric flag, masses — never the
+//!   O(n²) costs the provider implies, keeping cache keys O(n) to
+//!   compute (the whole point of `Problem::Implicit`);
+//! * closure-backed [`Costs::Generated`] instances have no canonical
+//!   payload (the closure is opaque), so they digest to `None` and are
+//!   simply uncacheable — a false cache hit is the one failure mode this
+//!   module must never allow.
+//!
+//! Every scalar is folded as its little-endian bit pattern with a
+//! type/kind tag in front, so `f64` masses can never collide with `f32`
+//! costs of the same bit prefix, and an assignment instance can never
+//! collide with the OT instance over the same slab.
+
+use crate::api::Problem;
+use crate::core::provider::Costs;
+
+/// FNV-1a 64-bit streaming hasher. Tiny, dependency-free, deterministic
+/// across platforms; the SplitMix64 finalizer compensates FNV's weak
+/// high-bit diffusion so truncated keys stay well spread.
+#[derive(Debug, Clone)]
+pub struct Digest {
+    state: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Default for Digest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Digest {
+    pub fn new() -> Self {
+        Self { state: FNV_OFFSET }
+    }
+
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= u64::from(b);
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, v: u8) {
+        self.write(&[v]);
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64); // cast-ok: usize → u64 is lossless here
+    }
+
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_f32(&mut self, v: f32) {
+        self.write(&v.to_bits().to_le_bytes());
+    }
+
+    /// Finalize with one SplitMix64 mixing round.
+    pub fn finish(&self) -> u64 {
+        let mut z = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// Payload tags: one byte per problem/provider shape so structurally
+/// different payloads occupy disjoint digest streams.
+const TAG_ASSIGNMENT: u8 = 1;
+const TAG_OT: u8 = 2;
+const TAG_IMPLICIT_ASSIGNMENT: u8 = 3;
+const TAG_IMPLICIT_OT: u8 = 4;
+const TAG_COSTS_DENSE: u8 = 10;
+const TAG_COSTS_POINTS: u8 = 11;
+const TAG_COSTS_L1: u8 = 12;
+
+fn fold_masses(h: &mut Digest, supply: &[f64], demand: &[f64]) {
+    h.write_usize(supply.len());
+    for &v in supply {
+        h.write_f64(v);
+    }
+    h.write_usize(demand.len());
+    for &v in demand {
+        h.write_f64(v);
+    }
+}
+
+/// Fold a cost representation, or report it uncacheable (`false`).
+fn fold_costs(h: &mut Digest, costs: &Costs) -> bool {
+    match costs {
+        Costs::Dense(m) => {
+            h.write_u8(TAG_COSTS_DENSE);
+            h.write_usize(m.nb);
+            h.write_usize(m.na);
+            for &c in m.as_slice() {
+                h.write_f32(c);
+            }
+            true
+        }
+        Costs::Points(p) => {
+            h.write_u8(TAG_COSTS_POINTS);
+            h.write_u8(u8::from(p.takes_sqrt()));
+            h.write_usize(p.points_b().len());
+            h.write_usize(p.points_a().len());
+            for pt in p.points_b().iter().chain(p.points_a()) {
+                h.write_f64(pt[0]);
+                h.write_f64(pt[1]);
+            }
+            true
+        }
+        Costs::L1Points(p) => {
+            h.write_u8(TAG_COSTS_L1);
+            h.write_usize(p.vecs_b().len());
+            h.write_usize(p.vecs_a().len());
+            for v in p.vecs_b().iter().chain(p.vecs_a()) {
+                h.write_usize(v.len());
+                for &x in v {
+                    h.write_f32(x);
+                }
+            }
+            true
+        }
+        // The closure is opaque: no canonical payload exists, so there is
+        // nothing sound to key a cache on.
+        Costs::Generated(_) => false,
+    }
+}
+
+/// Digest the canonical payload of `problem`, or `None` when the problem
+/// has no canonical payload (closure-backed costs) and must never be
+/// served from a cache.
+pub fn problem_digest(problem: &Problem) -> Option<u64> {
+    let mut h = Digest::new();
+    match problem {
+        Problem::Assignment(inst) => {
+            h.write_u8(TAG_ASSIGNMENT);
+            h.write_usize(inst.costs.nb);
+            h.write_usize(inst.costs.na);
+            for &c in inst.costs.as_slice() {
+                h.write_f32(c);
+            }
+        }
+        Problem::Ot(inst) => {
+            h.write_u8(TAG_OT);
+            h.write_usize(inst.costs.nb);
+            h.write_usize(inst.costs.na);
+            for &c in inst.costs.as_slice() {
+                h.write_f32(c);
+            }
+            fold_masses(&mut h, &inst.supply, &inst.demand);
+        }
+        Problem::Implicit(inst) => {
+            match &inst.masses {
+                None => h.write_u8(TAG_IMPLICIT_ASSIGNMENT),
+                Some((supply, demand)) => {
+                    h.write_u8(TAG_IMPLICIT_OT);
+                    fold_masses(&mut h, supply, demand);
+                }
+            }
+            if !fold_costs(&mut h, &inst.costs) {
+                return None;
+            }
+        }
+    }
+    Some(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::provider::{GeneratedCosts, SqEuclideanCosts};
+    use crate::core::CostMatrix;
+
+    fn dense_assignment(seed: f32) -> Problem {
+        let c = CostMatrix::from_fn(4, 4, |b, a| seed + (b * 4 + a) as f32 / 16.0);
+        Problem::assignment(c).unwrap()
+    }
+
+    #[test]
+    fn equal_payloads_digest_equal_and_perturbations_differ() {
+        let a = problem_digest(&dense_assignment(0.25)).unwrap();
+        let b = problem_digest(&dense_assignment(0.25)).unwrap();
+        assert_eq!(a, b, "same payload must digest identically");
+        let c = problem_digest(&dense_assignment(0.2500001)).unwrap();
+        assert_ne!(a, c, "any slab perturbation must change the digest");
+    }
+
+    #[test]
+    fn kind_tags_separate_structurally_different_problems() {
+        let c = CostMatrix::from_fn(3, 3, |b, a| (b + a) as f32 / 4.0);
+        let assign = Problem::assignment(c.clone()).unwrap();
+        let uniform = vec![1.0 / 3.0; 3];
+        let ot = Problem::ot(c, uniform.clone(), uniform).unwrap();
+        assert_ne!(
+            problem_digest(&assign).unwrap(),
+            problem_digest(&ot).unwrap(),
+            "assignment and OT over one slab are different problems"
+        );
+    }
+
+    #[test]
+    fn implicit_points_digest_their_o_n_payload() {
+        let pts = |shift: f64| {
+            let b: Vec<[f64; 2]> = (0..5).map(|i| [i as f64 / 5.0 + shift, 0.5]).collect();
+            let a: Vec<[f64; 2]> = (0..5).map(|i| [0.25, i as f64 / 5.0]).collect();
+            Problem::implicit_assignment(Costs::points(SqEuclideanCosts::new(b, a).unwrap()))
+                .unwrap()
+        };
+        let d0 = problem_digest(&pts(0.0)).unwrap();
+        assert_eq!(d0, problem_digest(&pts(0.0)).unwrap());
+        assert_ne!(d0, problem_digest(&pts(1e-9)).unwrap());
+    }
+
+    #[test]
+    fn metric_flag_is_part_of_the_payload() {
+        let b: Vec<[f64; 2]> = vec![[0.0, 0.0], [0.5, 0.5]];
+        let a: Vec<[f64; 2]> = vec![[0.25, 0.75], [1.0, 0.0]];
+        let sq = SqEuclideanCosts::new(b.clone(), a.clone()).unwrap();
+        let eu = SqEuclideanCosts::euclidean(b, a).unwrap();
+        let p = |c: SqEuclideanCosts| Problem::implicit_assignment(Costs::points(c)).unwrap();
+        assert_ne!(
+            problem_digest(&p(sq)).unwrap(),
+            problem_digest(&p(eu)).unwrap(),
+            "same points, different metric ⇒ different digest"
+        );
+    }
+
+    #[test]
+    fn generated_costs_are_uncacheable() {
+        let g = GeneratedCosts::new(3, 3, |b, a| (b + a) as f32).unwrap();
+        let p = Problem::implicit_assignment(Costs::generated(g)).unwrap();
+        assert_eq!(problem_digest(&p), None, "opaque closures must never get cache keys");
+    }
+}

@@ -50,6 +50,22 @@ pub struct Metrics {
     /// In-flight jobs (accepted, no terminal outcome yet) — the
     /// saturation gauge a load balancer sheds on.
     queue_depth: AtomicU64,
+    /// Result-cache traffic: hits bypass dispatch entirely (the answer is
+    /// byte-identical to the solve that populated the entry).
+    pub cache_hits: AtomicU64,
+    /// Cacheable lookups that missed (uncacheable payloads count neither).
+    pub cache_misses: AtomicU64,
+    /// Entries LRU-evicted to fit the cache's byte budget.
+    pub cache_evictions: AtomicU64,
+    /// Resident cache bytes right now (gauge, refreshed on each insert).
+    cache_bytes: AtomicU64,
+    /// Admissions answered `Backpressure` (tenant quota or queue full);
+    /// nothing was enqueued for these.
+    pub backpressured_jobs: AtomicU64,
+    /// Per-tenant admission accounting.
+    per_tenant: Mutex<Vec<TenantCounters>>,
+    /// Per-shard serving accounting (shape-keyed worker pools).
+    per_shard: Mutex<Vec<ShardCounters>>,
     /// Per-(engine, bucket) batch occupancy + accumulated wait.
     per_batch_key: Mutex<Vec<BatchCounters>>,
     /// Audit-mode certification outcomes (see
@@ -113,6 +129,50 @@ impl EngineCounters {
             f64::INFINITY
         };
         Some((at(0.50), at(0.95), at(0.99)))
+    }
+}
+
+/// Per-tenant admission accounting (named quotas plus the anonymous
+/// default).
+#[derive(Debug, Clone)]
+pub struct TenantCounters {
+    pub tenant: String,
+    /// Jobs accepted through the quota-checked `admit` front door.
+    pub admitted: u64,
+    /// Admissions answered `Backpressure` for this tenant.
+    pub backpressured: u64,
+}
+
+/// Per-shard serving accounting: one entry per shape-keyed worker pool
+/// the dispatcher has spawned (an evicted-then-respawned shard reuses its
+/// entry and bumps `spawns`).
+#[derive(Debug, Clone)]
+pub struct ShardCounters {
+    /// Shape label, e.g. `asg/16x16`.
+    pub shard: String,
+    /// Times a shard for this shape was (re)spawned.
+    pub spawns: u64,
+    /// Batches closed toward this shard and jobs in them.
+    pub batches: u64,
+    pub jobs: u64,
+    /// Warm-arena reuse hits attributed to this shard's workers — the
+    /// affinity claim: for a same-shape stream this approaches `jobs`.
+    pub arena_reuse_hits: u64,
+    /// Jobs accumulating in the shard's batcher right now (gauge).
+    pub pending: u64,
+    /// Times this shard was reaped (idle TTL) or LRU-evicted.
+    pub reaps: u64,
+}
+
+impl ShardCounters {
+    /// Mean jobs per closed batch on this shard.
+    pub fn occupancy(&self) -> f64 {
+        self.jobs as f64 / self.batches.max(1) as f64
+    }
+
+    /// Fraction of this shard's jobs that reused a warm arena.
+    pub fn arena_reuse_rate(&self) -> f64 {
+        self.arena_reuse_hits as f64 / self.jobs.max(1) as f64
     }
 }
 
@@ -224,6 +284,117 @@ impl Metrics {
         if hits > 0 {
             self.arena_reuse_hits.fetch_add(hits, Ordering::Relaxed);
         }
+    }
+
+    /// One result-cache hit (the reply bypassed dispatch).
+    pub fn record_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One cacheable lookup that missed.
+    pub fn record_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one cache insert: evictions it caused and the resident-bytes
+    /// gauge after it.
+    pub fn record_cache_insert(&self, evictions: u64, resident_bytes: u64) {
+        if evictions > 0 {
+            self.cache_evictions.fetch_add(evictions, Ordering::Relaxed);
+        }
+        self.cache_bytes.store(resident_bytes, Ordering::Relaxed);
+    }
+
+    /// Resident result-cache bytes as last reported by an insert.
+    pub fn cache_bytes(&self) -> u64 {
+        self.cache_bytes.load(Ordering::Relaxed)
+    }
+
+    /// One admission accepted through the quota-checked front door.
+    pub fn record_admitted(&self, tenant: &str) {
+        self.with_tenant(tenant, |t| t.admitted += 1);
+    }
+
+    /// One admission answered `Backpressure` for `tenant`.
+    pub fn record_backpressure(&self, tenant: &str) {
+        self.backpressured_jobs.fetch_add(1, Ordering::Relaxed);
+        self.with_tenant(tenant, |t| t.backpressured += 1);
+    }
+
+    fn with_tenant(&self, tenant: &str, f: impl FnOnce(&mut TenantCounters)) {
+        let mut per = locked(&self.per_tenant);
+        match per.iter_mut().find(|t| t.tenant == tenant) {
+            Some(t) => f(t),
+            None => {
+                let mut t =
+                    TenantCounters { tenant: tenant.to_string(), admitted: 0, backpressured: 0 };
+                f(&mut t);
+                per.push(t);
+            }
+        }
+    }
+
+    /// Per-tenant admission snapshot.
+    pub fn tenant_counters(&self) -> Vec<TenantCounters> {
+        locked(&self.per_tenant).clone()
+    }
+
+    /// One shard (re)spawn for the shape labelled `shard`.
+    pub fn record_shard_spawn(&self, shard: &str) {
+        self.with_shard(shard, |s| s.spawns += 1);
+    }
+
+    /// One batch of `jobs` closed toward `shard`.
+    pub fn record_shard_batch(&self, shard: &str, jobs: usize) {
+        self.with_shard(shard, |s| {
+            s.batches += 1;
+            s.jobs += jobs as u64;
+        });
+    }
+
+    /// Warm-arena reuse hits attributed to `shard`.
+    pub fn record_shard_arena_reuse(&self, shard: &str, hits: u64) {
+        if hits > 0 {
+            self.with_shard(shard, |s| s.arena_reuse_hits += hits);
+        }
+    }
+
+    /// Refresh `shard`'s accumulating-jobs gauge.
+    pub fn set_shard_pending(&self, shard: &str, pending: u64) {
+        self.with_shard(shard, |s| s.pending = pending);
+    }
+
+    /// One reap (idle TTL) or LRU eviction of `shard`.
+    pub fn record_shard_reap(&self, shard: &str) {
+        self.with_shard(shard, |s| {
+            s.reaps += 1;
+            s.pending = 0;
+        });
+    }
+
+    fn with_shard(&self, shard: &str, f: impl FnOnce(&mut ShardCounters)) {
+        let mut per = locked(&self.per_shard);
+        match per.iter_mut().find(|s| s.shard == shard) {
+            Some(s) => f(s),
+            None => {
+                let mut s = ShardCounters {
+                    shard: shard.to_string(),
+                    spawns: 0,
+                    batches: 0,
+                    jobs: 0,
+                    arena_reuse_hits: 0,
+                    pending: 0,
+                    reaps: 0,
+                };
+                f(&mut s);
+                per.push(s);
+            }
+        }
+    }
+
+    /// Per-shard serving snapshot.
+    pub fn shard_counters(&self) -> Vec<ShardCounters> {
+        locked(&self.per_shard).clone()
     }
 
     /// Per-key batch occupancy snapshot.
@@ -403,6 +574,40 @@ impl Metrics {
                 ])
             })
             .collect();
+        let shards = self
+            .shard_counters()
+            .into_iter()
+            .map(|s| {
+                obj(vec![
+                    ("shard", Json::Str(s.shard.clone())),
+                    ("spawns", Json::Num(s.spawns as f64)),
+                    ("batches", Json::Num(s.batches as f64)),
+                    ("jobs", Json::Num(s.jobs as f64)),
+                    ("occupancy", Json::Num(s.occupancy())),
+                    ("arena_reuse_hits", Json::Num(s.arena_reuse_hits as f64)),
+                    ("arena_reuse_rate", Json::Num(s.arena_reuse_rate())),
+                    ("pending", Json::Num(s.pending as f64)),
+                    ("reaps", Json::Num(s.reaps as f64)),
+                ])
+            })
+            .collect();
+        let tenants = self
+            .tenant_counters()
+            .into_iter()
+            .map(|t| {
+                obj(vec![
+                    ("tenant", Json::Str(t.tenant.clone())),
+                    ("admitted", Json::Num(t.admitted as f64)),
+                    ("backpressured", Json::Num(t.backpressured as f64)),
+                ])
+            })
+            .collect();
+        let cache = obj(vec![
+            ("hits", Json::Num(self.cache_hits.load(Ordering::Relaxed) as f64)),
+            ("misses", Json::Num(self.cache_misses.load(Ordering::Relaxed) as f64)),
+            ("evictions", Json::Num(self.cache_evictions.load(Ordering::Relaxed) as f64)),
+            ("bytes", Json::Num(self.cache_bytes() as f64)),
+        ]);
         let batches = self.batches.load(Ordering::Relaxed);
         let batched = self.batched_jobs.load(Ordering::Relaxed);
         obj(vec![
@@ -429,7 +634,14 @@ impl Metrics {
                 Json::Num(self.worker_restarts.load(Ordering::Relaxed) as f64),
             ),
             ("abandoned_jobs", Json::Num(self.abandoned_jobs.load(Ordering::Relaxed) as f64)),
+            (
+                "backpressured_jobs",
+                Json::Num(self.backpressured_jobs.load(Ordering::Relaxed) as f64),
+            ),
             ("queue_depth", Json::Num(self.queue_depth() as f64)),
+            ("cache", cache),
+            ("shards", Json::Arr(shards)),
+            ("tenants", Json::Arr(tenants)),
             ("batch_keys", Json::Arr(batch_keys)),
             ("engines", Json::Arr(engines)),
             ("audit", self.audit_json()),
@@ -480,6 +692,40 @@ impl Metrics {
         let reuse = self.arena_reuse_hits.load(Ordering::Relaxed);
         if reuse > 0 {
             out.push_str(&format!("kernel arena reuse hits: {reuse}\n"));
+        }
+        for s in self.shard_counters() {
+            out.push_str(&format!(
+                "shard[{}]: {} spawns, {} batches, {} jobs, reuse rate {:.2}, pending {}, \
+                 reaps {}\n",
+                s.shard,
+                s.spawns,
+                s.batches,
+                s.jobs,
+                s.arena_reuse_rate(),
+                s.pending,
+                s.reaps
+            ));
+        }
+        let (hits, misses) = (
+            self.cache_hits.load(Ordering::Relaxed),
+            self.cache_misses.load(Ordering::Relaxed),
+        );
+        if hits + misses > 0 {
+            out.push_str(&format!(
+                "cache: hits={hits} misses={misses} evictions={} bytes={}\n",
+                self.cache_evictions.load(Ordering::Relaxed),
+                self.cache_bytes()
+            ));
+        }
+        let bp = self.backpressured_jobs.load(Ordering::Relaxed);
+        if bp > 0 {
+            out.push_str(&format!("backpressured jobs: {bp}\n"));
+        }
+        for t in self.tenant_counters() {
+            out.push_str(&format!(
+                "tenant {}: admitted={} backpressured={}\n",
+                t.tenant, t.admitted, t.backpressured
+            ));
         }
         out.push_str(&format!(
             "time: queued={:.3}s solve={:.3}s\n",
@@ -781,6 +1027,66 @@ mod tests {
             .find(|e| e.get("engine").unwrap().as_str() == Some("idle"))
             .unwrap();
         assert!(idle.get("latency_p50_s").unwrap().as_f64().is_none());
+    }
+
+    #[test]
+    fn cache_and_backpressure_counters_export() {
+        let m = Metrics::new();
+        m.record_cache_miss();
+        m.record_cache_hit();
+        m.record_cache_hit();
+        m.record_cache_insert(0, 512);
+        m.record_cache_insert(3, 384); // evictions accumulate, bytes is a gauge
+        m.record_backpressure("tenant-a");
+        m.record_admitted("tenant-a");
+        m.record_admitted("tenant-b");
+        assert_eq!(m.cache_bytes(), 384);
+        assert_eq!(m.cache_evictions.load(Ordering::Relaxed), 3);
+        let snap = m.snapshot();
+        assert!(snap.contains("cache: hits=2 misses=1 evictions=3 bytes=384"), "{snap}");
+        assert!(snap.contains("backpressured jobs: 1"), "{snap}");
+        assert!(snap.contains("tenant tenant-a: admitted=1 backpressured=1"), "{snap}");
+        let j = Json::parse(&m.to_json().to_string()).expect("valid JSON");
+        let cache = j.get("cache").unwrap();
+        assert_eq!(cache.get("hits").unwrap().as_f64(), Some(2.0));
+        assert_eq!(cache.get("misses").unwrap().as_f64(), Some(1.0));
+        assert_eq!(cache.get("evictions").unwrap().as_f64(), Some(3.0));
+        assert_eq!(cache.get("bytes").unwrap().as_f64(), Some(384.0));
+        assert_eq!(j.get("backpressured_jobs").unwrap().as_f64(), Some(1.0));
+        let tenants = j.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 2);
+    }
+
+    #[test]
+    fn shard_counters_track_occupancy_reuse_and_lifecycle() {
+        let m = Metrics::new();
+        m.record_shard_spawn("asg/16x16");
+        m.record_shard_batch("asg/16x16", 8);
+        m.record_shard_batch("asg/16x16", 4);
+        m.record_shard_arena_reuse("asg/16x16", 10);
+        m.record_shard_arena_reuse("asg/16x16", 0); // no-op, must not churn
+        m.set_shard_pending("asg/16x16", 3);
+        m.record_shard_spawn("ot/10x10");
+        m.record_shard_reap("ot/10x10");
+        let counters = m.shard_counters();
+        let a = counters.iter().find(|s| s.shard == "asg/16x16").unwrap();
+        assert_eq!((a.spawns, a.batches, a.jobs, a.arena_reuse_hits), (1, 2, 12, 10));
+        assert!((a.occupancy() - 6.0).abs() < 1e-12);
+        assert!((a.arena_reuse_rate() - 10.0 / 12.0).abs() < 1e-12);
+        assert_eq!(a.pending, 3);
+        let o = counters.iter().find(|s| s.shard == "ot/10x10").unwrap();
+        assert_eq!((o.spawns, o.reaps, o.pending), (1, 1, 0));
+        let snap = m.snapshot();
+        assert!(snap.contains("shard[asg/16x16]: 1 spawns, 2 batches, 12 jobs"), "{snap}");
+        let j = Json::parse(&m.to_json().to_string()).expect("valid JSON");
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        let sa = shards
+            .iter()
+            .find(|s| s.get("shard").unwrap().as_str() == Some("asg/16x16"))
+            .unwrap();
+        assert_eq!(sa.get("occupancy").unwrap().as_f64(), Some(6.0));
+        assert!((sa.get("arena_reuse_rate").unwrap().as_f64().unwrap() - 10.0 / 12.0).abs() < 1e-9);
     }
 
     #[test]

@@ -10,15 +10,27 @@
 //! pressure ([`server::DegradePolicy`]), and deterministic fault
 //! injection ([`fault::FaultPlan`]) for chaos testing. Every submitted
 //! job reaches exactly one terminal [`JobStatus`].
+//!
+//! Since PR 10 dispatch is **sharded by problem shape**: each
+//! [`server::shape_key`] gets its own lazily-spawned worker pool pinning
+//! warm kernel arenas (near-100% `arena_reused` for same-shape streams),
+//! fronted by async admission ([`server::Admission`]) with per-tenant
+//! quotas/deadlines ([`server::TenantQuota`]) and a byte-bounded
+//! [`cache::ResultCache`] keyed by `(problem digest, ε, engine)` whose
+//! hits bypass dispatch entirely.
 
 pub mod batcher;
+pub mod cache;
+pub mod digest;
 pub mod fault;
 pub mod job;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
+pub use cache::{CacheKey, ResultCache};
+pub use digest::problem_digest;
 pub use fault::{Fault, FaultPlan};
 pub use job::{Engine, JobKind, JobOutcome, JobRequest, JobStatus};
 pub use metrics::EngineCounters;
-pub use server::{Coordinator, CoordinatorConfig, DegradePolicy, JobHandle};
+pub use server::{Admission, Coordinator, CoordinatorConfig, DegradePolicy, JobHandle, TenantQuota};

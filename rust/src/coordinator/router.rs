@@ -11,10 +11,11 @@
 //! one thread is available. Large dense assignment still prefers the XLA
 //! path when an artifact bucket exists.
 
-use crate::api::{Problem, Solution, SolverConfig, SolverRegistry};
+use crate::api::{Problem, Solution, SolverConfig, SolverRegistry, WarmKernelSolver};
 use crate::coordinator::job::{Engine, JobRequest};
 use crate::core::Result;
 use crate::runtime::XlaRuntime;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Instances below this size always run natively under `Auto`.
@@ -150,6 +151,69 @@ impl Router {
                     .collect()
             }
         }
+    }
+
+    /// Like [`Router::execute_batch`], but kernel engines run on a
+    /// [`WarmKernelSolver`] held in `pinned` — the shard worker's
+    /// arena-affinity state — so the warm arena survives *across*
+    /// batches, not just within one. Non-kernel engines fall back to the
+    /// per-call path. Certificates are attached per item when its request
+    /// asks, mirroring the registry path exactly.
+    pub fn execute_batch_pinned(
+        &self,
+        pinned: &mut PinnedSolvers,
+        reqs: &[&JobRequest],
+        engine: Engine,
+    ) -> Vec<Result<Solution>> {
+        debug_assert!(engine != Engine::Auto, "resolve() before execute_batch_pinned()");
+        use std::collections::hash_map::Entry;
+        let key = engine.key();
+        let solver = match pinned.by_engine.entry(key) {
+            Entry::Occupied(o) => Some(o.into_mut()),
+            Entry::Vacant(v) => {
+                WarmKernelSolver::for_engine(key, &self.config).map(|s| v.insert(s))
+            }
+        };
+        let Some(solver) = solver else {
+            return self.execute_batch(reqs, engine);
+        };
+        let items: Vec<(&crate::api::Problem, &crate::api::SolveRequest)> =
+            reqs.iter().map(|r| (&r.kind, &r.request)).collect();
+        let mut results = solver.solve_each(&items);
+        for (result, rq) in results.iter_mut().zip(reqs) {
+            if let Ok(sol) = result {
+                if rq.request.want_certificate {
+                    sol.certificate =
+                        Some(crate::core::certify::certify(&rq.kind, sol, &rq.request));
+                }
+            }
+        }
+        results
+    }
+}
+
+/// A shard worker's pinned kernel engines, keyed by canonical engine
+/// name. One shard serves one problem shape, so each entry holds exactly
+/// one warm arena of that shape; a worker that catches a panic must
+/// [`PinnedSolvers::clear`] (the arena state is unspecified mid-solve,
+/// and a cold rebuild is always correct).
+#[derive(Default)]
+pub struct PinnedSolvers {
+    by_engine: HashMap<&'static str, WarmKernelSolver>,
+}
+
+impl PinnedSolvers {
+    pub fn clear(&mut self) {
+        self.by_engine.clear();
+    }
+
+    /// How many engines this worker currently pins (metrics/tests).
+    pub fn len(&self) -> usize {
+        self.by_engine.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_engine.is_empty()
     }
 }
 
@@ -293,6 +357,57 @@ mod tests {
             let single = r.execute(rq, Engine::NativeSeq).unwrap();
             assert_eq!(single.matching(), out.as_ref().unwrap().matching());
         }
+    }
+
+    #[test]
+    fn pinned_batches_reuse_the_arena_across_calls() {
+        let r = Router::new(None, 2);
+        let mut pinned = PinnedSolvers::default();
+        let mk = |i: u64| JobRequest {
+            id: i,
+            kind: JobKind::Assignment(Workload::RandomCosts { n: 10 }.assignment(i)),
+            request: SolveRequest::new(0.3),
+            engine: Engine::NativeSeq,
+        };
+        // three separate one-job batches: execute_batch would rebuild the
+        // kernel each time and report zero reuse
+        let jobs: Vec<JobRequest> = (0..3).map(mk).collect();
+        let mut reused = Vec::new();
+        for rq in &jobs {
+            let out = r.execute_batch_pinned(&mut pinned, &[rq], Engine::NativeSeq);
+            reused.push(out[0].as_ref().unwrap().stats.arena_reused);
+        }
+        assert_eq!(reused, vec![false, true, true], "arena survives batch boundaries");
+        assert_eq!(pinned.len(), 1);
+        // per-call path for comparison: never reuses across calls
+        let cold = r.execute_batch(&[&jobs[2]], Engine::NativeSeq);
+        assert!(!cold[0].as_ref().unwrap().stats.arena_reused);
+        // results agree with the unpinned path
+        let a = r.execute(&jobs[1], Engine::NativeSeq).unwrap();
+        let b = r.execute_batch_pinned(&mut pinned, &[&jobs[1]], Engine::NativeSeq);
+        assert_eq!(a.matching(), b[0].as_ref().unwrap().matching());
+        // non-kernel engines fall back (and pin nothing)
+        let h = JobRequest { engine: Engine::Hungarian, ..mk(9) };
+        let out = r.execute_batch_pinned(&mut pinned, &[&h], Engine::Hungarian);
+        assert!(out[0].is_ok());
+        assert_eq!(pinned.len(), 1);
+        pinned.clear();
+        assert!(pinned.is_empty());
+    }
+
+    #[test]
+    fn pinned_batches_attach_certificates_like_the_registry_path() {
+        let r = Router::new(None, 2);
+        let mut pinned = PinnedSolvers::default();
+        let rq = JobRequest {
+            id: 1,
+            kind: JobKind::Assignment(Workload::RandomCosts { n: 8 }.assignment(3)),
+            request: SolveRequest::new(0.3).certify(true),
+            engine: Engine::NativeSeq,
+        };
+        let out = r.execute_batch_pinned(&mut pinned, &[&rq], Engine::NativeSeq);
+        let cert = out[0].as_ref().unwrap().certificate.as_ref().expect("certificate attached");
+        assert!(cert.ok(), "{}", cert.summary());
     }
 
     #[test]

@@ -3,25 +3,47 @@
 //! Topology (std::thread + mpsc; tokio is unavailable offline):
 //!
 //! ```text
-//! submit() ──sync_channel(backpressure)──► dispatcher ──batcher──► job queue
-//!               retries (delayed) ▲            │                  ▲   │
-//!                                 │            ▼                  │   ▼
-//!                                 │     shed expired        workers (N)
-//!                                 │                               │
-//!                                 └───────────────────────────────┤
-//!                                                                 ▼
-//!                                   JobHandle ◄──per-job channel── execute
-//!                                              supervisor respawns panicked
-//!                                              workers (restart budget)
+//! admit()/submit() ──sync_channel(backpressure)──► dispatcher
+//!     │  cache hit? ──► reply immediately             │ shape_key(job)
+//!     ▼                                               ▼
+//! quota check (per-tenant)              ┌─── shard A ───┐ ┌─ shard B ─┐
+//!     retries (delayed) ▲               │ batcher       │ │  ...      │
+//!                       │               │   ▼           │ └───────────┘
+//!                       │               │ workers (N)   │  lazily spawned,
+//!                       └───────────────┤   pinned      │  LRU-evicted at
+//!                                       │   arenas      │  max_shards, idle
+//!                                       └───────┬───────┘  reap after TTL
+//!                                               ▼
+//!                         JobHandle ◄──per-job channel── execute
+//!                                    per-shard supervisor respawns
+//!                                    panicked workers (restart budget)
 //! ```
 //!
 //! The dispatcher resolves `Engine::Auto` and the artifact bucket up
-//! front and groups jobs by (engine, bucket) via [`Batcher`]; workers
-//! execute whole closed batches through
-//! [`Router::execute_batch`], so XLA executions with the same bucket
-//! reuse the compiled executable back-to-back and the CPU kernel
-//! engines reuse one flow-kernel arena across same-shape jobs (the
-//! reuse hits land in [`Metrics::record_arena_reuse`]).
+//! front and routes each job by [`shape_key`] to a dedicated **shard**:
+//! a lazily-spawned worker pool with its own [`Batcher`] and supervisor.
+//! Workers execute whole closed batches through
+//! [`Router::execute_batch_pinned`], holding their kernel solvers (and
+//! therefore the flow-kernel arena) *across* batches — a same-shape job
+//! stream reports `arena_reused` on every job after a worker's first
+//! (the hits land in [`Metrics::record_arena_reuse`] and per shard in
+//! [`Metrics::record_shard_arena_reuse`]). Shards are capped at
+//! [`CoordinatorConfig::max_shards`] with LRU eviction and reaped after
+//! [`CoordinatorConfig::shard_idle_ttl`] without traffic.
+//!
+//! # Admission, tenants, and the result cache
+//!
+//! [`Coordinator::admit`] is the non-blocking front door: it resolves
+//! the job against its tenant's [`TenantQuota`] (max in-flight, max
+//! queue depth, per-tenant default deadline) and answers with
+//! [`Admission::Accepted`] or [`Admission::Backpressure`] carrying a
+//! `retry_after` hint — it never blocks the caller. The blocking
+//! [`Coordinator::submit`]/[`Coordinator::submit_request`] path keeps
+//! its backpressure-by-blocking semantics and still resolves tenant
+//! deadlines. Both consult the [`ResultCache`] first when
+//! [`CoordinatorConfig::cache_bytes`] is non-zero: a hit on
+//! `(problem digest, ε, engine)` replies immediately with a
+//! byte-identical stored answer and bypasses dispatch entirely.
 //!
 //! # Fault tolerance
 //!
@@ -61,18 +83,23 @@
 //!   deterministically, inside the supervised region — the chaos-test
 //!   hook `otpr serve --fault-seed` and `tests/fault_injection.rs` use.
 
-use crate::api::{Coupling, Solution, SolveRequest};
+use crate::api::{Coupling, EpsSemantics, Solution, SolveRequest};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::cache::{CacheKey, ResultCache};
+use crate::coordinator::digest::problem_digest;
 use crate::coordinator::fault::{Fault, FaultPlan};
 use crate::coordinator::job::{Engine, JobKind, JobOutcome, JobRequest, JobStatus};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::router::{warm_variant, Router};
+use crate::coordinator::router::{warm_variant, PinnedSolvers, Router};
 use crate::core::{OtprError, Result};
 use crate::runtime::XlaRuntime;
 use crate::util::pool;
 use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -99,8 +126,44 @@ impl Default for DegradePolicy {
     }
 }
 
+/// Per-tenant admission limits and deadline default. Resolved by tenant
+/// name from [`CoordinatorConfig::tenants`]; requests whose
+/// `SolveRequest::tenant` is `None` or unknown bill to
+/// [`CoordinatorConfig::default_quota`].
+#[derive(Debug, Clone)]
+pub struct TenantQuota {
+    /// Jobs this tenant may have admitted-but-not-terminal at once;
+    /// [`Coordinator::admit`] answers `Backpressure` beyond it.
+    pub max_in_flight: usize,
+    /// Jobs this tenant may have waiting (admitted but not yet picked up
+    /// by a shard worker); the queue-depth-driven shedding signal.
+    pub max_queue_depth: usize,
+    /// Default deadline for this tenant's jobs; a job's effective
+    /// deadline is the tightest of its own request budget, this, and the
+    /// coordinator-wide [`CoordinatorConfig::default_deadline`].
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for TenantQuota {
+    /// Permissive: no caps, no deadline — the anonymous tenant keeps the
+    /// pre-quota coordinator semantics exactly.
+    fn default() -> Self {
+        Self { max_in_flight: usize::MAX, max_queue_depth: usize::MAX, default_deadline: None }
+    }
+}
+
+/// What [`Coordinator::admit`] answers — admission never blocks.
+pub enum Admission {
+    /// The job is in; await the handle as usual.
+    Accepted(JobHandle),
+    /// The tenant's quota (or the dispatch queue) is saturated; nothing
+    /// was enqueued. Come back after `retry_after`.
+    Backpressure { retry_after: Duration },
+}
+
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
+    /// Workers **per shard** (each shape-keyed shard gets its own pool).
     pub workers: usize,
     /// Queue capacity before submit() blocks (backpressure).
     pub queue_capacity: usize,
@@ -122,14 +185,31 @@ pub struct CoordinatorConfig {
     /// Base backoff before a retry re-enters the dispatcher; doubles per
     /// attempt with deterministic per-job jitter.
     pub retry_backoff: Duration,
-    /// Worker respawns allowed across the coordinator's lifetime; once
-    /// exhausted, dead workers stay dead and — with the pool empty —
-    /// queued jobs fail terminally rather than hang.
+    /// Worker respawns allowed **per shard** across its lifetime; once
+    /// exhausted, that shard's workers stay dead and its shape's queued
+    /// jobs fail terminally rather than hang — other shards keep serving.
     pub restart_budget: u32,
     pub degrade: DegradePolicy,
     /// Deterministic fault injection (tests and chaos runs); `None`
     /// injects nothing.
     pub faults: Option<Arc<FaultPlan>>,
+    /// Most shape-keyed shards alive at once; routing a new shape beyond
+    /// this evicts the least-recently-used live shard (its in-flight
+    /// batches drain first).
+    pub max_shards: usize,
+    /// A shard with no traffic for this long (and an empty batcher) is
+    /// reaped; its shape respawns a fresh shard on the next job.
+    pub shard_idle_ttl: Duration,
+    /// Byte budget for the `(problem digest, ε, engine)` result cache;
+    /// `0` disables caching entirely (the default — identical payloads
+    /// are rare outside serving workloads, and the digest pass is O(n²)
+    /// for dense problems).
+    pub cache_bytes: u64,
+    /// Named tenant quotas; see [`TenantQuota`].
+    pub tenants: Vec<(String, TenantQuota)>,
+    /// Quota for anonymous (`SolveRequest::tenant == None`) and unknown
+    /// tenants. Permissive by default.
+    pub default_quota: TenantQuota,
 }
 
 impl Default for CoordinatorConfig {
@@ -146,7 +226,72 @@ impl Default for CoordinatorConfig {
             restart_budget: 4,
             degrade: DegradePolicy::default(),
             faults: None,
+            max_shards: 8,
+            shard_idle_ttl: Duration::from_secs(30),
+            cache_bytes: 0,
+            tenants: Vec::new(),
+            default_quota: TenantQuota::default(),
         }
+    }
+}
+
+/// Live admission accounting for one tenant.
+struct TenantState {
+    name: String,
+    quota: TenantQuota,
+    /// Admitted, not yet terminal.
+    in_flight: AtomicU64,
+    /// Admitted, not yet picked up by a shard worker.
+    queued: AtomicU64,
+}
+
+impl TenantState {
+    fn new(name: String, quota: TenantQuota) -> Self {
+        Self { name, quota, in_flight: AtomicU64::new(0), queued: AtomicU64::new(0) }
+    }
+
+    fn saturated(&self) -> bool {
+        self.in_flight.load(Ordering::Relaxed) >= self.quota.max_in_flight as u64
+            || self.queued.load(Ordering::Relaxed) >= self.quota.max_queue_depth as u64
+    }
+}
+
+fn saturating_dec(counter: &AtomicU64) {
+    // Saturating: a stray double-decrement must not wrap the gauge.
+    let _ = counter.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| d.checked_sub(1));
+}
+
+/// Drop-guard riding each admitted job through every path — dispatch,
+/// retry, shed, fail, panic recovery — so the tenant's `in_flight` (and,
+/// until worker pickup, `queued`) gauges release on exactly one terminal
+/// outcome no matter where it happens.
+struct TenantSlot {
+    state: Arc<TenantState>,
+    picked: bool,
+}
+
+impl TenantSlot {
+    fn admit(state: Arc<TenantState>) -> Self {
+        state.in_flight.fetch_add(1, Ordering::Relaxed);
+        state.queued.fetch_add(1, Ordering::Relaxed);
+        Self { state, picked: false }
+    }
+
+    /// A shard worker took the job off the queue (it may still retry).
+    fn mark_picked(&mut self) {
+        if !self.picked {
+            self.picked = true;
+            saturating_dec(&self.state.queued);
+        }
+    }
+}
+
+impl Drop for TenantSlot {
+    fn drop(&mut self) {
+        if !self.picked {
+            saturating_dec(&self.state.queued);
+        }
+        saturating_dec(&self.state.in_flight);
     }
 }
 
@@ -156,8 +301,20 @@ struct Envelope {
     submitted: Instant,
     /// 0 on first execution; retries re-enter with `attempt + 1`.
     attempt: u32,
-    /// Effective deadline resolved at submit (budget ∧ tenant default).
+    /// Effective deadline resolved at submit (budget ∧ tenant default ∧
+    /// coordinator default).
     deadline: Option<Instant>,
+    /// Whether an expired deadline sheds the job pre-solve. True when any
+    /// default (tenant or coordinator) contributed to the deadline; a job
+    /// deadlined only by its own request budget keeps the legacy
+    /// run-and-return-cancelled semantics on its first attempt.
+    shed_on_expiry: bool,
+    /// Result-cache key computed at admission (None: cache disabled or
+    /// the payload is uncacheable). A clean `Served` outcome stores under
+    /// it.
+    cache_key: Option<CacheKey>,
+    /// Tenant quota accounting guard; released on the terminal outcome.
+    slot: Option<TenantSlot>,
     reply: Sender<JobOutcome>,
 }
 
@@ -190,66 +347,65 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     default_deadline: Option<Duration>,
+    retry_backoff: Duration,
+    router: Arc<Router>,
+    cache: Arc<ResultCache>,
+    tenants: HashMap<String, Arc<TenantState>>,
+    default_tenant: Arc<TenantState>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
-    supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
     pub fn start(config: CoordinatorConfig, runtime: Option<Arc<XlaRuntime>>) -> Self {
         let metrics = Arc::new(Metrics::new());
         let router = Arc::new(Router::new(runtime, config.solver_threads));
+        let cache = Arc::new(ResultCache::new(config.cache_bytes));
         let (tx, dispatch_rx) = sync_channel::<DispatchMsg>(config.queue_capacity);
-        // batch queue: dispatcher -> workers
-        let (batch_tx, batch_rx) = sync_channel::<Vec<Envelope>>(config.queue_capacity);
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
         // retry path: workers -> dispatcher, unbounded so a worker can
         // never deadlock against a full dispatcher
         let (retry_tx, retry_rx) = channel::<(Instant, Envelope)>();
 
-        let dispatcher = {
-            let metrics = metrics.clone();
-            let batcher_cfg = config.batcher.clone();
-            let router = router.clone();
-            let retry_backoff = config.retry_backoff;
-            let shed_enabled = config.default_deadline.is_some();
-            std::thread::spawn(move || {
-                dispatcher_loop(
-                    dispatch_rx,
-                    retry_rx,
-                    batch_tx,
-                    batcher_cfg,
-                    metrics,
-                    router,
-                    retry_backoff,
-                    shed_enabled,
-                )
+        let tenants: HashMap<String, Arc<TenantState>> = config
+            .tenants
+            .iter()
+            .map(|(name, quota)| {
+                (name.clone(), Arc::new(TenantState::new(name.clone(), quota.clone())))
             })
-        };
+            .collect();
+        let default_tenant =
+            Arc::new(TenantState::new("anonymous".to_string(), config.default_quota.clone()));
 
-        let ctx = Arc::new(WorkerCtx {
-            router,
+        let host = ShardHost {
             metrics: metrics.clone(),
+            router: router.clone(),
+            cache: cache.clone(),
+            batcher_cfg: config.batcher.clone(),
+            queue_capacity: config.queue_capacity,
+            workers: config.workers.max(1),
+            restart_budget: config.restart_budget,
+            max_shards: config.max_shards.max(1),
+            idle_ttl: config.shard_idle_ttl,
+            retry_backoff: config.retry_backoff,
             audit_every: config.audit_sample_every,
             max_retries: config.max_retries,
-            retry_backoff: config.retry_backoff,
             degrade: config.degrade.clone(),
             faults: config.faults.clone(),
-            shed_enabled: config.default_deadline.is_some(),
             retry_tx,
-        });
-        let workers = config.workers.max(1);
-        let restart_budget = config.restart_budget;
-        let supervisor = std::thread::spawn(move || {
-            supervisor_loop(batch_rx, ctx, workers, restart_budget)
-        });
+        };
+        let dispatcher =
+            std::thread::spawn(move || dispatcher_loop(dispatch_rx, retry_rx, host));
 
         Self {
             tx,
             metrics,
             next_id: AtomicU64::new(1),
             default_deadline: config.default_deadline,
+            retry_backoff: config.retry_backoff,
+            router,
+            cache,
+            tenants,
+            default_tenant,
             dispatcher: Some(dispatcher),
-            supervisor: Some(supervisor),
         }
     }
 
@@ -259,50 +415,180 @@ impl Coordinator {
         self.submit_request(kind, SolveRequest::new(eps), engine)
     }
 
+    /// The tenant a request bills to (named, or the anonymous default for
+    /// `None` and unknown names).
+    fn tenant_for(&self, request: &SolveRequest) -> Arc<TenantState> {
+        request
+            .tenant
+            .as_ref()
+            .and_then(|name| self.tenants.get(name))
+            .unwrap_or(&self.default_tenant)
+            .clone()
+    }
+
+    /// Deadline default for `tenant`: the tighter of its quota's
+    /// `default_deadline` and the coordinator-wide one.
+    fn deadline_default(&self, tenant: &TenantState) -> Option<Duration> {
+        match (tenant.quota.default_deadline, self.default_deadline) {
+            (Some(t), Some(g)) => Some(t.min(g)),
+            (Some(t), None) => Some(t),
+            (None, g) => g,
+        }
+    }
+
+    /// Build the envelope + handle for one job, resolving the tenant
+    /// deadline and the cache key. Does NOT touch quota gauges.
+    fn make_envelope(
+        &self,
+        kind: JobKind,
+        request: SolveRequest,
+        engine: Engine,
+        tenant: &Arc<TenantState>,
+    ) -> (Envelope, JobHandle) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let submitted = Instant::now();
+        let default = self.deadline_default(tenant);
+        let deadline = request.effective_deadline(submitted, default);
+        let req = JobRequest { id, kind, request, engine };
+        let cache_key = self.cache_key_for(&req);
+        let env = Envelope {
+            req,
+            engine,
+            submitted,
+            attempt: 0,
+            deadline,
+            shed_on_expiry: default.is_some(),
+            cache_key,
+            slot: None,
+            reply: reply_tx,
+        };
+        (env, JobHandle { id, rx: reply_rx })
+    }
+
+    /// The result-cache key for this job, or `None` when the cache is
+    /// disabled or the payload is uncacheable (generated costs).
+    fn cache_key_for(&self, req: &JobRequest) -> Option<CacheKey> {
+        if !self.cache.enabled() {
+            return None;
+        }
+        let digest = problem_digest(&req.kind)?;
+        let resolved = self.router.resolve(req);
+        Some(CacheKey {
+            digest,
+            eps_bits: req.request.eps.to_bits(),
+            raw_eps: req.request.eps_semantics == EpsSemantics::AlgorithmParam,
+            engine: resolved.key(),
+            want_certificate: req.request.want_certificate,
+        })
+    }
+
+    /// Check the result cache; on a hit, reply through the envelope
+    /// immediately (bypassing dispatch entirely) and hand back the
+    /// handle. The stored answer is byte-identical to the fresh solve
+    /// that populated it.
+    fn try_cache_hit(&self, env: &Envelope, handle: JobHandle) -> std::result::Result<JobHandle, JobHandle> {
+        let Some(key) = &env.cache_key else { return Err(handle) };
+        let Some(sol) = self.cache.get(key) else {
+            self.metrics.record_cache_miss();
+            return Err(handle);
+        };
+        self.metrics.record_submit();
+        self.metrics.record_cache_hit();
+        self.metrics.record_done(key.engine, true, 0.0, 0.0);
+        send_outcome(
+            &self.metrics,
+            &env.reply,
+            JobOutcome {
+                id: env.req.id,
+                engine_used: key.engine,
+                status: JobStatus::Served,
+                result: Ok(sol),
+                queued_secs: 0.0,
+                solve_secs: 0.0,
+            },
+        );
+        Ok(handle)
+    }
+
     /// Submit a job with a full [`SolveRequest`] — wall-clock budget,
     /// cancellation token, and progress observer are honored by the
     /// executing engine; progress additionally feeds the coordinator's
     /// per-engine phase metrics. The job's effective deadline is resolved
-    /// here: the tighter of the request budget and the coordinator's
-    /// [`CoordinatorConfig::default_deadline`].
+    /// here: the tightest of the request budget, the tenant's
+    /// [`TenantQuota::default_deadline`], and the coordinator's
+    /// [`CoordinatorConfig::default_deadline`]. Blocks when the dispatch
+    /// queue is at capacity; use [`Coordinator::admit`] for the
+    /// non-blocking quota-checked front door.
     pub fn submit_request(
         &self,
         kind: JobKind,
         request: SolveRequest,
         engine: Engine,
     ) -> Result<JobHandle> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        let submitted = Instant::now();
-        let deadline = request.effective_deadline(submitted, self.default_deadline);
-        let req = JobRequest { id, kind, request, engine };
+        let tenant = self.tenant_for(&request);
+        let (mut env, handle) = self.make_envelope(kind, request, engine, &tenant);
+        let handle = match self.try_cache_hit(&env, handle) {
+            Ok(handle) => return Ok(handle),
+            Err(handle) => handle,
+        };
+        env.slot = Some(TenantSlot::admit(tenant));
         self.metrics.record_submit();
-        self.tx
-            .send(DispatchMsg::Job(Envelope {
-                req,
-                engine,
-                submitted,
-                attempt: 0,
-                deadline,
-                reply: reply_tx,
-            }))
-            .map_err(|_| {
-                self.metrics.record_reject();
-                OtprError::Coordinator("coordinator is shut down".into())
-            })?;
-        Ok(JobHandle { id, rx: reply_rx })
+        self.tx.send(DispatchMsg::Job(env)).map_err(|_| {
+            self.metrics.record_reject();
+            OtprError::Coordinator("coordinator is shut down".into())
+        })?;
+        Ok(handle)
     }
 
-    /// Graceful shutdown: flush batches, join threads. Retries still in
-    /// backoff at this point resolve terminally (Failed) — shutdown never
-    /// waits out a backoff timer and never leaves a handle hanging.
+    /// Non-blocking admission: answer [`Admission::Backpressure`] (with a
+    /// `retry_after` hint) instead of blocking when the tenant's
+    /// [`TenantQuota`] or the dispatch queue is saturated. Cache hits
+    /// bypass both — a stored answer costs nothing to serve.
+    pub fn admit(
+        &self,
+        kind: JobKind,
+        request: SolveRequest,
+        engine: Engine,
+    ) -> Result<Admission> {
+        let tenant = self.tenant_for(&request);
+        let (mut env, handle) = self.make_envelope(kind, request, engine, &tenant);
+        let handle = match self.try_cache_hit(&env, handle) {
+            Ok(handle) => return Ok(Admission::Accepted(handle)),
+            Err(handle) => handle,
+        };
+        if tenant.saturated() {
+            self.metrics.record_backpressure(&tenant.name);
+            return Ok(Admission::Backpressure { retry_after: self.retry_backoff });
+        }
+        let tenant_name = tenant.name.clone();
+        self.metrics.record_admitted(&tenant_name);
+        env.slot = Some(TenantSlot::admit(tenant));
+        self.metrics.record_submit();
+        match self.tx.try_send(DispatchMsg::Job(env)) {
+            Ok(()) => Ok(Admission::Accepted(handle)),
+            Err(TrySendError::Full(msg)) => {
+                // Roll back: the job never entered the queue; dropping
+                // the returned envelope releases its tenant slot.
+                drop(msg);
+                self.metrics.record_reject();
+                self.metrics.record_backpressure(&tenant_name);
+                Ok(Admission::Backpressure { retry_after: self.retry_backoff })
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.metrics.record_reject();
+                Err(OtprError::Coordinator("coordinator is shut down".into()))
+            }
+        }
+    }
+
+    /// Graceful shutdown: flush batches, join shard pools. Retries still
+    /// in backoff at this point resolve terminally (Failed) — shutdown
+    /// never waits out a backoff timer and never leaves a handle hanging.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(DispatchMsg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
-        }
-        if let Some(s) = self.supervisor.take() {
-            let _ = s.join();
         }
     }
 }
@@ -312,9 +598,6 @@ impl Drop for Coordinator {
         let _ = self.tx.send(DispatchMsg::Shutdown);
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
-        }
-        if let Some(s) = self.supervisor.take() {
-            let _ = s.join();
         }
     }
 }
@@ -391,99 +674,248 @@ fn key_label(key: &crate::coordinator::batcher::BatchKey) -> String {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn dispatcher_loop(
-    rx: Receiver<DispatchMsg>,
-    retry_rx: Receiver<(Instant, Envelope)>,
-    batch_tx: SyncSender<Vec<Envelope>>,
-    cfg: BatcherConfig,
+/// Terminal error for jobs whose shard (or would-be shard) has no
+/// workers left.
+const POOL_EXHAUSTED: &str = "worker pool exhausted; job was not executed";
+
+/// Everything the dispatcher needs to spawn and run shape-keyed shards.
+struct ShardHost {
     metrics: Arc<Metrics>,
     router: Arc<Router>,
+    cache: Arc<ResultCache>,
+    batcher_cfg: BatcherConfig,
+    queue_capacity: usize,
+    workers: usize,
+    restart_budget: u32,
+    max_shards: usize,
+    idle_ttl: Duration,
     retry_backoff: Duration,
-    shed_enabled: bool,
-) {
-    let mut batcher: Batcher<Envelope> = Batcher::new(cfg);
-    // Retries waiting out their backoff; folded into the poll timeout.
-    let mut pending: Vec<(Instant, Envelope)> = Vec::new();
+    audit_every: u64,
+    max_retries: u32,
+    degrade: DegradePolicy,
+    faults: Option<Arc<FaultPlan>>,
+    retry_tx: Sender<(Instant, Envelope)>,
+}
 
-    // Close a batch toward the worker pool. When every worker is gone
-    // (restart budget exhausted) the send fails and the batch's jobs are
-    // failed terminally — queued work must never hang on a dead pool.
-    let close = |batch: crate::coordinator::batcher::Batch<Envelope>| -> bool {
+/// One shape-keyed worker pool: its own batcher, batch channel, and
+/// supervised workers whose pinned kernel solvers hold this shape's warm
+/// arena across batches.
+struct Shard {
+    key: (u8, usize, usize),
+    label: String,
+    batcher: Batcher<Envelope>,
+    batch_tx: Option<SyncSender<Vec<Envelope>>>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+    last_used: Instant,
+    /// Restart budget exhausted: this shape fails fast; the tombstone is
+    /// never evicted (a fresh shard would silently resurrect the shape).
+    dead: bool,
+}
+
+impl Shard {
+    /// Close one batch toward this shard's workers. When every worker is
+    /// gone (restart budget exhausted) the send fails, the batch's jobs
+    /// fail terminally, and the shard goes dead — queued work must never
+    /// hang on a dead pool, and sibling shards keep serving.
+    fn close(&mut self, batch: crate::coordinator::batcher::Batch<Envelope>, metrics: &Metrics) {
         metrics.record_batch(
             &key_label(&batch.key),
             batch.jobs.len(),
             batch.wait().as_micros() as u64,
         );
-        match batch_tx.send(batch.jobs) {
-            Ok(()) => true,
-            Err(std::sync::mpsc::SendError(jobs)) => {
-                for env in jobs {
-                    fail_env(&metrics, env, "worker pool exhausted; job was not executed");
-                }
-                false
+        metrics.record_shard_batch(&self.label, batch.jobs.len());
+        let sent = match &self.batch_tx {
+            Some(tx) => tx.send(batch.jobs).map_err(|std::sync::mpsc::SendError(jobs)| jobs),
+            None => Err(batch.jobs),
+        };
+        if let Err(jobs) = sent {
+            self.dead = true;
+            self.batch_tx = None;
+            if let Some(s) = self.supervisor.take() {
+                let _ = s.join();
+            }
+            for env in jobs {
+                fail_env(metrics, env, POOL_EXHAUSTED);
             }
         }
-    };
+    }
 
-    // Shed or enqueue one job; false = worker pool gone. Shedding applies
-    // under a tenant default deadline, and always to expired retries; a
-    // first-attempt job deadlined only by its own budget keeps the legacy
-    // run-and-return-cancelled semantics.
-    let push_job = |batcher: &mut Batcher<Envelope>, mut env: Envelope| -> bool {
-        if (shed_enabled || env.attempt > 0) && env.deadline.is_some_and(|d| d <= Instant::now()) {
-            shed_env(&metrics, env, retry_backoff);
-            return true;
+    /// Flush and wind down: close open batches toward the workers, drop
+    /// the channel so they exit after draining, and join the pool. Jobs
+    /// already inside the workers complete normally first.
+    fn retire(mut self, metrics: &Metrics) {
+        let open = self.batcher.drain_all();
+        for batch in open {
+            self.close(batch, metrics);
         }
-        // Resolve Auto and the artifact bucket here, once, so the batch
-        // key is final and workers never re-route.
-        let engine = router.resolve(&env.req);
-        if env.req.engine == Engine::Auto && env.attempt == 0 {
-            metrics.record_auto_route(engine.name());
+        self.batch_tx = None;
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
-        env.engine = engine;
-        let key = (engine.name(), router.bucket(&env.req, engine));
-        if env.attempt > 0 {
-            // A retry already paid its accumulation wait once — close it
-            // (plus any same-key waiters) toward the pool immediately.
-            let batch = batcher.push_now(key, env);
-            return close(batch);
-        }
-        match batcher.push(key, env) {
-            Some(batch) => close(batch),
-            None => true,
+    }
+}
+
+/// Human label for a shape key, e.g. `asg/16x16` — the `/metrics` shard
+/// identifier.
+fn shard_label(key: &(u8, usize, usize)) -> String {
+    let kind = match key.0 {
+        0 => "asg",
+        1 => "ot",
+        2 => "imp-asg",
+        _ => "imp-ot",
+    };
+    format!("{kind}/{}x{}", key.1, key.2)
+}
+
+/// Spawn a fresh shard for `key`: its own bounded batch channel and a
+/// supervised worker pool whose context carries the shard label.
+fn spawn_shard(host: &ShardHost, key: (u8, usize, usize)) -> Shard {
+    let label = shard_label(&key);
+    let (batch_tx, batch_rx) = sync_channel::<Vec<Envelope>>(host.queue_capacity);
+    let batch_rx = Arc::new(Mutex::new(batch_rx));
+    let ctx = Arc::new(WorkerCtx {
+        router: host.router.clone(),
+        metrics: host.metrics.clone(),
+        cache: host.cache.clone(),
+        audit_every: host.audit_every,
+        max_retries: host.max_retries,
+        retry_backoff: host.retry_backoff,
+        degrade: host.degrade.clone(),
+        faults: host.faults.clone(),
+        retry_tx: host.retry_tx.clone(),
+        shard: label.clone(),
+    });
+    let (workers, restart_budget) = (host.workers, host.restart_budget);
+    let supervisor =
+        std::thread::spawn(move || supervisor_loop(batch_rx, ctx, workers, restart_budget));
+    host.metrics.record_shard_spawn(&label);
+    Shard {
+        key,
+        label,
+        batcher: Batcher::new(host.batcher_cfg.clone()),
+        batch_tx: Some(batch_tx),
+        supervisor: Some(supervisor),
+        last_used: Instant::now(),
+        dead: false,
+    }
+}
+
+/// Route one job to its shape's shard — shedding expired
+/// defaults-deadlined jobs first, spawning the shard lazily, and
+/// LRU-evicting a live shard when `max_shards` is reached. Dead shards
+/// fail their shape's jobs fast without touching siblings.
+fn route_job(shards: &mut Vec<Shard>, host: &ShardHost, mut env: Envelope) {
+    if (env.shed_on_expiry || env.attempt > 0) && env.deadline.is_some_and(|d| d <= Instant::now())
+    {
+        shed_env(&host.metrics, env, host.retry_backoff);
+        return;
+    }
+    // Resolve Auto and the artifact bucket here, once, so the batch key
+    // is final and workers never re-route.
+    let engine = host.router.resolve(&env.req);
+    if env.req.engine == Engine::Auto && env.attempt == 0 {
+        host.metrics.record_auto_route(engine.name());
+    }
+    env.engine = engine;
+    let bkey = (engine.name(), host.router.bucket(&env.req, engine));
+    let shape = shape_key(&env.req);
+    let idx = match shards.iter().position(|s| s.key == shape) {
+        Some(i) => i,
+        None => {
+            if shards.len() >= host.max_shards {
+                let lru = shards
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| !s.dead)
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(i, _)| i);
+                match lru {
+                    Some(i) => {
+                        let evicted = shards.remove(i);
+                        host.metrics.record_shard_reap(&evicted.label);
+                        evicted.retire(&host.metrics);
+                    }
+                    // Every slot is a dead tombstone: nothing left to run
+                    // this shape on.
+                    None => {
+                        fail_env(&host.metrics, env, POOL_EXHAUSTED);
+                        return;
+                    }
+                }
+            }
+            shards.push(spawn_shard(host, shape));
+            shards.len() - 1
         }
     };
+    let shard = &mut shards[idx];
+    shard.last_used = Instant::now();
+    if shard.dead {
+        fail_env(&host.metrics, env, POOL_EXHAUSTED);
+        return;
+    }
+    if env.attempt > 0 {
+        // A retry already paid its accumulation wait once — close it
+        // (plus any same-key waiters) toward the pool immediately.
+        let batch = shard.batcher.push_now(bkey, env);
+        shard.close(batch, &host.metrics);
+    } else if let Some(batch) = shard.batcher.push(bkey, env) {
+        shard.close(batch, &host.metrics);
+    }
+    host.metrics.set_shard_pending(&shard.label, shard.batcher.pending() as u64);
+}
+
+fn dispatcher_loop(
+    rx: Receiver<DispatchMsg>,
+    retry_rx: Receiver<(Instant, Envelope)>,
+    host: ShardHost,
+) {
+    let mut shards: Vec<Shard> = Vec::new();
+    // Retries waiting out their backoff; folded into the poll timeout.
+    let mut pending: Vec<(Instant, Envelope)> = Vec::new();
 
     let drain_retry_rx = |pending: &mut Vec<(Instant, Envelope)>| {
         while let Ok(item) = retry_rx.try_recv() {
             pending.push(item);
         }
     };
-    let fail_pending = |pending: &mut Vec<(Instant, Envelope)>, msg: &str| {
+
+    // Wind down every shard (joining their pools), then fail retries
+    // still in backoff — shutdown never waits out a backoff timer and
+    // never leaves a handle hanging. Workers may emit retries while their
+    // final batches drain, so the retry queue is drained *after* the
+    // joins.
+    let wind_down = |shards: &mut Vec<Shard>, pending: &mut Vec<(Instant, Envelope)>, msg: &str| {
+        for shard in shards.drain(..) {
+            shard.retire(&host.metrics);
+        }
+        while let Ok(item) = retry_rx.try_recv() {
+            pending.push(item);
+        }
         for (_, env) in pending.drain(..) {
-            fail_env(&metrics, env, msg);
+            fail_env(&host.metrics, env, msg);
         }
     };
 
-    'live: loop {
+    loop {
         drain_retry_rx(&mut pending);
-        // Release retries whose backoff elapsed (push_job sheds the ones
+        // Release retries whose backoff elapsed (route_job sheds the ones
         // whose deadline expired while backing off).
         let now = Instant::now();
         let mut i = 0;
         while i < pending.len() {
             if pending[i].0 <= now {
                 let (_, env) = pending.swap_remove(i);
-                if !push_job(&mut batcher, env) {
-                    break 'live;
-                }
+                route_job(&mut shards, &host, env);
             } else {
                 i += 1;
             }
         }
         let next_retry = pending.iter().map(|(due, _)| *due).min();
-        let timeout = [batcher.next_deadline(), next_retry]
+        let next_batch =
+            shards.iter().filter(|s| !s.dead).filter_map(|s| s.batcher.next_deadline()).min();
+        let next_reap =
+            shards.iter().filter(|s| !s.dead).map(|s| s.last_used + host.idle_ttl).min();
+        let timeout = [next_batch, next_retry, next_reap]
             .into_iter()
             .flatten()
             .min()
@@ -491,55 +923,48 @@ fn dispatcher_loop(
             .unwrap_or(Duration::from_millis(50))
             .min(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(DispatchMsg::Job(env)) => {
-                if !push_job(&mut batcher, env) {
-                    break 'live;
-                }
-            }
+            Ok(DispatchMsg::Job(env)) => route_job(&mut shards, &host, env),
             Ok(DispatchMsg::Shutdown) => {
-                for batch in batcher.drain_all() {
-                    let _ = close(batch);
-                }
-                drain_retry_rx(&mut pending);
-                fail_pending(&mut pending, "coordinator shut down before the retry could run");
-                return; // dropping batch_tx stops workers
+                wind_down(
+                    &mut shards,
+                    &mut pending,
+                    "coordinator shut down before the retry could run",
+                );
+                return;
             }
             Err(RecvTimeoutError::Timeout) => {
-                let mut dead = false;
-                for batch in batcher.drain_expired() {
-                    if !close(batch) {
-                        dead = true;
+                for shard in shards.iter_mut() {
+                    let expired = shard.batcher.drain_expired();
+                    for batch in expired {
+                        shard.close(batch, &host.metrics);
                     }
+                    host.metrics
+                        .set_shard_pending(&shard.label, shard.batcher.pending() as u64);
                 }
-                if dead {
-                    break 'live;
+                // Reap shards idle past the TTL (nothing accumulating); a
+                // reaped shard's shape respawns fresh on its next job.
+                let mut i = 0;
+                while i < shards.len() {
+                    let idle = !shards[i].dead
+                        && shards[i].batcher.pending() == 0
+                        && shards[i].last_used.elapsed() >= host.idle_ttl;
+                    if idle {
+                        let shard = shards.remove(i);
+                        host.metrics.record_shard_reap(&shard.label);
+                        shard.retire(&host.metrics);
+                    } else {
+                        i += 1;
+                    }
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
-                for batch in batcher.drain_all() {
-                    let _ = close(batch);
-                }
-                drain_retry_rx(&mut pending);
-                fail_pending(&mut pending, "coordinator dropped before the retry could run");
+                wind_down(
+                    &mut shards,
+                    &mut pending,
+                    "coordinator dropped before the retry could run",
+                );
                 return;
             }
-        }
-    }
-
-    // Worker pool exhausted: fail everything queued, then keep answering
-    // (terminally) until shutdown so no submitter ever hangs or loses a
-    // reply.
-    for batch in batcher.drain_all() {
-        let _ = close(batch);
-    }
-    drain_retry_rx(&mut pending);
-    fail_pending(&mut pending, "worker pool exhausted; job was not executed");
-    loop {
-        match rx.recv() {
-            Ok(DispatchMsg::Job(env)) => {
-                fail_env(&metrics, env, "worker pool exhausted; job was not executed")
-            }
-            Ok(DispatchMsg::Shutdown) | Err(_) => return,
         }
     }
 }
@@ -602,16 +1027,15 @@ fn supervisor_loop(
 struct WorkerCtx {
     router: Arc<Router>,
     metrics: Arc<Metrics>,
+    cache: Arc<ResultCache>,
     audit_every: u64,
     max_retries: u32,
     retry_backoff: Duration,
     degrade: DegradePolicy,
     faults: Option<Arc<FaultPlan>>,
-    /// Mirror of `default_deadline.is_some()`: pickup-shedding applies
-    /// under a tenant default (and always to retries), never to a
-    /// first-attempt job deadlined only by its own budget.
-    shed_enabled: bool,
     retry_tx: Sender<(Instant, Envelope)>,
+    /// The owning shard's label (metrics attribution).
+    shard: String,
 }
 
 /// One job being processed by a worker. `reply` is taken exactly when a
@@ -623,6 +1047,13 @@ struct Prepared {
     submitted: Instant,
     attempt: u32,
     deadline: Option<Instant>,
+    /// See [`Envelope::shed_on_expiry`].
+    shed_on_expiry: bool,
+    cache_key: Option<CacheKey>,
+    /// Rides to the terminal outcome; dropped (releasing the tenant's
+    /// in-flight gauge) after the reply is out, or moved back into the
+    /// retry envelope.
+    slot: Option<TenantSlot>,
     reply: Option<Sender<JobOutcome>>,
     phase_count: Arc<AtomicU64>,
 }
@@ -640,12 +1071,19 @@ fn prepare(batch: Vec<Envelope>) -> Vec<Prepared> {
             req.request = req.request.chain_observer(move |_p| {
                 counter.fetch_add(1, Ordering::Relaxed);
             });
+            let mut slot = env.slot;
+            if let Some(slot) = slot.as_mut() {
+                slot.mark_picked();
+            }
             Prepared {
                 req,
                 engine: env.engine,
                 submitted: env.submitted,
                 attempt: env.attempt,
                 deadline: env.deadline,
+                shed_on_expiry: env.shed_on_expiry,
+                cache_key: env.cache_key,
+                slot,
                 reply: Some(env.reply),
                 phase_count,
             }
@@ -657,6 +1095,10 @@ fn prepare(batch: Vec<Envelope>) -> Vec<Prepared> {
 /// (the supervisor then decides about a respawn); `false` on clean
 /// shutdown (batch channel closed).
 fn worker_loop(rx: Arc<Mutex<Receiver<Vec<Envelope>>>>, ctx: Arc<WorkerCtx>) -> bool {
+    // This worker's pinned kernel solvers: the shard serves one problem
+    // shape, so the arena inside stays the right size and every batch
+    // after the first reuses it (the warm-affinity tentpole).
+    let mut pinned = PinnedSolvers::default();
     loop {
         let batch = {
             // A poisoned receiver lock means a sibling worker panicked
@@ -671,10 +1113,13 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Vec<Envelope>>>>, ctx: Arc<WorkerCtx>) -> 
         // fault) unwinds to here instead of killing the process, and only
         // this batch's unresolved jobs are affected.
         let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            process_batch(&mut jobs, &ctx);
+            process_batch(&mut jobs, &mut pinned, &ctx);
         }));
         if caught.is_err() {
             ctx.metrics.record_worker_panic();
+            // The pinned arena's state is unspecified mid-solve; a cold
+            // rebuild is always correct.
+            pinned.clear();
             // Jobs still holding their reply never reached a terminal
             // outcome — requeue (or fail) each, then exit and let the
             // supervisor decide whether this worker is replaced.
@@ -702,6 +1147,9 @@ fn retry_or_fail(ctx: &WorkerCtx, mut job: Prepared, reason: &str) {
             submitted: job.submitted,
             attempt: job.attempt + 1,
             deadline: job.deadline,
+            shed_on_expiry: job.shed_on_expiry,
+            cache_key: job.cache_key.take(),
+            slot: job.slot.take(),
             reply,
         };
         match ctx.retry_tx.send((due, env)) {
@@ -748,11 +1196,13 @@ fn shed_prepared(ctx: &WorkerCtx, mut job: Prepared) {
     );
 }
 
-/// Shape key for intra-batch grouping: jobs that can share one kernel
-/// arena (same problem kind and cost dimensions). Implicit (provider-
-/// backed) jobs group separately from dense ones — the payloads are O(n),
-/// and mixing storage modes in one warm-carry run buys nothing.
-fn shape_key(req: &JobRequest) -> (u8, usize, usize) {
+/// Shape key for shard routing and intra-batch grouping: jobs that can
+/// share one kernel arena (same problem kind and cost dimensions).
+/// Implicit (provider-backed) jobs group separately from dense ones —
+/// the payloads are O(n), and mixing storage modes in one warm-carry run
+/// buys nothing. Each distinct key gets its own dispatch shard, so a
+/// shard worker's pinned arena always fits the next batch.
+pub fn shape_key(req: &JobRequest) -> (u8, usize, usize) {
     let (nb, na) = req.kind.dims();
     match &req.kind {
         crate::api::Problem::Assignment(_) => (0, nb, na),
@@ -837,8 +1287,9 @@ fn resolve_degraded(ctx: &WorkerCtx, job: &Prepared, partial: Solution) -> (Solu
 /// Execute one batch: disposal pass (pickup-deadline shed, injected
 /// faults, budget clamping), then shape-grouped solves with per-job
 /// terminal dispositions. Runs entirely inside the worker's supervised
-/// (`catch_unwind`) region.
-fn process_batch(jobs: &mut Vec<Prepared>, ctx: &WorkerCtx) {
+/// (`catch_unwind`) region; `pinned` carries the worker's warm kernel
+/// solvers across batches.
+fn process_batch(jobs: &mut Vec<Prepared>, pinned: &mut PinnedSolvers, ctx: &WorkerCtx) {
     // Disposal pass. Order matters: an injected panic fires before the
     // job could be shed or failed, exactly like a real solver panic.
     let mut i = 0;
@@ -857,7 +1308,7 @@ fn process_batch(jobs: &mut Vec<Prepared>, ctx: &WorkerCtx) {
             Some(Fault::Delay(d)) => std::thread::sleep(d),
             _ => {}
         }
-        if (ctx.shed_enabled || attempt > 0) && jobs[i].deadline.is_some_and(|d| d <= now) {
+        if (jobs[i].shed_on_expiry || attempt > 0) && jobs[i].deadline.is_some_and(|d| d <= now) {
             let job = jobs.swap_remove(i);
             shed_prepared(ctx, job);
             continue;
@@ -909,7 +1360,7 @@ fn process_batch(jobs: &mut Vec<Prepared>, ctx: &WorkerCtx) {
         let reqs: Vec<&JobRequest> = idxs.iter().map(|&i| &jobs[i].req).collect();
         let outs: Vec<std::result::Result<Solution, String>> = ctx
             .router
-            .execute_batch(&reqs, engine)
+            .execute_batch_pinned(pinned, &reqs, engine)
             .into_iter()
             .map(|r| r.map_err(|e| e.to_string()))
             .collect();
@@ -931,6 +1382,16 @@ fn process_batch(jobs: &mut Vec<Prepared>, ctx: &WorkerCtx) {
                     ctx.metrics.record_done(engine_name, true, queued, solve);
                     if sol.stats.arena_reused {
                         ctx.metrics.record_arena_reuse(1);
+                        ctx.metrics.record_shard_arena_reuse(&ctx.shard, 1);
+                    }
+                    // A clean full-accuracy answer populates the result
+                    // cache (degraded/cancelled answers carry weaker
+                    // guarantees and never do).
+                    if status == JobStatus::Served && !sol.is_cancelled() {
+                        if let Some(key) = jobs[i].cache_key.clone() {
+                            let report = ctx.cache.insert(key, &sol);
+                            ctx.metrics.record_cache_insert(report.evictions, report.bytes);
+                        }
                     }
                     if sol.stats.warm_started {
                         ctx.metrics.record_warm_start(engine_name);
@@ -975,6 +1436,9 @@ fn process_batch(jobs: &mut Vec<Prepared>, ctx: &WorkerCtx) {
                                 submitted: jobs[i].submitted,
                                 attempt: jobs[i].attempt + 1,
                                 deadline: jobs[i].deadline,
+                                shed_on_expiry: jobs[i].shed_on_expiry,
+                                cache_key: jobs[i].cache_key.take(),
+                                slot: jobs[i].slot.take(),
                                 reply,
                             };
                             if let Err(std::sync::mpsc::SendError((_, env))) =
@@ -1297,5 +1761,300 @@ mod tests {
         assert_eq!(seq.jobs, 1);
         assert!(seq.phases > 0, "solver phases must stream into metrics");
         coord.shutdown();
+    }
+
+    #[test]
+    fn interleaved_shapes_keep_their_shards_arenas_warm() {
+        // The tentpole acceptance scenario: max_batch = 1 means every job
+        // is its own closed batch, so arena reuse can only come from
+        // shard workers pinning their kernel solvers *across* batches.
+        // Interleaving two shapes must not cool either shard.
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_secs(5) },
+                ..Default::default()
+            },
+            None,
+        );
+        let mut reused = Vec::new();
+        for i in 0..12u64 {
+            let n = if i % 2 == 0 { 14 } else { 10 };
+            let h = coord.submit(assignment_job(n, i), 0.3, Engine::NativeSeq).unwrap();
+            reused.push(h.wait().unwrap().result.unwrap().stats.arena_reused);
+        }
+        assert!(!reused[0] && !reused[1], "each shard's first job builds its arena cold");
+        assert!(
+            reused[2..].iter().all(|&r| r),
+            "every job after a shard's first must reuse its warm arena: {reused:?}"
+        );
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        assert_eq!(metrics.arena_reuse_hits.load(Ordering::Relaxed), 10);
+        let shards = metrics.shard_counters();
+        assert_eq!(shards.len(), 2, "one shard per shape");
+        for label in ["asg/14x14", "asg/10x10"] {
+            let s = shards.iter().find(|s| s.shard == label).expect("shard recorded");
+            assert_eq!((s.spawns, s.jobs, s.arena_reuse_hits), (1, 6, 5), "{label}");
+            assert!((s.arena_reuse_rate() - 5.0 / 6.0).abs() < 1e-12, "{label}");
+        }
+    }
+
+    #[test]
+    fn tenant_deadline_defaults_compose_with_budget_and_global() {
+        // Precedence is min(request budget, tenant default, global
+        // default); each leg proven to contribute.
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                tenants: vec![
+                    (
+                        "instant".into(),
+                        TenantQuota {
+                            default_deadline: Some(Duration::ZERO),
+                            ..Default::default()
+                        },
+                    ),
+                    (
+                        "slow".into(),
+                        TenantQuota {
+                            default_deadline: Some(Duration::from_secs(30)),
+                            ..Default::default()
+                        },
+                    ),
+                ],
+                ..Default::default()
+            },
+            None,
+        );
+        // Tenant default alone sheds…
+        let h = coord
+            .submit_request(
+                assignment_job(8, 1),
+                SolveRequest::new(0.3).for_tenant("instant"),
+                Engine::NativeSeq,
+            )
+            .unwrap();
+        assert!(matches!(h.wait().unwrap().status, JobStatus::Shed { .. }));
+        // …a generous tenant default serves…
+        let h = coord
+            .submit_request(
+                assignment_job(8, 2),
+                SolveRequest::new(0.3).for_tenant("slow"),
+                Engine::NativeSeq,
+            )
+            .unwrap();
+        assert_eq!(h.wait().unwrap().status, JobStatus::Served);
+        // …the request budget clamps below the tenant default…
+        let h = coord
+            .submit_request(
+                assignment_job(8, 3),
+                SolveRequest::new(0.3).for_tenant("slow").with_budget(Duration::ZERO),
+                Engine::NativeSeq,
+            )
+            .unwrap();
+        assert!(matches!(h.wait().unwrap().status, JobStatus::Shed { .. }));
+        // …and an unknown tenant with no default anywhere keeps the
+        // legacy deadline-free semantics.
+        let h = coord
+            .submit_request(
+                assignment_job(8, 4),
+                SolveRequest::new(0.3).for_tenant("nobody"),
+                Engine::NativeSeq,
+            )
+            .unwrap();
+        assert_eq!(h.wait().unwrap().status, JobStatus::Served);
+        coord.shutdown();
+
+        // A global default tighter than the tenant's wins the min.
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                default_deadline: Some(Duration::ZERO),
+                tenants: vec![(
+                    "slow".into(),
+                    TenantQuota {
+                        default_deadline: Some(Duration::from_secs(30)),
+                        ..Default::default()
+                    },
+                )],
+                ..Default::default()
+            },
+            None,
+        );
+        let h = coord
+            .submit_request(
+                assignment_job(8, 5),
+                SolveRequest::new(0.3).for_tenant("slow"),
+                Engine::NativeSeq,
+            )
+            .unwrap();
+        assert!(matches!(h.wait().unwrap().status, JobStatus::Shed { .. }));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tenant_quota_backpressures_without_touching_siblings() {
+        // A generous batcher wait keeps tenant a's job open (admitted,
+        // unserved), so its in-flight gauge deterministically saturates
+        // the quota — no dispatcher race, the gauge moves inside admit().
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_secs(30) },
+                tenants: vec![(
+                    "a".into(),
+                    TenantQuota { max_in_flight: 1, ..Default::default() },
+                )],
+                ..Default::default()
+            },
+            None,
+        );
+        let first = match coord
+            .admit(assignment_job(10, 1), SolveRequest::new(0.3).for_tenant("a"), Engine::NativeSeq)
+            .unwrap()
+        {
+            Admission::Accepted(h) => h,
+            Admission::Backpressure { .. } => panic!("tenant a's first job must be admitted"),
+        };
+        match coord
+            .admit(assignment_job(10, 2), SolveRequest::new(0.3).for_tenant("a"), Engine::NativeSeq)
+            .unwrap()
+        {
+            Admission::Backpressure { retry_after } => assert!(retry_after > Duration::ZERO),
+            Admission::Accepted(_) => panic!("tenant a is saturated at max_in_flight = 1"),
+        }
+        // The anonymous default tenant shares no gauge with a.
+        let second = match coord
+            .admit(assignment_job(10, 3), SolveRequest::new(0.3), Engine::NativeSeq)
+            .unwrap()
+        {
+            Admission::Accepted(h) => h,
+            Admission::Backpressure { .. } => panic!("a saturated quota must not leak across tenants"),
+        };
+        let metrics = coord.metrics.clone();
+        coord.shutdown(); // flushes the open batch; both admitted jobs serve
+        assert_eq!(first.wait().unwrap().status, JobStatus::Served);
+        assert_eq!(second.wait().unwrap().status, JobStatus::Served);
+        assert_eq!(metrics.backpressured_jobs.load(Ordering::Relaxed), 1);
+        let tenants = metrics.tenant_counters();
+        let a = tenants.iter().find(|t| t.tenant == "a").unwrap();
+        assert_eq!((a.admitted, a.backpressured), (1, 1));
+        let anon = tenants.iter().find(|t| t.tenant == "anonymous").unwrap();
+        assert_eq!((anon.admitted, anon.backpressured), (1, 0));
+    }
+
+    #[test]
+    fn cache_hits_are_byte_identical_to_the_fresh_solve() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { cache_bytes: 1 << 20, ..Default::default() },
+            None,
+        );
+        let matching_of = |sol: &crate::api::Solution| match &sol.coupling {
+            Coupling::Matching(m) => m.clone(),
+            Coupling::Plan(_) => panic!("assignment jobs return a matching"),
+        };
+        let fresh =
+            coord.submit(assignment_job(12, 7), 0.3, Engine::NativeSeq).unwrap().wait().unwrap();
+        assert_eq!(fresh.status, JobStatus::Served);
+        // Same payload, same ε, same engine: a hit (the insert lands
+        // before the first reply is sent, so this cannot race).
+        let hit =
+            coord.submit(assignment_job(12, 7), 0.3, Engine::NativeSeq).unwrap().wait().unwrap();
+        assert_eq!(hit.status, JobStatus::Served);
+        assert_eq!(hit.engine_used, "native-seq");
+        let (a, b) = (fresh.result.unwrap(), hit.result.unwrap());
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "cached cost is bit-exact");
+        assert_eq!(matching_of(&a), matching_of(&b), "cached matching is identical");
+        assert_eq!(a.duals, b.duals, "cached duals are identical");
+        // A different ε is a different answer — must miss and re-solve.
+        let other =
+            coord.submit(assignment_job(12, 7), 0.2, Engine::NativeSeq).unwrap().wait().unwrap();
+        assert_eq!(other.status, JobStatus::Served);
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        assert_eq!(metrics.cache_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.cache_misses.load(Ordering::Relaxed), 2);
+        assert!(metrics.cache_bytes() > 0);
+        let snap = metrics.snapshot();
+        assert!(snap.contains("cache: hits=1 misses=2"), "{snap}");
+    }
+
+    #[test]
+    fn a_panicking_shard_leaves_sibling_shards_serving() {
+        // Two shapes → two shards. Job 2 lives on the 14x14 shard and
+        // panics its only worker; the 10x10 shard never notices, and the
+        // panicked shard recovers under its own supervisor.
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                faults: Some(Arc::new(FaultPlan::new().panic_at(2))),
+                ..Default::default()
+            },
+            None,
+        );
+        let big: Vec<_> = (0..3)
+            .map(|i| coord.submit(assignment_job(14, i), 0.3, Engine::NativeSeq).unwrap())
+            .collect();
+        let small: Vec<_> = (0..3)
+            .map(|i| coord.submit(assignment_job(10, i), 0.3, Engine::NativeSeq).unwrap())
+            .collect();
+        for h in big {
+            let out = h.wait().unwrap();
+            assert_eq!(out.status, JobStatus::Served, "panicked shard recovers: {:?}", out.result);
+        }
+        for h in small {
+            assert_eq!(h.wait().unwrap().status, JobStatus::Served);
+        }
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        assert_eq!(metrics.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.worker_restarts.load(Ordering::Relaxed), 1);
+        let shards = metrics.shard_counters();
+        assert_eq!(shards.len(), 2);
+        let sibling = shards.iter().find(|s| s.shard == "asg/10x10").unwrap();
+        assert_eq!(sibling.jobs, 3, "the sibling shard served all its jobs");
+        assert_eq!(metrics.queue_depth(), 0);
+    }
+
+    #[test]
+    fn max_shards_evicts_the_lru_shard_and_respawns_on_return() {
+        let coord = Coordinator::start(
+            CoordinatorConfig { workers: 1, max_shards: 1, ..Default::default() },
+            None,
+        );
+        for (n, seed) in [(14usize, 1u64), (10, 2), (14, 3)] {
+            let out =
+                coord.submit(assignment_job(n, seed), 0.3, Engine::NativeSeq).unwrap().wait();
+            assert_eq!(out.unwrap().status, JobStatus::Served);
+        }
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        let shards = metrics.shard_counters();
+        let big = shards.iter().find(|s| s.shard == "asg/14x14").unwrap();
+        assert_eq!((big.spawns, big.reaps), (2, 1), "evicted shape respawns on its next job");
+        let small = shards.iter().find(|s| s.shard == "asg/10x10").unwrap();
+        assert_eq!((small.spawns, small.reaps), (1, 1));
+    }
+
+    #[test]
+    fn idle_shards_are_reaped_and_respawn_on_the_next_job() {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                workers: 1,
+                shard_idle_ttl: Duration::from_millis(100),
+                ..Default::default()
+            },
+            None,
+        );
+        let h = coord.submit(assignment_job(12, 1), 0.3, Engine::NativeSeq).unwrap();
+        assert!(h.wait().unwrap().result.is_ok());
+        // Past the TTL plus the dispatcher's 50ms poll cadence.
+        std::thread::sleep(Duration::from_millis(400));
+        let h = coord.submit(assignment_job(12, 2), 0.3, Engine::NativeSeq).unwrap();
+        assert!(h.wait().unwrap().result.is_ok());
+        let metrics = coord.metrics.clone();
+        coord.shutdown();
+        let shards = metrics.shard_counters();
+        let s = shards.iter().find(|s| s.shard == "asg/12x12").unwrap();
+        assert_eq!((s.spawns, s.reaps), (2, 1), "the idle shard was reaped and respawned");
     }
 }

@@ -220,6 +220,23 @@ impl SqEuclideanCosts {
         let d2 = dx * dx + dy * dy;
         (if self.take_sqrt { d2.sqrt() } else { d2 }) as f32
     }
+
+    /// Read-only views of the canonical payload — what a digest or a
+    /// cross-node shipper hashes/serializes instead of the O(n²) costs
+    /// the points imply (see `coordinator::digest`).
+    pub fn points_b(&self) -> &[[f64; 2]] {
+        &self.b_pts
+    }
+
+    pub fn points_a(&self) -> &[[f64; 2]] {
+        &self.a_pts
+    }
+
+    /// Whether this instance takes the square root (plain Euclidean) —
+    /// part of the canonical payload: same points, different metric.
+    pub fn takes_sqrt(&self) -> bool {
+        self.take_sqrt
+    }
 }
 
 impl CostProvider for SqEuclideanCosts {
@@ -278,6 +295,16 @@ impl L1PointCosts {
     fn eval(&self, b: usize, a: usize) -> f32 {
         // same zip/fold order as data::images::l1_distance(b_vec, a_vec)
         self.b_vecs[b].iter().zip(&self.a_vecs[a]).map(|(&x, &y)| (x - y).abs()).sum()
+    }
+
+    /// Read-only views of the canonical payload (see
+    /// [`SqEuclideanCosts::points_b`]).
+    pub fn vecs_b(&self) -> &[Vec<f32>] {
+        &self.b_vecs
+    }
+
+    pub fn vecs_a(&self) -> &[Vec<f32>] {
+        &self.a_vecs
     }
 }
 

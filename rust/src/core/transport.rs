@@ -32,6 +32,68 @@ fn ai(a: u32) -> usize {
     a as usize // cast-ok: u32→usize is lossless on 32/64-bit targets
 }
 
+/// Wire-format constants for [`TransportPlan::to_bytes`]: 4-byte magic,
+/// u16 version, u16 reserved, then nb/na/nnz as little-endian u64.
+const WIRE_MAGIC: &[u8; 4] = b"OTPL";
+const WIRE_VERSION: u16 = 1;
+const WIRE_HEADER_BYTES: usize = 4 + 2 + 2 + 8 + 8 + 8;
+
+/// Bounds-checked little-endian cursor for [`TransportPlan::from_bytes`]
+/// — every read either yields a value or a sized error, never a panic.
+struct WireReader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> WireReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| format!("plan bytes truncated at offset {} (need {n})", self.at))?;
+        let out = &self.bytes[self.at..end];
+        self.at = end;
+        Ok(out)
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// A u64 field that must fit in `usize` (dimensions like `na`, and
+    /// decoded `row_ptr` entries — both validated later by `from_csr`).
+    fn dim_u64(&mut self, what: &str) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("{what} {v} exceeds usize"))
+    }
+
+    /// A u64 *element count* (`nb`, `nnz`): every counted element occupies
+    /// at least 4 payload bytes, so any honest count is bounded by the
+    /// buffer length — reject forged counts before they size a Vec.
+    fn count_u64(&mut self, what: &str) -> Result<usize, String> {
+        let n = self.dim_u64(what)?;
+        if n > self.bytes.len() {
+            return Err(format!(
+                "{what} {n} is implausible for a {}-byte payload",
+                self.bytes.len()
+            ));
+        }
+        Ok(n)
+    }
+}
+
 #[derive(Debug, Clone)]
 enum Repr {
     /// Row-major `nb·na` slab.
@@ -129,6 +191,79 @@ impl TransportPlan {
         }
         let repr = Repr::Csr { row_ptr, col_idx, vals };
         Ok(Self { nb, na, repr, dense_cache: OnceLock::new() })
+    }
+
+    /// Serialize a CSR plan into the compact versioned wire format:
+    /// magic `OTPL`, u16 version, u16 reserved, then `nb`/`na`/`nnz` as
+    /// little-endian u64 followed by the raw `row_ptr` (u64), `col_idx`
+    /// (u32), and `vals` (f64 bit patterns) arrays. Values round-trip
+    /// bit-for-bit, so a shipped plan folds identically to the original
+    /// (the CONTRACT above). Dense and product reprs return `None`: the
+    /// wire format carries exactly the canonical sparse form — callers
+    /// holding a dense slab keep it local or extract CSR first.
+    pub fn to_bytes(&self) -> Option<Vec<u8>> {
+        let (row_ptr, col_idx, vals) = self.csr_view()?;
+        let mut out = Vec::with_capacity(
+            WIRE_HEADER_BYTES + row_ptr.len() * 8 + col_idx.len() * 4 + vals.len() * 8,
+        );
+        out.extend_from_slice(WIRE_MAGIC);
+        out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        // cast-ok: usize → u64 is lossless on every supported target
+        out.extend_from_slice(&(self.nb as u64).to_le_bytes());
+        out.extend_from_slice(&(self.na as u64).to_le_bytes());
+        out.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+        for &p in row_ptr {
+            out.extend_from_slice(&(p as u64).to_le_bytes());
+        }
+        for &c in col_idx {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        for &v in vals {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        Some(out)
+    }
+
+    /// Parse the compact wire format back into a CSR plan. The decoded
+    /// triplet is handed to [`TransportPlan::from_csr`], so every
+    /// canonical-form invariant (monotone `row_ptr`, strictly ascending
+    /// columns, bounds, finite non-negative values) is re-validated —
+    /// bytes from an untrusted peer cannot construct a malformed plan.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, String> {
+        let mut r = WireReader { bytes, at: 0 };
+        let magic = r.take(4)?;
+        if magic != WIRE_MAGIC {
+            return Err(format!("bad plan magic {magic:?} (want {WIRE_MAGIC:?})"));
+        }
+        let version = r.u16()?;
+        if version != WIRE_VERSION {
+            return Err(format!("unsupported plan wire version {version} (have {WIRE_VERSION})"));
+        }
+        let _reserved = r.u16()?;
+        let nb = r.count_u64("nb")?;
+        let na = r.dim_u64("na")?;
+        let nnz = r.count_u64("nnz")?;
+        let rows = nb.checked_add(1).ok_or_else(|| "nb overflows".to_string())?;
+        let mut row_ptr = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            row_ptr.push(r.dim_u64("row_ptr entry")?);
+        }
+        let mut col_idx = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            col_idx.push(r.u32()?);
+        }
+        let mut vals = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            vals.push(f64::from_bits(r.u64()?));
+        }
+        if r.at != bytes.len() {
+            return Err(format!("{} trailing bytes after plan payload", bytes.len() - r.at));
+        }
+        // CONTRACT: sparse extraction order == dense fold order — decoded
+        // bytes go back through from_csr so the canonical order is proven,
+        // not assumed, before any fold replicates it.
+        Self::from_csr(nb, na, row_ptr, col_idx, vals)
     }
 
     /// Which representation the plan currently holds — for diagnostics
@@ -530,5 +665,73 @@ mod tests {
         let q = p.clone();
         assert_eq!(q.repr_kind(), "csr");
         assert_eq!(q.state_bytes(), 2 * 8 + 4 + 8, "clone drops the dense cache");
+    }
+
+    #[test]
+    fn wire_format_round_trips_random_csr_plans_bit_for_bit() {
+        crate::util::proptest_mini::check_default("csr wire round-trip", |rng| {
+            let nb = 1 + rng.next_below(12) as usize;
+            let na = 1 + rng.next_below(12) as usize;
+            let mut row_ptr = vec![0usize];
+            let mut col_idx: Vec<u32> = Vec::new();
+            let mut vals: Vec<f64> = Vec::new();
+            for _ in 0..nb {
+                // random strictly-ascending column subset for this row
+                for a in 0..na {
+                    if rng.next_f64() < 0.4 {
+                        col_idx.push(a as u32);
+                        vals.push(rng.uniform(0.0, 2.0));
+                    }
+                }
+                row_ptr.push(col_idx.len());
+            }
+            let plan = TransportPlan::from_csr(nb, na, row_ptr, col_idx, vals)
+                .map_err(|e| format!("generator produced invalid CSR: {e}"))?;
+            let bytes = plan.to_bytes().ok_or("CSR plan must serialize")?;
+            let back = TransportPlan::from_bytes(&bytes).map_err(|e| format!("decode: {e}"))?;
+            crate::prop_assert!(back.repr_kind() == "csr", "decoded repr {}", back.repr_kind());
+            let (rp0, ci0, v0) = plan.csr_view().unwrap();
+            let (rp1, ci1, v1) = back.csr_view().unwrap();
+            crate::prop_assert!(rp0 == rp1, "row_ptr changed across the wire");
+            crate::prop_assert!(ci0 == ci1, "col_idx changed across the wire");
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            crate::prop_assert!(bits(v0) == bits(v1), "values changed bit patterns");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wire_format_rejects_malformed_bytes() {
+        let plan =
+            TransportPlan::from_csr(2, 2, vec![0, 1, 2], vec![0, 1], vec![0.5, 0.5]).unwrap();
+        let bytes = plan.to_bytes().unwrap();
+
+        // truncation anywhere fails cleanly
+        for cut in [0, 3, 7, bytes.len() / 2, bytes.len() - 1] {
+            assert!(TransportPlan::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] = b'X';
+        assert!(TransportPlan::from_bytes(&b).is_err());
+        // unknown version
+        let mut b = bytes.clone();
+        b[4] = 9;
+        assert!(TransportPlan::from_bytes(&b).is_err());
+        // trailing garbage
+        let mut b = bytes.clone();
+        b.push(0);
+        assert!(TransportPlan::from_bytes(&b).is_err());
+        // decoded payloads re-run from_csr validation: flip a value's sign
+        // bit so it decodes as a negative flow
+        let mut b = bytes;
+        let last = b.len() - 1;
+        b[last] |= 0x80;
+        let err = TransportPlan::from_bytes(&b).unwrap_err();
+        assert!(err.contains("finite non-negative"), "got: {err}");
+
+        // non-CSR reprs have no wire form
+        assert!(TransportPlan::zeros(2, 2).to_bytes().is_none());
+        assert!(TransportPlan::product(&[1.0], &[1.0]).to_bytes().is_none());
     }
 }

@@ -6,6 +6,7 @@
 pub mod ablation;
 pub mod analyze;
 pub mod bench_kernel;
+pub mod bench_serve;
 pub mod conformance;
 pub mod fig1;
 pub mod fig2;

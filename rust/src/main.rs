@@ -6,10 +6,17 @@
 //!   serve     run the coordinator service on a synthetic job stream
 //!             (--deadline-ms/--max-retries/--degrade arm fault tolerance;
 //!             --fault-seed + --fault-{panics,transients,delays} inject a
-//!             deterministic chaos storm)
+//!             deterministic chaos storm; --shapes N1,N2 drives multiple
+//!             shape-keyed shards; --tenants K admits through per-tenant
+//!             quotas [--quota-in-flight/--quota-queue/--tenant-deadline-ms]
+//!             with client-side backpressure retries; --cache-bytes B arms
+//!             the (digest, ε, engine) result cache over --distinct D
+//!             repeating payloads)
 //!   engines   list the registered solver engines + aliases
 //!   bench     kernel timing sweep {engines}×{n}×{ε} → BENCH_kernel.json
-//!             (--compare <baseline.json> adds the perf regression gate)
+//!             (--compare <baseline.json> adds the perf regression gate);
+//!             --serve switches to the serving-layer benchmark (jobs/s,
+//!             p50/p95 latency, arena-reuse + cache hit rates per cell)
 //!   fig1      regenerate Figure 1 (runtime vs n, synthetic points)
 //!   fig2      regenerate Figure 2 (runtime vs ε, MNIST-style images)
 //!   ablation  analytical ablations A1–A6 (see DESIGN.md §4)
@@ -25,7 +32,8 @@
 
 use otpr::api::{Problem, SolveRequest, SolverConfig, SolverRegistry, ENGINE_SPECS};
 use otpr::coordinator::{
-    Coordinator, CoordinatorConfig, DegradePolicy, Engine, FaultPlan, JobKind, JobStatus,
+    Admission, Coordinator, CoordinatorConfig, DegradePolicy, Engine, FaultPlan, JobKind,
+    JobStatus, TenantQuota,
 };
 use otpr::data::workloads::Workload;
 use otpr::exp::report::{figure_csv, figure_table};
@@ -263,6 +271,16 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let budget_ms = args.u64_or("budget-ms", 0);
     let audit = args.u64_or("audit", 0);
+    // serving-layer knobs: multi-shape traffic (one shard per shape),
+    // per-tenant quotas with client-side backpressure retries, the
+    // (digest, ε, engine) result cache over repeating payloads
+    let shapes = args.list_usize("shapes", &[n]);
+    let tenants_n = args.usize_or("tenants", 0);
+    let quota_in_flight = args.usize_or("quota-in-flight", usize::MAX);
+    let quota_queue = args.usize_or("quota-queue", usize::MAX);
+    let tenant_deadline_ms = args.u64_or("tenant-deadline-ms", 0);
+    let cache_bytes = args.u64_or("cache-bytes", 0);
+    let distinct = args.usize_or("distinct", jobs.max(1));
     // fault-tolerance knobs: per-tenant deadline, retry budget, degraded-ε
     // answers under deadline pressure, and a seeded chaos plan
     let deadline_ms = args.u64_or("deadline-ms", 0);
@@ -289,9 +307,11 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let reg = registry(args);
     println!(
-        "coordinator: {workers} workers, {jobs} jobs of n={n} (engine={}{})",
+        "coordinator: {workers} workers/shard, {jobs} jobs over shapes {shapes:?} (engine={}{}{}{})",
         engine.name(),
-        if audit > 0 { format!(", auditing every {audit}th job") } else { String::new() }
+        if audit > 0 { format!(", auditing every {audit}th job") } else { String::new() },
+        if tenants_n > 0 { format!(", {tenants_n} tenants") } else { String::new() },
+        if cache_bytes > 0 { format!(", {cache_bytes}B result cache") } else { String::new() }
     );
     let coord = Coordinator::start(
         CoordinatorConfig {
@@ -306,29 +326,72 @@ fn cmd_serve(args: &Args) -> i32 {
                 ..Default::default()
             },
             faults,
+            max_shards: args.usize_or("max-shards", 8),
+            shard_idle_ttl: Duration::from_millis(args.u64_or("shard-ttl-ms", 30_000)),
+            cache_bytes,
+            tenants: (0..tenants_n)
+                .map(|t| {
+                    (
+                        format!("t{t}"),
+                        TenantQuota {
+                            max_in_flight: quota_in_flight,
+                            max_queue_depth: quota_queue,
+                            default_deadline: (tenant_deadline_ms > 0)
+                                .then(|| Duration::from_millis(tenant_deadline_ms)),
+                        },
+                    )
+                })
+                .collect(),
             ..Default::default()
         },
         reg,
     );
     let implicit_jobs = matches!(args.get_or("workload", "fig1"), "points" | "implicit");
-    let handles: Vec<_> = (0..jobs)
-        .map(|i| {
-            // implicit job payloads ship O(n) point data, not the n² slab
-            let kind = if implicit_jobs {
-                JobKind::implicit_assignment(
-                    Workload::Fig1 { n }.implicit_costs(i as u64).expect("fig1 implicit"),
-                )
-                .expect("fig1 is square")
-            } else {
-                JobKind::Assignment(workload(args, n).assignment(i as u64))
-            };
-            let mut request = SolveRequest::new(eps);
-            if budget_ms > 0 {
-                request = request.with_budget(Duration::from_millis(budget_ms));
+    // With --tenants, submissions go through admit(): a saturated quota
+    // answers Backpressure{retry_after} instead of enqueueing, and this
+    // client loop honors the hint — sleep, retry, count. Without tenants
+    // the legacy blocking submit_request() path is exercised instead.
+    let mut backpressured_admissions = 0u64;
+    let admission_stall = std::time::Instant::now() + Duration::from_secs(120);
+    let mut handles = Vec::with_capacity(jobs);
+    for i in 0..jobs {
+        let n_i = shapes[i % shapes.len()];
+        // repeating seeds (i mod --distinct) make later payloads exact
+        // duplicates of earlier ones — result-cache traffic
+        let seed = (i % distinct.max(1)) as u64;
+        // implicit job payloads ship O(n) point data, not the n² slab
+        let kind = if implicit_jobs {
+            JobKind::implicit_assignment(
+                Workload::Fig1 { n: n_i }.implicit_costs(seed).expect("fig1 implicit"),
+            )
+            .expect("fig1 is square")
+        } else {
+            JobKind::Assignment(workload(args, n_i).assignment(seed))
+        };
+        let mut request = SolveRequest::new(eps);
+        if budget_ms > 0 {
+            request = request.with_budget(Duration::from_millis(budget_ms));
+        }
+        let handle = if tenants_n > 0 {
+            let request = request.for_tenant(format!("t{}", i % tenants_n));
+            loop {
+                match coord.admit(kind.clone(), request.clone(), engine).expect("admit") {
+                    Admission::Accepted(h) => break h,
+                    Admission::Backpressure { retry_after } => {
+                        backpressured_admissions += 1;
+                        if std::time::Instant::now() >= admission_stall {
+                            eprintln!("admission starved for 120s; giving up");
+                            return 1;
+                        }
+                        std::thread::sleep(retry_after);
+                    }
+                }
             }
+        } else {
             coord.submit_request(kind, request, engine).expect("submit")
-        })
-        .collect();
+        };
+        handles.push(handle);
+    }
     let mut ok = 0;
     let mut cancelled = 0;
     let mut degraded = 0;
@@ -364,6 +427,12 @@ fn cmd_serve(args: &Args) -> i32 {
              (shed jobs are a contract outcome, not failures)"
         );
     }
+    if backpressured_admissions > 0 {
+        println!(
+            "{backpressured_admissions} admission(s) backpressured and retried \
+             (quota: {quota_in_flight} in flight, {quota_queue} queued per tenant)"
+        );
+    }
     // Shut down BEFORE exporting: audit certificates are recorded after
     // each reply is sent, so the export is only complete once the worker
     // threads have been joined.
@@ -393,6 +462,11 @@ fn cmd_bench(args: &Args) -> i32 {
         compare, compare_table, gate_health, load_baseline, regressions, run, table, to_json,
         BenchKernelConfig,
     };
+    // `--serve` measures the serving path (coordinator + shards + cache),
+    // not the bare kernel — a different harness and artifact schema.
+    if args.flag("serve") {
+        return cmd_bench_serve(args);
+    }
     let mut cfg = if args.flag("smoke") {
         BenchKernelConfig::smoke()
     } else {
@@ -473,6 +547,53 @@ fn cmd_bench(args: &Args) -> i32 {
             threshold * 100.0,
             cells.len()
         );
+    }
+    0
+}
+
+fn cmd_bench_serve(args: &Args) -> i32 {
+    use otpr::exp::bench_serve::{run, table, to_json, BenchServeConfig};
+    let mut cfg =
+        if args.flag("smoke") { BenchServeConfig::smoke() } else { BenchServeConfig::default() };
+    if args.get("sizes").is_some() {
+        cfg.sizes = args.list_usize("sizes", &cfg.sizes.clone());
+    }
+    cfg.jobs = args.usize_or("jobs", cfg.jobs);
+    cfg.workers = args.usize_or("workers", cfg.workers);
+    cfg.eps = args.f64_or("eps", cfg.eps);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.distinct = args.usize_or("distinct", cfg.distinct);
+    cfg.cache_bytes = args.u64_or("cache-bytes", cfg.cache_bytes);
+    cfg.engine = match Engine::try_parse(args.get_or("engine", cfg.engine.name())) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!(
+        "serving bench: sizes {:?} × {} jobs ({} distinct payloads), {} workers/shard, \
+         {}B cache, engine={}",
+        cfg.sizes,
+        cfg.jobs,
+        cfg.distinct,
+        cfg.workers,
+        cfg.cache_bytes,
+        cfg.engine.name()
+    );
+    let records = run(&cfg);
+    println!("{}", table(&records));
+    let out = args.get_or("out", "BENCH_serve.json");
+    let json = to_json(&cfg, &records).to_string();
+    if let Err(e) = std::fs::write(out, json) {
+        eprintln!("could not write {out}: {e}");
+        return 1;
+    }
+    println!("serving bench records written to {out}");
+    let failures = records.iter().filter(|r| r.error.is_some()).count();
+    if failures > 0 {
+        eprintln!("{failures} serving cell(s) had failing jobs");
+        return 1;
     }
     0
 }

@@ -1,0 +1,276 @@
+//! Serving-layer acceptance tests (PR 10).
+//!
+//! Three contracts under test, end to end through the public
+//! `Coordinator` surface:
+//!
+//! 1. **Cache hits are byte-identical to fresh solves.** Re-submitting an
+//!    identical `(payload, ε, engine, certify)` job returns a `Solution`
+//!    whose cost bits, coupling (matching or CSR plan wire bytes), duals,
+//!    and certificate all equal the first answer exactly — over the whole
+//!    golden corpus (dense assignment *and* OT) and over implicit
+//!    point-cloud payloads.
+//! 2. **The digest key neither over- nor under-matches.** Different
+//!    payloads, ε, engine, or certificate-wish must miss; closure-backed
+//!    (`GeneratedCosts`) payloads are undigestable and must never cache.
+//! 3. **Admission is total under chaos.** Against ≥ 2 shape-keyed shards
+//!    with per-tenant quotas and a seeded fault storm, every `admit()`
+//!    resolves to exactly one of Backpressure (observed client-side,
+//!    retried) or Accepted-then-one-terminal-outcome — no lost or
+//!    double-resolved jobs.
+
+use otpr::api::{Coupling, SolveRequest};
+use otpr::coordinator::{
+    Admission, Coordinator, CoordinatorConfig, Engine, FaultPlan, JobKind, JobStatus, TenantQuota,
+};
+use otpr::data::workloads::{golden_corpus, Workload, GOLDEN_SPECS};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn coupling_bytes(c: &Coupling) -> Vec<u8> {
+    match c {
+        Coupling::Matching(m) => {
+            // row-assignment vector is the matching's full identity
+            m.match_b.iter().flat_map(|x| x.to_le_bytes()).collect()
+        }
+        Coupling::Plan(p) => p
+            .to_bytes()
+            .unwrap_or_else(|| p.as_slice().iter().flat_map(|x| x.to_bits().to_le_bytes()).collect()),
+    }
+}
+
+/// Submit `kind` twice (sequentially, so the insert from the first solve
+/// lands before the second lookup) and assert the replay is bitwise equal.
+fn assert_replay_identical(coord: &Coordinator, kind: JobKind, request: SolveRequest, label: &str) {
+    let first = coord
+        .admit(kind.clone(), request.clone(), Engine::NativeSeq)
+        .expect("admit");
+    let Admission::Accepted(first) = first else { panic!("{label}: no quota configured") };
+    let first = first.wait().expect("first solve resolves");
+    assert_eq!(first.status, JobStatus::Served, "{label}: fresh solve serves");
+    let fresh = first.result.expect("fresh solve succeeds");
+
+    let again = coord.admit(kind, request, Engine::NativeSeq).expect("admit");
+    let Admission::Accepted(again) = again else { panic!("{label}: no quota configured") };
+    let again = again.wait().expect("replay resolves");
+    assert_eq!(again.status, JobStatus::Served, "{label}: replay serves");
+    let cached = again.result.expect("replay succeeds");
+
+    assert_eq!(
+        fresh.cost.to_bits(),
+        cached.cost.to_bits(),
+        "{label}: cost must be bit-identical"
+    );
+    assert_eq!(
+        coupling_bytes(&fresh.coupling),
+        coupling_bytes(&cached.coupling),
+        "{label}: coupling must be byte-identical"
+    );
+    assert_eq!(fresh.duals, cached.duals, "{label}: dual certificate must match");
+    assert_eq!(fresh.certificate, cached.certificate, "{label}: certificate must match");
+    assert!(
+        fresh.certificate.as_ref().is_some_and(|c| c.primal_ok),
+        "{label}: the certified fresh answer verifies"
+    );
+}
+
+/// Contract 1, dense: every golden fixture (assignment and OT), solved
+/// with a certificate, replays byte-identically out of the cache.
+#[test]
+fn golden_corpus_cache_hits_are_byte_identical() {
+    let cases = golden_corpus().expect("committed golden fixtures load");
+    assert_eq!(cases.len(), GOLDEN_SPECS.len(), "corpus is complete");
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, cache_bytes: 8 << 20, ..Default::default() },
+        None,
+    );
+    let mut replayed = 0u64;
+    for case in &cases {
+        let kind = match (case.assignment(), case.ot()) {
+            (Some(inst), _) => JobKind::Assignment(inst),
+            (_, Some(inst)) => JobKind::Ot(inst),
+            _ => panic!("golden case {} is neither assignment nor OT", case.name),
+        };
+        assert_replay_identical(&coord, kind, SolveRequest::new(0.25).certify(true), &case.name);
+        replayed += 1;
+    }
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert_eq!(
+        metrics.cache_hits.load(Ordering::Relaxed),
+        replayed,
+        "every replay is a hit, none a re-solve"
+    );
+    assert_eq!(metrics.cache_misses.load(Ordering::Relaxed), replayed, "every first solve misses");
+    assert!(metrics.cache_bytes() > 0, "hits come from resident entries");
+}
+
+/// Contract 1, implicit: point-cloud payloads (O(n) data, digestable
+/// provider) replay byte-identically too — the CSR/matching wire rebuild
+/// path, not just the dense clone path.
+#[test]
+fn implicit_point_cloud_cache_hits_are_byte_identical() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, cache_bytes: 4 << 20, ..Default::default() },
+        None,
+    );
+    for (n, seed) in [(24usize, 3u64), (17, 9)] {
+        let costs = Workload::Fig1 { n }.implicit_costs(seed).expect("fig1 has an implicit form");
+        let kind = JobKind::implicit_assignment(costs).expect("square");
+        assert_replay_identical(
+            &coord,
+            kind,
+            SolveRequest::new(0.3).certify(true),
+            &format!("implicit n={n} seed={seed}"),
+        );
+    }
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert_eq!(metrics.cache_hits.load(Ordering::Relaxed), 2);
+}
+
+/// Contract 2: the `(digest, ε, engine, certify)` key must not
+/// over-match. Any coordinate changing ⇒ miss; and payloads whose costs
+/// are closure-generated have no digest, so they can never produce a hit
+/// (stale-answer safety for uncacheable instances).
+#[test]
+fn digest_key_never_collides_across_payload_eps_engine_or_certify() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, cache_bytes: 4 << 20, ..Default::default() },
+        None,
+    );
+    let job = |seed: u64| JobKind::Assignment(Workload::Fig1 { n: 16 }.assignment(seed));
+    let wait = |adm: Admission| match adm {
+        Admission::Accepted(h) => h.wait().expect("resolves"),
+        Admission::Backpressure { .. } => panic!("no quotas configured"),
+    };
+    // baseline entry
+    wait(coord.admit(job(1), SolveRequest::new(0.3), Engine::NativeSeq).expect("admit"));
+    let miss_probes = [
+        (job(2), SolveRequest::new(0.3), Engine::NativeSeq, "different payload"),
+        (job(1), SolveRequest::new(0.2), Engine::NativeSeq, "different eps"),
+        (job(1), SolveRequest::new(0.3), Engine::NativeVector, "different engine"),
+        (job(1), SolveRequest::new(0.3).certify(true), Engine::NativeSeq, "certificate wish"),
+    ];
+    let probes = miss_probes.len() as u64;
+    for (kind, request, engine, why) in miss_probes {
+        let out = wait(coord.admit(kind, request, engine).expect("admit"));
+        assert_eq!(out.status, JobStatus::Served, "{why}: probe still serves");
+        let hits_now = coord.metrics.cache_hits.load(Ordering::Relaxed);
+        assert_eq!(hits_now, 0, "{why} must miss the cache");
+    }
+    // identical resubmit: the one true hit, proving the misses above were
+    // key mismatches rather than a dead cache
+    let out = wait(coord.admit(job(1), SolveRequest::new(0.3), Engine::NativeSeq).expect("admit"));
+    assert_eq!(out.status, JobStatus::Served);
+    assert_eq!(coord.metrics.cache_hits.load(Ordering::Relaxed), 1);
+
+    // closure-generated costs have no digest: byte-identical resubmits
+    // still execute fresh every time
+    let kind = JobKind::implicit_assignment(GOLDEN_SPECS[0].generated()).expect("square");
+    wait(coord.admit(kind.clone(), SolveRequest::new(0.3), Engine::NativeSeq).expect("admit"));
+    wait(coord.admit(kind, SolveRequest::new(0.3), Engine::NativeSeq).expect("admit"));
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert_eq!(
+        metrics.cache_hits.load(Ordering::Relaxed),
+        1,
+        "undigestable payloads must never hit"
+    );
+    assert_eq!(
+        metrics.cache_misses.load(Ordering::Relaxed),
+        1 + probes,
+        "generated-cost jobs bypass the cache entirely (no recorded miss)"
+    );
+}
+
+/// Contract 3: the acceptance soak. Two shapes (⇒ two shards), two
+/// quota-bound tenants, a seeded storm of panics/transients/delays.
+/// Every admit() call terminates in Accepted (possibly after observed,
+/// bounded backpressure), and every accepted handle resolves to exactly
+/// one terminal outcome.
+#[test]
+fn admission_soak_every_admit_resolves_to_exactly_one_outcome() {
+    let jobs: u64 = std::env::var("OTPR_CHAOS_JOBS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48);
+    let plan = FaultPlan::seeded(
+        13,
+        jobs,
+        (jobs / 16).max(2) as usize,
+        (jobs / 10).max(3) as usize,
+        (jobs / 16).max(2) as usize,
+        Duration::from_millis(2),
+    );
+    let quota = TenantQuota { max_in_flight: 4, max_queue_depth: 4, default_deadline: None };
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            restart_budget: jobs as u32,
+            max_retries: jobs as u32,
+            default_deadline: Some(Duration::from_secs(60)),
+            faults: Some(Arc::new(plan)),
+            cache_bytes: 1 << 20,
+            tenants: vec![("alpha".into(), quota.clone()), ("beta".into(), quota)],
+            ..Default::default()
+        },
+        None,
+    );
+    let stall = Instant::now() + Duration::from_secs(120);
+    let mut backpressured = 0u64;
+    let mut handles = Vec::new();
+    for i in 0..jobs {
+        // alternating shapes land on two different shards; seeds are all
+        // distinct so the cache digests everything but replays nothing
+        let (n, tenant) = if i % 2 == 0 { (14, "alpha") } else { (10, "beta") };
+        let kind = JobKind::Assignment(Workload::Fig1 { n }.assignment(i));
+        let request = SolveRequest::new(0.3).for_tenant(tenant);
+        let handle = loop {
+            match coord.admit(kind.clone(), request.clone(), Engine::NativeSeq).expect("admit") {
+                Admission::Accepted(h) => break h,
+                Admission::Backpressure { retry_after } => {
+                    backpressured += 1;
+                    assert!(retry_after > Duration::ZERO, "the hint must be actionable");
+                    assert!(Instant::now() < stall, "admission must not starve under quota");
+                    std::thread::sleep(retry_after);
+                }
+            }
+        };
+        handles.push(handle);
+    }
+    let accepted = handles.len() as u64;
+    let (mut served, mut degraded, mut shed, mut failed) = (0u64, 0u64, 0u64, 0u64);
+    for h in handles {
+        let out = h.wait().expect("every accepted handle resolves — no lost replies");
+        match out.status {
+            JobStatus::Served => served += 1,
+            JobStatus::Degraded { .. } => degraded += 1,
+            JobStatus::Shed { .. } => shed += 1,
+            JobStatus::Failed { .. } => failed += 1,
+        }
+    }
+    assert_eq!(served + degraded + shed + failed, accepted, "taxonomy covers every admission");
+    assert_eq!(failed, 0, "generous budgets retry the whole storm into success");
+    assert_eq!(shed, 0, "nothing expires under a 60s deadline");
+    let metrics = coord.metrics.clone();
+    coord.shutdown();
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), accepted);
+    assert_eq!(metrics.queue_depth(), 0, "the saturation gauge drains to zero");
+    assert!(
+        metrics.shard_counters().len() >= 2,
+        "two shapes must have run on two shape-keyed shards"
+    );
+    assert_eq!(
+        metrics.worker_panics.load(Ordering::Relaxed),
+        metrics.worker_restarts.load(Ordering::Relaxed),
+        "under budget, every panicked worker is replaced"
+    );
+    assert_eq!(
+        metrics.backpressured_jobs.load(Ordering::Relaxed),
+        backpressured,
+        "server-side backpressure count matches what the client observed"
+    );
+    // quota arithmetic is quiet at the end: nothing left in flight
+    assert!(backpressured > 0 || jobs < 16, "a 4-deep quota under 48 jobs should backpressure");
+}
